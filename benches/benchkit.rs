@@ -1,0 +1,76 @@
+//! Shared harness for the `harness = false` benches (no criterion in the
+//! offline build — DESIGN.md §5). Provides env-tunable workload knobs and
+//! a warmup+repeat timer with mean/std reporting.
+
+#![allow(dead_code)]
+
+use std::time::Instant;
+
+use dtw_bounds::data::synthetic::Scale;
+
+/// Workload knobs, from environment variables so `cargo bench` stays
+/// argument-free:
+/// * `DTWB_SCALE`  — tiny | small | paper (default small)
+/// * `DTWB_TAKE`   — max datasets per experiment (default experiment-specific)
+/// * `DTWB_REPEATS`— timing repeats (default 3; paper uses 10)
+/// * `DTWB_SEED`   — archive seed (default 2021)
+pub struct Knobs {
+    pub scale: Scale,
+    pub take: Option<usize>,
+    pub repeats: usize,
+    pub seed: u64,
+}
+
+impl Knobs {
+    pub fn from_env() -> Knobs {
+        let scale = std::env::var("DTWB_SCALE")
+            .ok()
+            .and_then(|s| Scale::parse(&s))
+            .unwrap_or(Scale::Small);
+        let take = std::env::var("DTWB_TAKE").ok().and_then(|s| s.parse().ok());
+        let repeats = std::env::var("DTWB_REPEATS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(3);
+        let seed = std::env::var("DTWB_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(2021);
+        Knobs { scale, take, repeats, seed }
+    }
+
+    pub fn take_of(&self, available: usize, default_cap: usize) -> usize {
+        self.take.unwrap_or(default_cap).min(available)
+    }
+}
+
+/// Time `f` (warmup once, then `reps` measured runs); returns per-run
+/// seconds.
+pub fn time_reps<F: FnMut()>(reps: usize, mut f: F) -> Vec<f64> {
+    f(); // warmup
+    (0..reps)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect()
+}
+
+/// Nanoseconds per call over `iters` iterations of `f` (with warmup),
+/// using a black-box accumulator to defeat dead-code elimination.
+pub fn ns_per_call<F: FnMut() -> f64>(iters: usize, mut f: F) -> f64 {
+    let mut acc = 0.0;
+    for _ in 0..iters.min(100) {
+        acc += f(); // warmup
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        acc += f();
+    }
+    let dt = t0.elapsed().as_nanos() as f64 / iters as f64;
+    std::hint::black_box(acc);
+    dt
+}
+
+/// Print a section banner.
+pub fn banner(title: &str) {
+    println!("\n{}\n{}", title, "=".repeat(title.len()));
+}

@@ -1,0 +1,79 @@
+//! Microbenchmark: per-pair cost of every bound vs series length and
+//! window — the efficiency half of the paper's trade-off, isolated from
+//! search effects. Also the workhorse of the §Perf iteration log.
+//!
+//! ```sh
+//! cargo bench --bench bound_micro
+//! ```
+
+#[path = "benchkit.rs"]
+mod benchkit;
+
+use dtw_bounds::bounds::{BoundKind, PreparedSeries, Scratch};
+use dtw_bounds::data::rng::Rng;
+use dtw_bounds::delta::Squared;
+use dtw_bounds::dtw::dtw;
+use dtw_bounds::metrics::Table;
+
+fn main() {
+    let mut rng = Rng::seeded(0xBEEF);
+    let mut scratch = Scratch::default();
+
+    benchkit::banner("Per-pair bound cost (ns), squared delta");
+    let mut table = Table::new(vec!["bound", "l=64 w=6", "l=256 w=26", "l=1024 w=102", "l=1024 w=205"]);
+
+    let configs: Vec<(usize, usize)> = vec![(64, 6), (256, 26), (1024, 102), (1024, 205)];
+    let pairs: Vec<(PreparedSeries, PreparedSeries, usize)> = configs
+        .iter()
+        .map(|&(l, w)| {
+            let a: Vec<f64> = (0..l).map(|_| rng.normal()).collect();
+            let b: Vec<f64> = (0..l).map(|_| rng.normal()).collect();
+            (PreparedSeries::prepare(a, w), PreparedSeries::prepare(b, w), w)
+        })
+        .collect();
+
+    let mut rows: Vec<(String, Vec<f64>)> = Vec::new();
+    for &bound in BoundKind::ALL {
+        let mut cells = Vec::new();
+        for (q, t, w) in &pairs {
+            let iters = (2_000_000 / q.len()).max(100);
+            let ns = benchkit::ns_per_call(iters, || {
+                bound.compute::<Squared>(q, t, *w, f64::INFINITY, &mut scratch)
+            });
+            cells.push(ns);
+        }
+        rows.push((bound.name(), cells));
+    }
+    // DTW itself for perspective.
+    for (q, t, w) in &pairs {
+        let iters = (200_000 / (q.len() * (*w + 1)).max(1)).max(10);
+        let ns = benchkit::ns_per_call(iters, || dtw::<Squared>(&q.values, &t.values, *w));
+        if let Some(last) = rows.last() {
+            let _ = last;
+        }
+        rows.push((format!("(full DTW l={} w={})", q.len(), w), vec![ns]));
+    }
+
+    for (name, cells) in &rows {
+        let mut row = vec![name.clone()];
+        for i in 0..4 {
+            row.push(cells.get(i).map(|v| format!("{v:.0}")).unwrap_or_default());
+        }
+        table.row(row);
+    }
+    println!("{}", table.to_markdown());
+
+    // Headline efficiency claims, asserted on this machine:
+    let get = |name: &str, col: usize| -> f64 {
+        rows.iter().find(|(n, _)| n == name).map(|(_, c)| c[col]).unwrap()
+    };
+    for col in 0..4 {
+        let webb = get("LB_Webb", col);
+        let improved = get("LB_Improved", col);
+        let petitjean = get("LB_Petitjean", col);
+        println!(
+            "l/w config {col}: Webb {webb:.0}ns vs Improved {improved:.0}ns ({:.2}x) vs Petitjean {petitjean:.0}ns",
+            improved / webb
+        );
+    }
+}

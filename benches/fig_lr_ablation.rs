@@ -1,0 +1,53 @@
+//! Figures 31–34 (§7): the effect of the left/right paths.
+//!
+//! Compares `LB_WEBB` vs `LB_WEBB_NoLR` (tightness Fig 31, time Fig 33)
+//! and vs `LB_WEBB_ENHANCED³` (tightness Fig 32, time Fig 34) at
+//! recommended windows, sorted-order search.
+//!
+//! ```sh
+//! cargo bench --bench fig_lr_ablation
+//! ```
+
+#[path = "benchkit.rs"]
+mod benchkit;
+
+use dtw_bounds::bounds::BoundKind;
+use dtw_bounds::data::synthetic::{generate_archive, ArchiveSpec};
+use dtw_bounds::delta::Squared;
+use dtw_bounds::experiments::nn_timing::win_loss_ratio;
+use dtw_bounds::experiments::{lr_ablation, with_recommended_window};
+use dtw_bounds::metrics::format_duration;
+
+fn main() {
+    let knobs = benchkit::Knobs::from_env();
+    let archive = generate_archive(&ArchiveSpec::new(knobs.scale, knobs.seed));
+    let datasets = with_recommended_window(&archive);
+    let take = knobs.take_of(datasets.len(), usize::MAX);
+    let datasets = &datasets[..take];
+    benchkit::banner(&format!(
+        "Left/right path ablation — {} datasets, {} repeats (Figures 31-34)",
+        datasets.len(),
+        knobs.repeats
+    ));
+
+    let res = lr_ablation::<Squared>(datasets, knobs.repeats, knobs.seed);
+
+    println!("tightness matrix (Figures 31, 32):");
+    println!("{}", res.tightness.to_table().to_csv());
+    let (w31, l31) = res.tightness.win_loss(BoundKind::Webb, BoundKind::WebbNoLr);
+    let (w32, l32) = res.tightness.win_loss(BoundKind::Webb, BoundKind::WebbEnhanced(3));
+    println!("Fig 31: Webb tighter than Webb_NoLR on {w31}, less on {l31}");
+    println!("Fig 32: Webb tighter than Webb_Enhanced3 on {w32}, less on {l32}");
+
+    println!("\nsorted NN time (Figures 33, 34):");
+    for c in &res.timing {
+        println!("  {:<20} total {}", c.label, format_duration(c.total()));
+    }
+    let (w33, l33, r33) = win_loss_ratio(&res.timing[0], &res.timing[1]);
+    let (w34, l34, r34) = win_loss_ratio(&res.timing[0], &res.timing[2]);
+    println!("Fig 33: Webb vs Webb_NoLR      : {w33}/{l33}, ratio {r33:.2}");
+    println!("Fig 34: Webb vs Webb_Enhanced3 : {w34}/{l34}, ratio {r34:.2}");
+
+    // §7's hard claim, asserted on this run: paths never lose to bands.
+    assert_eq!(l32, 0, "LB_Webb must be at least as tight as LB_Webb_Enhanced3 everywhere");
+}

@@ -1,0 +1,70 @@
+//! Figures 19–28 (§6.2): nearest-neighbor search time at recommended
+//! windows, random order (Algorithm 3) and sorted (Algorithm 4).
+//!
+//! Emits per-dataset mean±std scatter data (the paper's log-log plots)
+//! and the win/loss + total-time comparisons quoted in the text,
+//! including `LB_ENHANCED*` (best k per dataset, k ≤ 16).
+//!
+//! ```sh
+//! cargo bench --bench fig_nn_search
+//! DTWB_TAKE=10 DTWB_REPEATS=2 cargo bench --bench fig_nn_search   # quick pass
+//! ```
+
+#[path = "benchkit.rs"]
+mod benchkit;
+
+use dtw_bounds::bounds::BoundKind;
+use dtw_bounds::data::synthetic::{generate_archive, ArchiveSpec};
+use dtw_bounds::delta::Squared;
+use dtw_bounds::experiments::nn_timing::{
+    nn_timing, scatter_table, win_loss_ratio, TimedBound,
+};
+use dtw_bounds::experiments::with_recommended_window;
+use dtw_bounds::metrics::format_duration;
+use dtw_bounds::search::classify::SearchMode;
+
+fn main() {
+    let knobs = benchkit::Knobs::from_env();
+    let archive = generate_archive(&ArchiveSpec::new(knobs.scale, knobs.seed));
+    let datasets = with_recommended_window(&archive);
+    let take = knobs.take_of(datasets.len(), usize::MAX);
+    let datasets = &datasets[..take];
+    let windows: Vec<usize> = datasets.iter().map(|d| d.window).collect();
+
+    let bounds = [
+        TimedBound::Fixed(BoundKind::Keogh),     // 0
+        TimedBound::Fixed(BoundKind::Improved),  // 1
+        TimedBound::Fixed(BoundKind::Petitjean), // 2
+        TimedBound::Fixed(BoundKind::Webb),      // 3
+        TimedBound::EnhancedStar,                // 4
+    ];
+
+    for (mode, figs) in [
+        (SearchMode::RandomOrder, "Figures 19, 20, 23, 24, 28"),
+        (SearchMode::Sorted, "Figures 21, 22, 25, 26, 27"),
+    ] {
+        benchkit::banner(&format!(
+            "NN search, {mode:?}, {} datasets, {} repeats — {figs}",
+            datasets.len(),
+            knobs.repeats
+        ));
+        let cols =
+            nn_timing::<Squared>(datasets, &windows, &bounds, mode, knobs.repeats, knobs.seed);
+        for c in &cols {
+            println!("{:<16} total {}", c.label, format_duration(c.total()));
+        }
+        for (a, b, fig) in [
+            (3usize, 0usize, "Webb vs Keogh    "),
+            (3, 1, "Webb vs Improved "),
+            (2, 0, "Petitjean vs Keogh"),
+            (2, 1, "Petitjean vs Improved"),
+            (3, 4, "Webb vs Enhanced*"),
+        ] {
+            let (w, l, r) = win_loss_ratio(&cols[a], &cols[b]);
+            println!("  {fig}: {w}/{l} wins, total ratio {r:.2}");
+        }
+        // Scatter data for the headline figure of each mode.
+        println!("\nscatter (Webb vs Keogh):");
+        println!("{}", scatter_table(&cols[3], &cols[0]).to_csv());
+    }
+}

@@ -1,0 +1,70 @@
+//! Figures 1, 2 and 15–18 (§6.1): per-dataset tightness of the new bounds
+//! against the baselines, at the archive's recommended windows.
+//!
+//! Emits the per-dataset tightness matrix (CSV — each pairwise scatter of
+//! the paper's figures is two of its columns) plus the win/loss counts
+//! the §6.1 text quotes.
+//!
+//! ```sh
+//! cargo bench --bench fig_tightness            # small archive
+//! DTWB_SCALE=tiny cargo bench --bench fig_tightness
+//! ```
+
+#[path = "benchkit.rs"]
+mod benchkit;
+
+use dtw_bounds::bounds::BoundKind;
+use dtw_bounds::data::synthetic::{generate_archive, ArchiveSpec};
+use dtw_bounds::delta::Squared;
+use dtw_bounds::experiments::{tightness_experiment, with_recommended_window};
+
+fn main() {
+    let knobs = benchkit::Knobs::from_env();
+    let archive = generate_archive(&ArchiveSpec::new(knobs.scale, knobs.seed));
+    let datasets = with_recommended_window(&archive);
+    let take = knobs.take_of(datasets.len(), usize::MAX);
+    let datasets = &datasets[..take];
+    benchkit::banner(&format!(
+        "Tightness at recommended windows — {} datasets (Figures 1, 2, 15-18)",
+        datasets.len()
+    ));
+
+    let bounds = vec![
+        BoundKind::Keogh,
+        BoundKind::Improved,
+        BoundKind::Enhanced(8),
+        BoundKind::Petitjean,
+        BoundKind::Webb,
+        BoundKind::WebbNoLr,
+    ];
+    let res = tightness_experiment::<Squared>(datasets, &bounds);
+    println!("{}", res.to_table().to_csv());
+
+    let quote = |fig: &str, a: BoundKind, b: BoundKind| {
+        let (w, l) = res.win_loss(a, b);
+        let mean = |k: BoundKind| {
+            let c = res.col(k).unwrap();
+            res.rows.iter().map(|(_, _, t)| t[c]).sum::<f64>() / res.rows.len() as f64
+        };
+        println!(
+            "{fig}: {a} vs {b}: tighter on {w}, less tight on {l} (means {:.4} vs {:.4})",
+            mean(a),
+            mean(b)
+        );
+    };
+    quote("Fig 1 ", BoundKind::Webb, BoundKind::Keogh);
+    quote("Fig 2 ", BoundKind::Webb, BoundKind::Improved);
+    quote("Fig 15", BoundKind::Petitjean, BoundKind::Keogh);
+    quote("Fig 16", BoundKind::Petitjean, BoundKind::Improved);
+    quote("Fig 17", BoundKind::Petitjean, BoundKind::Enhanced(8));
+    quote("Fig 18", BoundKind::Webb, BoundKind::Enhanced(8));
+
+    // Paper's §6.1 expectations, as hard checks on this run:
+    let (_, petitjean_losses) = res.win_loss(BoundKind::Petitjean, BoundKind::Improved);
+    assert_eq!(
+        petitjean_losses, 0,
+        "LB_Petitjean should never be less tight than LB_Improved on dataset means"
+    );
+    let (_, webb_losses_keogh) = res.win_loss(BoundKind::Webb, BoundKind::Keogh);
+    assert_eq!(webb_losses_keogh, 0, "LB_Webb should never lose to LB_Keogh on dataset means");
+}

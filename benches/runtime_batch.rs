@@ -1,0 +1,81 @@
+//! PJRT batched prefilter vs the scalar Rust loop: pairs/second of
+//! `LB_KEOGH` screening at the compiled artifact shapes. Requires
+//! `make artifacts` (skips politely otherwise).
+//!
+//! ```sh
+//! make artifacts && cargo bench --bench runtime_batch
+//! ```
+
+#[path = "benchkit.rs"]
+mod benchkit;
+
+use dtw_bounds::bounds::{keogh, PreparedSeries};
+use dtw_bounds::data::rng::Rng;
+use dtw_bounds::delta::Squared;
+use dtw_bounds::metrics::{Summary, Table};
+use dtw_bounds::runtime::{default_artifacts_dir, read_manifest, BatchLb, XlaRuntime};
+
+fn main() {
+    let dir = default_artifacts_dir();
+    let manifest = match read_manifest(&dir) {
+        Ok(m) => m,
+        Err(_) => {
+            println!("no artifacts under {} — run `make artifacts` first", dir.display());
+            return;
+        }
+    };
+    let rt = XlaRuntime::cpu().expect("PJRT CPU client");
+    let knobs = benchkit::Knobs::from_env();
+    let mut rng = Rng::seeded(0x0DDB);
+
+    benchkit::banner("Batched XLA LB_Keogh vs scalar Rust (pairs/s)");
+    let mut table = Table::new(vec![
+        "shape (b x n x l)",
+        "scalar Ms pairs/s",
+        "xla Ms pairs/s",
+        "speedup",
+    ]);
+
+    for entry in manifest.iter().filter(|e| e.name == "lb_keogh") {
+        let (b, n, l) = (entry.batch, entry.rows, entry.len);
+        let w = (l / 10).max(1);
+        let queries: Vec<Vec<f64>> =
+            (0..b).map(|_| (0..l).map(|_| rng.normal()).collect()).collect();
+        let train: Vec<PreparedSeries> = (0..n)
+            .map(|_| PreparedSeries::prepare((0..l).map(|_| rng.normal()).collect(), w))
+            .collect();
+
+        // Scalar Rust: b*n bound computations.
+        let scalar_times = benchkit::time_reps(knobs.repeats, || {
+            let mut acc = 0.0;
+            for q in &queries {
+                for t in &train {
+                    acc += keogh::lb_keogh::<Squared>(q, t, f64::INFINITY);
+                }
+            }
+            std::hint::black_box(acc);
+        });
+
+        // XLA batch: one execution.
+        let mut blb = BatchLb::load(&rt, &dir, b, n, l).expect("artifact loads");
+        let q_refs: Vec<&[f64]> = queries.iter().map(|v| v.as_slice()).collect();
+        let lo_refs: Vec<&[f64]> = train.iter().map(|t| t.lo.as_slice()).collect();
+        let up_refs: Vec<&[f64]> = train.iter().map(|t| t.up.as_slice()).collect();
+        let xla_times = benchkit::time_reps(knobs.repeats, || {
+            let m = blb.compute(&q_refs, &lo_refs, &up_refs).expect("compute");
+            std::hint::black_box(m.len());
+        });
+
+        let pairs = (b * n) as f64;
+        let s_rate = pairs / Summary::of(&scalar_times).mean / 1e6;
+        let x_rate = pairs / Summary::of(&xla_times).mean / 1e6;
+        table.row(vec![
+            format!("{b} x {n} x {l}"),
+            format!("{s_rate:.2}"),
+            format!("{x_rate:.2}"),
+            format!("{:.2}x", x_rate / s_rate),
+        ]);
+    }
+    println!("{}", table.to_markdown());
+    println!("(scalar path includes early-abandon branching; the XLA path is branch-free f32.)");
+}

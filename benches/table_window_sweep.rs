@@ -1,0 +1,47 @@
+//! Tables 1, 2, 3 and Figures 29, 30 (§6.3): classification time over the
+//! whole archive with windows at 1%, 10% and 20% of series length
+//! (rounded up), sorted-order search, eight pairings per table.
+//!
+//! ```sh
+//! cargo bench --bench table_window_sweep
+//! DTWB_TAKE=20 cargo bench --bench table_window_sweep   # quick pass
+//! ```
+
+#[path = "benchkit.rs"]
+mod benchkit;
+
+use dtw_bounds::data::synthetic::{generate_archive, ArchiveSpec};
+use dtw_bounds::data::Dataset;
+use dtw_bounds::delta::Squared;
+use dtw_bounds::experiments::nn_timing::scatter_table;
+use dtw_bounds::experiments::window_sweep;
+
+fn main() {
+    let knobs = benchkit::Knobs::from_env();
+    let archive = generate_archive(&ArchiveSpec::new(knobs.scale, knobs.seed));
+    let datasets: Vec<&Dataset> = archive.iter().collect();
+    let take = knobs.take_of(datasets.len(), usize::MAX);
+    let datasets = &datasets[..take];
+
+    for (frac, label) in [(0.01, "Table 1"), (0.10, "Table 2"), (0.20, "Table 3")] {
+        benchkit::banner(&format!(
+            "{label}: all {} datasets, w = {:.0}% · l, {} repeats",
+            datasets.len(),
+            frac * 100.0,
+            knobs.repeats
+        ));
+        let res = window_sweep::<Squared>(datasets, frac, knobs.repeats, knobs.seed);
+        println!("{}", res.to_table().to_markdown());
+
+        // Figures 29 (1%) and 30 (20%): Webb vs Enhanced* scatter.
+        if frac != 0.10 {
+            let webb = res.columns.iter().find(|c| c.label == "LB_Webb").unwrap();
+            let enh = res.columns.iter().find(|c| c.label == "LB_Enhanced*").unwrap();
+            println!(
+                "Figure {}: scatter Webb vs Enhanced*:",
+                if frac < 0.05 { 29 } else { 30 }
+            );
+            println!("{}", scatter_table(webb, enh).to_csv());
+        }
+    }
+}

@@ -1,0 +1,73 @@
+//! End-to-end driver: nearest-neighbor DTW classification over the
+//! synthetic UCR-style archive with every headline bound — the workload
+//! the whole paper optimizes.
+//!
+//! ```sh
+//! cargo run --release --example nn_benchmark -- [tiny|small|paper] [take] [repeats]
+//! ```
+//!
+//! For each dataset (recommended window ≥ 1): 1-NN classify the test set
+//! under both search orders with LB_KEOGH / LB_IMPROVED / LB_PETITJEAN /
+//! LB_WEBB, reporting accuracy (identical across bounds — the bounds are
+//! exact screens), wall time, pruning power, and the win/loss + total
+//! ratios the paper's §6.2 quotes. The run is recorded in EXPERIMENTS.md.
+
+use dtw_bounds::bounds::BoundKind;
+use dtw_bounds::data::synthetic::{generate_archive, ArchiveSpec, Scale};
+use dtw_bounds::data::Dataset;
+use dtw_bounds::delta::Squared;
+use dtw_bounds::experiments::nn_timing::{nn_timing, win_loss_ratio, TimedBound};
+use dtw_bounds::experiments::with_recommended_window;
+use dtw_bounds::metrics::format_duration;
+use dtw_bounds::search::classify::SearchMode;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let scale = args
+        .first()
+        .and_then(|s| Scale::parse(s))
+        .unwrap_or(Scale::Small);
+    let archive = generate_archive(&ArchiveSpec::new(scale, 2021));
+    let datasets: Vec<&Dataset> = with_recommended_window(&archive);
+    let take: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(datasets.len());
+    let datasets = &datasets[..take.min(datasets.len())];
+    let repeats: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(3);
+    let windows: Vec<usize> = datasets.iter().map(|d| d.window).collect();
+
+    println!(
+        "archive: {:?}, {} datasets with recommended w >= 1 (of {}), repeats = {repeats}",
+        scale,
+        datasets.len(),
+        archive.len()
+    );
+
+    let bounds = [
+        TimedBound::Fixed(BoundKind::Keogh),
+        TimedBound::Fixed(BoundKind::Improved),
+        TimedBound::Fixed(BoundKind::Petitjean),
+        TimedBound::Fixed(BoundKind::Webb),
+    ];
+
+    for mode in [SearchMode::RandomOrder, SearchMode::Sorted] {
+        println!("\n== {mode:?} search (Algorithm {}) ==", match mode {
+            SearchMode::RandomOrder => 3,
+            SearchMode::Sorted => 4,
+        });
+        let cols = nn_timing::<Squared>(datasets, &windows, &bounds, mode, repeats, 2021);
+        let mean_acc: f64 = cols[0].cells.iter().map(|c| c.accuracy).sum::<f64>()
+            / cols[0].cells.len() as f64;
+        println!("mean 1-NN accuracy: {mean_acc:.3} (identical across bounds)");
+        for c in &cols {
+            println!("  {:<16} total {}", c.label, format_duration(c.total()));
+        }
+        // The paper's headline pairings.
+        for (a, b) in [(3usize, 0usize), (3, 1), (2, 1), (2, 0)] {
+            let (w, l, r) = win_loss_ratio(&cols[a], &cols[b]);
+            println!(
+                "  {} vs {}: {w}/{l} wins, total-time ratio {r:.2}",
+                cols[a].label, cols[b].label
+            );
+        }
+    }
+    println!("\ndone; see EXPERIMENTS.md for the recorded reference run.");
+}

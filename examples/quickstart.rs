@@ -1,0 +1,43 @@
+//! Quickstart: the paper's running example (Figure 3) end to end.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Computes windowed DTW for the two example series, then every lower
+//! bound in the crate, demonstrating the tightness/cost ladder and the
+//! core invariant `λ ≤ DTW`.
+
+use dtw_bounds::bounds::{BoundKind, PreparedSeries, Scratch};
+use dtw_bounds::delta::Squared;
+use dtw_bounds::dtw::{cost_matrix, dtw, warping_path};
+
+fn main() {
+    // Figure 3 of the paper.
+    let a = vec![-1.0, 1.0, -1.0, 4.0, -2.0, 1.0, 1.0, 1.0, -1.0, 0.0, 1.0];
+    let b = vec![1.0, -1.0, 1.0, -1.0, -1.0, -4.0, -4.0, -1.0, 1.0, 0.0, -1.0];
+    let w = 1;
+
+    let d = dtw::<Squared>(&a, &b, w);
+    println!("DTW_w={w}(A, B) = {d}  (paper Figure 3; its caption's 52 is an arithmetic slip)");
+
+    let m = cost_matrix::<Squared>(&a, &b, w);
+    let path = warping_path(&m);
+    println!("optimal warping path ({} alignments):", path.len());
+    let rendered: Vec<String> =
+        path.iter().map(|&(i, j)| format!("({},{})", i + 1, j + 1)).collect();
+    println!("  {}", rendered.join(" "));
+
+    println!("\nlower bounds (query = A, candidate = B):");
+    let q = PreparedSeries::prepare(a.clone(), w);
+    let t = PreparedSeries::prepare(b.clone(), w);
+    let mut scratch = Scratch::new(a.len());
+    for &bound in BoundKind::ALL {
+        let lb = bound.compute::<Squared>(&q, &t, w, f64::INFINITY, &mut scratch);
+        let tightness = lb / d;
+        assert!(lb <= d, "invariant violated");
+        println!("  {:<22} {:>8.2}   tightness {:.3}", bound.name(), lb, tightness);
+    }
+
+    println!("\nall bounds <= DTW — invariant holds. Run `cargo bench` for the paper's tables.");
+}

@@ -1,0 +1,149 @@
+//! Serving end-to-end: coordinator + router + (when artifacts exist) the
+//! XLA batched prefilter, measured under concurrent client load.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example serve
+//! ```
+//!
+//! Boots the TCP server on an ephemeral port over one synthetic dataset,
+//! fires concurrent client connections at it, and reports exactness,
+//! latency percentiles and throughput for both the scalar and (if
+//! available) batched paths. This is deliverable (b)'s "load a model and
+//! serve batched requests" driver; the measured run is in EXPERIMENTS.md.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Instant;
+
+use dtw_bounds::bounds::BoundKind;
+use dtw_bounds::coordinator::server::Server;
+use dtw_bounds::coordinator::{NnEngine, Router};
+use dtw_bounds::data::synthetic::{generate_archive, ArchiveSpec, Scale};
+use dtw_bounds::delta::Squared;
+use dtw_bounds::metrics::Summary;
+use dtw_bounds::runtime::{default_artifacts_dir, XlaRuntime};
+use dtw_bounds::search::nn::nn_brute_force;
+use dtw_bounds::search::PreparedTrainSet;
+
+const CLIENTS: usize = 4;
+const QUERIES_PER_CLIENT: usize = 32;
+
+fn main() {
+    let archive = generate_archive(&ArchiveSpec::new(Scale::Small, 2021));
+    // A dataset that fits the compiled artifact shapes (n<=256, l<=512).
+    let ds = archive
+        .iter()
+        .filter(|d| d.window >= 1 && d.train.len() <= 256 && d.series_len() <= 512)
+        .max_by_key(|d| d.train.len())
+        .expect("suitable dataset");
+    let w = ds.window;
+    println!(
+        "dataset {}: l={}, train={}, w={w}",
+        ds.name,
+        ds.series_len(),
+        ds.train.len()
+    );
+
+    let ds2 = ds.clone();
+    let artifacts = default_artifacts_dir();
+    let have_artifacts = artifacts.join("manifest.tsv").exists();
+    let router = Arc::new(Router::spawn(
+        move || {
+            let mut engine = NnEngine::new(&ds2, w, BoundKind::Webb);
+            if have_artifacts {
+                match XlaRuntime::cpu() {
+                    Ok(rt) => {
+                        match engine.attach_batch_lb(&rt, &default_artifacts_dir(), 32) {
+                            Ok(()) => eprintln!("batched prefilter attached"),
+                            Err(e) => eprintln!("no batched path: {e:#}"),
+                        }
+                        std::mem::forget(rt);
+                    }
+                    Err(e) => eprintln!("PJRT unavailable: {e:#}"),
+                }
+            } else {
+                eprintln!("no artifacts (run `make artifacts`): scalar path only");
+            }
+            engine
+        },
+        32,
+    ));
+    let server = Server::spawn("127.0.0.1:0", router.clone()).expect("bind");
+    let addr = server.addr();
+    println!("server on {addr}; {CLIENTS} clients x {QUERIES_PER_CLIENT} queries\n");
+
+    // Ground truth for exactness checks.
+    let train = PreparedTrainSet::from_dataset(ds, w);
+    let truth: Vec<f64> = ds
+        .test
+        .iter()
+        .map(|q| nn_brute_force::<Squared>(&q.values, &train).0.distance)
+        .collect();
+
+    let started = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..CLIENTS {
+        let queries: Vec<(usize, Vec<f64>)> = (0..QUERIES_PER_CLIENT)
+            .map(|k| {
+                let qi = (c * QUERIES_PER_CLIENT + k) % ds.test.len();
+                (qi, ds.test[qi].values.clone())
+            })
+            .collect();
+        handles.push(std::thread::spawn(move || {
+            let conn = TcpStream::connect(addr).expect("connect");
+            let mut writer = conn.try_clone().unwrap();
+            let mut lines = BufReader::new(conn).lines();
+            let mut out = Vec::new();
+            for (qi, q) in queries {
+                let csv: Vec<String> = q.iter().map(|v| v.to_string()).collect();
+                let t0 = Instant::now();
+                writer.write_all(format!("{}\n", csv.join(",")).as_bytes()).unwrap();
+                let resp = lines.next().unwrap().unwrap();
+                out.push((qi, t0.elapsed().as_secs_f64() * 1e3, resp));
+            }
+            out
+        }));
+    }
+
+    let mut latencies = Vec::new();
+    let mut batched = 0usize;
+    let mut total = 0usize;
+    for h in handles {
+        for (qi, ms, resp) in h.join().unwrap() {
+            total += 1;
+            latencies.push(ms);
+            if resp.contains("path=batched") {
+                batched += 1;
+            }
+            // Exactness: parse dist= and compare with brute force.
+            let dist: f64 = resp
+                .split_whitespace()
+                .find_map(|f| f.strip_prefix("dist=").map(|v| v.parse().unwrap()))
+                .expect("dist field");
+            assert!(
+                (dist - truth[qi]).abs() < 1e-6 * truth[qi].max(1.0),
+                "inexact answer for query {qi}: {dist} vs {}",
+                truth[qi]
+            );
+        }
+    }
+    let wall = started.elapsed();
+    let s = Summary::of(&latencies);
+    let mut lat = latencies.clone();
+    println!("served {total} queries, all exact");
+    println!("  batched path: {batched}/{total}");
+    println!(
+        "  latency ms: mean {:.2} ± {:.2}, p50 {:.2}, p99 {:.2}",
+        s.mean,
+        s.std,
+        Summary::percentile(&mut lat, 50.0),
+        Summary::percentile(&mut lat, 99.0)
+    );
+    println!(
+        "  throughput: {:.0} queries/s (wall {:.2}s)",
+        total as f64 / wall.as_secs_f64(),
+        wall.as_secs_f64()
+    );
+    server.shutdown();
+}

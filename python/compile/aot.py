@@ -1,0 +1,72 @@
+"""AOT compiler: lower the L2 model (with its L1 Pallas kernels) to HLO
+text artifacts the Rust runtime loads.
+
+HLO **text** is the interchange format: jax >= 0.5 serializes
+HloModuleProto with 64-bit instruction ids, which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage: ``python -m compile.aot [--out-dir ../artifacts]``.
+Emits one ``lb_keogh`` artifact per shape in SHAPES plus ``manifest.tsv``
+(``name<TAB>batch<TAB>rows<TAB>len<TAB>file``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# (query batch, training rows, series length). Shapes are static under
+# XLA; the Rust BatchLb pads smaller workloads up to the best fit.
+SHAPES = [
+    (8, 64, 128),
+    (16, 128, 256),
+    (32, 256, 512),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_lb_keogh(b: int, n: int, l: int) -> str:
+    q = jax.ShapeDtypeStruct((b, l), jnp.float32)
+    env = jax.ShapeDtypeStruct((n, l), jnp.float32)
+    lowered = jax.jit(model.batch_lb_keogh).lower(q, env, env)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    args = ap.parse_args()
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest_lines = ["# name\tbatch\trows\tlen\tfile"]
+    for (b, n, l) in SHAPES:
+        fname = f"lb_keogh_{b}x{n}x{l}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        text = lower_lb_keogh(b, n, l)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest_lines.append(f"lb_keogh\t{b}\t{n}\t{l}\t{fname}")
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "manifest.tsv"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote {out_dir}/manifest.tsv ({len(SHAPES)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,148 @@
+"""Layer-1 Pallas kernels: batched LB_Keogh and warping envelopes.
+
+Hardware adaptation (DESIGN.md section "Hardware-Adaptation"): the paper's
+hot loop is a scalar, branchy CPU sweep. On TPU-shaped hardware the same
+computation is a branch-free clip-and-reduce, so:
+
+* ``lb_keogh`` tiles the (query-batch x training-rows) plane; each program
+  holds a ``[TB, L]`` query tile and a ``[TN, L]`` envelope tile in VMEM
+  and reduces ``max(q-up, lo-q, 0)^2`` over the series axis on the VPU —
+  one HBM pass per operand, no data-dependent control flow.
+* ``envelopes`` replaces the Lemire deque (sequential, scalar, hostile to
+  vector units) with a shifted-stack windowed min/max: ``O(l*w)`` FLOPs
+  instead of ``O(l)``, but fully vectorized — the classic CPU-to-
+  accelerator trade.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; interpret-mode lowers to plain HLO that both pytest and the
+Rust runtime execute. Real-TPU performance is *estimated* from the
+BlockSpec footprint in DESIGN.md, not measured.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BIG = 1e30
+
+# Tile-size policy. The kernel materializes a [TB, TN, L] f32 clip tile;
+# we budget it at ~4 MiB — on TPU that fits VMEM (~16 MiB/core) with room
+# to double-buffer the operand tiles, and on the CPU interpret path it
+# maximizes L2/L3 locality while amortizing per-grid-step overhead
+# (measured in EXPERIMENTS.md #Perf: 8x8 tiles ran 8x slower than 32x64
+# at 32x256x512).
+TILE_BUDGET_BYTES = 4 << 20
+MAX_TB = 32
+TN_ENVELOPE = 8  # envelope kernel rows per program
+
+
+def _divisor_at_most(n: int, cap: int) -> int:
+    """Largest divisor of ``n`` that is <= cap (>= 1)."""
+    best = 1
+    for d in range(1, min(n, cap) + 1):
+        if n % d == 0:
+            best = d
+    return best
+
+
+def _tiles(b: int, n: int, l: int) -> tuple[int, int]:
+    """Pick (TB, TN) for the bound-matrix kernel."""
+    tb = _divisor_at_most(b, MAX_TB)
+    budget_rows = max(1, TILE_BUDGET_BYTES // (tb * l * 4))
+    tn = _divisor_at_most(n, budget_rows)
+    return tb, tn
+
+
+def _lb_keogh_kernel(q_ref, lo_ref, up_ref, out_ref):
+    """One (TB x TN) output tile.
+
+    q_ref: [TB, L] queries; lo_ref/up_ref: [TN, L] envelopes;
+    out_ref: [TB, TN] bound values.
+    """
+    q = q_ref[...]            # [TB, L]
+    lo = lo_ref[...]          # [TN, L]
+    up = up_ref[...]          # [TN, L]
+    qe = q[:, None, :]        # [TB, 1, L]
+    above = jnp.maximum(qe - up[None, :, :], 0.0)   # [TB, TN, L]
+    below = jnp.maximum(lo[None, :, :] - qe, 0.0)
+    d = above + below         # disjoint support
+    out_ref[...] = jnp.sum(d * d, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def lb_keogh(q: jax.Array, lo: jax.Array, up: jax.Array) -> jax.Array:
+    """Batched LB_Keogh matrix via Pallas.
+
+    Args:
+      q: ``[B, L]`` float32 queries (B divisible by TB).
+      lo: ``[N, L]`` float32 lower envelopes (N divisible by TN).
+      up: ``[N, L]`` float32 upper envelopes.
+
+    Returns:
+      ``[B, N]`` float32, ``out[i, t] = LB_Keogh(q[i], env t)`` with
+      squared delta.
+    """
+    b, l = q.shape
+    n, _ = lo.shape
+    tb, tn = _tiles(b, n, l)
+    grid = (b // tb, n // tn)
+    return pl.pallas_call(
+        _lb_keogh_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tb, l), lambda i, j: (i, 0)),
+            pl.BlockSpec((tn, l), lambda i, j: (j, 0)),
+            pl.BlockSpec((tn, l), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tb, tn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, n), q.dtype),
+        interpret=True,
+    )(q, lo, up)
+
+
+def _envelope_kernel(x_ref, lo_ref, up_ref, *, w: int, l: int):
+    """Windowed min/max over the series axis by shifted stacking.
+
+    x_ref: [TN, L]; lo_ref/up_ref: [TN, L] outputs. ``w`` is static.
+    """
+    x = x_ref[...]
+    lo = x
+    up = x
+    # Shift by +/- s with edge padding; O(w) vector ops of length L.
+    for s in range(1, w + 1):
+        left = jnp.concatenate([x[:, :1].repeat(s, axis=1), x[:, : l - s]], axis=1)
+        right = jnp.concatenate([x[:, s:], x[:, -1:].repeat(s, axis=1)], axis=1)
+        # Edge padding repeats the boundary element, which is already in
+        # every window that clips the boundary - harmless for min/max.
+        lo = jnp.minimum(lo, jnp.minimum(left, right))
+        up = jnp.maximum(up, jnp.maximum(left, right))
+    lo_ref[...] = lo
+    up_ref[...] = up
+
+
+@functools.partial(jax.jit, static_argnames=("w",))
+def envelopes(x: jax.Array, w: int) -> tuple[jax.Array, jax.Array]:
+    """Warping envelopes ``(lower, upper)`` of ``[N, L]`` series, window w."""
+    n, l = x.shape
+    tn = _divisor_at_most(n, TN_ENVELOPE)
+    w = min(w, l - 1)  # shifts beyond the series length are no-ops
+    kernel = functools.partial(_envelope_kernel, w=w, l=l)
+    lo, up = pl.pallas_call(
+        kernel,
+        grid=(n // tn,),
+        in_specs=[pl.BlockSpec((tn, l), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((tn, l), lambda i: (i, 0)),
+            pl.BlockSpec((tn, l), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, l), x.dtype),
+            jax.ShapeDtypeStruct((n, l), x.dtype),
+        ],
+        interpret=True,
+    )(x)
+    return lo, up

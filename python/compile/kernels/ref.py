@@ -1,0 +1,95 @@
+"""Pure-numpy oracles for the Pallas kernels.
+
+Every kernel in this package is validated against these references at
+build time (``pytest python/tests``). They are deliberately written in
+the most obvious way possible — clarity over speed.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+BIG = 1e30
+
+
+def envelopes_ref(x: np.ndarray, w: int) -> tuple[np.ndarray, np.ndarray]:
+    """Warping envelopes of a batch of series.
+
+    Args:
+      x: ``[n, l]`` series.
+      w: window half-width.
+
+    Returns:
+      ``(lower, upper)``, each ``[n, l]``:
+      ``upper[i, j] = max(x[i, max(0, j-w) : j+w+1])`` and the min for
+      ``lower`` — the U^S / L^S of the paper (section 3).
+    """
+    x = np.asarray(x)
+    n, l = x.shape
+    lo = np.empty_like(x)
+    up = np.empty_like(x)
+    for i in range(n):
+        for j in range(l):
+            a = max(0, j - w)
+            b = min(l, j + w + 1)
+            lo[i, j] = x[i, a:b].min()
+            up[i, j] = x[i, a:b].max()
+    return lo, up
+
+
+def lb_keogh_row_ref(q: np.ndarray, lo: np.ndarray, up: np.ndarray) -> float:
+    """Scalar LB_Keogh (squared delta) of one query against one envelope."""
+    above = np.maximum(q - up, 0.0)
+    below = np.maximum(lo - q, 0.0)
+    d = above + below  # at most one of the two is nonzero per element
+    return float(np.sum(d * d))
+
+
+def lb_keogh_matrix_ref(q: np.ndarray, lo: np.ndarray, up: np.ndarray) -> np.ndarray:
+    """Batched LB_Keogh matrix.
+
+    Args:
+      q: ``[b, l]`` queries.
+      lo: ``[n, l]`` training lower envelopes.
+      up: ``[n, l]`` training upper envelopes.
+
+    Returns:
+      ``[b, n]`` with ``out[i, t] = LB_Keogh(q[i], envelope(t))``.
+    """
+    q = np.asarray(q, dtype=np.float64)
+    lo = np.asarray(lo, dtype=np.float64)
+    up = np.asarray(up, dtype=np.float64)
+    b, l = q.shape
+    n, l2 = lo.shape
+    assert l == l2 and up.shape == lo.shape
+    out = np.empty((b, n), dtype=np.float64)
+    for i in range(b):
+        for t in range(n):
+            out[i, t] = lb_keogh_row_ref(q[i], lo[t], up[t])
+    return out
+
+
+def dtw_ref(a: np.ndarray, b: np.ndarray, w: int) -> float:
+    """Windowed DTW with squared delta — oracle for end-to-end tests
+    (mirrors the Rust implementation and paper Eq. 2)."""
+    a = np.asarray(a, dtype=np.float64)
+    b = np.asarray(b, dtype=np.float64)
+    la, lb = len(a), len(b)
+    w = max(w, abs(la - lb))
+    D = np.full((la, lb), np.inf)
+    for i in range(la):
+        for j in range(max(0, i - w), min(lb, i + w + 1)):
+            d = (a[i] - b[j]) ** 2
+            if i == 0 and j == 0:
+                best = 0.0
+            else:
+                cands = []
+                if i > 0 and j > 0:
+                    cands.append(D[i - 1, j - 1])
+                if j > 0:
+                    cands.append(D[i, j - 1])
+                if i > 0:
+                    cands.append(D[i - 1, j])
+                best = min(cands)
+            D[i, j] = d + best
+    return float(D[la - 1, lb - 1])

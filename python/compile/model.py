@@ -1,0 +1,37 @@
+"""Layer-2 JAX model: the batched lower-bound scoring graph.
+
+The Rust coordinator offloads its screening pass here: one XLA execution
+scores a whole query batch against a whole training set. Two entry points:
+
+* :func:`batch_lb_keogh` - queries + precomputed envelopes -> bound
+  matrix. This is the artifact the Rust runtime loads (envelopes are
+  precomputed on the Rust side exactly once per training set).
+* :func:`batch_lb_keogh_from_series` - queries + raw training series +
+  window; computes the envelopes with the Pallas envelope kernel first.
+  Used when the caller has no precomputed envelopes (and as an
+  integration test of kernel composition).
+
+Both lower into a single HLO module containing the Pallas kernels
+(interpret=True -> plain HLO ops, runnable on the CPU PJRT client).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from .kernels import lb_keogh as kernels
+
+
+def batch_lb_keogh(q: jax.Array, lo: jax.Array, up: jax.Array):
+    """Bound matrix ``[B, N]`` for queries ``[B, L]`` and envelopes ``[N, L]``.
+
+    Returned as a 1-tuple: artifacts are lowered with ``return_tuple=True``
+    and unpacked with ``to_tuple`` on the Rust side.
+    """
+    return (kernels.lb_keogh(q, lo, up),)
+
+
+def batch_lb_keogh_from_series(q: jax.Array, t: jax.Array, *, w: int):
+    """Bound matrix computed from raw training series ``t`` ``[N, L]``."""
+    lo, up = kernels.envelopes(t, w)
+    return (kernels.lb_keogh(q, lo, up),)

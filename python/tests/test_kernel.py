@@ -1,0 +1,122 @@
+"""L1 correctness: Pallas kernels vs the pure-numpy oracles.
+
+The hypothesis sweeps are the core correctness signal for the kernel
+layer: shapes, windows and value ranges are generated adversarially and
+every result is checked against ``ref.py``.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels import lb_keogh as kernels
+from compile.kernels import ref
+
+RNG = np.random.default_rng(20210707)
+
+
+def random_batch(b, l, scale=1.0):
+    return (RNG.standard_normal((b, l)) * scale).astype(np.float32)
+
+
+class TestLbKeoghKernel:
+    @pytest.mark.parametrize("b,n,l", [(8, 8, 16), (8, 16, 64), (16, 8, 128), (24, 24, 32)])
+    @pytest.mark.parametrize("w", [1, 4])
+    def test_matches_ref_on_grid(self, b, n, l, w):
+        q = random_batch(b, l)
+        t = random_batch(n, l)
+        lo, up = ref.envelopes_ref(t, w)
+        got = np.asarray(kernels.lb_keogh(q, lo.astype(np.float32), up.astype(np.float32)))
+        want = ref.lb_keogh_matrix_ref(q, lo, up)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_zero_when_inside_envelope(self):
+        q = np.zeros((8, 32), dtype=np.float32)
+        lo = -np.ones((8, 32), dtype=np.float32)
+        up = np.ones((8, 32), dtype=np.float32)
+        got = np.asarray(kernels.lb_keogh(q, lo, up))
+        np.testing.assert_array_equal(got, np.zeros((8, 8)))
+
+    def test_padding_envelope_contributes_zero(self):
+        # The Rust runtime pads length with q=0 inside [-BIG, BIG].
+        q = random_batch(8, 64)
+        t = random_batch(8, 64)
+        lo, up = ref.envelopes_ref(t, 2)
+        base = np.asarray(kernels.lb_keogh(q, lo.astype(np.float32), up.astype(np.float32)))
+        pad = 32
+        qp = np.concatenate([q, np.zeros((8, pad), np.float32)], axis=1)
+        lop = np.concatenate([lo, np.full((8, pad), -ref.BIG)], axis=1).astype(np.float32)
+        upp = np.concatenate([up, np.full((8, pad), ref.BIG)], axis=1).astype(np.float32)
+        padded = np.asarray(kernels.lb_keogh(qp, lop, upp))
+        np.testing.assert_allclose(padded, base, rtol=1e-5)
+
+    @settings(max_examples=40, deadline=None)
+    @given(
+        b=st.sampled_from([8, 16]),
+        n=st.sampled_from([8, 16]),
+        l=st.integers(min_value=4, max_value=96),
+        w=st.integers(min_value=0, max_value=12),
+        scale=st.floats(min_value=0.1, max_value=100.0),
+    )
+    def test_hypothesis_sweep(self, b, n, l, w, scale):
+        q = random_batch(b, l, scale)
+        t = random_batch(n, l, scale)
+        lo, up = ref.envelopes_ref(t, w)
+        got = np.asarray(kernels.lb_keogh(q, lo.astype(np.float32), up.astype(np.float32)))
+        want = ref.lb_keogh_matrix_ref(q, lo, up)
+        np.testing.assert_allclose(got, want, rtol=2e-3, atol=1e-3 * scale * scale)
+
+
+class TestEnvelopeKernel:
+    @pytest.mark.parametrize("n,l", [(8, 16), (16, 64), (8, 128)])
+    @pytest.mark.parametrize("w", [0, 1, 3, 9])
+    def test_matches_ref(self, n, l, w):
+        x = random_batch(n, l)
+        lo, up = kernels.envelopes(x, w)
+        lo_ref, up_ref = ref.envelopes_ref(x, w)
+        np.testing.assert_allclose(np.asarray(lo), lo_ref, rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(up), up_ref, rtol=1e-6)
+
+    def test_window_larger_than_series(self):
+        x = random_batch(8, 12)
+        lo, up = kernels.envelopes(x, 50)
+        assert np.allclose(np.asarray(lo), x.min(axis=1, keepdims=True))
+        assert np.allclose(np.asarray(up), x.max(axis=1, keepdims=True))
+
+    @settings(max_examples=30, deadline=None)
+    @given(
+        l=st.integers(min_value=2, max_value=80),
+        w=st.integers(min_value=0, max_value=20),
+    )
+    def test_hypothesis_sweep(self, l, w):
+        x = random_batch(8, l)
+        lo, up = kernels.envelopes(x, w)
+        lo_ref, up_ref = ref.envelopes_ref(x, w)
+        np.testing.assert_allclose(np.asarray(lo), lo_ref, rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(up), up_ref, rtol=1e-6)
+
+
+class TestRefInvariants:
+    """The oracle itself honors the paper's invariants."""
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        l=st.integers(min_value=2, max_value=40),
+        w=st.integers(min_value=0, max_value=10),
+    )
+    def test_lb_keogh_lower_bounds_dtw(self, l, w):
+        a = RNG.standard_normal(l)
+        b = RNG.standard_normal(l)
+        lo, up = ref.envelopes_ref(b[None, :], w)
+        lb = ref.lb_keogh_row_ref(a, lo[0], up[0])
+        d = ref.dtw_ref(a, b, w)
+        assert lb <= d + 1e-9
+
+    def test_dtw_figure3(self):
+        # The paper's running example (caption says 52; the recurrence
+        # yields 53 - see EXPERIMENTS.md "Paper discrepancies").
+        A = [-1, 1, -1, 4, -2, 1, 1, 1, -1, 0, 1]
+        B = [1, -1, 1, -1, -1, -4, -4, -1, 1, 0, -1]
+        assert ref.dtw_ref(np.array(A), np.array(B), 1) == 53.0

@@ -1,0 +1,58 @@
+"""L2 correctness: the model graph, kernel composition and AOT lowering."""
+
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.kernels import ref
+
+RNG = np.random.default_rng(42)
+
+
+class TestModel:
+    def test_batch_lb_keogh_matches_ref(self):
+        q = RNG.standard_normal((8, 64)).astype(np.float32)
+        t = RNG.standard_normal((16, 64)).astype(np.float32)
+        lo, up = ref.envelopes_ref(t, 3)
+        (got,) = model.batch_lb_keogh(q, lo.astype(np.float32), up.astype(np.float32))
+        want = ref.lb_keogh_matrix_ref(q, lo, up)
+        np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4, atol=1e-4)
+
+    def test_from_series_composes_kernels(self):
+        q = RNG.standard_normal((8, 32)).astype(np.float32)
+        t = RNG.standard_normal((8, 32)).astype(np.float32)
+        (got,) = model.batch_lb_keogh_from_series(q, t, w=2)
+        lo, up = ref.envelopes_ref(t, 2)
+        want = ref.lb_keogh_matrix_ref(q, lo, up)
+        np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4, atol=1e-4)
+
+
+class TestAot:
+    def test_lowered_hlo_text_is_parseable_hlo(self):
+        text = aot.lower_lb_keogh(8, 8, 16)
+        assert "ENTRY" in text
+        assert "f32[8,16]" in text  # query parameter shape
+        assert "f32[8,8]" in text   # output shape
+
+    def test_shapes_table_is_sane(self):
+        for (b, n, l) in aot.SHAPES:
+            assert b % 8 == 0 and n % 8 == 0
+            assert l >= 16
+
+    @pytest.mark.slow
+    def test_roundtrip_numerics_via_jax_executable(self):
+        # Compile the lowered module with jax's own client and compare -
+        # the same HLO the Rust side loads.
+        import jax
+
+        q = RNG.standard_normal((8, 16)).astype(np.float32)
+        t = RNG.standard_normal((8, 16)).astype(np.float32)
+        lo, up = ref.envelopes_ref(t, 1)
+        compiled = jax.jit(model.batch_lb_keogh).lower(
+            jax.ShapeDtypeStruct((8, 16), np.float32),
+            jax.ShapeDtypeStruct((8, 16), np.float32),
+            jax.ShapeDtypeStruct((8, 16), np.float32),
+        ).compile()
+        (got,) = compiled(q, lo.astype(np.float32), up.astype(np.float32))
+        want = ref.lb_keogh_matrix_ref(q, lo, up)
+        np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,120 @@
+//! Left and right *bands* (Tan et al. 2019) — the constant-per-band
+//! structures behind `LB_ENHANCED` and `LB_WEBB_ENHANCED`.
+//!
+//! A band is an L-shaped set of cells through the warping matrix that any
+//! warping path must cross at least once, so the minimum cell value of a
+//! band — and the sum over any collection of *non-overlapping* bands — is
+//! a DTW lower bound (paper Figures 7–9).
+//!
+//! 0-based: the left band at index `i` covers column `i` for rows
+//! `max(0, i-w)..=i` and row `i` for columns `max(0, i-w)..=i`; the right
+//! band mirrors toward the high end.
+
+use crate::delta::Delta;
+
+/// Minimum alignment cost over the left band `𝓛_i^w`.
+#[inline]
+pub fn left_band_min<D: Delta>(a: &[f64], b: &[f64], i: usize, w: usize) -> f64 {
+    let lo = i.saturating_sub(w);
+    let mut m = f64::INFINITY;
+    for r in lo..=i {
+        // cells (r, i): A_r aligned with B_i
+        let c = D::delta(a[r], b[i]);
+        if c < m {
+            m = c;
+        }
+    }
+    for c_idx in lo..=i {
+        // cells (i, c): A_i aligned with B_c
+        let c = D::delta(a[i], b[c_idx]);
+        if c < m {
+            m = c;
+        }
+    }
+    m
+}
+
+/// Minimum alignment cost over the right band `𝓡_i^w`.
+#[inline]
+pub fn right_band_min<D: Delta>(a: &[f64], b: &[f64], i: usize, w: usize) -> f64 {
+    let n = a.len();
+    let hi = (i + w).min(n - 1);
+    let mut m = f64::INFINITY;
+    for r in i..=hi {
+        let c = D::delta(a[r], b[i]);
+        if c < m {
+            m = c;
+        }
+    }
+    for c_idx in i..=hi {
+        let c = D::delta(a[i], b[c_idx]);
+        if c < m {
+            m = c;
+        }
+    }
+    m
+}
+
+/// `Σ_{i=0..k-1} [min 𝓛_i^w + min 𝓡_{ℓ-1-i}^w]` — the band contribution
+/// shared by `LB_ENHANCED^k` and `LB_WEBB_ENHANCED^k`. `k` must already be
+/// clamped to `ℓ/2` by the caller.
+pub fn band_ends_sum<D: Delta>(a: &[f64], b: &[f64], k: usize, w: usize) -> f64 {
+    let n = a.len();
+    let mut s = 0.0;
+    for i in 0..k {
+        s += left_band_min::<D>(a, b, i, w);
+        s += right_band_min::<D>(a, b, n - 1 - i, w);
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::delta::Squared;
+    use crate::dtw::dtw;
+
+    /// Paper Figures 7 and 8: all-bands sums for the running example.
+    const A: [f64; 11] = [-1., 1., -1., 4., -2., 1., 1., 1., -1., 0., 1.];
+    const B: [f64; 11] = [1., -1., 1., -1., -1., -4., -4., -1., 1., 0., -1.];
+
+    #[test]
+    fn figure7_all_left_bands_sum_to_39() {
+        let s: f64 = (0..A.len()).map(|i| left_band_min::<Squared>(&A, &B, i, 1)).sum();
+        assert_eq!(s, 39.0);
+    }
+
+    #[test]
+    fn figure8_all_right_bands_sum_to_36() {
+        let s: f64 = (0..A.len()).map(|i| right_band_min::<Squared>(&A, &B, i, 1)).sum();
+        assert_eq!(s, 36.0);
+    }
+
+    #[test]
+    fn all_left_bands_is_lower_bound() {
+        for w in 1..4 {
+            let s: f64 = (0..A.len()).map(|i| left_band_min::<Squared>(&A, &B, i, w)).sum();
+            assert!(s <= dtw::<Squared>(&A, &B, w) + 1e-12);
+        }
+    }
+
+    #[test]
+    fn band_at_zero_is_corner_cell() {
+        assert_eq!(left_band_min::<Squared>(&A, &B, 0, 3), (A[0] - B[0]) * (A[0] - B[0]));
+        let n = A.len() - 1;
+        assert_eq!(
+            right_band_min::<Squared>(&A, &B, n, 3),
+            (A[n] - B[n]) * (A[n] - B[n])
+        );
+    }
+
+    #[test]
+    fn ends_sum_grows_with_k() {
+        let mut last = 0.0;
+        for k in 0..=5 {
+            let s = band_ends_sum::<Squared>(&A, &B, k, 1);
+            assert!(s >= last - 1e-12, "k={k}");
+            last = s;
+        }
+    }
+}

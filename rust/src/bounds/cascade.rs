@@ -1,0 +1,99 @@
+//! Cascading lower bounds (paper §8).
+//!
+//! Rakthanmanon & Keogh's UCR suite cascades `LB_KIM` → `LB_KEOGH` →
+//! reversed `LB_KEOGH`. The paper observes that `LB_WEBB` decomposes into
+//! the same kind of anytime cascade: constant-time left/right paths, then
+//! the `LB_KEOGH` bridge, then the final Webb pass — each stage starting
+//! from the previous stage's value, abandoning the moment the accumulated
+//! bound clears the pruning threshold.
+//!
+//! [`lb_cascade`] implements that: a constant-time `LB_KIM_FL` screen
+//! first (it is *not* part of `MinLRPaths`' path terms, but shares the
+//! endpoint deltas, so we use it purely as a cheap pre-test), then full
+//! `LB_WEBB` with early abandoning carrying the threshold through every
+//! stage.
+
+use crate::delta::Delta;
+
+use super::{kim, webb, PreparedSeries, Scratch};
+
+/// Staged `KimFL → LB_WEBB` cascade. Semantics match `LB_WEBB` exactly
+/// when not abandoned; with a finite `abandon_at` it often exits after the
+/// two-element Kim test.
+pub fn lb_cascade<D: Delta>(
+    q: &PreparedSeries,
+    t: &PreparedSeries,
+    w: usize,
+    abandon_at: f64,
+    scratch: &mut Scratch,
+) -> f64 {
+    let kim = kim::lb_kim_fl::<D>(&q.values, &t.values);
+    if kim > abandon_at {
+        return kim;
+    }
+    // Max of two valid lower bounds is a valid lower bound; on very short
+    // or endpoint-divergent series KimFL can exceed LB_WEBB.
+    webb::lb_webb::<D>(q, t, w, abandon_at, scratch).max(kim)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+    use crate::delta::Squared;
+    use crate::dtw::dtw;
+
+    fn prep(s: &[f64], w: usize) -> PreparedSeries {
+        PreparedSeries::prepare(s.to_vec(), w)
+    }
+
+    #[test]
+    fn equals_webb_when_not_abandoned() {
+        let mut rng = Rng::seeded(901);
+        let mut scratch = Scratch::default();
+        for _ in 0..100 {
+            let n = rng.int_range(8, 60);
+            let a: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let w = rng.int_range(1, n - 1);
+            let q = prep(&a, w);
+            let t = prep(&b, w);
+            let c = lb_cascade::<Squared>(&q, &t, w, f64::INFINITY, &mut scratch);
+            let wb = webb::lb_webb::<Squared>(&q, &t, w, f64::INFINITY, &mut scratch);
+            assert_eq!(c, wb);
+            assert!(c <= dtw::<Squared>(&a, &b, w) + 1e-9);
+        }
+    }
+
+    #[test]
+    fn kim_stage_short_circuits() {
+        // Wildly different endpoints: the Kim stage alone must clear a
+        // small threshold.
+        let a: Vec<f64> = vec![100.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, -100.0];
+        let b: Vec<f64> = vec![-100.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 100.0];
+        let q = prep(&a, 1);
+        let t = prep(&b, 1);
+        let mut scratch = Scratch::default();
+        let c = lb_cascade::<Squared>(&q, &t, 1, 1.0, &mut scratch);
+        assert_eq!(c, 200.0 * 200.0 * 2.0); // exactly the Kim value
+    }
+}
+
+/// The UCR-suite cascade (Rakthanmanon & Keogh 2013): constant-time
+/// `LB_KIM_FL`, then `LB_KEOGH(A,B)`, then — only when still below the
+/// threshold — `LB_KEOGH(B,A)`. Returns the max of the stages reached.
+pub fn lb_ucr_cascade<D: Delta>(
+    q: &PreparedSeries,
+    t: &PreparedSeries,
+    abandon_at: f64,
+) -> f64 {
+    let kim = kim::lb_kim_fl::<D>(&q.values, &t.values);
+    if kim > abandon_at {
+        return kim;
+    }
+    let fwd = super::keogh::lb_keogh::<D>(&q.values, t, abandon_at).max(kim);
+    if fwd > abandon_at {
+        return fwd;
+    }
+    super::keogh::lb_keogh_reversed::<D>(q, t, abandon_at).max(fwd)
+}

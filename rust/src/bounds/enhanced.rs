@@ -1,0 +1,95 @@
+//! `LB_ENHANCED^k` (Tan, Petitjean & Webb 2019) — bands at the series ends
+//! bridged by `LB_KEOGH` in the middle (paper §3, Figure 9).
+//!
+//! ```text
+//! LB_Enhanced_w^k(A,B) = Σ_{i=1..k} [min 𝓛_i^w + min 𝓡_{ℓ-i+1}^w]
+//!                      + Keogh bridge over i = k+1 .. ℓ-k
+//! ```
+//!
+//! `k` trades tightness for time (each band costs `O(w)`); the paper uses
+//! `k = 8` as the reference setting and sweeps `k ≤ 16` in §6.2.
+
+use crate::delta::Delta;
+
+use super::{bands, keogh, PreparedSeries};
+
+/// `LB_ENHANCED^k`. `k` is clamped to `ℓ/2`; `k = 0` degenerates to plain
+/// `LB_KEOGH`.
+pub fn lb_enhanced<D: Delta>(
+    a: &[f64],
+    t: &PreparedSeries,
+    w: usize,
+    k: usize,
+    abandon_at: f64,
+) -> f64 {
+    let n = a.len();
+    let k = k.min(n / 2);
+    let b = bands::band_ends_sum::<D>(a, &t.values, k, w);
+    if b > abandon_at {
+        return b;
+    }
+    keogh::lb_keogh_bridge::<D>(a, &t.lo, &t.up, k, n - k, b, abandon_at)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+    use crate::delta::Squared;
+    use crate::dtw::dtw;
+
+    const A: [f64; 11] = [-1., 1., -1., 4., -2., 1., 1., 1., -1., 0., 1.];
+    const B: [f64; 11] = [1., -1., 1., -1., -1., -4., -4., -1., 1., 0., -1.];
+
+    fn prep(s: &[f64], w: usize) -> PreparedSeries {
+        PreparedSeries::prepare(s.to_vec(), w)
+    }
+
+    #[test]
+    fn figure9_enhanced_k2_is_25() {
+        let t = prep(&B, 1);
+        assert_eq!(lb_enhanced::<Squared>(&A, &t, 1, 2, f64::INFINITY), 25.0);
+    }
+
+    #[test]
+    fn k0_is_keogh() {
+        let t = prep(&B, 1);
+        assert_eq!(
+            lb_enhanced::<Squared>(&A, &t, 1, 0, f64::INFINITY),
+            keogh::lb_keogh::<Squared>(&A, &t, f64::INFINITY)
+        );
+    }
+
+    #[test]
+    fn huge_k_is_clamped() {
+        let t = prep(&B, 1);
+        let lb = lb_enhanced::<Squared>(&A, &t, 1, 1000, f64::INFINITY);
+        assert!(lb.is_finite());
+        assert!(lb <= dtw::<Squared>(&A, &B, 1) + 1e-12);
+    }
+
+    #[test]
+    fn lower_bound_random_all_k() {
+        let mut rng = Rng::seeded(501);
+        for _ in 0..120 {
+            let n = rng.int_range(6, 64);
+            let a: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let w = rng.int_range(1, n - 1);
+            let d = dtw::<Squared>(&a, &b, w);
+            let t = prep(&b, w);
+            for k in [0, 1, 2, 4, 8, n / 2] {
+                let lb = lb_enhanced::<Squared>(&a, &t, w, k, f64::INFINITY);
+                assert!(lb <= d + 1e-9, "n={n} w={w} k={k}: {lb} > {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn early_abandon_partial_below_full() {
+        let t = prep(&B, 1);
+        let full = lb_enhanced::<Squared>(&A, &t, 1, 2, f64::INFINITY);
+        let part = lb_enhanced::<Squared>(&A, &t, 1, 2, 3.0);
+        assert!(part > 3.0 && part <= full);
+    }
+}

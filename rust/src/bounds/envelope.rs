@@ -1,0 +1,213 @@
+//! Warping envelopes — the derived series at the heart of `LB_KEOGH` and
+//! every bound built on it.
+//!
+//! For a series `S` and window `w`, the upper and lower envelopes are
+//!
+//! ```text
+//! U_i = max_{max(0,i-w) ≤ j ≤ min(ℓ-1,i+w)} S_j
+//! L_i = min_{max(0,i-w) ≤ j ≤ min(ℓ-1,i+w)} S_j
+//! ```
+//!
+//! Computed in `O(ℓ)` (independent of `w`) with Lemire's monotonic-deque
+//! streaming min/max [Lemire 2009], which is what gives the whole bound
+//! family its "constant complexity with respect to window size" property.
+//!
+//! `LB_WEBB` additionally uses *envelopes of envelopes*
+//! (`𝕌^{𝕃^B}`, `𝕃^{𝕌^B}`) — just the same routine applied twice.
+
+/// Compute lower and upper envelopes of `s` for window `w` into the
+/// provided buffers (resized as needed). `O(ℓ)` via monotonic deques.
+///
+/// The deques are flat index rings in a thread-local scratch allocation —
+/// `VecDeque` showed up at ~17% of NN-search profiles from per-call
+/// allocation and wrap-around arithmetic (§Perf O2 in EXPERIMENTS.md).
+pub fn envelopes_into(s: &[f64], w: usize, lo: &mut Vec<f64>, up: &mut Vec<f64>) {
+    let n = s.len();
+    assert!(n > 0, "envelope of empty series");
+    lo.clear();
+    up.clear();
+    lo.resize(n, 0.0);
+    up.resize(n, 0.0);
+    if w == 0 {
+        lo.copy_from_slice(s);
+        up.copy_from_slice(s);
+        return;
+    }
+
+    thread_local! {
+        static IDX: std::cell::RefCell<Vec<u32>> = const { std::cell::RefCell::new(Vec::new()) };
+    }
+    IDX.with(|cell| {
+        let mut buf = cell.borrow_mut();
+        buf.clear();
+        buf.resize(2 * n, 0);
+        let (max_q, min_q) = buf.split_at_mut(n);
+        // Plain head/tail cursors into the two index arrays. A deque
+        // index enters at the tail monotone in value and expires at the
+        // head when it leaves the window — no wrap-around ever occurs
+        // because indices are strictly increasing and at most n live.
+        let (mut max_h, mut max_t) = (0usize, 0usize); // [h, t) live
+        let (mut min_h, mut min_t) = (0usize, 0usize);
+
+        let mut admit = |j: usize,
+                         max_q: &mut [u32],
+                         min_q: &mut [u32],
+                         max_h: &usize,
+                         max_t: &mut usize,
+                         min_h: &usize,
+                         min_t: &mut usize| {
+            let v = s[j];
+            while *max_t > *max_h && s[max_q[*max_t - 1] as usize] <= v {
+                *max_t -= 1;
+            }
+            max_q[*max_t] = j as u32;
+            *max_t += 1;
+            while *min_t > *min_h && s[min_q[*min_t - 1] as usize] >= v {
+                *min_t -= 1;
+            }
+            min_q[*min_t] = j as u32;
+            *min_t += 1;
+        };
+
+        // Prime with the first window [0, min(w, n-1)].
+        for j in 0..=w.min(n - 1) {
+            admit(j, max_q, min_q, &max_h, &mut max_t, &min_h, &mut min_t);
+        }
+        up[0] = s[max_q[max_h] as usize];
+        lo[0] = s[min_q[min_h] as usize];
+
+        for i in 1..n {
+            // Admit the new right edge j = i + w.
+            let j = i + w;
+            if j < n {
+                admit(j, max_q, min_q, &max_h, &mut max_t, &min_h, &mut min_t);
+            }
+            // Expire the old left edge j = i - w - 1.
+            if i > w {
+                let expired = (i - w - 1) as u32;
+                if max_q[max_h] == expired {
+                    max_h += 1;
+                }
+                if min_q[min_h] == expired {
+                    min_h += 1;
+                }
+            }
+            up[i] = s[max_q[max_h] as usize];
+            lo[i] = s[min_q[min_h] as usize];
+        }
+    });
+}
+
+/// Convenience allocating wrapper around [`envelopes_into`]:
+/// returns `(lower, upper)`.
+pub fn envelopes(s: &[f64], w: usize) -> (Vec<f64>, Vec<f64>) {
+    let mut lo = Vec::new();
+    let mut up = Vec::new();
+    envelopes_into(s, w, &mut lo, &mut up);
+    (lo, up)
+}
+
+/// Naive `O(ℓ·w)` reference used by tests.
+pub fn envelopes_naive(s: &[f64], w: usize) -> (Vec<f64>, Vec<f64>) {
+    let n = s.len();
+    let mut lo = vec![0.0; n];
+    let mut up = vec![0.0; n];
+    for i in 0..n {
+        let a = i.saturating_sub(w);
+        let b = (i + w).min(n - 1);
+        let mut mn = f64::INFINITY;
+        let mut mx = f64::NEG_INFINITY;
+        for j in a..=b {
+            mn = mn.min(s[j]);
+            mx = mx.max(s[j]);
+        }
+        lo[i] = mn;
+        up[i] = mx;
+    }
+    (lo, up)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+
+    #[test]
+    fn matches_naive_on_random_series() {
+        let mut rng = Rng::seeded(42);
+        for &n in &[1usize, 2, 3, 5, 17, 64, 257] {
+            for &w in &[0usize, 1, 2, 3, 7, 50, 1000] {
+                let s: Vec<f64> = (0..n).map(|_| rng.normal() * 3.0).collect();
+                let (lo_f, up_f) = envelopes(&s, w);
+                let (lo_n, up_n) = envelopes_naive(&s, w);
+                assert_eq!(lo_f, lo_n, "lo n={n} w={w}");
+                assert_eq!(up_f, up_n, "up n={n} w={w}");
+            }
+        }
+    }
+
+    #[test]
+    fn envelope_sandwiches_series() {
+        let mut rng = Rng::seeded(7);
+        let s: Vec<f64> = (0..100).map(|_| rng.normal()).collect();
+        for w in [0, 1, 5, 20] {
+            let (lo, up) = envelopes(&s, w);
+            for i in 0..s.len() {
+                assert!(lo[i] <= s[i] && s[i] <= up[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn window_zero_is_identity() {
+        let s = [3.0, -1.0, 4.0];
+        let (lo, up) = envelopes(&s, 0);
+        assert_eq!(lo, s.to_vec());
+        assert_eq!(up, s.to_vec());
+    }
+
+    #[test]
+    fn window_full_is_global_extrema() {
+        let s = [3.0, -1.0, 4.0, 0.5];
+        let (lo, up) = envelopes(&s, 10);
+        assert!(lo.iter().all(|&v| v == -1.0));
+        assert!(up.iter().all(|&v| v == 4.0));
+    }
+
+    #[test]
+    fn envelopes_widen_with_window() {
+        let mut rng = Rng::seeded(13);
+        let s: Vec<f64> = (0..60).map(|_| rng.normal()).collect();
+        let mut prev = envelopes(&s, 0);
+        for w in 1..12 {
+            let cur = envelopes(&s, w);
+            for i in 0..s.len() {
+                assert!(cur.0[i] <= prev.0[i] && cur.1[i] >= prev.1[i]);
+            }
+            prev = cur;
+        }
+    }
+
+    #[test]
+    fn envelope_of_envelope_nests() {
+        // 𝕃^{𝕌^B} lies between 𝕃^B-ish bounds: L_i <= LUB_i <= U_i etc.
+        let mut rng = Rng::seeded(99);
+        let s: Vec<f64> = (0..80).map(|_| rng.normal()).collect();
+        for w in [1usize, 3, 9] {
+            let (lo, up) = envelopes(&s, w);
+            let (lub, _) = envelopes(&up, w);
+            let (_, ulb) = envelopes(&lo, w);
+            for i in 0..s.len() {
+                assert!(lub[i] <= up[i] + 1e-15);
+                assert!(ulb[i] >= lo[i] - 1e-15);
+                // The key LB_Webb fact: within j's window every U_i >= LUB_j.
+                let a = i.saturating_sub(w);
+                let b = (i + w).min(s.len() - 1);
+                for j in a..=b {
+                    assert!(lub[i] <= up[j] + 1e-15);
+                    assert!(ulb[i] >= lo[j] - 1e-15);
+                }
+            }
+        }
+    }
+}

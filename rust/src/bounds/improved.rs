@@ -1,0 +1,130 @@
+//! `LB_IMPROVED` (Lemire 2009) — the two-pass envelope bound that
+//! `LB_PETITJEAN` tightens and `LB_WEBB` out-runs.
+//!
+//! Pass 1 is `LB_KEOGH(A, B)`, which as a side effect yields the
+//! *projection* `Ω_w(A,B)_i = clip(A_i, 𝕃_i^B, 𝕌_i^B)`. Pass 2 adds
+//! `LB_KEOGH(B, Ω)` — distances from `B` to the envelope *of the
+//! projection* — capturing mass that the first pass cannot see (paper §3,
+//! Figure 6).
+//!
+//! The per-pair envelope of the projection is exactly the overhead
+//! `LB_WEBB` eliminates: it costs another `O(ℓ)` deque sweep on **every**
+//! query-candidate pair, where `LB_WEBB`'s envelope-of-envelope terms are
+//! precomputable per series.
+
+use crate::delta::Delta;
+
+use super::{envelope, keogh, PreparedSeries, Scratch};
+
+/// `LB_IMPROVED` with early abandoning.
+pub fn lb_improved<D: Delta>(
+    q: &PreparedSeries,
+    t: &PreparedSeries,
+    w: usize,
+    abandon_at: f64,
+    scratch: &mut Scratch,
+) -> f64 {
+    let a = &q.values;
+    let b = &t.values;
+    let n = a.len();
+
+    // Pass 1: LB_Keogh(A, B), materializing the projection.
+    let acc = keogh::lb_keogh_bridge_proj::<D>(
+        a, &t.lo, &t.up, 0, n, 0.0, abandon_at, &mut scratch.proj,
+    );
+    if acc > abandon_at {
+        return acc;
+    }
+
+    // Pass 2: LB_Keogh(B, Ω) against the envelope of the projection.
+    envelope::envelopes_into(&scratch.proj, w, &mut scratch.proj_lo, &mut scratch.proj_up);
+    keogh::lb_keogh_bridge::<D>(b, &scratch.proj_lo, &scratch.proj_up, 0, n, acc, abandon_at)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+    use crate::delta::{Absolute, Squared};
+    use crate::dtw::dtw;
+
+    const A: [f64; 11] = [-1., 1., -1., 4., -2., 1., 1., 1., -1., 0., 1.];
+    const B: [f64; 11] = [1., -1., 1., -1., -1., -4., -4., -1., 1., 0., -1.];
+
+    fn prep(s: &[f64], w: usize) -> PreparedSeries {
+        PreparedSeries::prepare(s.to_vec(), w)
+    }
+
+    #[test]
+    fn at_least_as_tight_as_keogh() {
+        let mut rng = Rng::seeded(601);
+        let mut scratch = Scratch::default();
+        let mut strictly_tighter = 0usize;
+        for _ in 0..200 {
+            let n = rng.int_range(6, 80);
+            let a: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let w = rng.int_range(1, (n - 1).min(12));
+            let q = prep(&a, w);
+            let t = prep(&b, w);
+            let k = keogh::lb_keogh::<Squared>(&a, &t, f64::INFINITY);
+            let imp = lb_improved::<Squared>(&q, &t, w, f64::INFINITY, &mut scratch);
+            assert!(imp >= k - 1e-12);
+            if imp > k + 1e-9 {
+                strictly_tighter += 1;
+            }
+            assert!(imp <= dtw::<Squared>(&a, &b, w) + 1e-9);
+        }
+        assert!(strictly_tighter > 50, "second pass almost never fired: {strictly_tighter}");
+    }
+
+    #[test]
+    fn lower_bound_absolute_delta() {
+        let mut rng = Rng::seeded(602);
+        let mut scratch = Scratch::default();
+        for _ in 0..100 {
+            let n = rng.int_range(6, 60);
+            let a: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let w = rng.int_range(0, n - 1);
+            let q = prep(&a, w);
+            let t = prep(&b, w);
+            let lb = lb_improved::<Absolute>(&q, &t, w, f64::INFINITY, &mut scratch);
+            assert!(lb <= dtw::<Absolute>(&a, &b, w) + 1e-9);
+        }
+    }
+
+    #[test]
+    fn running_example_tighter_than_keogh() {
+        let mut scratch = Scratch::default();
+        let q = prep(&A, 1);
+        let t = prep(&B, 1);
+        let k = keogh::lb_keogh::<Squared>(&A, &t, f64::INFINITY);
+        let imp = lb_improved::<Squared>(&q, &t, 1, f64::INFINITY, &mut scratch);
+        assert!(imp > k, "improved {imp} should beat keogh {k} on Figure 6's example");
+        assert!(imp <= 52.0);
+    }
+
+    #[test]
+    fn abandon_partial_is_valid() {
+        let mut scratch = Scratch::default();
+        let q = prep(&A, 1);
+        let t = prep(&B, 1);
+        let full = lb_improved::<Squared>(&q, &t, 1, f64::INFINITY, &mut scratch);
+        for cut in [1.0, 5.0, 10.0, 20.0] {
+            let part = lb_improved::<Squared>(&q, &t, 1, cut, &mut scratch);
+            if part > cut {
+                assert!(part <= full + 1e-12);
+            } else {
+                assert!((part - full).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_on_identical() {
+        let mut scratch = Scratch::default();
+        let q = prep(&A, 2);
+        assert_eq!(lb_improved::<Squared>(&q, &q, 2, f64::INFINITY, &mut scratch), 0.0);
+    }
+}

@@ -1,0 +1,194 @@
+//! `LB_KEOGH` (Keogh & Ratanamahatana 2005) — the workhorse envelope bound
+//! and the "bridge" every other bound in this crate builds on.
+//!
+//! ```text
+//! LB_Keogh_w(A, B) = Σ_i  δ(A_i, 𝕌_i^B)  if A_i > 𝕌_i^B
+//!                        δ(A_i, 𝕃_i^B)  if A_i < 𝕃_i^B
+//!                        0              otherwise
+//! ```
+//!
+//! Sound because any `B_j` that `A_i` may align with (`|i-j| ≤ w`) lies
+//! within `[𝕃_i^B, 𝕌_i^B]`, so the distance from `A_i` to the envelope
+//! never exceeds the distance to the aligned element.
+
+use crate::delta::Delta;
+
+use super::PreparedSeries;
+
+/// Full-range `LB_KEOGH` with early abandoning.
+#[inline]
+pub fn lb_keogh<D: Delta>(a: &[f64], t: &PreparedSeries, abandon_at: f64) -> f64 {
+    lb_keogh_bridge::<D>(a, &t.lo, &t.up, 0, a.len(), 0.0, abandon_at)
+}
+
+/// `LB_KEOGH` with the roles of the two series reversed — candidate
+/// against the *query's* envelope. §8 of the paper: "Reversing the order
+/// of the two series in LB_KEOGH will obtain a tighter bound … in
+/// approximately 50% of cases"; the UCR-suite cascade (Rakthanmanon &
+/// Keogh 2013) runs both. Requires a query prepared with envelopes.
+#[inline]
+pub fn lb_keogh_reversed<D: Delta>(
+    q: &PreparedSeries,
+    t: &PreparedSeries,
+    abandon_at: f64,
+) -> f64 {
+    debug_assert_eq!(q.lo.len(), t.values.len(), "reversed Keogh needs query envelopes");
+    lb_keogh_bridge::<D>(&t.values, &q.lo, &q.up, 0, t.values.len(), 0.0, abandon_at)
+}
+
+/// The Keogh *bridge*: the same sum restricted to `range_lo..range_hi`,
+/// starting from an already-accumulated value `acc` (the LR-path or band
+/// contribution of the enclosing bound). Abandons (returning the partial,
+/// still-valid bound) once the sum exceeds `abandon_at`.
+pub fn lb_keogh_bridge<D: Delta>(
+    a: &[f64],
+    t_lo: &[f64],
+    t_up: &[f64],
+    range_lo: usize,
+    range_hi: usize,
+    acc: f64,
+    abandon_at: f64,
+) -> f64 {
+    let mut b = acc;
+    for i in range_lo..range_hi {
+        let v = a[i];
+        if v > t_up[i] {
+            b += D::delta(v, t_up[i]);
+        } else if v < t_lo[i] {
+            b += D::delta(v, t_lo[i]);
+        }
+        if b > abandon_at {
+            return b;
+        }
+    }
+    b
+}
+
+/// Keogh bridge that also materializes the **projection**
+/// `Ω_w(A, B)_i = clip(A_i, 𝕃_i^B, 𝕌_i^B)` over the *full* series (the
+/// envelope of the projection near the bridge edges reads values outside
+/// the bridge range, and Theorems 1–2 define Ω over the whole series).
+///
+/// Because the Keogh term is exactly `δ(A_i, Ω_i)`, filling the projection
+/// first costs one extra pass but no extra branching in the summation.
+pub fn lb_keogh_bridge_proj<D: Delta>(
+    a: &[f64],
+    t_lo: &[f64],
+    t_up: &[f64],
+    range_lo: usize,
+    range_hi: usize,
+    acc: f64,
+    abandon_at: f64,
+    proj: &mut Vec<f64>,
+) -> f64 {
+    let n = a.len();
+    proj.clear();
+    proj.resize(n, 0.0);
+    for i in 0..n {
+        proj[i] = a[i].clamp(t_lo[i], t_up[i]);
+    }
+    let mut b = acc;
+    for i in range_lo..range_hi {
+        b += D::delta(a[i], proj[i]);
+        if b > abandon_at {
+            return b;
+        }
+    }
+    b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+    use crate::delta::{Absolute, Squared};
+    use crate::dtw::dtw;
+
+    const A: [f64; 11] = [-1., 1., -1., 4., -2., 1., 1., 1., -1., 0., 1.];
+    const B: [f64; 11] = [1., -1., 1., -1., -1., -4., -4., -1., 1., 0., -1.];
+
+    fn prep(s: &[f64], w: usize) -> PreparedSeries {
+        PreparedSeries::prepare(s.to_vec(), w)
+    }
+
+    #[test]
+    fn figure5_value() {
+        // Hand-computed LB_Keogh for the running example, w = 1, squared δ.
+        // Envelope of B (w=1): U = [1,1,1,1,-1,-1,-1,1,1,1,0], pointwise with
+        // L = [-1,-1,-1,-1,-4,-4,-4,-4,-1,-1,-1].
+        // A outside: i=3 (4 > 1 → 9), i=5,6 (1 > -1 → 4 each), i=10 (1 > 0 → 1);
+        // i=7 sits exactly on the envelope (1 = U_7) and contributes 0.
+        let t = prep(&B, 1);
+        assert_eq!(t.up, vec![1., 1., 1., 1., -1., -1., -1., 1., 1., 1., 0.]);
+        assert_eq!(t.lo, vec![-1., -1., -1., -1., -4., -4., -4., -4., -1., -1., -1.]);
+        let lb = lb_keogh::<Squared>(&A, &t, f64::INFINITY);
+        assert_eq!(lb, 9.0 + 4.0 + 4.0 + 1.0);
+        assert!(lb <= dtw::<Squared>(&A, &B, 1));
+    }
+
+    #[test]
+    fn zero_when_inside_envelope() {
+        let t = prep(&B, 10); // full-width window swallows everything
+        let inside: Vec<f64> = vec![0.0; B.len()];
+        assert_eq!(lb_keogh::<Squared>(&inside, &t, f64::INFINITY), 0.0);
+    }
+
+    #[test]
+    fn early_abandon_partial_is_lower_bound() {
+        let t = prep(&B, 1);
+        let full = lb_keogh::<Squared>(&A, &t, f64::INFINITY);
+        let part = lb_keogh::<Squared>(&A, &t, 5.0);
+        assert!(part > 5.0, "must exceed the abandon threshold");
+        assert!(part <= full, "partial sum can never exceed the full bound");
+    }
+
+    #[test]
+    fn projection_variant_matches_and_fills_clip() {
+        let t = prep(&B, 1);
+        let mut proj = Vec::new();
+        let via_proj = lb_keogh_bridge_proj::<Squared>(
+            &A, &t.lo, &t.up, 0, A.len(), 0.0, f64::INFINITY, &mut proj,
+        );
+        assert_eq!(via_proj, lb_keogh::<Squared>(&A, &t, f64::INFINITY));
+        for i in 0..A.len() {
+            assert!(proj[i] >= t.lo[i] && proj[i] <= t.up[i]);
+            if A[i] >= t.lo[i] && A[i] <= t.up[i] {
+                assert_eq!(proj[i], A[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn lower_bound_on_random_pairs() {
+        let mut rng = Rng::seeded(301);
+        for _ in 0..200 {
+            let n = rng.int_range(6, 80);
+            let a: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let w = rng.below(n);
+            let t = prep(&b, w);
+            let lb = lb_keogh::<Squared>(&a, &t, f64::INFINITY);
+            let d = dtw::<Squared>(&a, &b, w);
+            assert!(lb <= d + 1e-9, "n={n} w={w} lb={lb} dtw={d}");
+            let lb1 = lb_keogh::<Absolute>(&a, &t, f64::INFINITY);
+            let d1 = dtw::<Absolute>(&a, &b, w);
+            assert!(lb1 <= d1 + 1e-9);
+        }
+    }
+
+    #[test]
+    fn tightness_nonincreasing_in_window() {
+        // Wider window → looser envelope → smaller bound.
+        let mut rng = Rng::seeded(302);
+        let n = 64;
+        let a: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mut last = f64::INFINITY;
+        for w in 0..n {
+            let t = prep(&b, w);
+            let lb = lb_keogh::<Squared>(&a, &t, f64::INFINITY);
+            assert!(lb <= last + 1e-12);
+            last = lb;
+        }
+    }
+}

@@ -1,0 +1,58 @@
+//! `LB_KIM` — the constant-time bound (Kim, Park & Chu 2001).
+//!
+//! We implement the windowed-safe *first/last* form used throughout the
+//! modern literature (e.g. the UCR suite): the boundary conditions force
+//! `A_1 ↔ B_1` and `A_ℓ ↔ B_ℓ` into **every** warping path, so
+//!
+//! ```text
+//! LB_KimFL(A, B) = δ(A_1, B_1) + δ(A_ℓ, B_ℓ) ≤ DTW_w(A, B)
+//! ```
+//!
+//! for any window and any δ monotone in `|a-b|` (in fact for any
+//! non-negative δ). The original LB_Kim also compared global min/max
+//! features, which is not sound under windowing for arbitrary δ and adds
+//! little under z-normalization, so the FL form is what cascades use
+//! (Rakthanmanon & Keogh 2013 — cited in §8 of the paper).
+
+use crate::delta::Delta;
+
+/// Constant-time first/last lower bound.
+#[inline]
+pub fn lb_kim_fl<D: Delta>(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert!(!a.is_empty() && !b.is_empty());
+    if a.len() == 1 && b.len() == 1 {
+        // A single alignment: first and last coincide.
+        return D::delta(a[0], b[0]);
+    }
+    D::delta(a[0], b[0]) + D::delta(a[a.len() - 1], b[b.len() - 1])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::delta::{Absolute, Squared};
+    use crate::dtw::dtw;
+
+    const A: [f64; 11] = [-1., 1., -1., 4., -2., 1., 1., 1., -1., 0., 1.];
+    const B: [f64; 11] = [1., -1., 1., -1., -1., -4., -4., -1., 1., 0., -1.];
+
+    #[test]
+    fn figure3_values() {
+        // δ(A1,B1) = (-1-1)^2 = 4, δ(A11,B11) = (1-(-1))^2 = 4.
+        assert_eq!(lb_kim_fl::<Squared>(&A, &B), 8.0);
+        assert_eq!(lb_kim_fl::<Absolute>(&A, &B), 4.0);
+    }
+
+    #[test]
+    fn is_lower_bound_at_every_window() {
+        for w in 0..A.len() {
+            assert!(lb_kim_fl::<Squared>(&A, &B) <= dtw::<Squared>(&A, &B, w));
+            assert!(lb_kim_fl::<Absolute>(&A, &B) <= dtw::<Absolute>(&A, &B, w));
+        }
+    }
+
+    #[test]
+    fn zero_on_identical() {
+        assert_eq!(lb_kim_fl::<Squared>(&A, &A), 0.0);
+    }
+}

@@ -1,0 +1,132 @@
+//! `MinLRPaths` — the left/right *path* mechanism of `LB_PETITJEAN` and
+//! `LB_WEBB` (paper §4, Figure 11).
+//!
+//! The boundary conditions pin every warping path to `(1,1)` and `(ℓ,ℓ)`,
+//! and the first/last three alignments can only take one of **seven**
+//! shapes each (Figure 11). Summing `δ(A_1,B_1) + δ(A_ℓ,B_ℓ)` with the
+//! minimum over those seven two-alignment continuations yields a bound on
+//! the cost any path pays inside the first three and last three elements —
+//! strictly tighter than `LB_ENHANCED`'s bands of the same depth, at
+//! constant cost.
+//!
+//! We additionally filter options by the window (an alignment `(i,j)` with
+//! `|i-j| > w` cannot occur), which both tightens the bound for `w = 1`
+//! and keeps it sound for `w = 0` (only the diagonal option survives).
+
+use crate::delta::Delta;
+
+/// The seven start options of Figure 11, as 0-based `(i, j)` alignment
+/// pairs for the second and third alignments (the first is always
+/// `(0,0)`).
+const START_OPTIONS: [[(usize, usize); 2]; 7] = [
+    [(0, 1), (0, 2)],
+    [(0, 1), (1, 2)],
+    [(1, 1), (1, 2)],
+    [(1, 1), (2, 2)],
+    [(1, 1), (2, 1)],
+    [(1, 0), (2, 1)],
+    [(1, 0), (2, 0)],
+];
+
+#[inline]
+fn within_window(p: (usize, usize), w: usize) -> bool {
+    p.0.abs_diff(p.1) <= w
+}
+
+/// `MinLRPaths(A, B)` for window `w`. Requires `ℓ ≥ 6` so the start and
+/// end regions are disjoint (callers fall back to the `NoLR` variants for
+/// shorter series).
+pub fn min_lr_paths<D: Delta>(a: &[f64], b: &[f64], w: usize) -> f64 {
+    let n = a.len();
+    debug_assert!(n >= 6 && b.len() == n, "MinLRPaths requires equal-length series, l >= 6");
+
+    let mut start_min = f64::INFINITY;
+    let mut end_min = f64::INFINITY;
+    for opt in &START_OPTIONS {
+        if within_window(opt[0], w) && within_window(opt[1], w) {
+            let c = D::delta(a[opt[0].0], b[opt[0].1]) + D::delta(a[opt[1].0], b[opt[1].1]);
+            if c < start_min {
+                start_min = c;
+            }
+        }
+        // The end options are the start options mirrored through
+        // (ℓ-1, ℓ-1): alignment (i, j) ↦ (ℓ-1-i, ℓ-1-j).
+        let m0 = (n - 1 - opt[0].0, n - 1 - opt[0].1);
+        let m1 = (n - 1 - opt[1].0, n - 1 - opt[1].1);
+        if within_window(m0, w) && within_window(m1, w) {
+            let c = D::delta(a[m0.0], b[m0.1]) + D::delta(a[m1.0], b[m1.1]);
+            if c < end_min {
+                end_min = c;
+            }
+        }
+    }
+    // Option [(1,1),(2,2)] is always within any window, so the minima are
+    // finite for every w ≥ 0.
+    D::delta(a[0], b[0]) + D::delta(a[n - 1], b[n - 1]) + start_min + end_min
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+    use crate::delta::Squared;
+    use crate::dtw::{cost_matrix, dtw, warping_path};
+
+    const A: [f64; 11] = [-1., 1., -1., 4., -2., 1., 1., 1., -1., 0., 1.];
+    const B: [f64; 11] = [1., -1., 1., -1., -1., -4., -4., -1., 1., 0., -1.];
+
+    #[test]
+    fn is_a_lower_bound_alone() {
+        for w in 0..A.len() {
+            let lb = min_lr_paths::<Squared>(&A, &B, w);
+            assert!(lb <= dtw::<Squared>(&A, &B, w) + 1e-12, "w={w}");
+        }
+    }
+
+    #[test]
+    fn window_zero_forces_diagonal() {
+        let lb = min_lr_paths::<Squared>(&A, &B, 0);
+        let diag = |i: usize| (A[i] - B[i]) * (A[i] - B[i]);
+        assert_eq!(lb, diag(0) + diag(10) + diag(1) + diag(2) + diag(9) + diag(8));
+    }
+
+    #[test]
+    fn bounds_the_actual_path_prefix_suffix() {
+        // The cost of the first three + last three alignments of the true
+        // optimal path must dominate MinLRPaths.
+        let mut rng = Rng::seeded(401);
+        for _ in 0..100 {
+            let n = rng.int_range(8, 40);
+            let a: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            for w in [1usize, 2, 3] {
+                let m = cost_matrix::<Squared>(&a, &b, w);
+                let p = warping_path(&m);
+                let endpoint_cost: f64 = p[..3]
+                    .iter()
+                    .chain(p[p.len() - 3..].iter())
+                    .map(|&(i, j)| (a[i] - b[j]) * (a[i] - b[j]))
+                    .sum();
+                let lb = min_lr_paths::<Squared>(&a, &b, w);
+                assert!(lb <= endpoint_cost + 1e-9, "n={n} w={w}");
+            }
+        }
+    }
+
+    #[test]
+    fn tighter_or_equal_with_larger_window_options() {
+        // More options can only lower the min... so the bound is
+        // non-increasing as w grows (option set grows).
+        let mut last = f64::INFINITY;
+        for w in 0..5 {
+            let lb = min_lr_paths::<Squared>(&A, &B, w);
+            assert!(lb <= last + 1e-12);
+            last = lb;
+        }
+    }
+
+    #[test]
+    fn zero_on_identical_series() {
+        assert_eq!(min_lr_paths::<Squared>(&A, &A, 2), 0.0);
+    }
+}

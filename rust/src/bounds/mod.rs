@@ -1,0 +1,369 @@
+//! DTW lower bounds — the paper's contribution and every baseline.
+//!
+//! | Bound | Module | Paper | Complexity | δ requirement |
+//! |---|---|---|---|---|
+//! | `LB_KIM_FL` | [`kim`] | Kim et al. 2001 (first/last form) | `O(1)` | monotone |
+//! | `LB_KEOGH` | [`keogh`] | Keogh & Ratanamahatana 2005 | `O(ℓ)` | monotone |
+//! | `LB_IMPROVED` | [`improved`] | Lemire 2009 | `O(ℓ)` | point-triangle |
+//! | `LB_ENHANCED^k` | [`enhanced`] | Tan et al. 2019 | `O(ℓ + k·w)` | monotone |
+//! | `LB_PETITJEAN` | [`petitjean`] | **this paper, §4** | `O(ℓ)` | triangle-adjustment |
+//! | `LB_WEBB` | [`webb`] | **this paper, §5** | `O(ℓ)` | triangle-adjustment |
+//! | `LB_WEBB*` | [`webb`] | **this paper, §5.1** | `O(ℓ)` | point-triangle |
+//! | `LB_WEBB_ENHANCED^k` | [`webb`] | **this paper, §5.2** | `O(ℓ + k·w)` | triangle-adjustment |
+//! | cascade | [`cascade`] | §8 | staged | as per stages |
+//!
+//! All bounds are *screening* devices for nearest-neighbor search: they
+//! never exceed `DTW_w(A, B)` (the property-test suite enforces this on
+//! hundreds of thousands of random pairs), and every one supports **early
+//! abandoning** — computation stops as soon as the partial sum exceeds the
+//! caller's `abandon_at` threshold, which is sound because each is a sum
+//! of non-negative allowances.
+//!
+//! ## Conventions
+//!
+//! * Series are 0-based `&[f64]`; the paper's index range `4 ≤ i ≤ ℓ-3`
+//!   (1-based) is `3..ℓ-3` here.
+//! * In a bound `λ(A, B)`, `A` is the **query** and `B` the **candidate**
+//!   (training series). Envelopes of `B` are precomputed once per training
+//!   set; envelopes of `A` once per query — both carried by
+//!   [`PreparedSeries`].
+//! * Bounds are *not* symmetric: `λ(A,B) ≠ λ(B,A)` in general.
+
+pub mod bands;
+pub mod cascade;
+pub mod enhanced;
+pub mod envelope;
+pub mod improved;
+pub mod keogh;
+pub mod kim;
+pub mod lr_paths;
+pub mod petitjean;
+pub mod webb;
+
+use crate::delta::Delta;
+
+/// A series plus every derived envelope the bound family needs, for a
+/// specific window `w`:
+///
+/// * `lo` / `up` — the warping envelopes `𝕃^S`, `𝕌^S`;
+/// * `lo_of_up` — `𝕃^{𝕌^S}` (lower envelope *of* the upper envelope);
+/// * `up_of_lo` — `𝕌^{𝕃^S}`.
+///
+/// The envelope-of-envelope pair is what lets `LB_WEBB` skip the per-pair
+/// projection that makes `LB_IMPROVED` expensive. Preparation is `O(ℓ)`.
+#[derive(Debug, Clone)]
+pub struct PreparedSeries {
+    /// The raw series values.
+    pub values: Vec<f64>,
+    /// Window this preparation is valid for.
+    pub w: usize,
+    /// Lower envelope `𝕃^S`.
+    pub lo: Vec<f64>,
+    /// Upper envelope `𝕌^S`.
+    pub up: Vec<f64>,
+    /// `𝕃^{𝕌^S}` — used by `LB_WEBB`'s freeness test and case analysis.
+    pub lo_of_up: Vec<f64>,
+    /// `𝕌^{𝕃^S}`.
+    pub up_of_lo: Vec<f64>,
+}
+
+impl PreparedSeries {
+    /// Compute all envelopes for window `w`.
+    pub fn prepare(values: Vec<f64>, w: usize) -> Self {
+        let (lo, up) = envelope::envelopes(&values, w);
+        let (lo_of_up, _) = envelope::envelopes(&up, w);
+        let (_, up_of_lo) = envelope::envelopes(&lo, w);
+        PreparedSeries { values, w, lo, up, lo_of_up, up_of_lo }
+    }
+
+    /// Series length ℓ.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    /// True when the series is empty (never, for prepared data).
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+}
+
+/// Reusable per-thread buffers so the hot path never allocates.
+///
+/// `LB_IMPROVED` / `LB_PETITJEAN` need a projection plus its envelopes;
+/// `LB_WEBB` needs freeness prefix sums. One `Scratch` per search thread.
+#[derive(Debug, Default)]
+pub struct Scratch {
+    /// Projection `Ω_w(A, B)` of the query onto the candidate envelope.
+    pub proj: Vec<f64>,
+    /// Lower envelope of the projection.
+    pub proj_lo: Vec<f64>,
+    /// Upper envelope of the projection.
+    pub proj_up: Vec<f64>,
+    /// Prefix counts of positions blocking "free above" (see `webb`).
+    pub block_up: Vec<u32>,
+    /// Prefix counts of positions blocking "free below".
+    pub block_dn: Vec<u32>,
+}
+
+impl Scratch {
+    /// Pre-size for series of length `l` (buffers grow on demand anyway).
+    pub fn new(l: usize) -> Self {
+        Scratch {
+            proj: Vec::with_capacity(l),
+            proj_lo: Vec::with_capacity(l),
+            proj_up: Vec::with_capacity(l),
+            block_up: Vec::with_capacity(l + 1),
+            block_dn: Vec::with_capacity(l + 1),
+        }
+    }
+}
+
+/// Dynamically-selectable lower bound. Experiment drivers and the CLI
+/// hold a `BoundKind`; the hot loops call [`BoundKind::compute`] which
+/// dispatches once to the monomorphized kernels.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BoundKind {
+    /// Constant-time first/last bound (`LB_KIM` in its windowed-safe form).
+    KimFL,
+    /// `LB_KEOGH`.
+    Keogh,
+    /// `LB_IMPROVED` (Lemire).
+    Improved,
+    /// `LB_ENHANCED^k` (Tan et al.); the payload is `k`.
+    Enhanced(usize),
+    /// `LB_PETITJEAN` — tightest known in the `O(ℓ)` class.
+    Petitjean,
+    /// `LB_PETITJEAN` without the left/right paths (ablation; always ≥ `LB_IMPROVED`).
+    PetitjeanNoLr,
+    /// `LB_WEBB` — the paper's efficiency/tightness sweet spot.
+    Webb,
+    /// `LB_WEBB` without the left/right paths (ablation).
+    WebbNoLr,
+    /// `LB_WEBB*` — valid for any δ monotone in `|a-b|` with the point
+    /// triangle property.
+    WebbStar,
+    /// `LB_WEBB_ENHANCED^k` — left/right *bands* instead of paths.
+    WebbEnhanced(usize),
+    /// §8 cascade: `KimFL` → full `LB_WEBB` with early abandoning.
+    Cascade,
+    /// `LB_KEOGH` with the series roles reversed (§8).
+    KeoghRev,
+    /// The UCR-suite cascade (Rakthanmanon & Keogh 2013, cited in §8):
+    /// `KimFL` → `LB_KEOGH` → reversed `LB_KEOGH`, taking the max.
+    UcrCascade,
+}
+
+impl BoundKind {
+    /// All kinds the experiment suite iterates over (Enhanced/WebbEnhanced
+    /// are instantiated at the paper's reference `k`).
+    pub const ALL: &'static [BoundKind] = &[
+        BoundKind::KimFL,
+        BoundKind::Keogh,
+        BoundKind::Improved,
+        BoundKind::Enhanced(8),
+        BoundKind::Petitjean,
+        BoundKind::PetitjeanNoLr,
+        BoundKind::Webb,
+        BoundKind::WebbNoLr,
+        BoundKind::WebbStar,
+        BoundKind::WebbEnhanced(3),
+        BoundKind::Cascade,
+        BoundKind::KeoghRev,
+        BoundKind::UcrCascade,
+    ];
+
+    /// Canonical display name (matches the paper's typography, ASCII-ized).
+    pub fn name(&self) -> String {
+        match self {
+            BoundKind::KimFL => "LB_KimFL".into(),
+            BoundKind::Keogh => "LB_Keogh".into(),
+            BoundKind::Improved => "LB_Improved".into(),
+            BoundKind::Enhanced(k) => format!("LB_Enhanced{k}"),
+            BoundKind::Petitjean => "LB_Petitjean".into(),
+            BoundKind::PetitjeanNoLr => "LB_Petitjean_NoLR".into(),
+            BoundKind::Webb => "LB_Webb".into(),
+            BoundKind::WebbNoLr => "LB_Webb_NoLR".into(),
+            BoundKind::WebbStar => "LB_Webb*".into(),
+            BoundKind::WebbEnhanced(k) => format!("LB_Webb_Enhanced{k}"),
+            BoundKind::Cascade => "LB_Cascade".into(),
+            BoundKind::KeoghRev => "LB_KeoghRev".into(),
+            BoundKind::UcrCascade => "LB_UcrCascade".into(),
+        }
+    }
+
+    /// Parse a CLI spelling, e.g. `webb`, `enhanced8`, `webb-enhanced3`.
+    pub fn parse(s: &str) -> Option<Self> {
+        let s = s.to_ascii_lowercase().replace(['-', '_'], "");
+        let take_k = |prefix: &str, s: &str| -> Option<usize> {
+            s.strip_prefix(prefix).and_then(|rest| {
+                if rest.is_empty() {
+                    None
+                } else {
+                    rest.parse().ok()
+                }
+            })
+        };
+        match s.as_str() {
+            "kim" | "kimfl" | "lbkim" | "lbkimfl" => Some(BoundKind::KimFL),
+            "keogh" | "lbkeogh" => Some(BoundKind::Keogh),
+            "improved" | "lbimproved" => Some(BoundKind::Improved),
+            "petitjean" | "lbpetitjean" => Some(BoundKind::Petitjean),
+            "petitjeannolr" | "lbpetitjeannolr" => Some(BoundKind::PetitjeanNoLr),
+            "webb" | "lbwebb" => Some(BoundKind::Webb),
+            "webbnolr" | "lbwebbnolr" => Some(BoundKind::WebbNoLr),
+            "webbstar" | "webb*" | "lbwebbstar" => Some(BoundKind::WebbStar),
+            "enhanced" | "lbenhanced" => Some(BoundKind::Enhanced(8)),
+            "webbenhanced" | "lbwebbenhanced" => Some(BoundKind::WebbEnhanced(3)),
+            "cascade" | "lbcascade" => Some(BoundKind::Cascade),
+            "keoghrev" | "lbkeoghrev" => Some(BoundKind::KeoghRev),
+            "ucrcascade" | "lbucrcascade" => Some(BoundKind::UcrCascade),
+            _ => {
+                if let Some(k) = take_k("enhanced", &s).or_else(|| take_k("lbenhanced", &s)) {
+                    Some(BoundKind::Enhanced(k))
+                } else if let Some(k) =
+                    take_k("webbenhanced", &s).or_else(|| take_k("lbwebbenhanced", &s))
+                {
+                    Some(BoundKind::WebbEnhanced(k))
+                } else {
+                    None
+                }
+            }
+        }
+    }
+
+    /// Whether this bound is a sound DTW lower bound for δ = `D`.
+    pub fn is_valid_for<D: Delta>(&self) -> bool {
+        match self {
+            BoundKind::KimFL
+            | BoundKind::Keogh
+            | BoundKind::KeoghRev
+            | BoundKind::UcrCascade
+            | BoundKind::Enhanced(_) => D::MONOTONE_IN_ABS_DIFF,
+            BoundKind::Improved | BoundKind::WebbStar => {
+                // Need δ(x,z) ≥ δ(x,y) + δ(y,z) for y between x and z,
+                // which TRIANGLE_ADJUSTMENT implies (set x = y there).
+                D::MONOTONE_IN_ABS_DIFF && D::TRIANGLE_ADJUSTMENT
+            }
+            BoundKind::Petitjean
+            | BoundKind::PetitjeanNoLr
+            | BoundKind::Webb
+            | BoundKind::WebbNoLr
+            | BoundKind::WebbEnhanced(_)
+            | BoundKind::Cascade => D::MONOTONE_IN_ABS_DIFF && D::TRIANGLE_ADJUSTMENT,
+        }
+    }
+
+    /// True when the bound reads the *query-side* envelopes (the paper's
+    /// "λ requires `𝕌^Q` and `𝕃^Q`" test in Algorithms 3/4).
+    pub fn requires_query_envelopes(&self) -> bool {
+        matches!(
+            self,
+            BoundKind::Petitjean
+                | BoundKind::PetitjeanNoLr
+                | BoundKind::Webb
+                | BoundKind::WebbNoLr
+                | BoundKind::WebbStar
+                | BoundKind::WebbEnhanced(_)
+                | BoundKind::Cascade
+                | BoundKind::KeoghRev
+                | BoundKind::UcrCascade
+        )
+    }
+
+    /// Compute the bound `λ_w(A=q, B=t)` with early abandoning at
+    /// `abandon_at`. Returns a partial (still valid) lower bound greater
+    /// than `abandon_at` when abandoned.
+    ///
+    /// Panics in debug builds when δ does not satisfy the bound's validity
+    /// requirement — see [`BoundKind::is_valid_for`].
+    pub fn compute<D: Delta>(
+        &self,
+        q: &PreparedSeries,
+        t: &PreparedSeries,
+        w: usize,
+        abandon_at: f64,
+        scratch: &mut Scratch,
+    ) -> f64 {
+        debug_assert!(
+            self.is_valid_for::<D>(),
+            "{} is not a valid DTW lower bound for delta {}",
+            self.name(),
+            D::NAME
+        );
+        debug_assert_eq!(q.len(), t.len(), "bounds assume equal-length series");
+        match *self {
+            BoundKind::KimFL => kim::lb_kim_fl::<D>(&q.values, &t.values),
+            BoundKind::Keogh => keogh::lb_keogh::<D>(&q.values, t, abandon_at),
+            BoundKind::Improved => improved::lb_improved::<D>(q, t, w, abandon_at, scratch),
+            BoundKind::Enhanced(k) => {
+                enhanced::lb_enhanced::<D>(&q.values, t, w, k, abandon_at)
+            }
+            BoundKind::Petitjean => petitjean::lb_petitjean::<D>(q, t, w, abandon_at, scratch),
+            BoundKind::PetitjeanNoLr => {
+                petitjean::lb_petitjean_nolr::<D>(q, t, w, abandon_at, scratch)
+            }
+            BoundKind::Webb => webb::lb_webb::<D>(q, t, w, abandon_at, scratch),
+            BoundKind::WebbNoLr => webb::lb_webb_nolr::<D>(q, t, w, abandon_at, scratch),
+            BoundKind::WebbStar => webb::lb_webb_star::<D>(q, t, w, abandon_at, scratch),
+            BoundKind::WebbEnhanced(k) => {
+                webb::lb_webb_enhanced::<D>(q, t, w, k, abandon_at, scratch)
+            }
+            BoundKind::Cascade => cascade::lb_cascade::<D>(q, t, w, abandon_at, scratch),
+            BoundKind::KeoghRev => keogh::lb_keogh_reversed::<D>(q, t, abandon_at),
+            BoundKind::UcrCascade => cascade::lb_ucr_cascade::<D>(q, t, abandon_at),
+        }
+    }
+}
+
+impl std::fmt::Display for BoundKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::delta::{Squared, SqrtAbs};
+
+    #[test]
+    fn parse_roundtrip() {
+        for (s, k) in [
+            ("webb", BoundKind::Webb),
+            ("LB_Webb", BoundKind::Webb),
+            ("keogh", BoundKind::Keogh),
+            ("enhanced8", BoundKind::Enhanced(8)),
+            ("enhanced2", BoundKind::Enhanced(2)),
+            ("webb-enhanced3", BoundKind::WebbEnhanced(3)),
+            ("webb*", BoundKind::WebbStar),
+            ("petitjean_nolr", BoundKind::PetitjeanNoLr),
+            ("cascade", BoundKind::Cascade),
+        ] {
+            assert_eq!(BoundKind::parse(s), Some(k), "{s}");
+        }
+        assert_eq!(BoundKind::parse("bogus"), None);
+    }
+
+    #[test]
+    fn validity_flags() {
+        assert!(BoundKind::Webb.is_valid_for::<Squared>());
+        assert!(!BoundKind::Webb.is_valid_for::<SqrtAbs>());
+        assert!(BoundKind::Keogh.is_valid_for::<SqrtAbs>());
+        assert!(BoundKind::Enhanced(5).is_valid_for::<SqrtAbs>());
+    }
+
+    #[test]
+    fn prepared_series_envelope_shapes() {
+        let s: Vec<f64> = (0..50).map(|i| (i as f64 * 0.3).sin()).collect();
+        let p = PreparedSeries::prepare(s, 4);
+        assert_eq!(p.lo.len(), 50);
+        assert_eq!(p.up.len(), 50);
+        for i in 0..50 {
+            assert!(p.lo[i] <= p.values[i] && p.values[i] <= p.up[i]);
+            assert!(p.lo_of_up[i] <= p.up[i]);
+            assert!(p.up_of_lo[i] >= p.lo[i]);
+        }
+    }
+}

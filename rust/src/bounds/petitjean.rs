@@ -1,0 +1,226 @@
+//! `LB_PETITJEAN` (paper §4, Theorem 1, Algorithm 1) — to the authors'
+//! knowledge the tightest DTW lower bound with `O(ℓ)` time and `O(1)`
+//! dependence on window size.
+//!
+//! Two strengthenings over `LB_IMPROVED`:
+//!
+//! 1. **Double-distance correction.** Where `LB_IMPROVED` adds
+//!    `δ(B_j, 𝕌_j^Ω)` for a `B_j` above the projection envelope,
+//!    `LB_PETITJEAN` adds the larger `δ(B_j, 𝕌_j^A) − δ(𝕌_j^Ω, 𝕌_j^A)`
+//!    whenever `𝕌_j^Ω > 𝕌_j^A`: the aligned `A_i` can be no further than
+//!    `𝕌_j^A`, and at most `δ(𝕌_j^A, 𝕌_j^Ω)`-worth of that gap was already
+//!    credited by the Keogh pass (Observations 1–2 rule out double
+//!    counting). Requires δ's triangle-adjustment property.
+//! 2. **Left/right paths** — `MinLRPaths` over the constrained first/last
+//!    three alignments (see [`super::lr_paths`]), replacing the Keogh terms
+//!    for `i ≤ 3 ∨ i ≥ ℓ-2`.
+//!
+//! The *cost*: like `LB_IMPROVED` it must build the envelope of the
+//! projection for every pair — that is the overhead `LB_WEBB` removes.
+
+use crate::delta::Delta;
+
+use super::{envelope, keogh, lr_paths, PreparedSeries, Scratch};
+
+/// `LB_PETITJEAN_w(A, B)` with early abandoning (paper Algorithm 1).
+///
+/// Falls back to [`lb_petitjean_nolr`] for `ℓ < 8`, where the paper's
+/// `4 ≤ i ≤ ℓ-3` bridge would be degenerate.
+pub fn lb_petitjean<D: Delta>(
+    q: &PreparedSeries,
+    t: &PreparedSeries,
+    w: usize,
+    abandon_at: f64,
+    scratch: &mut Scratch,
+) -> f64 {
+    let n = q.len();
+    if n < 8 {
+        return lb_petitjean_nolr::<D>(q, t, w, abandon_at, scratch);
+    }
+    let acc = lr_paths::min_lr_paths::<D>(&q.values, &t.values, w);
+    if acc > abandon_at {
+        return acc;
+    }
+    petitjean_core::<D>(q, t, w, 3, n - 3, acc, abandon_at, scratch)
+}
+
+/// `LB_PETITJEAN_NoLR` — the ablation without left/right paths (paper §4).
+/// Bridges the whole series; always at least as tight as `LB_IMPROVED`.
+pub fn lb_petitjean_nolr<D: Delta>(
+    q: &PreparedSeries,
+    t: &PreparedSeries,
+    w: usize,
+    abandon_at: f64,
+    scratch: &mut Scratch,
+) -> f64 {
+    petitjean_core::<D>(q, t, w, 0, q.len(), 0.0, abandon_at, scratch)
+}
+
+/// Shared core: Keogh bridge over `[lo, hi)` (with full-series projection),
+/// then the four-case second pass of Theorem 1 over the same range.
+#[allow(clippy::too_many_arguments)]
+fn petitjean_core<D: Delta>(
+    q: &PreparedSeries,
+    t: &PreparedSeries,
+    w: usize,
+    lo: usize,
+    hi: usize,
+    acc: f64,
+    abandon_at: f64,
+    scratch: &mut Scratch,
+) -> f64 {
+    let a = &q.values;
+    let b = &t.values;
+
+    // Bridge + projection Ω (projection is defined over the full series —
+    // the envelope of Ω read at j near the bridge edges depends on it).
+    let mut bound = keogh::lb_keogh_bridge_proj::<D>(
+        a, &t.lo, &t.up, lo, hi, acc, abandon_at, &mut scratch.proj,
+    );
+    if bound > abandon_at {
+        return bound;
+    }
+
+    // Envelope of the projection — the per-pair O(l) overhead.
+    envelope::envelopes_into(&scratch.proj, w, &mut scratch.proj_lo, &mut scratch.proj_up);
+
+    let (up_a, lo_a) = (&q.up, &q.lo);
+    let (up_p, lo_p) = (&scratch.proj_up, &scratch.proj_lo);
+    for j in lo..hi {
+        let v = b[j];
+        if v > up_p[j] {
+            bound += if up_p[j] > up_a[j] {
+                // Theorem 1 case (20): B_j beyond both envelopes.
+                D::delta(v, up_a[j]) - D::delta(up_p[j], up_a[j])
+            } else {
+                // Case (22): classic Improved-style allowance.
+                D::delta(v, up_p[j])
+            };
+        } else if v < lo_p[j] {
+            bound += if lo_p[j] < lo_a[j] {
+                // Case (21).
+                D::delta(v, lo_a[j]) - D::delta(lo_p[j], lo_a[j])
+            } else {
+                // Case (23).
+                D::delta(v, lo_p[j])
+            };
+        }
+        if bound > abandon_at {
+            return bound;
+        }
+    }
+    bound
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+    use crate::delta::{Absolute, Squared};
+    use crate::dtw::dtw;
+
+    const A: [f64; 11] = [-1., 1., -1., 4., -2., 1., 1., 1., -1., 0., 1.];
+    const B: [f64; 11] = [1., -1., 1., -1., -1., -4., -4., -1., 1., 0., -1.];
+
+    fn prep(s: &[f64], w: usize) -> PreparedSeries {
+        PreparedSeries::prepare(s.to_vec(), w)
+    }
+
+    #[test]
+    fn is_lower_bound_on_random_pairs() {
+        let mut rng = Rng::seeded(701);
+        let mut scratch = Scratch::default();
+        for _ in 0..300 {
+            let n = rng.int_range(4, 90);
+            let a: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let w = rng.int_range(0, n - 1);
+            let q = prep(&a, w);
+            let t = prep(&b, w);
+            let d = dtw::<Squared>(&a, &b, w);
+            let lb = lb_petitjean::<Squared>(&q, &t, w, f64::INFINITY, &mut scratch);
+            assert!(lb <= d + 1e-9, "n={n} w={w}: {lb} > {d}");
+            let lb2 = lb_petitjean_nolr::<Squared>(&q, &t, w, f64::INFINITY, &mut scratch);
+            assert!(lb2 <= d + 1e-9, "NoLR n={n} w={w}: {lb2} > {d}");
+            let d1 = dtw::<Absolute>(&a, &b, w);
+            let lb1 = lb_petitjean::<Absolute>(&q, &t, w, f64::INFINITY, &mut scratch);
+            assert!(lb1 <= d1 + 1e-9, "abs n={n} w={w}");
+        }
+    }
+
+    #[test]
+    fn nolr_at_least_as_tight_as_improved() {
+        // §4: "LB_PETITJEAN_NoLR is tighter than LB_IMPROVED" (≥ pointwise).
+        let mut rng = Rng::seeded(702);
+        let mut scratch = Scratch::default();
+        let mut strictly = 0;
+        for _ in 0..300 {
+            let n = rng.int_range(6, 70);
+            let a: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let w = rng.int_range(1, (n - 1).min(10));
+            let q = prep(&a, w);
+            let t = prep(&b, w);
+            let imp = super::super::improved::lb_improved::<Squared>(
+                &q, &t, w, f64::INFINITY, &mut scratch,
+            );
+            let pj = lb_petitjean_nolr::<Squared>(&q, &t, w, f64::INFINITY, &mut scratch);
+            assert!(pj >= imp - 1e-9, "n={n} w={w}: {pj} < {imp}");
+            if pj > imp + 1e-9 {
+                strictly += 1;
+            }
+        }
+        assert!(strictly > 20, "double-distance case almost never fired: {strictly}");
+    }
+
+    #[test]
+    fn running_example_beats_improved() {
+        // Figure 12: LB_Petitjean captures strictly more than LB_Improved
+        // on the running example.
+        let mut scratch = Scratch::default();
+        let q = prep(&A, 1);
+        let t = prep(&B, 1);
+        let imp =
+            super::super::improved::lb_improved::<Squared>(&q, &t, 1, f64::INFINITY, &mut scratch);
+        let pj = lb_petitjean::<Squared>(&q, &t, 1, f64::INFINITY, &mut scratch);
+        assert!(pj > imp, "petitjean {pj} <= improved {imp}");
+        assert!(pj <= 52.0);
+    }
+
+    #[test]
+    fn short_series_fall_back() {
+        let mut scratch = Scratch::default();
+        for n in 1..8usize {
+            let a: Vec<f64> = (0..n).map(|i| i as f64).collect();
+            let b: Vec<f64> = (0..n).map(|i| (n - i) as f64).collect();
+            let w = 1.min(n - 1);
+            let q = prep(&a, w);
+            let t = prep(&b, w);
+            let lb = lb_petitjean::<Squared>(&q, &t, w, f64::INFINITY, &mut scratch);
+            assert!(lb <= dtw::<Squared>(&a, &b, w) + 1e-9, "n={n}");
+        }
+    }
+
+    #[test]
+    fn zero_on_identical() {
+        let mut scratch = Scratch::default();
+        let q = prep(&A, 2);
+        assert_eq!(lb_petitjean::<Squared>(&q, &q, 2, f64::INFINITY, &mut scratch), 0.0);
+    }
+
+    #[test]
+    fn abandon_partial_is_valid() {
+        let mut scratch = Scratch::default();
+        let q = prep(&A, 1);
+        let t = prep(&B, 1);
+        let full = lb_petitjean::<Squared>(&q, &t, 1, f64::INFINITY, &mut scratch);
+        for cut in [0.5, 4.0, 12.0, 30.0] {
+            let part = lb_petitjean::<Squared>(&q, &t, 1, cut, &mut scratch);
+            if part > cut {
+                assert!(part <= full + 1e-12);
+            } else {
+                assert!((part - full).abs() < 1e-12);
+            }
+        }
+    }
+}

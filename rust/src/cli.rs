@@ -1,0 +1,117 @@
+//! Minimal command-line flag parsing (the offline build has no `clap`;
+//! DESIGN.md §5). Supports `--key value`, `--key=value` and bare flags.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: a subcommand plus `--key value` options.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First positional argument (the subcommand).
+    pub command: Option<String>,
+    /// Remaining positional arguments.
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut args = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    args.options.insert(key.to_string(), v);
+                } else {
+                    args.options.insert(key.to_string(), "true".to_string());
+                }
+            } else if args.command.is_none() {
+                args.command = Some(a);
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    /// Parse the real process arguments.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// Raw option lookup.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    /// String option with default.
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Parsed numeric/typed option with default; panics with a clear
+    /// message on unparsable input (CLI boundary).
+    pub fn parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        match self.get(key) {
+            None => default,
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|_| panic!("--{key}: cannot parse {v:?}")),
+        }
+    }
+
+    /// Boolean flag (present, `=true`, or `=1`).
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Comma-separated list option.
+    pub fn list(&self, key: &str) -> Option<Vec<String>> {
+        self.get(key)
+            .map(|v| v.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("tightness --scale small --repeats 3 --verbose");
+        assert_eq!(a.command.as_deref(), Some("tightness"));
+        assert_eq!(a.str_or("scale", "x"), "small");
+        assert_eq!(a.parse_or::<usize>("repeats", 1), 3);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn equals_form_and_lists() {
+        let a = parse("sweep --frac=0.01,0.1 --out=/tmp/x");
+        assert_eq!(a.list("frac").unwrap(), vec!["0.01", "0.1"]);
+        assert_eq!(a.str_or("out", ""), "/tmp/x");
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = parse("serve 127.0.0.1:9000 --bound webb");
+        assert_eq!(a.command.as_deref(), Some("serve"));
+        assert_eq!(a.positional, vec!["127.0.0.1:9000"]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("info");
+        assert_eq!(a.parse_or::<f64>("x", 2.5), 2.5);
+        assert_eq!(a.str_or("y", "def"), "def");
+        assert!(a.list("z").is_none());
+    }
+}

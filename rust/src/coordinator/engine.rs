@@ -1,0 +1,236 @@
+//! The query engine: exact 1-NN DTW with lower-bound screening, with an
+//! optional PJRT **batch prefilter**.
+//!
+//! Scalar path = the paper's Algorithm 4 per query. Batch path = one XLA
+//! execution computes the `LB_KEOGH` matrix for the whole query batch
+//! (the L1 Pallas kernel), then each query walks its candidates in
+//! ascending-bound order with early-abandoning DTW. Results are exact
+//! either way; only the screening cost moves.
+
+use std::time::{Duration, Instant};
+
+use crate::bounds::{BoundKind, PreparedSeries, Scratch};
+use crate::data::Dataset;
+use crate::delta::Squared;
+use crate::dtw::dtw_ea;
+use crate::runtime::{BatchLb, XlaRuntime};
+use crate::search::nn::{nn_sorted, NnResult};
+use crate::search::PreparedTrainSet;
+
+/// Which path answered a query.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EnginePath {
+    /// Per-query scalar bound (Algorithm 4 in Rust).
+    Scalar,
+    /// XLA batched prefilter + DTW on survivors.
+    Batched,
+}
+
+/// Response for one query.
+#[derive(Debug, Clone)]
+pub struct QueryResponse {
+    /// The exact nearest neighbor.
+    pub result: NnResult,
+    /// Which path computed it.
+    pub path: EnginePath,
+    /// Engine-side latency.
+    pub latency: Duration,
+}
+
+/// Exact 1-NN engine over one dataset's training split.
+pub struct NnEngine {
+    train: PreparedTrainSet,
+    bound: BoundKind,
+    batch_lb: Option<BatchLb>,
+    scratch: Scratch,
+    bound_buf: Vec<f64>,
+    index_buf: Vec<usize>,
+}
+
+impl NnEngine {
+    /// Build an engine (scalar paths only) for a dataset at window `w`.
+    pub fn new(ds: &Dataset, w: usize, bound: BoundKind) -> Self {
+        let train = PreparedTrainSet::from_dataset(ds, w);
+        NnEngine {
+            train,
+            bound,
+            batch_lb: None,
+            scratch: Scratch::default(),
+            bound_buf: Vec::new(),
+            index_buf: Vec::new(),
+        }
+    }
+
+    /// Attach a PJRT batch prefilter loaded from `artifacts_dir`.
+    /// Fails (leaving the scalar path intact) when no artifact fits.
+    pub fn attach_batch_lb(
+        &mut self,
+        rt: &XlaRuntime,
+        artifacts_dir: &std::path::Path,
+        max_batch: usize,
+    ) -> anyhow::Result<()> {
+        let l = self.train.series.first().map(|s| s.len()).unwrap_or(0);
+        let blb = BatchLb::load(rt, artifacts_dir, max_batch, self.train.len(), l)?;
+        self.batch_lb = Some(blb);
+        Ok(())
+    }
+
+    /// True when the batch path is available.
+    pub fn has_batch_path(&self) -> bool {
+        self.batch_lb.is_some()
+    }
+
+    /// Training-set size.
+    pub fn train_len(&self) -> usize {
+        self.train.len()
+    }
+
+    /// The engine's window.
+    pub fn window(&self) -> usize {
+        self.train.w
+    }
+
+    /// Answer one query on the scalar path.
+    pub fn query_one(&mut self, values: &[f64]) -> QueryResponse {
+        let started = Instant::now();
+        let pq = PreparedSeries::prepare(values.to_vec(), self.train.w);
+        let (result, _) = nn_sorted::<Squared>(
+            &pq,
+            &self.train,
+            self.bound,
+            &mut self.scratch,
+            &mut self.bound_buf,
+            &mut self.index_buf,
+        );
+        QueryResponse { result, path: EnginePath::Scalar, latency: started.elapsed() }
+    }
+
+    /// Answer a batch of queries, using the XLA prefilter when attached
+    /// (and the batch is non-trivial), otherwise the scalar path per query.
+    pub fn query_batch(&mut self, queries: &[Vec<f64>]) -> Vec<QueryResponse> {
+        if queries.is_empty() {
+            return Vec::new();
+        }
+        let use_batch = match &self.batch_lb {
+            Some(blb) => {
+                let (cb, cn, cl) = blb.shape;
+                let l = queries[0].len();
+                queries.len() > 1
+                    && queries.len() <= cb
+                    && self.train.len() <= cn
+                    && l <= cl
+                    && queries.iter().all(|q| q.len() == l)
+            }
+            None => false,
+        };
+        if !use_batch {
+            return queries.iter().map(|q| self.query_one(q)).collect();
+        }
+
+        let started = Instant::now();
+        let blb = self.batch_lb.as_mut().expect("checked above");
+        let q_refs: Vec<&[f64]> = queries.iter().map(|v| v.as_slice()).collect();
+        let lo_refs: Vec<&[f64]> = self.train.series.iter().map(|t| t.lo.as_slice()).collect();
+        let up_refs: Vec<&[f64]> = self.train.series.iter().map(|t| t.up.as_slice()).collect();
+        let matrix = match blb.compute(&q_refs, &lo_refs, &up_refs) {
+            Ok(m) => m,
+            Err(e) => {
+                log::warn!("batch prefilter failed ({e:#}); falling back to scalar");
+                return queries.iter().map(|q| self.query_one(q)).collect();
+            }
+        };
+        let prefilter_each = started.elapsed() / queries.len() as u32;
+
+        let w = self.train.w;
+        let mut out = Vec::with_capacity(queries.len());
+        for (qi, q) in queries.iter().enumerate() {
+            let q_started = Instant::now();
+            let lbs = &matrix[qi];
+            self.index_buf.clear();
+            self.index_buf.extend(0..self.train.len());
+            let idx = &mut self.index_buf;
+            idx.sort_unstable_by(|&a, &b| lbs[a].partial_cmp(&lbs[b]).unwrap());
+            let mut best =
+                NnResult { nn_index: usize::MAX, distance: f64::INFINITY, label: 0 };
+            for &ti in idx.iter() {
+                if lbs[ti] >= best.distance {
+                    break;
+                }
+                let d = dtw_ea::<Squared>(q, &self.train.series[ti].values, w, best.distance);
+                if d < best.distance {
+                    best = NnResult {
+                        nn_index: ti,
+                        distance: d,
+                        label: self.train.labels[ti],
+                    };
+                }
+            }
+            out.push(QueryResponse {
+                result: best,
+                path: EnginePath::Batched,
+                latency: prefilter_each + q_started.elapsed(),
+            });
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate_archive, ArchiveSpec, Scale};
+    use crate::search::nn::nn_brute_force;
+
+    #[test]
+    fn scalar_path_is_exact() {
+        let ds = &generate_archive(&ArchiveSpec::new(Scale::Tiny, 61))[0];
+        let w = ds.window.max(1);
+        let mut engine = NnEngine::new(ds, w, BoundKind::Webb);
+        let train = PreparedTrainSet::from_dataset(ds, w);
+        for q in &ds.test {
+            let resp = engine.query_one(&q.values);
+            let (truth, _) = nn_brute_force::<Squared>(&q.values, &train);
+            assert_eq!(resp.result.distance, truth.distance);
+            assert_eq!(resp.path, EnginePath::Scalar);
+        }
+    }
+
+    #[test]
+    fn batch_without_artifact_falls_back() {
+        let ds = &generate_archive(&ArchiveSpec::new(Scale::Tiny, 61))[1];
+        let w = ds.window.max(1);
+        let mut engine = NnEngine::new(ds, w, BoundKind::Webb);
+        assert!(!engine.has_batch_path());
+        let queries: Vec<Vec<f64>> = ds.test.iter().take(3).map(|s| s.values.clone()).collect();
+        let out = engine.query_batch(&queries);
+        assert_eq!(out.len(), 3);
+        assert!(out.iter().all(|r| r.path == EnginePath::Scalar));
+    }
+
+    /// Exactness of the batched path (needs `make artifacts`).
+    #[test]
+    fn batched_path_is_exact_when_artifact_present() {
+        let dir = crate::runtime::default_artifacts_dir();
+        if !dir.join("manifest.tsv").exists() {
+            eprintln!("skipping: no artifacts");
+            return;
+        }
+        let ds = &generate_archive(&ArchiveSpec::new(Scale::Tiny, 62))[0];
+        let w = ds.window.max(1);
+        let mut engine = NnEngine::new(ds, w, BoundKind::Keogh);
+        let rt = XlaRuntime::cpu().unwrap();
+        if let Err(e) = engine.attach_batch_lb(&rt, &dir, 8) {
+            eprintln!("skipping: {e:#}");
+            return;
+        }
+        let queries: Vec<Vec<f64>> =
+            ds.test.iter().take(8).map(|s| s.values.clone()).collect();
+        let out = engine.query_batch(&queries);
+        let train = PreparedTrainSet::from_dataset(ds, w);
+        for (resp, q) in out.iter().zip(queries.iter()) {
+            let (truth, _) = nn_brute_force::<Squared>(q, &train);
+            assert_eq!(resp.result.distance, truth.distance);
+            assert_eq!(resp.path, EnginePath::Batched);
+        }
+    }
+}

@@ -1,0 +1,28 @@
+//! L3 coordinator — the serving layer that turns the bound library into a
+//! nearest-neighbor search service.
+//!
+//! The paper's contribution is algorithmic, so the coordinator is the
+//! deployment shell around it (DESIGN.md §2):
+//!
+//! * [`pool`] — a std-thread worker pool (`tokio` is unavailable in the
+//!   offline build; see DESIGN.md §5) used for dataset-parallel
+//!   experiment execution.
+//! * [`engine`] — the query engine: prepared training set + bound
+//!   cascade + optional PJRT batch prefilter, answering exact 1-NN DTW
+//!   queries.
+//! * [`router`] — request router and **dynamic batcher**: concurrent
+//!   clients enqueue queries; the dispatch loop drains the queue and
+//!   routes a full batch through the XLA prefilter (one execution scores
+//!   `batch × n` candidate pairs) or single queries through the scalar
+//!   path, whichever is available/profitable.
+//! * [`server`] — a line-protocol TCP front end over the router (used by
+//!   `examples/serve.rs`).
+
+pub mod engine;
+pub mod pool;
+pub mod router;
+pub mod server;
+
+pub use engine::{EnginePath, NnEngine, QueryResponse};
+pub use pool::WorkerPool;
+pub use router::Router;

@@ -1,0 +1,111 @@
+//! A small scoped worker pool over `std::thread` + `mpsc`.
+//!
+//! Drives dataset-parallel experiment runs (each worker owns its own
+//! `Scratch`). The pool is order-preserving: `map` returns outputs in
+//! input order regardless of completion order.
+
+use std::sync::mpsc;
+use std::sync::Mutex;
+
+/// A fixed-size worker pool.
+#[derive(Debug, Clone, Copy)]
+pub struct WorkerPool {
+    threads: usize,
+}
+
+impl WorkerPool {
+    /// Pool sized to the machine (`available_parallelism`, min 1).
+    pub fn auto() -> Self {
+        let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        WorkerPool { threads }
+    }
+
+    /// Pool with an explicit thread count (≥ 1).
+    pub fn with_threads(threads: usize) -> Self {
+        WorkerPool { threads: threads.max(1) }
+    }
+
+    /// Number of worker threads.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Apply `f` to every item, in parallel, preserving input order.
+    ///
+    /// `f` must be `Sync` (shared across workers); items and outputs move
+    /// across threads.
+    pub fn map<I, O, F>(&self, items: Vec<I>, f: F) -> Vec<O>
+    where
+        I: Send,
+        O: Send,
+        F: Fn(I) -> O + Sync,
+    {
+        let n = items.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        if self.threads == 1 || n == 1 {
+            return items.into_iter().map(f).collect();
+        }
+
+        // Shared work queue of (index, item); results sent back with index.
+        let queue: Mutex<std::vec::IntoIter<(usize, I)>> =
+            Mutex::new(items.into_iter().enumerate().collect::<Vec<_>>().into_iter());
+        let (tx, rx) = mpsc::channel::<(usize, O)>();
+
+        std::thread::scope(|scope| {
+            for _ in 0..self.threads.min(n) {
+                let tx = tx.clone();
+                let queue = &queue;
+                let f = &f;
+                scope.spawn(move || loop {
+                    let next = queue.lock().unwrap().next();
+                    match next {
+                        Some((i, item)) => {
+                            if tx.send((i, f(item))).is_err() {
+                                return;
+                            }
+                        }
+                        None => return,
+                    }
+                });
+            }
+            drop(tx);
+            let mut out: Vec<Option<O>> = (0..n).map(|_| None).collect();
+            for (i, o) in rx {
+                out[i] = Some(o);
+            }
+            out.into_iter().map(|o| o.expect("worker delivered all items")).collect()
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let pool = WorkerPool::with_threads(4);
+        let out = pool.map((0..100).collect(), |x: i32| x * x);
+        assert_eq!(out, (0..100).map(|x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_thread_path() {
+        let pool = WorkerPool::with_threads(1);
+        assert_eq!(pool.map(vec![1, 2, 3], |x| x + 1), vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn empty_input() {
+        let pool = WorkerPool::auto();
+        let out: Vec<i32> = pool.map(Vec::<i32>::new(), |x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn auto_pool_is_nonzero() {
+        assert!(WorkerPool::auto().threads() >= 1);
+    }
+}

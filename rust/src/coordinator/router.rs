@@ -1,0 +1,164 @@
+//! Request router and dynamic batcher.
+//!
+//! Clients call [`Router::query`] from any thread; a single dispatch
+//! thread owns the [`NnEngine`] (PJRT executables are not `Sync`) and
+//! drains the queue into batches: when several queries are waiting they
+//! ride the XLA batch prefilter together; a lone query takes the scalar
+//! path immediately. This is the standard router/batcher shape of serving
+//! systems (vLLM-style), scaled to this paper's workload.
+
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::engine::{NnEngine, QueryResponse};
+
+enum Msg {
+    Query(Vec<f64>, Sender<QueryResponse>),
+    Shutdown,
+}
+
+/// Handle to the dispatch thread. Cloneable senders, blocking `query`.
+pub struct Router {
+    tx: Sender<Msg>,
+    handle: Option<JoinHandle<RouterStats>>,
+}
+
+/// Dispatch-loop statistics, returned by [`Router::shutdown`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RouterStats {
+    /// Total queries served.
+    pub served: usize,
+    /// Number of dispatch batches formed.
+    pub batches: usize,
+    /// Largest batch formed.
+    pub max_batch: usize,
+}
+
+impl Router {
+    /// Spawn the dispatch loop. The engine is **constructed inside** the
+    /// dispatch thread by `factory` — PJRT handles are not `Send`, so the
+    /// engine must never cross threads. `max_batch` caps how many queued
+    /// queries ride one prefilter execution.
+    pub fn spawn<F>(factory: F, max_batch: usize) -> Router
+    where
+        F: FnOnce() -> NnEngine + Send + 'static,
+    {
+        let (tx, rx): (Sender<Msg>, Receiver<Msg>) = mpsc::channel();
+        let handle = std::thread::spawn(move || {
+            let mut engine = factory();
+            let mut stats = RouterStats::default();
+            loop {
+                // Block for the first message…
+                let first = match rx.recv() {
+                    Ok(Msg::Query(q, reply)) => (q, reply),
+                    Ok(Msg::Shutdown) | Err(_) => return stats,
+                };
+                // …then opportunistically drain whatever else is queued
+                // (dynamic batching: no artificial delay, batch = backlog).
+                let mut batch = vec![first];
+                let mut shutdown = false;
+                while batch.len() < max_batch {
+                    match rx.try_recv() {
+                        Ok(Msg::Query(q, reply)) => batch.push((q, reply)),
+                        Ok(Msg::Shutdown) => {
+                            shutdown = true;
+                            break;
+                        }
+                        Err(_) => break,
+                    }
+                }
+                stats.batches += 1;
+                stats.max_batch = stats.max_batch.max(batch.len());
+                stats.served += batch.len();
+
+                let queries: Vec<Vec<f64>> = batch.iter().map(|(q, _)| q.clone()).collect();
+                let responses = engine.query_batch(&queries);
+                for ((_, reply), resp) in batch.into_iter().zip(responses) {
+                    let _ = reply.send(resp);
+                }
+                if shutdown {
+                    return stats;
+                }
+            }
+        });
+        Router { tx, handle: Some(handle) }
+    }
+
+    /// Submit a query and block for the exact 1-NN answer.
+    pub fn query(&self, values: Vec<f64>) -> QueryResponse {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx.send(Msg::Query(values, reply_tx)).expect("router alive");
+        reply_rx.recv().expect("router answers")
+    }
+
+    /// Submit without blocking; the response arrives on the returned
+    /// receiver. Lets tests/clients build up a real batch.
+    pub fn query_async(&self, values: Vec<f64>) -> Receiver<QueryResponse> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx.send(Msg::Query(values, reply_tx)).expect("router alive");
+        reply_rx
+    }
+
+    /// Stop the dispatch loop and collect its statistics.
+    pub fn shutdown(mut self) -> RouterStats {
+        let _ = self.tx.send(Msg::Shutdown);
+        self.handle.take().map(|h| h.join().expect("dispatch thread")).unwrap_or_default()
+    }
+
+    /// Wait until the queue is likely drained (test helper).
+    pub fn settle(&self) {
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+impl Drop for Router {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bounds::BoundKind;
+    use crate::data::synthetic::{generate_archive, ArchiveSpec, Scale};
+    use crate::delta::Squared;
+    use crate::search::nn::nn_brute_force;
+    use crate::search::PreparedTrainSet;
+
+    #[test]
+    fn router_serves_exact_answers() {
+        let ds = &generate_archive(&ArchiveSpec::new(Scale::Tiny, 71))[0];
+        let w = ds.window.max(1);
+        let ds2 = ds.clone();
+        let router = Router::spawn(move || NnEngine::new(&ds2, w, BoundKind::Webb), 8);
+        let train = PreparedTrainSet::from_dataset(ds, w);
+
+        // Async-submit everything first so batches can form.
+        let rxs: Vec<_> =
+            ds.test.iter().map(|q| router.query_async(q.values.clone())).collect();
+        for (rx, q) in rxs.into_iter().zip(ds.test.iter()) {
+            let resp = rx.recv().unwrap();
+            let (truth, _) = nn_brute_force::<Squared>(&q.values, &train);
+            assert_eq!(resp.result.distance, truth.distance);
+        }
+        let stats = router.shutdown();
+        assert_eq!(stats.served, ds.test.len());
+        assert!(stats.batches >= 1);
+        assert!(stats.max_batch >= 1);
+    }
+
+    #[test]
+    fn blocking_query_works() {
+        let ds = generate_archive(&ArchiveSpec::new(Scale::Tiny, 72))[1].clone();
+        let w = ds.window.max(1);
+        let q0 = ds.test[0].values.clone();
+        let router = Router::spawn(move || NnEngine::new(&ds, w, BoundKind::Keogh), 4);
+        let resp = router.query(q0);
+        assert!(resp.result.distance.is_finite());
+    }
+}

@@ -1,0 +1,171 @@
+//! TCP line-protocol front end over the [`Router`].
+//!
+//! Protocol (one line per message, UTF-8):
+//! * request:  `v1,v2,...,vN` — comma-separated series values;
+//! * response: `label=<u32> dist=<f64> nn=<usize> path=<scalar|batched> us=<u128>`;
+//! * `PING` → `PONG`; malformed input → `ERR <why>`.
+//!
+//! One thread per connection feeds the shared router, whose dispatch loop
+//! batches across connections — concurrent clients automatically share
+//! XLA prefilter executions.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use super::engine::EnginePath;
+use super::router::Router;
+
+/// A running server (listener thread + per-connection threads).
+pub struct Server {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral port) and serve
+    /// queries through `router`.
+    pub fn spawn(addr: &str, router: Arc<Router>) -> Result<Server> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = std::thread::spawn(move || {
+            while !stop2.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        stream.set_nonblocking(false).ok();
+                        let router = router.clone();
+                        // Detached: connection threads end at client EOF
+                        // (or process exit); joining them here would make
+                        // shutdown wait on idle clients.
+                        std::thread::spawn(move || handle_conn(stream, router));
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(5));
+                    }
+                    Err(e) => {
+                        log::warn!("accept: {e}");
+                        break;
+                    }
+                }
+            }
+        });
+        log::info!("server listening on {local}");
+        Ok(Server { addr: local, stop, handle: Some(handle) })
+    }
+
+    /// The bound address (useful with ephemeral ports).
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and join the listener thread (open connections
+    /// finish their current line).
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, router: Arc<Router>) {
+    let peer = stream.peer_addr().ok();
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => break,
+        };
+        let reply = respond(&line, &router);
+        if writer.write_all(reply.as_bytes()).is_err() || writer.write_all(b"\n").is_err() {
+            break;
+        }
+    }
+    log::debug!("connection {peer:?} closed");
+}
+
+fn respond(line: &str, router: &Router) -> String {
+    let line = line.trim();
+    if line.is_empty() {
+        return "ERR empty".into();
+    }
+    if line.eq_ignore_ascii_case("PING") {
+        return "PONG".into();
+    }
+    let values: Result<Vec<f64>, _> =
+        line.split(',').map(|f| f.trim().parse::<f64>()).collect();
+    match values {
+        Ok(values) if !values.is_empty() => {
+            let resp = router.query(values);
+            format!(
+                "label={} dist={:.6} nn={} path={} us={}",
+                resp.result.label,
+                resp.result.distance,
+                resp.result.nn_index,
+                match resp.path {
+                    EnginePath::Scalar => "scalar",
+                    EnginePath::Batched => "batched",
+                },
+                resp.latency.as_micros()
+            )
+        }
+        _ => "ERR expected comma-separated floats".into(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bounds::BoundKind;
+    use crate::coordinator::engine::NnEngine;
+    use crate::data::synthetic::{generate_archive, ArchiveSpec, Scale};
+
+    #[test]
+    fn ping_and_query_roundtrip() {
+        let ds = &generate_archive(&ArchiveSpec::new(Scale::Tiny, 81))[0];
+        let w = ds.window.max(1);
+        let ds2 = ds.clone();
+        let router =
+            Arc::new(Router::spawn(move || NnEngine::new(&ds2, w, BoundKind::Webb), 8));
+        let server = Server::spawn("127.0.0.1:0", router).unwrap();
+
+        let mut conn = TcpStream::connect(server.addr()).unwrap();
+        conn.write_all(b"PING\n").unwrap();
+        let q: Vec<String> = ds.test[0].values.iter().map(|v| v.to_string()).collect();
+        conn.write_all(format!("{}\n", q.join(",")).as_bytes()).unwrap();
+        conn.write_all(b"garbage\n").unwrap();
+
+        let mut lines = BufReader::new(conn).lines();
+        assert_eq!(lines.next().unwrap().unwrap(), "PONG");
+        let resp = lines.next().unwrap().unwrap();
+        assert!(resp.starts_with("label="), "{resp}");
+        assert!(resp.contains("path=scalar"));
+        let err = lines.next().unwrap().unwrap();
+        assert!(err.starts_with("ERR"), "{err}");
+
+        // Close our connection before shutdown: the server joins its
+        // per-connection threads, which read until client EOF.
+        drop(lines);
+        server.shutdown();
+    }
+}

@@ -1,0 +1,203 @@
+//! UCR time-series archive loader.
+//!
+//! The UCR archive stores each dataset as two delimited text files,
+//! `<Name>_TRAIN.tsv` / `<Name>_TEST.tsv` (tab-separated in the 2018
+//! release, comma-separated in older ones): one series per line, first
+//! field the class label, remaining fields the values.
+//!
+//! [`load_dataset`] reads one dataset; [`load_archive`] walks a directory
+//! of dataset subdirectories (the archive layout) and loads everything.
+//! Labels are remapped to dense `0..k` integers; values are optionally
+//! z-normalized (the archive ships mostly-normalized data, but older
+//! datasets are raw — normalizing is idempotent and standard practice).
+
+use std::fs;
+use std::io::{BufRead, BufReader};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::znorm::znormalize;
+use super::{Dataset, Labeled};
+
+/// Parse one UCR line (tab, comma or space separated).
+fn parse_line(line: &str) -> Result<(f64, Vec<f64>)> {
+    let mut fields = line
+        .split(|c: char| c == '\t' || c == ',' || c == ' ')
+        .filter(|f| !f.is_empty());
+    let label: f64 = fields
+        .next()
+        .context("empty line")?
+        .parse()
+        .context("unparsable label")?;
+    let values: Vec<f64> = fields
+        .map(|f| f.parse::<f64>().context("unparsable value"))
+        .collect::<Result<_>>()?;
+    if values.is_empty() {
+        bail!("series with no values");
+    }
+    Ok((label, values))
+}
+
+/// Read one `_TRAIN`/`_TEST` file into labelled series.
+fn read_split(path: &Path, znorm: bool) -> Result<Vec<(f64, Vec<f64>)>> {
+    let file = fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut out = Vec::new();
+    for (ln, line) in BufReader::new(file).lines().enumerate() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let (label, mut values) =
+            parse_line(&line).with_context(|| format!("{}:{}", path.display(), ln + 1))?;
+        if znorm {
+            znormalize(&mut values);
+        }
+        out.push((label, values));
+    }
+    if out.is_empty() {
+        bail!("{}: no series", path.display());
+    }
+    Ok(out)
+}
+
+/// Load one dataset directory (`<dir>/<name>_TRAIN.tsv` etc.).
+///
+/// `window` is the recommended warping window in elements; the archive
+/// publishes it as a percentage per dataset — pass the resolved value, or
+/// compute one with [`crate::search::loocv`].
+pub fn load_dataset(dir: &Path, name: &str, window: usize, znorm: bool) -> Result<Dataset> {
+    let find = |suffix: &str| -> Result<Vec<(f64, Vec<f64>)>> {
+        for ext in ["tsv", "txt", "csv"] {
+            let p = dir.join(format!("{name}_{suffix}.{ext}"));
+            if p.exists() {
+                return read_split(&p, znorm);
+            }
+        }
+        bail!("no {name}_{suffix}.(tsv|txt|csv) under {}", dir.display())
+    };
+    let train_raw = find("TRAIN")?;
+    let test_raw = find("TEST")?;
+
+    // Dense label remap shared across splits.
+    let mut labels: Vec<i64> = train_raw
+        .iter()
+        .chain(test_raw.iter())
+        .map(|(l, _)| l.round() as i64)
+        .collect();
+    labels.sort_unstable();
+    labels.dedup();
+    let to_dense = |l: f64| -> u32 {
+        labels.binary_search(&(l.round() as i64)).expect("label seen above") as u32
+    };
+
+    let convert = |raw: Vec<(f64, Vec<f64>)>| -> Vec<Labeled> {
+        raw.into_iter()
+            .map(|(l, values)| Labeled { label: to_dense(l), values })
+            .collect()
+    };
+    Ok(Dataset {
+        name: name.to_string(),
+        train: convert(train_raw),
+        test: convert(test_raw),
+        window,
+    })
+}
+
+/// Walk an archive directory (`<root>/<DatasetName>/<DatasetName>_TRAIN.tsv`)
+/// and load every dataset found, sorted by name. Windows default to 0 and
+/// should be set by the caller (e.g. via LOOCV).
+pub fn load_archive(root: &Path, znorm: bool) -> Result<Vec<Dataset>> {
+    let mut names: Vec<String> = fs::read_dir(root)
+        .with_context(|| format!("read_dir {}", root.display()))?
+        .filter_map(|e| e.ok())
+        .filter(|e| e.path().is_dir())
+        .map(|e| e.file_name().to_string_lossy().into_owned())
+        .collect();
+    names.sort();
+    let mut out = Vec::new();
+    for name in names {
+        let dir = root.join(&name);
+        match load_dataset(&dir, &name, 0, znorm) {
+            Ok(ds) => out.push(ds),
+            Err(e) => log::warn!("skipping {name}: {e:#}"),
+        }
+    }
+    Ok(out)
+}
+
+/// Write a dataset back out in UCR `.tsv` format (used to export the
+/// synthetic archive so the Python layer reads the identical bytes).
+pub fn save_dataset(dir: &Path, ds: &Dataset) -> Result<()> {
+    fs::create_dir_all(dir)?;
+    let write_split = |suffix: &str, rows: &[Labeled]| -> Result<()> {
+        let mut s = String::new();
+        for r in rows {
+            s.push_str(&r.label.to_string());
+            for v in &r.values {
+                s.push('\t');
+                s.push_str(&format!("{v:.6}"));
+            }
+            s.push('\n');
+        }
+        fs::write(dir.join(format!("{}_{suffix}.tsv", ds.name)), s)?;
+        Ok(())
+    };
+    write_split("TRAIN", &ds.train)?;
+    write_split("TEST", &ds.test)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_line_variants() {
+        let (l, v) = parse_line("2\t1.5\t-0.25\t3").unwrap();
+        assert_eq!(l, 2.0);
+        assert_eq!(v, vec![1.5, -0.25, 3.0]);
+        let (l, v) = parse_line("1,0.5,0.25").unwrap();
+        assert_eq!((l, v.len()), (1.0, 2));
+        let (l, _) = parse_line("-1  0.5  0.25").unwrap();
+        assert_eq!(l, -1.0);
+        assert!(parse_line("").is_err());
+        assert!(parse_line("1").is_err());
+        assert!(parse_line("x\t1").is_err());
+    }
+
+    #[test]
+    fn roundtrip_save_load() {
+        let tmp = std::env::temp_dir().join(format!("dtwb_ucr_test_{}", std::process::id()));
+        let ds = Dataset {
+            name: "Toy".into(),
+            train: vec![
+                Labeled { label: 0, values: vec![0.0, 1.0, 2.0] },
+                Labeled { label: 1, values: vec![2.0, 1.0, 0.0] },
+            ],
+            test: vec![Labeled { label: 1, values: vec![1.0, 1.0, 0.0] }],
+            window: 1,
+        };
+        save_dataset(&tmp, &ds).unwrap();
+        let back = load_dataset(&tmp, "Toy", 1, false).unwrap();
+        assert_eq!(back.train.len(), 2);
+        assert_eq!(back.test.len(), 1);
+        assert_eq!(back.train[0].values, vec![0.0, 1.0, 2.0]);
+        assert_eq!(back.train[1].label, 1);
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+
+    #[test]
+    fn label_remap_is_dense() {
+        let tmp = std::env::temp_dir().join(format!("dtwb_ucr_test2_{}", std::process::id()));
+        std::fs::create_dir_all(&tmp).unwrap();
+        std::fs::write(tmp.join("X_TRAIN.tsv"), "5\t1\t2\n-1\t0\t1\n5\t2\t3\n").unwrap();
+        std::fs::write(tmp.join("X_TEST.tsv"), "-1\t1\t1\n").unwrap();
+        let ds = load_dataset(&tmp, "X", 0, false).unwrap();
+        let mut labels: Vec<u32> = ds.train.iter().map(|s| s.label).collect();
+        labels.sort_unstable();
+        assert_eq!(labels, vec![0, 1, 1]);
+        assert_eq!(ds.test[0].label, 0);
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+}

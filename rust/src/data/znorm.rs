@@ -1,0 +1,62 @@
+//! Z-normalization — standard preprocessing for UCR-style evaluation.
+//!
+//! Each series is shifted/scaled to zero mean and unit variance. Constant
+//! series map to all-zeros (the UCR convention) rather than NaN.
+
+/// Z-normalize in place. Constant series become all-zeros.
+pub fn znormalize(values: &mut [f64]) {
+    let n = values.len();
+    if n == 0 {
+        return;
+    }
+    let mean = values.iter().sum::<f64>() / n as f64;
+    let var = values.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / n as f64;
+    if var <= 1e-24 {
+        values.iter_mut().for_each(|v| *v = 0.0);
+        return;
+    }
+    let inv_sd = 1.0 / var.sqrt();
+    values.iter_mut().for_each(|v| *v = (*v - mean) * inv_sd);
+}
+
+/// Allocating convenience wrapper.
+pub fn znormalized(values: &[f64]) -> Vec<f64> {
+    let mut out = values.to_vec();
+    znormalize(&mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_mean_unit_variance() {
+        let v = znormalized(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        let mean: f64 = v.iter().sum::<f64>() / v.len() as f64;
+        let var: f64 = v.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / v.len() as f64;
+        assert!(mean.abs() < 1e-12);
+        assert!((var - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn constant_series_becomes_zeros() {
+        assert_eq!(znormalized(&[3.0, 3.0, 3.0]), vec![0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn empty_is_noop() {
+        let mut v: Vec<f64> = vec![];
+        znormalize(&mut v);
+        assert!(v.is_empty());
+    }
+
+    #[test]
+    fn idempotent() {
+        let a = znormalized(&[0.3, -1.2, 4.5, 2.2, -0.7]);
+        let b = znormalized(&a);
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert!((x - y).abs() < 1e-12);
+        }
+    }
+}

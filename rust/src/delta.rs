@@ -1,0 +1,178 @@
+//! Pairwise cost functions `δ(a, b)` used by DTW and its lower bounds.
+//!
+//! The paper considers two common functions, `δ(a,b) = (a-b)²` and
+//! `δ(a,b) = |a-b|`, and classifies bounds by the assumptions they place
+//! on δ:
+//!
+//! * `LB_KEOGH` / `LB_IMPROVED` / `LB_ENHANCED` / `LB_WEBB*` only require
+//!   that δ increases monotonically with `|a-b|`
+//!   ([`Delta::MONOTONE_IN_ABS_DIFF`]).
+//! * `LB_PETITJEAN` / `LB_WEBB` / `LB_WEBB_ENHANCED` additionally require
+//!   the *triangle-adjustment* property (paper, Theorems 1 and 2):
+//!   for all `x, y` with `a ≤ x ≤ y ≤ b` (or the mirrored ordering),
+//!   `δ(a,b) ≥ δ(a,y) + δ(b,x) − δ(x,y)`
+//!   ([`Delta::TRIANGLE_ADJUSTMENT`]). Both `|a-b|` and `(a-b)²` satisfy
+//!   it; `|a-b|^p` for large `p` does not in general.
+//!
+//! δ is dispatched statically (a zero-sized type parameter) so the hot
+//! loops monomorphize; [`DeltaKind`] provides dynamic selection at the CLI
+//! boundary.
+
+/// A pairwise cost function between two series elements.
+///
+/// Implementations are zero-sized marker types so that DTW and bound
+/// kernels monomorphize with the δ computation inlined.
+pub trait Delta: Copy + Send + Sync + 'static {
+    /// Human-readable name, e.g. `"squared"`.
+    const NAME: &'static str;
+
+    /// δ increases monotonically with `|a-b|`. Required by every bound in
+    /// this crate; all provided δ satisfy it.
+    const MONOTONE_IN_ABS_DIFF: bool;
+
+    /// The paper's Theorem 1/2 side condition:
+    /// `∀ x,y: a ≤ x ≤ y ≤ b ∨ a ≥ x ≥ y ≥ b ⇒ δ(a,b) ≥ δ(a,y) + δ(b,x) − δ(x,y)`.
+    ///
+    /// `LB_PETITJEAN`, `LB_WEBB` and `LB_WEBB_ENHANCED` are only valid
+    /// lower bounds when this holds.
+    const TRIANGLE_ADJUSTMENT: bool;
+
+    /// The cost of aligning elements `a` and `b`.
+    fn delta(a: f64, b: f64) -> f64;
+}
+
+/// `δ(a,b) = (a-b)²` — the paper's experimental choice (§6: "We use
+/// δ = (A_i − B_j)²").
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Squared;
+
+impl Delta for Squared {
+    const NAME: &'static str = "squared";
+    const MONOTONE_IN_ABS_DIFF: bool = true;
+    const TRIANGLE_ADJUSTMENT: bool = true;
+
+    #[inline(always)]
+    fn delta(a: f64, b: f64) -> f64 {
+        let d = a - b;
+        d * d
+    }
+}
+
+/// `δ(a,b) = |a-b|` — the Manhattan / L1 element cost.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Absolute;
+
+impl Delta for Absolute {
+    const NAME: &'static str = "absolute";
+    const MONOTONE_IN_ABS_DIFF: bool = true;
+    const TRIANGLE_ADJUSTMENT: bool = true;
+
+    #[inline(always)]
+    fn delta(a: f64, b: f64) -> f64 {
+        (a - b).abs()
+    }
+}
+
+/// `δ(a,b) = √|a-b|` — a monotone δ *without* the triangle-adjustment
+/// property (concave powers `|d|^p`, `p < 1`, violate it; convex powers
+/// satisfy it). It exercises the `LB_WEBB*` path (which stays a valid
+/// bound for any δ monotone in `|a-b|`) and the validity flags;
+/// `LB_WEBB`/`LB_PETITJEAN` are not sound for it.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SqrtAbs;
+
+impl Delta for SqrtAbs {
+    const NAME: &'static str = "sqrt-abs";
+    const MONOTONE_IN_ABS_DIFF: bool = true;
+    const TRIANGLE_ADJUSTMENT: bool = false;
+
+    #[inline(always)]
+    fn delta(a: f64, b: f64) -> f64 {
+        (a - b).abs().sqrt()
+    }
+}
+
+/// Runtime-selectable δ for the CLI / config layer. Experiment drivers
+/// match on this once at the top and call monomorphized kernels.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeltaKind {
+    /// [`Squared`]
+    Squared,
+    /// [`Absolute`]
+    Absolute,
+}
+
+impl DeltaKind {
+    /// Parse a CLI name.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "squared" | "sq" | "l2" => Some(Self::Squared),
+            "absolute" | "abs" | "l1" => Some(Self::Absolute),
+            _ => None,
+        }
+    }
+
+    /// Name of the selected δ.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Squared => Squared::NAME,
+            Self::Absolute => Absolute::NAME,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn squared_basics() {
+        assert_eq!(Squared::delta(3.0, 1.0), 4.0);
+        assert_eq!(Squared::delta(1.0, 3.0), 4.0);
+        assert_eq!(Squared::delta(2.0, 2.0), 0.0);
+    }
+
+    #[test]
+    fn absolute_basics() {
+        assert_eq!(Absolute::delta(3.0, 1.0), 2.0);
+        assert_eq!(Absolute::delta(1.0, 3.0), 2.0);
+        assert_eq!(Absolute::delta(-1.0, 1.0), 2.0);
+    }
+
+    /// Exhaustively check the triangle-adjustment property on a grid for
+    /// the two δ the paper uses, and find a violation for `Cubed`.
+    fn triangle_holds<D: Delta>(a: f64, x: f64, y: f64, b: f64) -> bool {
+        D::delta(a, b) + 1e-12 >= D::delta(a, y) + D::delta(b, x) - D::delta(x, y)
+    }
+
+    #[test]
+    fn triangle_adjustment_grid() {
+        let grid: Vec<f64> = (-8..=8).map(|v| v as f64 * 0.5).collect();
+        let mut sqrt_violation = false;
+        for &a in &grid {
+            for &x in &grid {
+                for &y in &grid {
+                    for &b in &grid {
+                        let ordered = (a <= x && x <= y && y <= b) || (a >= x && x >= y && y >= b);
+                        if !ordered {
+                            continue;
+                        }
+                        assert!(triangle_holds::<Squared>(a, x, y, b), "sq {a} {x} {y} {b}");
+                        assert!(triangle_holds::<Absolute>(a, x, y, b), "abs {a} {x} {y} {b}");
+                        if !triangle_holds::<SqrtAbs>(a, x, y, b) {
+                            sqrt_violation = true;
+                        }
+                    }
+                }
+            }
+        }
+        assert!(sqrt_violation, "SqrtAbs unexpectedly satisfies the property on the grid");
+    }
+
+    #[test]
+    fn delta_kind_parse() {
+        assert_eq!(DeltaKind::parse("squared"), Some(DeltaKind::Squared));
+        assert_eq!(DeltaKind::parse("L1"), Some(DeltaKind::Absolute));
+        assert_eq!(DeltaKind::parse("nope"), None);
+    }
+}

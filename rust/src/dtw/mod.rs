@@ -1,0 +1,301 @@
+//! Dynamic Time Warping — the measure the lower bounds screen for.
+//!
+//! Implements the paper's Equations (1)–(2): windowed DTW over two series
+//! with a Sakoe–Chiba band of half-width `w` (an element `A_i` may only be
+//! aligned with `B_j` when `|i-j| ≤ w`).
+//!
+//! Three entry points:
+//! * [`dtw`] — the plain measure, `O(ℓ·w)` time, `O(ℓ)` memory;
+//! * [`dtw_ea`] — early-abandoning variant used inside nearest-neighbor
+//!   search: returns `f64::INFINITY` as soon as every cell of a DP row
+//!   exceeds the cutoff (the distance to the best candidate so far);
+//! * [`cost_matrix`] / [`warping_path`] — full-matrix variants used by
+//!   tests and the figure generators (e.g. the Figure 3/4 example).
+
+use crate::delta::Delta;
+
+/// Clamp a window to the valid range for series of lengths `la`, `lb`.
+///
+/// A window of `ℓ-1` (or larger) is unconstrained. For unequal lengths the
+/// window must be at least `|la-lb|` for any warping path to exist; we
+/// raise it to that minimum, matching common practice.
+#[inline]
+pub fn effective_window(la: usize, lb: usize, w: usize) -> usize {
+    let max_len = la.max(lb);
+    let min_w = la.abs_diff(lb);
+    w.clamp(min_w, max_len.saturating_sub(1).max(min_w))
+}
+
+/// Windowed DTW distance `DTW_w(A, B)` (paper Eq. 2).
+///
+/// `w` is the Sakoe–Chiba half-window; `w ≥ ℓ-1` computes unconstrained
+/// DTW. Works for unequal-length series (the window is raised to at least
+/// the length difference so a path exists).
+///
+/// ```
+/// use dtw_bounds::{delta::Squared, dtw::dtw};
+/// let a = [-1., 1., -1., 4., -2., 1., 1., 1., -1., 0., 1.];
+/// let b = [1., -1., 1., -1., -1., -4., -4., -1., 1., 0., -1.];
+/// assert_eq!(dtw::<Squared>(&a, &b, 1), 53.0); // Figure 3 (caption's 52 is a typo)
+/// ```
+pub fn dtw<D: Delta>(a: &[f64], b: &[f64], w: usize) -> f64 {
+    dtw_ea::<D>(a, b, w, f64::INFINITY)
+}
+
+/// Early-abandoning windowed DTW.
+///
+/// Identical to [`dtw`] but returns `f64::INFINITY` as soon as the minimum
+/// over a completed DP row exceeds `cutoff` — at that point every warping
+/// path must cost more than `cutoff`, so the caller (nearest-neighbor
+/// search) can discard this candidate. Pass `f64::INFINITY` to disable.
+pub fn dtw_ea<D: Delta>(a: &[f64], b: &[f64], w: usize, cutoff: f64) -> f64 {
+    let la = a.len();
+    let lb = b.len();
+    assert!(la > 0 && lb > 0, "dtw: empty series");
+    let w = effective_window(la, lb, w);
+
+    // Rolling rows over B with a left sentinel column: `row[j+1]` holds
+    // cell (i, j), `row[band-left]` is INFINITY. The sentinel removes all
+    // `j == 0` branches from the inner loop; `left` (the cell just
+    // written) is carried in a register, so each cell costs two loads
+    // (`diag`, `up`), one δ and three mins. (§Perf O1 in EXPERIMENTS.md.)
+    let mut prev = vec![f64::INFINITY; lb + 1];
+    let mut curr = vec![f64::INFINITY; lb + 1];
+
+    // Row 0: cumulative costs along the top band.
+    let jhi0 = w.min(lb - 1);
+    prev[1] = D::delta(a[0], b[0]);
+    for j in 1..=jhi0 {
+        prev[j + 1] = prev[j] + D::delta(a[0], b[j]);
+    }
+    if la == 1 {
+        return prev[lb];
+    }
+    if prev[1..=jhi0 + 1].iter().cloned().fold(f64::INFINITY, f64::min) > cutoff {
+        return f64::INFINITY;
+    }
+
+    for i in 1..la {
+        let ai = a[i];
+        let jlo = i.saturating_sub(w);
+        let jhi = (i + w).min(lb - 1);
+        // Sentinel to the left of the band.
+        curr[jlo] = f64::INFINITY;
+        let mut left = f64::INFINITY;
+        let mut row_min = f64::INFINITY;
+        {
+            // prev[jlo..jhi+2] covers (diag, up) pairs for j in jlo..=jhi.
+            let prow = &prev[jlo..jhi + 2];
+            let crow = &mut curr[jlo + 1..jhi + 2];
+            let brow = &b[jlo..=jhi];
+            for (k, &bj) in brow.iter().enumerate() {
+                let diag = prow[k];
+                let up = prow[k + 1];
+                let v = D::delta(ai, bj) + diag.min(up).min(left);
+                crow[k] = v;
+                left = v;
+                if v < row_min {
+                    row_min = v;
+                }
+            }
+        }
+        if row_min > cutoff {
+            return f64::INFINITY;
+        }
+        std::mem::swap(&mut prev, &mut curr);
+        // Cell above the band's top edge may be read as `up` next row and
+        // was not written this row (band top moves by at most one).
+        if jhi + 2 <= lb {
+            prev[jhi + 2] = f64::INFINITY;
+        }
+    }
+    prev[lb]
+}
+
+/// Full banded cost matrix `D_w` (paper Figure 4). Cells outside the
+/// window hold `f64::INFINITY`. Intended for tests, teaching and figure
+/// generation — `O(ℓ²)` memory.
+pub fn cost_matrix<D: Delta>(a: &[f64], b: &[f64], w: usize) -> Vec<Vec<f64>> {
+    let la = a.len();
+    let lb = b.len();
+    assert!(la > 0 && lb > 0, "cost_matrix: empty series");
+    let w = effective_window(la, lb, w);
+    let mut m = vec![vec![f64::INFINITY; lb]; la];
+    for i in 0..la {
+        let jlo = i.saturating_sub(w);
+        let jhi = (i + w).min(lb - 1);
+        for j in jlo..=jhi {
+            let d = D::delta(a[i], b[j]);
+            let best = if i == 0 && j == 0 {
+                0.0
+            } else {
+                let diag = if i > 0 && j > 0 { m[i - 1][j - 1] } else { f64::INFINITY };
+                let left = if j > 0 { m[i][j - 1] } else { f64::INFINITY };
+                let up = if i > 0 { m[i - 1][j] } else { f64::INFINITY };
+                diag.min(left).min(up)
+            };
+            m[i][j] = d + best;
+        }
+    }
+    m
+}
+
+/// Extract one minimal-cost warping path from a cost matrix produced by
+/// [`cost_matrix`]. Returns 0-based `(i, j)` alignments from `(0,0)` to
+/// `(ℓ_A-1, ℓ_B-1)`. Ties prefer the diagonal (standard convention).
+pub fn warping_path(m: &[Vec<f64>]) -> Vec<(usize, usize)> {
+    let la = m.len();
+    let lb = m[0].len();
+    let mut path = Vec::with_capacity(la + lb);
+    let (mut i, mut j) = (la - 1, lb - 1);
+    path.push((i, j));
+    while i > 0 || j > 0 {
+        let diag = if i > 0 && j > 0 { m[i - 1][j - 1] } else { f64::INFINITY };
+        let up = if i > 0 { m[i - 1][j] } else { f64::INFINITY };
+        let left = if j > 0 { m[i][j - 1] } else { f64::INFINITY };
+        if diag <= up && diag <= left {
+            i -= 1;
+            j -= 1;
+        } else if up <= left {
+            i -= 1;
+        } else {
+            j -= 1;
+        }
+        path.push((i, j));
+    }
+    path.reverse();
+    path
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::delta::{Absolute, Squared};
+
+    /// The paper's running example (Figures 3 and 4).
+    const A: [f64; 11] = [-1., 1., -1., 4., -2., 1., 1., 1., -1., 0., 1.];
+    const B: [f64; 11] = [1., -1., 1., -1., -1., -4., -4., -1., 1., 0., -1.];
+
+    #[test]
+    fn figure3_dtw_is_53() {
+        // The paper's Figure 3 caption reports 52, but the DP over the
+        // stated recurrence (Eq. 2) gives 53; two independent
+        // implementations agree (see EXPERIMENTS.md "Paper discrepancies").
+        assert_eq!(dtw::<Squared>(&A, &B, 1), 53.0);
+    }
+
+    #[test]
+    fn figure4_cost_matrix_corner() {
+        let m = cost_matrix::<Squared>(&A, &B, 1);
+        assert_eq!(m[10][10], 53.0);
+        // Window: cell (0, 2) is outside w=1.
+        assert!(m[0][2].is_infinite());
+        assert_eq!(m[0][0], 4.0); // (-1-1)^2
+    }
+
+    #[test]
+    fn identity_is_zero() {
+        for w in [0, 1, 3, 10, 100] {
+            assert_eq!(dtw::<Squared>(&A, &A, w), 0.0);
+            assert_eq!(dtw::<Absolute>(&B, &B, w), 0.0);
+        }
+    }
+
+    #[test]
+    fn window_zero_is_lockstep() {
+        // w = 0 forces the diagonal: sum of pointwise deltas.
+        let expect: f64 = A.iter().zip(B.iter()).map(|(x, y)| (x - y) * (x - y)).sum();
+        assert_eq!(dtw::<Squared>(&A, &B, 0), expect);
+    }
+
+    #[test]
+    fn monotone_nonincreasing_in_window() {
+        let mut last = f64::INFINITY;
+        for w in 0..A.len() {
+            let d = dtw::<Squared>(&A, &B, w);
+            assert!(d <= last + 1e-12, "w={w}: {d} > {last}");
+            last = d;
+        }
+    }
+
+    #[test]
+    fn symmetric() {
+        for w in [0, 1, 2, 5, 10] {
+            let ab = dtw::<Squared>(&A, &B, w);
+            let ba = dtw::<Squared>(&B, &A, w);
+            assert!((ab - ba).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn unequal_lengths() {
+        let a = [0.0, 1.0, 2.0, 3.0];
+        let b = [0.0, 1.0, 1.5, 2.0, 3.0];
+        // Path exists even with w=0 thanks to the raised window.
+        let d = dtw::<Absolute>(&a, &b, 0);
+        assert!(d.is_finite());
+        let d5 = dtw::<Absolute>(&a, &b, 5);
+        assert!(d5 <= d + 1e-12);
+    }
+
+    #[test]
+    fn early_abandon_triggers() {
+        let full = dtw::<Squared>(&A, &B, 1);
+        assert_eq!(dtw_ea::<Squared>(&A, &B, 1, full + 1.0), full);
+        // Any cutoff below the true distance must abandon or still return
+        // a value above the cutoff; our row-min rule guarantees INFINITY
+        // for cutoffs below the smallest row minimum along the way.
+        assert!(dtw_ea::<Squared>(&A, &B, 1, 0.5).is_infinite());
+    }
+
+    #[test]
+    fn early_abandon_equals_full_when_not_triggered() {
+        for w in [0, 1, 3] {
+            let full = dtw::<Squared>(&A, &B, w);
+            assert_eq!(dtw_ea::<Squared>(&A, &B, w, f64::INFINITY), full);
+            assert_eq!(dtw_ea::<Squared>(&A, &B, w, full), full); // row_min > cutoff is strict
+        }
+    }
+
+    #[test]
+    fn path_is_valid_and_costs_match() {
+        for w in [1usize, 2, 10] {
+            let m = cost_matrix::<Squared>(&A, &B, w);
+            let p = warping_path(&m);
+            assert_eq!(*p.first().unwrap(), (0, 0));
+            assert_eq!(*p.last().unwrap(), (10, 10));
+            // continuity/monotonicity + window
+            for k in 1..p.len() {
+                let (i0, j0) = p[k - 1];
+                let (i1, j1) = p[k];
+                assert!((i1 == i0 || i1 == i0 + 1) && (j1 == j0 || j1 == j0 + 1));
+                assert!((i1, j1) != (i0, j0));
+                assert!(i1.abs_diff(j1) <= w);
+            }
+            let cost: f64 = p.iter().map(|&(i, j)| (A[i] - B[j]).powi(2)).sum();
+            assert!((cost - dtw::<Squared>(&A, &B, w)).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn matches_naive_quadratic_reference() {
+        // Cross-check the rolling-array kernel against the O(l^2) matrix.
+        let xs: Vec<f64> = (0..40).map(|i| ((i * 7919) % 23) as f64 * 0.25 - 2.0).collect();
+        let ys: Vec<f64> = (0..40).map(|i| ((i * 104729) % 19) as f64 * 0.3 - 2.5).collect();
+        for w in [0, 1, 2, 5, 13, 39] {
+            let m = cost_matrix::<Squared>(&xs, &ys, w);
+            assert!(
+                (dtw::<Squared>(&xs, &ys, w) - m[39][39]).abs() < 1e-9,
+                "w={w}"
+            );
+        }
+    }
+
+    #[test]
+    fn effective_window_clamps() {
+        assert_eq!(effective_window(10, 10, 100), 9);
+        assert_eq!(effective_window(10, 10, 3), 3);
+        assert_eq!(effective_window(4, 9, 0), 5);
+        assert_eq!(effective_window(1, 1, 0), 0);
+    }
+}

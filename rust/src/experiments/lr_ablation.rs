@@ -1,0 +1,73 @@
+//! §7 — the effect of the left and right paths (Figures 31–34).
+//!
+//! Compares `LB_WEBB` against `LB_WEBB_NoLR` (paths removed) and
+//! `LB_WEBB_ENHANCED³` (paths replaced by bands) on both tightness and
+//! sorted-order NN time, over the recommended-window datasets.
+
+use crate::bounds::BoundKind;
+use crate::data::Dataset;
+use crate::delta::Delta;
+use crate::search::classify::SearchMode;
+
+use super::nn_timing::{nn_timing, BoundTiming, TimedBound};
+use super::tightness::{tightness_experiment, TightnessResult};
+
+/// The three §7 variants in column order.
+pub fn ablation_bounds() -> Vec<BoundKind> {
+    vec![BoundKind::Webb, BoundKind::WebbNoLr, BoundKind::WebbEnhanced(3)]
+}
+
+/// Combined §7 result.
+#[derive(Debug)]
+pub struct LrAblationResult {
+    /// Figures 31/32 data.
+    pub tightness: TightnessResult,
+    /// Figures 33/34 data (sorted order).
+    pub timing: Vec<BoundTiming>,
+}
+
+/// Run the ablation.
+pub fn lr_ablation<D: Delta>(
+    datasets: &[&Dataset],
+    repeats: usize,
+    seed: u64,
+) -> LrAblationResult {
+    let bounds = ablation_bounds();
+    let tightness = tightness_experiment::<D>(datasets, &bounds);
+    let windows: Vec<usize> = datasets.iter().map(|d| d.window).collect();
+    let timed: Vec<TimedBound> = bounds.iter().map(|&b| TimedBound::Fixed(b)).collect();
+    let timing = nn_timing::<D>(datasets, &windows, &timed, SearchMode::Sorted, repeats, seed);
+    LrAblationResult { tightness, timing }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate_archive, ArchiveSpec, Scale};
+    use crate::delta::Squared;
+    use crate::experiments::with_recommended_window;
+
+    #[test]
+    fn webb_enhanced3_never_tighter_than_webb_family_rules() {
+        let archive = generate_archive(&ArchiveSpec::new(Scale::Tiny, 33));
+        let datasets: Vec<&crate::data::Dataset> =
+            with_recommended_window(&archive).into_iter().take(2).collect();
+        let res = lr_ablation::<Squared>(&datasets, 1, 5);
+        assert_eq!(res.tightness.bounds.len(), 3);
+        assert_eq!(res.timing.len(), 3);
+        // §7: LB_WEBB tighter than LB_WEBB_ENHANCED^3 on every dataset
+        // (difference always small). We assert the direction.
+        let (cw, cwe) = (
+            res.tightness.col(BoundKind::Webb).unwrap(),
+            res.tightness.col(BoundKind::WebbEnhanced(3)).unwrap(),
+        );
+        for (name, _, t) in &res.tightness.rows {
+            assert!(
+                t[cw] >= t[cwe] - 1e-9,
+                "{name}: webb {} < webb_enhanced3 {}",
+                t[cw],
+                t[cwe]
+            );
+        }
+    }
+}

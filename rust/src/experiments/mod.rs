@@ -1,0 +1,45 @@
+//! Experiment drivers — one per artifact of the paper's evaluation
+//! section. `benches/` and the CLI are thin wrappers over these.
+//!
+//! | Paper artifact | Driver |
+//! |---|---|
+//! | Figures 1, 2, 15–18 (tightness scatter, optimal windows) | [`tightness_experiment`] |
+//! | Figures 19–28 (NN timing, optimal windows, both orders) | [`nn_timing`] |
+//! | Tables 1–3 + Figures 29, 30 (window sweep 1/10/20%) | [`window_sweep`] |
+//! | Figures 31–34 (left/right path ablation) | [`lr_ablation`] |
+
+pub mod lr_ablation;
+pub mod nn_timing;
+pub mod tightness;
+pub mod window_sweep;
+
+pub use lr_ablation::lr_ablation;
+pub use nn_timing::nn_timing;
+pub use tightness::tightness_experiment;
+pub use window_sweep::window_sweep;
+
+use crate::data::Dataset;
+
+/// §6.1/6.2 protocol: experiments at "optimal" windows use only datasets
+/// whose recommended window is ≥ 1 (the paper keeps 60 of 85).
+pub fn with_recommended_window(archive: &[Dataset]) -> Vec<&Dataset> {
+    archive.iter().filter(|d| d.window >= 1).collect()
+}
+
+/// The `LB_ENHANCED*` protocol of §6.2/6.3: the best-performing `k` per
+/// dataset is chosen from this grid (the paper sweeps `k ≤ 16`).
+pub const ENHANCED_K_GRID: &[usize] = &[1, 2, 4, 8, 16];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate_archive, ArchiveSpec, Scale};
+
+    #[test]
+    fn recommended_window_filter() {
+        let archive = generate_archive(&ArchiveSpec::new(Scale::Tiny, 2));
+        let kept = with_recommended_window(&archive);
+        assert!(kept.len() <= archive.len());
+        assert!(kept.iter().all(|d| d.window >= 1));
+    }
+}

@@ -1,0 +1,269 @@
+//! §6.2 nearest-neighbor timing experiment — Figures 19–28.
+//!
+//! For each dataset (recommended window ≥ 1) and each bound, classify the
+//! full test set `repeats` times and record per-run wall-clock times; the
+//! paper plots per-dataset means with ±1σ error bars on log-log axes and
+//! quotes win/loss counts and repository-total times.
+//!
+//! `LB_ENHANCED*` (the best `k` per dataset) is handled by running every
+//! `k` in [`super::ENHANCED_K_GRID`] and keeping the fastest mean, exactly
+//! as §6.2 describes ("the best performance of LB_ENHANCED for any
+//! setting of k").
+
+use std::time::Duration;
+
+use crate::bounds::BoundKind;
+use crate::data::Dataset;
+use crate::delta::Delta;
+use crate::metrics::{format_duration, Summary, Table};
+use crate::search::classify::{classify_dataset, SearchMode};
+use crate::search::PreparedTrainSet;
+
+/// Timing of one (dataset, bound) cell.
+#[derive(Debug, Clone)]
+pub struct CellTiming {
+    /// Dataset name.
+    pub dataset: String,
+    /// Per-repeat wall times in milliseconds.
+    pub times_ms: Vec<f64>,
+    /// Classification accuracy (identical across bounds by construction).
+    pub accuracy: f64,
+    /// For `Enhanced*`: the selected k.
+    pub chosen_k: Option<usize>,
+}
+
+impl CellTiming {
+    /// Mean time in ms.
+    pub fn mean_ms(&self) -> f64 {
+        Summary::of(&self.times_ms).mean
+    }
+}
+
+/// A bound column: timing cells for every dataset.
+#[derive(Debug, Clone)]
+pub struct BoundTiming {
+    /// The bound (for `EnhancedStar`, the base kind is `Enhanced(0)`).
+    pub label: String,
+    /// Per-dataset cells, parallel to the dataset list.
+    pub cells: Vec<CellTiming>,
+}
+
+impl BoundTiming {
+    /// Total mean time across datasets.
+    pub fn total(&self) -> Duration {
+        Duration::from_secs_f64(self.cells.iter().map(|c| c.mean_ms()).sum::<f64>() / 1e3)
+    }
+}
+
+/// Bound selector for timing runs: a concrete bound, or the per-dataset
+/// best-k `LB_ENHANCED*`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TimedBound {
+    /// A fixed bound.
+    Fixed(BoundKind),
+    /// `LB_ENHANCED*`: best k from the grid per dataset.
+    EnhancedStar,
+}
+
+impl TimedBound {
+    /// Display label.
+    pub fn label(&self) -> String {
+        match self {
+            TimedBound::Fixed(b) => b.name(),
+            TimedBound::EnhancedStar => "LB_Enhanced*".into(),
+        }
+    }
+}
+
+/// Run the timing experiment.
+///
+/// `windows` gives the window per dataset (parallel slice) so the same
+/// function serves §6.2 (recommended windows) and §6.3 (percentage
+/// windows). Training-set preparation is excluded from timing, as in the
+/// paper.
+pub fn nn_timing<D: Delta>(
+    datasets: &[&Dataset],
+    windows: &[usize],
+    bounds: &[TimedBound],
+    mode: SearchMode,
+    repeats: usize,
+    seed: u64,
+) -> Vec<BoundTiming> {
+    assert_eq!(datasets.len(), windows.len());
+    let mut out: Vec<BoundTiming> = bounds
+        .iter()
+        .map(|b| BoundTiming { label: b.label(), cells: Vec::with_capacity(datasets.len()) })
+        .collect();
+
+    for (di, ds) in datasets.iter().enumerate() {
+        let w = windows[di];
+        let train = PreparedTrainSet::from_dataset(ds, w);
+        for (bi, tb) in bounds.iter().enumerate() {
+            let cell = match tb {
+                TimedBound::Fixed(b) => time_cell::<D>(ds, &train, *b, mode, repeats, seed, None),
+                TimedBound::EnhancedStar => {
+                    // Paper protocol: report the fastest k per dataset.
+                    let mut best: Option<CellTiming> = None;
+                    for &k in super::ENHANCED_K_GRID {
+                        let c = time_cell::<D>(
+                            ds,
+                            &train,
+                            BoundKind::Enhanced(k),
+                            mode,
+                            repeats,
+                            seed,
+                            Some(k),
+                        );
+                        if best.as_ref().map(|b| c.mean_ms() < b.mean_ms()).unwrap_or(true) {
+                            best = Some(c);
+                        }
+                    }
+                    best.unwrap()
+                }
+            };
+            log::info!(
+                "nn_timing {} {} w={w}: {:.1}ms",
+                ds.name,
+                out[bi].label,
+                cell.mean_ms()
+            );
+            out[bi].cells.push(cell);
+        }
+    }
+    out
+}
+
+fn time_cell<D: Delta>(
+    ds: &Dataset,
+    train: &PreparedTrainSet,
+    bound: BoundKind,
+    mode: SearchMode,
+    repeats: usize,
+    seed: u64,
+    chosen_k: Option<usize>,
+) -> CellTiming {
+    let mut times_ms = Vec::with_capacity(repeats);
+    let mut accuracy = 0.0;
+    for rep in 0..repeats {
+        let out = classify_dataset::<D>(ds, train, bound, mode, seed.wrapping_add(rep as u64));
+        times_ms.push(out.elapsed.as_secs_f64() * 1e3);
+        accuracy = out.accuracy;
+    }
+    CellTiming { dataset: ds.name.clone(), times_ms, accuracy, chosen_k }
+}
+
+/// Win/loss between two timing columns (count of datasets where `a`'s
+/// mean is lower), plus the total-time ratio `total(a)/total(b)` — the
+/// exact format of Tables 1–3.
+pub fn win_loss_ratio(a: &BoundTiming, b: &BoundTiming) -> (usize, usize, f64) {
+    let mut wins = 0;
+    let mut losses = 0;
+    for (ca, cb) in a.cells.iter().zip(b.cells.iter()) {
+        if ca.mean_ms() < cb.mean_ms() {
+            wins += 1;
+        } else if cb.mean_ms() < ca.mean_ms() {
+            losses += 1;
+        }
+    }
+    let ratio = a.total().as_secs_f64() / b.total().as_secs_f64();
+    (wins, losses, ratio)
+}
+
+/// Render a comparison block like the paper's tables.
+pub fn comparison_table(columns: &[BoundTiming], pairings: &[(usize, usize)]) -> Table {
+    let mut t = Table::new(vec!["Comparison", "win/loss", "Total time ratio"]);
+    for &(i, j) in pairings {
+        let (w, l, r) = win_loss_ratio(&columns[i], &columns[j]);
+        t.row(vec![
+            format!("{} vs {}", columns[i].label, columns[j].label),
+            format!("{w} / {l}"),
+            format!(
+                "{}/{} = {r:.2}",
+                format_duration(columns[i].total()),
+                format_duration(columns[j].total())
+            ),
+        ]);
+    }
+    t
+}
+
+/// Per-dataset scatter data (mean ± std for two columns) — the log-log
+/// scatter plots of Figures 19–30.
+pub fn scatter_table(a: &BoundTiming, b: &BoundTiming) -> Table {
+    let mut t = Table::new(vec![
+        "dataset".to_string(),
+        format!("{} mean ms", a.label),
+        format!("{} std", a.label),
+        format!("{} mean ms", b.label),
+        format!("{} std", b.label),
+    ]);
+    for (ca, cb) in a.cells.iter().zip(b.cells.iter()) {
+        let (sa, sb) = (Summary::of(&ca.times_ms), Summary::of(&cb.times_ms));
+        t.row(vec![
+            ca.dataset.clone(),
+            format!("{:.2}", sa.mean),
+            format!("{:.2}", sa.std),
+            format!("{:.2}", sb.mean),
+            format!("{:.2}", sb.std),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate_archive, ArchiveSpec, Scale};
+    use crate::delta::Squared;
+    use crate::experiments::with_recommended_window;
+
+    #[test]
+    fn timing_runs_and_tables_render() {
+        let archive = generate_archive(&ArchiveSpec::new(Scale::Tiny, 77));
+        let datasets: Vec<&crate::data::Dataset> =
+            with_recommended_window(&archive).into_iter().take(2).collect();
+        let windows: Vec<usize> = datasets.iter().map(|d| d.window).collect();
+        let bounds = [
+            TimedBound::Fixed(BoundKind::Keogh),
+            TimedBound::Fixed(BoundKind::Webb),
+        ];
+        let cols = nn_timing::<Squared>(
+            &datasets,
+            &windows,
+            &bounds,
+            SearchMode::Sorted,
+            2,
+            42,
+        );
+        assert_eq!(cols.len(), 2);
+        assert_eq!(cols[0].cells.len(), datasets.len());
+        // Accuracy is identical across bounds (exact same NN distances).
+        for (a, b) in cols[0].cells.iter().zip(cols[1].cells.iter()) {
+            assert_eq!(a.accuracy, b.accuracy);
+        }
+        let cmp = comparison_table(&cols, &[(1, 0)]);
+        assert_eq!(cmp.len(), 1);
+        let sc = scatter_table(&cols[1], &cols[0]);
+        assert_eq!(sc.len(), datasets.len());
+        let (w, l, r) = win_loss_ratio(&cols[0], &cols[1]);
+        assert!(w + l <= datasets.len());
+        assert!(r > 0.0);
+    }
+
+    #[test]
+    fn enhanced_star_selects_a_k() {
+        let archive = generate_archive(&ArchiveSpec::new(Scale::Tiny, 78));
+        let datasets: Vec<&crate::data::Dataset> =
+            with_recommended_window(&archive).into_iter().take(1).collect();
+        let windows: Vec<usize> = datasets.iter().map(|d| d.window).collect();
+        let cols = nn_timing::<Squared>(
+            &datasets,
+            &windows,
+            &[TimedBound::EnhancedStar],
+            SearchMode::Sorted,
+            1,
+            7,
+        );
+        assert!(cols[0].cells[0].chosen_k.is_some());
+    }
+}

@@ -1,0 +1,124 @@
+//! §6.1 tightness experiment — the data behind Figures 1, 2 and 15–18.
+//!
+//! For every dataset with recommended window ≥ 1, compute the mean
+//! tightness `λ_w(Q,T)/DTW_w(Q,T)` over all test×train pairs for each
+//! bound. The paper presents these as per-dataset scatter plots of one
+//! bound against another; we emit the full per-dataset matrix, from which
+//! every pairwise scatter (and the win counts quoted in the text) follows.
+
+use crate::bounds::BoundKind;
+use crate::data::Dataset;
+use crate::delta::Delta;
+use crate::metrics::Table;
+use crate::search::tightness::dataset_tightness;
+use crate::search::PreparedTrainSet;
+
+/// Per-dataset tightness for a set of bounds.
+#[derive(Debug, Clone)]
+pub struct TightnessResult {
+    /// Bounds evaluated, in column order.
+    pub bounds: Vec<BoundKind>,
+    /// `(dataset name, window, mean tightness per bound)`.
+    pub rows: Vec<(String, usize, Vec<f64>)>,
+}
+
+impl TightnessResult {
+    /// Column index of a bound.
+    pub fn col(&self, bound: BoundKind) -> Option<usize> {
+        self.bounds.iter().position(|&b| b == bound)
+    }
+
+    /// Count datasets where `a` is strictly tighter than `b` (and vice
+    /// versa) — the "tighter on average for N datasets" numbers of §6.1.
+    pub fn win_loss(&self, a: BoundKind, b: BoundKind) -> (usize, usize) {
+        let (ca, cb) = (self.col(a).unwrap(), self.col(b).unwrap());
+        let mut wins = 0;
+        let mut losses = 0;
+        for (_, _, t) in &self.rows {
+            if t[ca] > t[cb] + 1e-12 {
+                wins += 1;
+            } else if t[cb] > t[ca] + 1e-12 {
+                losses += 1;
+            }
+        }
+        (wins, losses)
+    }
+
+    /// Render the full matrix as a table.
+    pub fn to_table(&self) -> Table {
+        let mut header = vec!["dataset".to_string(), "w".to_string()];
+        header.extend(self.bounds.iter().map(|b| b.name()));
+        let mut t = Table::new(header);
+        for (name, w, vals) in &self.rows {
+            let mut row = vec![name.clone(), w.to_string()];
+            row.extend(vals.iter().map(|v| format!("{v:.4}")));
+            t.row(row);
+        }
+        t
+    }
+}
+
+/// Run the tightness experiment over `datasets` (already filtered to
+/// recommended-window ≥ 1 by the caller, matching §6.1).
+pub fn tightness_experiment<D: Delta>(
+    datasets: &[&Dataset],
+    bounds: &[BoundKind],
+) -> TightnessResult {
+    let mut rows = Vec::with_capacity(datasets.len());
+    for ds in datasets {
+        let train = PreparedTrainSet::from_dataset(ds, ds.window);
+        let mut cache = Vec::new();
+        let vals: Vec<f64> = bounds
+            .iter()
+            .map(|&b| dataset_tightness::<D>(ds, &train, b, &mut cache).mean)
+            .collect();
+        log::info!("tightness {}: done ({} bounds)", ds.name, bounds.len());
+        rows.push((ds.name.clone(), ds.window, vals));
+    }
+    TightnessResult { bounds: bounds.to_vec(), rows }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate_archive, ArchiveSpec, Scale};
+    use crate::delta::Squared;
+    use crate::experiments::with_recommended_window;
+
+    #[test]
+    fn paper_orderings_hold_per_dataset() {
+        let archive = generate_archive(&ArchiveSpec::new(Scale::Tiny, 5));
+        let datasets = with_recommended_window(&archive);
+        let bounds = vec![
+            BoundKind::Keogh,
+            BoundKind::Improved,
+            BoundKind::PetitjeanNoLr,
+            BoundKind::Webb,
+            BoundKind::WebbNoLr,
+        ];
+        let res = tightness_experiment::<Squared>(&datasets[..3.min(datasets.len())], &bounds);
+        assert!(!res.rows.is_empty());
+        let (ck, ci, cpn, _cw, cwn) = (
+            res.col(BoundKind::Keogh).unwrap(),
+            res.col(BoundKind::Improved).unwrap(),
+            res.col(BoundKind::PetitjeanNoLr).unwrap(),
+            res.col(BoundKind::Webb).unwrap(),
+            res.col(BoundKind::WebbNoLr).unwrap(),
+        );
+        for (name, _, t) in &res.rows {
+            assert!(t[ci] >= t[ck] - 1e-12, "{name}: improved < keogh");
+            assert!(t[cpn] >= t[ci] - 1e-12, "{name}: petitjean_nolr < improved");
+            assert!(t[cwn] >= t[ck] - 1e-12, "{name}: webb_nolr < keogh");
+            for &v in t {
+                assert!((0.0..=1.0 + 1e-9).contains(&v));
+            }
+        }
+        // win_loss is antisymmetric-ish
+        let (w1, l1) = res.win_loss(BoundKind::Improved, BoundKind::Keogh);
+        let (w2, l2) = res.win_loss(BoundKind::Keogh, BoundKind::Improved);
+        assert_eq!((w1, l1), (l2, w2));
+        // Table renders
+        let table = res.to_table();
+        assert_eq!(table.len(), res.rows.len());
+    }
+}

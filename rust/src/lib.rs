@@ -1,0 +1,66 @@
+//! # dtw-bounds — Tight lower bounds for Dynamic Time Warping
+//!
+//! A complete reproduction of Webb & Petitjean, *"Tight lower bounds for
+//! Dynamic Time Warping"*, Pattern Recognition 114 (2021) 107895.
+//!
+//! The library provides:
+//!
+//! * **DTW** itself ([`dtw`]): windowed dynamic time warping with `O(w)`
+//!   memory, early abandoning, full cost matrices and warping-path
+//!   extraction.
+//! * **The complete lower-bound family** ([`bounds`]): the paper's four new
+//!   bounds — `LB_PETITJEAN`, `LB_WEBB`, `LB_WEBB*`, `LB_WEBB_ENHANCED` —
+//!   and every baseline it compares against (`LB_KIM`, `LB_KEOGH`,
+//!   `LB_IMPROVED`, `LB_ENHANCED`) plus the ablation variants
+//!   (`*_NoLR`) and the cascading evaluator from §8.
+//! * **Nearest-neighbor search** ([`search`]): the paper's Algorithm 3
+//!   (random order with early abandoning) and Algorithm 4 (bound-sorted),
+//!   tightness evaluation, LOOCV window selection and 1-NN classification.
+//! * **Data substrate** ([`data`]): a UCR-archive `.tsv` loader and a
+//!   deterministic synthetic archive generator that mirrors the shape
+//!   statistics of the UCR-85 "bakeoff" suite (the real archive is not
+//!   redistributable; see `DESIGN.md` §4).
+//! * **A serving layer** ([`coordinator`]): a std-thread worker pool, query
+//!   router and dynamic batcher exposing NN search as a service.
+//! * **A PJRT runtime** ([`runtime`]): loads AOT-compiled XLA artifacts
+//!   (built once from JAX + Pallas under `python/`) and executes batched
+//!   lower-bound prefilters from Rust — Python is never on the query path.
+//! * **Experiment drivers** ([`experiments`]): one per table/figure of the
+//!   paper's evaluation section, shared by `benches/` and the CLI.
+//!
+//! ## Quickstart
+//!
+//! ```
+//! use dtw_bounds::delta::Squared;
+//! use dtw_bounds::dtw::dtw;
+//! use dtw_bounds::bounds::{BoundKind, PreparedSeries, Scratch};
+//!
+//! let a = vec![-1.0, 1.0, -1.0, 4.0, -2.0, 1.0, 1.0, 1.0, -1.0, 0.0, 1.0];
+//! let b = vec![1.0, -1.0, 1.0, -1.0, -1.0, -4.0, -4.0, -1.0, 1.0, 0.0, -1.0];
+//! let w = 1;
+//! let d = dtw::<Squared>(&a, &b, w);
+//! assert_eq!(d, 53.0); // paper Figure 3 (the caption's 52 is a typo)
+//!
+//! let q = PreparedSeries::prepare(a, w);
+//! let t = PreparedSeries::prepare(b, w);
+//! let mut scratch = Scratch::new(q.len());
+//! let lb = BoundKind::Webb.compute::<Squared>(&q, &t, w, f64::INFINITY, &mut scratch);
+//! assert!(lb <= d);
+//! ```
+//!
+//! All bounds share the invariant `λ_w(A, B) ≤ DTW_w(A, B)`, enforced by
+//! the property-test suite in `rust/tests/`.
+
+pub mod bounds;
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod delta;
+pub mod dtw;
+pub mod experiments;
+pub mod metrics;
+pub mod runtime;
+pub mod search;
+
+/// Library version, mirrored from `Cargo.toml`.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

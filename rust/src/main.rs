@@ -1,0 +1,320 @@
+//! `dtw-bounds` CLI — the leader entrypoint.
+//!
+//! Subcommands:
+//! * `gen-archive` — export the synthetic archive as UCR-format `.tsv`.
+//! * `tightness`   — §6.1 tightness experiment (Figures 1, 2, 15–18).
+//! * `nn`          — §6.2 NN timing (Figures 19–28).
+//! * `sweep`       — §6.3 window sweep (Tables 1–3, Figures 29–30).
+//! * `ablation`    — §7 left/right-path ablation (Figures 31–34).
+//! * `serve`       — start the NN search server (router + PJRT batcher).
+//! * `info`        — runtime/platform/artifact report.
+//!
+//! Run `dtw-bounds <cmd> --help-args` to see each command's options.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use dtw_bounds::bounds::BoundKind;
+use dtw_bounds::cli::Args;
+use dtw_bounds::coordinator::{NnEngine, Router};
+use dtw_bounds::data::synthetic::{generate_archive, ArchiveSpec, Scale};
+use dtw_bounds::data::{ucr, Dataset};
+use dtw_bounds::delta::Squared;
+use dtw_bounds::experiments::{
+    self, nn_timing::TimedBound, tightness_experiment, window_sweep, with_recommended_window,
+};
+use dtw_bounds::metrics::format_duration;
+use dtw_bounds::runtime::{default_artifacts_dir, read_manifest, XlaRuntime};
+use dtw_bounds::search::classify::SearchMode;
+
+fn main() {
+    init_logger();
+    let args = Args::from_env();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn init_logger() {
+    struct StderrLogger;
+    impl log::Log for StderrLogger {
+        fn enabled(&self, m: &log::Metadata) -> bool {
+            m.level() <= log::max_level()
+        }
+        fn log(&self, r: &log::Record) {
+            if self.enabled(r.metadata()) {
+                eprintln!("[{}] {}", r.level(), r.args());
+            }
+        }
+        fn flush(&self) {}
+    }
+    static LOGGER: StderrLogger = StderrLogger;
+    let level = match std::env::var("RUST_LOG").as_deref() {
+        Ok("debug") => log::LevelFilter::Debug,
+        Ok("trace") => log::LevelFilter::Trace,
+        Ok("warn") => log::LevelFilter::Warn,
+        Ok("error") => log::LevelFilter::Error,
+        Ok("info") => log::LevelFilter::Info,
+        _ => log::LevelFilter::Warn,
+    };
+    let _ = log::set_logger(&LOGGER);
+    log::set_max_level(level);
+}
+
+fn load_archive(args: &Args) -> Result<Vec<Dataset>> {
+    if let Some(dir) = args.get("archive") {
+        let datasets = ucr::load_archive(std::path::Path::new(dir), true)?;
+        if datasets.is_empty() {
+            bail!("no datasets under {dir}");
+        }
+        Ok(datasets)
+    } else {
+        let scale = Scale::parse(&args.str_or("scale", "small"))
+            .context("--scale must be tiny|small|paper")?;
+        let seed = args.parse_or::<u64>("seed", 2021);
+        Ok(generate_archive(&ArchiveSpec::new(scale, seed)))
+    }
+}
+
+fn parse_bounds(args: &Args, default: &[BoundKind]) -> Result<Vec<BoundKind>> {
+    match args.list("bounds") {
+        None => Ok(default.to_vec()),
+        Some(names) => names
+            .iter()
+            .map(|n| BoundKind::parse(n).with_context(|| format!("unknown bound {n:?}")))
+            .collect(),
+    }
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.command.as_deref() {
+        Some("gen-archive") => cmd_gen_archive(args),
+        Some("tightness") => cmd_tightness(args),
+        Some("nn") => cmd_nn(args),
+        Some("sweep") => cmd_sweep(args),
+        Some("ablation") => cmd_ablation(args),
+        Some("serve") => cmd_serve(args),
+        Some("info") => cmd_info(),
+        other => {
+            bail!(
+                "unknown command {other:?}; expected one of \
+                 gen-archive|tightness|nn|sweep|ablation|serve|info"
+            )
+        }
+    }
+}
+
+fn cmd_gen_archive(args: &Args) -> Result<()> {
+    let out = args.str_or("out", "data/synthetic_archive");
+    let archive = load_archive(args)?;
+    for ds in &archive {
+        let dir = std::path::Path::new(&out).join(&ds.name);
+        ucr::save_dataset(&dir, ds)?;
+        println!(
+            "{}\tl={}\ttrain={}\ttest={}\tclasses={}\tw={}",
+            ds.name,
+            ds.series_len(),
+            ds.train.len(),
+            ds.test.len(),
+            ds.num_classes(),
+            ds.window
+        );
+    }
+    println!("wrote {} datasets under {out}", archive.len());
+    Ok(())
+}
+
+fn cmd_tightness(args: &Args) -> Result<()> {
+    let archive = load_archive(args)?;
+    let datasets = with_recommended_window(&archive);
+    let take = args.parse_or::<usize>("take", datasets.len());
+    let bounds = parse_bounds(
+        args,
+        &[
+            BoundKind::Keogh,
+            BoundKind::Improved,
+            BoundKind::Enhanced(8),
+            BoundKind::Petitjean,
+            BoundKind::Webb,
+        ],
+    )?;
+    let res = tightness_experiment::<Squared>(&datasets[..take.min(datasets.len())], &bounds);
+    println!("{}", res.to_table().to_markdown());
+    for i in 0..bounds.len() {
+        for j in (i + 1)..bounds.len() {
+            let (w, l) = res.win_loss(bounds[i], bounds[j]);
+            println!("{} vs {}: tighter on {w}, less tight on {l}", bounds[i], bounds[j]);
+        }
+    }
+    Ok(())
+}
+
+fn cmd_nn(args: &Args) -> Result<()> {
+    let archive = load_archive(args)?;
+    let datasets = with_recommended_window(&archive);
+    let take = args.parse_or::<usize>("take", datasets.len());
+    let datasets = &datasets[..take.min(datasets.len())];
+    let mode = SearchMode::parse(&args.str_or("mode", "sorted"))
+        .context("--mode must be sorted|random")?;
+    let repeats = args.parse_or::<usize>("repeats", 3);
+    let bounds: Vec<TimedBound> = match args.list("bounds") {
+        None => vec![
+            TimedBound::Fixed(BoundKind::Keogh),
+            TimedBound::Fixed(BoundKind::Improved),
+            TimedBound::Fixed(BoundKind::Petitjean),
+            TimedBound::Fixed(BoundKind::Webb),
+            TimedBound::EnhancedStar,
+        ],
+        Some(names) => names
+            .iter()
+            .map(|n| {
+                if n.eq_ignore_ascii_case("enhanced*") {
+                    Ok(TimedBound::EnhancedStar)
+                } else {
+                    BoundKind::parse(n)
+                        .map(TimedBound::Fixed)
+                        .with_context(|| format!("unknown bound {n:?}"))
+                }
+            })
+            .collect::<Result<_>>()?,
+    };
+    let windows: Vec<usize> = datasets.iter().map(|d| d.window).collect();
+    let cols = experiments::nn_timing::<Squared>(
+        datasets,
+        &windows,
+        &bounds,
+        mode,
+        repeats,
+        args.parse_or::<u64>("seed", 7),
+    );
+    for (i, c) in cols.iter().enumerate() {
+        println!("{}: total {}", c.label, format_duration(c.total()));
+        for j in 0..cols.len() {
+            if i != j {
+                let (w, l, r) = experiments::nn_timing::win_loss_ratio(c, &cols[j]);
+                println!("  vs {}: {w}/{l}, ratio {r:.2}", cols[j].label);
+            }
+        }
+    }
+    if args.flag("scatter") && cols.len() >= 2 {
+        println!("{}", experiments::nn_timing::scatter_table(&cols[0], &cols[1]).to_csv());
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let archive = load_archive(args)?;
+    let datasets: Vec<&Dataset> = archive.iter().collect();
+    let take = args.parse_or::<usize>("take", datasets.len());
+    let datasets = &datasets[..take.min(datasets.len())];
+    let fracs: Vec<f64> = args
+        .list("frac")
+        .unwrap_or_else(|| vec!["0.01".into(), "0.10".into(), "0.20".into()])
+        .iter()
+        .map(|s| s.parse::<f64>().context("bad --frac"))
+        .collect::<Result<_>>()?;
+    let repeats = args.parse_or::<usize>("repeats", 3);
+    for frac in fracs {
+        let res = window_sweep::<Squared>(datasets, frac, repeats, 11);
+        println!("## w = {:.0}% · l\n", frac * 100.0);
+        println!("{}", res.to_table().to_markdown());
+    }
+    Ok(())
+}
+
+fn cmd_ablation(args: &Args) -> Result<()> {
+    let archive = load_archive(args)?;
+    let datasets = with_recommended_window(&archive);
+    let take = args.parse_or::<usize>("take", datasets.len());
+    let res = experiments::lr_ablation::<Squared>(
+        &datasets[..take.min(datasets.len())],
+        args.parse_or::<usize>("repeats", 3),
+        13,
+    );
+    println!("### Tightness (Figures 31, 32)\n");
+    println!("{}", res.tightness.to_table().to_markdown());
+    println!("### Sorted NN time (Figures 33, 34)\n");
+    for c in &res.timing {
+        println!("{}: total {}", c.label, format_duration(c.total()));
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let archive = load_archive(args)?;
+    let idx = args.parse_or::<usize>("dataset", 0);
+    let ds = archive.get(idx).context("--dataset index out of range")?;
+    let w = ds.window.max(1);
+    let bound = BoundKind::parse(&args.str_or("bound", "webb")).context("bad --bound")?;
+    let max_batch = args.parse_or::<usize>("max-batch", 16);
+    let want_batch = !args.flag("no-batch");
+
+    // PJRT handles are not Send: the engine (and its XLA client) are
+    // constructed inside the router's dispatch thread.
+    let ds_owned = ds.clone();
+    let factory = move || {
+        let mut engine = NnEngine::new(&ds_owned, w, bound);
+        let artifacts = default_artifacts_dir();
+        if want_batch && artifacts.join("manifest.tsv").exists() {
+            match XlaRuntime::cpu() {
+                Ok(rt) => {
+                    match engine.attach_batch_lb(&rt, &artifacts, max_batch) {
+                        Ok(()) => eprintln!("batch prefilter: attached"),
+                        Err(e) => eprintln!("batch prefilter: unavailable ({e:#})"),
+                    }
+                    // The client must outlive executions; it lives as long
+                    // as the dispatch thread (whole process).
+                    std::mem::forget(rt);
+                }
+                Err(e) => eprintln!("PJRT unavailable ({e:#}); scalar only"),
+            }
+        } else {
+            eprintln!("batch prefilter: no artifacts (run `make artifacts`); scalar only");
+        }
+        engine
+    };
+    let router = Arc::new(Router::spawn(factory, max_batch));
+    let addr = args
+        .positional
+        .first()
+        .cloned()
+        .unwrap_or_else(|| args.str_or("addr", "127.0.0.1:7878"));
+    let server = dtw_bounds::coordinator::server::Server::spawn(&addr, router)?;
+    println!(
+        "serving dataset {} (l={}, n={}, w={w}, bound={bound}) on {}",
+        ds.name,
+        ds.series_len(),
+        ds.train.len(),
+        server.addr()
+    );
+    println!("protocol: one comma-separated series per line; PING/PONG; Ctrl-C to stop");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_info() -> Result<()> {
+    println!("dtw-bounds {}", dtw_bounds::VERSION);
+    match XlaRuntime::cpu() {
+        Ok(rt) => println!("PJRT: ok, platform = {}", rt.platform()),
+        Err(e) => println!("PJRT: unavailable ({e:#})"),
+    }
+    let dir = default_artifacts_dir();
+    match read_manifest(&dir) {
+        Ok(m) => {
+            println!("artifacts ({}):", dir.display());
+            for e in m {
+                println!("  {} b={} n={} l={} ({})", e.name, e.batch, e.rows, e.len, e.file);
+            }
+        }
+        Err(_) => println!("artifacts: none (run `make artifacts`)"),
+    }
+    println!("bounds: {}", BoundKind::ALL.iter().map(|b| b.name()).collect::<Vec<_>>().join(", "));
+    Ok(())
+}

@@ -1,0 +1,8 @@
+//! Measurement utilities shared by the experiment drivers and benches:
+//! summary statistics, win/loss tables and report writers.
+
+pub mod report;
+pub mod stats;
+
+pub use report::{format_duration, Table};
+pub use stats::Summary;

@@ -1,0 +1,189 @@
+//! Batched `LB_KEOGH` prefilter on XLA.
+//!
+//! The artifact (see `python/compile/model.py`) computes, for a query
+//! batch `Q[b,ℓ]` and a training set's envelopes `Lo[n,ℓ]`, `Up[n,ℓ]`,
+//! the full bound matrix
+//!
+//! ```text
+//! out[q, t] = Σ_i  (Q[q,i] − Up[t,i])²  if Q[q,i] > Up[t,i]
+//!             (Q[q,i] − Lo[t,i])²  if Q[q,i] < Lo[t,i]
+//!             0                    otherwise
+//! ```
+//!
+//! in one XLA execution (the hot inner loop is the Pallas kernel at L1).
+//! The coordinator uses the matrix to rank candidates per query, then runs
+//! exact DTW on survivors — the batch analogue of Algorithm 4.
+//!
+//! Shapes are fixed at AOT time; [`BatchLb`] pads smaller workloads:
+//! * queries: padded with zeros (extra rows ignored);
+//! * training rows: padded with `Lo = -BIG, Up = +BIG` so padded rows
+//!   bound to 0 and sort last;
+//! * length: padded with `Q = 0` inside `[-BIG, BIG]` envelopes, adding
+//!   exactly 0 to every bound.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::client::{LoadedComputation, XlaRuntime};
+use super::{read_manifest, ManifestEntry};
+
+const BIG: f32 = 1e30;
+
+/// A compiled batched-LB executable with its static shape.
+pub struct BatchLb {
+    exe: LoadedComputation,
+    /// Compiled (batch, rows, len).
+    pub shape: (usize, usize, usize),
+    // Reused packing buffers (§Perf O4): padding + f64→f32 conversion
+    // allocated once per compiled shape instead of per call.
+    buf_q: Vec<f32>,
+    buf_lo: Vec<f32>,
+    buf_up: Vec<f32>,
+}
+
+impl BatchLb {
+    /// Load the best-fitting `lb_keogh` artifact from `dir` for workloads
+    /// of at most (`batch`, `rows`, `len`). Picks the smallest compiled
+    /// shape that fits; errors when none fits.
+    pub fn load(rt: &XlaRuntime, dir: &Path, batch: usize, rows: usize, len: usize) -> Result<Self> {
+        let manifest = read_manifest(dir)?;
+        let mut candidates: Vec<&ManifestEntry> = manifest
+            .iter()
+            .filter(|e| e.name == "lb_keogh" && e.batch >= batch && e.rows >= rows && e.len >= len)
+            .collect();
+        if candidates.is_empty() {
+            bail!(
+                "no lb_keogh artifact fits (batch={batch}, rows={rows}, len={len}); \
+                 available: {:?}; run `make artifacts`",
+                manifest.iter().map(|e| (e.batch, e.rows, e.len)).collect::<Vec<_>>()
+            );
+        }
+        candidates.sort_by_key(|e| e.batch * e.rows * e.len);
+        let chosen = candidates[0];
+        let exe = rt
+            .load_hlo_text(&dir.join(&chosen.file))
+            .with_context(|| format!("load artifact {}", chosen.file))?;
+        log::info!(
+            "batch_lb: loaded {} (b={}, n={}, l={})",
+            chosen.file,
+            chosen.batch,
+            chosen.rows,
+            chosen.len
+        );
+        let (cb, cn, cl) = (chosen.batch, chosen.rows, chosen.len);
+        Ok(BatchLb {
+            exe,
+            shape: (cb, cn, cl),
+            buf_q: vec![0.0; cb * cl],
+            buf_lo: vec![-BIG; cn * cl],
+            buf_up: vec![BIG; cn * cl],
+        })
+    }
+
+    /// Compute the `queries.len() × train_lo.len()` LB_Keogh matrix.
+    ///
+    /// All series must share one length ≤ compiled `len`; `queries` and
+    /// the training envelopes are padded up to the compiled shape.
+    pub fn compute(
+        &mut self,
+        queries: &[&[f64]],
+        train_lo: &[&[f64]],
+        train_up: &[&[f64]],
+    ) -> Result<Vec<Vec<f64>>> {
+        let (cb, cn, cl) = self.shape;
+        let nq = queries.len();
+        let nt = train_lo.len();
+        if nq == 0 || nt == 0 {
+            return Ok(vec![vec![]; nq]);
+        }
+        let l = queries[0].len();
+        if nq > cb || nt > cn || l > cl {
+            bail!("workload ({nq},{nt},{l}) exceeds compiled shape ({cb},{cn},{cl})");
+        }
+        debug_assert!(train_lo.iter().all(|s| s.len() == l));
+        debug_assert!(train_up.len() == nt);
+
+        // Pack + pad to f32 into the reused buffers. Rows beyond the
+        // workload retain their padding values from construction / the
+        // previous call's reset below.
+        self.buf_q[..cb * cl].fill(0.0);
+        for (r, s) in queries.iter().enumerate() {
+            for (i, &v) in s.iter().enumerate() {
+                self.buf_q[r * cl + i] = v as f32;
+            }
+        }
+        for r in 0..nt {
+            for i in 0..l {
+                self.buf_lo[r * cl + i] = train_lo[r][i] as f32;
+                self.buf_up[r * cl + i] = train_up[r][i] as f32;
+            }
+            // Padding columns keep [-BIG, BIG] → contribute 0.
+            for i in l..cl {
+                self.buf_lo[r * cl + i] = -BIG;
+                self.buf_up[r * cl + i] = BIG;
+            }
+        }
+        for r in nt..cn {
+            self.buf_lo[r * cl..(r + 1) * cl].fill(-BIG);
+            self.buf_up[r * cl..(r + 1) * cl].fill(BIG);
+        }
+
+        let outs = self.exe.execute_f32(&[
+            (&self.buf_q, &[cb, cl]),
+            (&self.buf_lo, &[cn, cl]),
+            (&self.buf_up, &[cn, cl]),
+        ])?;
+        let m = &outs[0];
+        anyhow::ensure!(m.len() == cb * cn, "unexpected output size {}", m.len());
+        Ok((0..nq)
+            .map(|r| (0..nt).map(|c| m[r * cn + c] as f64).collect())
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bounds::{keogh, PreparedSeries};
+    use crate::data::rng::Rng;
+    use crate::delta::Squared;
+    use crate::runtime::default_artifacts_dir;
+
+    /// Requires `make artifacts`; skips (with a note) when absent so
+    /// `cargo test` works pre-AOT.
+    #[test]
+    fn matches_scalar_keogh_when_artifact_present() {
+        let dir = default_artifacts_dir();
+        if !dir.join("manifest.tsv").exists() {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return;
+        }
+        let rt = XlaRuntime::cpu().unwrap();
+        let w = 3usize;
+        let l = 64usize;
+        let mut rng = Rng::seeded(4242);
+        let queries: Vec<Vec<f64>> = (0..4).map(|_| (0..l).map(|_| rng.normal()).collect()).collect();
+        let train: Vec<PreparedSeries> = (0..6)
+            .map(|_| PreparedSeries::prepare((0..l).map(|_| rng.normal()).collect(), w))
+            .collect();
+
+        let mut blb = BatchLb::load(&rt, &dir, queries.len(), train.len(), l).unwrap();
+        let q_refs: Vec<&[f64]> = queries.iter().map(|v| v.as_slice()).collect();
+        let lo_refs: Vec<&[f64]> = train.iter().map(|t| t.lo.as_slice()).collect();
+        let up_refs: Vec<&[f64]> = train.iter().map(|t| t.up.as_slice()).collect();
+        let m = blb.compute(&q_refs, &lo_refs, &up_refs).unwrap();
+
+        for (qi, q) in queries.iter().enumerate() {
+            for (ti, t) in train.iter().enumerate() {
+                let scalar = keogh::lb_keogh::<Squared>(q, t, f64::INFINITY);
+                let batched = m[qi][ti];
+                let tol = 1e-4 * scalar.max(1.0);
+                assert!(
+                    (scalar - batched).abs() < tol,
+                    "q{qi} t{ti}: scalar {scalar} vs batched {batched}"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,110 @@
+//! PJRT client wrapper: compile-once / execute-many over HLO text.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// A PJRT client (CPU) plus helpers to load and run AOT artifacts.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+}
+
+impl XlaRuntime {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        log::info!(
+            "PJRT client up: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(XlaRuntime { client })
+    }
+
+    /// Platform name (e.g. `cpu`).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO **text** file (the interchange format — serialized
+    /// jax ≥ 0.5 protos are rejected by xla_extension 0.5.1) and compile
+    /// it for this client.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<LoadedComputation> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-UTF8 path")?,
+        )
+        .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {}", path.display()))?;
+        Ok(LoadedComputation { exe })
+    }
+
+    /// Compile an in-memory computation (used by tests and the
+    /// builder-based fallback kernels).
+    pub fn compile(&self, comp: &xla::XlaComputation) -> Result<LoadedComputation> {
+        Ok(LoadedComputation { exe: self.client.compile(comp).context("compile")? })
+    }
+}
+
+/// A compiled executable with convenience f32 I/O.
+pub struct LoadedComputation {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedComputation {
+    /// Execute with f32 tensor inputs (`(data, dims)` pairs). Returns the
+    /// flattened f32 outputs. Artifacts are lowered with
+    /// `return_tuple=True`, so a 1-output program yields one vector.
+    pub fn execute_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, dims)| {
+                let lit = xla::Literal::vec1(data);
+                let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                lit.reshape(&dims_i64).context("reshape input literal")
+            })
+            .collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals).context("execute")?;
+        let out_lit = result[0][0].to_literal_sync().context("fetch output")?;
+        // Outputs arrive as a tuple (return_tuple=True at lowering).
+        let elements = out_lit.to_tuple().context("untuple output")?;
+        let mut out = Vec::with_capacity(elements.len());
+        for e in elements {
+            out.push(e.to_vec::<f32>().context("output to f32 vec")?);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build (p0 + p1) with the XlaBuilder — exercises compile/execute
+    /// without needing artifacts on disk.
+    #[test]
+    fn builder_roundtrip() {
+        let rt = XlaRuntime::cpu().unwrap();
+        let b = xla::XlaBuilder::new("add");
+        let shape = xla::Shape::array::<f32>(vec![2, 2]);
+        let p0 = b.parameter_s(0, &shape, "x").unwrap();
+        let p1 = b.parameter_s(1, &shape, "y").unwrap();
+        let sum = p0.add_(&p1).unwrap();
+        let comp = b.tuple(&[sum]).unwrap().build().unwrap();
+        let exe = rt.compile(&comp).unwrap();
+        let out = exe
+            .execute_f32(&[(&[1.0, 2.0, 3.0, 4.0], &[2, 2]), (&[10.0, 20.0, 30.0, 40.0], &[2, 2])])
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0], vec![11.0, 22.0, 33.0, 44.0]);
+    }
+
+    #[test]
+    fn load_missing_artifact_fails_cleanly() {
+        let rt = XlaRuntime::cpu().unwrap();
+        assert!(rt.load_hlo_text(Path::new("/nonexistent/x.hlo.txt")).is_err());
+    }
+}

@@ -1,0 +1,99 @@
+//! PJRT runtime — loads the AOT-compiled XLA artifacts produced by the
+//! Python build layer (`python/compile/aot.py`) and executes them from
+//! Rust. Python never runs on the query path.
+//!
+//! * [`client`] — thin wrapper over the `xla` crate: CPU `PjRtClient`,
+//!   HLO-**text** loading (`xla_extension` 0.5.1 rejects jax ≥ 0.5
+//!   serialized protos; text round-trips — see `/opt/xla-example`),
+//!   compile-once / execute-many.
+//! * [`batch_lb`] — the batched `LB_KEOGH` prefilter: one XLA execution
+//!   scores a whole query-batch against the whole training matrix
+//!   (envelopes precomputed), which the coordinator uses to rank
+//!   candidates before running exact DTW on survivors — the batch
+//!   analogue of the paper's sorted search (Algorithm 4).
+
+pub mod batch_lb;
+pub mod client;
+
+pub use batch_lb::BatchLb;
+pub use client::{LoadedComputation, XlaRuntime};
+
+use std::path::{Path, PathBuf};
+
+/// Default artifacts directory (relative to the repo root / CWD).
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var_os("DTW_BOUNDS_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+/// An entry in `artifacts/manifest.tsv` (written by `aot.py`):
+/// `name`, compiled batch/rows/length, and the HLO file.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ManifestEntry {
+    /// Artifact kind, e.g. `lb_keogh`.
+    pub name: String,
+    /// Compiled query-batch size.
+    pub batch: usize,
+    /// Compiled training rows.
+    pub rows: usize,
+    /// Compiled series length.
+    pub len: usize,
+    /// HLO text file (relative to the manifest).
+    pub file: String,
+}
+
+/// Parse `manifest.tsv`: one artifact per line,
+/// `name<TAB>batch<TAB>rows<TAB>len<TAB>file`. Lines starting with `#`
+/// are comments.
+pub fn read_manifest(dir: &Path) -> anyhow::Result<Vec<ManifestEntry>> {
+    let path = dir.join("manifest.tsv");
+    let text = std::fs::read_to_string(&path)
+        .map_err(|e| anyhow::anyhow!("read {}: {e}", path.display()))?;
+    let mut out = Vec::new();
+    for (ln, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let f: Vec<&str> = line.split('\t').collect();
+        if f.len() != 5 {
+            anyhow::bail!("{}:{}: expected 5 fields, got {}", path.display(), ln + 1, f.len());
+        }
+        out.push(ManifestEntry {
+            name: f[0].to_string(),
+            batch: f[1].parse()?,
+            rows: f[2].parse()?,
+            len: f[3].parse()?,
+            file: f[4].to_string(),
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parse() {
+        let tmp = std::env::temp_dir().join(format!("dtwb_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&tmp).unwrap();
+        std::fs::write(
+            tmp.join("manifest.tsv"),
+            "# comment\nlb_keogh\t8\t64\t128\tlb_keogh_8x64x128.hlo.txt\n",
+        )
+        .unwrap();
+        let m = read_manifest(&tmp).unwrap();
+        assert_eq!(m.len(), 1);
+        assert_eq!(m[0].name, "lb_keogh");
+        assert_eq!((m[0].batch, m[0].rows, m[0].len), (8, 64, 128));
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+
+    #[test]
+    fn manifest_missing_is_error() {
+        let tmp = std::env::temp_dir().join("dtwb_definitely_missing_dir");
+        assert!(read_manifest(&tmp).is_err());
+    }
+}

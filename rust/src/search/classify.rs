@@ -1,0 +1,185 @@
+//! Dataset-level 1-NN classification runs — the timed unit of every
+//! experiment in §6.2/§6.3.
+//!
+//! Reproduces the paper's protocol exactly:
+//! * training envelopes are **pre**computed (not timed);
+//! * query envelopes (and envelope-of-envelopes) are computed once per
+//!   query and **are** timed, but only when the bound needs them;
+//! * projection envelopes (inside `LB_IMPROVED`/`LB_PETITJEAN`) are per
+//!   pair and timed;
+//! * random-order runs shuffle the candidate order per query with a
+//!   seeded RNG and early-abandon both bound and DTW.
+
+use std::time::{Duration, Instant};
+
+use crate::bounds::{BoundKind, PreparedSeries, Scratch};
+use crate::data::rng::Rng;
+use crate::data::Dataset;
+use crate::delta::Delta;
+
+use super::nn::{nn_random_order, nn_sorted, NnResult, SearchStats};
+use super::PreparedTrainSet;
+
+/// Which of the paper's two search procedures to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SearchMode {
+    /// Algorithm 3 — random order, early abandoning.
+    RandomOrder,
+    /// Algorithm 4 — candidates sorted by lower bound.
+    Sorted,
+}
+
+impl SearchMode {
+    /// Parse a CLI name.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "random" | "rand" | "random-order" => Some(Self::RandomOrder),
+            "sorted" | "sort" => Some(Self::Sorted),
+            _ => None,
+        }
+    }
+}
+
+/// Result of classifying one dataset's full test set.
+#[derive(Debug, Clone)]
+pub struct ClassifyOutcome {
+    /// Dataset name.
+    pub dataset: String,
+    /// Bound used.
+    pub bound: BoundKind,
+    /// Search procedure.
+    pub mode: SearchMode,
+    /// Window used.
+    pub w: usize,
+    /// 1-NN classification accuracy.
+    pub accuracy: f64,
+    /// Wall-clock time for the whole test set (excluding train prep).
+    pub elapsed: Duration,
+    /// Aggregated work counters.
+    pub stats: SearchStats,
+    /// Per-query nearest neighbors (for cross-bound agreement checks).
+    pub neighbors: Vec<NnResult>,
+}
+
+/// Classify every test series of `ds` with 1-NN DTW using `bound` under
+/// `mode`. `train` must be prepared for the same window. `seed` drives
+/// the per-query candidate shuffle in random-order mode.
+pub fn classify_dataset<D: Delta>(
+    ds: &Dataset,
+    train: &PreparedTrainSet,
+    bound: BoundKind,
+    mode: SearchMode,
+    seed: u64,
+) -> ClassifyOutcome {
+    let w = train.w;
+    let mut rng = Rng::seeded(seed);
+    let mut scratch = Scratch::default();
+    let mut bound_buf: Vec<f64> = Vec::new();
+    let mut index_buf: Vec<usize> = Vec::new();
+    let mut order: Vec<usize> = (0..train.len()).collect();
+
+    let needs_q_env = bound.requires_query_envelopes();
+    let mut correct = 0usize;
+    let mut stats = SearchStats::default();
+    let mut neighbors = Vec::with_capacity(ds.test.len());
+
+    let started = Instant::now();
+    for q in &ds.test {
+        // Query preparation is timed (paper: "Calculate and save U^Q and
+        // L^Q" sits inside the per-query loop) but skipped when the bound
+        // does not read it.
+        let pq = if needs_q_env {
+            PreparedSeries::prepare(q.values.clone(), w)
+        } else {
+            PreparedSeries {
+                values: q.values.clone(),
+                w,
+                lo: Vec::new(),
+                up: Vec::new(),
+                lo_of_up: Vec::new(),
+                up_of_lo: Vec::new(),
+            }
+        };
+        let (result, qstats) = match mode {
+            SearchMode::RandomOrder => {
+                rng.shuffle(&mut order);
+                nn_random_order::<D>(&pq, train, bound, &order, &mut scratch)
+            }
+            SearchMode::Sorted => nn_sorted::<D>(
+                &pq,
+                train,
+                bound,
+                &mut scratch,
+                &mut bound_buf,
+                &mut index_buf,
+            ),
+        };
+        stats.add(&qstats);
+        if result.label == q.label {
+            correct += 1;
+        }
+        neighbors.push(result);
+    }
+    let elapsed = started.elapsed();
+
+    ClassifyOutcome {
+        dataset: ds.name.clone(),
+        bound,
+        mode,
+        w,
+        accuracy: correct as f64 / ds.test.len().max(1) as f64,
+        elapsed,
+        stats,
+        neighbors,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate_archive, ArchiveSpec, Scale};
+    use crate::delta::Squared;
+
+    #[test]
+    fn all_bounds_find_identical_nearest_distances() {
+        let ds = &generate_archive(&ArchiveSpec::new(Scale::Tiny, 55))[3];
+        let w = ds.window.max(1);
+        let train = PreparedTrainSet::from_dataset(ds, w);
+        let reference = classify_dataset::<Squared>(
+            ds,
+            &train,
+            BoundKind::Keogh,
+            SearchMode::Sorted,
+            9,
+        );
+        for &bound in BoundKind::ALL {
+            for mode in [SearchMode::RandomOrder, SearchMode::Sorted] {
+                let out = classify_dataset::<Squared>(ds, &train, bound, mode, 9);
+                assert_eq!(out.accuracy, reference.accuracy, "{bound} {mode:?}");
+                for (a, b) in out.neighbors.iter().zip(reference.neighbors.iter()) {
+                    assert!(
+                        (a.distance - b.distance).abs() < 1e-9,
+                        "{bound} {mode:?}: {} vs {}",
+                        a.distance,
+                        b.distance
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pruning_reduces_dtw_calls() {
+        let ds = &generate_archive(&ArchiveSpec::new(Scale::Tiny, 55))[1];
+        let w = ds.window.max(1);
+        let train = PreparedTrainSet::from_dataset(ds, w);
+        let out =
+            classify_dataset::<Squared>(ds, &train, BoundKind::Webb, SearchMode::Sorted, 1);
+        let max_calls = ds.test.len() * train.len();
+        assert!(
+            out.stats.dtw_calls < max_calls,
+            "no pruning at all: {} vs {max_calls}",
+            out.stats.dtw_calls
+        );
+    }
+}

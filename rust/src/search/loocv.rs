@@ -1,0 +1,132 @@
+//! Leave-one-out cross-validated window selection.
+//!
+//! The UCR archive's "recommended window" for each dataset is the warping
+//! window that maximizes leave-one-out 1-NN accuracy on the training set
+//! (§6.1: "These recommended window sizes are those that provide most
+//! accurate nearest neighbor classification using leave-one-out
+//! cross-validation on the training set"). This module reproduces that
+//! derivation so real-archive runs and synthetic runs use the same rule.
+
+use crate::data::Dataset;
+use crate::delta::Delta;
+use crate::dtw::dtw_ea;
+
+/// LOOCV 1-NN accuracy on the training set at window `w`.
+pub fn loocv_accuracy<D: Delta>(ds: &Dataset, w: usize) -> f64 {
+    let n = ds.train.len();
+    if n < 2 {
+        return 0.0;
+    }
+    let mut correct = 0usize;
+    for i in 0..n {
+        let mut best = f64::INFINITY;
+        let mut best_label = u32::MAX;
+        for j in 0..n {
+            if i == j {
+                continue;
+            }
+            let d = dtw_ea::<D>(&ds.train[i].values, &ds.train[j].values, w, best);
+            if d < best {
+                best = d;
+                best_label = ds.train[j].label;
+            }
+        }
+        if best_label == ds.train[i].label {
+            correct += 1;
+        }
+    }
+    correct as f64 / n as f64
+}
+
+/// Select the best window from `candidates` by LOOCV accuracy; ties go to
+/// the **smallest** window (cheapest DTW), matching archive practice.
+pub fn select_window<D: Delta>(ds: &Dataset, candidates: &[usize]) -> (usize, f64) {
+    let mut best_w = 0usize;
+    let mut best_acc = -1.0;
+    for &w in candidates {
+        let acc = loocv_accuracy::<D>(ds, w);
+        if acc > best_acc + 1e-12 {
+            best_acc = acc;
+            best_w = w;
+        }
+    }
+    (best_w, best_acc)
+}
+
+/// The UCR-style candidate grid: 0%..20% of ℓ in 1% steps (deduplicated).
+pub fn ucr_window_grid(series_len: usize) -> Vec<usize> {
+    let mut grid: Vec<usize> = (0..=20)
+        .map(|pct| ((series_len as f64) * (pct as f64) / 100.0).ceil() as usize)
+        .collect();
+    grid.sort_unstable();
+    grid.dedup();
+    grid
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate_archive, ArchiveSpec, Scale};
+    use crate::data::{Dataset, Labeled};
+    use crate::delta::Squared;
+
+    #[test]
+    fn grid_shape() {
+        let g = ucr_window_grid(150);
+        assert_eq!(g[0], 0);
+        assert_eq!(*g.last().unwrap(), 30);
+        assert!(g.windows(2).all(|p| p[0] < p[1]));
+    }
+
+    #[test]
+    fn perfectly_separable_data_is_perfect() {
+        // Two classes of constant series far apart: any window works.
+        let mk = |label: u32, v: f64| Labeled { label, values: vec![v; 16] };
+        let ds = Dataset {
+            name: "sep".into(),
+            train: vec![mk(0, 0.0), mk(0, 0.1), mk(1, 5.0), mk(1, 5.1)],
+            test: vec![],
+            window: 0,
+        };
+        assert_eq!(loocv_accuracy::<Squared>(&ds, 0), 1.0);
+        let (w, acc) = select_window::<Squared>(&ds, &[0, 1, 2]);
+        assert_eq!(acc, 1.0);
+        assert_eq!(w, 0, "ties must pick the smallest window");
+    }
+
+    #[test]
+    fn shifted_pulses_prefer_nonzero_window() {
+        // Class 0: one pulse, time-jittered. Class 1: flat. Lock-step
+        // distance confuses jittered pulses; a small window aligns them.
+        let pulse = |pos: usize| -> Vec<f64> {
+            let mut v = vec![0.0; 24];
+            v[pos] = 5.0;
+            v[pos + 1] = 5.0;
+            v
+        };
+        let mut train = Vec::new();
+        for (i, p) in [4usize, 7, 10, 13].iter().enumerate() {
+            let _ = i;
+            train.push(Labeled { label: 0, values: pulse(*p) });
+        }
+        for amp in [0.5, 0.6, 0.7, 0.8] {
+            train.push(Labeled { label: 1, values: vec![amp; 24] });
+        }
+        let ds = Dataset { name: "pulse".into(), train, test: vec![], window: 0 };
+        let acc0 = loocv_accuracy::<Squared>(&ds, 0);
+        let (w, acc) = select_window::<Squared>(&ds, &[0, 1, 2, 3, 4, 6]);
+        assert!(acc >= acc0);
+        assert!(w > 0, "selected w={w}, acc0={acc0}, acc={acc}");
+    }
+
+    #[test]
+    fn generator_archive_loocv_runs() {
+        // Smoke: LOOCV over generated data returns sane values.
+        let archive = generate_archive(&ArchiveSpec::new(Scale::Tiny, 97));
+        let ds = &archive[0];
+        let grid = ucr_window_grid(ds.series_len());
+        let (w, acc) = select_window::<Squared>(ds, &grid[..4]);
+        assert!((0.0..=1.0).contains(&acc));
+        assert!(w <= ds.series_len());
+    }
+}

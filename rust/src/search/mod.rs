@@ -1,0 +1,60 @@
+//! Nearest-neighbor DTW search — the paper's application and evaluation
+//! harness (§6).
+//!
+//! * [`nn`] — the two search procedures: Algorithm 3 (**random order**,
+//!   bound and DTW both early-abandon against the best-so-far) and
+//!   Algorithm 4 (**sorted**: bound every candidate, walk in ascending
+//!   bound order until the next bound exceeds the best distance).
+//! * [`classify`] — 1-NN classification over a dataset with either
+//!   procedure, including the per-query envelope bookkeeping the paper
+//!   times (training envelopes precomputed, query envelopes once per
+//!   query, projection envelopes per pair).
+//! * [`tightness`] — mean `λ_w(Q,T)/DTW_w(Q,T)` per dataset (§6.1).
+//! * [`loocv`] — leave-one-out window selection (how the archive derives
+//!   its recommended windows).
+
+pub mod classify;
+pub mod loocv;
+pub mod nn;
+pub mod tightness;
+
+use crate::bounds::PreparedSeries;
+use crate::data::Dataset;
+
+/// A training set prepared for a specific window: per-series envelopes
+/// (and envelope-of-envelopes) computed once, as the paper's experimental
+/// protocol prescribes ("the envelopes for the training series are
+/// precalculated and the time for calculating these envelopes is not
+/// included in the experimental timings").
+#[derive(Debug, Clone)]
+pub struct PreparedTrainSet {
+    /// Labels, parallel to `series`.
+    pub labels: Vec<u32>,
+    /// Prepared training series.
+    pub series: Vec<PreparedSeries>,
+    /// The window the preparation is valid for.
+    pub w: usize,
+}
+
+impl PreparedTrainSet {
+    /// Prepare every training series of a dataset for window `w`.
+    pub fn from_dataset(ds: &Dataset, w: usize) -> Self {
+        let labels = ds.train.iter().map(|s| s.label).collect();
+        let series = ds
+            .train
+            .iter()
+            .map(|s| PreparedSeries::prepare(s.values.clone(), w))
+            .collect();
+        PreparedTrainSet { labels, series, w }
+    }
+
+    /// Number of training series.
+    pub fn len(&self) -> usize {
+        self.series.len()
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.series.is_empty()
+    }
+}

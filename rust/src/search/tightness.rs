@@ -1,0 +1,127 @@
+//! Tightness evaluation (§6.1): `λ_w(Q,T) / DTW_w(Q,T)` averaged over all
+//! test×train pairs, excluding pairs with `DTW = 0`.
+
+use crate::bounds::{BoundKind, PreparedSeries, Scratch};
+use crate::data::Dataset;
+use crate::delta::Delta;
+use crate::dtw::dtw;
+
+use super::PreparedTrainSet;
+
+/// Tightness summary for one (dataset, bound) pair.
+#[derive(Debug, Clone, Copy)]
+pub struct Tightness {
+    /// Mean λ/DTW over included pairs.
+    pub mean: f64,
+    /// Number of pairs included (DTW > 0).
+    pub pairs: usize,
+    /// Pairs skipped because DTW was 0.
+    pub skipped: usize,
+}
+
+/// Mean tightness of `bound` on a dataset at window `w`.
+///
+/// `dtw_cache` lets callers evaluating many bounds over the same dataset
+/// reuse the DTW denominators — pass the same (initially empty) vector.
+pub fn dataset_tightness<D: Delta>(
+    ds: &Dataset,
+    train: &PreparedTrainSet,
+    bound: BoundKind,
+    dtw_cache: &mut Vec<f64>,
+) -> Tightness {
+    let w = train.w;
+    let want = ds.test.len() * train.len();
+    if dtw_cache.len() != want {
+        dtw_cache.clear();
+        dtw_cache.reserve(want);
+        for q in &ds.test {
+            for t in &train.series {
+                dtw_cache.push(dtw::<D>(&q.values, &t.values, w));
+            }
+        }
+    }
+
+    let mut scratch = Scratch::default();
+    let mut sum = 0.0;
+    let mut pairs = 0usize;
+    let mut skipped = 0usize;
+    let mut k = 0usize;
+    for q in &ds.test {
+        let pq = PreparedSeries::prepare(q.values.clone(), w);
+        for t in &train.series {
+            let d = dtw_cache[k];
+            k += 1;
+            if d <= 0.0 {
+                skipped += 1;
+                continue;
+            }
+            let lb = bound.compute::<D>(&pq, t, w, f64::INFINITY, &mut scratch);
+            debug_assert!(
+                lb <= d + 1e-6 * d.max(1.0),
+                "{bound} exceeded DTW: {lb} > {d}"
+            );
+            sum += lb / d;
+            pairs += 1;
+        }
+    }
+    Tightness {
+        mean: if pairs > 0 { sum / pairs as f64 } else { 0.0 },
+        pairs,
+        skipped,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate_archive, ArchiveSpec, Scale};
+    use crate::delta::Squared;
+
+    #[test]
+    fn tightness_orderings_hold_on_dataset_means() {
+        let ds = &generate_archive(&ArchiveSpec::new(Scale::Tiny, 17))[4];
+        let w = ds.window.max(2);
+        let train = PreparedTrainSet::from_dataset(ds, w);
+        let mut cache = Vec::new();
+        let t = |b: BoundKind, cache: &mut Vec<f64>| {
+            dataset_tightness::<Squared>(ds, &train, b, cache).mean
+        };
+        let kim = t(BoundKind::KimFL, &mut cache);
+        let keogh = t(BoundKind::Keogh, &mut cache);
+        let improved = t(BoundKind::Improved, &mut cache);
+        let petitjean = t(BoundKind::Petitjean, &mut cache);
+        let petitjean_nolr = t(BoundKind::PetitjeanNoLr, &mut cache);
+        let webb = t(BoundKind::Webb, &mut cache);
+        let webb_nolr = t(BoundKind::WebbNoLr, &mut cache);
+        let enhanced8 = t(BoundKind::Enhanced(8), &mut cache);
+        let webb_enh8 = t(BoundKind::WebbEnhanced(8), &mut cache);
+
+        // In [0, 1].
+        for v in [kim, keogh, improved, petitjean, webb, enhanced8] {
+            assert!((0.0..=1.0 + 1e-9).contains(&v), "{v}");
+        }
+        // Provable pointwise orderings must show in the means.
+        assert!(improved >= keogh - 1e-12);
+        assert!(petitjean_nolr >= improved - 1e-12);
+        assert!(webb_nolr >= keogh - 1e-12);
+        assert!(webb_enh8 >= enhanced8 - 1e-12);
+        // Paper's headline orderings (means, this data).
+        assert!(petitjean >= improved - 1e-9, "{petitjean} < {improved}");
+        assert!(webb >= keogh - 1e-9, "{webb} < {keogh}");
+        assert!(kim <= keogh + 1e-9);
+    }
+
+    #[test]
+    fn identical_series_are_skipped() {
+        // A dataset where a test series equals a training series → DTW=0
+        // pair is excluded, not a division by zero.
+        let mut ds = generate_archive(&ArchiveSpec::new(Scale::Tiny, 23))[0].clone();
+        ds.test[0].values = ds.train[0].values.clone();
+        let w = 2;
+        let train = PreparedTrainSet::from_dataset(&ds, w);
+        let mut cache = Vec::new();
+        let t = dataset_tightness::<Squared>(&ds, &train, BoundKind::Webb, &mut cache);
+        assert!(t.skipped >= 1);
+        assert!(t.mean.is_finite());
+    }
+}

@@ -1,0 +1,72 @@
+//! CLI integration tests — drive the real binary end to end.
+
+use std::process::Command;
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_dtw-bounds"))
+}
+
+#[test]
+fn info_runs() {
+    let out = bin().arg("info").output().expect("spawn");
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("dtw-bounds"));
+    assert!(text.contains("LB_Webb"), "{text}");
+}
+
+#[test]
+fn unknown_command_fails_with_message() {
+    let out = bin().arg("frobnicate").output().expect("spawn");
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown command"));
+}
+
+#[test]
+fn gen_archive_writes_ucr_layout() {
+    let tmp = std::env::temp_dir().join(format!("dtwb_cli_{}", std::process::id()));
+    let out = bin()
+        .args(["gen-archive", "--scale", "tiny", "--out"])
+        .arg(&tmp)
+        .output()
+        .expect("spawn");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let entries: Vec<_> = std::fs::read_dir(&tmp).unwrap().collect();
+    assert_eq!(entries.len(), 10);
+    assert!(tmp.join("Synth00").join("Synth00_TRAIN.tsv").exists());
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+#[test]
+fn tightness_tiny_take_two() {
+    let out = bin()
+        .args(["tightness", "--scale", "tiny", "--take", "2", "--bounds", "keogh,webb"])
+        .output()
+        .expect("spawn");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("LB_Keogh") && text.contains("LB_Webb"));
+    assert!(text.contains("tighter on"));
+}
+
+#[test]
+fn sweep_single_fraction_smoke() {
+    let out = bin()
+        .args([
+            "sweep",
+            "--scale",
+            "tiny",
+            "--take",
+            "2",
+            "--frac",
+            "0.05",
+            "--repeats",
+            "1",
+        ])
+        .output()
+        .expect("spawn");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("LB_Webb vs LB_Keogh"));
+    assert!(text.contains("w = 5%"));
+}

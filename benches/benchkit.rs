@@ -74,3 +74,37 @@ pub fn ns_per_call<F: FnMut() -> f64>(iters: usize, mut f: F) -> f64 {
 pub fn banner(title: &str) {
     println!("\n{}\n{}", title, "=".repeat(title.len()));
 }
+
+/// One machine-readable benchmark record for the perf-trajectory files
+/// (`BENCH_*.json`): which bound/kernel, at which workload shape, at what
+/// cost per bound evaluation.
+#[derive(Debug, Clone)]
+pub struct BenchRecord {
+    /// Bound / kernel name, e.g. `lb_keogh/native`.
+    pub bound: String,
+    /// Series length ℓ.
+    pub series_len: usize,
+    /// Candidates scored per query.
+    pub candidates: usize,
+    /// Nanoseconds per bound evaluation (one query × candidate pair).
+    pub ns_per_op: f64,
+}
+
+/// Write records as a JSON array. The offline build has no `serde`; the
+/// records are flat, so manual formatting is sufficient and the output is
+/// stable for line-diffing across PRs.
+pub fn write_json(path: &str, records: &[BenchRecord]) -> std::io::Result<()> {
+    let mut out = String::from("[\n");
+    for (i, r) in records.iter().enumerate() {
+        let sep = if i + 1 == records.len() { "" } else { "," };
+        out.push_str(&format!(
+            "  {{\"bound\": \"{}\", \"series_len\": {}, \"candidates\": {}, \"ns_per_op\": {:.1}}}{sep}\n",
+            r.bound.replace('\\', "\\\\").replace('"', "\\\""),
+            r.series_len,
+            r.candidates,
+            r.ns_per_op,
+        ));
+    }
+    out.push_str("]\n");
+    std::fs::write(path, out)
+}

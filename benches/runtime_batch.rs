@@ -1,9 +1,12 @@
-//! PJRT batched prefilter vs the scalar Rust loop: pairs/second of
-//! `LB_KEOGH` screening at the compiled artifact shapes. Requires
-//! `make artifacts` (skips politely otherwise).
+//! Batched `LB_KEOGH` screening backends vs the scalar per-pair loop:
+//! pairs/second at serving-relevant shapes, plus a machine-readable
+//! `BENCH_runtime_batch.json` (bound name, series length, candidates,
+//! ns/op) so the perf trajectory of the native backend is tracked across
+//! PRs.
 //!
 //! ```sh
-//! make artifacts && cargo bench --bench runtime_batch
+//! cargo bench --bench runtime_batch                    # scalar + native
+//! cargo bench --bench runtime_batch --features pjrt    # + XLA (needs `make artifacts`)
 //! ```
 
 #[path = "benchkit.rs"]
@@ -13,40 +16,36 @@ use dtw_bounds::bounds::{keogh, PreparedSeries};
 use dtw_bounds::data::rng::Rng;
 use dtw_bounds::delta::Squared;
 use dtw_bounds::metrics::{Summary, Table};
-use dtw_bounds::runtime::{default_artifacts_dir, read_manifest, BatchLb, XlaRuntime};
+use dtw_bounds::runtime::{LbBackend, NativeBatchLb};
+
+/// (query batch, candidates, series length) — the shapes the AOT
+/// artifacts are compiled for, so native and pjrt numbers are comparable.
+const SHAPES: &[(usize, usize, usize)] = &[(8, 64, 128), (16, 128, 256), (32, 256, 512)];
 
 fn main() {
-    let dir = default_artifacts_dir();
-    let manifest = match read_manifest(&dir) {
-        Ok(m) => m,
-        Err(_) => {
-            println!("no artifacts under {} — run `make artifacts` first", dir.display());
-            return;
-        }
-    };
-    let rt = XlaRuntime::cpu().expect("PJRT CPU client");
     let knobs = benchkit::Knobs::from_env();
     let mut rng = Rng::seeded(0x0DDB);
 
-    benchkit::banner("Batched XLA LB_Keogh vs scalar Rust (pairs/s)");
-    let mut table = Table::new(vec![
-        "shape (b x n x l)",
-        "scalar Ms pairs/s",
-        "xla Ms pairs/s",
-        "speedup",
-    ]);
+    benchkit::banner("Batched LB_Keogh screening: backends vs scalar Rust (pairs/s)");
+    let mut table =
+        Table::new(vec!["backend", "shape (b x n x l)", "Ms pairs/s", "vs scalar"]);
+    let mut records: Vec<benchkit::BenchRecord> = Vec::new();
 
-    for entry in manifest.iter().filter(|e| e.name == "lb_keogh") {
-        let (b, n, l) = (entry.batch, entry.rows, entry.len);
+    for &(b, n, l) in SHAPES {
         let w = (l / 10).max(1);
         let queries: Vec<Vec<f64>> =
             (0..b).map(|_| (0..l).map(|_| rng.normal()).collect()).collect();
         let train: Vec<PreparedSeries> = (0..n)
             .map(|_| PreparedSeries::prepare((0..l).map(|_| rng.normal()).collect(), w))
             .collect();
+        let q_refs: Vec<&[f64]> = queries.iter().map(|v| v.as_slice()).collect();
+        let cutoffs = vec![f64::INFINITY; b];
+        let pairs = (b * n) as f64;
+        let shape = format!("{b} x {n} x {l}");
 
-        // Scalar Rust: b*n bound computations.
-        let scalar_times = benchkit::time_reps(knobs.repeats, || {
+        // Scalar baseline: b*n independent kernel calls, query-major (the
+        // pre-backend layout — every query streams all candidates).
+        let scalar_mean = Summary::of(&benchkit::time_reps(knobs.repeats, || {
             let mut acc = 0.0;
             for q in &queries {
                 for t in &train {
@@ -54,28 +53,113 @@ fn main() {
                 }
             }
             std::hint::black_box(acc);
-        });
-
-        // XLA batch: one execution.
-        let mut blb = BatchLb::load(&rt, &dir, b, n, l).expect("artifact loads");
-        let q_refs: Vec<&[f64]> = queries.iter().map(|v| v.as_slice()).collect();
-        let lo_refs: Vec<&[f64]> = train.iter().map(|t| t.lo.as_slice()).collect();
-        let up_refs: Vec<&[f64]> = train.iter().map(|t| t.up.as_slice()).collect();
-        let xla_times = benchkit::time_reps(knobs.repeats, || {
-            let m = blb.compute(&q_refs, &lo_refs, &up_refs).expect("compute");
-            std::hint::black_box(m.len());
-        });
-
-        let pairs = (b * n) as f64;
-        let s_rate = pairs / Summary::of(&scalar_times).mean / 1e6;
-        let x_rate = pairs / Summary::of(&xla_times).mean / 1e6;
+        }))
+        .mean;
+        let scalar_rate = pairs / scalar_mean / 1e6;
         table.row(vec![
-            format!("{b} x {n} x {l}"),
-            format!("{s_rate:.2}"),
-            format!("{x_rate:.2}"),
-            format!("{:.2}x", x_rate / s_rate),
+            "scalar".to_string(),
+            shape.clone(),
+            format!("{scalar_rate:.2}"),
+            "1.00x".to_string(),
         ]);
+        records.push(benchkit::BenchRecord {
+            bound: "lb_keogh/scalar".to_string(),
+            series_len: l,
+            candidates: n,
+            ns_per_op: scalar_mean * 1e9 / pairs,
+        });
+
+        // Native backend: cache-blocked over candidates.
+        let mut native = NativeBatchLb::new();
+        let native_mean = Summary::of(&benchkit::time_reps(knobs.repeats, || {
+            let m = native.compute(&q_refs, &train, &cutoffs).expect("native compute");
+            std::hint::black_box(m.len());
+        }))
+        .mean;
+        let native_rate = pairs / native_mean / 1e6;
+        table.row(vec![
+            "native".to_string(),
+            shape.clone(),
+            format!("{native_rate:.2}"),
+            format!("{:.2}x", native_rate / scalar_rate),
+        ]);
+        records.push(benchkit::BenchRecord {
+            bound: "lb_keogh/native".to_string(),
+            series_len: l,
+            candidates: n,
+            ns_per_op: native_mean * 1e9 / pairs,
+        });
+
+        #[cfg(feature = "pjrt")]
+        bench_pjrt(
+            &mut table,
+            &mut records,
+            &q_refs,
+            &train,
+            (b, n, l),
+            knobs.repeats,
+            scalar_rate,
+        );
     }
+
     println!("{}", table.to_markdown());
-    println!("(scalar path includes early-abandon branching; the XLA path is branch-free f32.)");
+    println!("(the scalar path includes early-abandon branching; batched paths are branch-free)");
+    benchkit::write_json("BENCH_runtime_batch.json", &records)
+        .expect("write BENCH_runtime_batch.json");
+    println!("wrote BENCH_runtime_batch.json ({} records)", records.len());
+}
+
+/// PJRT/XLA backend timing (one execution per batch). Skips politely
+/// when artifacts or the runtime are unavailable.
+#[cfg(feature = "pjrt")]
+fn bench_pjrt(
+    table: &mut Table,
+    records: &mut Vec<benchkit::BenchRecord>,
+    q_refs: &[&[f64]],
+    train: &[PreparedSeries],
+    (b, n, l): (usize, usize, usize),
+    repeats: usize,
+    scalar_rate: f64,
+) {
+    use dtw_bounds::runtime::{default_artifacts_dir, BatchLb, XlaRuntime};
+
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.tsv").exists() {
+        println!("pjrt: no artifacts under {} — run `make artifacts`", dir.display());
+        return;
+    }
+    let rt = match XlaRuntime::cpu() {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("pjrt: runtime unavailable ({e:#})");
+            return;
+        }
+    };
+    let mut blb = match BatchLb::load(&rt, &dir, b, n, l) {
+        Ok(blb) => blb,
+        Err(e) => {
+            println!("pjrt: no artifact fits {b}x{n}x{l} ({e:#})");
+            return;
+        }
+    };
+    let cutoffs = vec![f64::INFINITY; q_refs.len()];
+    let pairs = (b * n) as f64;
+    let mean = Summary::of(&benchkit::time_reps(repeats, || {
+        let m = blb.compute(q_refs, train, &cutoffs).expect("pjrt compute");
+        std::hint::black_box(m.len());
+    }))
+    .mean;
+    let rate = pairs / mean / 1e6;
+    table.row(vec![
+        "pjrt".to_string(),
+        format!("{b} x {n} x {l}"),
+        format!("{rate:.2}"),
+        format!("{:.2}x", rate / scalar_rate),
+    ]);
+    records.push(benchkit::BenchRecord {
+        bound: "lb_keogh/pjrt".to_string(),
+        series_len: l,
+        candidates: n,
+        ns_per_op: mean * 1e9 / pairs,
+    });
 }

@@ -1,15 +1,18 @@
-//! Serving end-to-end: coordinator + router + (when artifacts exist) the
-//! XLA batched prefilter, measured under concurrent client load.
+//! Serving end-to-end: coordinator + router + batched prefilter backend,
+//! measured under concurrent client load.
 //!
 //! ```sh
-//! make artifacts && cargo run --release --example serve
+//! cargo run --release --example serve                  # native backend
+//! DTWB_BACKEND=none cargo run --release --example serve    # scalar only
+//! DTWB_BACKEND=pjrt cargo run --release --example serve \
+//!     --features pjrt                                  # XLA (needs `make artifacts`)
 //! ```
 //!
 //! Boots the TCP server on an ephemeral port over one synthetic dataset,
 //! fires concurrent client connections at it, and reports exactness,
-//! latency percentiles and throughput for both the scalar and (if
-//! available) batched paths. This is deliverable (b)'s "load a model and
-//! serve batched requests" driver; the measured run is in EXPERIMENTS.md.
+//! latency percentiles and throughput for both the scalar and batched
+//! paths. This is deliverable (b)'s "load a model and serve batched
+//! requests" driver; the measured run is in EXPERIMENTS.md.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -22,12 +25,38 @@ use dtw_bounds::coordinator::{NnEngine, Router};
 use dtw_bounds::data::synthetic::{generate_archive, ArchiveSpec, Scale};
 use dtw_bounds::delta::Squared;
 use dtw_bounds::metrics::Summary;
-use dtw_bounds::runtime::{default_artifacts_dir, XlaRuntime};
+use dtw_bounds::runtime::BackendKind;
 use dtw_bounds::search::nn::nn_brute_force;
 use dtw_bounds::search::PreparedTrainSet;
 
 const CLIENTS: usize = 4;
 const QUERIES_PER_CLIENT: usize = 32;
+
+/// Attach the PJRT backend (feature `pjrt`; needs `make artifacts`).
+#[cfg(feature = "pjrt")]
+fn attach_pjrt(engine: &mut NnEngine) {
+    use dtw_bounds::runtime::{default_artifacts_dir, XlaRuntime};
+    let artifacts = default_artifacts_dir();
+    if !artifacts.join("manifest.tsv").exists() {
+        eprintln!("no artifacts (run `make artifacts`): scalar path only");
+        return;
+    }
+    match XlaRuntime::cpu() {
+        Ok(rt) => {
+            match engine.attach_batch_lb(&rt, &artifacts, 32) {
+                Ok(()) => eprintln!("batched prefilter: pjrt"),
+                Err(e) => eprintln!("no batched path: {e:#}"),
+            }
+            std::mem::forget(rt);
+        }
+        Err(e) => eprintln!("PJRT unavailable: {e:#}"),
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn attach_pjrt(_engine: &mut NnEngine) {
+    eprintln!("pjrt backend requested but built without --features pjrt; scalar path only");
+}
 
 fn main() {
     let archive = generate_archive(&ArchiveSpec::new(Scale::Small, 2021));
@@ -45,25 +74,27 @@ fn main() {
         ds.train.len()
     );
 
+    // Backend from DTWB_BACKEND (native | pjrt | none); default native.
+    // An unrecognized value must not silently corrupt a scalar-vs-batched
+    // comparison, so say what was selected.
+    let backend = match std::env::var("DTWB_BACKEND") {
+        Ok(s) => BackendKind::parse(&s).unwrap_or_else(|| {
+            eprintln!("DTWB_BACKEND={s:?} not recognized (native|pjrt|none); using native");
+            BackendKind::Native
+        }),
+        Err(_) => BackendKind::Native,
+    };
     let ds2 = ds.clone();
-    let artifacts = default_artifacts_dir();
-    let have_artifacts = artifacts.join("manifest.tsv").exists();
     let router = Arc::new(Router::spawn(
         move || {
             let mut engine = NnEngine::new(&ds2, w, BoundKind::Webb);
-            if have_artifacts {
-                match XlaRuntime::cpu() {
-                    Ok(rt) => {
-                        match engine.attach_batch_lb(&rt, &default_artifacts_dir(), 32) {
-                            Ok(()) => eprintln!("batched prefilter attached"),
-                            Err(e) => eprintln!("no batched path: {e:#}"),
-                        }
-                        std::mem::forget(rt);
-                    }
-                    Err(e) => eprintln!("PJRT unavailable: {e:#}"),
+            match backend {
+                BackendKind::None => eprintln!("scalar path only"),
+                BackendKind::Native => {
+                    engine.attach_native();
+                    eprintln!("batched prefilter: native");
                 }
-            } else {
-                eprintln!("no artifacts (run `make artifacts`): scalar path only");
+                BackendKind::Pjrt => attach_pjrt(&mut engine),
             }
             engine
         },

@@ -1,11 +1,13 @@
-//! The query engine: exact 1-NN DTW with lower-bound screening, with an
-//! optional PJRT **batch prefilter**.
+//! The query engine: exact 1-NN DTW with lower-bound screening, plus a
+//! pluggable batched prefilter ([`LbBackend`]).
 //!
-//! Scalar path = the paper's Algorithm 4 per query. Batch path = one XLA
-//! execution computes the `LB_KEOGH` matrix for the whole query batch
-//! (the L1 Pallas kernel), then each query walks its candidates in
-//! ascending-bound order with early-abandoning DTW. Results are exact
-//! either way; only the screening cost moves.
+//! Scalar path = the paper's Algorithm 4 per query. Batch path = the
+//! attached backend computes the `LB_KEOGH` matrix for the whole query
+//! batch — the cache-blocked native backend by default, one XLA execution
+//! with `--features pjrt` — then each query walks its candidates in
+//! ascending-bound order with early-abandoning DTW
+//! ([`nn_sorted_precomputed`]). Results are exact either way; only the
+//! screening cost moves.
 
 use std::time::{Duration, Instant};
 
@@ -13,8 +15,8 @@ use crate::bounds::{BoundKind, PreparedSeries, Scratch};
 use crate::data::Dataset;
 use crate::delta::Squared;
 use crate::dtw::dtw_ea;
-use crate::runtime::{BatchLb, XlaRuntime};
-use crate::search::nn::{nn_sorted, NnResult};
+use crate::runtime::{LbBackend, NativeBatchLb};
+use crate::search::nn::{nn_sorted, nn_sorted_precomputed, NnResult};
 use crate::search::PreparedTrainSet;
 
 /// Which path answered a query.
@@ -22,7 +24,7 @@ use crate::search::PreparedTrainSet;
 pub enum EnginePath {
     /// Per-query scalar bound (Algorithm 4 in Rust).
     Scalar,
-    /// XLA batched prefilter + DTW on survivors.
+    /// Batched backend prefilter + DTW on survivors.
     Batched,
 }
 
@@ -41,43 +43,73 @@ pub struct QueryResponse {
 pub struct NnEngine {
     train: PreparedTrainSet,
     bound: BoundKind,
-    batch_lb: Option<BatchLb>,
+    backend: Option<Box<dyn LbBackend>>,
     scratch: Scratch,
     bound_buf: Vec<f64>,
     index_buf: Vec<usize>,
 }
 
 impl NnEngine {
-    /// Build an engine (scalar paths only) for a dataset at window `w`.
+    /// Build an engine (scalar path only) for a dataset at window `w`.
     pub fn new(ds: &Dataset, w: usize, bound: BoundKind) -> Self {
         let train = PreparedTrainSet::from_dataset(ds, w);
         NnEngine {
             train,
             bound,
-            batch_lb: None,
+            backend: None,
             scratch: Scratch::default(),
             bound_buf: Vec::new(),
             index_buf: Vec::new(),
         }
     }
 
-    /// Attach a PJRT batch prefilter loaded from `artifacts_dir`.
-    /// Fails (leaving the scalar path intact) when no artifact fits.
+    /// Build an engine with a batched screening backend attached.
+    pub fn with_backend(
+        ds: &Dataset,
+        w: usize,
+        bound: BoundKind,
+        backend: Box<dyn LbBackend>,
+    ) -> Self {
+        let mut engine = NnEngine::new(ds, w, bound);
+        engine.set_backend(backend);
+        engine
+    }
+
+    /// Attach (or replace) the batched screening backend.
+    pub fn set_backend(&mut self, backend: Box<dyn LbBackend>) {
+        log::info!("engine: batched prefilter backend = {}", backend.name());
+        self.backend = Some(backend);
+    }
+
+    /// Attach the default pure-Rust batched backend.
+    pub fn attach_native(&mut self) {
+        self.set_backend(Box::new(NativeBatchLb::new()));
+    }
+
+    /// Attach the PJRT batch prefilter loaded from `artifacts_dir`.
+    /// Fails (leaving any current backend intact) when no artifact fits.
+    #[cfg(feature = "pjrt")]
     pub fn attach_batch_lb(
         &mut self,
-        rt: &XlaRuntime,
+        rt: &crate::runtime::XlaRuntime,
         artifacts_dir: &std::path::Path,
         max_batch: usize,
     ) -> anyhow::Result<()> {
         let l = self.train.series.first().map(|s| s.len()).unwrap_or(0);
-        let blb = BatchLb::load(rt, artifacts_dir, max_batch, self.train.len(), l)?;
-        self.batch_lb = Some(blb);
+        let blb =
+            crate::runtime::BatchLb::load(rt, artifacts_dir, max_batch, self.train.len(), l)?;
+        self.set_backend(Box::new(blb));
         Ok(())
     }
 
-    /// True when the batch path is available.
+    /// True when a batched screening backend is attached.
     pub fn has_batch_path(&self) -> bool {
-        self.batch_lb.is_some()
+        self.backend.is_some()
+    }
+
+    /// Name of the attached screening backend, if any.
+    pub fn backend_name(&self) -> Option<&'static str> {
+        self.backend.as_ref().map(|b| b.name())
     }
 
     /// Training-set size.
@@ -105,21 +137,24 @@ impl NnEngine {
         QueryResponse { result, path: EnginePath::Scalar, latency: started.elapsed() }
     }
 
-    /// Answer a batch of queries, using the XLA prefilter when attached
-    /// (and the batch is non-trivial), otherwise the scalar path per query.
+    /// Answer a batch of queries, riding the attached backend when the
+    /// batch is non-trivial and fits its shape, otherwise the scalar path
+    /// per query.
     pub fn query_batch(&mut self, queries: &[Vec<f64>]) -> Vec<QueryResponse> {
         if queries.is_empty() {
             return Vec::new();
         }
-        let use_batch = match &self.batch_lb {
-            Some(blb) => {
-                let (cb, cn, cl) = blb.shape;
-                let l = queries[0].len();
+        let l = queries[0].len();
+        let use_batch = match &self.backend {
+            Some(be) => {
                 queries.len() > 1
-                    && queries.len() <= cb
-                    && self.train.len() <= cn
-                    && l <= cl
+                    && !self.train.is_empty()
+                    // Backends require one shared length; reject up front
+                    // rather than paying the seed DTWs and a per-batch
+                    // backend error + warn-log on every dispatch.
+                    && l == self.train.series[0].len()
                     && queries.iter().all(|q| q.len() == l)
+                    && be.supports(queries.len(), self.train.len(), l)
             }
             None => false,
         };
@@ -128,12 +163,29 @@ impl NnEngine {
         }
 
         let started = Instant::now();
-        let blb = self.batch_lb.as_mut().expect("checked above");
+        let w = self.train.w;
+        let backend = self.backend.as_mut().expect("checked above");
+        // For cutoff-honouring backends, seed each query's best-so-far
+        // with its exact DTW distance to candidate 0: candidates whose
+        // (partial) bound crosses the seed would be pruned regardless, so
+        // abandoning them early cannot change the result. Tradeoff: when
+        // candidate 0 is not the min-bound candidate this is one extra
+        // full DTW per query beyond what Algorithm 4's walk would pay,
+        // traded for O(ℓ) early-abandon savings on every screened-out
+        // bound row (n per query) — a win for n ≫ w. Branch-free backends
+        // ignore cutoffs, so for them the seed DTW would buy nothing:
+        // skip it and start the walk cold, exactly like Algorithm 4.
+        let seeds: Vec<f64> = if backend.uses_cutoffs() {
+            queries
+                .iter()
+                .map(|q| dtw_ea::<Squared>(q, &self.train.series[0].values, w, f64::INFINITY))
+                .collect()
+        } else {
+            vec![f64::INFINITY; queries.len()]
+        };
         let q_refs: Vec<&[f64]> = queries.iter().map(|v| v.as_slice()).collect();
-        let lo_refs: Vec<&[f64]> = self.train.series.iter().map(|t| t.lo.as_slice()).collect();
-        let up_refs: Vec<&[f64]> = self.train.series.iter().map(|t| t.up.as_slice()).collect();
-        let matrix = match blb.compute(&q_refs, &lo_refs, &up_refs) {
-            Ok(m) => m,
+        let ranking = match backend.rank(&q_refs, &self.train.series, &seeds) {
+            Ok(r) => r,
             Err(e) => {
                 log::warn!("batch prefilter failed ({e:#}); falling back to scalar");
                 return queries.iter().map(|q| self.query_one(q)).collect();
@@ -141,32 +193,25 @@ impl NnEngine {
         };
         let prefilter_each = started.elapsed() / queries.len() as u32;
 
-        let w = self.train.w;
         let mut out = Vec::with_capacity(queries.len());
         for (qi, q) in queries.iter().enumerate() {
             let q_started = Instant::now();
-            let lbs = &matrix[qi];
-            self.index_buf.clear();
-            self.index_buf.extend(0..self.train.len());
-            let idx = &mut self.index_buf;
-            idx.sort_unstable_by(|&a, &b| lbs[a].partial_cmp(&lbs[b]).unwrap());
-            let mut best =
-                NnResult { nn_index: usize::MAX, distance: f64::INFINITY, label: 0 };
-            for &ti in idx.iter() {
-                if lbs[ti] >= best.distance {
-                    break;
-                }
-                let d = dtw_ea::<Squared>(q, &self.train.series[ti].values, w, best.distance);
-                if d < best.distance {
-                    best = NnResult {
-                        nn_index: ti,
-                        distance: d,
-                        label: self.train.labels[ti],
-                    };
-                }
-            }
+            // A finite seed is a known candidate-0 distance; an infinite
+            // one means "unseeded" (cold walk).
+            let initial = if seeds[qi].is_finite() {
+                Some(NnResult { nn_index: 0, distance: seeds[qi], label: self.train.labels[0] })
+            } else {
+                None
+            };
+            let (result, _) = nn_sorted_precomputed::<Squared>(
+                q,
+                &self.train,
+                &ranking.bounds[qi],
+                &ranking.order[qi],
+                initial,
+            );
             out.push(QueryResponse {
-                result: best,
+                result,
                 path: EnginePath::Batched,
                 latency: prefilter_each + q_started.elapsed(),
             });
@@ -196,20 +241,52 @@ mod tests {
     }
 
     #[test]
-    fn batch_without_artifact_falls_back() {
+    fn batch_without_backend_falls_back_to_scalar() {
         let ds = &generate_archive(&ArchiveSpec::new(Scale::Tiny, 61))[1];
         let w = ds.window.max(1);
         let mut engine = NnEngine::new(ds, w, BoundKind::Webb);
         assert!(!engine.has_batch_path());
+        assert_eq!(engine.backend_name(), None);
         let queries: Vec<Vec<f64>> = ds.test.iter().take(3).map(|s| s.values.clone()).collect();
         let out = engine.query_batch(&queries);
         assert_eq!(out.len(), 3);
         assert!(out.iter().all(|r| r.path == EnginePath::Scalar));
     }
 
-    /// Exactness of the batched path (needs `make artifacts`).
+    #[test]
+    fn native_backend_batch_is_exact() {
+        let ds = &generate_archive(&ArchiveSpec::new(Scale::Tiny, 62))[0];
+        let w = ds.window.max(1);
+        let mut engine =
+            NnEngine::with_backend(ds, w, BoundKind::Keogh, Box::new(NativeBatchLb::new()));
+        assert_eq!(engine.backend_name(), Some("native"));
+        let queries: Vec<Vec<f64>> = ds.test.iter().map(|s| s.values.clone()).collect();
+        assert!(queries.len() > 1, "need a real batch");
+        let out = engine.query_batch(&queries);
+        let train = PreparedTrainSet::from_dataset(ds, w);
+        for (resp, q) in out.iter().zip(queries.iter()) {
+            let (truth, _) = nn_brute_force::<Squared>(q, &train);
+            assert_eq!(resp.result.distance, truth.distance);
+            assert_eq!(resp.path, EnginePath::Batched);
+        }
+    }
+
+    #[test]
+    fn single_query_batch_takes_scalar_path() {
+        let ds = &generate_archive(&ArchiveSpec::new(Scale::Tiny, 63))[2];
+        let w = ds.window.max(1);
+        let mut engine =
+            NnEngine::with_backend(ds, w, BoundKind::Webb, Box::new(NativeBatchLb::new()));
+        let out = engine.query_batch(&[ds.test[0].values.clone()]);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].path, EnginePath::Scalar);
+    }
+
+    /// Exactness of the PJRT path (needs `make artifacts` + real XLA).
+    #[cfg(feature = "pjrt")]
     #[test]
     fn batched_path_is_exact_when_artifact_present() {
+        use crate::runtime::XlaRuntime;
         let dir = crate::runtime::default_artifacts_dir();
         if !dir.join("manifest.tsv").exists() {
             eprintln!("skipping: no artifacts");
@@ -218,7 +295,13 @@ mod tests {
         let ds = &generate_archive(&ArchiveSpec::new(Scale::Tiny, 62))[0];
         let w = ds.window.max(1);
         let mut engine = NnEngine::new(ds, w, BoundKind::Keogh);
-        let rt = XlaRuntime::cpu().unwrap();
+        let rt = match XlaRuntime::cpu() {
+            Ok(rt) => rt,
+            Err(e) => {
+                eprintln!("skipping: PJRT unavailable ({e:#})");
+                return;
+            }
+        };
         if let Err(e) = engine.attach_batch_lb(&rt, &dir, 8) {
             eprintln!("skipping: {e:#}");
             return;

@@ -6,15 +6,16 @@
 //!
 //! * [`pool`] — a std-thread worker pool (`tokio` is unavailable in the
 //!   offline build; see DESIGN.md §5) used for dataset-parallel
-//!   experiment execution.
+//!   experiment execution, with per-worker state (`map_init`).
 //! * [`engine`] — the query engine: prepared training set + bound
-//!   cascade + optional PJRT batch prefilter, answering exact 1-NN DTW
-//!   queries.
+//!   cascade + an optional batched screening backend
+//!   ([`crate::runtime::LbBackend`]), answering exact 1-NN DTW queries.
 //! * [`router`] — request router and **dynamic batcher**: concurrent
 //!   clients enqueue queries; the dispatch loop drains the queue and
-//!   routes a full batch through the XLA prefilter (one execution scores
-//!   `batch × n` candidate pairs) or single queries through the scalar
-//!   path, whichever is available/profitable.
+//!   routes a full batch through the engine's backend (native Rust by
+//!   default, one XLA execution per batch with the `pjrt` feature) or
+//!   single queries through the scalar path, whichever is
+//!   available/profitable.
 //! * [`server`] — a line-protocol TCP front end over the router (used by
 //!   `examples/serve.rs`).
 
@@ -25,4 +26,4 @@ pub mod server;
 
 pub use engine::{EnginePath, NnEngine, QueryResponse};
 pub use pool::WorkerPool;
-pub use router::Router;
+pub use router::{Router, RouterStats};

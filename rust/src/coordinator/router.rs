@@ -1,17 +1,18 @@
 //! Request router and dynamic batcher.
 //!
 //! Clients call [`Router::query`] from any thread; a single dispatch
-//! thread owns the [`NnEngine`] (PJRT executables are not `Sync`) and
-//! drains the queue into batches: when several queries are waiting they
-//! ride the XLA batch prefilter together; a lone query takes the scalar
-//! path immediately. This is the standard router/batcher shape of serving
-//! systems (vLLM-style), scaled to this paper's workload.
+//! thread owns the [`NnEngine`] (backend handles — PJRT in particular —
+//! are not `Sync`) and drains the queue into batches: when several
+//! queries are waiting they ride the engine's batched
+//! [`crate::runtime::LbBackend`] prefilter together; a lone query takes
+//! the scalar path immediately. This is the standard router/batcher shape
+//! of serving systems (vLLM-style), scaled to this paper's workload.
 
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-use super::engine::{NnEngine, QueryResponse};
+use super::engine::{EnginePath, NnEngine, QueryResponse};
 
 enum Msg {
     Query(Vec<f64>, Sender<QueryResponse>),
@@ -33,13 +34,18 @@ pub struct RouterStats {
     pub batches: usize,
     /// Largest batch formed.
     pub max_batch: usize,
+    /// Queries answered through the batched backend prefilter.
+    pub batched: usize,
+    /// Queries answered on the scalar path.
+    pub scalar: usize,
 }
 
 impl Router {
     /// Spawn the dispatch loop. The engine is **constructed inside** the
-    /// dispatch thread by `factory` — PJRT handles are not `Send`, so the
-    /// engine must never cross threads. `max_batch` caps how many queued
-    /// queries ride one prefilter execution.
+    /// dispatch thread by `factory` — backend handles (PJRT in
+    /// particular) are not `Send`, so the engine must never cross
+    /// threads. `max_batch` caps how many queued queries ride one
+    /// prefilter execution.
     pub fn spawn<F>(factory: F, max_batch: usize) -> Router
     where
         F: FnOnce() -> NnEngine + Send + 'static,
@@ -75,6 +81,10 @@ impl Router {
                 let queries: Vec<Vec<f64>> = batch.iter().map(|(q, _)| q.clone()).collect();
                 let responses = engine.query_batch(&queries);
                 for ((_, reply), resp) in batch.into_iter().zip(responses) {
+                    match resp.path {
+                        EnginePath::Batched => stats.batched += 1,
+                        EnginePath::Scalar => stats.scalar += 1,
+                    }
                     let _ = reply.send(resp);
                 }
                 if shutdown {
@@ -150,6 +160,36 @@ mod tests {
         assert_eq!(stats.served, ds.test.len());
         assert!(stats.batches >= 1);
         assert!(stats.max_batch >= 1);
+        // No backend attached: everything rides the scalar path.
+        assert_eq!(stats.scalar, stats.served);
+        assert_eq!(stats.batched, 0);
+    }
+
+    #[test]
+    fn router_with_native_backend_serves_exact_answers() {
+        let ds = &generate_archive(&ArchiveSpec::new(Scale::Tiny, 73))[0];
+        let w = ds.window.max(1);
+        let ds2 = ds.clone();
+        let router = Router::spawn(
+            move || {
+                let mut engine = NnEngine::new(&ds2, w, BoundKind::Keogh);
+                engine.attach_native();
+                engine
+            },
+            8,
+        );
+        let train = PreparedTrainSet::from_dataset(ds, w);
+        let rxs: Vec<_> =
+            ds.test.iter().map(|q| router.query_async(q.values.clone())).collect();
+        for (rx, q) in rxs.into_iter().zip(ds.test.iter()) {
+            let resp = rx.recv().unwrap();
+            let (truth, _) = nn_brute_force::<Squared>(&q.values, &train);
+            assert_eq!(resp.result.distance, truth.distance);
+        }
+        let stats = router.shutdown();
+        assert_eq!(stats.served, ds.test.len());
+        // Every query is attributed to exactly one path.
+        assert_eq!(stats.scalar + stats.batched, stats.served);
     }
 
     #[test]

@@ -7,7 +7,8 @@
 //!
 //! One thread per connection feeds the shared router, whose dispatch loop
 //! batches across connections — concurrent clients automatically share
-//! XLA prefilter executions.
+//! batched prefilter executions on whichever
+//! [`crate::runtime::LbBackend`] the engine carries.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};

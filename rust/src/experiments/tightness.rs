@@ -7,6 +7,7 @@
 //! every pairwise scatter (and the win counts quoted in the text) follows.
 
 use crate::bounds::BoundKind;
+use crate::coordinator::WorkerPool;
 use crate::data::Dataset;
 use crate::delta::Delta;
 use crate::metrics::Table;
@@ -60,21 +61,30 @@ impl TightnessResult {
 
 /// Run the tightness experiment over `datasets` (already filtered to
 /// recommended-window ≥ 1 by the caller, matching §6.1).
+///
+/// Dataset-parallel over a [`WorkerPool`]; each worker keeps one DTW
+/// cache for its share of the datasets, so the denominator buffer is
+/// allocated once per thread instead of once per dataset. Results are
+/// independent per dataset and returned in input order, so the output is
+/// identical to the sequential run.
 pub fn tightness_experiment<D: Delta>(
     datasets: &[&Dataset],
     bounds: &[BoundKind],
 ) -> TightnessResult {
-    let mut rows = Vec::with_capacity(datasets.len());
-    for ds in datasets {
+    let pool = WorkerPool::auto();
+    let rows = pool.map_init(datasets.to_vec(), Vec::new, |cache, ds| {
+        // The cache keys on nothing but its length — clear it between
+        // datasets (capacity is retained, which is the point of the
+        // per-worker state).
+        cache.clear();
         let train = PreparedTrainSet::from_dataset(ds, ds.window);
-        let mut cache = Vec::new();
         let vals: Vec<f64> = bounds
             .iter()
-            .map(|&b| dataset_tightness::<D>(ds, &train, b, &mut cache).mean)
+            .map(|&b| dataset_tightness::<D>(ds, &train, b, cache).mean)
             .collect();
         log::info!("tightness {}: done ({} bounds)", ds.name, bounds.len());
-        rows.push((ds.name.clone(), ds.window, vals));
-    }
+        (ds.name.clone(), ds.window, vals)
+    });
     TightnessResult { bounds: bounds.to_vec(), rows }
 }
 

@@ -22,9 +22,12 @@
 //!   redistributable; see `DESIGN.md` §4).
 //! * **A serving layer** ([`coordinator`]): a std-thread worker pool, query
 //!   router and dynamic batcher exposing NN search as a service.
-//! * **A PJRT runtime** ([`runtime`]): loads AOT-compiled XLA artifacts
-//!   (built once from JAX + Pallas under `python/`) and executes batched
-//!   lower-bound prefilters from Rust — Python is never on the query path.
+//! * **Batched screening backends** ([`runtime`]): the pluggable
+//!   [`runtime::LbBackend`] abstraction over the batched `LB_KEOGH`
+//!   prefilter — a cache-blocked, early-abandoning pure-Rust default
+//!   ([`runtime::NativeBatchLb`]), and, behind the `pjrt` cargo feature,
+//!   a PJRT backend executing AOT-compiled XLA artifacts (built once from
+//!   JAX + Pallas under `python/`) — Python is never on the query path.
 //! * **Experiment drivers** ([`experiments`]): one per table/figure of the
 //!   paper's evaluation section, shared by `benches/` and the CLI.
 //!

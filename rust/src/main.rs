@@ -6,8 +6,9 @@
 //! * `nn`          — §6.2 NN timing (Figures 19–28).
 //! * `sweep`       — §6.3 window sweep (Tables 1–3, Figures 29–30).
 //! * `ablation`    — §7 left/right-path ablation (Figures 31–34).
-//! * `serve`       — start the NN search server (router + PJRT batcher).
-//! * `info`        — runtime/platform/artifact report.
+//! * `serve`       — start the NN search server (router + batched
+//!   prefilter; `--backend native|pjrt|none`).
+//! * `info`        — build/backend/artifact report.
 //!
 //! Run `dtw-bounds <cmd> --help-args` to see each command's options.
 
@@ -25,7 +26,7 @@ use dtw_bounds::experiments::{
     self, nn_timing::TimedBound, tightness_experiment, window_sweep, with_recommended_window,
 };
 use dtw_bounds::metrics::format_duration;
-use dtw_bounds::runtime::{default_artifacts_dir, read_manifest, XlaRuntime};
+use dtw_bounds::runtime::{default_artifacts_dir, read_manifest, BackendKind};
 use dtw_bounds::search::classify::SearchMode;
 
 fn main() {
@@ -253,29 +254,32 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let w = ds.window.max(1);
     let bound = BoundKind::parse(&args.str_or("bound", "webb")).context("bad --bound")?;
     let max_batch = args.parse_or::<usize>("max-batch", 16);
-    let want_batch = !args.flag("no-batch");
+    // Validate --backend even when --no-batch overrides it, so typos
+    // never slip through silently.
+    let spelled = args.str_or("backend", "native");
+    let mut backend = BackendKind::parse(&spelled).with_context(|| {
+        format!("--backend: expected one of {}, got {spelled:?}", BackendKind::CHOICES.join("|"))
+    })?;
+    if args.flag("no-batch") {
+        // Back-compat alias for `--backend none`.
+        if backend != BackendKind::None && args.get("backend").is_some() {
+            eprintln!("--no-batch overrides --backend {backend}; serving scalar only");
+        }
+        backend = BackendKind::None;
+    }
 
-    // PJRT handles are not Send: the engine (and its XLA client) are
-    // constructed inside the router's dispatch thread.
+    // Backend handles (PJRT in particular) are not Send: the engine and
+    // its backend are constructed inside the router's dispatch thread.
     let ds_owned = ds.clone();
     let factory = move || {
         let mut engine = NnEngine::new(&ds_owned, w, bound);
-        let artifacts = default_artifacts_dir();
-        if want_batch && artifacts.join("manifest.tsv").exists() {
-            match XlaRuntime::cpu() {
-                Ok(rt) => {
-                    match engine.attach_batch_lb(&rt, &artifacts, max_batch) {
-                        Ok(()) => eprintln!("batch prefilter: attached"),
-                        Err(e) => eprintln!("batch prefilter: unavailable ({e:#})"),
-                    }
-                    // The client must outlive executions; it lives as long
-                    // as the dispatch thread (whole process).
-                    std::mem::forget(rt);
-                }
-                Err(e) => eprintln!("PJRT unavailable ({e:#}); scalar only"),
+        match backend {
+            BackendKind::None => eprintln!("batch prefilter: disabled (scalar per query)"),
+            BackendKind::Native => {
+                engine.attach_native();
+                eprintln!("batch prefilter: native");
             }
-        } else {
-            eprintln!("batch prefilter: no artifacts (run `make artifacts`); scalar only");
+            BackendKind::Pjrt => attach_pjrt(&mut engine, max_batch),
         }
         engine
     };
@@ -287,7 +291,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .unwrap_or_else(|| args.str_or("addr", "127.0.0.1:7878"));
     let server = dtw_bounds::coordinator::server::Server::spawn(&addr, router)?;
     println!(
-        "serving dataset {} (l={}, n={}, w={w}, bound={bound}) on {}",
+        "serving dataset {} (l={}, n={}, w={w}, bound={bound}, backend={backend}) on {}",
         ds.name,
         ds.series_len(),
         ds.train.len(),
@@ -299,9 +303,47 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
 }
 
+/// Attach the PJRT backend (feature `pjrt`): load the best-fitting AOT
+/// artifact and hand the engine the compiled executable.
+#[cfg(feature = "pjrt")]
+fn attach_pjrt(engine: &mut NnEngine, max_batch: usize) {
+    let artifacts = default_artifacts_dir();
+    if !artifacts.join("manifest.tsv").exists() {
+        eprintln!("batch prefilter: no artifacts (run `make artifacts`); scalar only");
+        return;
+    }
+    match dtw_bounds::runtime::XlaRuntime::cpu() {
+        Ok(rt) => {
+            match engine.attach_batch_lb(&rt, &artifacts, max_batch) {
+                Ok(()) => eprintln!("batch prefilter: pjrt"),
+                Err(e) => eprintln!("batch prefilter: unavailable ({e:#})"),
+            }
+            // The client must outlive executions; it lives as long as the
+            // dispatch thread (whole process).
+            std::mem::forget(rt);
+        }
+        Err(e) => eprintln!("PJRT unavailable ({e:#}); scalar only"),
+    }
+}
+
+/// Without the feature the PJRT backend cannot exist; fall back loudly.
+#[cfg(not(feature = "pjrt"))]
+fn attach_pjrt(_engine: &mut NnEngine, _max_batch: usize) {
+    eprintln!(
+        "batch prefilter: pjrt requested but this build lacks the `pjrt` feature \
+         (rebuild with --features pjrt); scalar only"
+    );
+}
+
 fn cmd_info() -> Result<()> {
     println!("dtw-bounds {}", dtw_bounds::VERSION);
-    match XlaRuntime::cpu() {
+    if cfg!(feature = "pjrt") {
+        println!("backends: native (default), pjrt");
+    } else {
+        println!("backends: native (default); build with --features pjrt for the XLA backend");
+    }
+    #[cfg(feature = "pjrt")]
+    match dtw_bounds::runtime::XlaRuntime::cpu() {
         Ok(rt) => println!("PJRT: ok, platform = {}", rt.platform()),
         Err(e) => println!("PJRT: unavailable ({e:#})"),
     }

@@ -1,0 +1,188 @@
+//! The [`LbBackend`] abstraction — *one* interface for every batched
+//! `LB_KEOGH` screening implementation (pure Rust, PJRT/XLA, and future
+//! GPU or sharded backends plug in here).
+//!
+//! Contract, honoured by every implementation:
+//!
+//! 1. **Prepare once** — candidate envelopes arrive as
+//!    [`PreparedSeries`], computed once per training set (the paper's
+//!    experimental protocol: envelope preparation is off the query path).
+//! 2. **Bound matrix** — [`LbBackend::compute`] returns `out[q][t]` with
+//!    `out[q][t] ≤ DTW_w(queries[q], train[t])` for δ = squared
+//!    difference. An entry may be *partial* (early-abandoned) once it
+//!    exceeds `cutoffs[q]`: a partial sum of non-negative allowances is
+//!    still a valid lower bound, so downstream search stays exact.
+//! 3. **Rank** — [`LbBackend::rank`] argsorts each query's row ascending:
+//!    the candidate visiting order of the paper's Algorithm 4.
+
+use crate::bounds::PreparedSeries;
+
+/// Result of [`LbBackend::rank`]: the bound matrix plus, per query, the
+/// candidate indices in ascending-bound order.
+#[derive(Debug, Clone, Default)]
+pub struct Ranking {
+    /// `bounds[q][t]`: `LB_KEOGH` of query `q` vs candidate `t`
+    /// (possibly a partial, early-abandoned sum — still a lower bound).
+    pub bounds: Vec<Vec<f64>>,
+    /// `order[q]`: candidate indices sorted by ascending `bounds[q]`.
+    pub order: Vec<Vec<usize>>,
+}
+
+/// A batched `LB_KEOGH` screening backend.
+///
+/// Backends are owned by one engine and called from one thread (PJRT
+/// handles are not `Send`, so the trait deliberately does not require
+/// it); the engine itself lives inside the router's dispatch thread.
+pub trait LbBackend {
+    /// Short name for logs and the CLI (`native`, `pjrt`, …).
+    fn name(&self) -> &'static str;
+
+    /// True when the backend can score `batch` queries against `rows`
+    /// candidates of series length `len`. Fixed-shape backends (AOT
+    /// artifacts) reject workloads larger than their compiled shape.
+    fn supports(&self, batch: usize, rows: usize, len: usize) -> bool;
+
+    /// Whether [`LbBackend::compute`] honours per-query `cutoffs` (row
+    /// early-abandoning). Branch-free fused backends return `false`, and
+    /// the engine then skips paying for seed DTWs that would buy
+    /// nothing. Defaults to `true`.
+    fn uses_cutoffs(&self) -> bool {
+        true
+    }
+
+    /// Compute the bound matrix `out[q][t] = LB_KEOGH(queries[q],
+    /// train[t])` under the squared-difference δ.
+    ///
+    /// `cutoffs[q]` is the per-query best-so-far DTW distance
+    /// (`f64::INFINITY` disables abandoning); backends may return partial
+    /// sums above it. All series must share one length.
+    fn compute(
+        &mut self,
+        queries: &[&[f64]],
+        train: &[PreparedSeries],
+        cutoffs: &[f64],
+    ) -> anyhow::Result<Vec<Vec<f64>>>;
+
+    /// Compute the matrix, then argsort each query's row ascending — the
+    /// visiting order of Algorithm 4. Provided for all backends; the
+    /// engine's batched path consumes this (the per-query walk happens in
+    /// `search::nn::nn_sorted_precomputed`).
+    fn rank(
+        &mut self,
+        queries: &[&[f64]],
+        train: &[PreparedSeries],
+        cutoffs: &[f64],
+    ) -> anyhow::Result<Ranking> {
+        let bounds = self.compute(queries, train, cutoffs)?;
+        let order = bounds
+            .iter()
+            .map(|row| {
+                let mut idx: Vec<usize> = (0..row.len()).collect();
+                idx.sort_unstable_by(|&a, &b| {
+                    row[a].partial_cmp(&row[b]).expect("bounds are never NaN")
+                });
+                idx
+            })
+            .collect();
+        Ok(Ranking { bounds, order })
+    }
+}
+
+/// Which screening backend the CLI / server should attach.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BackendKind {
+    /// No batched screening — scalar Algorithm 4 per query.
+    None,
+    /// [`super::NativeBatchLb`]: the default, dependency-free pure-Rust
+    /// backend.
+    Native,
+    /// The PJRT/XLA artifact backend (requires the `pjrt` cargo
+    /// feature and AOT artifacts from `python/compile/aot.py`).
+    Pjrt,
+}
+
+impl BackendKind {
+    /// CLI spellings accepted by [`BackendKind::parse`].
+    pub const CHOICES: &'static [&'static str] = &["native", "pjrt", "none"];
+
+    /// Parse a CLI spelling (case-insensitive; accepts a few aliases).
+    pub fn parse(s: &str) -> Option<BackendKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "native" | "rust" => Some(BackendKind::Native),
+            "pjrt" | "xla" => Some(BackendKind::Pjrt),
+            "none" | "scalar" | "off" => Some(BackendKind::None),
+            _ => None,
+        }
+    }
+
+    /// Canonical name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::None => "none",
+            BackendKind::Native => "native",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+}
+
+impl std::fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for (s, k) in [
+            ("native", BackendKind::Native),
+            ("RUST", BackendKind::Native),
+            ("pjrt", BackendKind::Pjrt),
+            ("xla", BackendKind::Pjrt),
+            ("none", BackendKind::None),
+            ("off", BackendKind::None),
+        ] {
+            assert_eq!(BackendKind::parse(s), Some(k), "{s}");
+            if BackendKind::parse(k.name()) != Some(k) {
+                panic!("canonical name {} does not re-parse", k.name());
+            }
+        }
+        assert_eq!(BackendKind::parse("tpu"), None);
+        for c in BackendKind::CHOICES {
+            assert!(BackendKind::parse(c).is_some(), "{c}");
+        }
+    }
+
+    /// A backend that returns a fixed matrix — exercises the provided
+    /// `rank` argsort.
+    struct Fixed(Vec<Vec<f64>>);
+
+    impl LbBackend for Fixed {
+        fn name(&self) -> &'static str {
+            "fixed"
+        }
+        fn supports(&self, _b: usize, _n: usize, _l: usize) -> bool {
+            true
+        }
+        fn compute(
+            &mut self,
+            _queries: &[&[f64]],
+            _train: &[PreparedSeries],
+            _cutoffs: &[f64],
+        ) -> anyhow::Result<Vec<Vec<f64>>> {
+            Ok(self.0.clone())
+        }
+    }
+
+    #[test]
+    fn default_rank_sorts_ascending() {
+        let mut be = Fixed(vec![vec![3.0, 1.0, 2.0], vec![0.0, 5.0, 4.0]]);
+        assert!(be.uses_cutoffs(), "cutoff support is the default");
+        let r = be.rank(&[], &[], &[]).unwrap();
+        assert_eq!(r.order, vec![vec![1, 2, 0], vec![0, 2, 1]]);
+        assert_eq!(r.bounds[0][r.order[0][0]], 1.0);
+    }
+}

@@ -25,8 +25,10 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use super::backend::LbBackend;
 use super::client::{LoadedComputation, XlaRuntime};
 use super::{read_manifest, ManifestEntry};
+use crate::bounds::PreparedSeries;
 
 const BIG: f32 = 1e30;
 
@@ -85,7 +87,7 @@ impl BatchLb {
     ///
     /// All series must share one length ≤ compiled `len`; `queries` and
     /// the training envelopes are padded up to the compiled shape.
-    pub fn compute(
+    pub fn compute_matrix(
         &mut self,
         queries: &[&[f64]],
         train_lo: &[&[f64]],
@@ -142,6 +144,37 @@ impl BatchLb {
     }
 }
 
+impl LbBackend for BatchLb {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn supports(&self, batch: usize, rows: usize, len: usize) -> bool {
+        let (cb, cn, cl) = self.shape;
+        batch <= cb && rows <= cn && len <= cl
+    }
+
+    /// The XLA kernel is branch-free: cutoffs cannot shorten rows, so
+    /// the engine should not pay to compute them.
+    fn uses_cutoffs(&self) -> bool {
+        false
+    }
+
+    /// One XLA execution for the whole batch. The kernel is branch-free,
+    /// so `cutoffs` cannot shorten rows — they are accepted (trait
+    /// contract) and ignored.
+    fn compute(
+        &mut self,
+        queries: &[&[f64]],
+        train: &[PreparedSeries],
+        _cutoffs: &[f64],
+    ) -> Result<Vec<Vec<f64>>> {
+        let lo_refs: Vec<&[f64]> = train.iter().map(|t| t.lo.as_slice()).collect();
+        let up_refs: Vec<&[f64]> = train.iter().map(|t| t.up.as_slice()).collect();
+        self.compute_matrix(queries, &lo_refs, &up_refs)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -159,7 +192,13 @@ mod tests {
             eprintln!("skipping: no artifacts (run `make artifacts`)");
             return;
         }
-        let rt = XlaRuntime::cpu().unwrap();
+        let rt = match XlaRuntime::cpu() {
+            Ok(rt) => rt,
+            Err(e) => {
+                eprintln!("skipping: PJRT unavailable ({e:#})");
+                return;
+            }
+        };
         let w = 3usize;
         let l = 64usize;
         let mut rng = Rng::seeded(4242);
@@ -172,7 +211,7 @@ mod tests {
         let q_refs: Vec<&[f64]> = queries.iter().map(|v| v.as_slice()).collect();
         let lo_refs: Vec<&[f64]> = train.iter().map(|t| t.lo.as_slice()).collect();
         let up_refs: Vec<&[f64]> = train.iter().map(|t| t.up.as_slice()).collect();
-        let m = blb.compute(&q_refs, &lo_refs, &up_refs).unwrap();
+        let m = blb.compute_matrix(&q_refs, &lo_refs, &up_refs).unwrap();
 
         for (qi, q) in queries.iter().enumerate() {
             for (ti, t) in train.iter().enumerate() {

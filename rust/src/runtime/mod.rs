@@ -1,21 +1,40 @@
-//! PJRT runtime — loads the AOT-compiled XLA artifacts produced by the
-//! Python build layer (`python/compile/aot.py`) and executes them from
-//! Rust. Python never runs on the query path.
+//! Batched lower-bound runtime — the pluggable screening backends.
 //!
-//! * [`client`] — thin wrapper over the `xla` crate: CPU `PjRtClient`,
-//!   HLO-**text** loading (`xla_extension` 0.5.1 rejects jax ≥ 0.5
-//!   serialized protos; text round-trips — see `/opt/xla-example`),
-//!   compile-once / execute-many.
-//! * [`batch_lb`] — the batched `LB_KEOGH` prefilter: one XLA execution
-//!   scores a whole query-batch against the whole training matrix
-//!   (envelopes precomputed), which the coordinator uses to rank
-//!   candidates before running exact DTW on survivors — the batch
-//!   analogue of the paper's sorted search (Algorithm 4).
+//! The hot path of the serving stack is the *batched prefilter*: given a
+//! query batch `Q[b,ℓ]` and a training set's envelopes, compute the full
+//! bound matrix `out[q, t] = LB_KEOGH(Q_q, T_t)`, then rank candidates
+//! per query so the engine runs exact DTW on survivors only — the batch
+//! analogue of the paper's sorted search (Algorithm 4).
+//!
+//! * [`backend`] — the [`LbBackend`] trait every screening backend
+//!   implements, plus [`BackendKind`] for CLI selection. This is the seam
+//!   future scaling work (sharding, GPU, multi-node) plugs into.
+//! * [`native`] — [`NativeBatchLb`]: the **default** backend. Pure Rust,
+//!   dependency-free, cache-blocked over candidates, early-abandoning
+//!   against per-query cutoffs.
+//! * [`client`] / [`batch_lb`] (cargo feature `pjrt`) — the PJRT/XLA
+//!   backend: loads AOT-compiled artifacts produced by the Python build
+//!   layer (`python/compile/aot.py`; the hot inner loop is the Pallas
+//!   kernel) and scores a whole batch in one XLA execution. Python is
+//!   never on the query path.
+//!
+//! Artifact manifests ([`read_manifest`]) are parsed feature-independently
+//! so `dtw-bounds info` can report on-disk artifacts in any build.
 
+pub mod backend;
+pub mod native;
+
+#[cfg(feature = "pjrt")]
 pub mod batch_lb;
+#[cfg(feature = "pjrt")]
 pub mod client;
 
+pub use backend::{BackendKind, LbBackend, Ranking};
+pub use native::NativeBatchLb;
+
+#[cfg(feature = "pjrt")]
 pub use batch_lb::BatchLb;
+#[cfg(feature = "pjrt")]
 pub use client::{LoadedComputation, XlaRuntime};
 
 use std::path::{Path, PathBuf};

@@ -1,0 +1,204 @@
+//! [`NativeBatchLb`] — the default pure-Rust batched `LB_KEOGH` backend.
+//!
+//! Scores a whole query batch against a whole training set with the same
+//! scalar kernel the per-query path uses ([`keogh::lb_keogh`]), so its
+//! values are **bit-identical** to Algorithm 4's screening values. Two
+//! batch-level optimisations on top of the kernel:
+//!
+//! * **Cache blocking over candidates** — candidates are processed in
+//!   blocks of [`NativeBatchLb::block`]; within a block the sweep is
+//!   query-major, so each candidate's envelope pair (`lo`/`up` — the only
+//!   per-pair data the kernel touches) stays cache-resident across every
+//!   query in the batch instead of being streamed `batch` times.
+//! * **Early-abandon rows** — with a finite `cutoffs[q]` (the engine
+//!   seeds it with the query's DTW distance to its first candidate), a
+//!   row's accumulation stops as soon as it exceeds the cutoff. The
+//!   partial sum is still a valid lower bound, so sorted search stays
+//!   exact; candidates that would be pruned anyway never pay the full
+//!   `O(ℓ)` scan.
+
+use anyhow::{ensure, Result};
+
+use crate::bounds::{keogh, PreparedSeries};
+use crate::delta::Squared;
+
+use super::backend::LbBackend;
+
+/// Default candidates per cache block: a block's envelopes cost
+/// `2 · ℓ · 8 · block` bytes, so 16 keeps even ℓ = 512 within 128 KiB —
+/// L2-resident on any current core.
+const DEFAULT_BLOCK: usize = 16;
+
+/// The pure-Rust batched `LB_KEOGH` backend (always available; no
+/// artifacts, no external runtime).
+#[derive(Debug, Clone)]
+pub struct NativeBatchLb {
+    block: usize,
+}
+
+impl NativeBatchLb {
+    /// Backend with the default block size.
+    pub fn new() -> NativeBatchLb {
+        NativeBatchLb { block: DEFAULT_BLOCK }
+    }
+
+    /// Backend with an explicit candidate block size (≥ 1) — a
+    /// benchmarking knob.
+    pub fn with_block(block: usize) -> NativeBatchLb {
+        NativeBatchLb { block: block.max(1) }
+    }
+
+    /// The candidate block size.
+    pub fn block(&self) -> usize {
+        self.block
+    }
+}
+
+impl Default for NativeBatchLb {
+    fn default() -> Self {
+        NativeBatchLb::new()
+    }
+}
+
+impl LbBackend for NativeBatchLb {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn supports(&self, batch: usize, rows: usize, len: usize) -> bool {
+        // No compiled shape: any non-degenerate workload fits.
+        batch > 0 && rows > 0 && len > 0
+    }
+
+    fn compute(
+        &mut self,
+        queries: &[&[f64]],
+        train: &[PreparedSeries],
+        cutoffs: &[f64],
+    ) -> Result<Vec<Vec<f64>>> {
+        if queries.is_empty() || train.is_empty() {
+            return Ok(vec![Vec::new(); queries.len()]);
+        }
+        let l = queries[0].len();
+        ensure!(queries.iter().all(|q| q.len() == l), "queries must share one length");
+        ensure!(
+            train.iter().all(|t| t.len() == l),
+            "training series must match the query length {l}"
+        );
+        ensure!(cutoffs.len() == queries.len(), "one cutoff per query");
+
+        let mut out = vec![vec![0.0; train.len()]; queries.len()];
+        for (bi, block) in train.chunks(self.block).enumerate() {
+            let base = bi * self.block;
+            for (qi, q) in queries.iter().enumerate() {
+                let cut = cutoffs[qi];
+                let row = &mut out[qi];
+                for (j, t) in block.iter().enumerate() {
+                    row[base + j] = keogh::lb_keogh::<Squared>(q, t, cut);
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+
+    fn workload(
+        nq: usize,
+        nt: usize,
+        l: usize,
+        w: usize,
+        seed: u64,
+    ) -> (Vec<Vec<f64>>, Vec<PreparedSeries>) {
+        let mut rng = Rng::seeded(seed);
+        let queries: Vec<Vec<f64>> =
+            (0..nq).map(|_| (0..l).map(|_| rng.normal()).collect()).collect();
+        let train: Vec<PreparedSeries> = (0..nt)
+            .map(|_| PreparedSeries::prepare((0..l).map(|_| rng.normal()).collect(), w))
+            .collect();
+        (queries, train)
+    }
+
+    #[test]
+    fn matches_scalar_kernel_exactly() {
+        let (queries, train) = workload(5, 37, 64, 3, 0xBEEF);
+        let q_refs: Vec<&[f64]> = queries.iter().map(|v| v.as_slice()).collect();
+        let cutoffs = vec![f64::INFINITY; queries.len()];
+        let mut be = NativeBatchLb::with_block(4); // force several blocks
+        let m = be.compute(&q_refs, &train, &cutoffs).unwrap();
+        for (qi, q) in queries.iter().enumerate() {
+            for (ti, t) in train.iter().enumerate() {
+                let scalar = keogh::lb_keogh::<Squared>(q, t, f64::INFINITY);
+                assert_eq!(m[qi][ti], scalar, "q{qi} t{ti}");
+            }
+        }
+    }
+
+    #[test]
+    fn abandoned_entries_exceed_cutoff_but_not_full() {
+        let (queries, train) = workload(3, 20, 80, 4, 0xFADE);
+        let q_refs: Vec<&[f64]> = queries.iter().map(|v| v.as_slice()).collect();
+        let inf = vec![f64::INFINITY; queries.len()];
+        let mut be = NativeBatchLb::new();
+        let full = be.compute(&q_refs, &train, &inf).unwrap();
+        // Cut each query at half its median bound: plenty of abandons.
+        let cutoffs: Vec<f64> = full
+            .iter()
+            .map(|row| {
+                let mut v = row.clone();
+                v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                v[v.len() / 2] * 0.5
+            })
+            .collect();
+        let part = be.compute(&q_refs, &train, &cutoffs).unwrap();
+        for qi in 0..queries.len() {
+            for ti in 0..train.len() {
+                let (p, f) = (part[qi][ti], full[qi][ti]);
+                assert!(p <= f + 1e-12, "partial {p} above full {f}");
+                if p < f {
+                    // Abandoned: must have crossed the cutoff first.
+                    assert!(p > cutoffs[qi], "q{qi} t{ti}: {p} <= cutoff {}", cutoffs[qi]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn block_size_does_not_change_results() {
+        let (queries, train) = workload(4, 33, 48, 2, 0xB10C);
+        let q_refs: Vec<&[f64]> = queries.iter().map(|v| v.as_slice()).collect();
+        let cutoffs = vec![f64::INFINITY; queries.len()];
+        let baseline = NativeBatchLb::with_block(1).compute(&q_refs, &train, &cutoffs).unwrap();
+        for block in [2, 7, 16, 64] {
+            let m = NativeBatchLb::with_block(block).compute(&q_refs, &train, &cutoffs).unwrap();
+            assert_eq!(m, baseline, "block={block}");
+        }
+    }
+
+    #[test]
+    fn rank_orders_bounds_ascending() {
+        let (queries, train) = workload(2, 25, 32, 2, 0x04DE4);
+        let q_refs: Vec<&[f64]> = queries.iter().map(|v| v.as_slice()).collect();
+        let cutoffs = vec![f64::INFINITY; queries.len()];
+        let mut be = NativeBatchLb::new();
+        let r = be.rank(&q_refs, &train, &cutoffs).unwrap();
+        for (row, order) in r.bounds.iter().zip(r.order.iter()) {
+            for pair in order.windows(2) {
+                assert!(row[pair[0]] <= row[pair[1]]);
+            }
+        }
+    }
+
+    #[test]
+    fn length_mismatch_is_an_error() {
+        let (queries, mut train) = workload(2, 3, 16, 1, 0xE44);
+        train.push(PreparedSeries::prepare(vec![0.0; 17], 1));
+        let q_refs: Vec<&[f64]> = queries.iter().map(|v| v.as_slice()).collect();
+        let mut be = NativeBatchLb::new();
+        assert!(be.compute(&q_refs, &train, &[f64::INFINITY; 2]).is_err());
+    }
+}

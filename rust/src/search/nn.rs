@@ -13,6 +13,11 @@
 //!   in ascending bound order, and search stops when the next bound
 //!   exceeds the best distance — the regime where `LB_WEBB`'s low cost
 //!   wins (Figures 21–22, 27–30, Tables 1–3).
+//! * **Sorted, precomputed** ([`nn_sorted_precomputed`]): the walk of
+//!   Algorithm 4 alone, fed bound columns a batched
+//!   [`crate::runtime::LbBackend`] already computed for a whole query
+//!   batch. Any valid (possibly partial, early-abandoned) lower bounds
+//!   keep the search exact.
 
 use crate::bounds::{BoundKind, PreparedSeries, Scratch};
 use crate::delta::Delta;
@@ -147,6 +152,57 @@ pub fn nn_sorted<D: Delta>(
     (best, stats)
 }
 
+/// Algorithm 4's walk over **precomputed** bounds.
+///
+/// `bounds[t]` must be a valid lower bound of `DTW_w(query, train[t])`
+/// — full or partial (an early-abandoned sum of non-negative allowances
+/// is still a lower bound, it merely sorts pessimistically) — and
+/// `order` the candidate indices in ascending-bound order. This is the
+/// per-query half of the batched screening path: a
+/// [`crate::runtime::LbBackend`] computes the bound matrix and the
+/// ranking for the whole batch (`LbBackend::rank`), then each query
+/// walks its own columns here.
+///
+/// `initial` optionally seeds the best-so-far with a candidate whose
+/// exact DTW distance is already known (the engine pays one DTW per query
+/// to give the backend a real abandon cutoff); that candidate is skipped
+/// in the walk.
+pub fn nn_sorted_precomputed<D: Delta>(
+    query: &[f64],
+    train: &PreparedTrainSet,
+    bounds: &[f64],
+    order: &[usize],
+    initial: Option<NnResult>,
+) -> (NnResult, SearchStats) {
+    let w = train.w;
+    let n = train.len();
+    debug_assert_eq!(bounds.len(), n, "one bound per training series");
+    debug_assert_eq!(order.len(), n, "order must cover every training series");
+    let mut stats = SearchStats::default();
+
+    let mut best =
+        initial.unwrap_or(NnResult { nn_index: usize::MAX, distance: f64::INFINITY, label: 0 });
+    let skip = initial.map(|r| r.nn_index);
+    for (visited, &ti) in order.iter().enumerate() {
+        if bounds[ti] >= best.distance {
+            // Everything after this in sorted order is pruned too.
+            stats.pruned += n - visited;
+            break;
+        }
+        if Some(ti) == skip {
+            continue;
+        }
+        stats.dtw_calls += 1;
+        let d = dtw_ea::<D>(query, &train.series[ti].values, w, best.distance);
+        if d.is_infinite() {
+            stats.dtw_abandoned += 1;
+        } else if d < best.distance {
+            best = NnResult { nn_index: ti, distance: d, label: train.labels[ti] };
+        }
+    }
+    (best, stats)
+}
+
 /// Reference brute-force search (no bounds) — ground truth for tests and
 /// the "no lower bound" baseline.
 pub fn nn_brute_force<D: Delta>(
@@ -248,6 +304,55 @@ mod tests {
             webb_pruned >= keogh_pruned,
             "webb pruned {webb_pruned} < keogh {keogh_pruned}"
         );
+    }
+
+    fn argsort(bounds: &[f64]) -> Vec<usize> {
+        let mut order: Vec<usize> = (0..bounds.len()).collect();
+        order.sort_unstable_by(|&a, &b| bounds[a].partial_cmp(&bounds[b]).unwrap());
+        order
+    }
+
+    #[test]
+    fn precomputed_walk_matches_brute_force() {
+        let (train, queries, _) = setup();
+        let mut scratch = Scratch::default();
+        for q in &queries {
+            let (truth, _) = nn_brute_force::<Squared>(&q.values, &train);
+            // Exact Keogh bounds, as a batched backend would deliver them.
+            let bounds: Vec<f64> = train
+                .series
+                .iter()
+                .map(|t| {
+                    BoundKind::Keogh.compute::<Squared>(q, t, train.w, f64::INFINITY, &mut scratch)
+                })
+                .collect();
+            let (r, _) = nn_sorted_precomputed::<Squared>(
+                &q.values,
+                &train,
+                &bounds,
+                &argsort(&bounds),
+                None,
+            );
+            assert_eq!(r.distance, truth.distance, "unseeded walk");
+
+            // Seeded variant: candidate 0's exact distance as the initial
+            // best, and *partial* bounds abandoned against it.
+            let seed = dtw_ea::<Squared>(&q.values, &train.series[0].values, train.w, f64::INFINITY);
+            let partial: Vec<f64> = train
+                .series
+                .iter()
+                .map(|t| BoundKind::Keogh.compute::<Squared>(q, t, train.w, seed, &mut scratch))
+                .collect();
+            let initial = NnResult { nn_index: 0, distance: seed, label: train.labels[0] };
+            let (r2, _) = nn_sorted_precomputed::<Squared>(
+                &q.values,
+                &train,
+                &partial,
+                &argsort(&partial),
+                Some(initial),
+            );
+            assert_eq!(r2.distance, truth.distance, "seeded walk with partial bounds");
+        }
     }
 
     #[test]

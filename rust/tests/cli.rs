@@ -16,6 +16,25 @@ fn info_runs() {
 }
 
 #[test]
+fn info_lists_screening_backends() {
+    let out = bin().arg("info").output().expect("spawn");
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("backends: native (default)"), "{text}");
+}
+
+#[test]
+fn serve_rejects_unknown_backend() {
+    let out = bin()
+        .args(["serve", "--scale", "tiny", "--backend", "tpu", "127.0.0.1:0"])
+        .output()
+        .expect("spawn");
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("--backend"), "{err}");
+}
+
+#[test]
 fn unknown_command_fails_with_message() {
     let out = bin().arg("frobnicate").output().expect("spawn");
     assert!(!out.status.success());

@@ -235,6 +235,39 @@ fn keogh_shrinks_as_window_grows_and_all_bound_dtw_at_each_w() {
 }
 
 #[test]
+fn every_bound_holds_across_window_grid() {
+    // Every `BoundKind::ALL` entry — including the §8 cascade variants
+    // `Cascade`, `KeoghRev` and `UcrCascade` — must never exceed
+    // `dtw::<Squared>` on randomized pairs, re-checked at each of several
+    // explicit windows (the random-`w` suites above cannot guarantee
+    // coverage of any particular window for any particular pair).
+    let windows: &[usize] = &[0, 1, 2, 3, 5, 8, 13, 21, 34];
+    for &probe in &[BoundKind::Cascade, BoundKind::KeoghRev, BoundKind::UcrCascade] {
+        assert!(BoundKind::ALL.contains(&probe), "{probe} missing from BoundKind::ALL");
+    }
+    let mut rng = Rng::seeded(0x5EED);
+    let mut scratch = Scratch::default();
+    for _ in 0..150 {
+        let n = rng.int_range(4, 100);
+        let (a, b) = gen_pair(&mut rng, n);
+        for &w in windows {
+            if w > n {
+                break;
+            }
+            let q = PreparedSeries::prepare(a.clone(), w);
+            let t = PreparedSeries::prepare(b.clone(), w);
+            let d = dtw::<Squared>(&a, &b, w);
+            let tol = 1e-9 * d.abs().max(1.0);
+            for &bound in BoundKind::ALL {
+                let lb = bound.compute::<Squared>(&q, &t, w, f64::INFINITY, &mut scratch);
+                assert!(lb <= d + tol, "{bound} w={w} n={n}: lb {lb} > dtw {d}");
+                assert!(lb >= 0.0, "{bound} w={w} n={n}: negative bound {lb}");
+            }
+        }
+    }
+}
+
+#[test]
 fn identical_series_bound_to_zero() {
     let mut rng = Rng::seeded(0x1DE);
     let mut scratch = Scratch::default();

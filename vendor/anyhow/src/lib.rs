@@ -1,0 +1,220 @@
+//! Minimal offline shim of the `anyhow` crate (see `vendor/README.md`).
+//!
+//! Implements the subset of `anyhow`'s API that `dtw-bounds` uses:
+//! [`Error`], [`Result`], the [`Context`] extension trait, and the
+//! [`anyhow!`], [`bail!`] and [`ensure!`] macros. `{e}` prints the
+//! outermost context frame, `{e:#}` the full `outer: ...: root` chain —
+//! matching the real crate's Display behaviour.
+//!
+//! Swap the `[dependencies]` path entry for the real crate when building
+//! with network access; no call sites change.
+
+use std::fmt;
+
+/// A context-carrying error: an ordered chain of frames, outermost first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a single message (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(msg: M) -> Error {
+        Error { chain: vec![msg.to_string()] }
+    }
+
+    /// Prepend a context frame (what [`Context::context`] expands to).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The context frames, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The innermost (root) frame.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(self.chain.first().map(|s| s.as_str()).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.chain.join(": "))
+    }
+}
+
+macro_rules! impl_from {
+    ($($ty:ty),* $(,)?) => {
+        $(
+            impl From<$ty> for Error {
+                fn from(e: $ty) -> Error {
+                    Error::msg(e)
+                }
+            }
+        )*
+    };
+}
+
+impl_from!(
+    std::io::Error,
+    std::fmt::Error,
+    std::num::ParseIntError,
+    std::num::ParseFloatError,
+    std::num::TryFromIntError,
+    std::str::Utf8Error,
+    std::string::FromUtf8Error,
+    std::net::AddrParseError,
+    std::time::SystemTimeError,
+    std::array::TryFromSliceError,
+    std::char::ParseCharError,
+    std::str::ParseBoolError,
+    String,
+    &str,
+);
+
+impl From<Box<dyn std::error::Error + Send + Sync + 'static>> for Error {
+    fn from(e: Box<dyn std::error::Error + Send + Sync + 'static>) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow::Result<T>` — a [`Result`](std::result::Result) defaulting the
+/// error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(...)` / `.with_context(...)` to
+/// `Result` and `Option`.
+pub trait Context<T, E> {
+    /// Wrap the error with a context frame.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+
+    /// Wrap the error with a lazily-evaluated context frame.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T, E> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or a single displayable
+/// expression (mirrors the real crate's two forms).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> Result<(), std::io::Error> {
+        Err(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"))
+    }
+
+    #[test]
+    fn context_chain_formats() {
+        let e = io_err().context("opening manifest").unwrap_err();
+        assert_eq!(format!("{e}"), "opening manifest");
+        assert_eq!(format!("{e:#}"), "opening manifest: gone");
+        assert_eq!(e.root_cause(), "gone");
+    }
+
+    #[test]
+    fn with_context_on_option() {
+        let none: Option<u8> = None;
+        let e = none.with_context(|| format!("missing {}", 7)).unwrap_err();
+        assert_eq!(format!("{e}"), "missing 7");
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn inner() -> Result<u32> {
+            let n: u32 = "12x".parse()?;
+            Ok(n)
+        }
+        assert!(inner().is_err());
+    }
+
+    #[test]
+    fn macros_compose() {
+        fn f(flag: bool) -> Result<u32> {
+            ensure!(flag, "flag was {flag}");
+            if !flag {
+                bail!("unreachable");
+            }
+            Ok(1)
+        }
+        assert_eq!(f(true).unwrap(), 1);
+        assert_eq!(format!("{:#}", f(false).unwrap_err()), "flag was false");
+    }
+
+    #[test]
+    fn context_on_anyhow_result_stacks() {
+        let e: Result<()> = Err(anyhow!("root"));
+        let e = e.context("mid").unwrap_err().context("outer");
+        assert_eq!(format!("{e:#}"), "outer: mid: root");
+    }
+
+    #[test]
+    fn anyhow_macro_forms() {
+        let x = 3;
+        assert_eq!(format!("{}", anyhow!("captured {x}")), "captured 3");
+        assert_eq!(format!("{}", anyhow!("positional {}", 4)), "positional 4");
+        let msg = String::from("from expr");
+        assert_eq!(format!("{}", anyhow!(msg)), "from expr");
+    }
+}

@@ -1,0 +1,246 @@
+//! Minimal offline shim of the `log` facade crate (see
+//! `vendor/README.md`): the five level macros, the [`Log`] trait, and the
+//! global logger/level registry. Behaviour matches the real crate for the
+//! subset used here: records below `max_level()` are dropped before the
+//! logger is consulted, and the logger can be installed exactly once.
+
+use std::fmt;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Verbosity level of a single record.
+#[repr(usize)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Level {
+    /// Unrecoverable problems.
+    Error = 1,
+    /// Suspicious but survivable conditions.
+    Warn = 2,
+    /// High-level progress.
+    Info = 3,
+    /// Developer detail.
+    Debug = 4,
+    /// Extremely verbose tracing.
+    Trace = 5,
+}
+
+impl fmt::Display for Level {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        })
+    }
+}
+
+/// Global verbosity cap; `Off` drops everything.
+#[repr(usize)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum LevelFilter {
+    /// Drop every record.
+    Off = 0,
+    /// `Error` only.
+    Error = 1,
+    /// `Warn` and below.
+    Warn = 2,
+    /// `Info` and below.
+    Info = 3,
+    /// `Debug` and below.
+    Debug = 4,
+    /// Everything.
+    Trace = 5,
+}
+
+impl PartialEq<LevelFilter> for Level {
+    fn eq(&self, other: &LevelFilter) -> bool {
+        (*self as usize) == (*other as usize)
+    }
+}
+
+impl PartialOrd<LevelFilter> for Level {
+    fn partial_cmp(&self, other: &LevelFilter) -> Option<std::cmp::Ordering> {
+        Some((*self as usize).cmp(&(*other as usize)))
+    }
+}
+
+/// Metadata about a record: its level and target module path.
+pub struct Metadata<'a> {
+    level: Level,
+    target: &'a str,
+}
+
+impl<'a> Metadata<'a> {
+    /// The record's level.
+    pub fn level(&self) -> Level {
+        self.level
+    }
+
+    /// The record's target (module path at the macro call site).
+    pub fn target(&self) -> &'a str {
+        self.target
+    }
+}
+
+/// One log record: metadata plus the formatted message.
+pub struct Record<'a> {
+    metadata: Metadata<'a>,
+    args: fmt::Arguments<'a>,
+}
+
+impl<'a> Record<'a> {
+    /// The record's level.
+    pub fn level(&self) -> Level {
+        self.metadata.level
+    }
+
+    /// The record's target module path.
+    pub fn target(&self) -> &'a str {
+        self.metadata.target
+    }
+
+    /// The record's metadata.
+    pub fn metadata(&self) -> &Metadata<'a> {
+        &self.metadata
+    }
+
+    /// The message, ready to pass to a formatting macro.
+    pub fn args(&self) -> &fmt::Arguments<'a> {
+        &self.args
+    }
+}
+
+/// A log sink. Implementations must be thread-safe.
+pub trait Log: Send + Sync {
+    /// Whether a record with this metadata would be logged.
+    fn enabled(&self, metadata: &Metadata) -> bool;
+
+    /// Consume one record.
+    fn log(&self, record: &Record);
+
+    /// Flush buffered output.
+    fn flush(&self);
+}
+
+static MAX_LEVEL: AtomicUsize = AtomicUsize::new(LevelFilter::Off as usize);
+static LOGGER: OnceLock<&'static dyn Log> = OnceLock::new();
+
+/// Returned by [`set_logger`] when a logger is already installed.
+#[derive(Debug)]
+pub struct SetLoggerError(());
+
+impl fmt::Display for SetLoggerError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str("a logger is already installed")
+    }
+}
+
+/// Install the global logger (once per process).
+pub fn set_logger(logger: &'static dyn Log) -> Result<(), SetLoggerError> {
+    LOGGER.set(logger).map_err(|_| SetLoggerError(()))
+}
+
+/// Set the global verbosity cap.
+pub fn set_max_level(filter: LevelFilter) {
+    MAX_LEVEL.store(filter as usize, Ordering::Relaxed);
+}
+
+/// The current global verbosity cap.
+pub fn max_level() -> LevelFilter {
+    match MAX_LEVEL.load(Ordering::Relaxed) {
+        0 => LevelFilter::Off,
+        1 => LevelFilter::Error,
+        2 => LevelFilter::Warn,
+        3 => LevelFilter::Info,
+        4 => LevelFilter::Debug,
+        _ => LevelFilter::Trace,
+    }
+}
+
+#[doc(hidden)]
+pub fn __log(level: Level, target: &str, args: fmt::Arguments<'_>) {
+    if level <= max_level() {
+        if let Some(logger) = LOGGER.get() {
+            let record = Record { metadata: Metadata { level, target }, args };
+            if logger.enabled(&record.metadata) {
+                logger.log(&record);
+            }
+        }
+    }
+}
+
+/// Log at an explicit [`Level`].
+#[macro_export]
+macro_rules! log {
+    ($lvl:expr, $($arg:tt)+) => {
+        $crate::__log($lvl, module_path!(), format_args!($($arg)+))
+    };
+}
+
+/// Log at [`Level::Error`].
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Error, $($arg)+) };
+}
+
+/// Log at [`Level::Warn`].
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Warn, $($arg)+) };
+}
+
+/// Log at [`Level::Info`].
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Info, $($arg)+) };
+}
+
+/// Log at [`Level::Debug`].
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Debug, $($arg)+) };
+}
+
+/// Log at [`Level::Trace`].
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Trace, $($arg)+) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    static HITS: AtomicUsize = AtomicUsize::new(0);
+
+    struct Counter;
+
+    impl Log for Counter {
+        fn enabled(&self, m: &Metadata) -> bool {
+            m.level() <= max_level()
+        }
+        fn log(&self, r: &Record) {
+            let _ = format!("{} {}", r.level(), r.args());
+            HITS.fetch_add(1, Ordering::Relaxed);
+        }
+        fn flush(&self) {}
+    }
+
+    #[test]
+    fn filtering_and_dispatch() {
+        static COUNTER: Counter = Counter;
+        let _ = set_logger(&COUNTER);
+        set_max_level(LevelFilter::Warn);
+        let before = HITS.load(Ordering::Relaxed);
+        warn!("w {}", 1);
+        info!("dropped");
+        error!("e");
+        assert_eq!(HITS.load(Ordering::Relaxed), before + 2);
+        assert!(Level::Warn <= LevelFilter::Warn);
+        assert!(!(Level::Info <= LevelFilter::Warn));
+        assert_eq!(format!("{}", Level::Info), "INFO");
+    }
+}

@@ -1,0 +1,191 @@
+//! Compile-time **stub** of the `xla` crate's PJRT API surface (see
+//! `vendor/README.md`).
+//!
+//! Exists so the `pjrt` cargo feature of `dtw-bounds` type-checks without
+//! the real `xla` crate (which needs crates.io access plus the
+//! `xla_extension` C++ artifacts — neither is available in the offline
+//! build). Every runtime entry point returns [`stub_err`]; callers detect
+//! this at `PjRtClient::cpu()` and fall back to the native backend.
+//!
+//! Mirrors the call shapes of `xla` 0.1.x / `xla_extension` 0.5.1 as used
+//! by `dtw_bounds::runtime::client`.
+
+use anyhow::Result;
+
+fn stub_err<T>(what: &str) -> Result<T> {
+    anyhow::bail!(
+        "xla stub: {what} unavailable (vendor/xla is a compile-time placeholder; \
+         link the real `xla` crate and xla_extension artifacts for PJRT execution)"
+    )
+}
+
+/// PJRT client handle (stub).
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// Create the CPU client — always fails in the stub.
+    pub fn cpu() -> Result<PjRtClient> {
+        stub_err("PJRT CPU client")
+    }
+
+    /// Platform name.
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    /// Number of addressable devices.
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    /// Compile a computation for this client.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        stub_err("compile")
+    }
+}
+
+/// Parsed HLO module (stub).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    /// Parse an HLO text file — always fails in the stub.
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        stub_err("HLO text parsing")
+    }
+}
+
+/// An XLA computation (stub).
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    /// Wrap a parsed HLO module.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// A compiled, loaded executable (stub).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with host inputs — always fails in the stub.
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        stub_err("execute")
+    }
+}
+
+/// A device buffer (stub).
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    /// Copy back to a host literal — always fails in the stub.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        stub_err("buffer transfer")
+    }
+}
+
+/// A host tensor literal (stub).
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    /// Build a rank-1 literal from a host slice.
+    pub fn vec1<T>(_data: &[T]) -> Literal {
+        Literal { _private: () }
+    }
+
+    /// Reshape to the given dimensions.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Ok(Literal { _private: () })
+    }
+
+    /// Destructure a tuple literal — always fails in the stub.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        stub_err("tuple destructuring")
+    }
+
+    /// Copy out as a typed host vector — always fails in the stub.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        stub_err("literal readback")
+    }
+}
+
+/// An array shape (stub).
+pub struct Shape {
+    _private: (),
+}
+
+impl Shape {
+    /// Array shape with element type `T`.
+    pub fn array<T>(_dims: Vec<i64>) -> Shape {
+        Shape { _private: () }
+    }
+}
+
+/// Graph builder (stub).
+pub struct XlaBuilder {
+    _private: (),
+}
+
+impl XlaBuilder {
+    /// New builder for a named computation.
+    pub fn new(_name: &str) -> XlaBuilder {
+        XlaBuilder { _private: () }
+    }
+
+    /// Declare a shaped parameter — always fails in the stub.
+    pub fn parameter_s(&self, _id: i64, _shape: &Shape, _name: &str) -> Result<XlaOp> {
+        stub_err("builder ops")
+    }
+
+    /// Tuple several ops — always fails in the stub.
+    pub fn tuple(&self, _ops: &[XlaOp]) -> Result<XlaOp> {
+        stub_err("builder ops")
+    }
+}
+
+/// A node in a computation under construction (stub).
+pub struct XlaOp {
+    _private: (),
+}
+
+impl XlaOp {
+    /// Elementwise addition — always fails in the stub.
+    pub fn add_(&self, _rhs: &XlaOp) -> Result<XlaOp> {
+        stub_err("builder ops")
+    }
+
+    /// Finalize the enclosing builder into a computation — always fails
+    /// in the stub.
+    pub fn build(&self) -> Result<XlaComputation> {
+        stub_err("builder ops")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_fails_loudly_at_the_entry_point() {
+        let err = PjRtClient::cpu().err().expect("stub must not pretend to work");
+        assert!(format!("{err:#}").contains("xla stub"), "{err:#}");
+    }
+
+    #[test]
+    fn literal_packing_is_shape_only() {
+        let lit = Literal::vec1(&[1.0f32, 2.0]).reshape(&[2, 1]).unwrap();
+        assert!(lit.to_vec::<f32>().is_err());
+    }
+}

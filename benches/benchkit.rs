@@ -90,6 +90,46 @@ pub struct BenchRecord {
     pub ns_per_op: f64,
 }
 
+/// One machine-readable record for the NN-search trajectory file
+/// (`BENCH_nn_search.json`): throughput and prune rate per (strategy,
+/// bound) over a workload of full test-set queries.
+#[derive(Debug, Clone)]
+pub struct NnSearchRecord {
+    /// Search strategy name, e.g. `sorted`, `sorted-precomputed`.
+    pub strategy: String,
+    /// Screening bound name (`none` for brute force).
+    pub bound: String,
+    /// Datasets aggregated.
+    pub datasets: usize,
+    /// Total queries answered.
+    pub queries: usize,
+    /// Queries per second across the workload.
+    pub queries_per_sec: f64,
+    /// Fraction of query-candidate pairs pruned by the bound alone.
+    pub prune_rate: f64,
+}
+
+/// Write NN-search records as a JSON array (manual formatting — no
+/// `serde` in the offline build; stable for line-diffing across PRs).
+pub fn write_nn_search_json(path: &str, records: &[NnSearchRecord]) -> std::io::Result<()> {
+    let mut out = String::from("[\n");
+    for (i, r) in records.iter().enumerate() {
+        let sep = if i + 1 == records.len() { "" } else { "," };
+        out.push_str(&format!(
+            "  {{\"strategy\": \"{}\", \"bound\": \"{}\", \"datasets\": {}, \
+             \"queries\": {}, \"queries_per_sec\": {:.1}, \"prune_rate\": {:.4}}}{sep}\n",
+            r.strategy.replace('\\', "\\\\").replace('"', "\\\""),
+            r.bound.replace('\\', "\\\\").replace('"', "\\\""),
+            r.datasets,
+            r.queries,
+            r.queries_per_sec,
+            r.prune_rate,
+        ));
+    }
+    out.push_str("]\n");
+    std::fs::write(path, out)
+}
+
 /// Write records as a JSON array. The offline build has no `serde`; the
 /// records are flat, so manual formatting is sufficient and the output is
 /// stable for line-diffing across PRs.

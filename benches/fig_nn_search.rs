@@ -21,7 +21,7 @@ use dtw_bounds::experiments::nn_timing::{
 };
 use dtw_bounds::experiments::with_recommended_window;
 use dtw_bounds::metrics::format_duration;
-use dtw_bounds::search::classify::SearchMode;
+use dtw_bounds::search::SearchStrategy;
 
 fn main() {
     let knobs = benchkit::Knobs::from_env();
@@ -40,11 +40,11 @@ fn main() {
     ];
 
     for (mode, figs) in [
-        (SearchMode::RandomOrder, "Figures 19, 20, 23, 24, 28"),
-        (SearchMode::Sorted, "Figures 21, 22, 25, 26, 27"),
+        (SearchStrategy::RandomOrder, "Figures 19, 20, 23, 24, 28"),
+        (SearchStrategy::Sorted, "Figures 21, 22, 25, 26, 27"),
     ] {
         benchkit::banner(&format!(
-            "NN search, {mode:?}, {} datasets, {} repeats — {figs}",
+            "NN search, {mode}, {} datasets, {} repeats — {figs}",
             datasets.len(),
             knobs.repeats
         ));

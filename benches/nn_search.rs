@@ -1,0 +1,122 @@
+//! NN-search serving benchmark over the `DtwIndex` facade: queries/sec
+//! and prune rate per search strategy (and the brute-force baseline),
+//! plus a machine-readable `BENCH_nn_search.json` so the search-path
+//! perf trajectory is tracked across PRs alongside
+//! `BENCH_runtime_batch.json`.
+//!
+//! ```sh
+//! cargo bench --bench nn_search
+//! DTWB_SCALE=tiny DTWB_REPEATS=1 cargo bench --bench nn_search   # quick pass
+//! ```
+
+#[path = "benchkit.rs"]
+mod benchkit;
+
+use std::time::Instant;
+
+use dtw_bounds::bounds::BoundKind;
+use dtw_bounds::data::synthetic::{generate_archive, ArchiveSpec};
+use dtw_bounds::data::Dataset;
+use dtw_bounds::delta::Squared;
+use dtw_bounds::experiments::with_recommended_window;
+use dtw_bounds::index::{DtwIndex, QueryOptions};
+use dtw_bounds::metrics::Table;
+use dtw_bounds::search::nn::SearchStats;
+use dtw_bounds::search::SearchStrategy;
+
+/// (strategy, bound) cells to compare. Brute force is the baseline.
+fn cells() -> Vec<(SearchStrategy, BoundKind)> {
+    vec![
+        (SearchStrategy::BruteForce, BoundKind::Webb), // bound unused
+        (SearchStrategy::RandomOrder, BoundKind::Petitjean),
+        (SearchStrategy::RandomOrder, BoundKind::Webb),
+        (SearchStrategy::Sorted, BoundKind::Keogh),
+        (SearchStrategy::Sorted, BoundKind::Webb),
+        (SearchStrategy::SortedPrecomputed, BoundKind::Keogh),
+    ]
+}
+
+fn main() {
+    let knobs = benchkit::Knobs::from_env();
+    let archive = generate_archive(&ArchiveSpec::new(knobs.scale, knobs.seed));
+    let datasets: Vec<&Dataset> = with_recommended_window(&archive);
+    let take = knobs.take_of(datasets.len(), 6);
+    let datasets = &datasets[..take];
+
+    benchkit::banner(&format!(
+        "NN search via DtwIndex: {} datasets, {} repeats, k=1",
+        datasets.len(),
+        knobs.repeats
+    ));
+
+    let mut table = Table::new(vec!["strategy", "bound", "queries/s", "prune rate"]);
+    let mut records = Vec::new();
+
+    for (strategy, bound) in cells() {
+        let bound_name =
+            if strategy == SearchStrategy::BruteForce { "none".to_string() } else { bound.name() };
+        let mut total_queries = 0usize;
+        let mut total_secs = 0.0f64;
+        let mut stats = SearchStats::default();
+        let mut pairs = 0usize;
+
+        for ds in datasets {
+            let index = DtwIndex::builder_from_dataset(ds)
+                .bound(bound)
+                .strategy(strategy)
+                .build()
+                .expect("dataset series share one length");
+            let mut searcher = index.searcher();
+            let queries: Vec<Vec<f64>> =
+                ds.test.iter().map(|s| s.values.clone()).collect();
+            // Warmup pass, then timed repeats.
+            let run = |searcher: &mut dtw_bounds::index::Searcher| {
+                if strategy == SearchStrategy::SortedPrecomputed {
+                    searcher.query_batch::<Squared>(&queries, &QueryOptions::default())
+                } else {
+                    queries
+                        .iter()
+                        .map(|q| {
+                            searcher.query_values::<Squared>(q, &QueryOptions::default())
+                        })
+                        .collect()
+                }
+            };
+            run(&mut searcher);
+            for _ in 0..knobs.repeats {
+                let t0 = Instant::now();
+                let outs = run(&mut searcher);
+                total_secs += t0.elapsed().as_secs_f64();
+                total_queries += outs.len();
+                for o in &outs {
+                    stats.add(&o.stats);
+                }
+                pairs += queries.len() * index.len();
+            }
+        }
+
+        let qps = total_queries as f64 / total_secs;
+        let prune_rate = stats.pruned as f64 / pairs.max(1) as f64;
+        table.row(vec![
+            strategy.name().to_string(),
+            bound_name.clone(),
+            format!("{qps:.0}"),
+            format!("{:.1}%", prune_rate * 100.0),
+        ]);
+        records.push(benchkit::NnSearchRecord {
+            strategy: strategy.name().to_string(),
+            bound: bound_name,
+            datasets: datasets.len(),
+            queries: total_queries,
+            queries_per_sec: qps,
+            prune_rate,
+        });
+    }
+
+    println!("{}", table.to_markdown());
+    println!("(prune rate counts candidates rejected by the bound alone; batched cells");
+    println!(" additionally early-abandon inside the prefilter, which shows in queries/s)");
+    benchkit::write_nn_search_json("BENCH_nn_search.json", &records)
+        .expect("write BENCH_nn_search.json");
+    println!("wrote BENCH_nn_search.json ({} records)", records.len());
+}

@@ -15,9 +15,10 @@ use std::time::Instant;
 use dtw_bounds::bounds::BoundKind;
 use dtw_bounds::data::synthetic::{generate_archive, ArchiveSpec, Scale};
 use dtw_bounds::delta::Squared;
+use dtw_bounds::index::DtwIndex;
 use dtw_bounds::metrics::Table;
-use dtw_bounds::search::classify::{classify_dataset, SearchMode};
-use dtw_bounds::search::PreparedTrainSet;
+use dtw_bounds::search::classify::classify_dataset;
+use dtw_bounds::search::SearchStrategy;
 
 fn main() {
     let archive = generate_archive(&ArchiveSpec::new(Scale::Small, 7));
@@ -36,8 +37,12 @@ fn main() {
         ds.num_classes(),
         ds.window
     );
-    let train = PreparedTrainSet::from_dataset(ds, ds.window);
-    let total_pairs = ds.test.len() * train.len();
+    let index = DtwIndex::builder_from_dataset(ds)
+        .window(ds.window)
+        .strategy(SearchStrategy::RandomOrder)
+        .build()
+        .expect("dataset series share one length");
+    let total_pairs = ds.test.len() * index.len();
 
     let ladder = [
         BoundKind::KimFL,
@@ -54,7 +59,7 @@ fn main() {
     ]);
     for bound in ladder {
         let started = Instant::now();
-        let out = classify_dataset::<Squared>(ds, &train, bound, SearchMode::RandomOrder, 99);
+        let out = classify_dataset::<Squared>(ds, &index.with_bound(bound), 99);
         let ms = started.elapsed().as_secs_f64() * 1e3;
         table.row(vec![
             bound.name(),

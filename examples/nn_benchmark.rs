@@ -19,7 +19,7 @@ use dtw_bounds::delta::Squared;
 use dtw_bounds::experiments::nn_timing::{nn_timing, win_loss_ratio, TimedBound};
 use dtw_bounds::experiments::with_recommended_window;
 use dtw_bounds::metrics::format_duration;
-use dtw_bounds::search::classify::SearchMode;
+use dtw_bounds::search::SearchStrategy;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -48,10 +48,10 @@ fn main() {
         TimedBound::Fixed(BoundKind::Webb),
     ];
 
-    for mode in [SearchMode::RandomOrder, SearchMode::Sorted] {
-        println!("\n== {mode:?} search (Algorithm {}) ==", match mode {
-            SearchMode::RandomOrder => 3,
-            SearchMode::Sorted => 4,
+    for mode in [SearchStrategy::RandomOrder, SearchStrategy::Sorted] {
+        println!("\n== {mode} search (Algorithm {}) ==", match mode {
+            SearchStrategy::RandomOrder => 3,
+            _ => 4,
         });
         let cols = nn_timing::<Squared>(datasets, &windows, &bounds, mode, repeats, 2021);
         let mean_acc: f64 = cols[0].cells.iter().map(|c| c.accuracy).sum::<f64>()

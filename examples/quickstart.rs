@@ -1,25 +1,80 @@
-//! Quickstart: the paper's running example (Figure 3) end to end.
+//! Quickstart: the `DtwIndex` facade end to end, then the paper's
+//! running example (Figure 3) on the low-level API.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
 //! ```
 //!
-//! Computes windowed DTW for the two example series, then every lower
-//! bound in the crate, demonstrating the tightness/cost ladder and the
-//! core invariant `λ ≤ DTW`.
+//! Part 1 indexes a synthetic dataset and runs exact k-NN queries with
+//! per-stage pruning counts. Part 2 computes windowed DTW for the two
+//! Figure-3 series and every lower bound in the crate, demonstrating the
+//! tightness/cost ladder and the core invariant `λ ≤ DTW`.
 
 use dtw_bounds::bounds::{BoundKind, PreparedSeries, Scratch};
+use dtw_bounds::data::synthetic::{generate_archive, ArchiveSpec, Scale};
 use dtw_bounds::delta::Squared;
 use dtw_bounds::dtw::{cost_matrix, dtw, warping_path};
+use dtw_bounds::index::{DtwIndex, Query, QueryOptions};
+use dtw_bounds::search::SearchStrategy;
 
 fn main() {
-    // Figure 3 of the paper.
+    // ----- Part 1: the primary API -------------------------------------
+    let ds = &generate_archive(&ArchiveSpec::new(Scale::Tiny, 2021))[0];
+    let index = DtwIndex::builder_from_dataset(ds)
+        .bound(BoundKind::Webb)
+        .strategy(SearchStrategy::Sorted)
+        .build()
+        .expect("dataset series share one length");
+    println!(
+        "indexed {}: {} series of length {}, w={}, bound={}, strategy={}",
+        ds.name,
+        index.len(),
+        ds.series_len(),
+        index.window(),
+        index.bound(),
+        index.strategy()
+    );
+
+    let k = 3;
+    let mut searcher = index.searcher();
+    for (qi, q) in ds.test.iter().take(4).enumerate() {
+        let out = searcher.query::<Squared>(&Query::new(q.values.clone()).with_k(k));
+        let rendered: Vec<String> = out
+            .neighbors
+            .iter()
+            .map(|n| format!("#{} (label {}, d={:.3})", n.index, n.label, n.distance))
+            .collect();
+        println!(
+            "  q{qi}: {}  [{} of {} candidates pruned by {}]",
+            rendered.join("  "),
+            out.stats.pruned,
+            index.len(),
+            index.bound()
+        );
+    }
+
+    // Typed options: an abandon threshold turns k-NN into "anything
+    // within tau?" — the streaming/monitoring regime.
+    let probe = &ds.test[0];
+    let nn = index.knn::<Squared>(&probe.values, 1);
+    let tau = nn.neighbors[0].distance * 1.5;
+    let within = index.query::<Squared>(
+        &Query::new(probe.values.clone()).with_options(QueryOptions::k(10).with_abandon_at(tau)),
+    );
+    println!(
+        "  {} neighbors within tau={:.3} of q0 (of {} indexed)",
+        within.neighbors.len(),
+        tau,
+        index.len()
+    );
+
+    // ----- Part 2: the low-level API (paper Figure 3) ------------------
     let a = vec![-1.0, 1.0, -1.0, 4.0, -2.0, 1.0, 1.0, 1.0, -1.0, 0.0, 1.0];
     let b = vec![1.0, -1.0, 1.0, -1.0, -1.0, -4.0, -4.0, -1.0, 1.0, 0.0, -1.0];
     let w = 1;
 
     let d = dtw::<Squared>(&a, &b, w);
-    println!("DTW_w={w}(A, B) = {d}  (paper Figure 3; its caption's 52 is an arithmetic slip)");
+    println!("\nDTW_w={w}(A, B) = {d}  (paper Figure 3; its caption's 52 is an arithmetic slip)");
 
     let m = cost_matrix::<Squared>(&a, &b, w);
     let path = warping_path(&m);

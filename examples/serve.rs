@@ -1,18 +1,19 @@
-//! Serving end-to-end: coordinator + router + batched prefilter backend,
-//! measured under concurrent client load.
+//! Serving end-to-end: a shared `DtwIndex`, router + batched prefilter
+//! backend, measured under concurrent client load.
 //!
 //! ```sh
-//! cargo run --release --example serve                  # native backend
-//! DTWB_BACKEND=none cargo run --release --example serve    # scalar only
+//! cargo run --release --example serve                   # native backend
+//! cargo run --release --example serve -- --k 3          # k-NN requests
+//! DTWB_BACKEND=none cargo run --release --example serve # scalar only
 //! DTWB_BACKEND=pjrt cargo run --release --example serve \
-//!     --features pjrt                                  # XLA (needs `make artifacts`)
+//!     --features pjrt                                   # XLA (needs `make artifacts`)
 //! ```
 //!
 //! Boots the TCP server on an ephemeral port over one synthetic dataset,
-//! fires concurrent client connections at it, and reports exactness,
-//! latency percentiles and throughput for both the scalar and batched
-//! paths. This is deliverable (b)'s "load a model and serve batched
-//! requests" driver; the measured run is in EXPERIMENTS.md.
+//! fires concurrent client connections at it (each request asking for
+//! the `--k` nearest neighbors through the line protocol's `k=<n>;`
+//! prefix), and reports exactness, latency percentiles and throughput
+//! for both the scalar and batched paths.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -24,10 +25,10 @@ use dtw_bounds::coordinator::server::Server;
 use dtw_bounds::coordinator::{NnEngine, Router};
 use dtw_bounds::data::synthetic::{generate_archive, ArchiveSpec, Scale};
 use dtw_bounds::delta::Squared;
+use dtw_bounds::index::DtwIndex;
 use dtw_bounds::metrics::Summary;
 use dtw_bounds::runtime::BackendKind;
-use dtw_bounds::search::nn::nn_brute_force;
-use dtw_bounds::search::PreparedTrainSet;
+use dtw_bounds::search::knn::{knn_brute_force, KnnParams};
 
 const CLIENTS: usize = 4;
 const QUERIES_PER_CLIENT: usize = 32;
@@ -59,6 +60,16 @@ fn attach_pjrt(_engine: &mut NnEngine) {
 }
 
 fn main() {
+    // `--k N`: how many neighbors every request asks for.
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let k = args
+        .iter()
+        .position(|a| a == "--k")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or(1)
+        .max(1);
+
     let archive = generate_archive(&ArchiveSpec::new(Scale::Small, 2021));
     // A dataset that fits the compiled artifact shapes (n<=256, l<=512).
     let ds = archive
@@ -66,17 +77,15 @@ fn main() {
         .filter(|d| d.window >= 1 && d.train.len() <= 256 && d.series_len() <= 512)
         .max_by_key(|d| d.train.len())
         .expect("suitable dataset");
-    let w = ds.window;
     println!(
-        "dataset {}: l={}, train={}, w={w}",
+        "dataset {}: l={}, train={}, w={}, k={k}",
         ds.name,
         ds.series_len(),
-        ds.train.len()
+        ds.train.len(),
+        ds.window
     );
 
     // Backend from DTWB_BACKEND (native | pjrt | none); default native.
-    // An unrecognized value must not silently corrupt a scalar-vs-batched
-    // comparison, so say what was selected.
     let backend = match std::env::var("DTWB_BACKEND") {
         Ok(s) => BackendKind::parse(&s).unwrap_or_else(|| {
             eprintln!("DTWB_BACKEND={s:?} not recognized (native|pjrt|none); using native");
@@ -84,10 +93,19 @@ fn main() {
         }),
         Err(_) => BackendKind::Native,
     };
-    let ds2 = ds.clone();
+
+    // One shared index; the router's dispatch thread builds its searcher
+    // (and non-Send backend) from a cheap handle.
+    let index = DtwIndex::builder_from_dataset(ds)
+        .bound(BoundKind::Webb)
+        .backend(BackendKind::None) // attached per kind below
+        .max_batch(32)
+        .build()
+        .expect("dataset series share one length");
+    let factory_index = index.clone();
     let router = Arc::new(Router::spawn(
         move || {
-            let mut engine = NnEngine::new(&ds2, w, BoundKind::Webb);
+            let mut engine = NnEngine::from_index(factory_index);
             match backend {
                 BackendKind::None => eprintln!("scalar path only"),
                 BackendKind::Native => {
@@ -104,20 +122,25 @@ fn main() {
     let addr = server.addr();
     println!("server on {addr}; {CLIENTS} clients x {QUERIES_PER_CLIENT} queries\n");
 
-    // Ground truth for exactness checks.
-    let train = PreparedTrainSet::from_dataset(ds, w);
-    let truth: Vec<f64> = ds
+    // Ground truth for exactness checks: the k nearest distances.
+    let truth: Vec<Vec<f64>> = ds
         .test
         .iter()
-        .map(|q| nn_brute_force::<Squared>(&q.values, &train).0.distance)
+        .map(|q| {
+            knn_brute_force::<Squared>(&q.values, index.train(), &KnnParams::k(k))
+                .0
+                .iter()
+                .map(|r| r.distance)
+                .collect()
+        })
         .collect();
 
     let started = Instant::now();
     let mut handles = Vec::new();
     for c in 0..CLIENTS {
         let queries: Vec<(usize, Vec<f64>)> = (0..QUERIES_PER_CLIENT)
-            .map(|k| {
-                let qi = (c * QUERIES_PER_CLIENT + k) % ds.test.len();
+            .map(|kq| {
+                let qi = (c * QUERIES_PER_CLIENT + kq) % ds.test.len();
                 (qi, ds.test[qi].values.clone())
             })
             .collect();
@@ -128,8 +151,13 @@ fn main() {
             let mut out = Vec::new();
             for (qi, q) in queries {
                 let csv: Vec<String> = q.iter().map(|v| v.to_string()).collect();
+                let line = if k == 1 {
+                    format!("{}\n", csv.join(","))
+                } else {
+                    format!("k={k};{}\n", csv.join(","))
+                };
                 let t0 = Instant::now();
-                writer.write_all(format!("{}\n", csv.join(",")).as_bytes()).unwrap();
+                writer.write_all(line.as_bytes()).unwrap();
                 let resp = lines.next().unwrap().unwrap();
                 out.push((qi, t0.elapsed().as_secs_f64() * 1e3, resp));
             }
@@ -147,22 +175,33 @@ fn main() {
             if resp.contains("path=batched") {
                 batched += 1;
             }
-            // Exactness: parse dist= and compare with brute force.
-            let dist: f64 = resp
-                .split_whitespace()
-                .find_map(|f| f.strip_prefix("dist=").map(|v| v.parse().unwrap()))
-                .expect("dist field");
-            assert!(
-                (dist - truth[qi]).abs() < 1e-6 * truth[qi].max(1.0),
-                "inexact answer for query {qi}: {dist} vs {}",
-                truth[qi]
-            );
+            // Exactness: parse the distances and compare with brute force.
+            let dists: Vec<f64> = if k == 1 {
+                resp.split_whitespace()
+                    .find_map(|f| f.strip_prefix("dist=").map(|v| v.parse().unwrap()))
+                    .into_iter()
+                    .collect()
+            } else {
+                resp.split_whitespace()
+                    .find_map(|f| f.strip_prefix("neighbors="))
+                    .expect("neighbors field")
+                    .split(',')
+                    .map(|triple| triple.rsplit(':').next().unwrap().parse().unwrap())
+                    .collect()
+            };
+            assert_eq!(dists.len(), truth[qi].len(), "wrong neighbor count for query {qi}");
+            for (got, want) in dists.iter().zip(truth[qi].iter()) {
+                assert!(
+                    (got - want).abs() < 1e-6 * want.max(1.0),
+                    "inexact answer for query {qi}: {got} vs {want}"
+                );
+            }
         }
     }
     let wall = started.elapsed();
     let s = Summary::of(&latencies);
     let mut lat = latencies.clone();
-    println!("served {total} queries, all exact");
+    println!("served {total} queries (k={k}), all exact");
     println!("  batched path: {batched}/{total}");
     println!(
         "  latency ms: mean {:.2} ± {:.2}, p50 {:.2}, p99 {:.2}",

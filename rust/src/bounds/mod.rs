@@ -118,6 +118,22 @@ impl Scratch {
             block_dn: Vec::with_capacity(l + 1),
         }
     }
+
+    /// Buffer capacities `[proj, proj_lo, proj_up, block_up, block_dn]`.
+    ///
+    /// Only exists in debug builds, where [`BoundKind::compute`] asserts
+    /// that a pre-sized scratch is never reallocated on the hot path;
+    /// tests use it to pin the same invariant across whole searches.
+    #[cfg(debug_assertions)]
+    pub fn capacities(&self) -> [usize; 5] {
+        [
+            self.proj.capacity(),
+            self.proj_lo.capacity(),
+            self.proj_up.capacity(),
+            self.block_up.capacity(),
+            self.block_dn.capacity(),
+        ]
+    }
 }
 
 /// Dynamically-selectable lower bound. Experiment drivers and the CLI
@@ -213,7 +229,9 @@ impl BoundKind {
             "petitjeannolr" | "lbpetitjeannolr" => Some(BoundKind::PetitjeanNoLr),
             "webb" | "lbwebb" => Some(BoundKind::Webb),
             "webbnolr" | "lbwebbnolr" => Some(BoundKind::WebbNoLr),
-            "webbstar" | "webb*" | "lbwebbstar" => Some(BoundKind::WebbStar),
+            // `lbwebb*` is what the canonical name `LB_Webb*` normalizes
+            // to — required for the name/parse round-trip.
+            "webbstar" | "webb*" | "lbwebbstar" | "lbwebb*" => Some(BoundKind::WebbStar),
             "enhanced" | "lbenhanced" => Some(BoundKind::Enhanced(8)),
             "webbenhanced" | "lbwebbenhanced" => Some(BoundKind::WebbEnhanced(3)),
             "cascade" | "lbcascade" => Some(BoundKind::Cascade),
@@ -272,12 +290,33 @@ impl BoundKind {
         )
     }
 
+    /// Prepare a query series for this bound: full envelopes when the
+    /// bound reads them ([`BoundKind::requires_query_envelopes`]), a bare
+    /// values-only wrapper otherwise — the per-query preparation step of
+    /// Algorithms 3/4, priced exactly as the paper prescribes.
+    pub fn prepare_query(&self, values: Vec<f64>, w: usize) -> PreparedSeries {
+        if self.requires_query_envelopes() {
+            PreparedSeries::prepare(values, w)
+        } else {
+            PreparedSeries {
+                values,
+                w,
+                lo: Vec::new(),
+                up: Vec::new(),
+                lo_of_up: Vec::new(),
+                up_of_lo: Vec::new(),
+            }
+        }
+    }
+
     /// Compute the bound `λ_w(A=q, B=t)` with early abandoning at
     /// `abandon_at`. Returns a partial (still valid) lower bound greater
     /// than `abandon_at` when abandoned.
     ///
     /// Panics in debug builds when δ does not satisfy the bound's validity
-    /// requirement — see [`BoundKind::is_valid_for`].
+    /// requirement — see [`BoundKind::is_valid_for`] — and when a
+    /// sufficiently pre-sized [`Scratch`] is reallocated (the hot path
+    /// must stay allocation-free).
     pub fn compute<D: Delta>(
         &self,
         q: &PreparedSeries,
@@ -293,7 +332,9 @@ impl BoundKind {
             D::NAME
         );
         debug_assert_eq!(q.len(), t.len(), "bounds assume equal-length series");
-        match *self {
+        #[cfg(debug_assertions)]
+        let caps_before = scratch.capacities();
+        let lb = match *self {
             BoundKind::KimFL => kim::lb_kim_fl::<D>(&q.values, &t.values),
             BoundKind::Keogh => keogh::lb_keogh::<D>(&q.values, t, abandon_at),
             BoundKind::Improved => improved::lb_improved::<D>(q, t, w, abandon_at, scratch),
@@ -313,7 +354,27 @@ impl BoundKind {
             BoundKind::Cascade => cascade::lb_cascade::<D>(q, t, w, abandon_at, scratch),
             BoundKind::KeoghRev => keogh::lb_keogh_reversed::<D>(q, t, abandon_at),
             BoundKind::UcrCascade => cascade::lb_ucr_cascade::<D>(q, t, abandon_at),
+        };
+        #[cfg(debug_assertions)]
+        {
+            // Allocation-freedom: a buffer whose capacity already covered
+            // this series length must not have been reallocated. (First
+            // use may still grow an under-sized scratch.)
+            let caps_after = scratch.capacities();
+            let need = [q.len(), q.len(), q.len(), q.len() + 1, q.len() + 1];
+            for i in 0..caps_before.len() {
+                debug_assert!(
+                    caps_before[i] < need[i] || caps_after[i] == caps_before[i],
+                    "{}: scratch buffer {i} reallocated on the hot path \
+                     (capacity {} -> {}, needed {})",
+                    self.name(),
+                    caps_before[i],
+                    caps_after[i],
+                    need[i]
+                );
+            }
         }
+        lb
     }
 }
 
@@ -344,6 +405,24 @@ mod tests {
             assert_eq!(BoundKind::parse(s), Some(k), "{s}");
         }
         assert_eq!(BoundKind::parse("bogus"), None);
+    }
+
+    /// Property: every canonical name re-parses to its own kind —
+    /// `parse(name(k)) == Some(k)` for all of `ALL` plus the
+    /// parameterized families over their practical `k` range. (This
+    /// caught `LB_Webb*`, whose normalized form `lbwebb*` was missing
+    /// from the parser.)
+    #[test]
+    fn name_parse_roundtrip_for_every_kind() {
+        for &k in BoundKind::ALL {
+            assert_eq!(BoundKind::parse(&k.name()), Some(k), "{}", k.name());
+        }
+        for i in 1..=16 {
+            let e = BoundKind::Enhanced(i);
+            assert_eq!(BoundKind::parse(&e.name()), Some(e), "{}", e.name());
+            let we = BoundKind::WebbEnhanced(i);
+            assert_eq!(BoundKind::parse(&we.name()), Some(we), "{}", we.name());
+        }
     }
 
     #[test]

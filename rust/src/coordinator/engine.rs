@@ -1,23 +1,24 @@
-//! The query engine: exact 1-NN DTW with lower-bound screening, plus a
-//! pluggable batched prefilter ([`LbBackend`]).
+//! The query engine — a thin adapter holding a per-thread
+//! [`Searcher`] over a shared [`DtwIndex`].
 //!
-//! Scalar path = the paper's Algorithm 4 per query. Batch path = the
-//! attached backend computes the `LB_KEOGH` matrix for the whole query
-//! batch — the cache-blocked native backend by default, one XLA execution
-//! with `--features pjrt` — then each query walks its candidates in
-//! ascending-bound order with early-abandoning DTW
-//! ([`nn_sorted_precomputed`]). Results are exact either way; only the
+//! The index owns the prepared envelopes and configuration; the engine
+//! adds the serving-era surface the router/server consume (legacy
+//! [`QueryResponse`] conversion, backend attachment helpers). Scalar
+//! path = the paper's Algorithm 4 per query; batch path = the attached
+//! [`LbBackend`] computes the `LB_KEOGH` matrix for the whole query
+//! batch, then each query walks its candidates in ascending-bound order
+//! with early-abandoning DTW. Results are exact either way; only the
 //! screening cost moves.
 
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
-use crate::bounds::{BoundKind, PreparedSeries, Scratch};
+use crate::bounds::BoundKind;
 use crate::data::Dataset;
 use crate::delta::Squared;
-use crate::dtw::dtw_ea;
-use crate::runtime::{LbBackend, NativeBatchLb};
-use crate::search::nn::{nn_sorted, nn_sorted_precomputed, NnResult};
-use crate::search::PreparedTrainSet;
+use crate::index::{DtwIndex, QueryOptions, QueryOutcome, Searcher};
+use crate::runtime::{BackendKind, LbBackend, NativeBatchLb};
+use crate::search::nn::NnResult;
+use crate::search::SearchStrategy;
 
 /// Which path answered a query.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -28,7 +29,7 @@ pub enum EnginePath {
     Batched,
 }
 
-/// Response for one query.
+/// Legacy 1-NN response for one query (the server's line protocol).
 #[derive(Debug, Clone)]
 pub struct QueryResponse {
     /// The exact nearest neighbor.
@@ -39,28 +40,40 @@ pub struct QueryResponse {
     pub latency: Duration,
 }
 
-/// Exact 1-NN engine over one dataset's training split.
+impl QueryResponse {
+    /// Collapse a k-NN [`QueryOutcome`] to its nearest neighbor.
+    pub fn from_outcome(outcome: QueryOutcome) -> QueryResponse {
+        QueryResponse {
+            result: outcome.best_nn(),
+            path: if outcome.batched { EnginePath::Batched } else { EnginePath::Scalar },
+            latency: outcome.latency,
+        }
+    }
+}
+
+/// Exact k-NN engine over one dataset's training split: a [`Searcher`]
+/// plus adapters for the line-protocol serving stack.
 pub struct NnEngine {
-    train: PreparedTrainSet,
-    bound: BoundKind,
-    backend: Option<Box<dyn LbBackend>>,
-    scratch: Scratch,
-    bound_buf: Vec<f64>,
-    index_buf: Vec<usize>,
+    searcher: Searcher,
 }
 
 impl NnEngine {
     /// Build an engine (scalar path only) for a dataset at window `w`.
     pub fn new(ds: &Dataset, w: usize, bound: BoundKind) -> Self {
-        let train = PreparedTrainSet::from_dataset(ds, w);
-        NnEngine {
-            train,
-            bound,
-            backend: None,
-            scratch: Scratch::default(),
-            bound_buf: Vec::new(),
-            index_buf: Vec::new(),
-        }
+        let index = DtwIndex::builder_from_dataset(ds)
+            .window(w)
+            .bound(bound)
+            .strategy(SearchStrategy::Sorted)
+            .backend(BackendKind::None)
+            .build()
+            .expect("dataset series share one length");
+        NnEngine::from_index(index)
+    }
+
+    /// Wrap a prebuilt index — the facade path: the index (and its
+    /// prepared envelopes) can be shared across engines/threads.
+    pub fn from_index(index: DtwIndex) -> Self {
+        NnEngine { searcher: index.searcher() }
     }
 
     /// Build an engine with a batched screening backend attached.
@@ -78,7 +91,7 @@ impl NnEngine {
     /// Attach (or replace) the batched screening backend.
     pub fn set_backend(&mut self, backend: Box<dyn LbBackend>) {
         log::info!("engine: batched prefilter backend = {}", backend.name());
-        self.backend = Some(backend);
+        self.searcher.set_backend(backend);
     }
 
     /// Attach the default pure-Rust batched backend.
@@ -95,128 +108,64 @@ impl NnEngine {
         artifacts_dir: &std::path::Path,
         max_batch: usize,
     ) -> anyhow::Result<()> {
-        let l = self.train.series.first().map(|s| s.len()).unwrap_or(0);
+        let index = self.searcher.index();
+        let l = index.train().series.first().map(|s| s.len()).unwrap_or(0);
         let blb =
-            crate::runtime::BatchLb::load(rt, artifacts_dir, max_batch, self.train.len(), l)?;
+            crate::runtime::BatchLb::load(rt, artifacts_dir, max_batch, index.len(), l)?;
         self.set_backend(Box::new(blb));
         Ok(())
     }
 
     /// True when a batched screening backend is attached.
     pub fn has_batch_path(&self) -> bool {
-        self.backend.is_some()
+        self.searcher.has_backend()
     }
 
     /// Name of the attached screening backend, if any.
     pub fn backend_name(&self) -> Option<&'static str> {
-        self.backend.as_ref().map(|b| b.name())
+        self.searcher.backend_name()
     }
 
     /// Training-set size.
     pub fn train_len(&self) -> usize {
-        self.train.len()
+        self.searcher.index().len()
     }
 
     /// The engine's window.
     pub fn window(&self) -> usize {
-        self.train.w
+        self.searcher.index().window()
     }
 
-    /// Answer one query on the scalar path.
+    /// Answer one query on the scalar path (1-NN legacy shape).
     pub fn query_one(&mut self, values: &[f64]) -> QueryResponse {
-        let started = Instant::now();
-        let pq = PreparedSeries::prepare(values.to_vec(), self.train.w);
-        let (result, _) = nn_sorted::<Squared>(
-            &pq,
-            &self.train,
-            self.bound,
-            &mut self.scratch,
-            &mut self.bound_buf,
-            &mut self.index_buf,
-        );
-        QueryResponse { result, path: EnginePath::Scalar, latency: started.elapsed() }
+        QueryResponse::from_outcome(
+            self.searcher.query_values::<Squared>(values, &QueryOptions::default()),
+        )
     }
 
-    /// Answer a batch of queries, riding the attached backend when the
-    /// batch is non-trivial and fits its shape, otherwise the scalar path
-    /// per query.
+    /// Answer one query with full options (k-NN, threshold, z-norm).
+    pub fn query_with(&mut self, values: &[f64], opts: &QueryOptions) -> QueryOutcome {
+        self.searcher.query_values::<Squared>(values, opts)
+    }
+
+    /// Answer a batch of queries (1-NN legacy shape), riding the
+    /// attached backend when the batch is non-trivial and fits its
+    /// shape, otherwise the scalar path per query.
     pub fn query_batch(&mut self, queries: &[Vec<f64>]) -> Vec<QueryResponse> {
-        if queries.is_empty() {
-            return Vec::new();
-        }
-        let l = queries[0].len();
-        let use_batch = match &self.backend {
-            Some(be) => {
-                queries.len() > 1
-                    && !self.train.is_empty()
-                    // Backends require one shared length; reject up front
-                    // rather than paying the seed DTWs and a per-batch
-                    // backend error + warn-log on every dispatch.
-                    && l == self.train.series[0].len()
-                    && queries.iter().all(|q| q.len() == l)
-                    && be.supports(queries.len(), self.train.len(), l)
-            }
-            None => false,
-        };
-        if !use_batch {
-            return queries.iter().map(|q| self.query_one(q)).collect();
-        }
+        self.searcher
+            .query_batch::<Squared>(queries, &QueryOptions::default())
+            .into_iter()
+            .map(QueryResponse::from_outcome)
+            .collect()
+    }
 
-        let started = Instant::now();
-        let w = self.train.w;
-        let backend = self.backend.as_mut().expect("checked above");
-        // For cutoff-honouring backends, seed each query's best-so-far
-        // with its exact DTW distance to candidate 0: candidates whose
-        // (partial) bound crosses the seed would be pruned regardless, so
-        // abandoning them early cannot change the result. Tradeoff: when
-        // candidate 0 is not the min-bound candidate this is one extra
-        // full DTW per query beyond what Algorithm 4's walk would pay,
-        // traded for O(ℓ) early-abandon savings on every screened-out
-        // bound row (n per query) — a win for n ≫ w. Branch-free backends
-        // ignore cutoffs, so for them the seed DTW would buy nothing:
-        // skip it and start the walk cold, exactly like Algorithm 4.
-        let seeds: Vec<f64> = if backend.uses_cutoffs() {
-            queries
-                .iter()
-                .map(|q| dtw_ea::<Squared>(q, &self.train.series[0].values, w, f64::INFINITY))
-                .collect()
-        } else {
-            vec![f64::INFINITY; queries.len()]
-        };
-        let q_refs: Vec<&[f64]> = queries.iter().map(|v| v.as_slice()).collect();
-        let ranking = match backend.rank(&q_refs, &self.train.series, &seeds) {
-            Ok(r) => r,
-            Err(e) => {
-                log::warn!("batch prefilter failed ({e:#}); falling back to scalar");
-                return queries.iter().map(|q| self.query_one(q)).collect();
-            }
-        };
-        let prefilter_each = started.elapsed() / queries.len() as u32;
-
-        let mut out = Vec::with_capacity(queries.len());
-        for (qi, q) in queries.iter().enumerate() {
-            let q_started = Instant::now();
-            // A finite seed is a known candidate-0 distance; an infinite
-            // one means "unseeded" (cold walk).
-            let initial = if seeds[qi].is_finite() {
-                Some(NnResult { nn_index: 0, distance: seeds[qi], label: self.train.labels[0] })
-            } else {
-                None
-            };
-            let (result, _) = nn_sorted_precomputed::<Squared>(
-                q,
-                &self.train,
-                &ranking.bounds[qi],
-                &ranking.order[qi],
-                initial,
-            );
-            out.push(QueryResponse {
-                result,
-                path: EnginePath::Batched,
-                latency: prefilter_each + q_started.elapsed(),
-            });
-        }
-        out
+    /// Answer a batch of `(values, options)` pairs — the router's shape,
+    /// where concurrent clients may ask for different `k`.
+    pub fn query_batch_with(
+        &mut self,
+        items: &[(Vec<f64>, QueryOptions)],
+    ) -> Vec<QueryOutcome> {
+        self.searcher.query_batch_mixed::<Squared>(items)
     }
 }
 
@@ -224,7 +173,13 @@ impl NnEngine {
 mod tests {
     use super::*;
     use crate::data::synthetic::{generate_archive, ArchiveSpec, Scale};
-    use crate::search::nn::nn_brute_force;
+    use crate::search::knn::{knn_brute_force, KnnParams};
+    use crate::search::PreparedTrainSet;
+
+    fn brute_1nn(q: &[f64], train: &PreparedTrainSet) -> NnResult {
+        let (r, _) = knn_brute_force::<Squared>(q, train, &KnnParams::default());
+        r.into_iter().next().unwrap()
+    }
 
     #[test]
     fn scalar_path_is_exact() {
@@ -234,7 +189,7 @@ mod tests {
         let train = PreparedTrainSet::from_dataset(ds, w);
         for q in &ds.test {
             let resp = engine.query_one(&q.values);
-            let (truth, _) = nn_brute_force::<Squared>(&q.values, &train);
+            let truth = brute_1nn(&q.values, &train);
             assert_eq!(resp.result.distance, truth.distance);
             assert_eq!(resp.path, EnginePath::Scalar);
         }
@@ -265,9 +220,32 @@ mod tests {
         let out = engine.query_batch(&queries);
         let train = PreparedTrainSet::from_dataset(ds, w);
         for (resp, q) in out.iter().zip(queries.iter()) {
-            let (truth, _) = nn_brute_force::<Squared>(q, &train);
+            let truth = brute_1nn(q, &train);
             assert_eq!(resp.result.distance, truth.distance);
             assert_eq!(resp.path, EnginePath::Batched);
+        }
+    }
+
+    #[test]
+    fn batched_knn_with_mixed_k_is_exact() {
+        let ds = &generate_archive(&ArchiveSpec::new(Scale::Tiny, 64))[0];
+        let w = ds.window.max(1);
+        let mut engine =
+            NnEngine::with_backend(ds, w, BoundKind::Keogh, Box::new(NativeBatchLb::new()));
+        let train = PreparedTrainSet::from_dataset(ds, w);
+        let items: Vec<(Vec<f64>, QueryOptions)> = ds
+            .test
+            .iter()
+            .enumerate()
+            .map(|(i, s)| (s.values.clone(), QueryOptions::k(1 + (i % 3) * 2)))
+            .collect();
+        assert!(items.len() > 1);
+        let outs = engine.query_batch_with(&items);
+        for (out, (q, opts)) in outs.iter().zip(items.iter()) {
+            assert!(out.batched);
+            let (truth, _) = knn_brute_force::<Squared>(q, &train, &KnnParams::k(opts.k));
+            let want: Vec<f64> = truth.iter().map(|r| r.distance).collect();
+            assert_eq!(out.distances(), want, "k={}", opts.k);
         }
     }
 
@@ -311,7 +289,7 @@ mod tests {
         let out = engine.query_batch(&queries);
         let train = PreparedTrainSet::from_dataset(ds, w);
         for (resp, q) in out.iter().zip(queries.iter()) {
-            let (truth, _) = nn_brute_force::<Squared>(q, &train);
+            let truth = brute_1nn(q, &train);
             assert_eq!(resp.result.distance, truth.distance);
             assert_eq!(resp.path, EnginePath::Batched);
         }

@@ -7,9 +7,10 @@
 //! * [`pool`] — a std-thread worker pool (`tokio` is unavailable in the
 //!   offline build; see DESIGN.md §5) used for dataset-parallel
 //!   experiment execution, with per-worker state (`map_init`).
-//! * [`engine`] — the query engine: prepared training set + bound
-//!   cascade + an optional batched screening backend
-//!   ([`crate::runtime::LbBackend`]), answering exact 1-NN DTW queries.
+//! * [`engine`] — the query engine: a per-thread
+//!   [`crate::index::Searcher`] over a shared [`crate::index::DtwIndex`]
+//!   plus an optional batched screening backend
+//!   ([`crate::runtime::LbBackend`]), answering exact k-NN DTW queries.
 //! * [`router`] — request router and **dynamic batcher**: concurrent
 //!   clients enqueue queries; the dispatch loop drains the queue and
 //!   routes a full batch through the engine's backend (native Rust by

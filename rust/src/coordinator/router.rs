@@ -1,21 +1,28 @@
 //! Request router and dynamic batcher.
 //!
-//! Clients call [`Router::query`] from any thread; a single dispatch
-//! thread owns the [`NnEngine`] (backend handles — PJRT in particular —
-//! are not `Sync`) and drains the queue into batches: when several
-//! queries are waiting they ride the engine's batched
-//! [`crate::runtime::LbBackend`] prefilter together; a lone query takes
-//! the scalar path immediately. This is the standard router/batcher shape
-//! of serving systems (vLLM-style), scaled to this paper's workload.
+//! Clients call [`Router::query`] (or [`Router::query_with`] for k-NN)
+//! from any thread; a single dispatch thread owns the [`NnEngine`]
+//! (backend handles — PJRT in particular — are not `Sync`) and drains
+//! the queue into batches: when several queries are waiting they ride
+//! the engine's batched [`crate::runtime::LbBackend`] prefilter
+//! together; a lone query takes the scalar path immediately. This is the
+//! standard router/batcher shape of serving systems (vLLM-style),
+//! scaled to this paper's workload.
+//!
+//! The cheapest way to stand one up is [`Router::spawn_index`]: hand it
+//! a shared [`DtwIndex`] and the dispatch thread builds its searcher
+//! from the index's configuration.
 
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-use super::engine::{EnginePath, NnEngine, QueryResponse};
+use crate::index::{DtwIndex, QueryOptions, QueryOutcome};
+
+use super::engine::{NnEngine, QueryResponse};
 
 enum Msg {
-    Query(Vec<f64>, Sender<QueryResponse>),
+    Query(Vec<f64>, QueryOptions, Sender<QueryOutcome>),
     Shutdown,
 }
 
@@ -57,7 +64,7 @@ impl Router {
             loop {
                 // Block for the first message…
                 let first = match rx.recv() {
-                    Ok(Msg::Query(q, reply)) => (q, reply),
+                    Ok(Msg::Query(q, opts, reply)) => (q, opts, reply),
                     Ok(Msg::Shutdown) | Err(_) => return stats,
                 };
                 // …then opportunistically drain whatever else is queued
@@ -66,7 +73,7 @@ impl Router {
                 let mut shutdown = false;
                 while batch.len() < max_batch {
                     match rx.try_recv() {
-                        Ok(Msg::Query(q, reply)) => batch.push((q, reply)),
+                        Ok(Msg::Query(q, opts, reply)) => batch.push((q, opts, reply)),
                         Ok(Msg::Shutdown) => {
                             shutdown = true;
                             break;
@@ -78,12 +85,20 @@ impl Router {
                 stats.max_batch = stats.max_batch.max(batch.len());
                 stats.served += batch.len();
 
-                let queries: Vec<Vec<f64>> = batch.iter().map(|(q, _)| q.clone()).collect();
-                let responses = engine.query_batch(&queries);
-                for ((_, reply), resp) in batch.into_iter().zip(responses) {
-                    match resp.path {
-                        EnginePath::Batched => stats.batched += 1,
-                        EnginePath::Scalar => stats.scalar += 1,
+                // Move the queries out of the messages — no copies on
+                // the dispatch hot path.
+                let mut items = Vec::with_capacity(batch.len());
+                let mut replies = Vec::with_capacity(batch.len());
+                for (q, opts, reply) in batch {
+                    items.push((q, opts));
+                    replies.push(reply);
+                }
+                let responses = engine.query_batch_with(&items);
+                for (reply, resp) in replies.into_iter().zip(responses) {
+                    if resp.batched {
+                        stats.batched += 1;
+                    } else {
+                        stats.scalar += 1;
                     }
                     let _ = reply.send(resp);
                 }
@@ -95,18 +110,41 @@ impl Router {
         Router { tx, handle: Some(handle) }
     }
 
+    /// Spawn a router over a shared [`DtwIndex`]: the dispatch thread
+    /// builds its per-thread searcher (and the index's configured
+    /// backend) inside itself. `max_batch` comes from the index.
+    pub fn spawn_index(index: DtwIndex) -> Router {
+        let max_batch = index.max_batch();
+        Router::spawn(move || NnEngine::from_index(index), max_batch)
+    }
+
     /// Submit a query and block for the exact 1-NN answer.
     pub fn query(&self, values: Vec<f64>) -> QueryResponse {
+        QueryResponse::from_outcome(self.query_with(values, QueryOptions::default()))
+    }
+
+    /// Submit a query with options (k-NN, abandon threshold, z-norm) and
+    /// block for the outcome.
+    pub fn query_with(&self, values: Vec<f64>, opts: QueryOptions) -> QueryOutcome {
         let (reply_tx, reply_rx) = mpsc::channel();
-        self.tx.send(Msg::Query(values, reply_tx)).expect("router alive");
+        self.tx.send(Msg::Query(values, opts, reply_tx)).expect("router alive");
         reply_rx.recv().expect("router answers")
     }
 
     /// Submit without blocking; the response arrives on the returned
     /// receiver. Lets tests/clients build up a real batch.
-    pub fn query_async(&self, values: Vec<f64>) -> Receiver<QueryResponse> {
+    pub fn query_async(&self, values: Vec<f64>) -> Receiver<QueryOutcome> {
+        self.query_async_with(values, QueryOptions::default())
+    }
+
+    /// [`Router::query_async`] with options.
+    pub fn query_async_with(
+        &self,
+        values: Vec<f64>,
+        opts: QueryOptions,
+    ) -> Receiver<QueryOutcome> {
         let (reply_tx, reply_rx) = mpsc::channel();
-        self.tx.send(Msg::Query(values, reply_tx)).expect("router alive");
+        self.tx.send(Msg::Query(values, opts, reply_tx)).expect("router alive");
         reply_rx
     }
 
@@ -137,8 +175,13 @@ mod tests {
     use crate::bounds::BoundKind;
     use crate::data::synthetic::{generate_archive, ArchiveSpec, Scale};
     use crate::delta::Squared;
-    use crate::search::nn::nn_brute_force;
+    use crate::runtime::BackendKind;
+    use crate::search::knn::{knn_brute_force, KnnParams};
     use crate::search::PreparedTrainSet;
+
+    fn brute_distance(q: &[f64], train: &PreparedTrainSet) -> f64 {
+        knn_brute_force::<Squared>(q, train, &KnnParams::default()).0[0].distance
+    }
 
     #[test]
     fn router_serves_exact_answers() {
@@ -153,8 +196,7 @@ mod tests {
             ds.test.iter().map(|q| router.query_async(q.values.clone())).collect();
         for (rx, q) in rxs.into_iter().zip(ds.test.iter()) {
             let resp = rx.recv().unwrap();
-            let (truth, _) = nn_brute_force::<Squared>(&q.values, &train);
-            assert_eq!(resp.result.distance, truth.distance);
+            assert_eq!(resp.best().unwrap().distance, brute_distance(&q.values, &train));
         }
         let stats = router.shutdown();
         assert_eq!(stats.served, ds.test.len());
@@ -166,25 +208,26 @@ mod tests {
     }
 
     #[test]
-    fn router_with_native_backend_serves_exact_answers() {
+    fn router_over_shared_index_serves_knn() {
         let ds = &generate_archive(&ArchiveSpec::new(Scale::Tiny, 73))[0];
-        let w = ds.window.max(1);
-        let ds2 = ds.clone();
-        let router = Router::spawn(
-            move || {
-                let mut engine = NnEngine::new(&ds2, w, BoundKind::Keogh);
-                engine.attach_native();
-                engine
-            },
-            8,
-        );
-        let train = PreparedTrainSet::from_dataset(ds, w);
-        let rxs: Vec<_> =
-            ds.test.iter().map(|q| router.query_async(q.values.clone())).collect();
+        let index = crate::index::DtwIndex::builder_from_dataset(ds)
+            .bound(BoundKind::Keogh)
+            .backend(BackendKind::Native)
+            .max_batch(8)
+            .build()
+            .unwrap();
+        let router = Router::spawn_index(index.clone());
+        let rxs: Vec<_> = ds
+            .test
+            .iter()
+            .map(|q| router.query_async_with(q.values.clone(), QueryOptions::k(3)))
+            .collect();
         for (rx, q) in rxs.into_iter().zip(ds.test.iter()) {
             let resp = rx.recv().unwrap();
-            let (truth, _) = nn_brute_force::<Squared>(&q.values, &train);
-            assert_eq!(resp.result.distance, truth.distance);
+            let (truth, _) =
+                knn_brute_force::<Squared>(&q.values, index.train(), &KnnParams::k(3));
+            let want: Vec<f64> = truth.iter().map(|r| r.distance).collect();
+            assert_eq!(resp.distances(), want);
         }
         let stats = router.shutdown();
         assert_eq!(stats.served, ds.test.len());

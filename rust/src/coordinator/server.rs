@@ -1,8 +1,12 @@
 //! TCP line-protocol front end over the [`Router`].
 //!
 //! Protocol (one line per message, UTF-8):
-//! * request:  `v1,v2,...,vN` — comma-separated series values;
-//! * response: `label=<u32> dist=<f64> nn=<usize> path=<scalar|batched> us=<u128>`;
+//! * request:  `v1,v2,...,vN` — comma-separated series values (1-NN), or
+//!   `k=<n>;v1,v2,...,vN` for the `n` nearest neighbors;
+//! * 1-NN response: `label=<u32> dist=<f64> nn=<usize>
+//!   path=<scalar|batched> us=<u128>`;
+//! * k-NN response: `k=<n> neighbors=<idx>:<label>:<dist>,...
+//!   path=<scalar|batched> us=<u128>` (neighbors ascending by distance);
 //! * `PING` → `PONG`; malformed input → `ERR <why>`.
 //!
 //! One thread per connection feeds the shared router, whose dispatch loop
@@ -17,7 +21,9 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
-use super::engine::EnginePath;
+use crate::index::QueryOptions;
+
+use super::engine::{EnginePath, QueryResponse};
 use super::router::Router;
 
 /// A running server (listener thread + per-connection threads).
@@ -29,8 +35,19 @@ pub struct Server {
 
 impl Server {
     /// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral port) and serve
-    /// queries through `router`.
+    /// queries through `router`. Requests without a `k=` prefix are 1-NN.
     pub fn spawn(addr: &str, router: Arc<Router>) -> Result<Server> {
+        Server::spawn_with_default_k(addr, router, 1)
+    }
+
+    /// [`Server::spawn`] with a different default `k` applied to
+    /// requests that carry no `k=` prefix (the serve example's `--k`).
+    pub fn spawn_with_default_k(
+        addr: &str,
+        router: Arc<Router>,
+        default_k: usize,
+    ) -> Result<Server> {
+        let default_k = default_k.max(1);
         let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
@@ -45,7 +62,7 @@ impl Server {
                         // Detached: connection threads end at client EOF
                         // (or process exit); joining them here would make
                         // shutdown wait on idle clients.
-                        std::thread::spawn(move || handle_conn(stream, router));
+                        std::thread::spawn(move || handle_conn(stream, router, default_k));
                     }
                     Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                         std::thread::sleep(std::time::Duration::from_millis(5));
@@ -85,7 +102,7 @@ impl Drop for Server {
     }
 }
 
-fn handle_conn(stream: TcpStream, router: Arc<Router>) {
+fn handle_conn(stream: TcpStream, router: Arc<Router>, default_k: usize) {
     let peer = stream.peer_addr().ok();
     let mut writer = match stream.try_clone() {
         Ok(w) => w,
@@ -97,7 +114,7 @@ fn handle_conn(stream: TcpStream, router: Arc<Router>) {
             Ok(l) => l,
             Err(_) => break,
         };
-        let reply = respond(&line, &router);
+        let reply = respond(&line, &router, default_k);
         if writer.write_all(reply.as_bytes()).is_err() || writer.write_all(b"\n").is_err() {
             break;
         }
@@ -105,7 +122,7 @@ fn handle_conn(stream: TcpStream, router: Arc<Router>) {
     log::debug!("connection {peer:?} closed");
 }
 
-fn respond(line: &str, router: &Router) -> String {
+fn respond(line: &str, router: &Router, default_k: usize) -> String {
     let line = line.trim();
     if line.is_empty() {
         return "ERR empty".into();
@@ -113,24 +130,50 @@ fn respond(line: &str, router: &Router) -> String {
     if line.eq_ignore_ascii_case("PING") {
         return "PONG".into();
     }
+    // Optional `k=<n>;` prefix selects k-NN for this request.
+    let (k, payload) = match line.strip_prefix("k=") {
+        Some(rest) => match rest.split_once(';') {
+            Some((kstr, payload)) => match kstr.trim().parse::<usize>() {
+                Ok(k) if k >= 1 => (k, payload),
+                _ => return "ERR k must be a positive integer".into(),
+            },
+            None => return "ERR expected k=<n>;v1,v2,...".into(),
+        },
+        None => (default_k, line),
+    };
     let values: Result<Vec<f64>, _> =
-        line.split(',').map(|f| f.trim().parse::<f64>()).collect();
-    match values {
-        Ok(values) if !values.is_empty() => {
-            let resp = router.query(values);
-            format!(
-                "label={} dist={:.6} nn={} path={} us={}",
-                resp.result.label,
-                resp.result.distance,
-                resp.result.nn_index,
-                match resp.path {
-                    EnginePath::Scalar => "scalar",
-                    EnginePath::Batched => "batched",
-                },
-                resp.latency.as_micros()
-            )
-        }
-        _ => "ERR expected comma-separated floats".into(),
+        payload.split(',').map(|f| f.trim().parse::<f64>()).collect();
+    let values = match values {
+        Ok(values) if !values.is_empty() => values,
+        _ => return "ERR expected comma-separated floats".into(),
+    };
+    let outcome = router.query_with(values, QueryOptions::k(k));
+    let path = if outcome.batched { "batched" } else { "scalar" };
+    if k == 1 {
+        // Legacy 1-NN shape, byte-compatible with the v1 protocol.
+        let resp = QueryResponse::from_outcome(outcome);
+        format!(
+            "label={} dist={:.6} nn={} path={} us={}",
+            resp.result.label,
+            resp.result.distance,
+            resp.result.nn_index,
+            match resp.path {
+                EnginePath::Scalar => "scalar",
+                EnginePath::Batched => "batched",
+            },
+            resp.latency.as_micros()
+        )
+    } else {
+        let neighbors: Vec<String> = outcome
+            .neighbors
+            .iter()
+            .map(|n| format!("{}:{}:{:.6}", n.index, n.label, n.distance))
+            .collect();
+        format!(
+            "k={k} neighbors={} path={path} us={}",
+            neighbors.join(","),
+            outcome.latency.as_micros()
+        )
     }
 }
 
@@ -154,6 +197,8 @@ mod tests {
         conn.write_all(b"PING\n").unwrap();
         let q: Vec<String> = ds.test[0].values.iter().map(|v| v.to_string()).collect();
         conn.write_all(format!("{}\n", q.join(",")).as_bytes()).unwrap();
+        conn.write_all(format!("k=3;{}\n", q.join(",")).as_bytes()).unwrap();
+        conn.write_all(b"k=0;1,2\n").unwrap();
         conn.write_all(b"garbage\n").unwrap();
 
         let mut lines = BufReader::new(conn).lines();
@@ -161,6 +206,11 @@ mod tests {
         let resp = lines.next().unwrap().unwrap();
         assert!(resp.starts_with("label="), "{resp}");
         assert!(resp.contains("path=scalar"));
+        let knn = lines.next().unwrap().unwrap();
+        assert!(knn.starts_with("k=3 neighbors="), "{knn}");
+        assert_eq!(knn.matches(':').count(), 6, "3 neighbors, 2 colons each: {knn}");
+        let bad_k = lines.next().unwrap().unwrap();
+        assert!(bad_k.starts_with("ERR"), "{bad_k}");
         let err = lines.next().unwrap().unwrap();
         assert!(err.starts_with("ERR"), "{err}");
 

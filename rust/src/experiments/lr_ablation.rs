@@ -7,7 +7,7 @@
 use crate::bounds::BoundKind;
 use crate::data::Dataset;
 use crate::delta::Delta;
-use crate::search::classify::SearchMode;
+use crate::search::SearchStrategy;
 
 use super::nn_timing::{nn_timing, BoundTiming, TimedBound};
 use super::tightness::{tightness_experiment, TightnessResult};
@@ -36,7 +36,7 @@ pub fn lr_ablation<D: Delta>(
     let tightness = tightness_experiment::<D>(datasets, &bounds);
     let windows: Vec<usize> = datasets.iter().map(|d| d.window).collect();
     let timed: Vec<TimedBound> = bounds.iter().map(|&b| TimedBound::Fixed(b)).collect();
-    let timing = nn_timing::<D>(datasets, &windows, &timed, SearchMode::Sorted, repeats, seed);
+    let timing = nn_timing::<D>(datasets, &windows, &timed, SearchStrategy::Sorted, repeats, seed);
     LrAblationResult { tightness, timing }
 }
 

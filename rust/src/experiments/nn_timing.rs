@@ -15,9 +15,10 @@ use std::time::Duration;
 use crate::bounds::BoundKind;
 use crate::data::Dataset;
 use crate::delta::Delta;
+use crate::index::DtwIndex;
 use crate::metrics::{format_duration, Summary, Table};
-use crate::search::classify::{classify_dataset, SearchMode};
-use crate::search::PreparedTrainSet;
+use crate::search::classify::classify_dataset;
+use crate::search::SearchStrategy;
 
 /// Timing of one (dataset, bound) cell.
 #[derive(Debug, Clone)]
@@ -85,7 +86,7 @@ pub fn nn_timing<D: Delta>(
     datasets: &[&Dataset],
     windows: &[usize],
     bounds: &[TimedBound],
-    mode: SearchMode,
+    strategy: SearchStrategy,
     repeats: usize,
     seed: u64,
 ) -> Vec<BoundTiming> {
@@ -97,19 +98,24 @@ pub fn nn_timing<D: Delta>(
 
     for (di, ds) in datasets.iter().enumerate() {
         let w = windows[di];
-        let train = PreparedTrainSet::from_dataset(ds, w);
+        // One index per dataset; per-cell bound variations share its
+        // prepared envelopes through cheap `with_bound` handles.
+        let index = DtwIndex::builder_from_dataset(ds)
+            .window(w)
+            .strategy(strategy)
+            .build()
+            .expect("dataset series share one length");
         for (bi, tb) in bounds.iter().enumerate() {
             let cell = match tb {
-                TimedBound::Fixed(b) => time_cell::<D>(ds, &train, *b, mode, repeats, seed, None),
+                TimedBound::Fixed(b) => time_cell::<D>(ds, &index, *b, repeats, seed, None),
                 TimedBound::EnhancedStar => {
                     // Paper protocol: report the fastest k per dataset.
                     let mut best: Option<CellTiming> = None;
                     for &k in super::ENHANCED_K_GRID {
                         let c = time_cell::<D>(
                             ds,
-                            &train,
+                            &index,
                             BoundKind::Enhanced(k),
-                            mode,
                             repeats,
                             seed,
                             Some(k),
@@ -135,17 +141,17 @@ pub fn nn_timing<D: Delta>(
 
 fn time_cell<D: Delta>(
     ds: &Dataset,
-    train: &PreparedTrainSet,
+    index: &DtwIndex,
     bound: BoundKind,
-    mode: SearchMode,
     repeats: usize,
     seed: u64,
     chosen_k: Option<usize>,
 ) -> CellTiming {
+    let cell_index = index.with_bound(bound);
     let mut times_ms = Vec::with_capacity(repeats);
     let mut accuracy = 0.0;
     for rep in 0..repeats {
-        let out = classify_dataset::<D>(ds, train, bound, mode, seed.wrapping_add(rep as u64));
+        let out = classify_dataset::<D>(ds, &cell_index, seed.wrapping_add(rep as u64));
         times_ms.push(out.elapsed.as_secs_f64() * 1e3);
         accuracy = out.accuracy;
     }
@@ -231,7 +237,7 @@ mod tests {
             &datasets,
             &windows,
             &bounds,
-            SearchMode::Sorted,
+            SearchStrategy::Sorted,
             2,
             42,
         );
@@ -260,7 +266,7 @@ mod tests {
             &datasets,
             &windows,
             &[TimedBound::EnhancedStar],
-            SearchMode::Sorted,
+            SearchStrategy::Sorted,
             1,
             7,
         );

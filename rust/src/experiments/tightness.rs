@@ -10,9 +10,9 @@ use crate::bounds::BoundKind;
 use crate::coordinator::WorkerPool;
 use crate::data::Dataset;
 use crate::delta::Delta;
+use crate::index::DtwIndex;
 use crate::metrics::Table;
 use crate::search::tightness::dataset_tightness;
-use crate::search::PreparedTrainSet;
 
 /// Per-dataset tightness for a set of bounds.
 #[derive(Debug, Clone)]
@@ -77,10 +77,13 @@ pub fn tightness_experiment<D: Delta>(
         // datasets (capacity is retained, which is the point of the
         // per-worker state).
         cache.clear();
-        let train = PreparedTrainSet::from_dataset(ds, ds.window);
+        let index = DtwIndex::builder_from_dataset(ds)
+            .window(ds.window)
+            .build()
+            .expect("dataset series share one length");
         let vals: Vec<f64> = bounds
             .iter()
-            .map(|&b| dataset_tightness::<D>(ds, &train, b, cache).mean)
+            .map(|&b| dataset_tightness::<D>(ds, &index.with_bound(b), cache).mean)
             .collect();
         log::info!("tightness {}: done ({} bounds)", ds.name, bounds.len());
         (ds.name.clone(), ds.window, vals)

@@ -8,7 +8,7 @@
 use crate::data::Dataset;
 use crate::delta::Delta;
 use crate::metrics::Table;
-use crate::search::classify::SearchMode;
+use crate::search::SearchStrategy;
 
 use super::nn_timing::{comparison_table, nn_timing, BoundTiming, TimedBound};
 use crate::bounds::BoundKind;
@@ -79,7 +79,7 @@ pub fn window_sweep<D: Delta>(
         datasets,
         &windows,
         &bounds,
-        SearchMode::Sorted,
+        SearchStrategy::Sorted,
         repeats,
         seed,
     );

@@ -1,0 +1,158 @@
+//! The [`DtwIndexBuilder`]: every knob of the facade in one place, with
+//! validation at `build()` so a constructed [`DtwIndex`] is always
+//! internally consistent.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::bounds::{BoundKind, PreparedSeries};
+use crate::data::znorm::znormalize;
+use crate::data::Dataset;
+use crate::runtime::BackendKind;
+use crate::search::{PreparedTrainSet, SearchStrategy};
+
+use super::{DtwIndex, IndexConfig};
+
+/// Builder for [`DtwIndex`] — see the crate-level quickstart.
+///
+/// Defaults: window `max(1, ℓ/10)`, `LB_Webb`, [`SearchStrategy::Sorted`],
+/// [`BackendKind::Native`] batched prefilter, no z-normalization,
+/// `max_batch = 16`.
+#[derive(Debug, Clone)]
+pub struct DtwIndexBuilder {
+    series: Vec<Vec<f64>>,
+    labels: Option<Vec<u32>>,
+    window: Option<usize>,
+    bound: BoundKind,
+    strategy: SearchStrategy,
+    backend: BackendKind,
+    max_batch: usize,
+    znorm: bool,
+    seed: u64,
+}
+
+impl DtwIndexBuilder {
+    pub(super) fn new(series: Vec<Vec<f64>>) -> DtwIndexBuilder {
+        DtwIndexBuilder {
+            series,
+            labels: None,
+            window: None,
+            bound: BoundKind::Webb,
+            strategy: SearchStrategy::Sorted,
+            backend: BackendKind::Native,
+            max_batch: 16,
+            znorm: false,
+            seed: 0x5EED,
+        }
+    }
+
+    pub(super) fn from_dataset(ds: &Dataset) -> DtwIndexBuilder {
+        let mut b =
+            DtwIndexBuilder::new(ds.train.iter().map(|s| s.values.clone()).collect());
+        b.labels = Some(ds.train.iter().map(|s| s.label).collect());
+        b.window = Some(ds.window.max(1));
+        b
+    }
+
+    /// Per-series labels (defaults to all-zero when the corpus is
+    /// unlabeled). Length must match the series count.
+    pub fn labels(mut self, labels: Vec<u32>) -> DtwIndexBuilder {
+        self.labels = Some(labels);
+        self
+    }
+
+    /// Warping window `w` (Sakoe–Chiba band radius).
+    pub fn window(mut self, w: usize) -> DtwIndexBuilder {
+        self.window = Some(w);
+        self
+    }
+
+    /// Lower bound used for screening (default `LB_Webb`).
+    pub fn bound(mut self, bound: BoundKind) -> DtwIndexBuilder {
+        self.bound = bound;
+        self
+    }
+
+    /// Search strategy (default [`SearchStrategy::Sorted`]).
+    pub fn strategy(mut self, strategy: SearchStrategy) -> DtwIndexBuilder {
+        self.strategy = strategy;
+        self
+    }
+
+    /// Which batched prefilter backend new [`super::Searcher`]s carry
+    /// (default [`BackendKind::Native`]). [`BackendKind::Pjrt`] handles
+    /// are not constructible here — attach one per searcher with
+    /// [`super::Searcher::set_backend`].
+    pub fn backend(mut self, backend: BackendKind) -> DtwIndexBuilder {
+        self.backend = backend;
+        self
+    }
+
+    /// Cap on how many queued queries ride one prefilter execution.
+    pub fn max_batch(mut self, max_batch: usize) -> DtwIndexBuilder {
+        self.max_batch = max_batch.max(1);
+        self
+    }
+
+    /// Z-normalize the indexed series now and every query at search time
+    /// (the UCR evaluation convention). Off by default.
+    pub fn znormalize(mut self, znorm: bool) -> DtwIndexBuilder {
+        self.znorm = znorm;
+        self
+    }
+
+    /// Seed for the random-order strategy's per-query candidate shuffle.
+    pub fn seed(mut self, seed: u64) -> DtwIndexBuilder {
+        self.seed = seed;
+        self
+    }
+
+    /// Validate and build: prepares every series' envelopes once (the
+    /// paper's off-query-path preparation step).
+    ///
+    /// Errors when series lengths differ (bounds assume one shared
+    /// length), series are empty, or labels mismatch the series count.
+    pub fn build(self) -> Result<DtwIndex> {
+        let n = self.series.len();
+        let l = self.series.first().map(|s| s.len()).unwrap_or(0);
+        if let Some(bad) = self.series.iter().position(|s| s.len() != l) {
+            bail!("series {bad} has length {}, expected {l} (bounds assume one shared length)",
+                self.series[bad].len());
+        }
+        if n > 0 && l == 0 {
+            bail!("cannot index empty series");
+        }
+        let labels = match self.labels {
+            Some(labels) => {
+                if labels.len() != n {
+                    bail!("{} labels for {n} series", labels.len());
+                }
+                labels
+            }
+            None => vec![0; n],
+        };
+        let w = self.window.unwrap_or_else(|| (l / 10).max(1));
+        let series = self
+            .series
+            .into_iter()
+            .map(|mut values| {
+                if self.znorm {
+                    znormalize(&mut values);
+                }
+                PreparedSeries::prepare(values, w)
+            })
+            .collect();
+        Ok(DtwIndex {
+            train: Arc::new(PreparedTrainSet { labels, series, w }),
+            config: IndexConfig {
+                bound: self.bound,
+                strategy: self.strategy,
+                backend: self.backend,
+                max_batch: self.max_batch,
+                znorm: self.znorm,
+                seed: self.seed,
+            },
+        })
+    }
+}

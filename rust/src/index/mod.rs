@@ -1,0 +1,631 @@
+//! The [`DtwIndex`] facade — **the crate's primary API**.
+//!
+//! The paper's whole pitch (§8, Algorithms 3–4) is that lower bounds are
+//! *screening devices for nearest-neighbor search*. This module packages
+//! that workflow the way the UCR suite does (index once, query many):
+//!
+//! ```
+//! use dtw_bounds::delta::Squared;
+//! use dtw_bounds::index::DtwIndex;
+//!
+//! let train = vec![
+//!     vec![0.0, 0.1, 0.4, 0.2, 0.0, -0.2],
+//!     vec![1.0, 0.9, 0.8, 0.9, 1.1, 1.0],
+//!     vec![0.0, 0.5, 1.0, 0.5, 0.0, -0.5],
+//! ];
+//! let index = DtwIndex::builder(train).labels(vec![0, 1, 0]).window(1).build()?;
+//! let outcome = index.knn::<Squared>(&[0.0, 0.2, 0.5, 0.2, 0.0, -0.3], 2);
+//! assert_eq!(outcome.neighbors.len(), 2);
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+//!
+//! * [`DtwIndex`] — immutable, cheaply cloneable (`Arc` inside), `Send +
+//!   Sync`: the prepared envelopes plus the search configuration. Share
+//!   one across threads; every layer (CLI, coordinator, benches,
+//!   examples) consumes it.
+//! * [`Searcher`] — a per-thread query handle owning the mutable state a
+//!   search needs: scratch buffers, sort buffers, the random-order RNG
+//!   and the optional batched [`LbBackend`] prefilter (backend handles,
+//!   PJRT in particular, must not cross threads).
+//! * [`Query`]/[`QueryOptions`]/[`QueryOutcome`] — typed k-NN requests
+//!   (`k ≥ 1`, abandon threshold, z-norm policy, self-match exclusion)
+//!   and results with per-stage pruning counts.
+//!
+//! Every path returns **exact** DTW nearest neighbors; strategies and
+//! backends only move the screening cost.
+
+mod builder;
+mod query;
+
+pub use builder::DtwIndexBuilder;
+pub use query::{Neighbor, Query, QueryOptions, QueryOutcome};
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::bounds::{BoundKind, Scratch};
+use crate::data::rng::Rng;
+use crate::data::znorm::znormalized;
+use crate::data::Dataset;
+use crate::delta::{Delta, Squared};
+use crate::dtw::dtw_ea;
+use crate::runtime::{BackendKind, LbBackend, NativeBatchLb};
+use crate::search::knn::{
+    knn_brute_force, knn_random_order, knn_sorted, knn_sorted_precomputed, KnnParams,
+};
+use crate::search::nn::NnResult;
+use crate::search::{PreparedTrainSet, SearchStrategy};
+
+/// Search configuration fixed at build time.
+#[derive(Debug, Clone)]
+pub(crate) struct IndexConfig {
+    pub(crate) bound: BoundKind,
+    pub(crate) strategy: SearchStrategy,
+    pub(crate) backend: BackendKind,
+    pub(crate) max_batch: usize,
+    pub(crate) znorm: bool,
+    pub(crate) seed: u64,
+}
+
+/// An immutable DTW nearest-neighbor index: prepared training envelopes
+/// plus search configuration. Cloning is cheap (the prepared data is
+/// shared via `Arc`), and the handle is `Send + Sync` — share one across
+/// threads and give each thread its own [`Searcher`].
+#[derive(Debug, Clone)]
+pub struct DtwIndex {
+    pub(crate) train: Arc<PreparedTrainSet>,
+    pub(crate) config: IndexConfig,
+}
+
+impl DtwIndex {
+    /// Start building an index over a training corpus (one `Vec<f64>`
+    /// per series; all series must share one length).
+    pub fn builder(series: Vec<Vec<f64>>) -> DtwIndexBuilder {
+        DtwIndexBuilder::new(series)
+    }
+
+    /// Start building from a dataset's training split (labels and the
+    /// recommended window are pre-filled; override freely).
+    pub fn builder_from_dataset(ds: &Dataset) -> DtwIndexBuilder {
+        DtwIndexBuilder::from_dataset(ds)
+    }
+
+    /// The prepared training data.
+    pub fn train(&self) -> &PreparedTrainSet {
+        &self.train
+    }
+
+    /// Number of indexed series.
+    pub fn len(&self) -> usize {
+        self.train.len()
+    }
+
+    /// True when nothing is indexed.
+    pub fn is_empty(&self) -> bool {
+        self.train.is_empty()
+    }
+
+    /// The warping window.
+    pub fn window(&self) -> usize {
+        self.train.w
+    }
+
+    /// The screening bound.
+    pub fn bound(&self) -> BoundKind {
+        self.config.bound
+    }
+
+    /// The search strategy.
+    pub fn strategy(&self) -> SearchStrategy {
+        self.config.strategy
+    }
+
+    /// The backend kind new searchers instantiate.
+    pub fn backend(&self) -> BackendKind {
+        self.config.backend
+    }
+
+    /// Cap on how many queries ride one batched prefilter execution.
+    pub fn max_batch(&self) -> usize {
+        self.config.max_batch
+    }
+
+    /// A cheap handle with a different screening bound (shares the
+    /// prepared data — nothing is recomputed).
+    pub fn with_bound(&self, bound: BoundKind) -> DtwIndex {
+        let mut out = self.clone();
+        out.config.bound = bound;
+        out
+    }
+
+    /// A cheap handle with a different search strategy.
+    pub fn with_strategy(&self, strategy: SearchStrategy) -> DtwIndex {
+        let mut out = self.clone();
+        out.config.strategy = strategy;
+        out
+    }
+
+    /// A per-thread query handle. The searcher carries the scratch
+    /// buffers and (for [`BackendKind::Native`]) a fresh batched
+    /// prefilter; PJRT backends must be attached explicitly with
+    /// [`Searcher::set_backend`] inside the owning thread.
+    pub fn searcher(&self) -> Searcher {
+        let backend: Option<Box<dyn LbBackend>> = match self.config.backend {
+            BackendKind::Native => Some(Box::new(NativeBatchLb::new())),
+            BackendKind::None => None,
+            BackendKind::Pjrt => {
+                // Loud on purpose: without an explicit attach this
+                // searcher silently serves every batch on the scalar path.
+                log::warn!(
+                    "index: pjrt backends are per-thread handles and cannot be \
+                     auto-constructed; attach one with Searcher::set_backend (or \
+                     NnEngine::attach_batch_lb) inside the owning thread — until \
+                     then batches run the scalar path"
+                );
+                None
+            }
+        };
+        let l = self.train.series.first().map(|s| s.len()).unwrap_or(0);
+        Searcher {
+            index: self.clone(),
+            scratch: Scratch::new(l),
+            bound_buf: Vec::new(),
+            index_buf: Vec::new(),
+            order: Vec::new(),
+            rng: Rng::seeded(self.config.seed),
+            backend,
+        }
+    }
+
+    /// Convenience: the `k` nearest neighbors of `query` through a
+    /// one-shot [`Searcher`]. Hot paths should hold a searcher instead
+    /// (amortizes scratch and backend setup).
+    pub fn knn<D: Delta>(&self, query: &[f64], k: usize) -> QueryOutcome {
+        self.searcher().query_values::<D>(query, &QueryOptions::k(k))
+    }
+
+    /// Convenience: answer one typed [`Query`] through a one-shot
+    /// [`Searcher`].
+    pub fn query<D: Delta>(&self, query: &Query) -> QueryOutcome {
+        self.searcher().query::<D>(query)
+    }
+}
+
+/// A per-thread query handle over a shared [`DtwIndex`].
+///
+/// Owns everything mutable about a search — scratch buffers (the hot
+/// path never allocates), the candidate-order RNG, and the optional
+/// batched [`LbBackend`] prefilter — so the index itself stays `Sync`.
+pub struct Searcher {
+    index: DtwIndex,
+    scratch: Scratch,
+    bound_buf: Vec<f64>,
+    index_buf: Vec<usize>,
+    order: Vec<usize>,
+    rng: Rng,
+    backend: Option<Box<dyn LbBackend>>,
+}
+
+impl Searcher {
+    /// The index this searcher reads.
+    pub fn index(&self) -> &DtwIndex {
+        &self.index
+    }
+
+    /// Reseed the random-order strategy's candidate shuffle (for
+    /// reproducible experiments).
+    pub fn reseed(&mut self, seed: u64) {
+        self.rng = Rng::seeded(seed);
+    }
+
+    /// Attach (or replace) the batched screening backend.
+    pub fn set_backend(&mut self, backend: Box<dyn LbBackend>) {
+        log::info!("searcher: batched prefilter backend = {}", backend.name());
+        self.backend = Some(backend);
+    }
+
+    /// Drop the batched backend (scalar path only).
+    pub fn clear_backend(&mut self) {
+        self.backend = None;
+    }
+
+    /// Name of the attached screening backend, if any.
+    pub fn backend_name(&self) -> Option<&'static str> {
+        self.backend.as_ref().map(|b| b.name())
+    }
+
+    /// True when a batched screening backend is attached.
+    pub fn has_backend(&self) -> bool {
+        self.backend.is_some()
+    }
+
+    /// Answer one typed [`Query`] on the scalar path.
+    pub fn query<D: Delta>(&mut self, query: &Query) -> QueryOutcome {
+        self.query_values::<D>(&query.values, &query.options)
+    }
+
+    /// Answer one query given raw values and options (avoids building a
+    /// [`Query`] when the caller already borrows the series).
+    pub fn query_values<D: Delta>(&mut self, values: &[f64], opts: &QueryOptions) -> QueryOutcome {
+        let started = Instant::now();
+        let cfg = &self.index.config;
+        let train = &*self.index.train;
+        let params = KnnParams {
+            k: opts.k.max(1),
+            threshold: opts.abandon_at.unwrap_or(f64::INFINITY),
+            exclude: opts.exclude,
+        };
+        let znorm = opts.znorm.unwrap_or(cfg.znorm);
+        // A lone query cannot ride the batch prefilter: degrade to the
+        // scalar sorted walk.
+        let strategy = match cfg.strategy {
+            SearchStrategy::SortedPrecomputed => SearchStrategy::Sorted,
+            s => s,
+        };
+        let (results, stats) = match strategy {
+            SearchStrategy::BruteForce => {
+                if znorm {
+                    knn_brute_force::<D>(&znormalized(values), train, &params)
+                } else {
+                    knn_brute_force::<D>(values, train, &params)
+                }
+            }
+            SearchStrategy::RandomOrder => {
+                let owned = if znorm { znormalized(values) } else { values.to_vec() };
+                let pq = cfg.bound.prepare_query(owned, train.w);
+                self.order.clear();
+                self.order.extend(0..train.len());
+                self.rng.shuffle(&mut self.order);
+                knn_random_order::<D>(
+                    &pq,
+                    train,
+                    cfg.bound,
+                    &self.order,
+                    &params,
+                    &mut self.scratch,
+                )
+            }
+            SearchStrategy::Sorted | SearchStrategy::SortedPrecomputed => {
+                let owned = if znorm { znormalized(values) } else { values.to_vec() };
+                let pq = cfg.bound.prepare_query(owned, train.w);
+                knn_sorted::<D>(
+                    &pq,
+                    train,
+                    cfg.bound,
+                    &params,
+                    &mut self.scratch,
+                    &mut self.bound_buf,
+                    &mut self.index_buf,
+                )
+            }
+        };
+        QueryOutcome {
+            neighbors: results.into_iter().map(Neighbor::from).collect(),
+            stats,
+            strategy,
+            batched: false,
+            latency: started.elapsed(),
+        }
+    }
+
+    /// Answer a batch of queries sharing one [`QueryOptions`], riding the
+    /// attached backend when profitable (see [`Searcher::query_batch_mixed`]).
+    pub fn query_batch<D: Delta>(
+        &mut self,
+        queries: &[Vec<f64>],
+        opts: &QueryOptions,
+    ) -> Vec<QueryOutcome> {
+        let refs: Vec<&[f64]> = queries.iter().map(|v| v.as_slice()).collect();
+        let opt_refs: Vec<&QueryOptions> = vec![opts; queries.len()];
+        self.batch_core::<D>(&refs, &opt_refs)
+    }
+
+    /// Answer a batch of `(values, options)` pairs — the router's shape,
+    /// where concurrent clients may ask for different `k`.
+    ///
+    /// When a batched backend is attached, the strategy is sorted-family,
+    /// the batch is non-trivial, every series fits the backend's shape
+    /// and δ is the squared difference (the backend contract), one
+    /// prefilter execution screens the whole batch and each query walks
+    /// its candidates in ascending-bound order. Otherwise every query
+    /// takes its scalar path. Results are exact either way.
+    pub fn query_batch_mixed<D: Delta>(
+        &mut self,
+        items: &[(Vec<f64>, QueryOptions)],
+    ) -> Vec<QueryOutcome> {
+        let refs: Vec<&[f64]> = items.iter().map(|(v, _)| v.as_slice()).collect();
+        let opt_refs: Vec<&QueryOptions> = items.iter().map(|(_, o)| o).collect();
+        self.batch_core::<D>(&refs, &opt_refs)
+    }
+
+    /// Per-query scalar path for a whole batch. The caller already
+    /// applied z-normalization to `q_views`, so it is pinned off here.
+    fn scalar_fallback<D: Delta>(
+        &mut self,
+        q_views: &[&[f64]],
+        opts: &[&QueryOptions],
+    ) -> Vec<QueryOutcome> {
+        q_views
+            .iter()
+            .zip(opts)
+            .map(|(q, o)| {
+                let mut o = (*o).clone();
+                o.znorm = Some(false);
+                self.query_values::<D>(q, &o)
+            })
+            .collect()
+    }
+
+    fn batch_core<D: Delta>(
+        &mut self,
+        queries: &[&[f64]],
+        opts: &[&QueryOptions],
+    ) -> Vec<QueryOutcome> {
+        debug_assert_eq!(queries.len(), opts.len());
+        if queries.is_empty() {
+            return Vec::new();
+        }
+        let cfg_znorm = self.index.config.znorm;
+        // Normalize up front so the backend and DTW see one view, then
+        // pin znorm off for any scalar fallback below.
+        let normed: Option<Vec<Vec<f64>>> =
+            if queries.iter().zip(opts).any(|(_, o)| o.znorm.unwrap_or(cfg_znorm)) {
+                Some(
+                    queries
+                        .iter()
+                        .zip(opts)
+                        .map(|(q, o)| {
+                            if o.znorm.unwrap_or(cfg_znorm) {
+                                znormalized(q)
+                            } else {
+                                q.to_vec()
+                            }
+                        })
+                        .collect(),
+                )
+            } else {
+                None
+            };
+        let q_views: Vec<&[f64]> = match &normed {
+            Some(v) => v.iter().map(|v| v.as_slice()).collect(),
+            None => queries.to_vec(),
+        };
+
+        let l = q_views[0].len();
+        let sorted_family = matches!(
+            self.index.config.strategy,
+            SearchStrategy::Sorted | SearchStrategy::SortedPrecomputed
+        );
+        let use_batch = sorted_family
+            && q_views.len() > 1
+            && !self.index.train.is_empty()
+            // The backend bound matrix is LB_KEOGH under the squared δ;
+            // other deltas must stay on the scalar path to remain exact.
+            && D::NAME == Squared::NAME
+            // Backends require one shared length; reject up front rather
+            // than paying the seed DTWs and a per-batch backend error.
+            && l == self.index.train.series[0].len()
+            && q_views.iter().all(|q| q.len() == l)
+            && self
+                .backend
+                .as_ref()
+                .map(|be| be.supports(q_views.len(), self.index.train.len(), l))
+                .unwrap_or(false);
+        if !use_batch {
+            return self.scalar_fallback::<D>(&q_views, opts);
+        }
+
+        let started = Instant::now();
+        let train = &*self.index.train;
+        let w = train.w;
+        let backend = self.backend.as_mut().expect("checked above");
+        // For cutoff-honouring backends, seed each query's best-so-far
+        // with its exact DTW distance to candidate 0: (partial) bounds
+        // abandoned against the seed are still valid lower bounds, so
+        // pruning with them at any later cutoff — including the k-th
+        // best for k > 1 — stays exact; they merely sort pessimistically.
+        // Branch-free backends ignore cutoffs, so skip the seed DTW and
+        // start the walk cold, exactly like Algorithm 4. A query that
+        // excludes candidate 0 also starts cold.
+        let seeds: Vec<f64> = if backend.uses_cutoffs() {
+            q_views
+                .iter()
+                .zip(opts)
+                .map(|(q, o)| {
+                    if o.exclude == Some(0) {
+                        f64::INFINITY
+                    } else {
+                        dtw_ea::<D>(q, &train.series[0].values, w, f64::INFINITY)
+                    }
+                })
+                .collect()
+        } else {
+            vec![f64::INFINITY; q_views.len()]
+        };
+        let ranking = match backend.rank(&q_views, &train.series, &seeds) {
+            Ok(r) => r,
+            Err(e) => {
+                log::warn!("batch prefilter failed ({e:#}); falling back to scalar");
+                return self.scalar_fallback::<D>(&q_views, opts);
+            }
+        };
+        let prefilter_each = started.elapsed() / q_views.len() as u32;
+
+        let mut out = Vec::with_capacity(q_views.len());
+        for (qi, q) in q_views.iter().enumerate() {
+            let q_started = Instant::now();
+            let o = opts[qi];
+            let params = KnnParams {
+                k: o.k.max(1),
+                threshold: o.abandon_at.unwrap_or(f64::INFINITY),
+                exclude: o.exclude,
+            };
+            // A finite seed is a known candidate-0 distance; an infinite
+            // one means "unseeded" (cold walk).
+            let initial = if seeds[qi].is_finite() {
+                Some(NnResult { nn_index: 0, distance: seeds[qi], label: train.labels[0] })
+            } else {
+                None
+            };
+            let (results, mut stats) = knn_sorted_precomputed::<D>(
+                q,
+                train,
+                &ranking.bounds[qi],
+                &ranking.order[qi],
+                initial,
+                &params,
+            );
+            // The seed distance was one real DTW execution for this query.
+            if seeds[qi].is_finite() {
+                stats.dtw_calls += 1;
+            }
+            out.push(QueryOutcome {
+                neighbors: results.into_iter().map(Neighbor::from).collect(),
+                stats,
+                strategy: SearchStrategy::SortedPrecomputed,
+                batched: true,
+                latency: prefilter_each + q_started.elapsed(),
+            });
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate_archive, ArchiveSpec, Scale};
+    use crate::search::knn::{knn_brute_force, KnnParams};
+
+    fn index_for(seed: u64) -> (crate::data::Dataset, DtwIndex) {
+        let ds = generate_archive(&ArchiveSpec::new(Scale::Tiny, seed))[0].clone();
+        let index = DtwIndex::builder_from_dataset(&ds).build().expect("valid dataset");
+        (ds, index)
+    }
+
+    #[test]
+    fn builder_validates_shapes() {
+        assert!(DtwIndex::builder(vec![vec![1.0, 2.0], vec![3.0]]).build().is_err());
+        assert!(DtwIndex::builder(vec![vec![]]).build().is_err());
+        assert!(DtwIndex::builder(vec![vec![1.0, 2.0]]).labels(vec![0, 1]).build().is_err());
+        let idx = DtwIndex::builder(vec![vec![1.0, 2.0, 3.0, 4.0]]).window(1).build().unwrap();
+        assert_eq!(idx.len(), 1);
+        assert_eq!(idx.window(), 1);
+        // Empty index is legal; queries return no neighbors.
+        let empty = DtwIndex::builder(Vec::new()).build().unwrap();
+        let out = empty.knn::<Squared>(&[1.0, 2.0], 3);
+        assert!(out.neighbors.is_empty());
+    }
+
+    #[test]
+    fn knn_matches_brute_force_on_every_strategy() {
+        let (ds, index) = index_for(91);
+        for &strategy in SearchStrategy::ALL {
+            let idx = index.with_strategy(strategy);
+            let mut searcher = idx.searcher();
+            for q in ds.test.iter().take(4) {
+                for k in [1usize, 3] {
+                    let (truth, _) =
+                        knn_brute_force::<Squared>(&q.values, index.train(), &KnnParams::k(k));
+                    let want: Vec<f64> = truth.iter().map(|r| r.distance).collect();
+                    let out =
+                        searcher.query_values::<Squared>(&q.values, &QueryOptions::k(k));
+                    assert_eq!(out.distances(), want, "{strategy} k={k}");
+                    assert!(!out.batched);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batched_path_matches_scalar_for_knn() {
+        let (ds, index) = index_for(92);
+        let idx = index
+            .with_bound(BoundKind::Keogh)
+            .with_strategy(SearchStrategy::SortedPrecomputed);
+        let mut searcher = idx.searcher();
+        assert_eq!(searcher.backend_name(), Some("native"));
+        let queries: Vec<Vec<f64>> = ds.test.iter().map(|s| s.values.clone()).collect();
+        assert!(queries.len() > 1, "need a real batch");
+        for k in [1usize, 3] {
+            let outs = searcher.query_batch::<Squared>(&queries, &QueryOptions::k(k));
+            for (out, q) in outs.iter().zip(queries.iter()) {
+                assert!(out.batched, "k={k}");
+                let (truth, _) =
+                    knn_brute_force::<Squared>(q, index.train(), &KnnParams::k(k));
+                let want: Vec<f64> = truth.iter().map(|r| r.distance).collect();
+                assert_eq!(out.distances(), want, "batched k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn lone_query_degrades_to_scalar_sorted() {
+        let (ds, index) = index_for(93);
+        let idx = index.with_strategy(SearchStrategy::SortedPrecomputed);
+        let mut searcher = idx.searcher();
+        let outs = searcher
+            .query_batch::<Squared>(&[ds.test[0].values.clone()], &QueryOptions::default());
+        assert_eq!(outs.len(), 1);
+        assert!(!outs[0].batched);
+        assert_eq!(outs[0].strategy, SearchStrategy::Sorted);
+    }
+
+    #[test]
+    fn abandon_threshold_filters_neighbors() {
+        let (ds, index) = index_for(94);
+        let q = &ds.test[0].values;
+        let full = index.knn::<Squared>(q, 5);
+        assert!(!full.neighbors.is_empty());
+        let tau = full.neighbors[0].distance; // strictly below the 1-NN
+        let out = index
+            .query::<Squared>(&Query::new(q.clone()).with_options(
+                QueryOptions::k(5).with_abandon_at(tau),
+            ));
+        assert!(out.neighbors.is_empty(), "nothing is strictly under the 1-NN distance");
+    }
+
+    #[test]
+    fn exclude_supports_self_match_removal() {
+        let (_ds, index) = index_for(95);
+        // Query the index with one of its own members: rank 1 is itself
+        // at distance 0; excluded, the best neighbor must differ.
+        let member = index.train().series[0].values.clone();
+        let with_self = index.knn::<Squared>(&member, 1);
+        assert_eq!(with_self.best().unwrap().distance, 0.0);
+        let out = index.query::<Squared>(
+            &Query::new(member).with_options(QueryOptions::k(1).with_exclude(0)),
+        );
+        assert_ne!(out.best().unwrap().index, 0);
+    }
+
+    #[test]
+    fn znorm_policy_applies_to_train_and_query() {
+        let raw = vec![
+            vec![10.0, 20.0, 30.0, 20.0, 10.0, 0.0],
+            vec![0.0, 1.0, 2.0, 1.0, 0.0, -1.0],
+        ];
+        let index = DtwIndex::builder(raw).window(1).znormalize(true).build().unwrap();
+        // Same shape at a wildly different scale: under z-norm both
+        // training series are identical, so the query matches at ~0.
+        let out = index.knn::<Squared>(&[100.0, 200.0, 300.0, 200.0, 100.0, 0.0], 2);
+        assert!(out.neighbors[0].distance < 1e-12, "{}", out.neighbors[0].distance);
+        assert!(out.neighbors[1].distance < 1e-12);
+        // Per-query override: raw query against normalized train differs.
+        let out_raw = index.query::<Squared>(
+            &Query::new(vec![100.0, 200.0, 300.0, 200.0, 100.0, 0.0])
+                .with_options(QueryOptions::k(1).with_znorm(false)),
+        );
+        assert!(out_raw.neighbors[0].distance > 1.0);
+    }
+
+    #[test]
+    fn with_bound_and_strategy_share_data() {
+        let (_, index) = index_for(96);
+        let other = index.with_bound(BoundKind::Keogh).with_strategy(SearchStrategy::RandomOrder);
+        assert!(Arc::ptr_eq(&index.train, &other.train));
+        assert_eq!(other.bound(), BoundKind::Keogh);
+        assert_eq!(other.strategy(), SearchStrategy::RandomOrder);
+        assert_eq!(index.bound(), BoundKind::Webb, "original handle unchanged");
+    }
+}

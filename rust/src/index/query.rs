@@ -1,0 +1,139 @@
+//! Typed queries and outcomes for the [`super::DtwIndex`] facade.
+
+use std::time::Duration;
+
+use crate::search::nn::{NnResult, SearchStats};
+use crate::search::SearchStrategy;
+
+/// Per-query knobs. The default is a plain exact 1-NN query.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QueryOptions {
+    /// Number of nearest neighbors to return (`k ≥ 1`; clamped).
+    pub k: usize,
+    /// Abandon threshold τ: neighbors at DTW distance ≥ τ are never
+    /// reported and the searcher prunes against τ from the start — the
+    /// streaming-monitor regime ("is anything within τ?"). `None`
+    /// disables it.
+    pub abandon_at: Option<f64>,
+    /// Z-normalize the query before searching; `None` inherits the
+    /// index-level policy set at build time.
+    pub znorm: Option<bool>,
+    /// Training index to exclude (self-match exclusion, e.g. LOOCV).
+    pub exclude: Option<usize>,
+}
+
+impl Default for QueryOptions {
+    fn default() -> Self {
+        QueryOptions { k: 1, abandon_at: None, znorm: None, exclude: None }
+    }
+}
+
+impl QueryOptions {
+    /// Options for a plain k-NN query.
+    pub fn k(k: usize) -> QueryOptions {
+        QueryOptions { k, ..QueryOptions::default() }
+    }
+
+    /// Set the abandon threshold τ.
+    pub fn with_abandon_at(mut self, tau: f64) -> QueryOptions {
+        self.abandon_at = Some(tau);
+        self
+    }
+
+    /// Override the index-level z-normalization policy for this query.
+    pub fn with_znorm(mut self, znorm: bool) -> QueryOptions {
+        self.znorm = Some(znorm);
+        self
+    }
+
+    /// Exclude one training series (self-match exclusion).
+    pub fn with_exclude(mut self, index: usize) -> QueryOptions {
+        self.exclude = Some(index);
+        self
+    }
+}
+
+/// One query: the series plus its options.
+#[derive(Debug, Clone)]
+pub struct Query {
+    /// The query series (same length as the indexed series).
+    pub values: Vec<f64>,
+    /// Per-query knobs.
+    pub options: QueryOptions,
+}
+
+impl Query {
+    /// A plain exact 1-NN query.
+    pub fn new(values: Vec<f64>) -> Query {
+        Query { values, options: QueryOptions::default() }
+    }
+
+    /// Ask for the `k` nearest neighbors.
+    pub fn with_k(mut self, k: usize) -> Query {
+        self.options.k = k;
+        self
+    }
+
+    /// Replace all options.
+    pub fn with_options(mut self, options: QueryOptions) -> Query {
+        self.options = options;
+        self
+    }
+}
+
+/// One returned neighbor.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Neighbor {
+    /// Index of the training series.
+    pub index: usize,
+    /// Its exact DTW distance to the query.
+    pub distance: f64,
+    /// Its label.
+    pub label: u32,
+}
+
+impl From<NnResult> for Neighbor {
+    fn from(r: NnResult) -> Neighbor {
+        Neighbor { index: r.nn_index, distance: r.distance, label: r.label }
+    }
+}
+
+/// Everything a query returns: the neighbors (ascending by distance),
+/// per-stage work counters, and which path answered.
+#[derive(Debug, Clone)]
+pub struct QueryOutcome {
+    /// The `min(k, n)` nearest neighbors, ascending by distance (fewer
+    /// when an abandon threshold filtered candidates out).
+    pub neighbors: Vec<Neighbor>,
+    /// Pruning counters: bound calls, candidates pruned, DTW calls and
+    /// abandons.
+    pub stats: SearchStats,
+    /// The strategy that actually ran (`SortedPrecomputed` degrades to
+    /// `Sorted` for lone queries without a backend batch).
+    pub strategy: SearchStrategy,
+    /// True when a batched [`crate::runtime::LbBackend`] prefilter
+    /// screened this query.
+    pub batched: bool,
+    /// Search latency (batch prefilter cost amortized per query).
+    pub latency: Duration,
+}
+
+impl QueryOutcome {
+    /// The nearest neighbor, if any candidate survived.
+    pub fn best(&self) -> Option<&Neighbor> {
+        self.neighbors.first()
+    }
+
+    /// The nearest neighbor as a legacy [`NnResult`] (the "no neighbor"
+    /// sentinel when the index is empty or τ filtered everything).
+    pub fn best_nn(&self) -> NnResult {
+        self.best()
+            .map(|n| NnResult { nn_index: n.index, distance: n.distance, label: n.label })
+            .unwrap_or_else(NnResult::none)
+    }
+
+    /// The neighbor distances, ascending.
+    pub fn distances(&self) -> Vec<f64> {
+        self.neighbors.iter().map(|n| n.distance).collect()
+    }
+}

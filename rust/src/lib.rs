@@ -1,9 +1,57 @@
 //! # dtw-bounds — Tight lower bounds for Dynamic Time Warping
 //!
 //! A complete reproduction of Webb & Petitjean, *"Tight lower bounds for
-//! Dynamic Time Warping"*, Pattern Recognition 114 (2021) 107895.
+//! Dynamic Time Warping"*, Pattern Recognition 114 (2021) 107895 — grown
+//! into an exact nearest-neighbor DTW search service.
 //!
-//! The library provides:
+//! ## Quickstart: the `DtwIndex` facade
+//!
+//! The primary API is [`index::DtwIndex`]: index a training corpus once
+//! (envelopes are prepared off the query path, the UCR-suite discipline),
+//! then ask for exact k-nearest neighbors. Lower bounds, search strategy
+//! and the batched screening backend are builder knobs:
+//!
+//! ```
+//! use dtw_bounds::bounds::BoundKind;
+//! use dtw_bounds::delta::Squared;
+//! use dtw_bounds::index::{DtwIndex, Query, QueryOptions};
+//! use dtw_bounds::runtime::BackendKind;
+//! use dtw_bounds::search::SearchStrategy;
+//!
+//! let train = vec![
+//!     vec![0.0, 0.1, 0.4, 0.2, 0.0, -0.2],
+//!     vec![1.0, 0.9, 0.8, 0.9, 1.1, 1.0],
+//!     vec![0.0, 0.5, 1.0, 0.5, 0.0, -0.5],
+//! ];
+//! let index = DtwIndex::builder(train)
+//!     .labels(vec![0, 1, 0])
+//!     .window(1)
+//!     .bound(BoundKind::Webb)
+//!     .strategy(SearchStrategy::Sorted)
+//!     .backend(BackendKind::Native)
+//!     .build()?;
+//!
+//! // k-NN with per-stage pruning counts.
+//! let outcome = index.knn::<Squared>(&[0.0, 0.2, 0.5, 0.2, 0.0, -0.3], 2);
+//! assert_eq!(outcome.neighbors.len(), 2);
+//! assert!(outcome.neighbors[0].distance <= outcome.neighbors[1].distance);
+//!
+//! // Typed queries carry an abandon threshold, z-norm policy and
+//! // self-match exclusion; hot paths hold a per-thread `Searcher`.
+//! let mut searcher = index.searcher();
+//! let q = Query::new(vec![0.9, 1.0, 0.9, 0.8, 1.0, 1.1])
+//!     .with_options(QueryOptions::k(1));
+//! let one = searcher.query::<Squared>(&q);
+//! assert_eq!(one.best().unwrap().label, 1);
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+//!
+//! Every path is **exact**: strategies and backends only move the
+//! screening cost. The free-function 1-NN API (`search::nn::nn_sorted`
+//! and friends) is deprecated since 0.3.0 and shims onto the k-NN
+//! kernels in [`search::knn`]; it will be removed one release later.
+//!
+//! ## Layers
 //!
 //! * **DTW** itself ([`dtw`]): windowed dynamic time warping with `O(w)`
 //!   memory, early abandoning, full cost matrices and warping-path
@@ -13,15 +61,18 @@
 //!   and every baseline it compares against (`LB_KIM`, `LB_KEOGH`,
 //!   `LB_IMPROVED`, `LB_ENHANCED`) plus the ablation variants
 //!   (`*_NoLR`) and the cascading evaluator from §8.
-//! * **Nearest-neighbor search** ([`search`]): the paper's Algorithm 3
-//!   (random order with early abandoning) and Algorithm 4 (bound-sorted),
-//!   tightness evaluation, LOOCV window selection and 1-NN classification.
+//! * **The index facade** ([`index`]): builder-configured exact k-NN
+//!   search over a prepared corpus — the primary API.
+//! * **Search kernels** ([`search`]): the paper's Algorithm 3
+//!   (random order with early abandoning) and Algorithm 4 (bound-sorted)
+//!   generalized to k-NN, tightness evaluation, LOOCV window selection
+//!   and 1-NN classification.
 //! * **Data substrate** ([`data`]): a UCR-archive `.tsv` loader and a
 //!   deterministic synthetic archive generator that mirrors the shape
 //!   statistics of the UCR-85 "bakeoff" suite (the real archive is not
 //!   redistributable; see `DESIGN.md` §4).
 //! * **A serving layer** ([`coordinator`]): a std-thread worker pool, query
-//!   router and dynamic batcher exposing NN search as a service.
+//!   router and dynamic batcher exposing the index as a service.
 //! * **Batched screening backends** ([`runtime`]): the pluggable
 //!   [`runtime::LbBackend`] abstraction over the batched `LB_KEOGH`
 //!   prefilter — a cache-blocked, early-abandoning pure-Rust default
@@ -31,7 +82,10 @@
 //! * **Experiment drivers** ([`experiments`]): one per table/figure of the
 //!   paper's evaluation section, shared by `benches/` and the CLI.
 //!
-//! ## Quickstart
+//! ## Low-level API
+//!
+//! The bound kernels remain directly accessible when you manage
+//! preparation and scratch yourself:
 //!
 //! ```
 //! use dtw_bounds::delta::Squared;
@@ -61,6 +115,7 @@ pub mod data;
 pub mod delta;
 pub mod dtw;
 pub mod experiments;
+pub mod index;
 pub mod metrics;
 pub mod runtime;
 pub mod search;

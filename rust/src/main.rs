@@ -4,10 +4,13 @@
 //! * `gen-archive` — export the synthetic archive as UCR-format `.tsv`.
 //! * `tightness`   — §6.1 tightness experiment (Figures 1, 2, 15–18).
 //! * `nn`          — §6.2 NN timing (Figures 19–28).
+//! * `knn`         — k-nearest-neighbor queries through the `DtwIndex`
+//!   facade (`--k`, `--bound`, `--strategy`).
 //! * `sweep`       — §6.3 window sweep (Tables 1–3, Figures 29–30).
 //! * `ablation`    — §7 left/right-path ablation (Figures 31–34).
 //! * `serve`       — start the NN search server (router + batched
-//!   prefilter; `--backend native|pjrt|none`).
+//!   prefilter; `--backend native|pjrt|none`, `--k` for a default k-NN
+//!   depth).
 //! * `info`        — build/backend/artifact report.
 //!
 //! Run `dtw-bounds <cmd> --help-args` to see each command's options.
@@ -25,9 +28,10 @@ use dtw_bounds::delta::Squared;
 use dtw_bounds::experiments::{
     self, nn_timing::TimedBound, tightness_experiment, window_sweep, with_recommended_window,
 };
+use dtw_bounds::index::DtwIndex;
 use dtw_bounds::metrics::format_duration;
 use dtw_bounds::runtime::{default_artifacts_dir, read_manifest, BackendKind};
-use dtw_bounds::search::classify::SearchMode;
+use dtw_bounds::search::SearchStrategy;
 
 fn main() {
     init_logger();
@@ -98,6 +102,7 @@ fn run(args: &Args) -> Result<()> {
         Some("gen-archive") => cmd_gen_archive(args),
         Some("tightness") => cmd_tightness(args),
         Some("nn") => cmd_nn(args),
+        Some("knn") => cmd_knn(args),
         Some("sweep") => cmd_sweep(args),
         Some("ablation") => cmd_ablation(args),
         Some("serve") => cmd_serve(args),
@@ -105,7 +110,7 @@ fn run(args: &Args) -> Result<()> {
         other => {
             bail!(
                 "unknown command {other:?}; expected one of \
-                 gen-archive|tightness|nn|sweep|ablation|serve|info"
+                 gen-archive|tightness|nn|knn|sweep|ablation|serve|info"
             )
         }
     }
@@ -161,8 +166,8 @@ fn cmd_nn(args: &Args) -> Result<()> {
     let datasets = with_recommended_window(&archive);
     let take = args.parse_or::<usize>("take", datasets.len());
     let datasets = &datasets[..take.min(datasets.len())];
-    let mode = SearchMode::parse(&args.str_or("mode", "sorted"))
-        .context("--mode must be sorted|random")?;
+    let mode = SearchStrategy::parse(&args.str_or("mode", "sorted"))
+        .context("--mode must be sorted|random|precomputed|brute")?;
     let repeats = args.parse_or::<usize>("repeats", 3);
     let bounds: Vec<TimedBound> = match args.list("bounds") {
         None => vec![
@@ -247,6 +252,56 @@ fn cmd_ablation(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `knn`: query the `DtwIndex` facade directly — the CLI face of the
+/// primary API. Queries come from the dataset's test split.
+fn cmd_knn(args: &Args) -> Result<()> {
+    let archive = load_archive(args)?;
+    let idx = args.parse_or::<usize>("dataset", 0);
+    let ds = archive.get(idx).context("--dataset index out of range")?;
+    let k = args.parse_or::<usize>("k", 3);
+    if k == 0 {
+        bail!("--k must be >= 1");
+    }
+    let bound = BoundKind::parse(&args.str_or("bound", "webb")).context("bad --bound")?;
+    let strategy = SearchStrategy::parse(&args.str_or("strategy", "sorted"))
+        .context("--strategy must be sorted|random|precomputed|brute")?;
+    let index = DtwIndex::builder_from_dataset(ds)
+        .window(args.parse_or::<usize>("window", ds.window.max(1)))
+        .bound(bound)
+        .strategy(strategy)
+        .build()?;
+    let queries = args.parse_or::<usize>("queries", 5).min(ds.test.len());
+    println!(
+        "dataset {} (l={}, n={}, w={}), bound={bound}, strategy={strategy}, k={k}",
+        ds.name,
+        ds.series_len(),
+        index.len(),
+        index.window()
+    );
+    let mut searcher = index.searcher();
+    for (qi, q) in ds.test.iter().take(queries).enumerate() {
+        let out = searcher.query_values::<Squared>(
+            &q.values,
+            &dtw_bounds::index::QueryOptions::k(k),
+        );
+        let neighbors: Vec<String> = out
+            .neighbors
+            .iter()
+            .map(|n| format!("#{}(label {}, d={:.4})", n.index, n.label, n.distance))
+            .collect();
+        println!(
+            "q{qi} (label {}): {} | pruned {}/{} by {bound}, {} DTW calls, {}us",
+            q.label,
+            neighbors.join(" "),
+            out.stats.pruned,
+            index.len(),
+            out.stats.dtw_calls,
+            out.latency.as_micros()
+        );
+    }
+    Ok(())
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let archive = load_archive(args)?;
     let idx = args.parse_or::<usize>("dataset", 0);
@@ -254,6 +309,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let w = ds.window.max(1);
     let bound = BoundKind::parse(&args.str_or("bound", "webb")).context("bad --bound")?;
     let max_batch = args.parse_or::<usize>("max-batch", 16);
+    let default_k = args.parse_or::<usize>("k", 1);
+    if default_k == 0 {
+        bail!("--k must be >= 1");
+    }
     // Validate --backend even when --no-batch overrides it, so typos
     // never slip through silently.
     let spelled = args.str_or("backend", "native");
@@ -268,11 +327,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
         backend = BackendKind::None;
     }
 
-    // Backend handles (PJRT in particular) are not Send: the engine and
-    // its backend are constructed inside the router's dispatch thread.
-    let ds_owned = ds.clone();
+    // One shared index: the envelopes are prepared once, here; the
+    // dispatch thread builds its searcher from a cheap handle. Backend
+    // handles (PJRT in particular) are not Send, so the backend itself
+    // is still constructed inside the router's dispatch thread.
+    let index = DtwIndex::builder_from_dataset(ds)
+        .window(w)
+        .bound(bound)
+        .backend(BackendKind::None) // attached per kind in the factory
+        .max_batch(max_batch)
+        .build()?;
+    let factory_index = index.clone();
     let factory = move || {
-        let mut engine = NnEngine::new(&ds_owned, w, bound);
+        let mut engine = NnEngine::from_index(factory_index);
         match backend {
             BackendKind::None => eprintln!("batch prefilter: disabled (scalar per query)"),
             BackendKind::Native => {
@@ -289,15 +356,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .first()
         .cloned()
         .unwrap_or_else(|| args.str_or("addr", "127.0.0.1:7878"));
-    let server = dtw_bounds::coordinator::server::Server::spawn(&addr, router)?;
+    let server = dtw_bounds::coordinator::server::Server::spawn_with_default_k(
+        &addr, router, default_k,
+    )?;
     println!(
-        "serving dataset {} (l={}, n={}, w={w}, bound={bound}, backend={backend}) on {}",
+        "serving dataset {} (l={}, n={}, w={w}, bound={bound}, backend={backend}, \
+         default k={default_k}) on {}",
         ds.name,
         ds.series_len(),
-        ds.train.len(),
+        index.len(),
         server.addr()
     );
-    println!("protocol: one comma-separated series per line; PING/PONG; Ctrl-C to stop");
+    println!(
+        "protocol: one comma-separated series per line (or k=<n>;series for k-NN); \
+         PING/PONG; Ctrl-C to stop"
+    );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }

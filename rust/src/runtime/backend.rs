@@ -65,8 +65,8 @@ pub trait LbBackend {
 
     /// Compute the matrix, then argsort each query's row ascending — the
     /// visiting order of Algorithm 4. Provided for all backends; the
-    /// engine's batched path consumes this (the per-query walk happens in
-    /// `search::nn::nn_sorted_precomputed`).
+    /// facade's batched path consumes this (the per-query walk happens in
+    /// `search::knn::knn_sorted_precomputed`).
     fn rank(
         &mut self,
         queries: &[&[f64]],

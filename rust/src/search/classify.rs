@@ -1,10 +1,13 @@
 //! Dataset-level 1-NN classification runs — the timed unit of every
-//! experiment in §6.2/§6.3.
+//! experiment in §6.2/§6.3, built on the [`crate::index::DtwIndex`]
+//! facade.
 //!
 //! Reproduces the paper's protocol exactly:
-//! * training envelopes are **pre**computed (not timed);
+//! * training envelopes are **pre**computed (not timed) — they live in
+//!   the index, built before the clock starts;
 //! * query envelopes (and envelope-of-envelopes) are computed once per
-//!   query and **are** timed, but only when the bound needs them;
+//!   query and **are** timed, but only when the bound needs them
+//!   (the facade's [`crate::bounds::BoundKind::prepare_query`]);
 //! * projection envelopes (inside `LB_IMPROVED`/`LB_PETITJEAN`) are per
 //!   pair and timed;
 //! * random-order runs shuffle the candidate order per query with a
@@ -12,33 +15,18 @@
 
 use std::time::{Duration, Instant};
 
-use crate::bounds::{BoundKind, PreparedSeries, Scratch};
-use crate::data::rng::Rng;
+use crate::bounds::BoundKind;
 use crate::data::Dataset;
 use crate::delta::Delta;
+use crate::index::{DtwIndex, QueryOptions};
 
-use super::nn::{nn_random_order, nn_sorted, NnResult, SearchStats};
-use super::PreparedTrainSet;
+use super::nn::{NnResult, SearchStats};
+use super::SearchStrategy;
 
-/// Which of the paper's two search procedures to run.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum SearchMode {
-    /// Algorithm 3 — random order, early abandoning.
-    RandomOrder,
-    /// Algorithm 4 — candidates sorted by lower bound.
-    Sorted,
-}
-
-impl SearchMode {
-    /// Parse a CLI name.
-    pub fn parse(s: &str) -> Option<Self> {
-        match s.to_ascii_lowercase().as_str() {
-            "random" | "rand" | "random-order" => Some(Self::RandomOrder),
-            "sorted" | "sort" => Some(Self::Sorted),
-            _ => None,
-        }
-    }
-}
+/// Former name of the strategy axis; two of its variants
+/// (`RandomOrder`, `Sorted`) were the paper's modes.
+#[deprecated(since = "0.3.0", note = "use `search::SearchStrategy`")]
+pub type SearchMode = SearchStrategy;
 
 /// Result of classifying one dataset's full test set.
 #[derive(Debug, Clone)]
@@ -47,8 +35,8 @@ pub struct ClassifyOutcome {
     pub dataset: String,
     /// Bound used.
     pub bound: BoundKind,
-    /// Search procedure.
-    pub mode: SearchMode,
+    /// Search strategy.
+    pub strategy: SearchStrategy,
     /// Window used.
     pub w: usize,
     /// 1-NN classification accuracy.
@@ -61,72 +49,44 @@ pub struct ClassifyOutcome {
     pub neighbors: Vec<NnResult>,
 }
 
-/// Classify every test series of `ds` with 1-NN DTW using `bound` under
-/// `mode`. `train` must be prepared for the same window. `seed` drives
-/// the per-query candidate shuffle in random-order mode.
-pub fn classify_dataset<D: Delta>(
-    ds: &Dataset,
-    train: &PreparedTrainSet,
-    bound: BoundKind,
-    mode: SearchMode,
-    seed: u64,
-) -> ClassifyOutcome {
-    let w = train.w;
-    let mut rng = Rng::seeded(seed);
-    let mut scratch = Scratch::default();
-    let mut bound_buf: Vec<f64> = Vec::new();
-    let mut index_buf: Vec<usize> = Vec::new();
-    let mut order: Vec<usize> = (0..train.len()).collect();
+/// Classify every test series of `ds` with 1-NN DTW through `index`
+/// (whose bound, strategy and window are the experiment cell). `seed`
+/// drives the per-query candidate shuffle in random-order mode.
+///
+/// The index must have been built over `ds`'s training split — use
+/// [`DtwIndex::builder_from_dataset`] plus
+/// [`DtwIndex::with_bound`]/[`DtwIndex::with_strategy`] for the
+/// per-cell variations (the prepared envelopes are shared, not
+/// recomputed).
+pub fn classify_dataset<D: Delta>(ds: &Dataset, index: &DtwIndex, seed: u64) -> ClassifyOutcome {
+    let mut searcher = index.searcher();
+    searcher.reseed(seed);
 
-    let needs_q_env = bound.requires_query_envelopes();
     let mut correct = 0usize;
     let mut stats = SearchStats::default();
     let mut neighbors = Vec::with_capacity(ds.test.len());
 
+    let opts = QueryOptions::default();
     let started = Instant::now();
     for q in &ds.test {
-        // Query preparation is timed (paper: "Calculate and save U^Q and
-        // L^Q" sits inside the per-query loop) but skipped when the bound
-        // does not read it.
-        let pq = if needs_q_env {
-            PreparedSeries::prepare(q.values.clone(), w)
-        } else {
-            PreparedSeries {
-                values: q.values.clone(),
-                w,
-                lo: Vec::new(),
-                up: Vec::new(),
-                lo_of_up: Vec::new(),
-                up_of_lo: Vec::new(),
-            }
-        };
-        let (result, qstats) = match mode {
-            SearchMode::RandomOrder => {
-                rng.shuffle(&mut order);
-                nn_random_order::<D>(&pq, train, bound, &order, &mut scratch)
-            }
-            SearchMode::Sorted => nn_sorted::<D>(
-                &pq,
-                train,
-                bound,
-                &mut scratch,
-                &mut bound_buf,
-                &mut index_buf,
-            ),
-        };
-        stats.add(&qstats);
-        if result.label == q.label {
+        // Query preparation happens inside the searcher and is timed
+        // (paper: "Calculate and save U^Q and L^Q" sits inside the
+        // per-query loop), skipped when the bound does not read it.
+        let out = searcher.query_values::<D>(&q.values, &opts);
+        stats.add(&out.stats);
+        let best = out.best_nn();
+        if best.label == q.label {
             correct += 1;
         }
-        neighbors.push(result);
+        neighbors.push(best);
     }
     let elapsed = started.elapsed();
 
     ClassifyOutcome {
         dataset: ds.name.clone(),
-        bound,
-        mode,
-        w,
+        bound: index.bound(),
+        strategy: index.strategy(),
+        w: index.window(),
         accuracy: correct as f64 / ds.test.len().max(1) as f64,
         elapsed,
         stats,
@@ -143,23 +103,21 @@ mod tests {
     #[test]
     fn all_bounds_find_identical_nearest_distances() {
         let ds = &generate_archive(&ArchiveSpec::new(Scale::Tiny, 55))[3];
-        let w = ds.window.max(1);
-        let train = PreparedTrainSet::from_dataset(ds, w);
+        let index = DtwIndex::builder_from_dataset(ds).build().unwrap();
         let reference = classify_dataset::<Squared>(
             ds,
-            &train,
-            BoundKind::Keogh,
-            SearchMode::Sorted,
+            &index.with_bound(BoundKind::Keogh).with_strategy(SearchStrategy::Sorted),
             9,
         );
         for &bound in BoundKind::ALL {
-            for mode in [SearchMode::RandomOrder, SearchMode::Sorted] {
-                let out = classify_dataset::<Squared>(ds, &train, bound, mode, 9);
-                assert_eq!(out.accuracy, reference.accuracy, "{bound} {mode:?}");
+            for strategy in [SearchStrategy::RandomOrder, SearchStrategy::Sorted] {
+                let cell = index.with_bound(bound).with_strategy(strategy);
+                let out = classify_dataset::<Squared>(ds, &cell, 9);
+                assert_eq!(out.accuracy, reference.accuracy, "{bound} {strategy}");
                 for (a, b) in out.neighbors.iter().zip(reference.neighbors.iter()) {
                     assert!(
                         (a.distance - b.distance).abs() < 1e-9,
-                        "{bound} {mode:?}: {} vs {}",
+                        "{bound} {strategy}: {} vs {}",
                         a.distance,
                         b.distance
                     );
@@ -169,13 +127,32 @@ mod tests {
     }
 
     #[test]
+    fn brute_force_strategy_is_the_same_answer_without_bounds() {
+        let ds = &generate_archive(&ArchiveSpec::new(Scale::Tiny, 55))[2];
+        let index = DtwIndex::builder_from_dataset(ds).build().unwrap();
+        let sorted = classify_dataset::<Squared>(ds, &index, 5);
+        let brute = classify_dataset::<Squared>(
+            ds,
+            &index.with_strategy(SearchStrategy::BruteForce),
+            5,
+        );
+        assert_eq!(brute.accuracy, sorted.accuracy);
+        assert_eq!(brute.stats.lb_calls, 0, "brute force never calls a bound");
+        for (a, b) in brute.neighbors.iter().zip(sorted.neighbors.iter()) {
+            assert_eq!(a.distance, b.distance);
+        }
+    }
+
+    #[test]
     fn pruning_reduces_dtw_calls() {
         let ds = &generate_archive(&ArchiveSpec::new(Scale::Tiny, 55))[1];
-        let w = ds.window.max(1);
-        let train = PreparedTrainSet::from_dataset(ds, w);
-        let out =
-            classify_dataset::<Squared>(ds, &train, BoundKind::Webb, SearchMode::Sorted, 1);
-        let max_calls = ds.test.len() * train.len();
+        let index = DtwIndex::builder_from_dataset(ds)
+            .bound(BoundKind::Webb)
+            .strategy(SearchStrategy::Sorted)
+            .build()
+            .unwrap();
+        let out = classify_dataset::<Squared>(ds, &index, 1);
+        let max_calls = ds.test.len() * index.len();
         assert!(
             out.stats.dtw_calls < max_calls,
             "no pruning at all: {} vs {max_calls}",

@@ -1,0 +1,517 @@
+//! Generalized k-nearest-neighbor DTW search — the strategy kernels
+//! behind the [`crate::index::DtwIndex`] facade.
+//!
+//! Each function generalizes one of the paper's search procedures (§6.2,
+//! Algorithms 3 & 4) from 1-NN to k-NN: the best-so-far scalar becomes a
+//! bounded result set ([`KnnSet`]) whose **k-th best distance is the
+//! pruning cutoff**. At `k = 1` (and no threshold/exclusion) every kernel
+//! degenerates to exactly the paper's algorithm — same bound calls, same
+//! pruning counts — which the deprecated 1-NN wrappers in [`super::nn`]
+//! rely on.
+//!
+//! All kernels remain **exact**: a candidate is only pruned when a valid
+//! lower bound (full or partial) proves its DTW distance cannot beat the
+//! current k-th best (or the caller's abandon threshold).
+
+use crate::bounds::{BoundKind, PreparedSeries, Scratch};
+use crate::delta::Delta;
+use crate::dtw::dtw_ea;
+
+use super::nn::{NnResult, SearchStats};
+use super::PreparedTrainSet;
+
+/// Knobs shared by every k-NN kernel.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct KnnParams {
+    /// Number of neighbors to return (clamped to ≥ 1 by [`KnnSet`]).
+    pub k: usize,
+    /// Global abandon threshold τ: candidates at distance ≥ τ are never
+    /// reported, and τ seeds the pruning cutoff even while the result set
+    /// is not yet full (the streaming-monitor regime). `f64::INFINITY`
+    /// disables it.
+    pub threshold: f64,
+    /// Candidate index to skip entirely (self-match exclusion, e.g.
+    /// leave-one-out cross-validation).
+    pub exclude: Option<usize>,
+}
+
+impl Default for KnnParams {
+    fn default() -> Self {
+        KnnParams { k: 1, threshold: f64::INFINITY, exclude: None }
+    }
+}
+
+impl KnnParams {
+    /// Params for a plain k-NN query (no threshold, no exclusion).
+    pub fn k(k: usize) -> Self {
+        KnnParams { k, ..KnnParams::default() }
+    }
+}
+
+/// Bounded best-k set, ordered by ascending distance.
+///
+/// [`KnnSet::cutoff`] is the abandon/prune threshold the kernels pass to
+/// bounds and DTW: the k-th best distance once full, the caller's
+/// threshold before that. Ties keep the earlier-admitted candidate,
+/// matching the 1-NN kernels' first-minimum rule.
+#[derive(Debug, Clone)]
+pub struct KnnSet {
+    k: usize,
+    threshold: f64,
+    items: Vec<NnResult>,
+}
+
+impl KnnSet {
+    /// Empty set for `params` (`k` clamped to ≥ 1).
+    pub fn new(params: &KnnParams) -> KnnSet {
+        let k = params.k.max(1);
+        KnnSet { k, threshold: params.threshold, items: Vec::with_capacity(k.min(64)) }
+    }
+
+    /// Current pruning cutoff: a candidate whose lower bound (or exact
+    /// distance) is ≥ this can never enter the set.
+    pub fn cutoff(&self) -> f64 {
+        if self.items.len() < self.k {
+            self.threshold
+        } else {
+            // Full: the worst kept distance (< threshold by construction).
+            self.items[self.k - 1].distance
+        }
+    }
+
+    /// True once k candidates are held.
+    pub fn is_full(&self) -> bool {
+        self.items.len() >= self.k
+    }
+
+    /// Candidates currently held.
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    /// True when no candidate has been admitted yet.
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// Offer a candidate; returns `true` when it was admitted.
+    pub fn offer(&mut self, c: NnResult) -> bool {
+        // Distances are never NaN, so `>=` is the exact negation of the
+        // strict-improvement test (ties keep the incumbent).
+        if c.distance >= self.cutoff() {
+            return false;
+        }
+        let pos = self.items.partition_point(|x| x.distance <= c.distance);
+        self.items.insert(pos, c);
+        self.items.truncate(self.k);
+        true
+    }
+
+    /// The kept neighbors, ascending by distance.
+    pub fn into_sorted(self) -> Vec<NnResult> {
+        self.items
+    }
+}
+
+/// Algorithm 3 generalized: random-order k-NN search with
+/// early-abandoning bounds.
+///
+/// `order` is the visiting order (indices into `train`). While the result
+/// set is not full and no threshold is active the bound cannot prune, so
+/// candidates go straight to the full distance — the generalization of
+/// Algorithm 3's first-candidate rule.
+pub fn knn_random_order<D: Delta>(
+    query: &PreparedSeries,
+    train: &PreparedTrainSet,
+    bound: BoundKind,
+    order: &[usize],
+    params: &KnnParams,
+    scratch: &mut Scratch,
+) -> (Vec<NnResult>, SearchStats) {
+    let w = train.w;
+    let mut stats = SearchStats::default();
+    let mut set = KnnSet::new(params);
+
+    for &ti in order {
+        if Some(ti) == params.exclude {
+            continue;
+        }
+        let t = &train.series[ti];
+        let cutoff = set.cutoff();
+        if cutoff.is_infinite() {
+            stats.dtw_calls += 1;
+            let d = dtw_ea::<D>(&query.values, &t.values, w, f64::INFINITY);
+            set.offer(NnResult { nn_index: ti, distance: d, label: train.labels[ti] });
+            continue;
+        }
+        stats.lb_calls += 1;
+        let lb = bound.compute::<D>(query, t, w, cutoff, scratch);
+        if lb >= cutoff {
+            stats.pruned += 1;
+            continue;
+        }
+        stats.dtw_calls += 1;
+        let d = dtw_ea::<D>(&query.values, &t.values, w, cutoff);
+        if d.is_infinite() {
+            stats.dtw_abandoned += 1;
+        } else {
+            set.offer(NnResult { nn_index: ti, distance: d, label: train.labels[ti] });
+        }
+    }
+    (set.into_sorted(), stats)
+}
+
+/// Algorithm 4 generalized: bound-sorted k-NN search.
+///
+/// Bounds every candidate (no abandoning — full values are needed for the
+/// sort), visits candidates in ascending-bound order and stops when the
+/// next bound reaches the k-th best distance. `bound_buf` / `index_buf`
+/// are caller scratch to keep the hot loop allocation-free.
+#[allow(clippy::too_many_arguments)]
+pub fn knn_sorted<D: Delta>(
+    query: &PreparedSeries,
+    train: &PreparedTrainSet,
+    bound: BoundKind,
+    params: &KnnParams,
+    scratch: &mut Scratch,
+    bound_buf: &mut Vec<f64>,
+    index_buf: &mut Vec<usize>,
+) -> (Vec<NnResult>, SearchStats) {
+    let w = train.w;
+    let n = train.len();
+    let mut stats = SearchStats::default();
+
+    bound_buf.clear();
+    for (ti, t) in train.series.iter().enumerate() {
+        if Some(ti) == params.exclude {
+            // Sorts last; the walk skips it before the stop test.
+            bound_buf.push(f64::INFINITY);
+            continue;
+        }
+        stats.lb_calls += 1;
+        bound_buf.push(bound.compute::<D>(query, t, w, f64::INFINITY, scratch));
+    }
+    index_buf.clear();
+    index_buf.extend(0..n);
+    index_buf.sort_unstable_by(|&a, &b| {
+        bound_buf[a].partial_cmp(&bound_buf[b]).expect("bounds are never NaN")
+    });
+
+    // Skipped candidates must not count as bound-pruned at the break.
+    let mut skips_remaining = match params.exclude {
+        Some(e) if e < n => 1usize,
+        _ => 0,
+    };
+    let mut set = KnnSet::new(params);
+    for (visited, &ti) in index_buf.iter().enumerate() {
+        if Some(ti) == params.exclude {
+            skips_remaining -= 1;
+            continue;
+        }
+        if bound_buf[ti] >= set.cutoff() {
+            // Everything after this in sorted order is pruned too
+            // (minus any yet-unvisited skipped candidate).
+            stats.pruned += n - visited - skips_remaining;
+            break;
+        }
+        stats.dtw_calls += 1;
+        let d = dtw_ea::<D>(&query.values, &train.series[ti].values, w, set.cutoff());
+        if d.is_infinite() {
+            stats.dtw_abandoned += 1;
+        } else {
+            set.offer(NnResult { nn_index: ti, distance: d, label: train.labels[ti] });
+        }
+    }
+    (set.into_sorted(), stats)
+}
+
+/// Algorithm 4's walk over **precomputed** bounds, generalized to k-NN.
+///
+/// `bounds[t]` must be a valid lower bound of `DTW_w(query, train[t])` —
+/// full or partial (an early-abandoned sum of non-negative allowances is
+/// still a lower bound, it merely sorts pessimistically) — and `order`
+/// the candidate indices in ascending-bound order, as a
+/// [`crate::runtime::LbBackend`] delivers them.
+///
+/// `initial` optionally seeds the set with a candidate whose exact DTW
+/// distance is already known (the batched path pays one DTW per query to
+/// give the backend a real abandon cutoff); that candidate is skipped in
+/// the walk.
+pub fn knn_sorted_precomputed<D: Delta>(
+    query: &[f64],
+    train: &PreparedTrainSet,
+    bounds: &[f64],
+    order: &[usize],
+    initial: Option<NnResult>,
+    params: &KnnParams,
+) -> (Vec<NnResult>, SearchStats) {
+    let w = train.w;
+    let n = train.len();
+    debug_assert_eq!(bounds.len(), n, "one bound per training series");
+    debug_assert_eq!(order.len(), n, "order must cover every training series");
+    let mut stats = SearchStats::default();
+
+    let mut set = KnnSet::new(params);
+    if let Some(r) = initial {
+        set.offer(r);
+    }
+    let skip = initial.map(|r| r.nn_index);
+    // Skipped candidates (seed, excluded) must not count as bound-pruned
+    // at the break.
+    let mut skips_remaining = 0usize;
+    if let Some(e) = params.exclude {
+        if e < n {
+            skips_remaining += 1;
+        }
+    }
+    if let Some(s) = skip {
+        if s < n && Some(s) != params.exclude {
+            skips_remaining += 1;
+        }
+    }
+    for (visited, &ti) in order.iter().enumerate() {
+        if Some(ti) == skip || Some(ti) == params.exclude {
+            skips_remaining -= 1;
+            continue;
+        }
+        if bounds[ti] >= set.cutoff() {
+            // Everything after this in sorted order is pruned too
+            // (minus any yet-unvisited skipped candidate).
+            stats.pruned += n - visited - skips_remaining;
+            break;
+        }
+        stats.dtw_calls += 1;
+        let d = dtw_ea::<D>(query, &train.series[ti].values, w, set.cutoff());
+        if d.is_infinite() {
+            stats.dtw_abandoned += 1;
+        } else {
+            set.offer(NnResult { nn_index: ti, distance: d, label: train.labels[ti] });
+        }
+    }
+    (set.into_sorted(), stats)
+}
+
+/// Reference k-NN brute force (no bounds) — ground truth for tests and
+/// the "no lower bound" baseline. Still early-abandons DTW against the
+/// k-th best distance, which cannot change the result.
+pub fn knn_brute_force<D: Delta>(
+    query: &[f64],
+    train: &PreparedTrainSet,
+    params: &KnnParams,
+) -> (Vec<NnResult>, SearchStats) {
+    let mut stats = SearchStats::default();
+    let mut set = KnnSet::new(params);
+    for (ti, t) in train.series.iter().enumerate() {
+        if Some(ti) == params.exclude {
+            continue;
+        }
+        stats.dtw_calls += 1;
+        let d = dtw_ea::<D>(query, &t.values, train.w, set.cutoff());
+        if d.is_infinite() {
+            stats.dtw_abandoned += 1;
+        } else {
+            set.offer(NnResult { nn_index: ti, distance: d, label: train.labels[ti] });
+        }
+    }
+    (set.into_sorted(), stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+    use crate::data::synthetic::{generate_archive, ArchiveSpec, Scale};
+    use crate::delta::Squared;
+    use crate::dtw::dtw;
+
+    fn setup() -> (PreparedTrainSet, Vec<PreparedSeries>) {
+        let ds = &generate_archive(&ArchiveSpec::new(Scale::Tiny, 31))[2];
+        let w = ds.window.max(1);
+        let train = PreparedTrainSet::from_dataset(ds, w);
+        let queries = ds
+            .test
+            .iter()
+            .map(|s| PreparedSeries::prepare(s.values.clone(), w))
+            .collect();
+        (train, queries)
+    }
+
+    /// Ground truth: all DTW distances, fully computed, sorted ascending.
+    fn truth_distances(q: &[f64], train: &PreparedTrainSet) -> Vec<f64> {
+        let mut ds: Vec<f64> = train
+            .series
+            .iter()
+            .map(|t| dtw::<Squared>(q, &t.values, train.w))
+            .collect();
+        ds.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+        ds
+    }
+
+    #[test]
+    fn knn_set_orders_and_caps() {
+        let mut set = KnnSet::new(&KnnParams::k(2));
+        assert!(set.is_empty());
+        assert!(set.cutoff().is_infinite());
+        let r = |i: usize, d: f64| NnResult { nn_index: i, distance: d, label: 0 };
+        assert!(set.offer(r(0, 5.0)));
+        assert!(set.offer(r(1, 3.0)));
+        assert!(set.is_full());
+        assert_eq!(set.cutoff(), 5.0);
+        assert!(!set.offer(r(2, 5.0)), "ties keep the incumbent");
+        assert!(set.offer(r(3, 1.0)));
+        assert_eq!(set.cutoff(), 3.0);
+        let out = set.into_sorted();
+        assert_eq!(out.len(), 2);
+        assert_eq!((out[0].nn_index, out[1].nn_index), (3, 1));
+    }
+
+    #[test]
+    fn knn_set_threshold_gates_admission() {
+        let mut set = KnnSet::new(&KnnParams { k: 3, threshold: 2.0, exclude: None });
+        let r = |d: f64| NnResult { nn_index: 0, distance: d, label: 0 };
+        assert!(!set.offer(r(2.0)), "at threshold is out");
+        assert!(set.offer(r(1.9)));
+        assert_eq!(set.cutoff(), 2.0, "not full: cutoff stays at the threshold");
+    }
+
+    #[test]
+    fn all_strategies_agree_with_ground_truth_for_all_k() {
+        let (train, queries) = setup();
+        let mut scratch = Scratch::default();
+        let mut rng = Rng::seeded(411);
+        let (mut bb, mut ib) = (Vec::new(), Vec::new());
+        for q in queries.iter().take(4) {
+            let truth = truth_distances(&q.values, &train);
+            for k in [1usize, 3, 10] {
+                let params = KnnParams::k(k);
+                let want: Vec<f64> =
+                    truth.iter().take(k.min(train.len())).copied().collect();
+
+                let (bf, _) = knn_brute_force::<Squared>(&q.values, &train, &params);
+                let got: Vec<f64> = bf.iter().map(|r| r.distance).collect();
+                assert_eq!(got, want, "brute force k={k}");
+
+                for &bound in crate::bounds::BoundKind::ALL {
+                    let mut order: Vec<usize> = (0..train.len()).collect();
+                    rng.shuffle(&mut order);
+                    let (ro, _) = knn_random_order::<Squared>(
+                        q, &train, bound, &order, &params, &mut scratch,
+                    );
+                    let got: Vec<f64> = ro.iter().map(|r| r.distance).collect();
+                    assert_eq!(got, want, "{bound} random-order k={k}");
+
+                    let (so, _) = knn_sorted::<Squared>(
+                        q, &train, bound, &params, &mut scratch, &mut bb, &mut ib,
+                    );
+                    let got: Vec<f64> = so.iter().map(|r| r.distance).collect();
+                    assert_eq!(got, want, "{bound} sorted k={k}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn precomputed_walk_matches_ground_truth_with_partial_bounds_and_seed() {
+        let (train, queries) = setup();
+        let mut scratch = Scratch::default();
+        for q in queries.iter().take(3) {
+            let truth = truth_distances(&q.values, &train);
+            for k in [1usize, 3] {
+                let params = KnnParams::k(k);
+                let want: Vec<f64> =
+                    truth.iter().take(k.min(train.len())).copied().collect();
+                // Partial bounds abandoned against the candidate-0 seed.
+                let seed = dtw::<Squared>(&q.values, &train.series[0].values, train.w);
+                let bounds: Vec<f64> = train
+                    .series
+                    .iter()
+                    .map(|t| {
+                        crate::bounds::BoundKind::Keogh
+                            .compute::<Squared>(q, t, train.w, seed, &mut scratch)
+                    })
+                    .collect();
+                let mut order: Vec<usize> = (0..train.len()).collect();
+                order.sort_unstable_by(|&a, &b| bounds[a].partial_cmp(&bounds[b]).unwrap());
+                let initial =
+                    NnResult { nn_index: 0, distance: seed, label: train.labels[0] };
+                let (r, _) = knn_sorted_precomputed::<Squared>(
+                    &q.values,
+                    &train,
+                    &bounds,
+                    &order,
+                    Some(initial),
+                    &params,
+                );
+                let got: Vec<f64> = r.iter().map(|x| x.distance).collect();
+                assert_eq!(got, want, "seeded precomputed walk k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn exclude_drops_exactly_one_candidate() {
+        let (train, queries) = setup();
+        let q = &queries[0];
+        // Ground truth without candidate 0.
+        let mut truth: Vec<f64> = train
+            .series
+            .iter()
+            .enumerate()
+            .filter(|(ti, _)| *ti != 0)
+            .map(|(_, t)| dtw::<Squared>(&q.values, &t.values, train.w))
+            .collect();
+        truth.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+        let params = KnnParams { k: 3, threshold: f64::INFINITY, exclude: Some(0) };
+        let (bf, _) = knn_brute_force::<Squared>(&q.values, &train, &params);
+        let got: Vec<f64> = bf.iter().map(|r| r.distance).collect();
+        assert_eq!(got, truth[..3.min(truth.len())].to_vec());
+        assert!(bf.iter().all(|r| r.nn_index != 0));
+
+        let mut scratch = Scratch::default();
+        let (mut bb, mut ib) = (Vec::new(), Vec::new());
+        let (so, _) = knn_sorted::<Squared>(
+            q,
+            &train,
+            crate::bounds::BoundKind::Webb,
+            &params,
+            &mut scratch,
+            &mut bb,
+            &mut ib,
+        );
+        let got: Vec<f64> = so.iter().map(|r| r.distance).collect();
+        assert_eq!(got, truth[..3.min(truth.len())].to_vec());
+    }
+
+    #[test]
+    fn threshold_caps_reported_neighbors() {
+        let (train, queries) = setup();
+        let q = &queries[0];
+        let truth = truth_distances(&q.values, &train);
+        let tau = truth[truth.len() / 2]; // median distance as threshold
+        let params = KnnParams { k: train.len(), threshold: tau, exclude: None };
+        let (bf, _) = knn_brute_force::<Squared>(&q.values, &train, &params);
+        assert!(bf.iter().all(|r| r.distance < tau));
+        let want: Vec<f64> = truth.iter().copied().filter(|&d| d < tau).collect();
+        let got: Vec<f64> = bf.iter().map(|r| r.distance).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn k1_stats_match_the_paper_algorithms() {
+        let (train, queries) = setup();
+        let mut scratch = Scratch::default();
+        let order: Vec<usize> = (0..train.len()).collect();
+        let q = &queries[0];
+        let (_, s) = knn_random_order::<Squared>(
+            q,
+            &train,
+            crate::bounds::BoundKind::Webb,
+            &order,
+            &KnnParams::default(),
+            &mut scratch,
+        );
+        // First candidate bypasses the bound (Algorithm 3).
+        assert_eq!(s.lb_calls, train.len() - 1);
+        assert_eq!(s.lb_calls, s.pruned + s.dtw_calls - 1);
+    }
+}

@@ -5,33 +5,37 @@
 //! (§6.1: "These recommended window sizes are those that provide most
 //! accurate nearest neighbor classification using leave-one-out
 //! cross-validation on the training set"). This module reproduces that
-//! derivation so real-archive runs and synthetic runs use the same rule.
+//! derivation so real-archive runs and synthetic runs use the same rule,
+//! built on the [`crate::index::DtwIndex`] facade's self-match exclusion
+//! (`QueryOptions::with_exclude`).
 
 use crate::data::Dataset;
 use crate::delta::Delta;
-use crate::dtw::dtw_ea;
+use crate::index::{DtwIndex, Query, QueryOptions};
+use crate::search::SearchStrategy;
 
 /// LOOCV 1-NN accuracy on the training set at window `w`.
+///
+/// Uses the brute-force strategy (exhaustive early-abandoning DTW, no
+/// bounds), so it is valid for any δ.
 pub fn loocv_accuracy<D: Delta>(ds: &Dataset, w: usize) -> f64 {
     let n = ds.train.len();
     if n < 2 {
         return 0.0;
     }
+    let index = DtwIndex::builder(ds.train.iter().map(|s| s.values.clone()).collect())
+        .labels(ds.train.iter().map(|s| s.label).collect())
+        .window(w)
+        .strategy(SearchStrategy::BruteForce)
+        .build()
+        .expect("dataset series share one length");
+    let mut searcher = index.searcher();
     let mut correct = 0usize;
-    for i in 0..n {
-        let mut best = f64::INFINITY;
-        let mut best_label = u32::MAX;
-        for j in 0..n {
-            if i == j {
-                continue;
-            }
-            let d = dtw_ea::<D>(&ds.train[i].values, &ds.train[j].values, w, best);
-            if d < best {
-                best = d;
-                best_label = ds.train[j].label;
-            }
-        }
-        if best_label == ds.train[i].label {
+    for (i, s) in ds.train.iter().enumerate() {
+        let out = searcher.query::<D>(
+            &Query::new(s.values.clone()).with_options(QueryOptions::k(1).with_exclude(i)),
+        );
+        if out.best().map(|nn| nn.label == s.label).unwrap_or(false) {
             correct += 1;
         }
     }
@@ -105,9 +109,8 @@ mod tests {
             v
         };
         let mut train = Vec::new();
-        for (i, p) in [4usize, 7, 10, 13].iter().enumerate() {
-            let _ = i;
-            train.push(Labeled { label: 0, values: pulse(*p) });
+        for p in [4usize, 7, 10, 13] {
+            train.push(Labeled { label: 0, values: pulse(p) });
         }
         for amp in [0.5, 0.6, 0.7, 0.8] {
             train.push(Labeled { label: 1, values: vec![amp; 24] });

@@ -1,25 +1,92 @@
 //! Nearest-neighbor DTW search — the paper's application and evaluation
-//! harness (§6).
+//! harness (§6), generalized to k-NN behind the
+//! [`crate::index::DtwIndex`] facade.
 //!
-//! * [`nn`] — the two search procedures: Algorithm 3 (**random order**,
-//!   bound and DTW both early-abandon against the best-so-far) and
+//! * [`knn`] — the k-NN strategy kernels: Algorithm 3 (**random order**,
+//!   bound and DTW both early-abandon against the k-th best so far),
 //!   Algorithm 4 (**sorted**: bound every candidate, walk in ascending
-//!   bound order until the next bound exceeds the best distance).
-//! * [`classify`] — 1-NN classification over a dataset with either
-//!   procedure, including the per-query envelope bookkeeping the paper
-//!   times (training envelopes precomputed, query envelopes once per
-//!   query, projection envelopes per pair).
+//!   bound order until the next bound exceeds the k-th best distance),
+//!   the precomputed-bound walk fed by batched
+//!   [`crate::runtime::LbBackend`]s, and the brute-force baseline.
+//! * [`nn`] — the result/statistics types plus the deprecated 1-NN
+//!   entry points (thin `k = 1` shims over [`knn`]).
+//! * [`classify`] — 1-NN classification over a dataset with any
+//!   [`SearchStrategy`], including the per-query envelope bookkeeping the
+//!   paper times (training envelopes precomputed, query envelopes once
+//!   per query, projection envelopes per pair).
 //! * [`tightness`] — mean `λ_w(Q,T)/DTW_w(Q,T)` per dataset (§6.1).
 //! * [`loocv`] — leave-one-out window selection (how the archive derives
-//!   its recommended windows).
+//!   its recommended windows), built on the facade's self-match
+//!   exclusion.
 
 pub mod classify;
+pub mod knn;
 pub mod loocv;
 pub mod nn;
 pub mod tightness;
 
 use crate::bounds::PreparedSeries;
 use crate::data::Dataset;
+
+/// Which search procedure answers a query — the strategy axis of the
+/// [`crate::index::DtwIndex`] facade.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SearchStrategy {
+    /// Algorithm 3: random candidate order; both the bound and DTW
+    /// early-abandon against the k-th best distance so far. The regime
+    /// where `LB_PETITJEAN`'s expensive tightness pays (§6.2).
+    RandomOrder,
+    /// Algorithm 4: bound every candidate, then visit in ascending-bound
+    /// order until the next bound exceeds the k-th best distance. The
+    /// regime where `LB_WEBB`'s low cost wins (§6.2).
+    Sorted,
+    /// Algorithm 4's walk over a bound matrix a batched
+    /// [`crate::runtime::LbBackend`] computed for a whole query batch;
+    /// lone queries fall back to [`SearchStrategy::Sorted`].
+    SortedPrecomputed,
+    /// Exhaustive DTW, no bounds — the ground-truth baseline.
+    BruteForce,
+}
+
+impl SearchStrategy {
+    /// Every strategy, in documentation order.
+    pub const ALL: &'static [SearchStrategy] = &[
+        SearchStrategy::RandomOrder,
+        SearchStrategy::Sorted,
+        SearchStrategy::SortedPrecomputed,
+        SearchStrategy::BruteForce,
+    ];
+
+    /// Parse a CLI spelling (case-insensitive, `-`/`_` ignored):
+    /// `random`, `sorted`, `precomputed`/`batched`, `brute`.
+    pub fn parse(s: &str) -> Option<SearchStrategy> {
+        match s.to_ascii_lowercase().replace(['-', '_'], "").as_str() {
+            "random" | "rand" | "randomorder" => Some(SearchStrategy::RandomOrder),
+            "sorted" | "sort" => Some(SearchStrategy::Sorted),
+            "precomputed" | "sortedprecomputed" | "batched" => {
+                Some(SearchStrategy::SortedPrecomputed)
+            }
+            "brute" | "bruteforce" | "linear" => Some(SearchStrategy::BruteForce),
+            _ => None,
+        }
+    }
+
+    /// Canonical (re-parseable) name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SearchStrategy::RandomOrder => "random-order",
+            SearchStrategy::Sorted => "sorted",
+            SearchStrategy::SortedPrecomputed => "sorted-precomputed",
+            SearchStrategy::BruteForce => "brute-force",
+        }
+    }
+}
+
+impl std::fmt::Display for SearchStrategy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
 
 /// A training set prepared for a specific window: per-series envelopes
 /// (and envelope-of-envelopes) computed once, as the paper's experimental
@@ -56,5 +123,22 @@ impl PreparedTrainSet {
     /// True when empty.
     pub fn is_empty(&self) -> bool {
         self.series.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strategy_name_parse_roundtrip() {
+        for &s in SearchStrategy::ALL {
+            assert_eq!(SearchStrategy::parse(s.name()), Some(s), "{s}");
+        }
+        // Legacy CLI spellings stay accepted.
+        assert_eq!(SearchStrategy::parse("random"), Some(SearchStrategy::RandomOrder));
+        assert_eq!(SearchStrategy::parse("sort"), Some(SearchStrategy::Sorted));
+        assert_eq!(SearchStrategy::parse("batched"), Some(SearchStrategy::SortedPrecomputed));
+        assert_eq!(SearchStrategy::parse("bogus"), None);
     }
 }

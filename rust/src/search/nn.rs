@@ -1,28 +1,33 @@
-//! The two nearest-neighbor search procedures of §6.2 (Algorithms 3 & 4).
+//! The result/statistics types of nearest-neighbor search, plus the
+//! **deprecated** 1-NN entry points of §6.2 (Algorithms 3 & 4).
 //!
-//! Both find `argmin_T DTW_w(Q, T)`; they differ in how they spend the
-//! lower bound:
+//! Since the `DtwIndex` facade landed, the search kernels live in
+//! [`super::knn`], generalized to k-NN; the free functions here are thin
+//! `k = 1` shims kept for one release. Migrate call sites to either:
 //!
-//! * **Random order** ([`nn_random_order`], Algorithm 3): candidates are
-//!   visited in a given order; the bound is computed *immediately before*
-//!   the full distance and can therefore **early-abandon** against the
-//!   best distance so far — the regime where `LB_PETITJEAN`'s expensive
-//!   tightness pays (paper §6.2, Figures 19–26).
-//! * **Sorted** ([`nn_sorted`], Algorithm 4): bounds for *all* candidates
-//!   are computed first (no abandoning possible), candidates are visited
-//!   in ascending bound order, and search stops when the next bound
-//!   exceeds the best distance — the regime where `LB_WEBB`'s low cost
-//!   wins (Figures 21–22, 27–30, Tables 1–3).
-//! * **Sorted, precomputed** ([`nn_sorted_precomputed`]): the walk of
-//!   Algorithm 4 alone, fed bound columns a batched
-//!   [`crate::runtime::LbBackend`] already computed for a whole query
-//!   batch. Any valid (possibly partial, early-abandoned) lower bounds
-//!   keep the search exact.
+//! * the high-level facade — [`crate::index::DtwIndex::knn`] /
+//!   [`crate::index::Searcher`] — which owns preparation, scratch and
+//!   strategy selection; or
+//! * the strategy kernels — [`super::knn::knn_random_order`],
+//!   [`super::knn::knn_sorted`], [`super::knn::knn_sorted_precomputed`],
+//!   [`super::knn::knn_brute_force`] — when you manage
+//!   [`PreparedSeries`]/[`Scratch`] yourself.
+//!
+//! The algorithmic split (paper §6.2) is unchanged:
+//!
+//! * **Random order** (Algorithm 3): candidates are visited in a given
+//!   order; the bound is computed *immediately before* the full distance
+//!   and can therefore **early-abandon** against the best distance so far
+//!   — the regime where `LB_PETITJEAN`'s expensive tightness pays.
+//! * **Sorted** (Algorithm 4): bounds for *all* candidates are computed
+//!   first, candidates are visited in ascending bound order, and search
+//!   stops when the next bound exceeds the best distance — the regime
+//!   where `LB_WEBB`'s low cost wins.
 
 use crate::bounds::{BoundKind, PreparedSeries, Scratch};
 use crate::delta::Delta;
-use crate::dtw::dtw_ea;
 
+use super::knn::{self, KnnParams};
 use super::PreparedTrainSet;
 
 /// Outcome of one nearest-neighbor query.
@@ -34,6 +39,13 @@ pub struct NnResult {
     pub distance: f64,
     /// Its label (the 1-NN prediction).
     pub label: u32,
+}
+
+impl NnResult {
+    /// The "no neighbor found" sentinel (empty training set).
+    pub fn none() -> NnResult {
+        NnResult { nn_index: usize::MAX, distance: f64::INFINITY, label: 0 }
+    }
 }
 
 /// Work counters for pruning-power analysis.
@@ -59,12 +71,19 @@ impl SearchStats {
     }
 }
 
-/// Algorithm 3: random-order search with early-abandoning bounds.
-///
-/// `order` is the visiting order (indices into `train`); the experiment
-/// driver shuffles it per query. The query must be prepared with the same
-/// window (`PreparedSeries::prepare`) — for bounds that never read query
-/// envelopes this only costs the unused vectors.
+fn first(mut results: Vec<NnResult>) -> NnResult {
+    if results.is_empty() {
+        NnResult::none()
+    } else {
+        results.swap_remove(0)
+    }
+}
+
+/// Algorithm 3: random-order 1-NN search with early-abandoning bounds.
+#[deprecated(
+    since = "0.3.0",
+    note = "use `index::DtwIndex` (strategy `RandomOrder`) or `search::knn::knn_random_order`"
+)]
 pub fn nn_random_order<D: Delta>(
     query: &PreparedSeries,
     train: &PreparedTrainSet,
@@ -72,44 +91,16 @@ pub fn nn_random_order<D: Delta>(
     order: &[usize],
     scratch: &mut Scratch,
 ) -> (NnResult, SearchStats) {
-    let w = train.w;
-    let mut stats = SearchStats::default();
-    let mut best = NnResult { nn_index: usize::MAX, distance: f64::INFINITY, label: 0 };
-
-    for &ti in order {
-        let t = &train.series[ti];
-        if best.nn_index == usize::MAX {
-            // First candidate: full distance, no bound (Algorithm 3).
-            stats.dtw_calls += 1;
-            let d = dtw_ea::<D>(&query.values, &t.values, w, f64::INFINITY);
-            best = NnResult { nn_index: ti, distance: d, label: train.labels[ti] };
-            continue;
-        }
-        stats.lb_calls += 1;
-        let lb = bound.compute::<D>(query, t, w, best.distance, scratch);
-        if lb >= best.distance {
-            stats.pruned += 1;
-            continue;
-        }
-        stats.dtw_calls += 1;
-        let d = dtw_ea::<D>(&query.values, &t.values, w, best.distance);
-        if d.is_infinite() {
-            stats.dtw_abandoned += 1;
-        } else if d < best.distance {
-            best = NnResult { nn_index: ti, distance: d, label: train.labels[ti] };
-        }
-    }
-    (best, stats)
+    let (r, stats) =
+        knn::knn_random_order::<D>(query, train, bound, order, &KnnParams::default(), scratch);
+    (first(r), stats)
 }
 
-/// Algorithm 4: bound-sorted search.
-///
-/// Computes the bound for every candidate (no early abandoning — the
-/// bounds are needed in full for the sort), sorts ascending, then walks
-/// until the next bound is at least the best distance found.
-///
-/// `bound_buf` / `index_buf` are caller scratch to keep the hot loop
-/// allocation-free.
+/// Algorithm 4: bound-sorted 1-NN search.
+#[deprecated(
+    since = "0.3.0",
+    note = "use `index::DtwIndex` (strategy `Sorted`) or `search::knn::knn_sorted`"
+)]
 #[allow(clippy::too_many_arguments)]
 pub fn nn_sorted<D: Delta>(
     query: &PreparedSeries,
@@ -119,54 +110,23 @@ pub fn nn_sorted<D: Delta>(
     bound_buf: &mut Vec<f64>,
     index_buf: &mut Vec<usize>,
 ) -> (NnResult, SearchStats) {
-    let w = train.w;
-    let n = train.len();
-    let mut stats = SearchStats::default();
-
-    bound_buf.clear();
-    for t in &train.series {
-        stats.lb_calls += 1;
-        bound_buf.push(bound.compute::<D>(query, t, w, f64::INFINITY, scratch));
-    }
-    index_buf.clear();
-    index_buf.extend(0..n);
-    index_buf.sort_unstable_by(|&a, &b| {
-        bound_buf[a].partial_cmp(&bound_buf[b]).expect("bounds are never NaN")
-    });
-
-    let mut best = NnResult { nn_index: usize::MAX, distance: f64::INFINITY, label: 0 };
-    for (visited, &ti) in index_buf.iter().enumerate() {
-        if bound_buf[ti] >= best.distance {
-            // Everything after this in sorted order is pruned too.
-            stats.pruned += n - visited;
-            break;
-        }
-        stats.dtw_calls += 1;
-        let d = dtw_ea::<D>(&query.values, &train.series[ti].values, w, best.distance);
-        if d.is_infinite() {
-            stats.dtw_abandoned += 1;
-        } else if d < best.distance {
-            best = NnResult { nn_index: ti, distance: d, label: train.labels[ti] };
-        }
-    }
-    (best, stats)
+    let (r, stats) = knn::knn_sorted::<D>(
+        query,
+        train,
+        bound,
+        &KnnParams::default(),
+        scratch,
+        bound_buf,
+        index_buf,
+    );
+    (first(r), stats)
 }
 
-/// Algorithm 4's walk over **precomputed** bounds.
-///
-/// `bounds[t]` must be a valid lower bound of `DTW_w(query, train[t])`
-/// — full or partial (an early-abandoned sum of non-negative allowances
-/// is still a lower bound, it merely sorts pessimistically) — and
-/// `order` the candidate indices in ascending-bound order. This is the
-/// per-query half of the batched screening path: a
-/// [`crate::runtime::LbBackend`] computes the bound matrix and the
-/// ranking for the whole batch (`LbBackend::rank`), then each query
-/// walks its own columns here.
-///
-/// `initial` optionally seeds the best-so-far with a candidate whose
-/// exact DTW distance is already known (the engine pays one DTW per query
-/// to give the backend a real abandon cutoff); that candidate is skipped
-/// in the walk.
+/// Algorithm 4's walk over **precomputed** (possibly partial) bounds.
+#[deprecated(
+    since = "0.3.0",
+    note = "use `index::Searcher::query_batch` or `search::knn::knn_sorted_precomputed`"
+)]
 pub fn nn_sorted_precomputed<D: Delta>(
     query: &[f64],
     train: &PreparedTrainSet,
@@ -174,61 +134,38 @@ pub fn nn_sorted_precomputed<D: Delta>(
     order: &[usize],
     initial: Option<NnResult>,
 ) -> (NnResult, SearchStats) {
-    let w = train.w;
-    let n = train.len();
-    debug_assert_eq!(bounds.len(), n, "one bound per training series");
-    debug_assert_eq!(order.len(), n, "order must cover every training series");
-    let mut stats = SearchStats::default();
-
-    let mut best =
-        initial.unwrap_or(NnResult { nn_index: usize::MAX, distance: f64::INFINITY, label: 0 });
-    let skip = initial.map(|r| r.nn_index);
-    for (visited, &ti) in order.iter().enumerate() {
-        if bounds[ti] >= best.distance {
-            // Everything after this in sorted order is pruned too.
-            stats.pruned += n - visited;
-            break;
-        }
-        if Some(ti) == skip {
-            continue;
-        }
-        stats.dtw_calls += 1;
-        let d = dtw_ea::<D>(query, &train.series[ti].values, w, best.distance);
-        if d.is_infinite() {
-            stats.dtw_abandoned += 1;
-        } else if d < best.distance {
-            best = NnResult { nn_index: ti, distance: d, label: train.labels[ti] };
-        }
-    }
-    (best, stats)
+    let (r, stats) = knn::knn_sorted_precomputed::<D>(
+        query,
+        train,
+        bounds,
+        order,
+        initial,
+        &KnnParams::default(),
+    );
+    (first(r), stats)
 }
 
-/// Reference brute-force search (no bounds) — ground truth for tests and
-/// the "no lower bound" baseline.
+/// Reference brute-force 1-NN search (no bounds).
+#[deprecated(
+    since = "0.3.0",
+    note = "use `index::DtwIndex` (strategy `BruteForce`) or `search::knn::knn_brute_force`"
+)]
 pub fn nn_brute_force<D: Delta>(
     query: &[f64],
     train: &PreparedTrainSet,
 ) -> (NnResult, SearchStats) {
-    let mut stats = SearchStats::default();
-    let mut best = NnResult { nn_index: usize::MAX, distance: f64::INFINITY, label: 0 };
-    for (ti, t) in train.series.iter().enumerate() {
-        stats.dtw_calls += 1;
-        let d = dtw_ea::<D>(query, &t.values, train.w, best.distance);
-        if d.is_infinite() {
-            stats.dtw_abandoned += 1;
-        } else if d < best.distance {
-            best = NnResult { nn_index: ti, distance: d, label: train.labels[ti] };
-        }
-    }
-    (best, stats)
+    let (r, stats) = knn::knn_brute_force::<D>(query, train, &KnnParams::default());
+    (first(r), stats)
 }
 
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::data::rng::Rng;
     use crate::data::synthetic::{generate_archive, ArchiveSpec, Scale};
     use crate::delta::Squared;
+    use crate::dtw::dtw_ea;
 
     fn setup() -> (PreparedTrainSet, Vec<PreparedSeries>, Vec<u32>) {
         let ds = &generate_archive(&ArchiveSpec::new(Scale::Tiny, 31))[2];
@@ -264,8 +201,6 @@ mod tests {
                 let (r2, _) =
                     nn_sorted::<Squared>(q, &train, bound, &mut scratch, &mut bb, &mut ib);
                 assert_eq!(r2.distance, truth.distance, "{bound} sorted distance mismatch");
-                // Same nearest distance implies same label under ties-by-index
-                // not guaranteed; distances must match exactly though.
                 assert!(s1.lb_calls <= train.len());
             }
         }

@@ -1,12 +1,11 @@
 //! Tightness evaluation (§6.1): `λ_w(Q,T) / DTW_w(Q,T)` averaged over all
 //! test×train pairs, excluding pairs with `DTW = 0`.
 
-use crate::bounds::{BoundKind, PreparedSeries, Scratch};
+use crate::bounds::Scratch;
 use crate::data::Dataset;
 use crate::delta::Delta;
 use crate::dtw::dtw;
-
-use super::PreparedTrainSet;
+use crate::index::DtwIndex;
 
 /// Tightness summary for one (dataset, bound) pair.
 #[derive(Debug, Clone, Copy)]
@@ -19,16 +18,19 @@ pub struct Tightness {
     pub skipped: usize,
 }
 
-/// Mean tightness of `bound` on a dataset at window `w`.
+/// Mean tightness of `index.bound()` on a dataset at `index.window()`.
 ///
-/// `dtw_cache` lets callers evaluating many bounds over the same dataset
-/// reuse the DTW denominators — pass the same (initially empty) vector.
+/// The index carries the prepared training envelopes and the bound under
+/// test — evaluate several bounds over the same dataset with cheap
+/// [`DtwIndex::with_bound`] handles. `dtw_cache` lets those calls reuse
+/// the DTW denominators — pass the same (initially empty) vector.
 pub fn dataset_tightness<D: Delta>(
     ds: &Dataset,
-    train: &PreparedTrainSet,
-    bound: BoundKind,
+    index: &DtwIndex,
     dtw_cache: &mut Vec<f64>,
 ) -> Tightness {
+    let train = index.train();
+    let bound = index.bound();
     let w = train.w;
     let want = ds.test.len() * train.len();
     if dtw_cache.len() != want {
@@ -47,7 +49,7 @@ pub fn dataset_tightness<D: Delta>(
     let mut skipped = 0usize;
     let mut k = 0usize;
     for q in &ds.test {
-        let pq = PreparedSeries::prepare(q.values.clone(), w);
+        let pq = bound.prepare_query(q.values.clone(), w);
         for t in &train.series {
             let d = dtw_cache[k];
             k += 1;
@@ -74,6 +76,7 @@ pub fn dataset_tightness<D: Delta>(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::bounds::BoundKind;
     use crate::data::synthetic::{generate_archive, ArchiveSpec, Scale};
     use crate::delta::Squared;
 
@@ -81,10 +84,10 @@ mod tests {
     fn tightness_orderings_hold_on_dataset_means() {
         let ds = &generate_archive(&ArchiveSpec::new(Scale::Tiny, 17))[4];
         let w = ds.window.max(2);
-        let train = PreparedTrainSet::from_dataset(ds, w);
+        let index = DtwIndex::builder_from_dataset(ds).window(w).build().unwrap();
         let mut cache = Vec::new();
         let t = |b: BoundKind, cache: &mut Vec<f64>| {
-            dataset_tightness::<Squared>(ds, &train, b, cache).mean
+            dataset_tightness::<Squared>(ds, &index.with_bound(b), cache).mean
         };
         let kim = t(BoundKind::KimFL, &mut cache);
         let keogh = t(BoundKind::Keogh, &mut cache);
@@ -117,10 +120,13 @@ mod tests {
         // pair is excluded, not a division by zero.
         let mut ds = generate_archive(&ArchiveSpec::new(Scale::Tiny, 23))[0].clone();
         ds.test[0].values = ds.train[0].values.clone();
-        let w = 2;
-        let train = PreparedTrainSet::from_dataset(&ds, w);
+        let index = DtwIndex::builder_from_dataset(&ds)
+            .window(2)
+            .bound(BoundKind::Webb)
+            .build()
+            .unwrap();
         let mut cache = Vec::new();
-        let t = dataset_tightness::<Squared>(&ds, &train, BoundKind::Webb, &mut cache);
+        let t = dataset_tightness::<Squared>(&ds, &index, &mut cache);
         assert!(t.skipped >= 1);
         assert!(t.mean.is_finite());
     }

@@ -69,6 +69,43 @@ fn tightness_tiny_take_two() {
 }
 
 #[test]
+fn knn_subcommand_prints_neighbors() {
+    let out = bin()
+        .args(["knn", "--scale", "tiny", "--k", "3", "--queries", "2", "--bound", "webb"])
+        .output()
+        .expect("spawn");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("k=3"), "{text}");
+    assert!(text.contains("q0"), "{text}");
+    assert!(text.contains("d="), "{text}");
+}
+
+#[test]
+fn knn_rejects_zero_k_and_bad_strategy() {
+    let out = bin().args(["knn", "--scale", "tiny", "--k", "0"]).output().expect("spawn");
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--k"));
+
+    let out = bin()
+        .args(["knn", "--scale", "tiny", "--strategy", "quantum"])
+        .output()
+        .expect("spawn");
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--strategy"));
+}
+
+#[test]
+fn serve_rejects_zero_k() {
+    let out = bin()
+        .args(["serve", "--scale", "tiny", "--k", "0", "127.0.0.1:0"])
+        .output()
+        .expect("spawn");
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--k"));
+}
+
+#[test]
 fn sweep_single_fraction_smoke() {
     let out = bin()
         .args([

@@ -1,6 +1,6 @@
-//! Cross-module integration tests: archive → search → coordinator →
-//! batched screening backends (native always; PJRT behind the `pjrt`
-//! feature when artifacts exist).
+//! Cross-module integration tests: archive → index facade → search →
+//! coordinator → batched screening backends (native always; PJRT behind
+//! the `pjrt` feature when artifacts exist).
 
 use std::sync::Arc;
 
@@ -10,8 +10,14 @@ use dtw_bounds::data::synthetic::{generate_archive, ArchiveSpec, Scale};
 use dtw_bounds::data::ucr;
 use dtw_bounds::delta::Squared;
 use dtw_bounds::experiments::{self, with_recommended_window};
-use dtw_bounds::search::classify::{classify_dataset, SearchMode};
-use dtw_bounds::search::PreparedTrainSet;
+use dtw_bounds::index::DtwIndex;
+use dtw_bounds::search::classify::classify_dataset;
+use dtw_bounds::search::knn::{knn_brute_force, KnnParams};
+use dtw_bounds::search::{PreparedTrainSet, SearchStrategy};
+
+fn brute_distance(q: &[f64], train: &PreparedTrainSet) -> f64 {
+    knn_brute_force::<Squared>(q, train, &KnnParams::default()).0[0].distance
+}
 
 #[test]
 fn archive_roundtrips_through_ucr_format() {
@@ -34,16 +40,23 @@ fn archive_roundtrips_through_ucr_format() {
 }
 
 #[test]
-fn every_bound_classifies_identically_across_modes() {
+fn every_bound_classifies_identically_across_strategies() {
     let archive = generate_archive(&ArchiveSpec::new(Scale::Tiny, 2000));
     let ds = &with_recommended_window(&archive)[0];
-    let train = PreparedTrainSet::from_dataset(ds, ds.window);
-    let baseline =
-        classify_dataset::<Squared>(ds, &train, BoundKind::KimFL, SearchMode::RandomOrder, 3);
+    let index = DtwIndex::builder_from_dataset(ds).window(ds.window).build().unwrap();
+    let baseline = classify_dataset::<Squared>(
+        ds,
+        &index.with_bound(BoundKind::KimFL).with_strategy(SearchStrategy::RandomOrder),
+        3,
+    );
     for &bound in BoundKind::ALL {
-        for mode in [SearchMode::RandomOrder, SearchMode::Sorted] {
-            let out = classify_dataset::<Squared>(ds, &train, bound, mode, 3);
-            assert_eq!(out.accuracy, baseline.accuracy, "{bound} {mode:?}");
+        for strategy in [SearchStrategy::RandomOrder, SearchStrategy::Sorted] {
+            let out = classify_dataset::<Squared>(
+                ds,
+                &index.with_bound(bound).with_strategy(strategy),
+                3,
+            );
+            assert_eq!(out.accuracy, baseline.accuracy, "{bound} {strategy}");
         }
     }
 }
@@ -86,11 +99,7 @@ fn router_under_concurrent_load() {
     }
     for h in handles {
         let (qi, resp) = h.join().unwrap();
-        let (truth, _) = dtw_bounds::search::nn::nn_brute_force::<Squared>(
-            &ds.test[qi].values,
-            &train,
-        );
-        assert_eq!(resp.result.distance, truth.distance);
+        assert_eq!(resp.result.distance, brute_distance(&ds.test[qi].values, &train));
     }
 }
 
@@ -124,37 +133,72 @@ fn native_backend_matches_scalar_algorithm4() {
     }
 }
 
-/// Full three-layer path on the default build: synthetic data → router →
-/// native batched prefilter → exact NN.
+/// Full three-layer path on the default build: synthetic data → shared
+/// index → router → native batched prefilter → exact k-NN.
 #[test]
 fn three_layer_batched_search_native() {
+    use dtw_bounds::index::QueryOptions;
+    use dtw_bounds::runtime::BackendKind;
+
     let archive = generate_archive(&ArchiveSpec::new(Scale::Tiny, 5000));
     let ds = archive[0].clone();
-    let w = ds.window.max(1);
-    let train = PreparedTrainSet::from_dataset(&ds, w);
-
-    let ds2 = ds.clone();
-    let router = Arc::new(Router::spawn(
-        move || {
-            let mut engine = NnEngine::new(&ds2, w, BoundKind::Keogh);
-            engine.attach_native();
-            engine
-        },
-        8,
-    ));
-    // Async-submit so real batches can form.
+    let index = DtwIndex::builder_from_dataset(&ds)
+        .bound(BoundKind::Keogh)
+        .backend(BackendKind::Native)
+        .max_batch(8)
+        .build()
+        .unwrap();
+    let router = Arc::new(Router::spawn_index(index.clone()));
+    // Async-submit so real batches can form; mixed k across the batch.
     let rxs: Vec<_> = ds
         .test
         .iter()
         .take(8)
-        .map(|q| router.query_async(q.values.clone()))
+        .enumerate()
+        .map(|(i, q)| {
+            router.query_async_with(q.values.clone(), QueryOptions::k(1 + (i % 2) * 4))
+        })
         .collect();
-    for (rx, q) in rxs.into_iter().zip(ds.test.iter()) {
+    for (i, (rx, q)) in rxs.into_iter().zip(ds.test.iter()).enumerate() {
         let resp = rx.recv().unwrap();
-        let (truth, _) =
-            dtw_bounds::search::nn::nn_brute_force::<Squared>(&q.values, &train);
-        assert_eq!(resp.result.distance, truth.distance);
+        let k = 1 + (i % 2) * 4;
+        let (truth, _) = knn_brute_force::<Squared>(&q.values, index.train(), &KnnParams::k(k));
+        let want: Vec<f64> = truth.iter().map(|r| r.distance).collect();
+        assert_eq!(resp.distances(), want, "k={k}");
     }
+}
+
+/// The hot path never reallocates a pre-sized scratch: pin the buffer
+/// capacities across every bound over many pairs. (The same invariant is
+/// debug-asserted inside `BoundKind::compute` after every call.)
+#[cfg(debug_assertions)]
+#[test]
+fn scratch_hot_path_is_allocation_free() {
+    use dtw_bounds::bounds::{PreparedSeries, Scratch};
+
+    let archive = generate_archive(&ArchiveSpec::new(Scale::Tiny, 7000));
+    let ds = &archive[0];
+    let w = ds.window.max(2);
+    let l = ds.series_len();
+    let train = PreparedTrainSet::from_dataset(ds, w);
+    let mut scratch = Scratch::new(l);
+    let caps = scratch.capacities();
+
+    for q in ds.test.iter().take(3) {
+        let pq = PreparedSeries::prepare(q.values.clone(), w);
+        for t in train.series.iter().take(10) {
+            for &bound in BoundKind::ALL {
+                let _ = bound.compute::<Squared>(&pq, t, w, f64::INFINITY, &mut scratch);
+                // Also exercise the early-abandon path.
+                let _ = bound.compute::<Squared>(&pq, t, w, 1e-3, &mut scratch);
+            }
+        }
+    }
+    assert_eq!(
+        scratch.capacities(),
+        caps,
+        "a bound kernel reallocated the pre-sized scratch"
+    );
 }
 
 /// Full three-layer path: synthetic data → XLA batched prefilter →
@@ -202,10 +246,8 @@ fn three_layer_batched_search_when_artifacts_present() {
     let mut batched = 0;
     for (rx, q) in rxs.into_iter().zip(ds.test.iter()) {
         let resp = rx.recv().unwrap();
-        let (truth, _) =
-            dtw_bounds::search::nn::nn_brute_force::<Squared>(&q.values, &train);
-        assert_eq!(resp.result.distance, truth.distance);
-        if resp.path == dtw_bounds::coordinator::EnginePath::Batched {
+        assert_eq!(resp.best().unwrap().distance, brute_distance(&q.values, &train));
+        if resp.batched {
             batched += 1;
         }
     }

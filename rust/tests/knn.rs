@@ -1,0 +1,121 @@
+//! k-NN facade property tests: `DtwIndex::knn` must return exactly the
+//! k smallest DTW distances that brute force finds, for every strategy,
+//! several k and several windows, over random synthetic archives.
+
+use dtw_bounds::bounds::BoundKind;
+use dtw_bounds::data::synthetic::{generate_archive, ArchiveSpec, Scale};
+use dtw_bounds::delta::Squared;
+use dtw_bounds::index::{DtwIndex, Query, QueryOptions};
+use dtw_bounds::search::knn::{knn_brute_force, KnnParams};
+use dtw_bounds::search::SearchStrategy;
+
+/// The k smallest distances by exhaustive search (the test oracle).
+fn oracle(index: &DtwIndex, q: &[f64], k: usize) -> Vec<f64> {
+    let (truth, _) = knn_brute_force::<Squared>(q, index.train(), &KnnParams::k(k));
+    truth.iter().map(|r| r.distance).collect()
+}
+
+#[test]
+fn knn_matches_brute_force_across_k_windows_and_strategies() {
+    for seed in [101u64, 202] {
+        let archive = generate_archive(&ArchiveSpec::new(Scale::Tiny, seed));
+        for ds in archive.iter().take(2) {
+            let l = ds.series_len();
+            for w in [1usize, ds.window.max(2), (l / 5).max(3)] {
+                let base = DtwIndex::builder_from_dataset(ds)
+                    .window(w)
+                    .bound(BoundKind::Webb)
+                    .build()
+                    .unwrap();
+                for &strategy in SearchStrategy::ALL {
+                    let index = base.with_strategy(strategy);
+                    let mut searcher = index.searcher();
+                    for q in ds.test.iter().take(3) {
+                        for k in [1usize, 3, 10] {
+                            let want = oracle(&base, &q.values, k);
+                            assert_eq!(
+                                want.len(),
+                                k.min(index.len()),
+                                "oracle size (k={k}, n={})",
+                                index.len()
+                            );
+                            let out = searcher
+                                .query_values::<Squared>(&q.values, &QueryOptions::k(k));
+                            assert_eq!(
+                                out.distances(),
+                                want,
+                                "{} w={w} k={k} strategy={strategy}",
+                                ds.name
+                            );
+                            // Neighbors come back sorted ascending.
+                            assert!(out
+                                .neighbors
+                                .windows(2)
+                                .all(|p| p[0].distance <= p[1].distance));
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn knn_convenience_equals_searcher_path() {
+    let ds = &generate_archive(&ArchiveSpec::new(Scale::Tiny, 303))[1];
+    let index = DtwIndex::builder_from_dataset(ds).build().unwrap();
+    let q = &ds.test[0].values;
+    let a = index.knn::<Squared>(q, 5);
+    let b = index.query::<Squared>(&Query::new(q.clone()).with_k(5));
+    assert_eq!(a.distances(), b.distances());
+    assert_eq!(a.distances(), oracle(&index, q, 5));
+}
+
+#[test]
+fn batched_backend_knn_matches_brute_force() {
+    let ds = &generate_archive(&ArchiveSpec::new(Scale::Tiny, 404))[0];
+    let index = DtwIndex::builder_from_dataset(ds)
+        .bound(BoundKind::Keogh)
+        .strategy(SearchStrategy::SortedPrecomputed)
+        .build()
+        .unwrap();
+    let mut searcher = index.searcher();
+    assert_eq!(searcher.backend_name(), Some("native"));
+    let queries: Vec<Vec<f64>> = ds.test.iter().map(|s| s.values.clone()).collect();
+    assert!(queries.len() > 1, "need a real batch");
+    for k in [1usize, 3, 10] {
+        let outs = searcher.query_batch::<Squared>(&queries, &QueryOptions::k(k));
+        for (out, q) in outs.iter().zip(queries.iter()) {
+            assert!(out.batched, "k={k} should ride the native prefilter");
+            assert_eq!(out.distances(), oracle(&index, q, k), "batched k={k}");
+        }
+    }
+}
+
+#[test]
+fn deprecated_1nn_shims_agree_with_the_facade() {
+    #![allow(deprecated)]
+    use dtw_bounds::bounds::{PreparedSeries, Scratch};
+    use dtw_bounds::search::nn::nn_sorted;
+    use dtw_bounds::search::PreparedTrainSet;
+
+    let ds = &generate_archive(&ArchiveSpec::new(Scale::Tiny, 505))[0];
+    let w = ds.window.max(1);
+    let train = PreparedTrainSet::from_dataset(ds, w);
+    let index = DtwIndex::builder_from_dataset(ds).window(w).build().unwrap();
+    let mut scratch = Scratch::default();
+    let (mut bb, mut ib) = (Vec::new(), Vec::new());
+    for q in ds.test.iter().take(5) {
+        let pq = PreparedSeries::prepare(q.values.clone(), w);
+        let (legacy, _) = nn_sorted::<Squared>(
+            &pq,
+            &train,
+            BoundKind::Webb,
+            &mut scratch,
+            &mut bb,
+            &mut ib,
+        );
+        let facade = index.knn::<Squared>(&q.values, 1);
+        assert_eq!(legacy.distance, facade.neighbors[0].distance);
+    }
+}

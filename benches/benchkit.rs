@@ -130,6 +130,62 @@ pub fn write_nn_search_json(path: &str, records: &[NnSearchRecord]) -> std::io::
     std::fs::write(path, out)
 }
 
+/// One machine-readable record for the streaming-search trajectory file
+/// (`BENCH_stream_search.json`): throughput and per-cascade-stage prune
+/// rate over a synthetic monitor workload.
+#[derive(Debug, Clone)]
+pub struct StreamSearchRecord {
+    /// Cascade label, e.g. `LB_KimFL->LB_Keogh->LB_Webb`.
+    pub cascade: String,
+    /// Stream samples scanned (per repeat).
+    pub samples: usize,
+    /// Windows evaluated (per repeat).
+    pub windows: usize,
+    /// Windows matched (per repeat).
+    pub matches: usize,
+    /// Stream samples per second of search-busy time.
+    pub samples_per_sec: f64,
+    /// Fraction of window × candidate pairs pruned by the whole cascade.
+    pub prune_rate: f64,
+    /// Per-stage `(bound name, fraction of pairs pruned at this stage)`.
+    pub stage_prune: Vec<(String, f64)>,
+    /// Full DTW computations started (per repeat).
+    pub dtw_calls: usize,
+}
+
+/// Write streaming-search records as a JSON array (manual formatting —
+/// no `serde` in the offline build; stable for line-diffing across PRs).
+pub fn write_stream_search_json(
+    path: &str,
+    records: &[StreamSearchRecord],
+) -> std::io::Result<()> {
+    let esc = |s: &str| s.replace('\\', "\\\\").replace('"', "\\\"");
+    let mut out = String::from("[\n");
+    for (i, r) in records.iter().enumerate() {
+        let sep = if i + 1 == records.len() { "" } else { "," };
+        let stages: Vec<String> = r
+            .stage_prune
+            .iter()
+            .map(|(name, rate)| format!("\"{}\": {rate:.4}", esc(name)))
+            .collect();
+        out.push_str(&format!(
+            "  {{\"cascade\": \"{}\", \"samples\": {}, \"windows\": {}, \
+             \"matches\": {}, \"samples_per_sec\": {:.1}, \"prune_rate\": {:.4}, \
+             \"stages\": {{{}}}, \"dtw_calls\": {}}}{sep}\n",
+            esc(&r.cascade),
+            r.samples,
+            r.windows,
+            r.matches,
+            r.samples_per_sec,
+            r.prune_rate,
+            stages.join(", "),
+            r.dtw_calls,
+        ));
+    }
+    out.push_str("]\n");
+    std::fs::write(path, out)
+}
+
 /// Write records as a JSON array. The offline build has no `serde`; the
 /// records are flat, so manual formatting is sufficient and the output is
 /// stable for line-diffing across PRs.

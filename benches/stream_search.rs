@@ -1,0 +1,135 @@
+//! Streaming subsequence-search benchmark: samples/sec and per-stage
+//! prune rate for each screening cascade, over the synthetic monitor
+//! workload (pattern library + noise stream with embedded occurrences).
+//! Writes `BENCH_stream_search.json` so the streaming-path perf
+//! trajectory is tracked across PRs alongside `BENCH_nn_search.json`.
+//!
+//! ```sh
+//! cargo bench --bench stream_search
+//! DTWB_STREAM_LEN=8000 DTWB_REPEATS=1 cargo bench --bench stream_search  # quick pass
+//! ```
+//!
+//! Knobs (environment): `DTWB_STREAM_LEN` (default 20000),
+//! `DTWB_PATTERNS` (default 32), `DTWB_REPEATS` (default 3),
+//! `DTWB_SEED` (default 2021).
+
+#[path = "benchkit.rs"]
+mod benchkit;
+
+use dtw_bounds::bounds::BoundKind;
+use dtw_bounds::data::rng::Rng;
+use dtw_bounds::data::synthetic::{embed_stream, sinusoid_pattern};
+use dtw_bounds::delta::Squared;
+use dtw_bounds::index::DtwIndex;
+use dtw_bounds::metrics::Table;
+use dtw_bounds::stream::SubsequenceOptions;
+
+const PATTERN_LEN: usize = 128;
+const W: usize = 6;
+const HOP: usize = 4;
+const TAU: f64 = 18.0;
+
+/// The cascades to compare, cheapest-to-tightest final stage.
+fn cascades() -> Vec<Vec<BoundKind>> {
+    vec![
+        vec![BoundKind::KimFL],
+        vec![BoundKind::KimFL, BoundKind::Keogh],
+        vec![BoundKind::KimFL, BoundKind::Keogh, BoundKind::Webb],
+        vec![BoundKind::KimFL, BoundKind::Keogh, BoundKind::Webb, BoundKind::Petitjean],
+    ]
+}
+
+fn cascade_label(c: &[BoundKind]) -> String {
+    c.iter().map(|b| b.name()).collect::<Vec<_>>().join("->")
+}
+
+fn main() {
+    let knobs = benchkit::Knobs::from_env();
+    let stream_len: usize = std::env::var("DTWB_STREAM_LEN")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(20_000);
+    let n_patterns: usize = std::env::var("DTWB_PATTERNS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(32);
+
+    let mut rng = Rng::seeded(knobs.seed);
+    let patterns: Vec<Vec<f64>> =
+        (0..n_patterns).map(|_| sinusoid_pattern(&mut rng, PATTERN_LEN)).collect();
+    let index = DtwIndex::builder(patterns.clone())
+        .labels((0..n_patterns as u32).collect())
+        .window(W)
+        .build()
+        .expect("patterns share one length");
+
+    let (stream, _embedded) = embed_stream(&mut rng, &patterns, stream_len, 0.08, 0.1, 0.15);
+
+    benchkit::banner(&format!(
+        "stream search: {n_patterns} patterns x {PATTERN_LEN}, stream {} samples, \
+         hop {HOP}, tau {TAU}, {} repeats",
+        stream.len(),
+        knobs.repeats
+    ));
+
+    let mut table =
+        Table::new(vec!["cascade", "samples/s", "prune rate", "dtw calls", "matches"]);
+    let mut records = Vec::new();
+
+    for cascade in cascades() {
+        let label = cascade_label(&cascade);
+        let opts = SubsequenceOptions::threshold(TAU)
+            .with_hop(HOP)
+            .with_znorm(true)
+            .with_cascade(cascade);
+
+        // Warmup once, then timed repeats (fresh searcher per pass —
+        // the searcher state is one stream's pass).
+        let mut report = index
+            .subsequence_scan::<Squared>(&stream, opts.clone())
+            .expect("valid options");
+        let mut busy = 0.0f64;
+        for _ in 0..knobs.repeats {
+            report = index
+                .subsequence_scan::<Squared>(&stream, opts.clone())
+                .expect("valid options");
+            busy += report.busy.as_secs_f64();
+        }
+        let stats = &report.stats;
+        let per_repeat = busy / knobs.repeats.max(1) as f64;
+        // Zero busy time (e.g. a stream shorter than one window) must not
+        // poison the JSON with `inf`.
+        let sps = if per_repeat > 0.0 { stats.samples as f64 / per_repeat } else { 0.0 };
+        let pairs = stats.candidates.max(1) as f64;
+        let stage_prune: Vec<(String, f64)> = stats
+            .stages
+            .iter()
+            .map(|s| (s.bound.name(), s.pruned as f64 / pairs))
+            .collect();
+
+        table.row(vec![
+            label.clone(),
+            format!("{sps:.0}"),
+            format!("{:.1}%", 100.0 * stats.prune_rate()),
+            format!("{}", stats.dtw_calls),
+            format!("{}", stats.matches),
+        ]);
+        records.push(benchkit::StreamSearchRecord {
+            cascade: label,
+            samples: stats.samples as usize,
+            windows: stats.windows as usize,
+            matches: stats.matches as usize,
+            samples_per_sec: sps,
+            prune_rate: stats.prune_rate(),
+            stage_prune,
+            dtw_calls: stats.dtw_calls as usize,
+        });
+    }
+
+    println!("{}", table.to_markdown());
+    println!("(per-stage rates in BENCH_stream_search.json count pairs rejected at that");
+    println!(" stage; every cascade answers identically — only the screening cost moves)");
+    benchkit::write_stream_search_json("BENCH_stream_search.json", &records)
+        .expect("write BENCH_stream_search.json");
+    println!("wrote BENCH_stream_search.json ({} records)", records.len());
+}

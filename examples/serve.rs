@@ -14,6 +14,10 @@
 //! the `--k` nearest neighbors through the line protocol's `k=<n>;`
 //! prefix), and reports exactness, latency percentiles and throughput
 //! for both the scalar and batched paths.
+//!
+//! The full line protocol — including the `stream=<params>;samples`
+//! subsequence-search extension — is specified with worked
+//! request/response examples in `docs/protocol.md`.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;

@@ -1,24 +1,26 @@
 //! Streaming pattern monitor — the gesture/sensor-matching scenario the
-//! paper's introduction motivates.
+//! paper's introduction motivates, on the real `stream` subsystem.
 //!
 //! ```sh
 //! cargo run --release --example streaming_monitor
 //! ```
 //!
-//! A reference library of labelled patterns (e.g. gestures) is prepared
-//! offline. A continuous sensor stream arrives; every hop we take the
-//! latest window, z-normalize it, and ask: *is this within DTW distance τ
-//! of any known pattern?* `LB_WEBB` screens the library so most windows
-//! never touch DTW — the exact deployment pattern of §1's applications.
+//! A reference library of labelled patterns (e.g. gestures) is indexed
+//! offline into a [`DtwIndex`]. A continuous sensor stream arrives;
+//! [`SubsequenceSearcher`] slides a pattern-length window every hop,
+//! z-normalizes it, and asks: *is this within DTW distance τ of any known
+//! pattern?* The `LB_KIM_FL → LB_KEOGH → LB_WEBB` cascade screens the
+//! library so most window × pattern pairs never touch DTW — the exact
+//! deployment pattern of §1's applications, with per-stage prune
+//! statistics to show where the screening happens.
 
 use std::time::Instant;
 
-use dtw_bounds::bounds::{BoundKind, PreparedSeries, Scratch};
 use dtw_bounds::data::rng::Rng;
-use dtw_bounds::data::znorm::znormalized;
+use dtw_bounds::data::synthetic::{embed_stream, sinusoid_pattern};
 use dtw_bounds::delta::Squared;
-use dtw_bounds::dtw::dtw_ea;
-use dtw_bounds::search::PreparedTrainSet;
+use dtw_bounds::index::DtwIndex;
+use dtw_bounds::stream::{StreamMatch, SubsequenceOptions};
 
 const PATTERN_LEN: usize = 128;
 const N_PATTERNS: usize = 64;
@@ -27,48 +29,43 @@ const HOP: usize = 8;
 const STREAM_LEN: usize = 40_000;
 const TAU: f64 = 18.0; // match threshold on z-normalized windows
 
-fn make_pattern(rng: &mut Rng) -> Vec<f64> {
-    // Smooth random pattern: sum of a few sinusoids.
-    let k = rng.int_range(2, 5);
-    let params: Vec<(f64, f64, f64)> = (0..k)
-        .map(|_| (rng.uniform_range(0.3, 2.0), rng.uniform_range(0.02, 0.3), rng.uniform() * 6.28))
-        .collect();
-    znormalized(
-        &(0..PATTERN_LEN)
-            .map(|i| params.iter().map(|(a, f, p)| a * (f * i as f64 + p).sin()).sum())
-            .collect::<Vec<f64>>(),
-    )
+/// Merge overlapping raw detections into episodes, keeping each
+/// episode's best (lowest-distance) match — successive hops across one
+/// embedded occurrence all fire, and should count once. The merge window
+/// anchors on the *previous raw detection* (not the episode's best
+/// match, whose start can jump) so a gap of one window length always
+/// starts a new episode.
+fn episodes(detections: &[StreamMatch]) -> Vec<StreamMatch> {
+    let mut out: Vec<StreamMatch> = Vec::new();
+    let mut prev_start: Option<u64> = None;
+    for &m in detections {
+        match (prev_start, out.last_mut()) {
+            (Some(prev), Some(best)) if m.start < prev + PATTERN_LEN as u64 => {
+                if m.distance < best.distance {
+                    *best = m;
+                }
+            }
+            _ => out.push(m),
+        }
+        prev_start = Some(m.start);
+    }
+    out
 }
 
 fn main() {
     let mut rng = Rng::seeded(404);
-    // Reference library, prepared once (envelopes precomputed offline).
-    let patterns: Vec<Vec<f64>> = (0..N_PATTERNS).map(|_| make_pattern(&mut rng)).collect();
-    let library = PreparedTrainSet {
-        labels: (0..N_PATTERNS as u32).collect(),
-        series: patterns.iter().map(|p| PreparedSeries::prepare(p.clone(), W)).collect(),
-        w: W,
-    };
+    // Reference library, indexed once (envelopes precomputed offline).
+    let patterns: Vec<Vec<f64>> =
+        (0..N_PATTERNS).map(|_| sinusoid_pattern(&mut rng, PATTERN_LEN)).collect();
+    let index = DtwIndex::builder(patterns.clone())
+        .labels((0..N_PATTERNS as u32).collect())
+        .window(W)
+        .build()
+        .expect("patterns share one length");
 
-    // Sensor stream: noise with occasional embedded (warped) patterns.
-    let mut stream = Vec::with_capacity(STREAM_LEN);
-    let mut embedded = Vec::new();
-    while stream.len() < STREAM_LEN {
-        if rng.uniform() < 0.08 && stream.len() + PATTERN_LEN < STREAM_LEN {
-            let id = rng.below(N_PATTERNS);
-            embedded.push((stream.len(), id));
-            // mild amplitude jitter + noise
-            let scale = 1.0 + 0.1 * rng.normal();
-            for &v in &patterns[id] {
-                stream.push(scale * v + 0.15 * rng.normal());
-            }
-        } else {
-            let run = rng.int_range(20, 100);
-            for _ in 0..run {
-                stream.push(rng.normal() * 0.8);
-            }
-        }
-    }
+    // Sensor stream: noise with occasional embedded (jittered) patterns,
+    // plus the ground truth of where they were embedded.
+    let (stream, embedded) = embed_stream(&mut rng, &patterns, STREAM_LEN, 0.08, 0.1, 0.15);
 
     println!(
         "library: {N_PATTERNS} patterns x {PATTERN_LEN}; stream: {} samples, {} embedded occurrences",
@@ -76,85 +73,92 @@ fn main() {
         embedded.len()
     );
 
-    let mut scratch = Scratch::new(PATTERN_LEN);
-    let mut windows = 0usize;
-    let mut lb_pruned_all = 0usize;
-    let mut dtw_calls = 0usize;
-    let mut detections = Vec::new();
-    let started = Instant::now();
+    // The subsystem under demonstration: threshold mode, z-normalized
+    // windows, the default KimFL -> Keogh -> Webb cascade.
+    let mut searcher = index
+        .subsequence(SubsequenceOptions::threshold(TAU).with_hop(HOP).with_znorm(true))
+        .expect("valid options");
 
-    let mut pos = 0;
-    while pos + PATTERN_LEN <= stream.len() {
-        windows += 1;
-        let q = znormalized(&stream[pos..pos + PATTERN_LEN]);
-        let pq = PreparedSeries::prepare(q, W);
-        // Screen the whole library with LB_Webb at threshold tau; DTW only
-        // on candidates the bound cannot reject.
-        let mut best: Option<(usize, f64)> = None;
-        let mut survivors = 0usize;
-        for (ti, t) in library.series.iter().enumerate() {
-            let cutoff = best.map(|(_, d)| d).unwrap_or(TAU);
-            let lb = BoundKind::Webb.compute::<Squared>(&pq, t, W, cutoff, &mut scratch);
-            if lb >= cutoff {
-                continue;
-            }
-            survivors += 1;
-            dtw_calls += 1;
-            let d = dtw_ea::<Squared>(&pq.values, &t.values, W, cutoff);
-            if d < cutoff {
-                best = Some((ti, d));
-            }
-        }
-        lb_pruned_all += library.series.len() - survivors;
-        if let Some((id, d)) = best {
+    let started = Instant::now();
+    let mut detections: Vec<StreamMatch> = Vec::new();
+    for &v in &stream {
+        if let Some(m) = searcher.push::<Squared>(v) {
             if std::env::var("DTWB_DEBUG").is_ok() {
-                let near = embedded.iter().map(|&(e, _)| (pos as i64 - e as i64)).min_by_key(|v| v.abs());
-                eprintln!("detect pos={pos} id={id} d={d:.1} nearest-embed-delta={near:?}");
+                let near = embedded
+                    .iter()
+                    .map(|&(e, _)| m.start as i64 - e as i64)
+                    .min_by_key(|v| v.abs());
+                eprintln!(
+                    "detect pos={} id={} d={:.1} nearest-embed-delta={near:?}",
+                    m.start, m.neighbor, m.distance
+                );
             }
-            detections.push((pos, id, d));
-            pos += PATTERN_LEN; // skip past the match
-        } else {
-            pos += HOP;
+            detections.push(m);
         }
     }
     let elapsed = started.elapsed();
+    let report = searcher.finish();
+    let stats = &report.stats;
 
-    // Score detections against ground truth: an *event* hit is a
-    // detection within one hop of an embedded occurrence; an *identity*
-    // hit additionally matches the pattern id.
+    // Score merged episodes against ground truth: an *event* hit is an
+    // episode within one hop of an embedded occurrence; an *identity* hit
+    // additionally matches the pattern id.
+    let episodes = episodes(&detections);
     let mut event_hits = 0;
     let mut id_hits = 0;
-    for &(dpos, did, _) in &detections {
+    for m in &episodes {
+        let dpos = m.start as usize;
         if embedded.iter().any(|&(epos, _)| dpos.abs_diff(epos) <= HOP) {
             event_hits += 1;
         }
-        if embedded.iter().any(|&(epos, eid)| eid == did && dpos.abs_diff(epos) <= HOP) {
+        if embedded
+            .iter()
+            .any(|&(epos, eid)| eid == m.neighbor && dpos.abs_diff(epos) <= HOP)
+        {
             id_hits += 1;
         }
     }
 
-    println!("windows examined:   {windows}");
+    println!("windows examined:   {}", stats.windows);
+    for st in &stats.stages {
+        let label = format!("{} stage:", st.bound.name());
+        println!(
+            "{label:<20}{} pruned of {} pairs ({:.1}%)",
+            st.pruned,
+            stats.candidates,
+            100.0 * st.pruned as f64 / stats.candidates.max(1) as f64
+        );
+    }
     println!(
-        "LB pruned:          {lb_pruned_all} / {} candidate pairs ({:.1}%)",
-        windows * N_PATTERNS,
-        100.0 * lb_pruned_all as f64 / (windows * N_PATTERNS) as f64
+        "cascade total:      {} / {} pairs pruned ({:.1}%)",
+        stats.pruned(),
+        stats.candidates,
+        100.0 * stats.prune_rate()
     );
-    println!("DTW computations:   {dtw_calls}");
+    println!("DTW computations:   {} ({} abandoned)", stats.dtw_calls, stats.dtw_abandoned);
     println!(
-        "detections:         {} — {} event hits, {} exact-id hits, {} embedded occurrences",
+        "detections:         {} raw -> {} episodes — {} event hits, {} exact-id hits, {} embedded",
         detections.len(),
+        episodes.len(),
         event_hits,
         id_hits,
         embedded.len()
     );
     println!(
-        "throughput:         {:.0} windows/s ({:.2} ms/window)",
-        windows as f64 / elapsed.as_secs_f64(),
-        elapsed.as_secs_f64() * 1e3 / windows as f64
+        "throughput:         {:.0} samples/s ({:.0} windows/s, {:.2} ms/window)",
+        stream.len() as f64 / elapsed.as_secs_f64(),
+        stats.windows as f64 / elapsed.as_secs_f64(),
+        elapsed.as_secs_f64() * 1e3 / stats.windows.max(1) as f64
     );
     assert!(
         event_hits * 10 >= embedded.len() * 6,
         "detector missed too many embedded events: {event_hits}/{}",
         embedded.len()
+    );
+    assert!(
+        stats.pruned() * 2 > stats.candidates,
+        "cascade pruned under half the pairs: {}/{}",
+        stats.pruned(),
+        stats.candidates
     );
 }

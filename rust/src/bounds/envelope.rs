@@ -107,6 +107,153 @@ pub fn envelopes(s: &[f64], w: usize) -> (Vec<f64>, Vec<f64>) {
     (lo, up)
 }
 
+/// Incremental (streaming) envelope maintainer — the online counterpart
+/// of [`envelopes_into`], for unbounded sample streams.
+///
+/// Feed samples one at a time with [`StreamingEnvelope::push`]; envelope
+/// values come back **in position order**, each as soon as its window
+/// `[i-w, i+w]` has fully arrived (i.e. with a fixed latency of `w`
+/// samples). After the last sample, [`StreamingEnvelope::flush_next`]
+/// drains the `min(w, n)` tail positions, whose windows are clipped at
+/// the stream end exactly as the batch routine clips them at the series
+/// end. The sequence of emitted `(lo, up)` pairs is therefore **bit-equal
+/// to the batch envelopes** of the full sample sequence — the property
+/// test `streaming_matches_batch_on_random_series` pins this down, so
+/// sample-at-a-time consumers (monitoring pipelines feeding
+/// `stream::SubsequenceSearcher`-style workloads) can maintain envelopes
+/// online and still agree exactly with batch-prepared data.
+///
+/// Complexity: `O(1)` amortized per sample (each sample enters and leaves
+/// each monotonic deque at most once), `O(w)` memory independent of the
+/// stream length.
+#[derive(Debug, Clone)]
+pub struct StreamingEnvelope {
+    w: usize,
+    /// Samples pushed so far (the next sample gets this index).
+    pushed: u64,
+    /// Envelope positions emitted so far (the next emit is for this index).
+    emitted: u64,
+    /// `(index, value)` with values strictly decreasing front→back.
+    max_q: std::collections::VecDeque<(u64, f64)>,
+    /// `(index, value)` with values strictly increasing front→back.
+    min_q: std::collections::VecDeque<(u64, f64)>,
+}
+
+impl StreamingEnvelope {
+    /// A maintainer for window `w` (the same `w` as [`envelopes_into`]).
+    pub fn new(w: usize) -> StreamingEnvelope {
+        StreamingEnvelope {
+            w,
+            pushed: 0,
+            emitted: 0,
+            max_q: std::collections::VecDeque::with_capacity(w + 1),
+            min_q: std::collections::VecDeque::with_capacity(w + 1),
+        }
+    }
+
+    /// The window this maintainer computes envelopes for.
+    #[inline]
+    pub fn window(&self) -> usize {
+        self.w
+    }
+
+    /// Samples pushed so far.
+    #[inline]
+    pub fn pushed(&self) -> u64 {
+        self.pushed
+    }
+
+    /// Envelope positions emitted so far (always `≤ pushed`).
+    #[inline]
+    pub fn emitted(&self) -> u64 {
+        self.emitted
+    }
+
+    /// Reset to an empty stream, optionally with a new window. Keeps the
+    /// deque allocations (for per-window reuse on hot paths).
+    pub fn reset(&mut self, w: usize) {
+        self.w = w;
+        self.pushed = 0;
+        self.emitted = 0;
+        self.max_q.clear();
+        self.min_q.clear();
+    }
+
+    /// Emit the envelope for position `emitted`, expiring deque entries
+    /// that fell off the left edge of its window.
+    fn emit(&mut self) -> (f64, f64) {
+        let i = self.emitted;
+        let left = i.saturating_sub(self.w as u64);
+        while self.max_q.front().is_some_and(|&(j, _)| j < left) {
+            self.max_q.pop_front();
+        }
+        while self.min_q.front().is_some_and(|&(j, _)| j < left) {
+            self.min_q.pop_front();
+        }
+        self.emitted += 1;
+        let lo = self.min_q.front().expect("window non-empty").1;
+        let up = self.max_q.front().expect("window non-empty").1;
+        (lo, up)
+    }
+
+    /// Push the next sample. Returns `Some((lo, up))` for the oldest
+    /// not-yet-emitted position once its full window `[i-w, i+w]` has
+    /// arrived — i.e. the envelope of position `pushed - 1 - w`, delayed
+    /// by exactly `w` samples (no delay when `w == 0`).
+    pub fn push(&mut self, v: f64) -> Option<(f64, f64)> {
+        let j = self.pushed;
+        self.pushed += 1;
+        while self.max_q.back().is_some_and(|&(_, x)| x <= v) {
+            self.max_q.pop_back();
+        }
+        self.max_q.push_back((j, v));
+        while self.min_q.back().is_some_and(|&(_, x)| x >= v) {
+            self.min_q.pop_back();
+        }
+        self.min_q.push_back((j, v));
+        if j >= self.emitted + self.w as u64 {
+            Some(self.emit())
+        } else {
+            None
+        }
+    }
+
+    /// After the last sample: emit the next pending tail position, whose
+    /// window is clipped at the stream end (exactly the batch routine's
+    /// end-of-series behaviour). Returns `None` when every pushed
+    /// position has been emitted.
+    pub fn flush_next(&mut self) -> Option<(f64, f64)> {
+        if self.emitted < self.pushed {
+            Some(self.emit())
+        } else {
+            None
+        }
+    }
+
+    /// Convenience: run a whole series through the maintainer, appending
+    /// every emitted pair to `lo`/`up` (cleared first). Produces exactly
+    /// [`envelopes_into`]'s output.
+    pub fn compute_into(&mut self, s: &[f64], lo: &mut Vec<f64>, up: &mut Vec<f64>) {
+        assert!(!s.is_empty(), "envelope of empty series");
+        let w = self.w;
+        self.reset(w);
+        lo.clear();
+        up.clear();
+        lo.reserve(s.len());
+        up.reserve(s.len());
+        for &v in s {
+            if let Some((l, u)) = self.push(v) {
+                lo.push(l);
+                up.push(u);
+            }
+        }
+        while let Some((l, u)) = self.flush_next() {
+            lo.push(l);
+            up.push(u);
+        }
+    }
+}
+
 /// Naive `O(ℓ·w)` reference used by tests.
 pub fn envelopes_naive(s: &[f64], w: usize) -> (Vec<f64>, Vec<f64>) {
     let n = s.len();
@@ -186,6 +333,103 @@ mod tests {
             }
             prev = cur;
         }
+    }
+
+    #[test]
+    fn single_element_series() {
+        for w in [0usize, 1, 5, 100] {
+            let (lo, up) = envelopes(&[2.5], w);
+            assert_eq!(lo, vec![2.5], "w={w}");
+            assert_eq!(up, vec![2.5], "w={w}");
+            let mut env = StreamingEnvelope::new(w);
+            let (mut slo, mut sup) = (Vec::new(), Vec::new());
+            env.compute_into(&[2.5], &mut slo, &mut sup);
+            assert_eq!(slo, lo, "w={w}");
+            assert_eq!(sup, up, "w={w}");
+        }
+    }
+
+    #[test]
+    fn constant_series_envelopes_are_the_constant() {
+        let s = [4.25; 17];
+        for w in [0usize, 1, 3, 16, 17, 40] {
+            let (lo, up) = envelopes(&s, w);
+            assert!(lo.iter().all(|&v| v == 4.25), "w={w}");
+            assert!(up.iter().all(|&v| v == 4.25), "w={w}");
+            let mut env = StreamingEnvelope::new(w);
+            let (mut slo, mut sup) = (Vec::new(), Vec::new());
+            env.compute_into(&s, &mut slo, &mut sup);
+            assert_eq!(slo, lo, "w={w}");
+            assert_eq!(sup, up, "w={w}");
+        }
+    }
+
+    #[test]
+    fn window_at_and_beyond_length_is_global_extrema() {
+        let s = [3.0, -1.0, 4.0, 0.5, 2.0];
+        // w = len-1 is already unconstrained; larger w must not change it.
+        for w in [s.len() - 1, s.len(), s.len() + 1, 10 * s.len()] {
+            let (lo, up) = envelopes(&s, w);
+            assert!(lo.iter().all(|&v| v == -1.0), "w={w}");
+            assert!(up.iter().all(|&v| v == 4.0), "w={w}");
+        }
+    }
+
+    /// The tentpole invariant: the streaming maintainer emits exactly the
+    /// batch envelopes — same values, same order, bit-equal — across
+    /// random series, window grids and both the push and flush paths.
+    #[test]
+    fn streaming_matches_batch_on_random_series() {
+        let mut rng = Rng::seeded(20_26);
+        for &n in &[1usize, 2, 3, 5, 16, 63, 257] {
+            for &w in &[0usize, 1, 2, 3, 7, 31, 300] {
+                let s: Vec<f64> = (0..n).map(|_| rng.normal() * 2.0).collect();
+                let (lo_b, up_b) = envelopes(&s, w);
+
+                // Manual push/flush loop (checks emission latency too).
+                let mut env = StreamingEnvelope::new(w);
+                let mut lo_s = Vec::new();
+                let mut up_s = Vec::new();
+                for (j, &v) in s.iter().enumerate() {
+                    match env.push(v) {
+                        Some((l, u)) => {
+                            assert!(j >= w, "emitted before the window arrived");
+                            lo_s.push(l);
+                            up_s.push(u);
+                        }
+                        None => assert!(j < w, "push {j} should have emitted (w={w})"),
+                    }
+                }
+                while let Some((l, u)) = env.flush_next() {
+                    lo_s.push(l);
+                    up_s.push(u);
+                }
+                assert!(env.flush_next().is_none(), "flush drains exactly once");
+                assert_eq!(lo_s, lo_b, "lo n={n} w={w}");
+                assert_eq!(up_s, up_b, "up n={n} w={w}");
+
+                // Reuse the same maintainer via compute_into (reset path).
+                let (mut lo_c, mut up_c) = (vec![0.0; 3], vec![0.0; 3]);
+                env.compute_into(&s, &mut lo_c, &mut up_c);
+                assert_eq!(lo_c, lo_b, "compute_into lo n={n} w={w}");
+                assert_eq!(up_c, up_b, "compute_into up n={n} w={w}");
+            }
+        }
+    }
+
+    #[test]
+    fn streaming_envelope_memory_stays_bounded() {
+        // The deques never hold more than one window's worth of
+        // candidates, regardless of how long the stream runs.
+        let mut rng = Rng::seeded(5150);
+        let w = 9;
+        let mut env = StreamingEnvelope::new(w);
+        for _ in 0..10_000 {
+            env.push(rng.normal());
+            assert!(env.max_q.len() <= 2 * w + 1);
+            assert!(env.min_q.len() <= 2 * w + 1);
+        }
+        assert_eq!(env.emitted(), 10_000 - w as u64);
     }
 
     #[test]

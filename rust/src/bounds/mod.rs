@@ -28,6 +28,26 @@
 //!   set; envelopes of `A` once per query — both carried by
 //!   [`PreparedSeries`].
 //! * Bounds are *not* symmetric: `λ(A,B) ≠ λ(B,A)` in general.
+//!
+//! ## Example
+//!
+//! Every bound in the family under-estimates windowed DTW:
+//!
+//! ```
+//! use dtw_bounds::bounds::{BoundKind, PreparedSeries, Scratch};
+//! use dtw_bounds::delta::Squared;
+//! use dtw_bounds::dtw::dtw;
+//!
+//! let w = 2;
+//! let q = PreparedSeries::prepare(vec![0.0, 1.0, 2.0, 1.0, 0.0, -1.0], w);
+//! let t = PreparedSeries::prepare(vec![0.5, 1.5, 2.5, 1.5, 0.5, -0.5], w);
+//! let d = dtw::<Squared>(&q.values, &t.values, w);
+//! let mut scratch = Scratch::new(q.len());
+//! for &bound in BoundKind::ALL {
+//!     let lb = bound.compute::<Squared>(&q, &t, w, f64::INFINITY, &mut scratch);
+//!     assert!(lb <= d + 1e-9, "{bound}: {lb} > {d}");
+//! }
+//! ```
 
 pub mod bands;
 pub mod cascade;
@@ -139,6 +159,29 @@ impl Scratch {
 /// Dynamically-selectable lower bound. Experiment drivers and the CLI
 /// hold a `BoundKind`; the hot loops call [`BoundKind::compute`] which
 /// dispatches once to the monomorphized kernels.
+///
+/// ## Choosing a bound (tightness vs. cost, per the paper's §6)
+///
+/// Tightness is the mean `λ_w/DTW_w` ratio (higher prunes more); cost is
+/// per query × candidate pair *after* the usual preparations (candidate
+/// envelopes per training set, query envelopes per query).
+///
+/// | Kind | Tightness | Per-pair cost | Reach for it when |
+/// |---|---|---|---|
+/// | [`KimFL`](BoundKind::KimFL) | lowest | `O(1)` | as a cascade front stage; endpoint-divergent data |
+/// | [`Keogh`](BoundKind::Keogh) | baseline | one `O(ℓ)` pass | candidate envelopes are all you have (batched backends) |
+/// | [`Improved`](BoundKind::Improved) | > Keogh | `O(ℓ)` + per-pair projection envelopes | random-order search at moderate windows |
+/// | [`Enhanced`](BoundKind::Enhanced)`^k` | tunable with `k` | `O(ℓ + k·w)` | small windows, `k ≈ 3–8` (Tan et al.'s sweet spot) |
+/// | [`Petitjean`](BoundKind::Petitjean) | tightest `O(ℓ)` known | highest constant (projection + its envelopes) | Algorithm 3 (early abandoning pays for tightness) |
+/// | [`Webb`](BoundKind::Webb) | ≈ Petitjean | lowest constant (envelopes-of-envelopes, no per-pair projection) | Algorithm 4 / sorted screening — **the default** |
+/// | [`WebbStar`](BoundKind::WebbStar) | slightly ≤ Webb | like Webb | δ lacks the triangle-adjustment property |
+/// | [`WebbEnhanced`](BoundKind::WebbEnhanced)`^k` | ≥ Webb | `O(ℓ + k·w)` | banded refinement at small windows |
+/// | [`Cascade`](BoundKind::Cascade) | = Webb when run to completion | anytime (`KimFL` first) | thresholded screening — streams and monitors |
+/// | [`UcrCascade`](BoundKind::UcrCascade) | Keogh-class | anytime | UCR-suite parity baselines |
+///
+/// The ablation kinds (`*NoLr`) exist for §7's experiments, and
+/// [`KeoghRev`](BoundKind::KeoghRev) is the reversed-role `LB_KEOGH`
+/// used inside [`UcrCascade`](BoundKind::UcrCascade).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum BoundKind {
     /// Constant-time first/last bound (`LB_KIM` in its windowed-safe form).

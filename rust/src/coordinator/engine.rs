@@ -167,6 +167,17 @@ impl NnEngine {
     ) -> Vec<QueryOutcome> {
         self.searcher.query_batch_mixed::<Squared>(items)
     }
+
+    /// Streaming subsequence search over this engine's index: slide an
+    /// index-length window along `samples` and report matching windows —
+    /// the line protocol's `stream=` requests (see `docs/protocol.md`).
+    pub fn query_stream(
+        &mut self,
+        samples: &[f64],
+        opts: crate::stream::SubsequenceOptions,
+    ) -> anyhow::Result<crate::stream::StreamReport> {
+        self.searcher.index().subsequence_scan::<Squared>(samples, opts)
+    }
 }
 
 #[cfg(test)]

@@ -18,7 +18,40 @@
 //!   single queries through the scalar path, whichever is
 //!   available/profitable.
 //! * [`server`] — a line-protocol TCP front end over the router (used by
-//!   `examples/serve.rs`).
+//!   `examples/serve.rs`; the wire format is specified with worked
+//!   examples in `docs/protocol.md`).
+//!
+//! ## Example
+//!
+//! A router over a shared index answers exact k-NN queries from any
+//! thread, and serves streaming subsequence searches on the same
+//! dispatch thread:
+//!
+//! ```
+//! use std::sync::Arc;
+//! use dtw_bounds::coordinator::Router;
+//! use dtw_bounds::index::{DtwIndex, QueryOptions};
+//! use dtw_bounds::stream::SubsequenceOptions;
+//!
+//! let index = DtwIndex::builder(vec![
+//!     vec![0.0, 0.1, 0.2, 0.1],
+//!     vec![5.0, 5.1, 5.2, 5.1],
+//! ])
+//! .labels(vec![0, 1])
+//! .window(1)
+//! .build()?;
+//! let router = Arc::new(Router::spawn_index(index));
+//!
+//! let out = router.query_with(vec![0.05, 0.1, 0.2, 0.1], QueryOptions::k(1));
+//! assert_eq!(out.best().unwrap().label, 0);
+//!
+//! let report = router.stream(
+//!     vec![9.0, 9.0, 0.0, 0.1, 0.2, 0.1, 9.0],
+//!     SubsequenceOptions::threshold(1e-3),
+//! )?;
+//! assert_eq!(report.matches[0].start, 2); // the embedded pattern
+//! # Ok::<(), anyhow::Error>(())
+//! ```
 
 pub mod engine;
 pub mod pool;

@@ -18,11 +18,13 @@ use std::thread::JoinHandle;
 use std::time::Duration;
 
 use crate::index::{DtwIndex, QueryOptions, QueryOutcome};
+use crate::stream::{StreamReport, SubsequenceOptions};
 
 use super::engine::{NnEngine, QueryResponse};
 
 enum Msg {
     Query(Vec<f64>, QueryOptions, Sender<QueryOutcome>),
+    Stream(Vec<f64>, SubsequenceOptions, Sender<anyhow::Result<StreamReport>>),
     Shutdown,
 }
 
@@ -45,6 +47,8 @@ pub struct RouterStats {
     pub batched: usize,
     /// Queries answered on the scalar path.
     pub scalar: usize,
+    /// Subsequence-search (`stream=`) requests served.
+    pub streams: usize,
 }
 
 impl Router {
@@ -65,15 +69,26 @@ impl Router {
                 // Block for the first message…
                 let first = match rx.recv() {
                     Ok(Msg::Query(q, opts, reply)) => (q, opts, reply),
+                    Ok(Msg::Stream(samples, opts, reply)) => {
+                        // Stream requests are self-contained passes over
+                        // their own samples — nothing to batch.
+                        stats.streams += 1;
+                        let _ = reply.send(engine.query_stream(&samples, opts));
+                        continue;
+                    }
                     Ok(Msg::Shutdown) | Err(_) => return stats,
                 };
                 // …then opportunistically drain whatever else is queued
                 // (dynamic batching: no artificial delay, batch = backlog).
                 let mut batch = vec![first];
+                let mut streams = Vec::new();
                 let mut shutdown = false;
                 while batch.len() < max_batch {
                     match rx.try_recv() {
                         Ok(Msg::Query(q, opts, reply)) => batch.push((q, opts, reply)),
+                        Ok(Msg::Stream(samples, opts, reply)) => {
+                            streams.push((samples, opts, reply));
+                        }
                         Ok(Msg::Shutdown) => {
                             shutdown = true;
                             break;
@@ -101,6 +116,12 @@ impl Router {
                         stats.scalar += 1;
                     }
                     let _ = reply.send(resp);
+                }
+                // Stream requests drained mid-batch run after the batch
+                // (they never delay the latency-sensitive query path).
+                for (samples, opts, reply) in streams {
+                    stats.streams += 1;
+                    let _ = reply.send(engine.query_stream(&samples, opts));
                 }
                 if shutdown {
                     return stats;
@@ -146,6 +167,19 @@ impl Router {
         let (reply_tx, reply_rx) = mpsc::channel();
         self.tx.send(Msg::Query(values, opts, reply_tx)).expect("router alive");
         reply_rx
+    }
+
+    /// Submit a finite sample stream for subsequence search (threshold
+    /// and/or top-k per `opts`) and block for the report — the serving
+    /// face of [`crate::index::DtwIndex::subsequence`].
+    pub fn stream(
+        &self,
+        samples: Vec<f64>,
+        opts: SubsequenceOptions,
+    ) -> anyhow::Result<StreamReport> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx.send(Msg::Stream(samples, opts, reply_tx)).expect("router alive");
+        reply_rx.recv().expect("router answers")
     }
 
     /// Stop the dispatch loop and collect its statistics.
@@ -233,6 +267,33 @@ mod tests {
         assert_eq!(stats.served, ds.test.len());
         // Every query is attributed to exactly one path.
         assert_eq!(stats.scalar + stats.batched, stats.served);
+    }
+
+    #[test]
+    fn router_serves_stream_requests() {
+        let ds = &generate_archive(&ArchiveSpec::new(Scale::Tiny, 74))[0];
+        let index = crate::index::DtwIndex::builder_from_dataset(ds).build().unwrap();
+        let router = Router::spawn_index(index.clone());
+        // Far-away filler around an exact copy of train[0]: exactly one
+        // window matches, at distance zero.
+        let mut samples = vec![1e3; 5];
+        samples.extend_from_slice(&index.train().series[0].values);
+        samples.extend(vec![1e3; 5]);
+        let report = router
+            .stream(samples, crate::stream::SubsequenceOptions::threshold(1e-9))
+            .unwrap();
+        assert_eq!(report.matches.len(), 1);
+        assert_eq!(report.matches[0].start, 5);
+        assert_eq!(report.matches[0].neighbor, 0);
+        assert_eq!(report.matches[0].distance, 0.0);
+        assert_eq!(report.stats.windows, 11);
+        // Inconsistent options surface as an error, not a panic.
+        assert!(router
+            .stream(vec![0.0; 4], crate::stream::SubsequenceOptions::default())
+            .is_err());
+        let stats = router.shutdown();
+        assert_eq!(stats.streams, 2);
+        assert_eq!(stats.served, 0, "stream requests are not query traffic");
     }
 
     #[test]

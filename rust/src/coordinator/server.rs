@@ -1,18 +1,28 @@
 //! TCP line-protocol front end over the [`Router`].
 //!
-//! Protocol (one line per message, UTF-8):
+//! Protocol (one line per message, UTF-8; the full specification with
+//! worked request/response examples lives in `docs/protocol.md`):
 //! * request:  `v1,v2,...,vN` — comma-separated series values (1-NN), or
 //!   `k=<n>;v1,v2,...,vN` for the `n` nearest neighbors;
 //! * 1-NN response: `label=<u32> dist=<f64> nn=<usize>
 //!   path=<scalar|batched> us=<u128>`;
 //! * k-NN response: `k=<n> neighbors=<idx>:<label>:<dist>,...
 //!   path=<scalar|batched> us=<u128>` (neighbors ascending by distance);
+//! * subsequence search: `stream=<params>;v1,v2,...,vN` where `<params>`
+//!   is a comma-separated list of `tau:<f>`, `k:<n>`, `hop:<n>`,
+//!   `znorm:<0|1>` (at least one of `tau`/`k`); the payload is a finite
+//!   sample stream, matched by sliding index-length windows (see
+//!   [`crate::stream`]). Response: `stream
+//!   matches=<start>:<neighbor>:<label>:<dist>,... windows=<n>
+//!   pruned=<p> dtw=<d> us=<u128>` (`matches=-` when none);
 //! * `PING` → `PONG`; malformed input → `ERR <why>`.
 //!
 //! One thread per connection feeds the shared router, whose dispatch loop
 //! batches across connections — concurrent clients automatically share
 //! batched prefilter executions on whichever
-//! [`crate::runtime::LbBackend`] the engine carries.
+//! [`crate::runtime::LbBackend`] the engine carries. `stream=` requests
+//! run after any queued query batch so they never delay the
+//! latency-sensitive k-NN path.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -22,6 +32,7 @@ use std::sync::Arc;
 use anyhow::{Context, Result};
 
 use crate::index::QueryOptions;
+use crate::stream::SubsequenceOptions;
 
 use super::engine::{EnginePath, QueryResponse};
 use super::router::Router;
@@ -130,6 +141,10 @@ fn respond(line: &str, router: &Router, default_k: usize) -> String {
     if line.eq_ignore_ascii_case("PING") {
         return "PONG".into();
     }
+    // `stream=<params>;` selects subsequence search for this request.
+    if let Some(rest) = line.strip_prefix("stream=") {
+        return respond_stream(rest, router);
+    }
     // Optional `k=<n>;` prefix selects k-NN for this request.
     let (k, payload) = match line.strip_prefix("k=") {
         Some(rest) => match rest.split_once(';') {
@@ -177,6 +192,75 @@ fn respond(line: &str, router: &Router, default_k: usize) -> String {
     }
 }
 
+/// Serve one `stream=<params>;v1,v2,...` request (the `stream=` prefix
+/// already stripped).
+fn respond_stream(rest: &str, router: &Router) -> String {
+    let (params, payload) = match rest.split_once(';') {
+        Some(x) => x,
+        None => return "ERR expected stream=<params>;v1,v2,...".into(),
+    };
+    let mut opts = SubsequenceOptions::default();
+    for kv in params.split(',').filter(|s| !s.trim().is_empty()) {
+        let (key, val) = match kv.split_once(':') {
+            Some(x) => x,
+            None => return format!("ERR stream param {kv:?}: expected key:value"),
+        };
+        match (key.trim(), val.trim()) {
+            ("tau", v) => match v.parse::<f64>() {
+                Ok(tau) if tau > 0.0 && tau.is_finite() => opts.threshold = Some(tau),
+                _ => return "ERR tau must be a positive finite number".into(),
+            },
+            ("k", v) => match v.parse::<usize>() {
+                Ok(k) if k >= 1 => opts.top_k = Some(k),
+                _ => return "ERR k must be a positive integer".into(),
+            },
+            ("hop", v) => match v.parse::<usize>() {
+                Ok(h) if h >= 1 => opts.hop = h,
+                _ => return "ERR hop must be a positive integer".into(),
+            },
+            ("znorm", v) => match v {
+                "1" | "true" => opts.znorm = Some(true),
+                "0" | "false" => opts.znorm = Some(false),
+                _ => return "ERR znorm must be 0 or 1".into(),
+            },
+            (k, _) => return format!("ERR unknown stream param {k:?}"),
+        }
+    }
+    if opts.threshold.is_none() && opts.top_k.is_none() {
+        return "ERR stream needs tau:<f> and/or k:<n>".into();
+    }
+    let values: Result<Vec<f64>, _> =
+        payload.split(',').map(|f| f.trim().parse::<f64>()).collect();
+    let values = match values {
+        Ok(values) if !values.is_empty() => values,
+        _ => return "ERR expected comma-separated floats".into(),
+    };
+    match router.stream(values, opts) {
+        Ok(report) => {
+            let matches = if report.matches.is_empty() {
+                "-".to_string()
+            } else {
+                report
+                    .matches
+                    .iter()
+                    .map(|m| {
+                        format!("{}:{}:{}:{:.6}", m.start, m.neighbor, m.label, m.distance)
+                    })
+                    .collect::<Vec<_>>()
+                    .join(",")
+            };
+            format!(
+                "stream matches={matches} windows={} pruned={} dtw={} us={}",
+                report.stats.windows,
+                report.stats.pruned(),
+                report.stats.dtw_calls,
+                report.busy.as_micros()
+            )
+        }
+        Err(e) => format!("ERR stream: {e:#}"),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -200,6 +284,17 @@ mod tests {
         conn.write_all(format!("k=3;{}\n", q.join(",")).as_bytes()).unwrap();
         conn.write_all(b"k=0;1,2\n").unwrap();
         conn.write_all(b"garbage\n").unwrap();
+        // Subsequence search: an exact copy of train[0] between far-away
+        // filler matches once at distance zero.
+        let t0: Vec<String> =
+            ds.train[0].values.iter().map(|v| v.to_string()).collect();
+        conn.write_all(
+            format!("stream=tau:0.000001,hop:1;1000,1000,{},1000,1000\n", t0.join(","))
+                .as_bytes(),
+        )
+        .unwrap();
+        conn.write_all(b"stream=;1,2,3\n").unwrap();
+        conn.write_all(b"stream=tau:-4;1,2,3\n").unwrap();
 
         let mut lines = BufReader::new(conn).lines();
         assert_eq!(lines.next().unwrap().unwrap(), "PONG");
@@ -213,6 +308,13 @@ mod tests {
         assert!(bad_k.starts_with("ERR"), "{bad_k}");
         let err = lines.next().unwrap().unwrap();
         assert!(err.starts_with("ERR"), "{err}");
+        let stream = lines.next().unwrap().unwrap();
+        assert!(stream.starts_with("stream matches=2:0:"), "{stream}");
+        assert!(stream.contains("windows=5"), "{stream}");
+        let no_mode = lines.next().unwrap().unwrap();
+        assert!(no_mode.starts_with("ERR stream needs"), "{no_mode}");
+        let bad_tau = lines.next().unwrap().unwrap();
+        assert!(bad_tau.starts_with("ERR tau"), "{bad_tau}");
 
         // Close our connection before shutdown: the server joins its
         // per-connection threads, which read until client EOF.

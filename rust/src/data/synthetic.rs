@@ -236,6 +236,62 @@ pub fn generate_archive(spec: &ArchiveSpec) -> Vec<Dataset> {
         .collect()
 }
 
+/// A smooth z-normalized random pattern (sum of a few sinusoids) — the
+/// reference-library shape used by the streaming-monitor scenario
+/// (`examples/streaming_monitor.rs`, `benches/stream_search.rs`).
+pub fn sinusoid_pattern(rng: &mut Rng, len: usize) -> Vec<f64> {
+    let k = rng.int_range(2, 5);
+    let params: Vec<(f64, f64, f64)> = (0..k)
+        .map(|_| (rng.uniform_range(0.3, 2.0), rng.uniform_range(0.02, 0.3), rng.uniform() * 6.28))
+        .collect();
+    let mut out: Vec<f64> = (0..len)
+        .map(|i| params.iter().map(|(a, f, p)| a * (f * i as f64 + p).sin()).sum())
+        .collect();
+    znormalize(&mut out);
+    out
+}
+
+/// A synthetic sensor stream for subsequence-search workloads:
+/// background Gaussian noise (runs of 20–100 samples, σ = 0.8) with
+/// occasional noisy copies of `patterns` embedded.
+///
+/// * `embed_prob` — per-decision probability of embedding an occurrence;
+/// * `amp_jitter` — the copy is scaled by `1 + amp_jitter·N(0,1)`;
+/// * `noise_sd` — per-sample additive noise on the embedded copy.
+///
+/// Returns the stream (exactly `len` samples) and the ground-truth
+/// `(position, pattern index)` of every embedded occurrence. All
+/// patterns must share one length. Deterministic in `rng`.
+pub fn embed_stream(
+    rng: &mut Rng,
+    patterns: &[Vec<f64>],
+    len: usize,
+    embed_prob: f64,
+    amp_jitter: f64,
+    noise_sd: f64,
+) -> (Vec<f64>, Vec<(usize, usize)>) {
+    assert!(!patterns.is_empty(), "embed_stream needs at least one pattern");
+    let m = patterns[0].len();
+    let mut stream = Vec::with_capacity(len + m);
+    let mut embedded = Vec::new();
+    while stream.len() < len {
+        if rng.uniform() < embed_prob && stream.len() + m < len {
+            let id = rng.below(patterns.len());
+            embedded.push((stream.len(), id));
+            let scale = 1.0 + amp_jitter * rng.normal();
+            for &v in &patterns[id] {
+                stream.push(scale * v + noise_sd * rng.normal());
+            }
+        } else {
+            for _ in 0..rng.int_range(20, 100) {
+                stream.push(rng.normal() * 0.8);
+            }
+        }
+    }
+    stream.truncate(len);
+    (stream, embedded)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -252,6 +308,23 @@ mod tests {
         }
         let c = generate_archive(&ArchiveSpec::new(Scale::Tiny, 8));
         assert_ne!(a[0].train[0].values, c[0].train[0].values);
+    }
+
+    #[test]
+    fn embed_stream_is_deterministic_and_truthful() {
+        let mut prng = Rng::seeded(42);
+        let patterns: Vec<Vec<f64>> =
+            (0..3).map(|_| sinusoid_pattern(&mut prng, 32)).collect();
+        assert!(patterns.iter().all(|p| p.len() == 32));
+        let mut r1 = Rng::seeded(7);
+        let (s1, e1) = embed_stream(&mut r1, &patterns, 2000, 0.3, 0.1, 0.1);
+        let mut r2 = Rng::seeded(7);
+        let (s2, e2) = embed_stream(&mut r2, &patterns, 2000, 0.3, 0.1, 0.1);
+        assert_eq!(s1, s2, "deterministic in the rng");
+        assert_eq!(e1, e2);
+        assert_eq!(s1.len(), 2000);
+        assert!(!e1.is_empty(), "0.3 embed probability over ~30 decisions");
+        assert!(e1.iter().all(|&(pos, id)| pos + 32 <= 2000 && id < 3));
     }
 
     #[test]

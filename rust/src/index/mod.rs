@@ -130,6 +130,12 @@ impl DtwIndex {
         self.config.max_batch
     }
 
+    /// True when the index z-normalizes its series and (by default)
+    /// every query/window.
+    pub fn znormalizes(&self) -> bool {
+        self.config.znorm
+    }
+
     /// A cheap handle with a different screening bound (shares the
     /// prepared data — nothing is recomputed).
     pub fn with_bound(&self, bound: BoundKind) -> DtwIndex {
@@ -188,6 +194,32 @@ impl DtwIndex {
     /// [`Searcher`].
     pub fn query<D: Delta>(&self, query: &Query) -> QueryOutcome {
         self.searcher().query::<D>(query)
+    }
+
+    /// Streaming subsequence search over this index: slide an
+    /// index-length window along a sample stream and report every window
+    /// (or the top-k windows) within DTW distance τ of some indexed
+    /// series, screened by a cascade of lower bounds — see
+    /// [`crate::stream`]. Errors when the index is empty or the options
+    /// are inconsistent.
+    pub fn subsequence(
+        &self,
+        opts: crate::stream::SubsequenceOptions,
+    ) -> anyhow::Result<crate::stream::SubsequenceSearcher> {
+        crate::stream::SubsequenceSearcher::new(self, opts)
+    }
+
+    /// One-shot convenience over [`DtwIndex::subsequence`]: run a whole
+    /// finite sample slice through a fresh searcher and return the
+    /// [`crate::stream::StreamReport`] (matches + per-stage prune stats).
+    pub fn subsequence_scan<D: Delta>(
+        &self,
+        samples: &[f64],
+        opts: crate::stream::SubsequenceOptions,
+    ) -> anyhow::Result<crate::stream::StreamReport> {
+        let mut searcher = self.subsequence(opts)?;
+        searcher.scan::<D>(samples);
+        Ok(searcher.finish())
     }
 }
 

@@ -63,6 +63,11 @@
 //!   (`*_NoLR`) and the cascading evaluator from §8.
 //! * **The index facade** ([`index`]): builder-configured exact k-NN
 //!   search over a prepared corpus — the primary API.
+//! * **Streaming subsequence search** ([`stream`]): slide an index-length
+//!   window over unbounded sample streams behind a cascaded-bound screen
+//!   (`LB_KIM_FL → LB_KEOGH → LB_WEBB` by default), in threshold and
+//!   top-k modes with per-stage prune statistics — the §1 monitoring
+//!   scenario, reachable via [`index::DtwIndex::subsequence`].
 //! * **Search kernels** ([`search`]): the paper's Algorithm 3
 //!   (random order with early abandoning) and Algorithm 4 (bound-sorted)
 //!   generalized to k-NN, tightness evaluation, LOOCV window selection
@@ -119,6 +124,7 @@ pub mod index;
 pub mod metrics;
 pub mod runtime;
 pub mod search;
+pub mod stream;
 
 /// Library version, mirrored from `Cargo.toml`.
 pub const VERSION: &str = env!("CARGO_PKG_VERSION");

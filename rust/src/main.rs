@@ -8,6 +8,10 @@
 //!   facade (`--k`, `--bound`, `--strategy`).
 //! * `sweep`       — §6.3 window sweep (Tables 1–3, Figures 29–30).
 //! * `ablation`    — §7 left/right-path ablation (Figures 31–34).
+//! * `stream`      — streaming subsequence search: slide index-length
+//!   windows over samples from a file/stdin (or a `--demo` synthetic
+//!   stream) and report windows within `--tau` of an indexed series
+//!   (and/or the `--k` best windows), with per-stage cascade stats.
 //! * `serve`       — start the NN search server (router + batched
 //!   prefilter; `--backend native|pjrt|none`, `--k` for a default k-NN
 //!   depth).
@@ -87,13 +91,19 @@ fn load_archive(args: &Args) -> Result<Vec<Dataset>> {
     }
 }
 
+/// Parse a list of CLI bound spellings (shared by `--bounds` and the
+/// stream command's `--cascade`).
+fn parse_bound_list(names: &[String]) -> Result<Vec<BoundKind>> {
+    names
+        .iter()
+        .map(|n| BoundKind::parse(n).with_context(|| format!("unknown bound {n:?}")))
+        .collect()
+}
+
 fn parse_bounds(args: &Args, default: &[BoundKind]) -> Result<Vec<BoundKind>> {
     match args.list("bounds") {
         None => Ok(default.to_vec()),
-        Some(names) => names
-            .iter()
-            .map(|n| BoundKind::parse(n).with_context(|| format!("unknown bound {n:?}")))
-            .collect(),
+        Some(names) => parse_bound_list(&names),
     }
 }
 
@@ -105,12 +115,13 @@ fn run(args: &Args) -> Result<()> {
         Some("knn") => cmd_knn(args),
         Some("sweep") => cmd_sweep(args),
         Some("ablation") => cmd_ablation(args),
+        Some("stream") => cmd_stream(args),
         Some("serve") => cmd_serve(args),
         Some("info") => cmd_info(),
         other => {
             bail!(
                 "unknown command {other:?}; expected one of \
-                 gen-archive|tightness|nn|knn|sweep|ablation|serve|info"
+                 gen-archive|tightness|nn|knn|sweep|ablation|stream|serve|info"
             )
         }
     }
@@ -300,6 +311,135 @@ fn cmd_knn(args: &Args) -> Result<()> {
         );
     }
     Ok(())
+}
+
+/// `stream`: streaming subsequence search over a dataset's training
+/// split. Samples come from `--input <file>`, stdin, or a `--demo <n>`
+/// synthetic stream with embedded (noisy) training series.
+fn cmd_stream(args: &Args) -> Result<()> {
+    use dtw_bounds::stream::SubsequenceOptions;
+
+    let archive = load_archive(args)?;
+    let idx = args.parse_or::<usize>("dataset", 0);
+    let ds = archive.get(idx).context("--dataset index out of range")?;
+    let index = DtwIndex::builder_from_dataset(ds)
+        .window(args.parse_or::<usize>("window", ds.window.max(1)))
+        .build()?;
+
+    let mut opts = SubsequenceOptions::default().with_hop(args.parse_or::<usize>("hop", 1));
+    if let Some(tau) = args.get("tau") {
+        let tau: f64 = tau.parse().context("--tau must be a number")?;
+        if !(tau > 0.0 && tau.is_finite()) {
+            bail!("--tau must be positive and finite");
+        }
+        opts.threshold = Some(tau);
+    }
+    if let Some(k) = args.get("k") {
+        let k: usize = k.parse().context("--k must be an integer")?;
+        if k == 0 {
+            bail!("--k must be >= 1");
+        }
+        opts.top_k = Some(k);
+    }
+    if opts.threshold.is_none() && opts.top_k.is_none() {
+        bail!("set --tau <dist> and/or --k <n> (otherwise every window matches)");
+    }
+    if args.flag("znorm") {
+        opts.znorm = Some(true);
+    }
+    if let Some(names) = args.list("cascade") {
+        opts.cascade = Some(parse_bound_list(&names)?);
+    }
+
+    // Sample source: --demo, --input, or stdin.
+    let samples: Vec<f64> = if let Some(n) = args.get("demo") {
+        let n: usize = n.parse().context("--demo must be a sample count")?;
+        demo_stream(&index, n, args.parse_or::<u64>("demo-seed", 404))
+    } else if let Some(path) = args.get("input") {
+        let text = std::fs::read_to_string(path).with_context(|| format!("read {path}"))?;
+        parse_samples(&text)?
+    } else {
+        let mut text = String::new();
+        use std::io::Read;
+        std::io::stdin().read_to_string(&mut text).context("read stdin")?;
+        parse_samples(&text)?
+    };
+
+    // In top-k mode per-push emissions are provisional (later windows can
+    // evict them), so only the final set from the report is printed.
+    let top_k_mode = opts.top_k.is_some();
+    let mut searcher = index.subsequence(opts)?;
+    let cascade: Vec<String> =
+        searcher.stats().stages.iter().map(|s| s.bound.name()).collect();
+    println!(
+        "dataset {} (l={}, n={}, w={}), cascade={}, hop={}",
+        ds.name,
+        ds.series_len(),
+        index.len(),
+        index.window(),
+        cascade.join(" -> "),
+        searcher.hop()
+    );
+    for &v in &samples {
+        if let Some(m) = searcher.push::<Squared>(v) {
+            if !top_k_mode {
+                println!(
+                    "match start={} neighbor={} label={} dist={:.6}",
+                    m.start, m.neighbor, m.label, m.distance
+                );
+            }
+        }
+    }
+    let report = searcher.finish();
+    if top_k_mode {
+        for m in &report.matches {
+            println!(
+                "top start={} neighbor={} label={} dist={:.6}",
+                m.start, m.neighbor, m.label, m.distance
+            );
+        }
+    }
+    let s = &report.stats;
+    println!("samples={} windows={} matches={}", s.samples, s.windows, s.matches);
+    for st in &s.stages {
+        let rate = 100.0 * st.pruned as f64 / s.candidates.max(1) as f64;
+        println!(
+            "stage {}: calls={} pruned={} ({rate:.1}% of pairs)",
+            st.bound.name(),
+            st.lb_calls,
+            st.pruned
+        );
+    }
+    println!("dtw: calls={} abandoned={}", s.dtw_calls, s.dtw_abandoned);
+    let secs = report.busy.as_secs_f64();
+    if secs > 0.0 && s.samples > 0 {
+        println!("throughput: {:.0} samples/s (busy {:.3}s)", s.samples as f64 / secs, secs);
+    }
+    Ok(())
+}
+
+/// Parse whitespace/comma-separated floats.
+fn parse_samples(text: &str) -> Result<Vec<f64>> {
+    let samples: Vec<f64> = text
+        .split(|c: char| c.is_whitespace() || c == ',')
+        .filter(|t| !t.is_empty())
+        .map(|t| t.parse::<f64>().with_context(|| format!("bad sample {t:?}")))
+        .collect::<Result<_>>()?;
+    if samples.is_empty() {
+        bail!("no samples in input");
+    }
+    Ok(samples)
+}
+
+/// A synthetic sensor stream: background noise with occasional noisy
+/// copies of the indexed series embedded (the streaming-monitor demo).
+fn demo_stream(index: &DtwIndex, n: usize, seed: u64) -> Vec<f64> {
+    use dtw_bounds::data::rng::Rng;
+    use dtw_bounds::data::synthetic::embed_stream;
+    let mut rng = Rng::seeded(seed);
+    let patterns: Vec<Vec<f64>> =
+        index.train().series.iter().map(|s| s.values.clone()).collect();
+    embed_stream(&mut rng, &patterns, n, 0.05, 0.0, 0.05).0
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {

@@ -20,6 +20,30 @@
 //!
 //! Artifact manifests ([`read_manifest`]) are parsed feature-independently
 //! so `dtw-bounds info` can report on-disk artifacts in any build.
+//!
+//! ## Example
+//!
+//! One backend execution screens a whole batch: the bound matrix plus
+//! each query's candidates in ascending-bound order (Algorithm 4's
+//! visiting order):
+//!
+//! ```
+//! use dtw_bounds::bounds::PreparedSeries;
+//! use dtw_bounds::runtime::{LbBackend, NativeBatchLb};
+//!
+//! let w = 1;
+//! let train = vec![
+//!     PreparedSeries::prepare(vec![0.0, 0.0, 0.0, 0.0], w),
+//!     PreparedSeries::prepare(vec![5.0, 5.0, 5.0, 5.0], w),
+//! ];
+//! let q = [0.1, 0.1, 0.1, 0.1];
+//! let mut backend = NativeBatchLb::new();
+//! assert!(backend.supports(1, train.len(), q.len()));
+//! let ranking = backend.rank(&[&q[..]], &train, &[f64::INFINITY])?;
+//! assert_eq!(ranking.order[0][0], 0, "the near candidate screens first");
+//! assert!(ranking.bounds[0][0] < ranking.bounds[0][1]);
+//! # Ok::<(), anyhow::Error>(())
+//! ```
 
 pub mod backend;
 pub mod native;

@@ -18,6 +18,39 @@
 //! * [`loocv`] — leave-one-out window selection (how the archive derives
 //!   its recommended windows), built on the facade's self-match
 //!   exclusion.
+//!
+//! ## Example
+//!
+//! The kernels are usable directly when you manage preparation yourself
+//! (most callers should go through [`crate::index::DtwIndex`] instead):
+//!
+//! ```
+//! use dtw_bounds::bounds::{BoundKind, PreparedSeries, Scratch};
+//! use dtw_bounds::delta::Squared;
+//! use dtw_bounds::search::knn::{knn_brute_force, knn_sorted, KnnParams};
+//! use dtw_bounds::search::{PreparedTrainSet, SearchStrategy};
+//!
+//! let w = 1;
+//! let train = PreparedTrainSet {
+//!     labels: vec![0, 1],
+//!     series: vec![
+//!         PreparedSeries::prepare(vec![0.0, 0.1, 0.2, 0.1], w),
+//!         PreparedSeries::prepare(vec![9.0, 9.1, 9.2, 9.1], w),
+//!     ],
+//!     w,
+//! };
+//! let q = BoundKind::Webb.prepare_query(vec![0.05, 0.15, 0.25, 0.15], w);
+//! let mut scratch = Scratch::new(q.len());
+//! let (mut bound_buf, mut index_buf) = (Vec::new(), Vec::new());
+//! let (hits, _stats) = knn_sorted::<Squared>(
+//!     &q, &train, BoundKind::Webb, &KnnParams::k(1), &mut scratch,
+//!     &mut bound_buf, &mut index_buf,
+//! );
+//! let (truth, _) = knn_brute_force::<Squared>(&q.values, &train, &KnnParams::k(1));
+//! assert_eq!(hits[0].distance, truth[0].distance, "sorted search is exact");
+//! assert_eq!(hits[0].label, 0);
+//! assert_eq!(SearchStrategy::parse("sorted"), Some(SearchStrategy::Sorted));
+//! ```
 
 pub mod classify;
 pub mod knn;

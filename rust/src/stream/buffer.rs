@@ -1,0 +1,197 @@
+//! [`StreamBuffer`] — a fixed-capacity ring over the most recent samples
+//! of an unbounded stream, with O(1) rolling first/second moments.
+//!
+//! The buffer is the memory of [`super::SubsequenceSearcher`]: it holds
+//! exactly one window's worth of samples (the subsequence length) and can
+//! materialize the current window in chronological order without ever
+//! reallocating. The rolling mean/std accessors are incremental
+//! (subtract-evicted / add-arrived) and therefore O(1) per sample; they
+//! exist for monitoring and cheap prefilters. **Search-path
+//! z-normalization deliberately recomputes the moments from the
+//! materialized window instead** (`data::znorm::znormalize`), because the
+//! incremental sums drift by a few ulps over long streams and the
+//! searcher's contract is bit-equality with a batch oracle over the same
+//! window.
+
+/// Fixed-capacity ring buffer over the latest `capacity` stream samples,
+/// with O(1) rolling mean/variance of the buffered window.
+#[derive(Debug, Clone)]
+pub struct StreamBuffer {
+    cap: usize,
+    /// Ring storage; chronological order is `buf[head..] ++ buf[..head]`
+    /// once full, plain `buf[..]` before that.
+    buf: Vec<f64>,
+    /// Next slot to overwrite once the ring is full.
+    head: usize,
+    /// Total samples ever pushed.
+    pushed: u64,
+    /// Rolling sum over the buffered samples (incremental; see module docs).
+    sum: f64,
+    /// Rolling sum of squares over the buffered samples.
+    sumsq: f64,
+}
+
+impl StreamBuffer {
+    /// A buffer holding the latest `capacity` samples (`capacity ≥ 1`).
+    pub fn new(capacity: usize) -> StreamBuffer {
+        assert!(capacity > 0, "StreamBuffer capacity must be >= 1");
+        StreamBuffer {
+            cap: capacity,
+            buf: Vec::with_capacity(capacity),
+            head: 0,
+            pushed: 0,
+            sum: 0.0,
+            sumsq: 0.0,
+        }
+    }
+
+    /// The window length this buffer holds.
+    #[inline]
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Samples currently buffered (`min(pushed, capacity)`).
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// True before the first sample arrives.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// True once a full window is buffered.
+    #[inline]
+    pub fn is_full(&self) -> bool {
+        self.buf.len() == self.cap
+    }
+
+    /// Total samples ever pushed.
+    #[inline]
+    pub fn pushed(&self) -> u64 {
+        self.pushed
+    }
+
+    /// Append the next stream sample, evicting the oldest once full.
+    pub fn push(&mut self, v: f64) {
+        if self.buf.len() < self.cap {
+            self.buf.push(v);
+        } else {
+            let evicted = self.buf[self.head];
+            self.sum -= evicted;
+            self.sumsq -= evicted * evicted;
+            self.buf[self.head] = v;
+            self.head += 1;
+            if self.head == self.cap {
+                self.head = 0;
+            }
+        }
+        self.sum += v;
+        self.sumsq += v * v;
+        self.pushed += 1;
+    }
+
+    /// Rolling mean of the buffered samples (O(1); drifts by ulps over
+    /// very long streams — see module docs).
+    pub fn mean(&self) -> f64 {
+        if self.buf.is_empty() {
+            return 0.0;
+        }
+        self.sum / self.buf.len() as f64
+    }
+
+    /// Rolling population variance of the buffered samples (O(1),
+    /// clamped at zero against rounding).
+    pub fn variance(&self) -> f64 {
+        if self.buf.is_empty() {
+            return 0.0;
+        }
+        let n = self.buf.len() as f64;
+        let m = self.sum / n;
+        (self.sumsq / n - m * m).max(0.0)
+    }
+
+    /// Rolling standard deviation of the buffered samples.
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    /// Materialize the buffered samples in chronological (arrival) order
+    /// into `out` (cleared first; no allocation once `out` has capacity).
+    pub fn copy_into(&self, out: &mut Vec<f64>) {
+        out.clear();
+        out.extend_from_slice(&self.buf[self.head..]);
+        out.extend_from_slice(&self.buf[..self.head]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+
+    #[test]
+    fn fills_then_slides() {
+        let mut b = StreamBuffer::new(3);
+        assert!(b.is_empty());
+        for v in [1.0, 2.0, 3.0] {
+            b.push(v);
+        }
+        assert!(b.is_full());
+        let mut w = Vec::new();
+        b.copy_into(&mut w);
+        assert_eq!(w, vec![1.0, 2.0, 3.0]);
+        b.push(4.0);
+        b.copy_into(&mut w);
+        assert_eq!(w, vec![2.0, 3.0, 4.0]);
+        b.push(5.0);
+        b.push(6.0);
+        b.push(7.0);
+        b.copy_into(&mut w);
+        assert_eq!(w, vec![5.0, 6.0, 7.0]);
+        assert_eq!(b.pushed(), 7);
+    }
+
+    #[test]
+    fn partial_window_order() {
+        let mut b = StreamBuffer::new(4);
+        b.push(9.0);
+        b.push(8.0);
+        let mut w = Vec::new();
+        b.copy_into(&mut w);
+        assert_eq!(w, vec![9.0, 8.0]);
+        assert_eq!(b.len(), 2);
+        assert!(!b.is_full());
+    }
+
+    #[test]
+    fn rolling_moments_track_recomputed() {
+        let mut rng = Rng::seeded(321);
+        let mut b = StreamBuffer::new(32);
+        let mut w = Vec::new();
+        for i in 0..5_000 {
+            b.push(rng.normal() * 3.0 + 1.0);
+            if i % 97 == 0 {
+                b.copy_into(&mut w);
+                let n = w.len() as f64;
+                let mean = w.iter().sum::<f64>() / n;
+                let var = w.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / n;
+                assert!((b.mean() - mean).abs() < 1e-9, "mean drift at {i}");
+                assert!((b.variance() - var).abs() < 1e-9, "variance drift at {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn constant_window_has_zero_variance() {
+        let mut b = StreamBuffer::new(8);
+        for _ in 0..20 {
+            b.push(2.5);
+        }
+        assert_eq!(b.mean(), 2.5);
+        assert!(b.variance() < 1e-12);
+    }
+}

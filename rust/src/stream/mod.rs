@@ -1,0 +1,73 @@
+//! Streaming subsequence search — sliding exact-DTW matching of an
+//! indexed pattern library over an unbounded sample stream.
+//!
+//! This is the paper's motivating deployment (§1: gesture and sensor
+//! matching) turned into a subsystem: the lower bounds exist so that
+//! *most windows never touch DTW*. A [`SubsequenceSearcher`] slides a
+//! fixed-length window (the indexed series length) over incoming
+//! samples; each window on the hop grid is screened against every
+//! indexed series by a **cascade** of bounds (default
+//! `LB_KIM_FL → LB_KEOGH → LB_WEBB`, cheapest first — the §8 cascade
+//! idea applied across the whole bound family), and only survivors run
+//! early-abandoning DTW. Matching is exact in both modes:
+//!
+//! * **threshold** — report every window whose nearest indexed series is
+//!   within DTW distance τ (the monitoring regime);
+//! * **top-k** — keep the `k` best-matching windows of the whole stream
+//!   (the ad-hoc "find the closest occurrences" regime).
+//!
+//! The pieces:
+//!
+//! * [`StreamBuffer`] — a ring over the latest window with O(1) rolling
+//!   moments;
+//! * [`SubsequenceSearcher`] — the sliding cascade searcher, built from
+//!   any [`crate::index::DtwIndex`] via
+//!   [`crate::index::DtwIndex::subsequence`]; per-window envelope
+//!   preparation is lazy — it runs only when a cascade stage actually
+//!   needs query-side envelopes (the incremental
+//!   [`crate::bounds::envelope::StreamingEnvelope`] serves true
+//!   sample-at-a-time consumers and is property-tested bit-equal to the
+//!   batch routine the searcher uses);
+//! * [`StreamStats`] / [`StageStats`] — per-stage prune counters,
+//!   convertible to the crate-wide
+//!   [`crate::search::nn::SearchStats`] currency;
+//! * [`StreamReport`] — matches + statistics + busy time.
+//!
+//! ```
+//! use dtw_bounds::delta::Squared;
+//! use dtw_bounds::index::DtwIndex;
+//! use dtw_bounds::stream::SubsequenceOptions;
+//!
+//! // Index one known pattern...
+//! let pattern = vec![0.0, 1.0, 2.0, 3.0, 2.0, 1.0, 0.0, -1.0];
+//! let index = DtwIndex::builder(vec![pattern.clone()]).window(1).build()?;
+//!
+//! // ...and stream noise with the pattern embedded at position 10.
+//! let mut stream = vec![9.0; 10];
+//! stream.extend_from_slice(&pattern);
+//! stream.extend(std::iter::repeat(9.0).take(10));
+//!
+//! let mut searcher = index.subsequence(SubsequenceOptions::threshold(0.5))?;
+//! let matches = searcher.scan::<Squared>(&stream);
+//! assert_eq!(matches.len(), 1);
+//! assert_eq!((matches[0].start, matches[0].distance), (10, 0.0));
+//!
+//! let report = searcher.finish();
+//! assert_eq!(report.stats.windows, 21); // 28 samples, window 8, hop 1
+//! assert!(report.stats.pruned() > 0, "the cascade did real screening");
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+//!
+//! The serving layer exposes the same search per request through the
+//! line protocol's `stream=` extension (see `docs/protocol.md`), the CLI
+//! through `dtw-bounds stream`, and `examples/streaming_monitor.rs`
+//! drives the full monitoring scenario.
+
+mod buffer;
+mod search;
+
+pub use buffer::StreamBuffer;
+pub use search::{
+    StageStats, StreamMatch, StreamReport, StreamStats, SubsequenceOptions,
+    SubsequenceSearcher, DEFAULT_CASCADE,
+};

@@ -1,0 +1,468 @@
+//! [`SubsequenceSearcher`] — cascaded-bound subsequence search over a
+//! sample stream, plus its option/result/statistics types.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::bounds::envelope::envelopes_into;
+use crate::bounds::{BoundKind, PreparedSeries, Scratch};
+use crate::data::znorm::znormalize;
+use crate::delta::Delta;
+use crate::dtw::dtw_ea;
+use crate::index::DtwIndex;
+use crate::search::nn::SearchStats;
+
+use super::StreamBuffer;
+
+/// The default screening cascade: constant-time `LB_KIM_FL`, then
+/// `LB_KEOGH` (candidate envelopes only — no per-window preparation),
+/// then `LB_WEBB` (triggers the lazy per-window envelope preparation).
+pub const DEFAULT_CASCADE: &[BoundKind] = &[BoundKind::KimFL, BoundKind::Keogh, BoundKind::Webb];
+
+/// Knobs for a subsequence search. At least one of the `threshold` /
+/// `top_k` fields must be set (otherwise every window would trivially
+/// "match").
+#[derive(Debug, Clone, PartialEq)]
+pub struct SubsequenceOptions {
+    /// Match threshold τ: a window matches when its nearest indexed
+    /// series is at DTW distance `< τ`. `None` disables the threshold
+    /// (top-k mode only).
+    pub threshold: Option<f64>,
+    /// Keep only the `k` globally best windows (smallest nearest-neighbor
+    /// distance); results come from [`SubsequenceSearcher::finish`].
+    pub top_k: Option<usize>,
+    /// Stride between evaluated window starts (`≥ 1`; 1 = every sample).
+    pub hop: usize,
+    /// Z-normalize each window before matching; `None` inherits the
+    /// index-level policy set at build time.
+    pub znorm: Option<bool>,
+    /// The screening cascade, cheapest first; `None` uses
+    /// [`DEFAULT_CASCADE`]. Stage values accumulate by `max`, so any
+    /// sequence of valid bounds is sound.
+    pub cascade: Option<Vec<BoundKind>>,
+}
+
+impl Default for SubsequenceOptions {
+    fn default() -> Self {
+        SubsequenceOptions { threshold: None, top_k: None, hop: 1, znorm: None, cascade: None }
+    }
+}
+
+impl SubsequenceOptions {
+    /// Threshold mode: report every window within DTW distance `tau`.
+    pub fn threshold(tau: f64) -> SubsequenceOptions {
+        SubsequenceOptions { threshold: Some(tau), ..SubsequenceOptions::default() }
+    }
+
+    /// Top-k mode: keep the `k` best-matching windows of the stream.
+    pub fn top_k(k: usize) -> SubsequenceOptions {
+        SubsequenceOptions { top_k: Some(k), ..SubsequenceOptions::default() }
+    }
+
+    /// Set (or tighten) the match threshold τ.
+    pub fn with_threshold(mut self, tau: f64) -> SubsequenceOptions {
+        self.threshold = Some(tau);
+        self
+    }
+
+    /// Keep only the `k` globally best windows.
+    pub fn with_top_k(mut self, k: usize) -> SubsequenceOptions {
+        self.top_k = Some(k);
+        self
+    }
+
+    /// Evaluate windows every `hop` samples.
+    pub fn with_hop(mut self, hop: usize) -> SubsequenceOptions {
+        self.hop = hop;
+        self
+    }
+
+    /// Override the index-level z-normalization policy.
+    pub fn with_znorm(mut self, znorm: bool) -> SubsequenceOptions {
+        self.znorm = Some(znorm);
+        self
+    }
+
+    /// Replace the screening cascade (cheapest stage first).
+    pub fn with_cascade(mut self, cascade: Vec<BoundKind>) -> SubsequenceOptions {
+        self.cascade = Some(cascade);
+        self
+    }
+}
+
+/// One matched window: where it starts in the stream, which indexed
+/// series it matched, and the exact DTW distance.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StreamMatch {
+    /// Stream position of the window's first sample.
+    pub start: u64,
+    /// Index of the nearest indexed series.
+    pub neighbor: usize,
+    /// Its label.
+    pub label: u32,
+    /// The exact DTW distance between the (optionally z-normalized)
+    /// window and that series.
+    pub distance: f64,
+}
+
+/// Per-stage counters of the screening cascade.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StageStats {
+    /// Which bound this stage runs.
+    pub bound: BoundKind,
+    /// Evaluations of this stage.
+    pub lb_calls: u64,
+    /// Candidates this stage rejected (they never reached later stages).
+    pub pruned: u64,
+}
+
+/// Work counters for a whole stream: per-stage cascade pruning plus the
+/// DTW tail — the streaming analogue of [`SearchStats`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamStats {
+    /// Samples pushed.
+    pub samples: u64,
+    /// Windows evaluated (after the hop filter).
+    pub windows: u64,
+    /// Window × candidate pairs considered.
+    pub candidates: u64,
+    /// Per-stage counters, in cascade order.
+    pub stages: Vec<StageStats>,
+    /// Full DTW computations started.
+    pub dtw_calls: u64,
+    /// DTW computations abandoned early.
+    pub dtw_abandoned: u64,
+    /// Windows that produced a match.
+    pub matches: u64,
+}
+
+impl StreamStats {
+    fn new(cascade: &[BoundKind]) -> StreamStats {
+        StreamStats {
+            samples: 0,
+            windows: 0,
+            candidates: 0,
+            stages: cascade
+                .iter()
+                .map(|&bound| StageStats { bound, lb_calls: 0, pruned: 0 })
+                .collect(),
+            dtw_calls: 0,
+            dtw_abandoned: 0,
+            matches: 0,
+        }
+    }
+
+    /// Candidates rejected by the cascade alone (any stage).
+    pub fn pruned(&self) -> u64 {
+        self.stages.iter().map(|s| s.pruned).sum()
+    }
+
+    /// Fraction of window × candidate pairs the cascade rejected.
+    pub fn prune_rate(&self) -> f64 {
+        self.pruned() as f64 / (self.candidates.max(1)) as f64
+    }
+
+    /// Collapse into the [`SearchStats`] currency the rest of the crate
+    /// (and [`crate::index::QueryOutcome`]) reports.
+    pub fn to_search_stats(&self) -> SearchStats {
+        SearchStats {
+            lb_calls: self.stages.iter().map(|s| s.lb_calls).sum::<u64>() as usize,
+            pruned: self.pruned() as usize,
+            dtw_calls: self.dtw_calls as usize,
+            dtw_abandoned: self.dtw_abandoned as usize,
+        }
+    }
+}
+
+/// Everything a finished stream pass returns: the matches (stream order
+/// in threshold mode, ascending distance in top-k mode), the per-stage
+/// work counters, and the accumulated search-side busy time.
+#[derive(Debug, Clone)]
+pub struct StreamReport {
+    /// The matched windows.
+    pub matches: Vec<StreamMatch>,
+    /// Per-stage cascade counters.
+    pub stats: StreamStats,
+    /// Time spent evaluating windows (excludes idle time between samples).
+    pub busy: Duration,
+}
+
+impl StreamReport {
+    /// The aggregate [`SearchStats`] view of [`StreamReport::stats`].
+    pub fn search_stats(&self) -> SearchStats {
+        self.stats.to_search_stats()
+    }
+}
+
+/// Streaming subsequence search: slide an index-length window over an
+/// unbounded sample stream and report every window (or the top-k
+/// windows) whose exact DTW distance to some indexed series beats the
+/// threshold.
+///
+/// Built by [`DtwIndex::subsequence`]. Feed samples with
+/// [`SubsequenceSearcher::push`] (or [`SubsequenceSearcher::scan`] for a
+/// whole slice); collect results and statistics with
+/// [`SubsequenceSearcher::finish`].
+///
+/// Every window evaluation is **exact**: the cascade stages are valid
+/// lower bounds evaluated cheapest-first with early abandoning against
+/// the current cutoff (threshold, intra-window best, and in top-k mode
+/// the k-th best window so far), and survivors run early-abandoning DTW.
+/// Use one [`Delta`] per stream — the cutoff state is only meaningful
+/// under a single δ.
+pub struct SubsequenceSearcher {
+    index: DtwIndex,
+    /// Effective threshold (`f64::INFINITY` when unset).
+    tau: f64,
+    top_k: Option<usize>,
+    hop: u64,
+    znorm: bool,
+    cascade: Vec<BoundKind>,
+    /// Window length = indexed series length.
+    m: usize,
+    /// Warping window (from the index).
+    w: usize,
+    buffer: StreamBuffer,
+    /// Reusable per-window preparation (values + envelopes, lazily filled).
+    pq: PreparedSeries,
+    envs_ready: bool,
+    /// Scratch for the discarded halves of the envelope-of-envelope pass.
+    tmp: Vec<f64>,
+    scratch: Scratch,
+    matches: Vec<StreamMatch>,
+    stats: StreamStats,
+    busy: Duration,
+}
+
+impl SubsequenceSearcher {
+    /// Build a searcher over `index` — see [`DtwIndex::subsequence`].
+    pub fn new(index: &DtwIndex, opts: SubsequenceOptions) -> Result<SubsequenceSearcher> {
+        if index.is_empty() {
+            bail!("subsequence search needs a non-empty index");
+        }
+        if opts.threshold.is_none() && opts.top_k.is_none() {
+            bail!("set a threshold and/or top_k (otherwise every window matches)");
+        }
+        if opts.top_k == Some(0) {
+            bail!("top_k must be >= 1");
+        }
+        if opts.hop == 0 {
+            bail!("hop must be >= 1");
+        }
+        let cascade = match opts.cascade {
+            Some(c) if c.is_empty() => bail!("cascade must have at least one stage"),
+            Some(c) => c,
+            None => DEFAULT_CASCADE.to_vec(),
+        };
+        let m = index.train().series[0].len();
+        let w = index.window();
+        let stats = StreamStats::new(&cascade);
+        Ok(SubsequenceSearcher {
+            tau: opts.threshold.unwrap_or(f64::INFINITY),
+            top_k: opts.top_k,
+            hop: opts.hop as u64,
+            znorm: opts.znorm.unwrap_or(index.znormalizes()),
+            cascade,
+            m,
+            w,
+            buffer: StreamBuffer::new(m),
+            pq: PreparedSeries {
+                values: Vec::with_capacity(m),
+                w,
+                lo: Vec::with_capacity(m),
+                up: Vec::with_capacity(m),
+                lo_of_up: Vec::with_capacity(m),
+                up_of_lo: Vec::with_capacity(m),
+            },
+            envs_ready: false,
+            tmp: Vec::with_capacity(m),
+            scratch: Scratch::new(m),
+            matches: Vec::new(),
+            stats,
+            index: index.clone(),
+            busy: Duration::ZERO,
+        })
+    }
+
+    /// The index being matched against.
+    pub fn index(&self) -> &DtwIndex {
+        &self.index
+    }
+
+    /// The sliding-window (= indexed series) length.
+    pub fn window_len(&self) -> usize {
+        self.m
+    }
+
+    /// Stride between evaluated window starts.
+    pub fn hop(&self) -> usize {
+        self.hop as usize
+    }
+
+    /// Work counters so far.
+    pub fn stats(&self) -> &StreamStats {
+        &self.stats
+    }
+
+    /// Matches recorded so far (threshold mode: stream order; top-k mode:
+    /// the current top set, ascending by distance).
+    pub fn matches(&self) -> &[StreamMatch] {
+        &self.matches
+    }
+
+    /// Take the retained matches, leaving the searcher running with an
+    /// empty set. Long-running threshold-mode monitors should call this
+    /// periodically (or just consume [`SubsequenceSearcher::push`]'s
+    /// return value and drain to discard): retained matches are the one
+    /// part of the searcher whose memory grows with the stream. In top-k
+    /// mode this resets the collected set (and therefore the k-th best
+    /// cutoff) — usually only wanted between logical stream segments.
+    pub fn drain_matches(&mut self) -> Vec<StreamMatch> {
+        std::mem::take(&mut self.matches)
+    }
+
+    /// Feed the next sample. When this sample completes a window on the
+    /// hop grid, the window is evaluated and its match (if any) returned.
+    /// In top-k mode a returned match may later be evicted by better
+    /// windows — [`SubsequenceSearcher::finish`] has the final set.
+    ///
+    /// Matches are also retained internally for
+    /// [`SubsequenceSearcher::finish`]; on a genuinely unbounded
+    /// threshold-mode stream, call
+    /// [`SubsequenceSearcher::drain_matches`] periodically so that
+    /// retention does not grow without bound.
+    pub fn push<D: Delta>(&mut self, v: f64) -> Option<StreamMatch> {
+        self.buffer.push(v);
+        self.stats.samples += 1;
+        let pushed = self.buffer.pushed();
+        if pushed < self.m as u64 {
+            return None;
+        }
+        let start = pushed - self.m as u64;
+        if start % self.hop != 0 {
+            return None;
+        }
+        self.eval_window::<D>(start)
+    }
+
+    /// Feed a whole slice, returning the matches produced along the way
+    /// (threshold-mode emissions; empty in pure top-k mode until
+    /// [`SubsequenceSearcher::finish`]).
+    pub fn scan<D: Delta>(&mut self, samples: &[f64]) -> Vec<StreamMatch> {
+        let mut out = Vec::new();
+        for &v in samples {
+            if let Some(m) = self.push::<D>(v) {
+                out.push(m);
+            }
+        }
+        out
+    }
+
+    /// Consume the searcher: final matches plus statistics.
+    pub fn finish(self) -> StreamReport {
+        StreamReport { matches: self.matches, stats: self.stats, busy: self.busy }
+    }
+
+    /// Current pruning cutoff: the threshold, sharpened in top-k mode by
+    /// the k-th best window distance once k windows matched.
+    fn cutoff(&self) -> f64 {
+        match self.top_k {
+            Some(k) if self.matches.len() >= k => {
+                self.tau.min(self.matches[k - 1].distance)
+            }
+            _ => self.tau,
+        }
+    }
+
+    /// Record a matched window under the active mode.
+    fn admit(&mut self, m: StreamMatch) {
+        match self.top_k {
+            None => self.matches.push(m),
+            Some(k) => {
+                let pos = self.matches.partition_point(|x| x.distance <= m.distance);
+                self.matches.insert(pos, m);
+                self.matches.truncate(k);
+            }
+        }
+    }
+
+    /// Lazily compute the current window's envelopes (and envelopes of
+    /// envelopes) — only when a cascade stage actually needs them.
+    fn ensure_envelopes(&mut self) {
+        if self.envs_ready {
+            return;
+        }
+        // The window is a complete slice, so the batch routine (flat
+        // index rings, no per-call allocation) is the right tool; the
+        // incremental `StreamingEnvelope` exists for sample-at-a-time
+        // consumers and is property-tested bit-equal to this.
+        envelopes_into(&self.pq.values, self.w, &mut self.pq.lo, &mut self.pq.up);
+        // Envelope-of-envelopes the same way; `tmp` takes the discarded
+        // half of each pair.
+        envelopes_into(&self.pq.up, self.w, &mut self.pq.lo_of_up, &mut self.tmp);
+        envelopes_into(&self.pq.lo, self.w, &mut self.tmp, &mut self.pq.up_of_lo);
+        self.envs_ready = true;
+    }
+
+    /// Evaluate the window starting at `start`: exact 1-NN over the index
+    /// under the current cutoff, via the cascade.
+    fn eval_window<D: Delta>(&mut self, start: u64) -> Option<StreamMatch> {
+        let t0 = Instant::now();
+        self.stats.windows += 1;
+        self.buffer.copy_into(&mut self.pq.values);
+        if self.znorm {
+            znormalize(&mut self.pq.values);
+        }
+        self.envs_ready = false;
+
+        let train = Arc::clone(&self.index.train);
+        self.stats.candidates += train.len() as u64;
+        let mut best: Option<(usize, f64)> = None;
+        'cands: for (ti, t) in train.series.iter().enumerate() {
+            let mut cutoff = self.cutoff();
+            if let Some((_, d)) = best {
+                cutoff = cutoff.min(d);
+            }
+            let mut lb = 0.0f64;
+            for si in 0..self.cascade.len() {
+                let stage = self.cascade[si];
+                if stage.requires_query_envelopes() {
+                    self.ensure_envelopes();
+                }
+                self.stats.stages[si].lb_calls += 1;
+                let v = stage.compute::<D>(&self.pq, t, self.w, cutoff, &mut self.scratch);
+                // Stages accumulate by max: each is a valid lower bound,
+                // so their max is too (and never loosens earlier work).
+                lb = lb.max(v);
+                if lb >= cutoff {
+                    self.stats.stages[si].pruned += 1;
+                    continue 'cands;
+                }
+            }
+            self.stats.dtw_calls += 1;
+            let d = dtw_ea::<D>(&self.pq.values, &t.values, self.w, cutoff);
+            if d.is_infinite() {
+                self.stats.dtw_abandoned += 1;
+                continue;
+            }
+            if d < cutoff {
+                best = Some((ti, d));
+            }
+        }
+
+        let hit = best.map(|(ti, d)| StreamMatch {
+            start,
+            neighbor: ti,
+            label: train.labels[ti],
+            distance: d,
+        });
+        if let Some(m) = hit {
+            self.stats.matches += 1;
+            self.admit(m);
+        }
+        self.busy += t0.elapsed();
+        hit
+    }
+}

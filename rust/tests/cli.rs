@@ -106,6 +106,59 @@ fn serve_rejects_zero_k() {
 }
 
 #[test]
+fn stream_demo_reports_stages() {
+    let out = bin()
+        .args([
+            "stream", "--scale", "tiny", "--demo", "3000", "--demo-seed", "7", "--tau",
+            "60", "--hop", "4",
+        ])
+        .output()
+        .expect("spawn");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("samples=3000"), "{text}");
+    assert!(text.contains("windows="), "{text}");
+    assert!(text.contains("stage LB_KimFL"), "{text}");
+    assert!(text.contains("stage LB_Webb"), "{text}");
+    assert!(text.contains("dtw: calls="), "{text}");
+}
+
+#[test]
+fn stream_reads_samples_from_file() {
+    // 1-NN of a constant stream: zero windows match a tiny tau, but the
+    // pass itself must succeed and count windows.
+    let tmp = std::env::temp_dir().join(format!("dtwb_stream_{}.txt", std::process::id()));
+    let samples: Vec<String> = (0..400).map(|i| format!("{}", (i % 7) as f64)).collect();
+    std::fs::write(&tmp, samples.join("\n")).unwrap();
+    let out = bin()
+        .args(["stream", "--scale", "tiny", "--tau", "0.000001", "--input"])
+        .arg(&tmp)
+        .output()
+        .expect("spawn");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("samples=400"), "{text}");
+    std::fs::remove_file(&tmp).ok();
+}
+
+#[test]
+fn stream_requires_a_mode_and_valid_cascade() {
+    let out = bin().args(["stream", "--scale", "tiny", "--demo", "500"]).output().expect("spawn");
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--tau"));
+
+    let out = bin()
+        .args([
+            "stream", "--scale", "tiny", "--demo", "500", "--tau", "5", "--cascade",
+            "kim,bogus",
+        ])
+        .output()
+        .expect("spawn");
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown bound"));
+}
+
+#[test]
 fn sweep_single_fraction_smoke() {
     let out = bin()
         .args([

@@ -1,0 +1,317 @@
+//! Property tests for the streaming subsequence-search subsystem:
+//! [`dtw_bounds::stream::SubsequenceSearcher`] must agree **exactly**
+//! (bit-equal distances) with a brute-force sliding-window DTW oracle,
+//! for every cascade, in threshold and top-k modes, with and without
+//! per-window z-normalization — and the incremental envelope maintainer
+//! must reproduce the batch envelopes over stream-sized inputs.
+
+use dtw_bounds::bounds::envelope::{envelopes, StreamingEnvelope};
+use dtw_bounds::bounds::BoundKind;
+use dtw_bounds::data::rng::Rng;
+use dtw_bounds::data::synthetic::embed_stream;
+use dtw_bounds::data::znorm::znormalized;
+use dtw_bounds::delta::Squared;
+use dtw_bounds::dtw::dtw;
+use dtw_bounds::index::DtwIndex;
+use dtw_bounds::stream::{SubsequenceOptions, DEFAULT_CASCADE};
+
+/// A small random pattern library indexed at window `w`.
+fn library(rng: &mut Rng, n: usize, m: usize, w: usize) -> DtwIndex {
+    let series: Vec<Vec<f64>> = (0..n)
+        .map(|_| {
+            // Smooth-ish random walk so bounds have something to prune.
+            let mut v = 0.0;
+            (0..m)
+                .map(|_| {
+                    v += rng.normal() * 0.5;
+                    v
+                })
+                .collect()
+        })
+        .collect();
+    DtwIndex::builder(series)
+        .labels((0..n as u32).collect())
+        .window(w)
+        .build()
+        .expect("one shared length")
+}
+
+/// A noise stream with a few (noisy) library members embedded.
+fn noisy_stream(rng: &mut Rng, index: &DtwIndex, len: usize) -> Vec<f64> {
+    let patterns: Vec<Vec<f64>> =
+        index.train().series.iter().map(|s| s.values.clone()).collect();
+    embed_stream(rng, &patterns, len, 0.15, 0.0, 0.1).0
+}
+
+/// Brute force: the exact nearest indexed series of every hop-grid
+/// window (full DTW, no bounds, no cutoffs). Returns
+/// `(start, neighbor, distance)` per window.
+fn oracle(index: &DtwIndex, samples: &[f64], hop: usize, znorm: bool) -> Vec<(u64, usize, f64)> {
+    let m = index.train().series[0].len();
+    let w = index.window();
+    let mut out = Vec::new();
+    let mut start = 0usize;
+    while start + m <= samples.len() {
+        if start % hop == 0 {
+            let win: Vec<f64> = if znorm {
+                znormalized(&samples[start..start + m])
+            } else {
+                samples[start..start + m].to_vec()
+            };
+            let mut best = (usize::MAX, f64::INFINITY);
+            for (ti, t) in index.train().series.iter().enumerate() {
+                let d = dtw::<Squared>(&win, &t.values, w);
+                if d < best.1 {
+                    best = (ti, d);
+                }
+            }
+            out.push((start as u64, best.0, best.1));
+        }
+        start += 1;
+    }
+    out
+}
+
+/// Cascades to exercise: the default, each family alone, a tightest-last
+/// stack, and the §8 composites.
+fn cascades() -> Vec<Vec<BoundKind>> {
+    vec![
+        DEFAULT_CASCADE.to_vec(),
+        vec![BoundKind::KimFL],
+        vec![BoundKind::Keogh],
+        vec![BoundKind::Webb],
+        vec![BoundKind::Improved],
+        vec![BoundKind::KimFL, BoundKind::Keogh, BoundKind::Webb, BoundKind::Petitjean],
+        vec![BoundKind::UcrCascade, BoundKind::WebbEnhanced(3)],
+    ]
+}
+
+#[test]
+fn threshold_mode_matches_oracle_for_every_cascade() {
+    let mut rng = Rng::seeded(8101);
+    for trial in 0..4 {
+        let (n, m, w) = (5 + trial % 3, 20 + 3 * trial, 1 + trial % 4);
+        let index = library(&mut rng, n, m, w);
+        let samples = noisy_stream(&mut rng, &index, 400);
+        for &hop in &[1usize, 3] {
+            for &znorm in &[false, true] {
+                let truth = oracle(&index, &samples, hop, znorm);
+                // A tau with matches on both sides: the median nearest
+                // distance across windows.
+                let mut ds: Vec<f64> = truth.iter().map(|&(_, _, d)| d).collect();
+                ds.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+                let tau = ds[ds.len() / 2];
+                let want: Vec<(u64, usize, f64)> =
+                    truth.iter().copied().filter(|&(_, _, d)| d < tau).collect();
+                assert!(!want.is_empty(), "degenerate tau t={trial} hop={hop}");
+
+                for cascade in cascades() {
+                    let opts = SubsequenceOptions::threshold(tau)
+                        .with_hop(hop)
+                        .with_znorm(znorm)
+                        .with_cascade(cascade.clone());
+                    let report = index
+                        .subsequence_scan::<Squared>(&samples, opts)
+                        .expect("valid options");
+                    let got: Vec<(u64, usize, f64)> = report
+                        .matches
+                        .iter()
+                        .map(|m| (m.start, m.neighbor, m.distance))
+                        .collect();
+                    let names: Vec<String> =
+                        cascade.iter().map(|b| b.name()).collect();
+                    assert_eq!(
+                        got,
+                        want,
+                        "t={trial} hop={hop} znorm={znorm} cascade={}",
+                        names.join("->")
+                    );
+                    assert_eq!(report.stats.windows as usize, truth.len());
+                    assert_eq!(report.stats.matches as usize, want.len());
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn top_k_mode_matches_oracle() {
+    let mut rng = Rng::seeded(8202);
+    for trial in 0..3 {
+        let index = library(&mut rng, 6, 24, 2);
+        let samples = noisy_stream(&mut rng, &index, 350);
+        for &znorm in &[false, true] {
+            let mut truth = oracle(&index, &samples, 1, znorm);
+            // Oracle top-k: ascending (distance, start).
+            truth.sort_by(|a, b| a.2.partial_cmp(&b.2).unwrap().then(a.0.cmp(&b.0)));
+            for &k in &[1usize, 3, 7] {
+                let report = index
+                    .subsequence_scan::<Squared>(
+                        &samples,
+                        SubsequenceOptions::top_k(k).with_znorm(znorm),
+                    )
+                    .expect("valid options");
+                let got: Vec<(u64, f64)> =
+                    report.matches.iter().map(|m| (m.start, m.distance)).collect();
+                let want: Vec<(u64, f64)> =
+                    truth.iter().take(k).map(|&(s, _, d)| (s, d)).collect();
+                assert_eq!(got, want, "t={trial} k={k} znorm={znorm}");
+            }
+        }
+    }
+}
+
+#[test]
+fn top_k_under_threshold_combines_both_cutoffs() {
+    let mut rng = Rng::seeded(8303);
+    let index = library(&mut rng, 6, 24, 2);
+    let samples = noisy_stream(&mut rng, &index, 300);
+    let mut truth = oracle(&index, &samples, 1, false);
+    truth.sort_by(|a, b| a.2.partial_cmp(&b.2).unwrap().then(a.0.cmp(&b.0)));
+    // A tau between the 2nd and ~10th best window, so k=5 is capped by
+    // whichever windows clear it.
+    let tau = truth[truth.len().min(10) - 1].2;
+    let want: Vec<(u64, f64)> = truth
+        .iter()
+        .filter(|&&(_, _, d)| d < tau)
+        .take(5)
+        .map(|&(s, _, d)| (s, d))
+        .collect();
+    let report = index
+        .subsequence_scan::<Squared>(
+            &samples,
+            SubsequenceOptions::top_k(5).with_threshold(tau),
+        )
+        .expect("valid options");
+    let got: Vec<(u64, f64)> =
+        report.matches.iter().map(|m| (m.start, m.distance)).collect();
+    assert_eq!(got, want);
+    assert!(report.matches.iter().all(|m| m.distance < tau));
+}
+
+#[test]
+fn per_stage_stats_are_consistent() {
+    let mut rng = Rng::seeded(8404);
+    let index = library(&mut rng, 8, 32, 3);
+    let samples = noisy_stream(&mut rng, &index, 500);
+    let report = index
+        .subsequence_scan::<Squared>(&samples, SubsequenceOptions::threshold(1.0))
+        .expect("valid options");
+    let s = &report.stats;
+    assert_eq!(s.samples as usize, samples.len());
+    assert_eq!(s.windows, (samples.len() - 32 + 1) as u64);
+    assert_eq!(s.candidates, s.windows * index.len() as u64);
+    // Stage 0 sees every pair; later stages see what survived.
+    assert_eq!(s.stages.len(), 3, "default cascade");
+    assert_eq!(s.stages[0].lb_calls, s.candidates);
+    for i in 1..s.stages.len() {
+        assert_eq!(
+            s.stages[i].lb_calls,
+            s.stages[i - 1].lb_calls - s.stages[i - 1].pruned,
+            "stage {i} sees stage {}'s survivors",
+            i - 1
+        );
+    }
+    let last = &s.stages[s.stages.len() - 1];
+    assert_eq!(s.dtw_calls, last.lb_calls - last.pruned);
+    // The aggregate view adds up.
+    let agg = s.to_search_stats();
+    assert_eq!(agg.pruned as u64, s.pruned());
+    assert_eq!(agg.dtw_calls as u64, s.dtw_calls);
+    assert_eq!(
+        agg.lb_calls as u64,
+        s.stages.iter().map(|st| st.lb_calls).sum::<u64>()
+    );
+}
+
+#[test]
+fn drain_matches_preserves_threshold_results() {
+    // Periodic draining (the unbounded-monitor pattern) must not change
+    // what is matched — threshold-mode cutoffs ignore the retained set.
+    let mut rng = Rng::seeded(8808);
+    let index = library(&mut rng, 4, 16, 2);
+    let samples = noisy_stream(&mut rng, &index, 300);
+    let truth = oracle(&index, &samples, 1, false);
+    let mut ds: Vec<f64> = truth.iter().map(|&(_, _, d)| d).collect();
+    ds.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+    let tau = ds[ds.len() / 2];
+
+    let mut searcher = index.subsequence(SubsequenceOptions::threshold(tau)).unwrap();
+    let mut drained = Vec::new();
+    for &v in &samples {
+        let _ = searcher.push::<Squared>(v);
+        if searcher.matches().len() >= 4 {
+            drained.extend(searcher.drain_matches());
+        }
+    }
+    assert!(searcher.matches().len() < 4, "retention stayed bounded");
+    drained.extend(searcher.finish().matches);
+
+    let want: Vec<(u64, f64)> =
+        truth.iter().filter(|&&(_, _, d)| d < tau).map(|&(s, _, d)| (s, d)).collect();
+    let got: Vec<(u64, f64)> = drained.iter().map(|m| (m.start, m.distance)).collect();
+    assert_eq!(got, want);
+}
+
+#[test]
+fn constant_streams_and_windows_are_handled() {
+    // Constant windows z-normalize to all-zeros (the UCR convention);
+    // the searcher must stay exact and never panic on zero variance.
+    let mut rng = Rng::seeded(8505);
+    let index = library(&mut rng, 4, 16, 2);
+    let samples = vec![3.25; 120];
+    for &znorm in &[false, true] {
+        let truth = oracle(&index, &samples, 1, znorm);
+        let tau = truth.iter().map(|&(_, _, d)| d).fold(f64::INFINITY, f64::min) * 1.5;
+        let report = index
+            .subsequence_scan::<Squared>(
+                &samples,
+                SubsequenceOptions::threshold(tau.max(1e-9)).with_znorm(znorm),
+            )
+            .expect("valid options");
+        let want: Vec<(u64, f64)> = truth
+            .iter()
+            .filter(|&&(_, _, d)| d < tau.max(1e-9))
+            .map(|&(s, _, d)| (s, d))
+            .collect();
+        let got: Vec<(u64, f64)> =
+            report.matches.iter().map(|m| (m.start, m.distance)).collect();
+        assert_eq!(got, want, "znorm={znorm}");
+    }
+}
+
+#[test]
+fn streaming_envelope_handles_stream_scale_inputs() {
+    // The unit tests in bounds::envelope pin bit-equality on small
+    // series; this exercises a long stream in one pass.
+    let mut rng = Rng::seeded(8606);
+    let s: Vec<f64> = (0..20_000).map(|_| rng.normal()).collect();
+    for &w in &[0usize, 5, 64] {
+        let (lo_b, up_b) = envelopes(&s, w);
+        let mut env = StreamingEnvelope::new(w);
+        let (mut lo_s, mut up_s) = (Vec::new(), Vec::new());
+        env.compute_into(&s, &mut lo_s, &mut up_s);
+        assert_eq!(lo_s, lo_b, "w={w}");
+        assert_eq!(up_s, up_b, "w={w}");
+    }
+}
+
+#[test]
+fn searcher_rejects_inconsistent_options() {
+    let mut rng = Rng::seeded(8707);
+    let index = library(&mut rng, 3, 12, 1);
+    assert!(index.subsequence(SubsequenceOptions::default()).is_err(), "no mode");
+    assert!(
+        index.subsequence(SubsequenceOptions::threshold(1.0).with_hop(0)).is_err(),
+        "hop 0"
+    );
+    assert!(
+        index
+            .subsequence(SubsequenceOptions::threshold(1.0).with_cascade(Vec::new()))
+            .is_err(),
+        "empty cascade"
+    );
+    assert!(index.subsequence(SubsequenceOptions::top_k(0)).is_err(), "k = 0");
+    let empty = DtwIndex::builder(Vec::new()).build().unwrap();
+    assert!(empty.subsequence(SubsequenceOptions::threshold(1.0)).is_err(), "empty index");
+}

@@ -186,6 +186,95 @@ pub fn write_stream_search_json(
     std::fs::write(path, out)
 }
 
+/// One machine-readable record for the exact-DTW kernel trajectory file
+/// (`BENCH_dtw_kernel.json`, `"kernels"` array): DP-cell throughput of
+/// one kernel variant on the windowed NN workload.
+#[derive(Debug, Clone)]
+pub struct DtwKernelRecord {
+    /// Kernel variant: `scalar` (`dtw_ea`), `pruned` (`dtw_ea_pruned`),
+    /// `pruned+cascade` (pruned with the `LB_KEOGH` tail).
+    pub kernel: String,
+    /// Series length ℓ.
+    pub series_len: usize,
+    /// Sakoe–Chiba half-window w.
+    pub window: usize,
+    /// Banded DP cells evaluated per second (band cells of every call,
+    /// abandoned or not — so pruning shows up as *higher* cells/sec).
+    pub cells_per_sec: f64,
+}
+
+/// One machine-readable record for the thread-scaling half of
+/// `BENCH_dtw_kernel.json` (`"threads"` array): k-NN queries/sec at a
+/// fixed workload as the search executor widens.
+#[derive(Debug, Clone)]
+pub struct ThreadScalingRecord {
+    /// Worker thread count.
+    pub threads: usize,
+    /// Queries answered per measured repeat.
+    pub queries: usize,
+    /// Queries per second.
+    pub queries_per_sec: f64,
+}
+
+/// One machine-readable record for the per-bound screening half of
+/// `BENCH_dtw_kernel.json` (`"bounds"` array): envelope cells scanned
+/// per second by one `BoundKind` screen — the source of the cells/sec
+/// column on `BoundKind`'s tightness-vs-cost table.
+#[derive(Debug, Clone)]
+pub struct BoundScreenRecord {
+    /// Canonical bound name, e.g. `LB_Webb`.
+    pub bound: String,
+    /// Series length ℓ (= cells credited per screen evaluation).
+    pub series_len: usize,
+    /// Screen cells per second (ℓ / seconds-per-evaluation).
+    pub cells_per_sec: f64,
+}
+
+/// Write the exact-DTW kernel trajectory file: one JSON object with
+/// `kernels`, `threads` and `bounds` arrays (manual formatting — no
+/// `serde` in the offline build; stable for line-diffing across PRs).
+/// `benches/check_regression.rs` parses exactly this shape.
+pub fn write_dtw_kernel_json(
+    path: &str,
+    kernels: &[DtwKernelRecord],
+    threads: &[ThreadScalingRecord],
+    bounds: &[BoundScreenRecord],
+) -> std::io::Result<()> {
+    let esc = |s: &str| s.replace('\\', "\\\\").replace('"', "\\\"");
+    let mut out = String::from("{\n  \"kernels\": [\n");
+    for (i, r) in kernels.iter().enumerate() {
+        let sep = if i + 1 == kernels.len() { "" } else { "," };
+        out.push_str(&format!(
+            "    {{\"kernel\": \"{}\", \"series_len\": {}, \"window\": {}, \
+             \"cells_per_sec\": {:.1}}}{sep}\n",
+            esc(&r.kernel),
+            r.series_len,
+            r.window,
+            r.cells_per_sec,
+        ));
+    }
+    out.push_str("  ],\n  \"threads\": [\n");
+    for (i, r) in threads.iter().enumerate() {
+        let sep = if i + 1 == threads.len() { "" } else { "," };
+        out.push_str(&format!(
+            "    {{\"threads\": {}, \"queries\": {}, \"queries_per_sec\": {:.1}}}{sep}\n",
+            r.threads, r.queries, r.queries_per_sec,
+        ));
+    }
+    out.push_str("  ],\n  \"bounds\": [\n");
+    for (i, r) in bounds.iter().enumerate() {
+        let sep = if i + 1 == bounds.len() { "" } else { "," };
+        out.push_str(&format!(
+            "    {{\"bound\": \"{}\", \"series_len\": {}, \"cells_per_sec\": {:.1}}}{sep}\n",
+            esc(&r.bound),
+            r.series_len,
+            r.cells_per_sec,
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    std::fs::write(path, out)
+}
+
 /// Write records as a JSON array. The offline build has no `serde`; the
 /// records are flat, so manual formatting is sufficient and the output is
 /// stable for line-diffing across PRs.

@@ -1,0 +1,136 @@
+//! Perf-regression gate over the exact-DTW kernel trajectory:
+//! compares a fresh `BENCH_dtw_kernel.json` (emitted by
+//! `cargo bench --bench dtw_kernel`) against the committed
+//! `benches/baseline.json` and fails when throughput dropped more than
+//! [`TOLERANCE`] (20%) on any matched entry.
+//!
+//! * queries/sec entries match on `threads`; cells/sec entries match on
+//!   `kernel` name.
+//! * An empty baseline (the seed state) passes with a note on how to
+//!   record one; extra/missing entries warn but never fail.
+//! * `DTWB_REGRESSION_WARN_ONLY=1` downgrades failures to warnings —
+//!   what CI sets while the perf trajectory is young (shared runners
+//!   are noisy); flip it off once baselines stabilize.
+//!
+//! ```sh
+//! cargo bench --bench dtw_kernel          # emit BENCH_dtw_kernel.json
+//! cargo bench --bench check_regression    # gate against the baseline
+//! cp BENCH_dtw_kernel.json benches/baseline.json   # record a baseline
+//! ```
+//!
+//! The parser handles exactly the flat shape `benchkit`'s
+//! `write_dtw_kernel_json` emits (one record per line) — no serde in
+//! the offline build.
+
+/// Allowed fractional throughput drop before the gate trips.
+const TOLERANCE: f64 = 0.20;
+
+/// Extract `"key": <number>` from a JSON-ish line.
+fn num_field(line: &str, key: &str) -> Option<f64> {
+    let pat = format!("\"{key}\": ");
+    let start = line.find(&pat)? + pat.len();
+    let rest = &line[start..];
+    let end = rest.find(|c: char| c == ',' || c == '}').unwrap_or(rest.len());
+    rest[..end].trim().parse().ok()
+}
+
+/// Extract `"key": "<string>"` from a JSON-ish line.
+fn str_field(line: &str, key: &str) -> Option<String> {
+    let pat = format!("\"{key}\": \"");
+    let start = line.find(&pat)? + pat.len();
+    let rest = &line[start..];
+    Some(rest[..rest.find('"')?].to_string())
+}
+
+/// `(label, throughput)` per record: kernel records keyed
+/// `kernel:<name>`, scaling records keyed `threads:<n>`.
+fn parse_records(text: &str) -> Vec<(String, f64)> {
+    let mut out = Vec::new();
+    for line in text.lines() {
+        if let (Some(kernel), Some(rate)) =
+            (str_field(line, "kernel"), num_field(line, "cells_per_sec"))
+        {
+            out.push((format!("kernel:{kernel}"), rate));
+        } else if let (Some(bound), Some(rate)) =
+            (str_field(line, "bound"), num_field(line, "cells_per_sec"))
+        {
+            out.push((format!("bound:{bound}"), rate));
+        } else if let (Some(threads), Some(qps)) =
+            (num_field(line, "threads"), num_field(line, "queries_per_sec"))
+        {
+            out.push((format!("threads:{threads}"), qps));
+        }
+    }
+    out
+}
+
+fn main() {
+    let warn_only = std::env::var("DTWB_REGRESSION_WARN_ONLY").map(|v| v == "1").unwrap_or(false);
+    // cargo runs bench binaries with cwd = the package root (rust/);
+    // anchor both files at their committed/emitted locations instead.
+    let baseline_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../benches/baseline.json");
+    let current_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_dtw_kernel.json");
+
+    let baseline = match std::fs::read_to_string(baseline_path) {
+        Ok(t) => parse_records(&t),
+        Err(e) => {
+            println!("regression check: cannot read {baseline_path} ({e}); nothing to gate");
+            return;
+        }
+    };
+    if baseline.is_empty() {
+        println!(
+            "regression check: {baseline_path} holds no entries yet — record one with\n  \
+             cargo bench --bench dtw_kernel && cp {current_path} {baseline_path}"
+        );
+        return;
+    }
+    let current = match std::fs::read_to_string(current_path) {
+        Ok(t) => parse_records(&t),
+        Err(e) => {
+            println!(
+                "regression check: cannot read {current_path} ({e}); \
+                 run `cargo bench --bench dtw_kernel` first"
+            );
+            std::process::exit(if warn_only { 0 } else { 1 });
+        }
+    };
+
+    let mut regressions = 0usize;
+    for (label, base) in &baseline {
+        match current.iter().find(|(l, _)| l == label) {
+            None => println!("  WARN {label}: present in baseline, missing from current run"),
+            Some((_, now)) => {
+                let ratio = now / base;
+                let verdict = if ratio < 1.0 - TOLERANCE {
+                    regressions += 1;
+                    "REGRESSION"
+                } else {
+                    "ok"
+                };
+                println!("  {verdict} {label}: baseline {base:.1}, current {now:.1} ({ratio:.2}x)");
+            }
+        }
+    }
+    for (label, _) in &current {
+        if !baseline.iter().any(|(l, _)| l == label) {
+            println!("  note {label}: new entry (not in baseline)");
+        }
+    }
+
+    if regressions > 0 {
+        let msg = format!(
+            "regression check: {regressions} entr{} dropped more than {:.0}%",
+            if regressions == 1 { "y" } else { "ies" },
+            TOLERANCE * 100.0
+        );
+        if warn_only {
+            println!("{msg} (DTWB_REGRESSION_WARN_ONLY=1: not failing)");
+        } else {
+            eprintln!("{msg}");
+            std::process::exit(1);
+        }
+    } else {
+        println!("regression check: all matched entries within {:.0}%", TOLERANCE * 100.0);
+    }
+}

@@ -1,0 +1,231 @@
+//! Exact-DTW kernel + parallel-executor trajectory bench: the perf
+//! baseline for the hardware-speed hot paths.
+//!
+//! Three measurements land in `BENCH_dtw_kernel.json`:
+//!
+//! * **cells/sec** of the three exact-DTW kernel variants on a windowed
+//!   nearest-neighbor workload (each call early-abandons against the
+//!   best-so-far distance, exactly like the search loops): `scalar`
+//!   (`dtw_ea`), `pruned` (`dtw_ea_pruned`, live-column-range
+//!   pruning), `pruned+cascade` (pruned plus the `LB_KEOGH`
+//!   cumulative-lower-bound tail, tail computation included in the
+//!   time). Throughput counts the *logical* band cells of every call,
+//!   so skipped cells show up as higher cells/sec.
+//! * **queries/sec** of the end-to-end k-NN search path at 1/2/4/8
+//!   worker threads (`DtwIndexBuilder::threads`) — the executor
+//!   scaling curve. Neighbors are identical at every thread count;
+//!   this tracks only the speed.
+//! * **cells/sec per `BoundKind` screen** (`"bounds"` array) — the
+//!   source of the cells/sec column on the bound-selection table in
+//!   `rust/src/bounds/mod.rs`.
+//!
+//! Knobs (env): `DTWB_REPEATS` (default 3), `DTWB_SERIES_LEN` (256),
+//! `DTWB_CANDIDATES` (200), `DTWB_QUERIES` (24).
+//!
+//! ```sh
+//! cargo bench --bench dtw_kernel
+//! ```
+
+#[path = "benchkit.rs"]
+mod benchkit;
+
+use dtw_bounds::bounds::{keogh, PreparedSeries};
+use dtw_bounds::data::rng::Rng;
+use dtw_bounds::delta::Squared;
+use dtw_bounds::dtw::{dtw_ea, dtw_ea_pruned, effective_window};
+use dtw_bounds::index::{DtwIndex, QueryOptions};
+use dtw_bounds::metrics::{Summary, Table};
+
+/// Banded DP cells of one (l × l, half-window w) DTW evaluation.
+fn band_cells(l: usize, w: usize) -> usize {
+    let w = effective_window(l, l, w);
+    (0..l).map(|i| (i + w).min(l - 1) - i.saturating_sub(w) + 1).sum()
+}
+
+/// Smooth random-walk series — adjacent candidates stay close enough
+/// that bounds and pruning have real work to do.
+fn walk(rng: &mut Rng, l: usize) -> Vec<f64> {
+    let mut v = 0.0;
+    (0..l)
+        .map(|_| {
+            v += rng.normal() * 0.5;
+            v
+        })
+        .collect()
+}
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let knobs = benchkit::Knobs::from_env();
+    let l = env_usize("DTWB_SERIES_LEN", 256);
+    let n = env_usize("DTWB_CANDIDATES", 200);
+    let nq = env_usize("DTWB_QUERIES", 24);
+    let w = (l / 10).max(1);
+    let mut rng = Rng::seeded(0xD7B4);
+
+    let train: Vec<Vec<f64>> = (0..n).map(|_| walk(&mut rng, l)).collect();
+    let prepared: Vec<PreparedSeries> =
+        train.iter().map(|s| PreparedSeries::prepare(s.clone(), w)).collect();
+    let queries: Vec<Vec<f64>> = (0..nq).map(|_| walk(&mut rng, l)).collect();
+
+    benchkit::banner(&format!(
+        "Exact-DTW kernels on the windowed NN workload (l={l}, w={w}, n={n}, q={nq})"
+    ));
+    let cells = band_cells(l, w) as f64;
+    let total_calls = (nq * n) as f64;
+    let mut table = Table::new(vec!["kernel", "Gcells/s", "vs scalar"]);
+    let mut kernel_records: Vec<benchkit::DtwKernelRecord> = Vec::new();
+    let mut scalar_rate = 0.0f64;
+
+    // Each variant runs the same NN loop: candidates in order, cutoff =
+    // best finite distance so far (the search kernels' exact shape).
+    fn nn_sweep_mean<F: FnMut(&[f64], &PreparedSeries, f64) -> f64>(
+        queries: &[Vec<f64>],
+        prepared: &[PreparedSeries],
+        repeats: usize,
+        mut kernel: F,
+    ) -> f64 {
+        Summary::of(&benchkit::time_reps(repeats, || {
+            let mut acc = 0.0;
+            for q in queries {
+                let mut best = f64::INFINITY;
+                for t in prepared {
+                    let d = kernel(q, t, best);
+                    if d.is_finite() && d < best {
+                        best = d;
+                    }
+                }
+                acc += best;
+            }
+            std::hint::black_box(acc);
+        }))
+        .mean
+    }
+
+    let mut tail = Vec::new();
+    let means: Vec<(&str, f64)> = vec![
+        (
+            "scalar",
+            nn_sweep_mean(&queries, &prepared, knobs.repeats, |q, t, cut| {
+                dtw_ea::<Squared>(q, &t.values, w, cut)
+            }),
+        ),
+        (
+            "pruned",
+            nn_sweep_mean(&queries, &prepared, knobs.repeats, |q, t, cut| {
+                dtw_ea_pruned::<Squared>(q, &t.values, w, cut, None)
+            }),
+        ),
+        (
+            "pruned+cascade",
+            nn_sweep_mean(&queries, &prepared, knobs.repeats, |q, t, cut| {
+                if cut.is_finite() {
+                    keogh::lb_keogh_tail::<Squared>(q, &t.lo, &t.up, &mut tail);
+                    dtw_ea_pruned::<Squared>(q, &t.values, w, cut, Some(&tail))
+                } else {
+                    dtw_ea_pruned::<Squared>(q, &t.values, w, cut, None)
+                }
+            }),
+        ),
+    ];
+
+    for (name, mean) in means {
+        let rate = total_calls * cells / mean;
+        if name == "scalar" {
+            scalar_rate = rate;
+        }
+        table.row(vec![
+            name.to_string(),
+            format!("{:.3}", rate / 1e9),
+            format!("{:.2}x", rate / scalar_rate),
+        ]);
+        kernel_records.push(benchkit::DtwKernelRecord {
+            kernel: name.to_string(),
+            series_len: l,
+            window: w,
+            cells_per_sec: rate,
+        });
+    }
+    println!("{}", table.to_markdown());
+    println!("(cells/sec counts every call's full band — pruned/abandoned cells count as done)");
+
+    benchkit::banner("k-NN search thread scaling (sorted strategy, LB_Webb screen)");
+    let mut scaling_table = Table::new(vec!["threads", "queries/s", "speedup"]);
+    let mut scaling_records: Vec<benchkit::ThreadScalingRecord> = Vec::new();
+    let mut base_qps = 0.0f64;
+    for &threads in &[1usize, 2, 4, 8] {
+        let index = DtwIndex::builder(train.clone())
+            .window(w)
+            .threads(threads)
+            .build()
+            .expect("one shared length");
+        let mut searcher = index.searcher();
+        let opts = QueryOptions::k(3);
+        let mean = Summary::of(&benchkit::time_reps(knobs.repeats, || {
+            let mut acc = 0usize;
+            for q in &queries {
+                acc += searcher.query_values::<Squared>(q, &opts).neighbors.len();
+            }
+            std::hint::black_box(acc);
+        }))
+        .mean;
+        let qps = nq as f64 / mean;
+        if threads == 1 {
+            base_qps = qps;
+        }
+        scaling_table.row(vec![
+            threads.to_string(),
+            format!("{qps:.1}"),
+            format!("{:.2}x", qps / base_qps),
+        ]);
+        scaling_records.push(benchkit::ThreadScalingRecord {
+            threads,
+            queries: nq,
+            queries_per_sec: qps,
+        });
+    }
+    println!("{}", scaling_table.to_markdown());
+
+    benchkit::banner("Per-bound screening throughput (cells/sec, one query x candidate pair)");
+    // The source of the cells/sec column on BoundKind's
+    // tightness-vs-cost table (rust/src/bounds/mod.rs).
+    use dtw_bounds::bounds::{BoundKind, Scratch};
+    let mut bound_table = Table::new(vec!["bound", "Mcells/s"]);
+    let mut bound_records: Vec<benchkit::BoundScreenRecord> = Vec::new();
+    let mut scratch = Scratch::new(l);
+    let pq_cache: Vec<PreparedSeries> =
+        queries.iter().map(|q| PreparedSeries::prepare(q.clone(), w)).collect();
+    for &bound in BoundKind::ALL {
+        let iters = 200_000 / (l.max(1)) + 1;
+        let ns = benchkit::ns_per_call(iters, || {
+            let mut acc = 0.0;
+            for (pq, t) in pq_cache.iter().zip(prepared.iter()) {
+                acc += bound.compute::<Squared>(pq, t, w, f64::INFINITY, &mut scratch);
+            }
+            acc
+        }) / pq_cache.len().min(prepared.len()).max(1) as f64;
+        let rate = l as f64 / ns * 1e9;
+        bound_table.row(vec![bound.name(), format!("{:.1}", rate / 1e6)]);
+        bound_records.push(benchkit::BoundScreenRecord {
+            bound: bound.name(),
+            series_len: l,
+            cells_per_sec: rate,
+        });
+    }
+    println!("{}", bound_table.to_markdown());
+
+    // cargo runs bench binaries with cwd = the package root (rust/);
+    // anchor the trajectory file at the workspace root regardless.
+    let out_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_dtw_kernel.json");
+    benchkit::write_dtw_kernel_json(out_path, &kernel_records, &scaling_records, &bound_records)
+        .expect("write BENCH_dtw_kernel.json");
+    println!(
+        "wrote BENCH_dtw_kernel.json ({} kernel + {} scaling + {} bound records)",
+        kernel_records.len(),
+        scaling_records.len(),
+        bound_records.len()
+    );
+}

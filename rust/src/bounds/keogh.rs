@@ -64,6 +64,100 @@ pub fn lb_keogh_bridge<D: Delta>(
     b
 }
 
+/// Per-position `LB_KEOGH` contributions as a **suffix-sum tail array**
+/// for [`crate::dtw::dtw_ea_pruned`]: fills `tail` (length `a.len() + 1`)
+/// with `tail[i] = Σ_{j ≥ i} keogh_term(j)` and `tail[len] = 0`, and
+/// returns `tail[0]` (the full `LB_KEOGH` value).
+///
+/// Soundness for the pruned DTW kernel: every in-window alignment of
+/// `a[i]` costs at least `keogh_term(i)` (the envelope is the closest
+/// any aligned element can be, and δ is monotone in `|a-b|`), so
+/// `tail[i]` lower-bounds the cost rows `i..` add to any warping path,
+/// and each increment `tail[i] - tail[i+1]` never exceeds
+/// `δ(a[i], b[j])` — the two properties `dtw_ea_pruned` requires.
+pub fn lb_keogh_tail<D: Delta>(
+    a: &[f64],
+    t_lo: &[f64],
+    t_up: &[f64],
+    tail: &mut Vec<f64>,
+) -> f64 {
+    let n = a.len();
+    debug_assert_eq!(t_lo.len(), n);
+    debug_assert_eq!(t_up.len(), n);
+    tail.clear();
+    tail.resize(n + 1, 0.0);
+    let mut acc = 0.0f64;
+    for i in (0..n).rev() {
+        let v = a[i];
+        if v > t_up[i] {
+            acc += D::delta(v, t_up[i]);
+        } else if v < t_lo[i] {
+            acc += D::delta(v, t_lo[i]);
+        }
+        tail[i] = acc;
+    }
+    acc
+}
+
+/// `LB_KEOGH` over flat SoA envelope rows with a 4-lane unrolled
+/// accumulation — the inner kernel of
+/// [`crate::runtime::NativeBatchLb`] over an
+/// [`crate::bounds::store::EnvelopeStore`].
+///
+/// The accumulator is single and in-order, so a full (non-abandoned)
+/// sum is **bit-identical** to [`lb_keogh_bridge`]'s; the unroll merely
+/// hoists the abandon check to once per four elements (an abandoned
+/// partial sum is therefore at most three elements larger than the
+/// scalar kernel's — still a valid lower bound above the cutoff).
+#[inline]
+pub fn lb_keogh_flat<D: Delta>(a: &[f64], t_lo: &[f64], t_up: &[f64], abandon_at: f64) -> f64 {
+    let n = a.len();
+    debug_assert_eq!(t_lo.len(), n);
+    debug_assert_eq!(t_up.len(), n);
+    let mut b = 0.0f64;
+    let mut i = 0usize;
+    while i + 4 <= n {
+        let v0 = a[i];
+        if v0 > t_up[i] {
+            b += D::delta(v0, t_up[i]);
+        } else if v0 < t_lo[i] {
+            b += D::delta(v0, t_lo[i]);
+        }
+        let v1 = a[i + 1];
+        if v1 > t_up[i + 1] {
+            b += D::delta(v1, t_up[i + 1]);
+        } else if v1 < t_lo[i + 1] {
+            b += D::delta(v1, t_lo[i + 1]);
+        }
+        let v2 = a[i + 2];
+        if v2 > t_up[i + 2] {
+            b += D::delta(v2, t_up[i + 2]);
+        } else if v2 < t_lo[i + 2] {
+            b += D::delta(v2, t_lo[i + 2]);
+        }
+        let v3 = a[i + 3];
+        if v3 > t_up[i + 3] {
+            b += D::delta(v3, t_up[i + 3]);
+        } else if v3 < t_lo[i + 3] {
+            b += D::delta(v3, t_lo[i + 3]);
+        }
+        if b > abandon_at {
+            return b;
+        }
+        i += 4;
+    }
+    while i < n {
+        let v = a[i];
+        if v > t_up[i] {
+            b += D::delta(v, t_up[i]);
+        } else if v < t_lo[i] {
+            b += D::delta(v, t_lo[i]);
+        }
+        i += 1;
+    }
+    b
+}
+
 /// Keogh bridge that also materializes the **projection**
 /// `Ω_w(A, B)_i = clip(A_i, 𝕃_i^B, 𝕌_i^B)` over the *full* series (the
 /// envelope of the projection near the bridge edges reads values outside
@@ -173,6 +267,49 @@ mod tests {
             let lb1 = lb_keogh::<Absolute>(&a, &t, f64::INFINITY);
             let d1 = dtw::<Absolute>(&a, &b, w);
             assert!(lb1 <= d1 + 1e-9);
+        }
+    }
+
+    #[test]
+    fn tail_suffix_sums_match_full_bound() {
+        let mut rng = Rng::seeded(515);
+        for _ in 0..100 {
+            let n = rng.int_range(4, 60);
+            let a: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let w = rng.below(n);
+            let t = prep(&b, w);
+            let mut tail = Vec::new();
+            let total = lb_keogh_tail::<Squared>(&a, &t.lo, &t.up, &mut tail);
+            assert_eq!(tail.len(), n + 1);
+            assert_eq!(tail[n], 0.0);
+            assert_eq!(tail[0], total);
+            assert_eq!(total, lb_keogh::<Squared>(&a, &t, f64::INFINITY));
+            // Suffix sums are nonincreasing with nonnegative increments.
+            for i in 0..n {
+                assert!(tail[i] >= tail[i + 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn flat_kernel_is_bit_equal_to_bridge() {
+        let mut rng = Rng::seeded(516);
+        for &n in &[1usize, 3, 4, 5, 8, 17, 64, 129] {
+            let a: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let t = prep(&b, 2.min(n - 1));
+            let full = lb_keogh_bridge::<Squared>(&a, &t.lo, &t.up, 0, n, 0.0, f64::INFINITY);
+            let flat = lb_keogh_flat::<Squared>(&a, &t.lo, &t.up, f64::INFINITY);
+            assert_eq!(flat, full, "n={n}");
+            // Abandoned partials stay valid lower bounds above the cutoff.
+            if full > 0.0 {
+                let part = lb_keogh_flat::<Squared>(&a, &t.lo, &t.up, full * 0.25);
+                assert!(part <= full + 1e-12);
+                if part < full {
+                    assert!(part > full * 0.25);
+                }
+            }
         }
     }
 

@@ -58,6 +58,7 @@ pub mod keogh;
 pub mod kim;
 pub mod lr_paths;
 pub mod petitjean;
+pub mod store;
 pub mod webb;
 
 use crate::delta::Delta;
@@ -112,7 +113,8 @@ impl PreparedSeries {
 /// Reusable per-thread buffers so the hot path never allocates.
 ///
 /// `LB_IMPROVED` / `LB_PETITJEAN` need a projection plus its envelopes;
-/// `LB_WEBB` needs freeness prefix sums. One `Scratch` per search thread.
+/// `LB_WEBB` needs freeness prefix sums; the pruned exact-DTW kernel
+/// needs a cumulative-lower-bound tail. One `Scratch` per search thread.
 #[derive(Debug, Default)]
 pub struct Scratch {
     /// Projection `Ω_w(A, B)` of the query onto the candidate envelope.
@@ -125,6 +127,10 @@ pub struct Scratch {
     pub block_up: Vec<u32>,
     /// Prefix counts of positions blocking "free below".
     pub block_dn: Vec<u32>,
+    /// Suffix-sum `LB_KEOGH` tail for [`crate::dtw::dtw_ea_pruned`]
+    /// (filled by [`keogh::lb_keogh_tail`] right before each exact-DTW
+    /// call on the search paths).
+    pub tail: Vec<f64>,
 }
 
 impl Scratch {
@@ -136,22 +142,25 @@ impl Scratch {
             proj_up: Vec::with_capacity(l),
             block_up: Vec::with_capacity(l + 1),
             block_dn: Vec::with_capacity(l + 1),
+            tail: Vec::with_capacity(l + 1),
         }
     }
 
-    /// Buffer capacities `[proj, proj_lo, proj_up, block_up, block_dn]`.
+    /// Buffer capacities
+    /// `[proj, proj_lo, proj_up, block_up, block_dn, tail]`.
     ///
     /// Only exists in debug builds, where [`BoundKind::compute`] asserts
     /// that a pre-sized scratch is never reallocated on the hot path;
     /// tests use it to pin the same invariant across whole searches.
     #[cfg(debug_assertions)]
-    pub fn capacities(&self) -> [usize; 5] {
+    pub fn capacities(&self) -> [usize; 6] {
         [
             self.proj.capacity(),
             self.proj_lo.capacity(),
             self.proj_up.capacity(),
             self.block_up.capacity(),
             self.block_dn.capacity(),
+            self.tail.capacity(),
         ]
     }
 }
@@ -164,20 +173,26 @@ impl Scratch {
 ///
 /// Tightness is the mean `λ_w/DTW_w` ratio (higher prunes more); cost is
 /// per query × candidate pair *after* the usual preparations (candidate
-/// envelopes per training set, query envelopes per query).
+/// envelopes per training set, query envelopes per query). The
+/// cells/sec column names each bound's record in the `"bounds"` array
+/// of `BENCH_dtw_kernel.json` (emitted by
+/// `cargo bench --bench dtw_kernel`): measured screen throughput in
+/// envelope cells per second on the current hardware — absolute
+/// numbers are machine-specific, so the trajectory file carries them,
+/// not this table.
 ///
-/// | Kind | Tightness | Per-pair cost | Reach for it when |
-/// |---|---|---|---|
-/// | [`KimFL`](BoundKind::KimFL) | lowest | `O(1)` | as a cascade front stage; endpoint-divergent data |
-/// | [`Keogh`](BoundKind::Keogh) | baseline | one `O(ℓ)` pass | candidate envelopes are all you have (batched backends) |
-/// | [`Improved`](BoundKind::Improved) | > Keogh | `O(ℓ)` + per-pair projection envelopes | random-order search at moderate windows |
-/// | [`Enhanced`](BoundKind::Enhanced)`^k` | tunable with `k` | `O(ℓ + k·w)` | small windows, `k ≈ 3–8` (Tan et al.'s sweet spot) |
-/// | [`Petitjean`](BoundKind::Petitjean) | tightest `O(ℓ)` known | highest constant (projection + its envelopes) | Algorithm 3 (early abandoning pays for tightness) |
-/// | [`Webb`](BoundKind::Webb) | ≈ Petitjean | lowest constant (envelopes-of-envelopes, no per-pair projection) | Algorithm 4 / sorted screening — **the default** |
-/// | [`WebbStar`](BoundKind::WebbStar) | slightly ≤ Webb | like Webb | δ lacks the triangle-adjustment property |
-/// | [`WebbEnhanced`](BoundKind::WebbEnhanced)`^k` | ≥ Webb | `O(ℓ + k·w)` | banded refinement at small windows |
-/// | [`Cascade`](BoundKind::Cascade) | = Webb when run to completion | anytime (`KimFL` first) | thresholded screening — streams and monitors |
-/// | [`UcrCascade`](BoundKind::UcrCascade) | Keogh-class | anytime | UCR-suite parity baselines |
+/// | Kind | Tightness | Per-pair cost | cells/sec record | Reach for it when |
+/// |---|---|---|---|---|
+/// | [`KimFL`](BoundKind::KimFL) | lowest | `O(1)` | `LB_KimFL` | as a cascade front stage; endpoint-divergent data |
+/// | [`Keogh`](BoundKind::Keogh) | baseline | one `O(ℓ)` pass | `LB_Keogh` | candidate envelopes are all you have (batched backends) |
+/// | [`Improved`](BoundKind::Improved) | > Keogh | `O(ℓ)` + per-pair projection envelopes | `LB_Improved` | random-order search at moderate windows |
+/// | [`Enhanced`](BoundKind::Enhanced)`^k` | tunable with `k` | `O(ℓ + k·w)` | `LB_Enhanced8` | small windows, `k ≈ 3–8` (Tan et al.'s sweet spot) |
+/// | [`Petitjean`](BoundKind::Petitjean) | tightest `O(ℓ)` known | highest constant (projection + its envelopes) | `LB_Petitjean` | Algorithm 3 (early abandoning pays for tightness) |
+/// | [`Webb`](BoundKind::Webb) | ≈ Petitjean | lowest constant (envelopes-of-envelopes, no per-pair projection) | `LB_Webb` | Algorithm 4 / sorted screening — **the default** |
+/// | [`WebbStar`](BoundKind::WebbStar) | slightly ≤ Webb | like Webb | `LB_Webb*` | δ lacks the triangle-adjustment property |
+/// | [`WebbEnhanced`](BoundKind::WebbEnhanced)`^k` | ≥ Webb | `O(ℓ + k·w)` | `LB_Webb_Enhanced3` | banded refinement at small windows |
+/// | [`Cascade`](BoundKind::Cascade) | = Webb when run to completion | anytime (`KimFL` first) | `LB_Cascade` | thresholded screening — streams and monitors |
+/// | [`UcrCascade`](BoundKind::UcrCascade) | Keogh-class | anytime | `LB_UcrCascade` | UCR-suite parity baselines |
 ///
 /// The ablation kinds (`*NoLr`) exist for §7's experiments, and
 /// [`KeoghRev`](BoundKind::KeoghRev) is the reversed-role `LB_KEOGH`
@@ -404,7 +419,7 @@ impl BoundKind {
             // this series length must not have been reallocated. (First
             // use may still grow an under-sized scratch.)
             let caps_after = scratch.capacities();
-            let need = [q.len(), q.len(), q.len(), q.len() + 1, q.len() + 1];
+            let need = [q.len(), q.len(), q.len(), q.len() + 1, q.len() + 1, q.len() + 1];
             for i in 0..caps_before.len() {
                 debug_assert!(
                     caps_before[i] < need[i] || caps_after[i] == caps_before[i],

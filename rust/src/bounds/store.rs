@@ -1,0 +1,196 @@
+//! [`EnvelopeStore`] — flat, 64-byte-aligned structure-of-arrays storage
+//! for a training set's warping envelopes.
+//!
+//! The per-series [`super::PreparedSeries`] layout is right for the
+//! scalar search path (one candidate at a time, everything about it
+//! together), but wrong for the *batched* screening path: scoring a
+//! query against hundreds of candidates pointer-chases a fresh pair of
+//! heap `Vec`s per candidate. The store packs every lower-envelope row
+//! contiguously, then every upper-envelope row, into **one allocation**
+//! whose rows start on 64-byte (cache-line) boundaries:
+//!
+//! ```text
+//! [ lo(t0) pad ][ lo(t1) pad ] … [ lo(tn-1) pad ][ up(t0) pad ] …
+//!   ^stride f64s, 64-byte aligned rows
+//! ```
+//!
+//! so `lb_keogh` streams two sequential rows per pair — no per-pair
+//! pointer indirection, no partial cache lines, hardware-prefetch
+//! friendly. Values are copied out of the prepared series once per
+//! index build ([`EnvelopeStore::rebuild`] reuses the allocation).
+
+use super::PreparedSeries;
+
+/// One cache line of f64s; a `Vec<CacheLine>` is 64-byte aligned, which
+/// is what keeps every envelope row aligned without a custom allocator.
+#[repr(C, align(64))]
+#[derive(Debug, Clone, Copy)]
+struct CacheLine([f64; 8]);
+
+const LANE: usize = 8;
+
+/// Flat SoA envelope storage: all `lo` rows contiguous, then all `up`
+/// rows, one 64-byte-aligned allocation for the whole training set.
+#[derive(Debug, Clone, Default)]
+pub struct EnvelopeStore {
+    /// Number of series.
+    n: usize,
+    /// Series length ℓ.
+    l: usize,
+    /// Row stride in f64s (ℓ rounded up to a multiple of 8).
+    stride: usize,
+    /// Backing allocation, `2 * n * stride / 8` cache lines.
+    buf: Vec<CacheLine>,
+}
+
+impl EnvelopeStore {
+    /// An empty store (no allocation).
+    pub fn new() -> EnvelopeStore {
+        EnvelopeStore::default()
+    }
+
+    /// Build a store from prepared series (all sharing one length).
+    pub fn build(train: &[PreparedSeries]) -> EnvelopeStore {
+        let mut store = EnvelopeStore::new();
+        store.rebuild(train);
+        store
+    }
+
+    /// (Re)populate from `train`, reusing the allocation when it is
+    /// already large enough. Series must share one length.
+    pub fn rebuild(&mut self, train: &[PreparedSeries]) {
+        let n = train.len();
+        let l = train.first().map(|t| t.len()).unwrap_or(0);
+        debug_assert!(train.iter().all(|t| t.len() == l), "one shared length");
+        let stride = l.div_ceil(LANE) * LANE;
+        let lines = 2 * n * stride / LANE;
+        self.n = n;
+        self.l = l;
+        self.stride = stride;
+        // Zero-fill (cheap, and pad lanes never hold stale data).
+        self.buf.clear();
+        self.buf.resize(lines.max(1), CacheLine([0.0; LANE]));
+        let flat = self.flat_mut();
+        for (t, series) in train.iter().enumerate() {
+            flat[t * stride..t * stride + l].copy_from_slice(&series.lo);
+            flat[(n + t) * stride..(n + t) * stride + l].copy_from_slice(&series.up);
+        }
+    }
+
+    /// Number of stored series.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    /// True when nothing is stored.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Series length ℓ.
+    #[inline]
+    pub fn series_len(&self) -> usize {
+        self.l
+    }
+
+    /// Row stride in f64s (a multiple of 8; `stride - series_len()` pad
+    /// elements per row).
+    #[inline]
+    pub fn stride(&self) -> usize {
+        self.stride
+    }
+
+    /// Lower-envelope row of series `t` (length ℓ, 64-byte aligned).
+    #[inline]
+    pub fn lo_row(&self, t: usize) -> &[f64] {
+        debug_assert!(t < self.n);
+        let start = t * self.stride;
+        &self.flat()[start..start + self.l]
+    }
+
+    /// Upper-envelope row of series `t` (length ℓ, 64-byte aligned).
+    #[inline]
+    pub fn up_row(&self, t: usize) -> &[f64] {
+        debug_assert!(t < self.n);
+        let start = (self.n + t) * self.stride;
+        &self.flat()[start..start + self.l]
+    }
+
+    #[inline]
+    fn flat(&self) -> &[f64] {
+        // Sound: `CacheLine` is `repr(C)` over `[f64; 8]`, so the buffer
+        // is exactly `8 * buf.len()` contiguous, initialized f64s.
+        unsafe {
+            std::slice::from_raw_parts(self.buf.as_ptr() as *const f64, self.buf.len() * LANE)
+        }
+    }
+
+    #[inline]
+    fn flat_mut(&mut self) -> &mut [f64] {
+        unsafe {
+            std::slice::from_raw_parts_mut(
+                self.buf.as_mut_ptr() as *mut f64,
+                self.buf.len() * LANE,
+            )
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+
+    fn series(rng: &mut Rng, n: usize, l: usize, w: usize) -> Vec<PreparedSeries> {
+        (0..n)
+            .map(|_| PreparedSeries::prepare((0..l).map(|_| rng.normal()).collect(), w))
+            .collect()
+    }
+
+    #[test]
+    fn rows_match_prepared_series() {
+        let mut rng = Rng::seeded(77);
+        for &(n, l, w) in &[(1usize, 1usize, 0usize), (3, 7, 1), (5, 8, 2), (16, 129, 5)] {
+            let train = series(&mut rng, n, l, w);
+            let store = EnvelopeStore::build(&train);
+            assert_eq!(store.len(), n);
+            assert_eq!(store.series_len(), l);
+            assert_eq!(store.stride() % 8, 0);
+            assert!(store.stride() >= l);
+            for (t, s) in train.iter().enumerate() {
+                assert_eq!(store.lo_row(t), s.lo.as_slice(), "lo n={n} l={l} t={t}");
+                assert_eq!(store.up_row(t), s.up.as_slice(), "up n={n} l={l} t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn rows_are_cache_line_aligned() {
+        let mut rng = Rng::seeded(78);
+        let train = series(&mut rng, 4, 100, 3);
+        let store = EnvelopeStore::build(&train);
+        for t in 0..store.len() {
+            assert_eq!(store.lo_row(t).as_ptr() as usize % 64, 0, "lo row {t}");
+            assert_eq!(store.up_row(t).as_ptr() as usize % 64, 0, "up row {t}");
+        }
+    }
+
+    #[test]
+    fn rebuild_reuses_and_handles_shrink_and_empty() {
+        let mut rng = Rng::seeded(79);
+        let big = series(&mut rng, 8, 64, 2);
+        let mut store = EnvelopeStore::build(&big);
+        let small = series(&mut rng, 2, 16, 1);
+        store.rebuild(&small);
+        assert_eq!(store.len(), 2);
+        assert_eq!(store.series_len(), 16);
+        for (t, s) in small.iter().enumerate() {
+            assert_eq!(store.lo_row(t), s.lo.as_slice());
+            assert_eq!(store.up_row(t), s.up.as_slice());
+        }
+        store.rebuild(&[]);
+        assert!(store.is_empty());
+    }
+}

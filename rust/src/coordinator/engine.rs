@@ -94,9 +94,11 @@ impl NnEngine {
         self.searcher.set_backend(backend);
     }
 
-    /// Attach the default pure-Rust batched backend.
+    /// Attach the default pure-Rust batched backend, scoring query rows
+    /// on the index's configured thread count.
     pub fn attach_native(&mut self) {
-        self.set_backend(Box::new(NativeBatchLb::new()));
+        let threads = self.searcher.index().threads();
+        self.set_backend(Box::new(NativeBatchLb::with_threads(threads)));
     }
 
     /// Attach the PJRT batch prefilter loaded from `artifacts_dir`.

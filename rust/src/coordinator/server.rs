@@ -3,7 +3,12 @@
 //! Protocol (one line per message, UTF-8; the full specification with
 //! worked request/response examples lives in `docs/protocol.md`):
 //! * request:  `v1,v2,...,vN` — comma-separated series values (1-NN), or
-//!   `k=<n>;v1,v2,...,vN` for the `n` nearest neighbors;
+//!   `k=<n>;v1,v2,...,vN` for the `n` nearest neighbors. A
+//!   `threads=<n>;` prefix (combinable with `k=`, any order) screens
+//!   this query's candidates on `n` workers (`0` = machine
+//!   parallelism) on the scalar paths — batched prefilter executions
+//!   use the server-wide `--threads` instead. Results are identical
+//!   at every thread count either way;
 //! * 1-NN response: `label=<u32> dist=<f64> nn=<usize>
 //!   path=<scalar|batched> us=<u128>`;
 //! * k-NN response: `k=<n> neighbors=<idx>:<label>:<dist>,...
@@ -145,24 +150,47 @@ fn respond(line: &str, router: &Router, default_k: usize) -> String {
     if let Some(rest) = line.strip_prefix("stream=") {
         return respond_stream(rest, router);
     }
-    // Optional `k=<n>;` prefix selects k-NN for this request.
-    let (k, payload) = match line.strip_prefix("k=") {
-        Some(rest) => match rest.split_once(';') {
-            Some((kstr, payload)) => match kstr.trim().parse::<usize>() {
-                Ok(k) if k >= 1 => (k, payload),
-                _ => return "ERR k must be a positive integer".into(),
-            },
-            None => return "ERR expected k=<n>;v1,v2,...".into(),
-        },
-        None => (default_k, line),
-    };
+    // Optional `k=<n>;` / `threads=<n>;` prefixes (any order) select
+    // k-NN depth and the per-query screening thread count.
+    let mut k = default_k;
+    let mut threads: Option<usize> = None;
+    let mut payload = line;
+    loop {
+        if let Some(rest) = payload.strip_prefix("k=") {
+            match rest.split_once(';') {
+                Some((kstr, next)) => match kstr.trim().parse::<usize>() {
+                    Ok(v) if v >= 1 => {
+                        k = v;
+                        payload = next;
+                    }
+                    _ => return "ERR k must be a positive integer".into(),
+                },
+                None => return "ERR expected k=<n>;v1,v2,...".into(),
+            }
+        } else if let Some(rest) = payload.strip_prefix("threads=") {
+            match rest.split_once(';') {
+                Some((tstr, next)) => match tstr.trim().parse::<usize>() {
+                    Ok(v) => {
+                        threads = Some(v);
+                        payload = next;
+                    }
+                    _ => return "ERR threads must be a non-negative integer".into(),
+                },
+                None => return "ERR expected threads=<n>;v1,v2,...".into(),
+            }
+        } else {
+            break;
+        }
+    }
     let values: Result<Vec<f64>, _> =
         payload.split(',').map(|f| f.trim().parse::<f64>()).collect();
     let values = match values {
         Ok(values) if !values.is_empty() => values,
         _ => return "ERR expected comma-separated floats".into(),
     };
-    let outcome = router.query_with(values, QueryOptions::k(k));
+    let mut opts = QueryOptions::k(k);
+    opts.threads = threads;
+    let outcome = router.query_with(values, opts);
     let path = if outcome.batched { "batched" } else { "scalar" };
     if k == 1 {
         // Legacy 1-NN shape, byte-compatible with the v1 protocol.
@@ -223,6 +251,10 @@ fn respond_stream(rest: &str, router: &Router) -> String {
                 "0" | "false" => opts.znorm = Some(false),
                 _ => return "ERR znorm must be 0 or 1".into(),
             },
+            ("threads", v) => match v.parse::<usize>() {
+                Ok(t) => opts.threads = Some(t),
+                _ => return "ERR threads must be a non-negative integer".into(),
+            },
             (k, _) => return format!("ERR unknown stream param {k:?}"),
         }
     }
@@ -282,6 +314,8 @@ mod tests {
         let q: Vec<String> = ds.test[0].values.iter().map(|v| v.to_string()).collect();
         conn.write_all(format!("{}\n", q.join(",")).as_bytes()).unwrap();
         conn.write_all(format!("k=3;{}\n", q.join(",")).as_bytes()).unwrap();
+        conn.write_all(format!("threads=2;k=3;{}\n", q.join(",")).as_bytes()).unwrap();
+        conn.write_all(b"threads=x;1,2\n").unwrap();
         conn.write_all(b"k=0;1,2\n").unwrap();
         conn.write_all(b"garbage\n").unwrap();
         // Subsequence search: an exact copy of train[0] between far-away
@@ -304,6 +338,13 @@ mod tests {
         let knn = lines.next().unwrap().unwrap();
         assert!(knn.starts_with("k=3 neighbors="), "{knn}");
         assert_eq!(knn.matches(':').count(), 6, "3 neighbors, 2 colons each: {knn}");
+        let knn_threaded = lines.next().unwrap().unwrap();
+        assert!(knn_threaded.starts_with("k=3 neighbors="), "{knn_threaded}");
+        // Identical neighbors at any thread count.
+        let head = |s: &str| s.split(" path=").next().unwrap().to_string();
+        assert_eq!(head(&knn_threaded), head(&knn), "thread-count invariance");
+        let bad_threads = lines.next().unwrap().unwrap();
+        assert!(bad_threads.starts_with("ERR threads"), "{bad_threads}");
         let bad_k = lines.next().unwrap().unwrap();
         assert!(bad_k.starts_with("ERR"), "{bad_k}");
         let err = lines.next().unwrap().unwrap();

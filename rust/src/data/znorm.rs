@@ -5,18 +5,13 @@
 
 /// Z-normalize in place. Constant series become all-zeros.
 pub fn znormalize(values: &mut [f64]) {
-    let n = values.len();
-    if n == 0 {
+    if values.is_empty() {
         return;
     }
-    let mean = values.iter().sum::<f64>() / n as f64;
-    let var = values.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / n as f64;
-    if var <= 1e-24 {
-        values.iter_mut().for_each(|v| *v = 0.0);
-        return;
-    }
-    let inv_sd = 1.0 / var.sqrt();
-    values.iter_mut().for_each(|v| *v = (*v - mean) * inv_sd);
+    let n = values.len() as f64;
+    let mean = values.iter().sum::<f64>() / n;
+    let var = values.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / n;
+    znormalize_with_moments(values, mean, var);
 }
 
 /// Allocating convenience wrapper.
@@ -24,6 +19,25 @@ pub fn znormalized(values: &[f64]) -> Vec<f64> {
     let mut out = values.to_vec();
     znormalize(&mut out);
     out
+}
+
+/// Z-normalize in place with **precomputed** moments — for callers that
+/// already maintain the window mean/variance incrementally (the stream
+/// searcher reuses `StreamBuffer`'s O(1) rolling moments instead of
+/// rescanning every surviving window). Uses the same constant-series
+/// guard as [`znormalize`]; rolling moments drift from the rescanned
+/// ones by a few ulps over long streams, so results agree with
+/// [`znormalize`] to ~1e-9, not bitwise.
+pub fn znormalize_with_moments(values: &mut [f64], mean: f64, variance: f64) {
+    if values.is_empty() {
+        return;
+    }
+    if variance <= 1e-24 {
+        values.iter_mut().for_each(|v| *v = 0.0);
+        return;
+    }
+    let inv_sd = 1.0 / variance.sqrt();
+    values.iter_mut().for_each(|v| *v = (*v - mean) * inv_sd);
 }
 
 #[cfg(test)]
@@ -49,6 +63,22 @@ mod tests {
         let mut v: Vec<f64> = vec![];
         znormalize(&mut v);
         assert!(v.is_empty());
+    }
+
+    #[test]
+    fn with_moments_matches_rescan_when_given_exact_moments() {
+        let raw = [0.3, -1.2, 4.5, 2.2, -0.7];
+        let n = raw.len() as f64;
+        let mean = raw.iter().sum::<f64>() / n;
+        let var = raw.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / n;
+        let mut a = raw.to_vec();
+        znormalize(&mut a);
+        let mut b = raw.to_vec();
+        znormalize_with_moments(&mut b, mean, var);
+        assert_eq!(a, b, "identical moments give identical output");
+        let mut c = vec![5.5; 4];
+        znormalize_with_moments(&mut c, 5.5, 0.0);
+        assert_eq!(c, vec![0.0; 4], "constant guard");
     }
 
     #[test]

@@ -4,11 +4,19 @@
 //! with a Sakoe–Chiba band of half-width `w` (an element `A_i` may only be
 //! aligned with `B_j` when `|i-j| ≤ w`).
 //!
-//! Three entry points:
+//! Four entry points:
 //! * [`dtw`] — the plain measure, `O(ℓ·w)` time, `O(ℓ)` memory;
 //! * [`dtw_ea`] — early-abandoning variant used inside nearest-neighbor
 //!   search: returns `f64::INFINITY` as soon as every cell of a DP row
 //!   exceeds the cutoff (the distance to the best candidate so far);
+//! * [`dtw_ea_pruned`] — the PrunedDTW/UCR-suite kernel behind every
+//!   search path: additionally *skips* DP cells whose prefix cost
+//!   already proves any path through them exceeds the cutoff (the live
+//!   column range shrinks from both sides per row), and accepts an
+//!   optional cumulative-lower-bound tail array that tightens both the
+//!   per-cell pruning threshold and the per-row abandon test. Finite
+//!   results are bit-equal to [`dtw`]; `INFINITY` is returned exactly
+//!   when the true distance exceeds the cutoff.
 //! * [`cost_matrix`] / [`warping_path`] — full-matrix variants used by
 //!   tests and the figure generators (e.g. the Figure 3/4 example).
 
@@ -49,6 +57,19 @@ pub fn dtw<D: Delta>(a: &[f64], b: &[f64], w: usize) -> f64 {
 /// path must cost more than `cutoff`, so the caller (nearest-neighbor
 /// search) can discard this candidate. Pass `f64::INFINITY` to disable.
 pub fn dtw_ea<D: Delta>(a: &[f64], b: &[f64], w: usize, cutoff: f64) -> f64 {
+    // Monomorphize on "is abandoning active": with an infinite cutoff
+    // the row-min fold over row 0 and the per-cell `v < row_min` updates
+    // are pure overhead (they can never trigger), so they are compiled
+    // out entirely on the `dtw`/seed-DTW path.
+    if cutoff.is_infinite() {
+        dtw_ea_core::<D, false>(a, b, w, f64::INFINITY)
+    } else {
+        dtw_ea_core::<D, true>(a, b, w, cutoff)
+    }
+}
+
+#[inline(always)]
+fn dtw_ea_core<D: Delta, const EA: bool>(a: &[f64], b: &[f64], w: usize, cutoff: f64) -> f64 {
     let la = a.len();
     let lb = b.len();
     assert!(la > 0 && lb > 0, "dtw: empty series");
@@ -71,7 +92,9 @@ pub fn dtw_ea<D: Delta>(a: &[f64], b: &[f64], w: usize, cutoff: f64) -> f64 {
     if la == 1 {
         return prev[lb];
     }
-    if prev[1..=jhi0 + 1].iter().cloned().fold(f64::INFINITY, f64::min) > cutoff {
+    // Row-0 costs are nondecreasing (prefix sums of δ ≥ 0), so the row
+    // minimum is the first cell — no O(w) fold needed even when active.
+    if EA && prev[1] > cutoff {
         return f64::INFINITY;
     }
 
@@ -94,12 +117,12 @@ pub fn dtw_ea<D: Delta>(a: &[f64], b: &[f64], w: usize, cutoff: f64) -> f64 {
                 let v = D::delta(ai, bj) + diag.min(up).min(left);
                 crow[k] = v;
                 left = v;
-                if v < row_min {
+                if EA && v < row_min {
                     row_min = v;
                 }
             }
         }
-        if row_min > cutoff {
+        if EA && row_min > cutoff {
             return f64::INFINITY;
         }
         std::mem::swap(&mut prev, &mut curr);
@@ -110,6 +133,156 @@ pub fn dtw_ea<D: Delta>(a: &[f64], b: &[f64], w: usize, cutoff: f64) -> f64 {
         }
     }
     prev[lb]
+}
+
+/// Pruned early-abandoning windowed DTW — the kernel behind every search
+/// path (PrunedDTW, Silva & Batista 2016; the UCR-suite `cb` trick,
+/// Rakthanmanon et al. 2012; TC-DTW, arXiv:2101.07731).
+///
+/// Beyond [`dtw_ea`]'s row-min abandoning, this kernel *prunes* DP
+/// cells: a cell whose prefix cost plus the remaining-rows lower bound
+/// exceeds `cutoff` cannot lie on any path that beats `cutoff`, so it is
+/// treated as `INFINITY` and the live column range shrinks from both
+/// sides as the cutoff tightens. Rows whose live range empties abandon
+/// immediately.
+///
+/// `tail`, when provided, must have length `a.len() + 1` with `tail[i]`
+/// a lower bound on the total cost contributed by rows `i..` of any
+/// warping path and `tail[a.len()] == 0`, such that each per-row
+/// increment `tail[i] - tail[i+1]` never exceeds `δ(a[i], b[j])` for any
+/// in-window `j` — exactly what
+/// [`crate::bounds::keogh::lb_keogh_tail`] produces from the candidate's
+/// envelopes. The tail tightens every pruning threshold from `cutoff`
+/// to `cutoff - tail[i+1]`.
+///
+/// ## Contract (pinned by `rust/tests/pruned_dtw.rs`)
+///
+/// * A finite result is **bit-equal** to [`dtw`] (every surviving cell
+///   computes the identical value: a pruned neighbor can never win a
+///   `min` that a surviving cell takes).
+/// * `INFINITY` is returned **exactly** when `DTW_w(a, b) > cutoff` —
+///   possibly in cases where [`dtw_ea`] still returned a (useless)
+///   finite value above the cutoff.
+pub fn dtw_ea_pruned<D: Delta>(
+    a: &[f64],
+    b: &[f64],
+    w: usize,
+    cutoff: f64,
+    tail: Option<&[f64]>,
+) -> f64 {
+    let la = a.len();
+    let lb = b.len();
+    assert!(la > 0 && lb > 0, "dtw: empty series");
+    if cutoff.is_infinite() {
+        // Nothing can be pruned; take the branch-free kernel.
+        return dtw_ea_core::<D, false>(a, b, w, f64::INFINITY);
+    }
+    if let Some(t) = tail {
+        assert_eq!(t.len(), la + 1, "tail must have one entry per row plus a zero sentinel");
+    }
+    let tail_at = |i: usize| tail.map(|t| t[i]).unwrap_or(0.0);
+    let w = effective_window(la, lb, w);
+
+    // Same rolling-row + left-sentinel layout as `dtw_ea`; `row[j+1]`
+    // holds cell (i, j). Additionally tracked per row:
+    //   sc — first live (unpruned) column of the previous row;
+    //   ec — last  live column of the previous row.
+    // Cells left of `max(jlo, sc)` cannot be reached (all three
+    // predecessors pruned), and once the running `left` is pruned and
+    // `j > ec` no later cell of the row can be reached either.
+    let mut prev = vec![f64::INFINITY; lb + 1];
+    let mut curr = vec![f64::INFINITY; lb + 1];
+
+    // Row 0: nondecreasing prefix sums — prune at the first crossing.
+    let thresh0 = cutoff - tail_at(1);
+    let jhi0 = w.min(lb - 1);
+    let mut ec = usize::MAX; // last live column of row 0 (MAX = none)
+    let mut acc = D::delta(a[0], b[0]);
+    let mut j = 0usize;
+    while j <= jhi0 {
+        if acc > thresh0 {
+            break;
+        }
+        prev[j + 1] = acc;
+        ec = j;
+        j += 1;
+        if j <= jhi0 {
+            acc += D::delta(a[0], b[j]);
+        }
+    }
+    if ec == usize::MAX {
+        // Cell (0,0) already exceeds the budget; every path crosses it.
+        return f64::INFINITY;
+    }
+    if la == 1 {
+        let v = prev[lb];
+        return if v > cutoff { f64::INFINITY } else { v };
+    }
+    let mut sc = 0usize;
+
+    for i in 1..la {
+        let ai = a[i];
+        let jlo = i.saturating_sub(w);
+        let jhi = (i + w).min(lb - 1);
+        let thresh = cutoff - tail_at(i + 1);
+        let js = jlo.max(sc);
+        // Cells in [jlo, js) are unreachable this row; mark them pruned
+        // so the next row's diag/up reads see INFINITY (cheap: the range
+        // is only ever as wide as the pruning that produced it).
+        for cell in curr[jlo..js + 1].iter_mut() {
+            *cell = f64::INFINITY;
+        }
+        let mut left = f64::INFINITY;
+        let mut sc_next = usize::MAX;
+        let mut ec_next = usize::MAX;
+        let mut j = js;
+        while j <= jhi {
+            // Once past the previous row's live range with a pruned
+            // `left`, no later cell of this row is reachable.
+            if j > ec.saturating_add(1) && left.is_infinite() {
+                break;
+            }
+            let diag = prev[j];
+            let up = prev[j + 1];
+            let v = D::delta(ai, b[j]) + diag.min(up).min(left);
+            if v > thresh {
+                curr[j + 1] = f64::INFINITY;
+                left = f64::INFINITY;
+            } else {
+                curr[j + 1] = v;
+                left = v;
+                if sc_next == usize::MAX {
+                    sc_next = j;
+                }
+                ec_next = j;
+            }
+            j += 1;
+        }
+        // Cells not visited (early break) must read as pruned next row.
+        for cell in curr[j + 1..jhi + 2].iter_mut() {
+            *cell = f64::INFINITY;
+        }
+        if sc_next == usize::MAX {
+            // The whole row pruned: every path now exceeds the cutoff.
+            return f64::INFINITY;
+        }
+        sc = sc_next;
+        ec = ec_next;
+        std::mem::swap(&mut prev, &mut curr);
+        // Cell above the band's top edge may be read as `up` next row.
+        if jhi + 2 <= lb {
+            prev[jhi + 2] = f64::INFINITY;
+        }
+    }
+    let v = prev[lb];
+    // With pruning, a finite value above the cutoff may reflect a
+    // detour around pruned cells rather than the true distance; the
+    // true distance provably exceeds the cutoff in that case.
+    if v > cutoff {
+        f64::INFINITY
+    } else {
+        v
+    }
 }
 
 /// Full banded cost matrix `D_w` (paper Figure 4). Cells outside the
@@ -255,6 +428,58 @@ mod tests {
             assert_eq!(dtw_ea::<Squared>(&A, &B, w, f64::INFINITY), full);
             assert_eq!(dtw_ea::<Squared>(&A, &B, w, full), full); // row_min > cutoff is strict
         }
+    }
+
+    #[test]
+    fn pruned_matches_plain_dtw_or_abandons_correctly() {
+        // Dense grid of cutoffs around the true distance: finite results
+        // must be bit-equal to `dtw`, INFINITY only above the cutoff.
+        for w in [0usize, 1, 2, 5, 10] {
+            let full = dtw::<Squared>(&A, &B, w);
+            for mult in [0.0, 0.25, 0.5, 0.9, 0.999, 1.0, 1.001, 1.5, 10.0] {
+                let cutoff = full * mult;
+                let got = dtw_ea_pruned::<Squared>(&A, &B, w, cutoff, None);
+                if full > cutoff {
+                    assert!(got.is_infinite(), "w={w} mult={mult}: {got}");
+                } else {
+                    assert_eq!(got, full, "w={w} mult={mult}");
+                }
+            }
+            assert_eq!(dtw_ea_pruned::<Squared>(&A, &B, w, f64::INFINITY, None), full);
+        }
+    }
+
+    #[test]
+    fn pruned_with_keogh_tail_stays_exact() {
+        use crate::bounds::{keogh, PreparedSeries};
+        for w in [0usize, 1, 2, 5] {
+            let t = PreparedSeries::prepare(B.to_vec(), w);
+            let mut tail = Vec::new();
+            let lb = keogh::lb_keogh_tail::<Squared>(&A, &t.lo, &t.up, &mut tail);
+            let full = dtw::<Squared>(&A, &B, w);
+            assert!(lb <= full + 1e-9, "tail[0] is a valid lower bound");
+            for cutoff in [full * 0.5, full, full * 2.0] {
+                let got = dtw_ea_pruned::<Squared>(&A, &B, w, cutoff, Some(&tail));
+                if full > cutoff {
+                    assert!(got.is_infinite(), "w={w} cutoff={cutoff}");
+                } else {
+                    assert_eq!(got, full, "w={w} cutoff={cutoff}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pruned_single_row_and_lockstep_edges() {
+        let a = [1.5];
+        let b = [0.5, 1.0, 2.0];
+        let full = dtw::<Absolute>(&a, &b, 5);
+        assert_eq!(dtw_ea_pruned::<Absolute>(&a, &b, 5, full + 1.0, None), full);
+        assert!(dtw_ea_pruned::<Absolute>(&a, &b, 5, full * 0.5, None).is_infinite());
+        // w = 0 forces the diagonal.
+        let full0 = dtw::<Squared>(&A, &B, 0);
+        assert_eq!(dtw_ea_pruned::<Squared>(&A, &B, 0, full0, None), full0);
+        assert!(dtw_ea_pruned::<Squared>(&A, &B, 0, full0 * 0.99, None).is_infinite());
     }
 
     #[test]

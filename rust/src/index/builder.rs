@@ -18,7 +18,7 @@ use super::{DtwIndex, IndexConfig};
 ///
 /// Defaults: window `max(1, ℓ/10)`, `LB_Webb`, [`SearchStrategy::Sorted`],
 /// [`BackendKind::Native`] batched prefilter, no z-normalization,
-/// `max_batch = 16`.
+/// `max_batch = 16`, single-threaded search.
 #[derive(Debug, Clone)]
 pub struct DtwIndexBuilder {
     series: Vec<Vec<f64>>,
@@ -30,6 +30,7 @@ pub struct DtwIndexBuilder {
     max_batch: usize,
     znorm: bool,
     seed: u64,
+    threads: usize,
 }
 
 impl DtwIndexBuilder {
@@ -44,6 +45,7 @@ impl DtwIndexBuilder {
             max_batch: 16,
             znorm: false,
             seed: 0x5EED,
+            threads: 1,
         }
     }
 
@@ -108,6 +110,18 @@ impl DtwIndexBuilder {
         self
     }
 
+    /// Worker threads for search (default 1 = serial; `0` = the
+    /// machine's available parallelism). With `threads > 1` a searcher
+    /// screens candidates in parallel with a shared best-so-far cutoff
+    /// and the batched prefilter scores query rows in parallel — the
+    /// returned neighbors are **identical at every thread count** (only
+    /// the work counters are scheduling-dependent). Per-query override:
+    /// [`super::QueryOptions::with_threads`].
+    pub fn threads(mut self, threads: usize) -> DtwIndexBuilder {
+        self.threads = threads;
+        self
+    }
+
     /// Validate and build: prepares every series' envelopes once (the
     /// paper's off-query-path preparation step).
     ///
@@ -133,16 +147,48 @@ impl DtwIndexBuilder {
             None => vec![0; n],
         };
         let w = self.window.unwrap_or_else(|| (l / 10).max(1));
-        let series = self
-            .series
-            .into_iter()
-            .map(|mut values| {
-                if self.znorm {
-                    znormalize(&mut values);
+        // Envelope preparation is embarrassingly parallel over series —
+        // with a threads knob set, the build itself uses it too.
+        let exec = crate::exec::Executor::new(self.threads);
+        let series: Vec<PreparedSeries> = if exec.threads() > 1 && n > 1 {
+            // Ownership of each series moves into its worker (mem::take
+            // through the per-slot lock) — no second copy of the
+            // training data, unlike a clone-per-series scheme.
+            let inputs: Vec<std::sync::Mutex<Vec<f64>>> = self
+                .series
+                .into_iter()
+                .map(|mut values| {
+                    if self.znorm {
+                        znormalize(&mut values);
+                    }
+                    std::sync::Mutex::new(values)
+                })
+                .collect();
+            let slots: Vec<std::sync::Mutex<Option<PreparedSeries>>> =
+                (0..n).map(|_| std::sync::Mutex::new(None)).collect();
+            exec.run(n, 4, |_wid, queue| {
+                while let Some(range) = queue.next_chunk() {
+                    for i in range {
+                        let values = std::mem::take(&mut *inputs[i].lock().unwrap());
+                        *slots[i].lock().unwrap() = Some(PreparedSeries::prepare(values, w));
+                    }
                 }
-                PreparedSeries::prepare(values, w)
-            })
-            .collect();
+            });
+            slots
+                .into_iter()
+                .map(|slot| slot.into_inner().unwrap().expect("every slot filled"))
+                .collect()
+        } else {
+            self.series
+                .into_iter()
+                .map(|mut values| {
+                    if self.znorm {
+                        znormalize(&mut values);
+                    }
+                    PreparedSeries::prepare(values, w)
+                })
+                .collect()
+        };
         Ok(DtwIndex {
             train: Arc::new(PreparedTrainSet { labels, series, w }),
             config: IndexConfig {
@@ -152,6 +198,7 @@ impl DtwIndexBuilder {
                 max_batch: self.max_batch,
                 znorm: self.znorm,
                 seed: self.seed,
+                threads: self.threads,
             },
         })
     }

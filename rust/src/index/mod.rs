@@ -49,9 +49,11 @@ use crate::data::znorm::znormalized;
 use crate::data::Dataset;
 use crate::delta::{Delta, Squared};
 use crate::dtw::dtw_ea;
-use crate::runtime::{BackendKind, LbBackend, NativeBatchLb};
+use crate::exec::Executor;
+use crate::runtime::{BackendKind, LbBackend, NativeBatchLb, Ranking};
 use crate::search::knn::{
-    knn_brute_force, knn_random_order, knn_sorted, knn_sorted_precomputed, KnnParams,
+    knn_brute_force, knn_parallel, knn_random_order, knn_sorted, knn_sorted_precomputed,
+    KnnParams,
 };
 use crate::search::nn::NnResult;
 use crate::search::{PreparedTrainSet, SearchStrategy};
@@ -65,6 +67,7 @@ pub(crate) struct IndexConfig {
     pub(crate) max_batch: usize,
     pub(crate) znorm: bool,
     pub(crate) seed: u64,
+    pub(crate) threads: usize,
 }
 
 /// An immutable DTW nearest-neighbor index: prepared training envelopes
@@ -130,6 +133,12 @@ impl DtwIndex {
         self.config.max_batch
     }
 
+    /// The configured search thread count (`0` = machine parallelism,
+    /// `1` = serial).
+    pub fn threads(&self) -> usize {
+        self.config.threads
+    }
+
     /// True when the index z-normalizes its series and (by default)
     /// every query/window.
     pub fn znormalizes(&self) -> bool {
@@ -151,13 +160,23 @@ impl DtwIndex {
         out
     }
 
+    /// A cheap handle with a different search thread count (shares the
+    /// prepared data; `0` = machine parallelism, `1` = serial).
+    pub fn with_threads(&self, threads: usize) -> DtwIndex {
+        let mut out = self.clone();
+        out.config.threads = threads;
+        out
+    }
+
     /// A per-thread query handle. The searcher carries the scratch
     /// buffers and (for [`BackendKind::Native`]) a fresh batched
     /// prefilter; PJRT backends must be attached explicitly with
     /// [`Searcher::set_backend`] inside the owning thread.
     pub fn searcher(&self) -> Searcher {
         let backend: Option<Box<dyn LbBackend>> = match self.config.backend {
-            BackendKind::Native => Some(Box::new(NativeBatchLb::new())),
+            BackendKind::Native => {
+                Some(Box::new(NativeBatchLb::with_threads(self.config.threads)))
+            }
             BackendKind::None => None,
             BackendKind::Pjrt => {
                 // Loud on purpose: without an explicit attach this
@@ -178,6 +197,7 @@ impl DtwIndex {
             bound_buf: Vec::new(),
             index_buf: Vec::new(),
             order: Vec::new(),
+            ranking: Ranking::default(),
             rng: Rng::seeded(self.config.seed),
             backend,
         }
@@ -234,6 +254,9 @@ pub struct Searcher {
     bound_buf: Vec<f64>,
     index_buf: Vec<usize>,
     order: Vec<usize>,
+    /// Reused across batch executions (flat bound matrix + per-query
+    /// candidate orders) — the batch hot path allocates nothing per call.
+    ranking: Ranking,
     rng: Rng,
     backend: Option<Box<dyn LbBackend>>,
 }
@@ -294,6 +317,22 @@ impl Searcher {
             SearchStrategy::SortedPrecomputed => SearchStrategy::Sorted,
             s => s,
         };
+        // Multi-threaded candidate screening (identical results at any
+        // thread count — see `search::knn::knn_parallel`). Brute force
+        // stays serial: it is the oracle baseline.
+        let exec = Executor::new(opts.threads.unwrap_or(cfg.threads));
+        if exec.threads() > 1 && strategy != SearchStrategy::BruteForce && !train.is_empty() {
+            let owned = if znorm { znormalized(values) } else { values.to_vec() };
+            let pq = cfg.bound.prepare_query(owned, train.w);
+            let (results, stats) = knn_parallel::<D>(&pq, train, cfg.bound, &params, &exec);
+            return QueryOutcome {
+                neighbors: results.into_iter().map(Neighbor::from).collect(),
+                stats,
+                strategy,
+                batched: false,
+                latency: started.elapsed(),
+            };
+        }
         let (results, stats) = match strategy {
             SearchStrategy::BruteForce => {
                 if znorm {
@@ -474,13 +513,11 @@ impl Searcher {
         } else {
             vec![f64::INFINITY; q_views.len()]
         };
-        let ranking = match backend.rank(&q_views, &train.series, &seeds) {
-            Ok(r) => r,
-            Err(e) => {
-                log::warn!("batch prefilter failed ({e:#}); falling back to scalar");
-                return self.scalar_fallback::<D>(&q_views, opts);
-            }
-        };
+        if let Err(e) = backend.rank_into(&q_views, &train.series, &seeds, &mut self.ranking) {
+            log::warn!("batch prefilter failed ({e:#}); falling back to scalar");
+            return self.scalar_fallback::<D>(&q_views, opts);
+        }
+        let ranking = &self.ranking;
         let prefilter_each = started.elapsed() / q_views.len() as u32;
 
         let mut out = Vec::with_capacity(q_views.len());
@@ -506,6 +543,7 @@ impl Searcher {
                 &ranking.order[qi],
                 initial,
                 &params,
+                &mut self.scratch.tail,
             );
             // The seed distance was one real DTW execution for this query.
             if seeds[qi].is_finite() {

@@ -20,11 +20,19 @@ pub struct QueryOptions {
     pub znorm: Option<bool>,
     /// Training index to exclude (self-match exclusion, e.g. LOOCV).
     pub exclude: Option<usize>,
+    /// Worker threads for candidate screening on this query (`0` = the
+    /// machine's parallelism, `1` = serial); `None` inherits the
+    /// index-level [`crate::index::DtwIndexBuilder::threads`] setting.
+    /// Results are identical at every thread count. Applies to the
+    /// scalar search paths; a query that rides a **batched** prefilter
+    /// execution is parallelized by the backend's own thread setting
+    /// (the index-level knob), not this per-query override.
+    pub threads: Option<usize>,
 }
 
 impl Default for QueryOptions {
     fn default() -> Self {
-        QueryOptions { k: 1, abandon_at: None, znorm: None, exclude: None }
+        QueryOptions { k: 1, abandon_at: None, znorm: None, exclude: None, threads: None }
     }
 }
 
@@ -49,6 +57,12 @@ impl QueryOptions {
     /// Exclude one training series (self-match exclusion).
     pub fn with_exclude(mut self, index: usize) -> QueryOptions {
         self.exclude = Some(index);
+        self
+    }
+
+    /// Screen candidates on `threads` workers for this query.
+    pub fn with_threads(mut self, threads: usize) -> QueryOptions {
+        self.threads = Some(threads);
         self
     }
 }

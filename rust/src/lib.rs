@@ -54,8 +54,14 @@
 //! ## Layers
 //!
 //! * **DTW** itself ([`dtw`]): windowed dynamic time warping with `O(w)`
-//!   memory, early abandoning, full cost matrices and warping-path
-//!   extraction.
+//!   memory, early abandoning, cell pruning with cumulative-lower-bound
+//!   tails (`dtw_ea_pruned` — the kernel behind every search path),
+//!   full cost matrices and warping-path extraction.
+//! * **Parallel substrate** ([`exec`]): a dependency-free scoped
+//!   thread-pool with a dynamically-chunked work queue, threaded through
+//!   `DtwIndexBuilder::threads(n)` — candidate screening, batched
+//!   prefilter rows and stream window scoring all scale across cores
+//!   with **identical results at every thread count**.
 //! * **The complete lower-bound family** ([`bounds`]): the paper's four new
 //!   bounds — `LB_PETITJEAN`, `LB_WEBB`, `LB_WEBB*`, `LB_WEBB_ENHANCED` —
 //!   and every baseline it compares against (`LB_KIM`, `LB_KEOGH`,
@@ -119,6 +125,7 @@ pub mod coordinator;
 pub mod data;
 pub mod delta;
 pub mod dtw;
+pub mod exec;
 pub mod experiments;
 pub mod index;
 pub mod metrics;

@@ -5,7 +5,7 @@
 //! * `tightness`   — §6.1 tightness experiment (Figures 1, 2, 15–18).
 //! * `nn`          — §6.2 NN timing (Figures 19–28).
 //! * `knn`         — k-nearest-neighbor queries through the `DtwIndex`
-//!   facade (`--k`, `--bound`, `--strategy`).
+//!   facade (`--k`, `--bound`, `--strategy`, `--threads`).
 //! * `sweep`       — §6.3 window sweep (Tables 1–3, Figures 29–30).
 //! * `ablation`    — §7 left/right-path ablation (Figures 31–34).
 //! * `stream`      — streaming subsequence search: slide index-length
@@ -14,7 +14,7 @@
 //!   (and/or the `--k` best windows), with per-stage cascade stats.
 //! * `serve`       — start the NN search server (router + batched
 //!   prefilter; `--backend native|pjrt|none`, `--k` for a default k-NN
-//!   depth).
+//!   depth, `--threads` for parallel candidate screening).
 //! * `info`        — build/backend/artifact report.
 //!
 //! Run `dtw-bounds <cmd> --help-args` to see each command's options.
@@ -276,14 +276,16 @@ fn cmd_knn(args: &Args) -> Result<()> {
     let bound = BoundKind::parse(&args.str_or("bound", "webb")).context("bad --bound")?;
     let strategy = SearchStrategy::parse(&args.str_or("strategy", "sorted"))
         .context("--strategy must be sorted|random|precomputed|brute")?;
+    let threads = args.parse_or::<usize>("threads", 1);
     let index = DtwIndex::builder_from_dataset(ds)
         .window(args.parse_or::<usize>("window", ds.window.max(1)))
         .bound(bound)
         .strategy(strategy)
+        .threads(threads)
         .build()?;
     let queries = args.parse_or::<usize>("queries", 5).min(ds.test.len());
     println!(
-        "dataset {} (l={}, n={}, w={}), bound={bound}, strategy={strategy}, k={k}",
+        "dataset {} (l={}, n={}, w={}), bound={bound}, strategy={strategy}, k={k}, threads={threads}",
         ds.name,
         ds.series_len(),
         index.len(),
@@ -324,6 +326,7 @@ fn cmd_stream(args: &Args) -> Result<()> {
     let ds = archive.get(idx).context("--dataset index out of range")?;
     let index = DtwIndex::builder_from_dataset(ds)
         .window(args.parse_or::<usize>("window", ds.window.max(1)))
+        .threads(args.parse_or::<usize>("threads", 1))
         .build()?;
 
     let mut opts = SubsequenceOptions::default().with_hop(args.parse_or::<usize>("hop", 1));
@@ -453,6 +456,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if default_k == 0 {
         bail!("--k must be >= 1");
     }
+    // Search worker threads: 1 = serial (default), 0 = machine
+    // parallelism; overridable per request via the `threads=` prefix.
+    let threads = args.parse_or::<usize>("threads", 1);
     // Validate --backend even when --no-batch overrides it, so typos
     // never slip through silently.
     let spelled = args.str_or("backend", "native");
@@ -476,6 +482,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .bound(bound)
         .backend(BackendKind::None) // attached per kind in the factory
         .max_batch(max_batch)
+        .threads(threads)
         .build()?;
     let factory_index = index.clone();
     let factory = move || {
@@ -501,7 +508,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     )?;
     println!(
         "serving dataset {} (l={}, n={}, w={w}, bound={bound}, backend={backend}, \
-         default k={default_k}) on {}",
+         default k={default_k}, threads={threads}) on {}",
         ds.name,
         ds.series_len(),
         index.len(),

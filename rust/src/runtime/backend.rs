@@ -7,23 +7,112 @@
 //! 1. **Prepare once** — candidate envelopes arrive as
 //!    [`PreparedSeries`], computed once per training set (the paper's
 //!    experimental protocol: envelope preparation is off the query path).
-//! 2. **Bound matrix** — [`LbBackend::compute`] returns `out[q][t]` with
-//!    `out[q][t] ≤ DTW_w(queries[q], train[t])` for δ = squared
-//!    difference. An entry may be *partial* (early-abandoned) once it
-//!    exceeds `cutoffs[q]`: a partial sum of non-negative allowances is
-//!    still a valid lower bound, so downstream search stays exact.
-//! 3. **Rank** — [`LbBackend::rank`] argsorts each query's row ascending:
-//!    the candidate visiting order of the paper's Algorithm 4.
+//! 2. **Bound matrix** — [`LbBackend::compute_into`] fills a flat
+//!    row-major [`BoundMatrix`] with `out[q][t] ≤ DTW_w(queries[q],
+//!    train[t])` for δ = squared difference. An entry may be *partial*
+//!    (early-abandoned) once it exceeds `cutoffs[q]`: a partial sum of
+//!    non-negative allowances is still a valid lower bound, so
+//!    downstream search stays exact. The matrix is caller-owned and
+//!    reused across calls — the batch hot path allocates nothing per
+//!    execution.
+//! 3. **Rank** — [`LbBackend::rank_into`] argsorts each query's row
+//!    ascending: the candidate visiting order of the paper's
+//!    Algorithm 4.
 
 use crate::bounds::PreparedSeries;
 
+/// A flat row-major `queries × candidates` bound matrix: one
+/// allocation, reused across batch executions (`row(q)` is the per-query
+/// view the sorted walk consumes). Indexing with `m[q]` yields the row,
+/// so `m[q][t]` reads like the old nested-`Vec` layout.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct BoundMatrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl BoundMatrix {
+    /// An empty matrix (no allocation until first use).
+    pub fn new() -> BoundMatrix {
+        BoundMatrix::default()
+    }
+
+    /// Reshape to `rows × cols`, zero-filled, reusing the allocation
+    /// when it is already large enough.
+    pub fn reset(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.clear();
+        self.data.resize(rows * cols, 0.0);
+    }
+
+    /// Number of rows (queries). Named `len` to mirror the nested-`Vec`
+    /// layout this replaced.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.rows
+    }
+
+    /// True when the matrix has no rows.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.rows == 0
+    }
+
+    /// Number of columns (candidates).
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Row `q` as a slice (one bound per candidate).
+    #[inline]
+    pub fn row(&self, q: usize) -> &[f64] {
+        &self.data[q * self.cols..(q + 1) * self.cols]
+    }
+
+    /// Mutable row `q`.
+    #[inline]
+    pub fn row_mut(&mut self, q: usize) -> &mut [f64] {
+        &mut self.data[q * self.cols..(q + 1) * self.cols]
+    }
+
+    /// Iterate over rows.
+    pub fn iter_rows(&self) -> impl Iterator<Item = &[f64]> {
+        self.data.chunks_exact(self.cols.max(1)).take(self.rows)
+    }
+
+    /// The flat row-major storage.
+    #[inline]
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// The flat row-major storage, mutable (rows are disjoint
+    /// `cols`-sized windows — what the parallel fill writes through).
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+}
+
+impl std::ops::Index<usize> for BoundMatrix {
+    type Output = [f64];
+    #[inline]
+    fn index(&self, q: usize) -> &[f64] {
+        self.row(q)
+    }
+}
+
 /// Result of [`LbBackend::rank`]: the bound matrix plus, per query, the
-/// candidate indices in ascending-bound order.
+/// candidate indices in ascending-bound order. Reused across batches via
+/// [`LbBackend::rank_into`].
 #[derive(Debug, Clone, Default)]
 pub struct Ranking {
     /// `bounds[q][t]`: `LB_KEOGH` of query `q` vs candidate `t`
     /// (possibly a partial, early-abandoned sum — still a lower bound).
-    pub bounds: Vec<Vec<f64>>,
+    pub bounds: BoundMatrix,
     /// `order[q]`: candidate indices sorted by ascending `bounds[q]`.
     pub order: Vec<Vec<usize>>,
 }
@@ -33,6 +122,8 @@ pub struct Ranking {
 /// Backends are owned by one engine and called from one thread (PJRT
 /// handles are not `Send`, so the trait deliberately does not require
 /// it); the engine itself lives inside the router's dispatch thread.
+/// Backends may fan work out internally (see
+/// [`super::NativeBatchLb::with_threads`]).
 pub trait LbBackend {
     /// Short name for logs and the CLI (`native`, `pjrt`, …).
     fn name(&self) -> &'static str;
@@ -42,49 +133,80 @@ pub trait LbBackend {
     /// artifacts) reject workloads larger than their compiled shape.
     fn supports(&self, batch: usize, rows: usize, len: usize) -> bool;
 
-    /// Whether [`LbBackend::compute`] honours per-query `cutoffs` (row
-    /// early-abandoning). Branch-free fused backends return `false`, and
-    /// the engine then skips paying for seed DTWs that would buy
-    /// nothing. Defaults to `true`.
+    /// Whether [`LbBackend::compute_into`] honours per-query `cutoffs`
+    /// (row early-abandoning). Branch-free fused backends return
+    /// `false`, and the engine then skips paying for seed DTWs that
+    /// would buy nothing. Defaults to `true`.
     fn uses_cutoffs(&self) -> bool {
         true
     }
 
-    /// Compute the bound matrix `out[q][t] = LB_KEOGH(queries[q],
-    /// train[t])` under the squared-difference δ.
+    /// Fill `out` (reshaped to `queries.len() × train.len()`) with the
+    /// bound matrix `out[q][t] = LB_KEOGH(queries[q], train[t])` under
+    /// the squared-difference δ.
     ///
     /// `cutoffs[q]` is the per-query best-so-far DTW distance
-    /// (`f64::INFINITY` disables abandoning); backends may return partial
+    /// (`f64::INFINITY` disables abandoning); backends may leave partial
     /// sums above it. All series must share one length.
+    fn compute_into(
+        &mut self,
+        queries: &[&[f64]],
+        train: &[PreparedSeries],
+        cutoffs: &[f64],
+        out: &mut BoundMatrix,
+    ) -> anyhow::Result<()>;
+
+    /// Allocating convenience over [`LbBackend::compute_into`].
     fn compute(
         &mut self,
         queries: &[&[f64]],
         train: &[PreparedSeries],
         cutoffs: &[f64],
-    ) -> anyhow::Result<Vec<Vec<f64>>>;
+    ) -> anyhow::Result<BoundMatrix> {
+        let mut out = BoundMatrix::new();
+        self.compute_into(queries, train, cutoffs, &mut out)?;
+        Ok(out)
+    }
 
-    /// Compute the matrix, then argsort each query's row ascending — the
-    /// visiting order of Algorithm 4. Provided for all backends; the
-    /// facade's batched path consumes this (the per-query walk happens in
-    /// `search::knn::knn_sorted_precomputed`).
+    /// Compute the matrix into `out.bounds`, then argsort each query's
+    /// row ascending into `out.order` — the visiting order of
+    /// Algorithm 4. Reuses `out`'s allocations across batches; the
+    /// facade's batched path consumes this (the per-query walk happens
+    /// in `search::knn::knn_sorted_precomputed`).
+    fn rank_into(
+        &mut self,
+        queries: &[&[f64]],
+        train: &[PreparedSeries],
+        cutoffs: &[f64],
+        out: &mut Ranking,
+    ) -> anyhow::Result<()> {
+        self.compute_into(queries, train, cutoffs, &mut out.bounds)?;
+        let nq = out.bounds.len();
+        out.order.truncate(nq);
+        while out.order.len() < nq {
+            out.order.push(Vec::new());
+        }
+        for (q, order) in out.order.iter_mut().enumerate() {
+            let row = out.bounds.row(q);
+            order.clear();
+            order.extend(0..row.len());
+            order.sort_unstable_by(|&a, &b| {
+                row[a].partial_cmp(&row[b]).expect("bounds are never NaN")
+            });
+        }
+        Ok(())
+    }
+
+    /// Allocating convenience over [`LbBackend::rank_into`].
     fn rank(
         &mut self,
         queries: &[&[f64]],
         train: &[PreparedSeries],
         cutoffs: &[f64],
     ) -> anyhow::Result<Ranking> {
-        let bounds = self.compute(queries, train, cutoffs)?;
-        let order = bounds
-            .iter()
-            .map(|row| {
-                let mut idx: Vec<usize> = (0..row.len()).collect();
-                idx.sort_unstable_by(|&a, &b| {
-                    row[a].partial_cmp(&row[b]).expect("bounds are never NaN")
-                });
-                idx
-            })
-            .collect();
-        Ok(Ranking { bounds, order })
+        let mut out = Ranking::default();
+        self.rank_into(queries, train, cutoffs, &mut out)?;
+        Ok(out)
     }
 }
 
@@ -156,8 +278,26 @@ mod tests {
         }
     }
 
+    #[test]
+    fn bound_matrix_shapes_and_rows() {
+        let mut m = BoundMatrix::new();
+        assert!(m.is_empty());
+        m.reset(2, 3);
+        assert_eq!((m.len(), m.cols()), (2, 3));
+        m.row_mut(0).copy_from_slice(&[3.0, 1.0, 2.0]);
+        m.row_mut(1).copy_from_slice(&[0.0, 5.0, 4.0]);
+        assert_eq!(&m[0], &[3.0, 1.0, 2.0]);
+        assert_eq!(m[1][1], 5.0);
+        let rows: Vec<&[f64]> = m.iter_rows().collect();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[1], &[0.0, 5.0, 4.0]);
+        // Reset reuses the allocation and re-zeroes.
+        m.reset(1, 2);
+        assert_eq!(&m[0], &[0.0, 0.0]);
+    }
+
     /// A backend that returns a fixed matrix — exercises the provided
-    /// `rank` argsort.
+    /// `rank` argsort and the reusable `rank_into` path.
     struct Fixed(Vec<Vec<f64>>);
 
     impl LbBackend for Fixed {
@@ -167,13 +307,19 @@ mod tests {
         fn supports(&self, _b: usize, _n: usize, _l: usize) -> bool {
             true
         }
-        fn compute(
+        fn compute_into(
             &mut self,
             _queries: &[&[f64]],
             _train: &[PreparedSeries],
             _cutoffs: &[f64],
-        ) -> anyhow::Result<Vec<Vec<f64>>> {
-            Ok(self.0.clone())
+            out: &mut BoundMatrix,
+        ) -> anyhow::Result<()> {
+            let cols = self.0.first().map(|r| r.len()).unwrap_or(0);
+            out.reset(self.0.len(), cols);
+            for (q, row) in self.0.iter().enumerate() {
+                out.row_mut(q).copy_from_slice(row);
+            }
+            Ok(())
         }
     }
 
@@ -184,5 +330,14 @@ mod tests {
         let r = be.rank(&[], &[], &[]).unwrap();
         assert_eq!(r.order, vec![vec![1, 2, 0], vec![0, 2, 1]]);
         assert_eq!(r.bounds[0][r.order[0][0]], 1.0);
+
+        // rank_into reuses buffers across calls.
+        let mut reused = Ranking::default();
+        be.rank_into(&[], &[], &[], &mut reused).unwrap();
+        assert_eq!(reused.order, r.order);
+        be.0 = vec![vec![1.0, 0.0]];
+        be.rank_into(&[], &[], &[], &mut reused).unwrap();
+        assert_eq!(reused.order, vec![vec![1, 0]]);
+        assert_eq!(reused.bounds.len(), 1);
     }
 }

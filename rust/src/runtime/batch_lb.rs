@@ -25,7 +25,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use super::backend::LbBackend;
+use super::backend::{BoundMatrix, LbBackend};
 use super::client::{LoadedComputation, XlaRuntime};
 use super::{read_manifest, ManifestEntry};
 use crate::bounds::PreparedSeries;
@@ -163,15 +163,21 @@ impl LbBackend for BatchLb {
     /// One XLA execution for the whole batch. The kernel is branch-free,
     /// so `cutoffs` cannot shorten rows — they are accepted (trait
     /// contract) and ignored.
-    fn compute(
+    fn compute_into(
         &mut self,
         queries: &[&[f64]],
         train: &[PreparedSeries],
         _cutoffs: &[f64],
-    ) -> Result<Vec<Vec<f64>>> {
+        out: &mut BoundMatrix,
+    ) -> Result<()> {
         let lo_refs: Vec<&[f64]> = train.iter().map(|t| t.lo.as_slice()).collect();
         let up_refs: Vec<&[f64]> = train.iter().map(|t| t.up.as_slice()).collect();
-        self.compute_matrix(queries, &lo_refs, &up_refs)
+        let m = self.compute_matrix(queries, &lo_refs, &up_refs)?;
+        out.reset(queries.len(), train.len());
+        for (q, row) in m.iter().enumerate() {
+            out.row_mut(q).copy_from_slice(row);
+        }
+        Ok(())
     }
 }
 

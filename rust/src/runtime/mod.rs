@@ -10,8 +10,12 @@
 //!   implements, plus [`BackendKind`] for CLI selection. This is the seam
 //!   future scaling work (sharding, GPU, multi-node) plugs into.
 //! * [`native`] — [`NativeBatchLb`]: the **default** backend. Pure Rust,
-//!   dependency-free, cache-blocked over candidates, early-abandoning
-//!   against per-query cutoffs.
+//!   dependency-free, streaming a flat 64-byte-aligned SoA envelope
+//!   store ([`crate::bounds::store::EnvelopeStore`]) with a 4-lane
+//!   unrolled kernel, early-abandoning against per-query cutoffs, and
+//!   optionally scoring query rows in parallel
+//!   ([`NativeBatchLb::with_threads`]). Results land in a reusable flat
+//!   [`BoundMatrix`] — no per-call nested allocation.
 //! * [`client`] / [`batch_lb`] (cargo feature `pjrt`) — the PJRT/XLA
 //!   backend: loads AOT-compiled artifacts produced by the Python build
 //!   layer (`python/compile/aot.py`; the hot inner loop is the Pallas
@@ -53,7 +57,7 @@ pub mod batch_lb;
 #[cfg(feature = "pjrt")]
 pub mod client;
 
-pub use backend::{BackendKind, LbBackend, Ranking};
+pub use backend::{BackendKind, BoundMatrix, LbBackend, Ranking};
 pub use native::NativeBatchLb;
 
 #[cfg(feature = "pjrt")]

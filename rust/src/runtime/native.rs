@@ -1,62 +1,110 @@
 //! [`NativeBatchLb`] — the default pure-Rust batched `LB_KEOGH` backend.
 //!
-//! Scores a whole query batch against a whole training set with the same
-//! scalar kernel the per-query path uses ([`keogh::lb_keogh`]), so its
-//! values are **bit-identical** to Algorithm 4's screening values. Two
-//! batch-level optimisations on top of the kernel:
+//! Scores a whole query batch against a whole training set with a
+//! kernel whose full sums are **bit-identical** to the scalar
+//! per-query path ([`keogh::lb_keogh`]), so its values match
+//! Algorithm 4's screening values exactly. Three batch-level
+//! optimisations on top of the kernel:
 //!
-//! * **Cache blocking over candidates** — candidates are processed in
-//!   blocks of [`NativeBatchLb::block`]; within a block the sweep is
-//!   query-major, so each candidate's envelope pair (`lo`/`up` — the only
-//!   per-pair data the kernel touches) stays cache-resident across every
-//!   query in the batch instead of being streamed `batch` times.
+//! * **Flat SoA envelopes** — on first contact with a training set the
+//!   backend packs its envelopes into an
+//!   [`EnvelopeStore`](crate::bounds::store::EnvelopeStore): all `lo`
+//!   rows contiguous, then all `up` rows, one 64-byte-aligned
+//!   allocation. The inner kernel ([`keogh::lb_keogh_flat`], 4-lane
+//!   unrolled) streams two sequential rows per pair instead of
+//!   pointer-chasing per-candidate `Vec`s. The store is cached across
+//!   calls (an index's training set is immutable).
+//! * **Flat output** — results land in a caller-provided row-major
+//!   [`BoundMatrix`]; the batch hot path performs no per-call
+//!   `Vec<Vec<f64>>` allocation.
 //! * **Early-abandon rows** — with a finite `cutoffs[q]` (the engine
 //!   seeds it with the query's DTW distance to its first candidate), a
 //!   row's accumulation stops as soon as it exceeds the cutoff. The
 //!   partial sum is still a valid lower bound, so sorted search stays
 //!   exact; candidates that would be pruned anyway never pay the full
 //!   `O(ℓ)` scan.
+//!
+//! With [`NativeBatchLb::with_threads`] `> 1`, query rows are scored in
+//! parallel on an [`Executor`] — rows are independent, so the bound
+//! matrix is byte-identical at every thread count.
 
 use anyhow::{ensure, Result};
 
+use crate::bounds::store::EnvelopeStore;
 use crate::bounds::{keogh, PreparedSeries};
 use crate::delta::Squared;
+use crate::exec::Executor;
 
-use super::backend::LbBackend;
+use super::backend::{BoundMatrix, LbBackend};
 
-/// Default candidates per cache block: a block's envelopes cost
-/// `2 · ℓ · 8 · block` bytes, so 16 keeps even ℓ = 512 within 128 KiB —
-/// L2-resident on any current core.
-const DEFAULT_BLOCK: usize = 16;
+/// Queries per work-queue chunk when the row fill runs parallel: small
+/// enough to balance uneven early-abandon costs, large enough to
+/// amortize the queue pop.
+const QUERY_CHUNK: usize = 2;
 
 /// The pure-Rust batched `LB_KEOGH` backend (always available; no
 /// artifacts, no external runtime).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct NativeBatchLb {
-    block: usize,
+    exec: Executor,
+    store: EnvelopeStore,
+    /// Identity of the training slice the store was built from:
+    /// `(ptr, len, series_len, window, fingerprint)` — the fingerprint
+    /// folds per-series envelope spot values so that a *different*
+    /// training set reallocated at the same address (same shape) still
+    /// misses the cache. O(n) to recheck per call, vs O(n·ℓ) to rebuild.
+    store_key: Option<(usize, usize, usize, usize, u64)>,
+}
+
+/// Order-sensitive FNV-style fold over every series' first lower- and
+/// last upper-envelope values (bit patterns, so NaN/−0.0 are exact).
+fn train_fingerprint(train: &[PreparedSeries]) -> u64 {
+    const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for (t, s) in train.iter().enumerate() {
+        let a = s.lo.first().map(|v| v.to_bits()).unwrap_or(0);
+        let b = s.up.last().map(|v| v.to_bits()).unwrap_or(0);
+        h = (h ^ a.wrapping_add(t as u64)).wrapping_mul(FNV_PRIME);
+        h = (h ^ b).wrapping_mul(FNV_PRIME);
+    }
+    h
 }
 
 impl NativeBatchLb {
-    /// Backend with the default block size.
+    /// Backend with serial row fill.
     pub fn new() -> NativeBatchLb {
-        NativeBatchLb { block: DEFAULT_BLOCK }
+        NativeBatchLb { exec: Executor::serial(), store: EnvelopeStore::new(), store_key: None }
     }
 
-    /// Backend with an explicit candidate block size (≥ 1) — a
-    /// benchmarking knob.
-    pub fn with_block(block: usize) -> NativeBatchLb {
-        NativeBatchLb { block: block.max(1) }
+    /// Backend scoring query rows on `threads` workers (`0` = machine
+    /// parallelism, `1` = serial). The matrix is identical at every
+    /// thread count — rows are independent.
+    pub fn with_threads(threads: usize) -> NativeBatchLb {
+        NativeBatchLb { exec: Executor::new(threads), ..NativeBatchLb::new() }
     }
 
-    /// The candidate block size.
-    pub fn block(&self) -> usize {
-        self.block
-    }
-}
-
-impl Default for NativeBatchLb {
-    fn default() -> Self {
+    /// Compatibility constructor from the cache-blocked era: the block
+    /// knob is gone (the SoA store made candidate blocking moot — every
+    /// pair streams two contiguous rows), so this is `new()`.
+    #[deprecated(since = "0.5.0", note = "blocking is obsolete under the SoA store; use new()")]
+    pub fn with_block(_block: usize) -> NativeBatchLb {
         NativeBatchLb::new()
+    }
+
+    /// The worker count the row fill uses.
+    pub fn threads(&self) -> usize {
+        self.exec.threads()
+    }
+
+    /// Ensure the SoA envelope store mirrors `train`, rebuilding on
+    /// first contact or when the training slice changed.
+    fn ensure_store(&mut self, train: &[PreparedSeries], l: usize) {
+        let w = train.first().map(|t| t.w).unwrap_or(0);
+        let key = (train.as_ptr() as usize, train.len(), l, w, train_fingerprint(train));
+        if self.store_key != Some(key) {
+            self.store.rebuild(train);
+            self.store_key = Some(key);
+        }
     }
 }
 
@@ -70,14 +118,16 @@ impl LbBackend for NativeBatchLb {
         batch > 0 && rows > 0 && len > 0
     }
 
-    fn compute(
+    fn compute_into(
         &mut self,
         queries: &[&[f64]],
         train: &[PreparedSeries],
         cutoffs: &[f64],
-    ) -> Result<Vec<Vec<f64>>> {
+        out: &mut BoundMatrix,
+    ) -> Result<()> {
         if queries.is_empty() || train.is_empty() {
-            return Ok(vec![Vec::new(); queries.len()]);
+            out.reset(queries.len(), 0);
+            return Ok(());
         }
         let l = queries[0].len();
         ensure!(queries.iter().all(|q| q.len() == l), "queries must share one length");
@@ -87,18 +137,44 @@ impl LbBackend for NativeBatchLb {
         );
         ensure!(cutoffs.len() == queries.len(), "one cutoff per query");
 
-        let mut out = vec![vec![0.0; train.len()]; queries.len()];
-        for (bi, block) in train.chunks(self.block).enumerate() {
-            let base = bi * self.block;
-            for (qi, q) in queries.iter().enumerate() {
-                let cut = cutoffs[qi];
-                let row = &mut out[qi];
-                for (j, t) in block.iter().enumerate() {
-                    row[base + j] = keogh::lb_keogh::<Squared>(q, t, cut);
+        self.ensure_store(train, l);
+        let store = &self.store;
+        let nq = queries.len();
+        let nt = train.len();
+        out.reset(nq, nt);
+
+        // Workers fill disjoint rows of the flat output through a raw
+        // base pointer (row q = out[q*nt .. (q+1)*nt]); the work queue
+        // hands every q to exactly one worker, so writes never overlap.
+        struct RowsPtr(*mut f64);
+        unsafe impl Send for RowsPtr {}
+        unsafe impl Sync for RowsPtr {}
+        let rows = RowsPtr(out.as_mut_slice().as_mut_ptr());
+        let rows = &rows;
+
+        self.exec.run(nq, QUERY_CHUNK, move |_wid, queue| {
+            while let Some(range) = queue.next_chunk() {
+                for q in range {
+                    let query = queries[q];
+                    let cut = cutoffs[q];
+                    // Safety: q is claimed by this worker alone; the row
+                    // window [q*nt, (q+1)*nt) is in-bounds (out was reset
+                    // to nq*nt above) and disjoint from every other q's.
+                    let row = unsafe {
+                        std::slice::from_raw_parts_mut(rows.0.add(q * nt), nt)
+                    };
+                    for (t, slot) in row.iter_mut().enumerate() {
+                        *slot = keogh::lb_keogh_flat::<Squared>(
+                            query,
+                            store.lo_row(t),
+                            store.up_row(t),
+                            cut,
+                        );
+                    }
                 }
             }
-        }
-        Ok(out)
+        });
+        Ok(())
     }
 }
 
@@ -128,13 +204,29 @@ mod tests {
         let (queries, train) = workload(5, 37, 64, 3, 0xBEEF);
         let q_refs: Vec<&[f64]> = queries.iter().map(|v| v.as_slice()).collect();
         let cutoffs = vec![f64::INFINITY; queries.len()];
-        let mut be = NativeBatchLb::with_block(4); // force several blocks
+        let mut be = NativeBatchLb::new();
         let m = be.compute(&q_refs, &train, &cutoffs).unwrap();
         for (qi, q) in queries.iter().enumerate() {
             for (ti, t) in train.iter().enumerate() {
                 let scalar = keogh::lb_keogh::<Squared>(q, t, f64::INFINITY);
                 assert_eq!(m[qi][ti], scalar, "q{qi} t{ti}");
             }
+        }
+    }
+
+    #[test]
+    fn thread_count_does_not_change_results() {
+        let (queries, train) = workload(9, 41, 96, 4, 0x7EAD);
+        let q_refs: Vec<&[f64]> = queries.iter().map(|v| v.as_slice()).collect();
+        // Mixed finite/infinite cutoffs exercise the abandon path too.
+        let cutoffs: Vec<f64> =
+            (0..queries.len()).map(|i| if i % 2 == 0 { f64::INFINITY } else { 40.0 }).collect();
+        let baseline = NativeBatchLb::new().compute(&q_refs, &train, &cutoffs).unwrap();
+        for threads in [2usize, 3, 8] {
+            let m = NativeBatchLb::with_threads(threads)
+                .compute(&q_refs, &train, &cutoffs)
+                .unwrap();
+            assert_eq!(m, baseline, "threads={threads}");
         }
     }
 
@@ -147,9 +239,9 @@ mod tests {
         let full = be.compute(&q_refs, &train, &inf).unwrap();
         // Cut each query at half its median bound: plenty of abandons.
         let cutoffs: Vec<f64> = full
-            .iter()
+            .iter_rows()
             .map(|row| {
-                let mut v = row.clone();
+                let mut v = row.to_vec();
                 v.sort_by(|a, b| a.partial_cmp(b).unwrap());
                 v[v.len() / 2] * 0.5
             })
@@ -168,15 +260,20 @@ mod tests {
     }
 
     #[test]
-    fn block_size_does_not_change_results() {
-        let (queries, train) = workload(4, 33, 48, 2, 0xB10C);
+    fn store_rebuilds_when_training_set_changes() {
+        let (queries, train_a) = workload(2, 6, 32, 2, 0xA);
+        let (_, train_b) = workload(2, 6, 32, 2, 0xB);
         let q_refs: Vec<&[f64]> = queries.iter().map(|v| v.as_slice()).collect();
-        let cutoffs = vec![f64::INFINITY; queries.len()];
-        let baseline = NativeBatchLb::with_block(1).compute(&q_refs, &train, &cutoffs).unwrap();
-        for block in [2, 7, 16, 64] {
-            let m = NativeBatchLb::with_block(block).compute(&q_refs, &train, &cutoffs).unwrap();
-            assert_eq!(m, baseline, "block={block}");
-        }
+        let cutoffs = vec![f64::INFINITY; 2];
+        let mut be = NativeBatchLb::new();
+        let ma = be.compute(&q_refs, &train_a, &cutoffs).unwrap();
+        let mb = be.compute(&q_refs, &train_b, &cutoffs).unwrap();
+        // Fresh backends agree: the cached store tracked the switch.
+        let ma2 = NativeBatchLb::new().compute(&q_refs, &train_a, &cutoffs).unwrap();
+        let mb2 = NativeBatchLb::new().compute(&q_refs, &train_b, &cutoffs).unwrap();
+        assert_eq!(ma, ma2);
+        assert_eq!(mb, mb2);
+        assert_ne!(ma, mb, "different training sets must differ");
     }
 
     #[test]
@@ -186,7 +283,7 @@ mod tests {
         let cutoffs = vec![f64::INFINITY; queries.len()];
         let mut be = NativeBatchLb::new();
         let r = be.rank(&q_refs, &train, &cutoffs).unwrap();
-        for (row, order) in r.bounds.iter().zip(r.order.iter()) {
+        for (row, order) in r.bounds.iter_rows().zip(r.order.iter()) {
             for pair in order.windows(2) {
                 assert!(row[pair[0]] <= row[pair[1]]);
             }

@@ -13,12 +13,40 @@
 //! lower bound (full or partial) proves its DTW distance cannot beat the
 //! current k-th best (or the caller's abandon threshold).
 
-use crate::bounds::{BoundKind, PreparedSeries, Scratch};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::bounds::{keogh, BoundKind, PreparedSeries, Scratch};
 use crate::delta::Delta;
-use crate::dtw::dtw_ea;
+use crate::dtw::{dtw_ea, dtw_ea_pruned};
+use crate::exec::Executor;
 
 use super::nn::{NnResult, SearchStats};
 use super::PreparedTrainSet;
+
+/// Candidates per work-queue chunk in [`knn_parallel`]: small enough to
+/// balance wildly uneven early-abandon costs, large enough to amortize
+/// the atomic pop.
+const CANDIDATE_CHUNK: usize = 8;
+
+/// Fill `scratch.tail` with the candidate-envelope `LB_KEOGH` suffix
+/// sums and run the pruned exact-DTW kernel — the one exact-distance
+/// path every search strategy shares.
+#[inline]
+fn exact_distance<D: Delta>(
+    query: &[f64],
+    t: &PreparedSeries,
+    w: usize,
+    cutoff: f64,
+    tail: &mut Vec<f64>,
+) -> f64 {
+    if cutoff.is_infinite() {
+        // No cutoff → nothing can prune; skip the tail pass.
+        return dtw_ea_pruned::<D>(query, &t.values, w, f64::INFINITY, None);
+    }
+    keogh::lb_keogh_tail::<D>(query, &t.lo, &t.up, tail);
+    dtw_ea_pruned::<D>(query, &t.values, w, cutoff, Some(tail))
+}
 
 /// Knobs shared by every k-NN kernel.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -48,17 +76,28 @@ impl KnnParams {
     }
 }
 
-/// Bounded best-k set, ordered by ascending distance.
+/// Bounded best-k set, totally ordered by ascending
+/// `(distance, candidate index)`.
 ///
 /// [`KnnSet::cutoff`] is the abandon/prune threshold the kernels pass to
 /// bounds and DTW: the k-th best distance once full, the caller's
-/// threshold before that. Ties keep the earlier-admitted candidate,
-/// matching the 1-NN kernels' first-minimum rule.
+/// threshold before that. The `(distance, index)` order makes the final
+/// set a **pure function of the offered candidates** — independent of
+/// offer order — which is what lets [`knn_parallel`] return the exact
+/// same neighbors as the serial kernels at every thread count (ties on
+/// distance resolve to the smaller training index, matching the serial
+/// kernels' ascending-index visit of equal-distance candidates).
 #[derive(Debug, Clone)]
 pub struct KnnSet {
     k: usize,
     threshold: f64,
     items: Vec<NnResult>,
+}
+
+/// `(distance, index)` strictly before? Distances are never NaN.
+#[inline]
+fn beats(a: &NnResult, b: &NnResult) -> bool {
+    a.distance < b.distance || (a.distance == b.distance && a.nn_index < b.nn_index)
 }
 
 impl KnnSet {
@@ -69,7 +108,9 @@ impl KnnSet {
     }
 
     /// Current pruning cutoff: a candidate whose lower bound (or exact
-    /// distance) is ≥ this can never enter the set.
+    /// distance) is **strictly above** this can never enter the set.
+    /// (A candidate *at* the cutoff can still win a distance tie by
+    /// index, so pruning tests must use `>`, not `>=`.)
     pub fn cutoff(&self) -> f64 {
         if self.items.len() < self.k {
             self.threshold
@@ -96,18 +137,21 @@ impl KnnSet {
 
     /// Offer a candidate; returns `true` when it was admitted.
     pub fn offer(&mut self, c: NnResult) -> bool {
-        // Distances are never NaN, so `>=` is the exact negation of the
-        // strict-improvement test (ties keep the incumbent).
-        if c.distance >= self.cutoff() {
+        // The caller's threshold τ gates on distance alone (strictly
+        // below), regardless of fill state.
+        if c.distance >= self.threshold {
             return false;
         }
-        let pos = self.items.partition_point(|x| x.distance <= c.distance);
+        if self.items.len() >= self.k && !beats(&c, &self.items[self.k - 1]) {
+            return false;
+        }
+        let pos = self.items.partition_point(|x| !beats(&c, x));
         self.items.insert(pos, c);
         self.items.truncate(self.k);
         true
     }
 
-    /// The kept neighbors, ascending by distance.
+    /// The kept neighbors, ascending by `(distance, index)`.
     pub fn into_sorted(self) -> Vec<NnResult> {
         self.items
     }
@@ -140,18 +184,20 @@ pub fn knn_random_order<D: Delta>(
         let cutoff = set.cutoff();
         if cutoff.is_infinite() {
             stats.dtw_calls += 1;
-            let d = dtw_ea::<D>(&query.values, &t.values, w, f64::INFINITY);
+            let d = exact_distance::<D>(&query.values, t, w, f64::INFINITY, &mut scratch.tail);
             set.offer(NnResult { nn_index: ti, distance: d, label: train.labels[ti] });
             continue;
         }
         stats.lb_calls += 1;
         let lb = bound.compute::<D>(query, t, w, cutoff, scratch);
-        if lb >= cutoff {
+        // Strictly above only: a candidate *at* the cutoff may still win
+        // a distance tie by index (see `KnnSet`).
+        if lb > cutoff {
             stats.pruned += 1;
             continue;
         }
         stats.dtw_calls += 1;
-        let d = dtw_ea::<D>(&query.values, &t.values, w, cutoff);
+        let d = exact_distance::<D>(&query.values, t, w, cutoff, &mut scratch.tail);
         if d.is_infinite() {
             stats.dtw_abandoned += 1;
         } else {
@@ -208,14 +254,20 @@ pub fn knn_sorted<D: Delta>(
             skips_remaining -= 1;
             continue;
         }
-        if bound_buf[ti] >= set.cutoff() {
+        if bound_buf[ti] > set.cutoff() {
             // Everything after this in sorted order is pruned too
             // (minus any yet-unvisited skipped candidate).
             stats.pruned += n - visited - skips_remaining;
             break;
         }
         stats.dtw_calls += 1;
-        let d = dtw_ea::<D>(&query.values, &train.series[ti].values, w, set.cutoff());
+        let d = exact_distance::<D>(
+            &query.values,
+            &train.series[ti],
+            w,
+            set.cutoff(),
+            &mut scratch.tail,
+        );
         if d.is_infinite() {
             stats.dtw_abandoned += 1;
         } else {
@@ -236,7 +288,9 @@ pub fn knn_sorted<D: Delta>(
 /// `initial` optionally seeds the set with a candidate whose exact DTW
 /// distance is already known (the batched path pays one DTW per query to
 /// give the backend a real abandon cutoff); that candidate is skipped in
-/// the walk.
+/// the walk. `tail_buf` is caller scratch for the pruned DTW kernel's
+/// cumulative-lower-bound tail (keeps the walk allocation-free).
+#[allow(clippy::too_many_arguments)]
 pub fn knn_sorted_precomputed<D: Delta>(
     query: &[f64],
     train: &PreparedTrainSet,
@@ -244,6 +298,7 @@ pub fn knn_sorted_precomputed<D: Delta>(
     order: &[usize],
     initial: Option<NnResult>,
     params: &KnnParams,
+    tail_buf: &mut Vec<f64>,
 ) -> (Vec<NnResult>, SearchStats) {
     let w = train.w;
     let n = train.len();
@@ -274,20 +329,106 @@ pub fn knn_sorted_precomputed<D: Delta>(
             skips_remaining -= 1;
             continue;
         }
-        if bounds[ti] >= set.cutoff() {
+        if bounds[ti] > set.cutoff() {
             // Everything after this in sorted order is pruned too
             // (minus any yet-unvisited skipped candidate).
             stats.pruned += n - visited - skips_remaining;
             break;
         }
         stats.dtw_calls += 1;
-        let d = dtw_ea::<D>(query, &train.series[ti].values, w, set.cutoff());
+        let d = exact_distance::<D>(query, &train.series[ti], w, set.cutoff(), tail_buf);
         if d.is_infinite() {
             stats.dtw_abandoned += 1;
         } else {
             set.offer(NnResult { nn_index: ti, distance: d, label: train.labels[ti] });
         }
     }
+    (set.into_sorted(), stats)
+}
+
+/// Candidate-parallel exact k-NN: screen and score candidates on an
+/// [`Executor`] with a **shared atomic best-so-far cutoff**.
+///
+/// Workers pull candidate chunks off a dynamic queue; each candidate is
+/// bounded against a snapshot of the shared cutoff, survivors run the
+/// pruned exact-DTW kernel, and admissions tighten the cutoff for every
+/// worker. Exactness does not depend on snapshot freshness: the cutoff
+/// only ever shrinks, so a stale snapshot merely prunes less.
+///
+/// **Determinism:** the result is identical to the serial kernels at
+/// every thread count. A candidate is only skipped when a valid lower
+/// bound strictly exceeds a cutoff snapshot `≥` the final k-th best
+/// distance — such a candidate can never belong to the final set — and
+/// [`KnnSet`]'s total `(distance, index)` order makes the surviving
+/// set independent of admission order. Work *counters* ([`SearchStats`])
+/// are scheduling-dependent (how much was pruned depends on how fast
+/// the cutoff tightened) — only the neighbors are pinned.
+pub fn knn_parallel<D: Delta>(
+    query: &PreparedSeries,
+    train: &PreparedTrainSet,
+    bound: BoundKind,
+    params: &KnnParams,
+    exec: &Executor,
+) -> (Vec<NnResult>, SearchStats) {
+    let w = train.w;
+    let n = train.len();
+    let l = query.len();
+    // Shared monotone-nonincreasing cutoff as f64 bits: for nonnegative
+    // floats (distances, +INF) the bit pattern orders like the value, so
+    // `fetch_min` on the bits is `fetch_min` on the distance. A negative
+    // threshold would break that encoding — clamp to 0.0, which admits
+    // nothing anyway (admission still checks the real threshold).
+    let cutoff_bits = AtomicU64::new(params.threshold.max(0.0).to_bits());
+    let shared = Mutex::new((KnnSet::new(params), SearchStats::default()));
+
+    exec.run(n, CANDIDATE_CHUNK, |_wid, queue| {
+        // Per-worker mutable state, set up once per worker; stats merge
+        // into the shared pair at worker exit (tight lock windows).
+        let mut scratch = Scratch::new(l);
+        let mut local = SearchStats::default();
+        let offer = |r: NnResult| {
+            let mut guard = shared.lock().unwrap();
+            let (set, _) = &mut *guard;
+            if set.offer(r) {
+                cutoff_bits.fetch_min(set.cutoff().max(0.0).to_bits(), Ordering::Relaxed);
+            }
+        };
+        while let Some(range) = queue.next_chunk() {
+            for ti in range {
+                if Some(ti) == params.exclude {
+                    continue;
+                }
+                let t = &train.series[ti];
+                let cut = f64::from_bits(cutoff_bits.load(Ordering::Relaxed));
+                if cut.is_infinite() {
+                    // Nothing to prune against yet (set not full, no τ):
+                    // straight to the exact distance, like Algorithm 3's
+                    // first candidates.
+                    local.dtw_calls += 1;
+                    let d =
+                        exact_distance::<D>(&query.values, t, w, f64::INFINITY, &mut scratch.tail);
+                    offer(NnResult { nn_index: ti, distance: d, label: train.labels[ti] });
+                    continue;
+                }
+                local.lb_calls += 1;
+                let lb = bound.compute::<D>(query, t, w, cut, &mut scratch);
+                if lb > cut {
+                    local.pruned += 1;
+                    continue;
+                }
+                local.dtw_calls += 1;
+                let d = exact_distance::<D>(&query.values, t, w, cut, &mut scratch.tail);
+                if d.is_infinite() {
+                    local.dtw_abandoned += 1;
+                } else {
+                    offer(NnResult { nn_index: ti, distance: d, label: train.labels[ti] });
+                }
+            }
+        }
+        shared.lock().unwrap().1.add(&local);
+    });
+
+    let (set, stats) = shared.into_inner().unwrap();
     (set.into_sorted(), stats)
 }
 
@@ -434,6 +575,7 @@ mod tests {
                 order.sort_unstable_by(|&a, &b| bounds[a].partial_cmp(&bounds[b]).unwrap());
                 let initial =
                     NnResult { nn_index: 0, distance: seed, label: train.labels[0] };
+                let mut tail_buf = Vec::new();
                 let (r, _) = knn_sorted_precomputed::<Squared>(
                     &q.values,
                     &train,
@@ -441,9 +583,46 @@ mod tests {
                     &order,
                     Some(initial),
                     &params,
+                    &mut tail_buf,
                 );
                 let got: Vec<f64> = r.iter().map(|x| x.distance).collect();
                 assert_eq!(got, want, "seeded precomputed walk k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_matches_serial_at_every_thread_count() {
+        let (train, queries) = setup();
+        let mut scratch = Scratch::default();
+        let (mut bb, mut ib) = (Vec::new(), Vec::new());
+        for q in queries.iter().take(3) {
+            for k in [1usize, 3, 10] {
+                let params = KnnParams::k(k);
+                let (serial, _) = knn_sorted::<Squared>(
+                    q,
+                    &train,
+                    crate::bounds::BoundKind::Webb,
+                    &params,
+                    &mut scratch,
+                    &mut bb,
+                    &mut ib,
+                );
+                let want: Vec<(usize, f64)> =
+                    serial.iter().map(|r| (r.nn_index, r.distance)).collect();
+                for threads in [1usize, 2, 3, 8] {
+                    let exec = crate::exec::Executor::new(threads);
+                    let (par, _) = knn_parallel::<Squared>(
+                        q,
+                        &train,
+                        crate::bounds::BoundKind::Webb,
+                        &params,
+                        &exec,
+                    );
+                    let got: Vec<(usize, f64)> =
+                        par.iter().map(|r| (r.nn_index, r.distance)).collect();
+                    assert_eq!(got, want, "threads={threads} k={k}");
+                }
             }
         }
     }

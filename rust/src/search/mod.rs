@@ -7,7 +7,11 @@
 //!   Algorithm 4 (**sorted**: bound every candidate, walk in ascending
 //!   bound order until the next bound exceeds the k-th best distance),
 //!   the precomputed-bound walk fed by batched
-//!   [`crate::runtime::LbBackend`]s, and the brute-force baseline.
+//!   [`crate::runtime::LbBackend`]s, the candidate-parallel
+//!   [`knn::knn_parallel`] (shared atomic cutoff, identical results at
+//!   every thread count), and the brute-force baseline. Every kernel's
+//!   exact-DTW tail runs [`crate::dtw::dtw_ea_pruned`] with the
+//!   candidate-envelope cumulative-lower-bound tail.
 //! * [`nn`] — the result/statistics types plus the deprecated 1-NN
 //!   entry points (thin `k = 1` shims over [`knn`]).
 //! * [`classify`] — 1-NN classification over a dataset with any

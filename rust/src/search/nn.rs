@@ -134,6 +134,7 @@ pub fn nn_sorted_precomputed<D: Delta>(
     order: &[usize],
     initial: Option<NnResult>,
 ) -> (NnResult, SearchStats) {
+    let mut tail_buf = Vec::new();
     let (r, stats) = knn::knn_sorted_precomputed::<D>(
         query,
         train,
@@ -141,6 +142,7 @@ pub fn nn_sorted_precomputed<D: Delta>(
         order,
         initial,
         &KnnParams::default(),
+        &mut tail_buf,
     );
     (first(r), stats)
 }

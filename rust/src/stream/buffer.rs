@@ -5,12 +5,19 @@
 //! exactly one window's worth of samples (the subsequence length) and can
 //! materialize the current window in chronological order without ever
 //! reallocating. The rolling mean/std accessors are incremental
-//! (subtract-evicted / add-arrived) and therefore O(1) per sample; they
-//! exist for monitoring and cheap prefilters. **Search-path
-//! z-normalization deliberately recomputes the moments from the
-//! materialized window instead** (`data::znorm::znormalize`), because the
-//! incremental sums drift by a few ulps over long streams and the
-//! searcher's contract is bit-equality with a batch oracle over the same
+//! (subtract-evicted / add-arrived) and therefore O(1) per sample; the
+//! searcher's per-window z-normalization consumes them through
+//! [`StreamBuffer::stable_moments`] (into
+//! `data::znorm::znormalize_with_moments`) instead of paying an `O(m)`
+//! moment rescan per surviving window. `stable_moments` guards the
+//! O(1) identity: it falls back to an exact centered two-pass when
+//! cancellation would eat the variance (large DC offsets) and
+//! periodically refreshes the rolling sums to shed eviction drift, so
+//! normalized values (and therefore reported distances) agree with
+//! treating each window as a standalone series to ~1e-9 relative on
+//! well-conditioned data — and stay *correct* (via the fallback) on
+//! ill-conditioned data. The *search itself* is exact either way:
+//! every cascade stage and every DTW call sees the same normalized
 //! window.
 
 /// Fixed-capacity ring buffer over the latest `capacity` stream samples,
@@ -29,6 +36,10 @@ pub struct StreamBuffer {
     sum: f64,
     /// Rolling sum of squares over the buffered samples.
     sumsq: f64,
+    /// `pushed` count at which [`StreamBuffer::stable_moments`] next
+    /// refreshes the rolling sums from the ring (bounds eviction drift
+    /// to one window's worth of updates).
+    refresh_at: u64,
 }
 
 impl StreamBuffer {
@@ -42,6 +53,7 @@ impl StreamBuffer {
             pushed: 0,
             sum: 0.0,
             sumsq: 0.0,
+            refresh_at: 0,
         }
     }
 
@@ -119,6 +131,53 @@ impl StreamBuffer {
         self.variance().sqrt()
     }
 
+    /// `(mean, variance)` of the buffered window, **numerically
+    /// guarded** — the form the search path's z-normalization consumes.
+    ///
+    /// The O(1) `Σx²/n − mean²` identity cancels catastrophically when
+    /// the window's DC offset dominates its spread (samples around 1e8
+    /// with unit variance leave *no* correct bits), and the incremental
+    /// evict/add updates drift over long streams. This accessor
+    /// therefore (a) falls back to an exact centered two-pass when the
+    /// identity's result carries too few of `Σx²`'s bits, and (b)
+    /// refreshes the rolling sums from the ring once per window's worth
+    /// of pushes — bounding drift to one window of updates. Amortized
+    /// O(1) per sample for well-conditioned data; gracefully degrades
+    /// to the (always-correct) rescan when the data is ill-conditioned.
+    pub fn stable_moments(&mut self) -> (f64, f64) {
+        let n = self.buf.len();
+        if n == 0 {
+            return (0.0, 0.0);
+        }
+        let nf = n as f64;
+        if self.pushed < self.refresh_at {
+            let mean = self.sum / nf;
+            let var = (self.sumsq / nf - mean * mean).max(0.0);
+            // Well-conditioned: the spread retains at least ~13 of
+            // Σx²/n's significant decimal digits' worth of headroom.
+            if self.sumsq == 0.0 || var * nf > 1e-4 * self.sumsq.abs() {
+                return (mean, var);
+            }
+        }
+        // Exact centered two-pass; refresh the rolling sums while the
+        // ring is in hand (sheds accumulated eviction drift).
+        let mut sum = 0.0;
+        for &v in &self.buf {
+            sum += v;
+        }
+        let mean = sum / nf;
+        let mut centered = 0.0;
+        let mut sumsq = 0.0;
+        for &v in &self.buf {
+            centered += (v - mean) * (v - mean);
+            sumsq += v * v;
+        }
+        self.sum = sum;
+        self.sumsq = sumsq;
+        self.refresh_at = self.pushed + self.cap as u64;
+        (mean, centered / nf)
+    }
+
     /// Materialize the buffered samples in chronological (arrival) order
     /// into `out` (cleared first; no allocation once `out` has capacity).
     pub fn copy_into(&self, out: &mut Vec<f64>) {
@@ -183,6 +242,49 @@ mod tests {
                 assert!((b.variance() - var).abs() < 1e-9, "variance drift at {i}");
             }
         }
+    }
+
+    #[test]
+    fn stable_moments_survive_large_dc_offset_and_long_streams() {
+        // Samples around 1e8 with unit variance: the naive Σx²/n − μ²
+        // identity has no correct bits left; stable_moments must stay
+        // within ~1e-6 of the exact centered two-pass anyway, over a
+        // stream long enough to accumulate real eviction drift.
+        let mut rng = Rng::seeded(777);
+        let mut b = StreamBuffer::new(64);
+        let mut w = Vec::new();
+        for i in 0..50_000 {
+            b.push(1e8 + rng.normal());
+            if i >= 64 && i % 501 == 0 {
+                let (mean, var) = b.stable_moments();
+                b.copy_into(&mut w);
+                let n = w.len() as f64;
+                let true_mean = w.iter().sum::<f64>() / n;
+                let true_var =
+                    w.iter().map(|v| (v - true_mean) * (v - true_mean)).sum::<f64>() / n;
+                assert!(
+                    (mean - true_mean).abs() <= 1e-6 * true_mean.abs().max(1.0),
+                    "mean at {i}: {mean} vs {true_mean}"
+                );
+                assert!(
+                    (var - true_var).abs() <= 1e-6 * true_var.max(1.0),
+                    "variance at {i}: {var} vs {true_var}"
+                );
+                assert!(var >= 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn stable_moments_match_rolling_on_centered_data() {
+        let mut rng = Rng::seeded(778);
+        let mut b = StreamBuffer::new(32);
+        for _ in 0..500 {
+            b.push(rng.normal());
+        }
+        let (mean, var) = b.stable_moments();
+        assert!((mean - b.mean()).abs() < 1e-9);
+        assert!((var - b.variance()).abs() < 1e-9);
     }
 
     #[test]

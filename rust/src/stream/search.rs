@@ -1,20 +1,26 @@
 //! [`SubsequenceSearcher`] — cascaded-bound subsequence search over a
 //! sample stream, plus its option/result/statistics types.
 
-use std::sync::Arc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
 use crate::bounds::envelope::envelopes_into;
-use crate::bounds::{BoundKind, PreparedSeries, Scratch};
-use crate::data::znorm::znormalize;
+use crate::bounds::{keogh, BoundKind, PreparedSeries, Scratch};
+use crate::data::znorm::znormalize_with_moments;
 use crate::delta::Delta;
-use crate::dtw::dtw_ea;
+use crate::dtw::dtw_ea_pruned;
+use crate::exec::Executor;
 use crate::index::DtwIndex;
 use crate::search::nn::SearchStats;
+use crate::search::PreparedTrainSet;
 
 use super::StreamBuffer;
+
+/// Candidates per work-queue chunk when window scoring runs parallel.
+const STREAM_CHUNK: usize = 8;
 
 /// The default screening cascade: constant-time `LB_KIM_FL`, then
 /// `LB_KEOGH` (candidate envelopes only — no per-window preparation),
@@ -42,11 +48,24 @@ pub struct SubsequenceOptions {
     /// [`DEFAULT_CASCADE`]. Stage values accumulate by `max`, so any
     /// sequence of valid bounds is sound.
     pub cascade: Option<Vec<BoundKind>>,
+    /// Worker threads for per-window candidate scoring (`0` = machine
+    /// parallelism, `1` = serial); `None` inherits the index-level
+    /// [`crate::index::DtwIndexBuilder::threads`] setting. Matches are
+    /// identical at every thread count; per-stage work counters are
+    /// scheduling-dependent when parallel.
+    pub threads: Option<usize>,
 }
 
 impl Default for SubsequenceOptions {
     fn default() -> Self {
-        SubsequenceOptions { threshold: None, top_k: None, hop: 1, znorm: None, cascade: None }
+        SubsequenceOptions {
+            threshold: None,
+            top_k: None,
+            hop: 1,
+            znorm: None,
+            cascade: None,
+            threads: None,
+        }
     }
 }
 
@@ -88,6 +107,12 @@ impl SubsequenceOptions {
     /// Replace the screening cascade (cheapest stage first).
     pub fn with_cascade(mut self, cascade: Vec<BoundKind>) -> SubsequenceOptions {
         self.cascade = Some(cascade);
+        self
+    }
+
+    /// Score each window's candidates on `threads` workers.
+    pub fn with_threads(mut self, threads: usize) -> SubsequenceOptions {
+        self.threads = Some(threads);
         self
     }
 }
@@ -231,6 +256,10 @@ pub struct SubsequenceSearcher {
     /// Scratch for the discarded halves of the envelope-of-envelope pass.
     tmp: Vec<f64>,
     scratch: Scratch,
+    /// Candidate-scoring executor (serial by default).
+    exec: Executor,
+    /// One scratch per parallel worker, allocated once at construction.
+    par_scratch: Vec<Mutex<Scratch>>,
     matches: Vec<StreamMatch>,
     stats: StreamStats,
     busy: Duration,
@@ -259,6 +288,12 @@ impl SubsequenceSearcher {
         let m = index.train().series[0].len();
         let w = index.window();
         let stats = StreamStats::new(&cascade);
+        let exec = Executor::new(opts.threads.unwrap_or(index.threads()));
+        let par_scratch: Vec<Mutex<Scratch>> = if exec.threads() > 1 {
+            (0..exec.threads()).map(|_| Mutex::new(Scratch::new(m))).collect()
+        } else {
+            Vec::new()
+        };
         Ok(SubsequenceSearcher {
             tau: opts.threshold.unwrap_or(f64::INFINITY),
             top_k: opts.top_k,
@@ -279,6 +314,8 @@ impl SubsequenceSearcher {
             envs_ready: false,
             tmp: Vec::with_capacity(m),
             scratch: Scratch::new(m),
+            exec,
+            par_scratch,
             matches: Vec::new(),
             stats,
             index: index.clone(),
@@ -413,12 +450,46 @@ impl SubsequenceSearcher {
         self.stats.windows += 1;
         self.buffer.copy_into(&mut self.pq.values);
         if self.znorm {
-            znormalize(&mut self.pq.values);
+            // The ring buffer already maintains the window moments in
+            // O(1) per sample — reuse them instead of rescanning every
+            // surviving window. `stable_moments` guards the O(1)
+            // identity against cancellation/drift (falling back to an
+            // exact rescan only when the data is ill-conditioned);
+            // exactness of the *search* is unaffected either way —
+            // every stage and DTW sees the same normalized values.
+            let (mean, var) = self.buffer.stable_moments();
+            znormalize_with_moments(&mut self.pq.values, mean, var);
         }
         self.envs_ready = false;
 
         let train = Arc::clone(&self.index.train);
         self.stats.candidates += train.len() as u64;
+        let best = if self.exec.threads() > 1 && train.len() > 1 {
+            self.eval_candidates_parallel::<D>(&train)
+        } else {
+            self.eval_candidates_serial::<D>(&train)
+        };
+
+        let hit = best.map(|(ti, d)| StreamMatch {
+            start,
+            neighbor: ti,
+            label: train.labels[ti],
+            distance: d,
+        });
+        if let Some(m) = hit {
+            self.stats.matches += 1;
+            self.admit(m);
+        }
+        self.busy += t0.elapsed();
+        hit
+    }
+
+    /// Serial candidate sweep (the default): cascade screening with
+    /// early abandoning, pruned exact DTW on survivors.
+    fn eval_candidates_serial<D: Delta>(
+        &mut self,
+        train: &PreparedTrainSet,
+    ) -> Option<(usize, f64)> {
         let mut best: Option<(usize, f64)> = None;
         'cands: for (ti, t) in train.series.iter().enumerate() {
             let mut cutoff = self.cutoff();
@@ -442,7 +513,18 @@ impl SubsequenceSearcher {
                 }
             }
             self.stats.dtw_calls += 1;
-            let d = dtw_ea::<D>(&self.pq.values, &t.values, self.w, cutoff);
+            let d = if cutoff.is_finite() {
+                keogh::lb_keogh_tail::<D>(&self.pq.values, &t.lo, &t.up, &mut self.scratch.tail);
+                dtw_ea_pruned::<D>(
+                    &self.pq.values,
+                    &t.values,
+                    self.w,
+                    cutoff,
+                    Some(&self.scratch.tail),
+                )
+            } else {
+                dtw_ea_pruned::<D>(&self.pq.values, &t.values, self.w, cutoff, None)
+            };
             if d.is_infinite() {
                 self.stats.dtw_abandoned += 1;
                 continue;
@@ -451,18 +533,98 @@ impl SubsequenceSearcher {
                 best = Some((ti, d));
             }
         }
+        best
+    }
 
-        let hit = best.map(|(ti, d)| StreamMatch {
-            start,
-            neighbor: ti,
-            label: train.labels[ti],
-            distance: d,
-        });
-        if let Some(m) = hit {
-            self.stats.matches += 1;
-            self.admit(m);
+    /// Candidate-parallel sweep: workers pull candidate chunks, prune
+    /// against a shared atomic cutoff (τ / top-k k-th best / running
+    /// intra-window best) and race the exact distances. The winning
+    /// `(distance, index)` is a pure minimum over exactly-computed
+    /// candidates, so matches are identical to the serial sweep at every
+    /// thread count; per-stage counters become scheduling-dependent.
+    fn eval_candidates_parallel<D: Delta>(
+        &mut self,
+        train: &PreparedTrainSet,
+    ) -> Option<(usize, f64)> {
+        // Lazy envelope preparation cannot cross worker threads: pay it
+        // up front when any stage reads query-side envelopes.
+        if self.cascade.iter().any(|b| b.requires_query_envelopes()) {
+            self.ensure_envelopes();
         }
-        self.busy += t0.elapsed();
-        hit
+        let base_cut = self.cutoff();
+        // Monotone-nonincreasing cutoff as nonnegative f64 bits (bit
+        // order == numeric order for nonnegative floats, +INF included).
+        let cutoff_bits = AtomicU64::new(base_cut.max(0.0).to_bits());
+        let best: Mutex<Option<(f64, usize)>> = Mutex::new(None);
+        let nstages = self.cascade.len();
+        // (per-stage (lb_calls, pruned), dtw_calls, dtw_abandoned)
+        let agg = Mutex::new((vec![(0u64, 0u64); nstages], 0u64, 0u64));
+        let pq = &self.pq;
+        let cascade = &self.cascade;
+        let w = self.w;
+        let scratches = &self.par_scratch;
+        self.exec.run(train.len(), STREAM_CHUNK, |wid, queue| {
+            let mut scratch = scratches[wid].lock().unwrap();
+            let mut stages = vec![(0u64, 0u64); nstages];
+            let (mut dtw_calls, mut dtw_abandoned) = (0u64, 0u64);
+            while let Some(range) = queue.next_chunk() {
+                'cands: for ti in range {
+                    let t = &train.series[ti];
+                    let cut = f64::from_bits(cutoff_bits.load(Ordering::Relaxed));
+                    let mut lb = 0.0f64;
+                    for (si, stage) in cascade.iter().enumerate() {
+                        stages[si].0 += 1;
+                        let v = stage.compute::<D>(pq, t, w, cut, &mut scratch);
+                        lb = lb.max(v);
+                        // Strictly above only: an exact tie must still
+                        // race on the candidate index.
+                        if lb > cut {
+                            stages[si].1 += 1;
+                            continue 'cands;
+                        }
+                    }
+                    dtw_calls += 1;
+                    let d = if cut.is_finite() {
+                        keogh::lb_keogh_tail::<D>(&pq.values, &t.lo, &t.up, &mut scratch.tail);
+                        dtw_ea_pruned::<D>(&pq.values, &t.values, w, cut, Some(&scratch.tail))
+                    } else {
+                        dtw_ea_pruned::<D>(&pq.values, &t.values, w, cut, None)
+                    };
+                    if d.is_infinite() {
+                        dtw_abandoned += 1;
+                        continue;
+                    }
+                    let mut guard = best.lock().unwrap();
+                    let better = match *guard {
+                        None => true,
+                        Some((bd, bt)) => d < bd || (d == bd && ti < bt),
+                    };
+                    if better {
+                        *guard = Some((d, ti));
+                        cutoff_bits.fetch_min(d.max(0.0).to_bits(), Ordering::Relaxed);
+                    }
+                }
+            }
+            let mut a = agg.lock().unwrap();
+            for si in 0..nstages {
+                a.0[si].0 += stages[si].0;
+                a.0[si].1 += stages[si].1;
+            }
+            a.1 += dtw_calls;
+            a.2 += dtw_abandoned;
+        });
+        let (stages, dtw_calls, dtw_abandoned) = agg.into_inner().unwrap();
+        for (si, (calls, pruned)) in stages.into_iter().enumerate() {
+            self.stats.stages[si].lb_calls += calls;
+            self.stats.stages[si].pruned += pruned;
+        }
+        self.stats.dtw_calls += dtw_calls;
+        self.stats.dtw_abandoned += dtw_abandoned;
+        // A match still requires beating the window-entry cutoff (τ and
+        // the top-k k-th best) — the atomic only tightened below it.
+        best.into_inner()
+            .unwrap()
+            .filter(|&(d, _)| d < base_cut)
+            .map(|(d, ti)| (ti, d))
     }
 }

@@ -82,6 +82,31 @@ fn knn_subcommand_prints_neighbors() {
 }
 
 #[test]
+fn knn_threads_flag_prints_identical_neighbors() {
+    // --threads only moves latency; the printed neighbor lines (indices,
+    // labels, distances) must be identical to the serial run.
+    let run = |threads: &str| {
+        let out = bin()
+            .args([
+                "knn", "--scale", "tiny", "--k", "3", "--queries", "2", "--threads", threads,
+            ])
+            .output()
+            .expect("spawn");
+        assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+        let text = String::from_utf8_lossy(&out.stdout).to_string();
+        // Keep only the per-query neighbor payloads (strip the header
+        // and the timing-bearing tail of each line).
+        text.lines()
+            .filter(|l| l.starts_with('q'))
+            .map(|l| l.split(" | ").next().unwrap_or(l).to_string())
+            .collect::<Vec<_>>()
+    };
+    let serial = run("1");
+    assert!(!serial.is_empty());
+    assert_eq!(run("4"), serial, "thread-count invariance");
+}
+
+#[test]
 fn knn_rejects_zero_k_and_bad_strategy() {
     let out = bin().args(["knn", "--scale", "tiny", "--k", "0"]).output().expect("spawn");
     assert!(!out.status.success());

@@ -92,6 +92,49 @@ fn batched_backend_knn_matches_brute_force() {
     }
 }
 
+/// The executor determinism contract: multi-threaded k-NN returns the
+/// *identical* neighbor set — same indices, same bit-exact distances —
+/// as single-threaded search, at every k and thread count, including
+/// with a threshold and self-match exclusion in play.
+#[test]
+fn parallel_knn_is_identical_to_serial_at_every_k_and_thread_count() {
+    let ds = &generate_archive(&ArchiveSpec::new(Scale::Tiny, 606))[0];
+    let base = DtwIndex::builder_from_dataset(ds).bound(BoundKind::Webb).build().unwrap();
+    let pairs = |out: &dtw_bounds::index::QueryOutcome| -> Vec<(usize, f64)> {
+        out.neighbors.iter().map(|n| (n.index, n.distance)).collect()
+    };
+    for q in ds.test.iter().take(3) {
+        for k in [1usize, 3, 10, base.len()] {
+            // Plain, thresholded, and excluded variants.
+            let tau = oracle(&base, &q.values, 3).last().copied().unwrap_or(f64::INFINITY);
+            let variants = [
+                QueryOptions::k(k),
+                QueryOptions::k(k).with_abandon_at(tau),
+                QueryOptions::k(k).with_exclude(0),
+            ];
+            for (vi, opts) in variants.iter().enumerate() {
+                let serial = base.searcher().query_values::<Squared>(&q.values, opts);
+                for threads in [2usize, 3, 4, 8] {
+                    let index = base.with_threads(threads);
+                    let out = index.searcher().query_values::<Squared>(&q.values, opts);
+                    assert_eq!(
+                        pairs(&out),
+                        pairs(&serial),
+                        "k={k} threads={threads} variant={vi}"
+                    );
+                }
+            }
+        }
+    }
+    // Per-query override beats the index default, same contract.
+    let q = &ds.test[0].values;
+    let serial = base.knn::<Squared>(q, 5);
+    let via_opts = base
+        .searcher()
+        .query_values::<Squared>(q, &QueryOptions::k(5).with_threads(4));
+    assert_eq!(pairs(&via_opts), pairs(&serial), "QueryOptions::with_threads");
+}
+
 #[test]
 fn deprecated_1nn_shims_agree_with_the_facade() {
     #![allow(deprecated)]

@@ -1,0 +1,135 @@
+//! Exactness property tests for the pruned exact-DTW kernel
+//! (`dtw_ea_pruned`) — the kernel behind every search path since the
+//! hardware-speed hot-paths PR.
+//!
+//! Contract, over random series / windows / cutoffs / tails:
+//!
+//! 1. a **finite** result is bit-equal to `dtw` (the unpruned truth);
+//! 2. `INFINITY` is returned **only** when the true distance exceeds
+//!    the cutoff (pruning may abandon earlier than `dtw_ea`, never
+//!    wrongly);
+//! 3. both hold with the `LB_KEOGH` cumulative-lower-bound tail
+//!    attached, and the tail's head equals the full `LB_KEOGH` bound.
+
+use dtw_bounds::bounds::{keogh, PreparedSeries};
+use dtw_bounds::data::rng::Rng;
+use dtw_bounds::delta::{Absolute, Squared};
+use dtw_bounds::dtw::{dtw, dtw_ea, dtw_ea_pruned};
+
+fn random_series(rng: &mut Rng, n: usize) -> Vec<f64> {
+    // Mix random walks (realistic, prunable) and white noise (hostile).
+    if rng.below(2) == 0 {
+        let mut v = 0.0;
+        (0..n)
+            .map(|_| {
+                v += rng.normal() * 0.5;
+                v
+            })
+            .collect()
+    } else {
+        (0..n).map(|_| rng.normal() * 2.0).collect()
+    }
+}
+
+#[test]
+fn pruned_is_exact_for_random_series_windows_and_cutoffs() {
+    let mut rng = Rng::seeded(0x9A12);
+    for trial in 0..300 {
+        let n = rng.int_range(2, 70);
+        let a = random_series(&mut rng, n);
+        let b = random_series(&mut rng, n);
+        let w = rng.below(n + 3);
+        let truth = dtw::<Squared>(&a, &b, w);
+        // Cutoffs straddling the truth, including exact equality.
+        for mult in [0.0, 0.3, 0.8, 1.0, 1.2, 4.0] {
+            let cutoff = truth * mult;
+            let got = dtw_ea_pruned::<Squared>(&a, &b, w, cutoff, None);
+            if got.is_finite() {
+                assert_eq!(got, truth, "trial={trial} w={w} mult={mult}: finite must be exact");
+                assert!(truth <= cutoff, "trial={trial}: finite implies within cutoff");
+            } else {
+                assert!(
+                    truth > cutoff,
+                    "trial={trial} w={w} mult={mult}: INFINITY only above the cutoff \
+                     (truth={truth}, cutoff={cutoff})"
+                );
+            }
+        }
+        // Infinite cutoff must reproduce dtw bit-exactly.
+        assert_eq!(dtw_ea_pruned::<Squared>(&a, &b, w, f64::INFINITY, None), truth);
+    }
+}
+
+#[test]
+fn pruned_with_keogh_tail_is_exact_and_tail_heads_the_bound() {
+    let mut rng = Rng::seeded(0x9A13);
+    for trial in 0..200 {
+        let n = rng.int_range(3, 60);
+        let a = random_series(&mut rng, n);
+        let b = random_series(&mut rng, n);
+        let w = rng.below(n);
+        let t = PreparedSeries::prepare(b.clone(), w);
+        let mut tail = Vec::new();
+        let lb = keogh::lb_keogh_tail::<Squared>(&a, &t.lo, &t.up, &mut tail);
+        let truth = dtw::<Squared>(&a, &b, w);
+        assert!(lb <= truth + 1e-9, "trial={trial}: the tail head is a valid lower bound");
+        for mult in [0.2, 0.9, 1.0, 1.1, 3.0] {
+            let cutoff = truth * mult;
+            let got = dtw_ea_pruned::<Squared>(&a, &b, w, cutoff, Some(&tail));
+            if got.is_finite() {
+                assert_eq!(got, truth, "trial={trial} w={w} mult={mult} (with tail)");
+            } else {
+                assert!(truth > cutoff, "trial={trial} w={w} mult={mult} (with tail)");
+            }
+        }
+    }
+}
+
+#[test]
+fn pruned_agrees_with_dtw_ea_semantics_under_absolute_delta() {
+    let mut rng = Rng::seeded(0x9A14);
+    for _ in 0..120 {
+        let n = rng.int_range(2, 40);
+        let a = random_series(&mut rng, n);
+        let b = random_series(&mut rng, n);
+        let w = rng.below(n + 1);
+        let truth = dtw::<Absolute>(&a, &b, w);
+        for mult in [0.5, 1.0, 2.0] {
+            let cutoff = truth * mult;
+            let ea = dtw_ea::<Absolute>(&a, &b, w, cutoff);
+            let pruned = dtw_ea_pruned::<Absolute>(&a, &b, w, cutoff, None);
+            // Wherever dtw_ea returns a *useful* (<= cutoff) finite
+            // value, the pruned kernel returns the same bits; where
+            // dtw_ea abandons, pruning must abandon too (it is
+            // strictly more aggressive, never less correct).
+            if ea.is_finite() && ea <= cutoff {
+                assert_eq!(pruned, ea);
+            }
+            if ea.is_infinite() {
+                assert!(pruned.is_infinite());
+            }
+        }
+    }
+}
+
+#[test]
+fn unequal_lengths_and_degenerate_windows() {
+    let mut rng = Rng::seeded(0x9A15);
+    for _ in 0..80 {
+        let la = rng.int_range(1, 25);
+        let lb = rng.int_range(1, 25);
+        let a = random_series(&mut rng, la);
+        let b = random_series(&mut rng, lb);
+        for w in [0usize, 1, 5, 100] {
+            let truth = dtw::<Squared>(&a, &b, w);
+            for cutoff in [truth * 0.5, truth, truth * 1.5 + 1e-9] {
+                let got = dtw_ea_pruned::<Squared>(&a, &b, w, cutoff, None);
+                if got.is_finite() {
+                    assert_eq!(got, truth, "la={la} lb={lb} w={w}");
+                } else {
+                    assert!(truth > cutoff, "la={la} lb={lb} w={w}");
+                }
+            }
+        }
+    }
+}

@@ -275,6 +275,76 @@ pub fn write_dtw_kernel_json(
     std::fs::write(path, out)
 }
 
+/// One machine-readable record for the persistence half of
+/// `BENCH_index_persist.json`: how long the cold-start path takes,
+/// versus rebuilding the same index from raw series.
+#[derive(Debug, Clone)]
+pub struct ColdStartRecord {
+    /// `load` (snapshot → ready index) or `rebuild` (raw series →
+    /// ready index, the no-snapshot baseline).
+    pub phase: String,
+    /// Indexed series count.
+    pub series: usize,
+    /// Series length ℓ.
+    pub series_len: usize,
+    /// Shard count of the index.
+    pub shards: usize,
+    /// Snapshot size in bytes (0 for the rebuild baseline).
+    pub bytes: u64,
+    /// Milliseconds to a ready-to-serve index.
+    pub millis: f64,
+}
+
+/// One machine-readable record for the sharded-search half of
+/// `BENCH_index_persist.json`: k-NN throughput per shard count.
+#[derive(Debug, Clone)]
+pub struct ShardScalingRecord {
+    /// Shard count.
+    pub shards: usize,
+    /// Worker thread count.
+    pub threads: usize,
+    /// Queries answered per measured repeat.
+    pub queries: usize,
+    /// Queries per second.
+    pub queries_per_sec: f64,
+}
+
+/// Write the persistence/sharding trajectory file: one JSON object with
+/// `cold_start` and `shard_scaling` arrays (manual formatting — no
+/// `serde` in the offline build; stable for line-diffing across PRs).
+pub fn write_index_persist_json(
+    path: &str,
+    cold: &[ColdStartRecord],
+    scaling: &[ShardScalingRecord],
+) -> std::io::Result<()> {
+    let esc = |s: &str| s.replace('\\', "\\\\").replace('"', "\\\"");
+    let mut out = String::from("{\n  \"cold_start\": [\n");
+    for (i, r) in cold.iter().enumerate() {
+        let sep = if i + 1 == cold.len() { "" } else { "," };
+        out.push_str(&format!(
+            "    {{\"phase\": \"{}\", \"series\": {}, \"series_len\": {}, \
+             \"shards\": {}, \"bytes\": {}, \"millis\": {:.3}}}{sep}\n",
+            esc(&r.phase),
+            r.series,
+            r.series_len,
+            r.shards,
+            r.bytes,
+            r.millis,
+        ));
+    }
+    out.push_str("  ],\n  \"shard_scaling\": [\n");
+    for (i, r) in scaling.iter().enumerate() {
+        let sep = if i + 1 == scaling.len() { "" } else { "," };
+        out.push_str(&format!(
+            "    {{\"shards\": {}, \"threads\": {}, \"queries\": {}, \
+             \"queries_per_sec\": {:.1}}}{sep}\n",
+            r.shards, r.threads, r.queries, r.queries_per_sec,
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    std::fs::write(path, out)
+}
+
 /// Write records as a JSON array. The offline build has no `serde`; the
 /// records are flat, so manual formatting is sufficient and the output is
 /// stable for line-diffing across PRs.

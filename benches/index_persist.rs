@@ -1,0 +1,187 @@
+//! Persistence & sharding trajectory bench: cold-start latency of the
+//! snapshot path and k-NN throughput per shard count.
+//!
+//! Two measurements land in `BENCH_index_persist.json`:
+//!
+//! * **cold_start** — milliseconds from process state to a
+//!   ready-to-serve [`DtwIndex`]: `load` (snapshot → index, the
+//!   `serve --snapshot` path: length check + bulk copy per shard, plus
+//!   the envelope-of-envelope pass) vs `rebuild` (raw series → index,
+//!   the no-snapshot baseline paying full envelope preparation). The
+//!   snapshot byte size rides along so storage cost is visible in the
+//!   trajectory too.
+//! * **shard_scaling** — queries/sec of the sharded k-NN search at
+//!   1/2/4 shards (× the thread grid), same workload, same neighbors —
+//!   shards only move the fan-out.
+//!
+//! Knobs (env): `DTWB_REPEATS` (default 3), `DTWB_SERIES_LEN` (256),
+//! `DTWB_CANDIDATES` (400), `DTWB_QUERIES` (24), `DTWB_THREADS` (4).
+//!
+//! ```sh
+//! cargo bench --bench index_persist
+//! ```
+
+#[path = "benchkit.rs"]
+mod benchkit;
+
+use dtw_bounds::data::rng::Rng;
+use dtw_bounds::delta::Squared;
+use dtw_bounds::index::{DtwIndex, QueryOptions};
+use dtw_bounds::metrics::{Summary, Table};
+
+/// Smooth random-walk series (same workload family as `dtw_kernel`).
+fn walk(rng: &mut Rng, l: usize) -> Vec<f64> {
+    let mut v = 0.0;
+    (0..l)
+        .map(|_| {
+            v += rng.normal() * 0.5;
+            v
+        })
+        .collect()
+}
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let knobs = benchkit::Knobs::from_env();
+    let l = env_usize("DTWB_SERIES_LEN", 256);
+    let n = env_usize("DTWB_CANDIDATES", 400);
+    let nq = env_usize("DTWB_QUERIES", 24);
+    let threads = env_usize("DTWB_THREADS", 4);
+    let w = (l / 10).max(1);
+    let mut rng = Rng::seeded(0x5A7E);
+
+    let train: Vec<Vec<f64>> = (0..n).map(|_| walk(&mut rng, l)).collect();
+    let queries: Vec<Vec<f64>> = (0..nq).map(|_| walk(&mut rng, l)).collect();
+    let snap_path = std::env::temp_dir()
+        .join(format!("dtwb_bench_persist_{}.snap", std::process::id()));
+
+    // ----------------------------------------------------------------
+    // Cold start: snapshot load vs raw rebuild.
+    // ----------------------------------------------------------------
+    benchkit::banner(&format!(
+        "Cold start to a ready index (l={l}, w={w}, n={n}, 2 shards)"
+    ));
+    let reference = DtwIndex::builder(train.clone())
+        .window(w)
+        .shards(2)
+        .build()
+        .expect("one shared length");
+    let bytes = reference.save(&snap_path).expect("write snapshot");
+
+    let rebuild_ms = Summary::of(&benchkit::time_reps(knobs.repeats, || {
+        let idx = DtwIndex::builder(train.clone())
+            .window(w)
+            .shards(2)
+            .build()
+            .expect("one shared length");
+        std::hint::black_box(idx.len());
+    }))
+    .mean
+        * 1e3;
+    let load_ms = Summary::of(&benchkit::time_reps(knobs.repeats, || {
+        let idx = DtwIndex::load(&snap_path).expect("read snapshot");
+        std::hint::black_box(idx.len());
+    }))
+    .mean
+        * 1e3;
+
+    let mut cold_table = Table::new(vec!["phase", "ms", "vs rebuild"]);
+    cold_table.row(vec![
+        "rebuild".into(),
+        format!("{rebuild_ms:.2}"),
+        "1.00x".into(),
+    ]);
+    cold_table.row(vec![
+        "load".into(),
+        format!("{load_ms:.2}"),
+        format!("{:.2}x", rebuild_ms / load_ms.max(1e-9)),
+    ]);
+    println!("{}", cold_table.to_markdown());
+    println!("(snapshot: {bytes} bytes on disk)");
+    let cold_records = vec![
+        benchkit::ColdStartRecord {
+            phase: "rebuild".into(),
+            series: n,
+            series_len: l,
+            shards: 2,
+            bytes: 0,
+            millis: rebuild_ms,
+        },
+        benchkit::ColdStartRecord {
+            phase: "load".into(),
+            series: n,
+            series_len: l,
+            shards: 2,
+            bytes,
+            millis: load_ms,
+        },
+    ];
+
+    // Sanity: the loaded index must answer exactly like the reference
+    // (cheap spot check so a broken trajectory never goes unnoticed).
+    let loaded = DtwIndex::load(&snap_path).expect("read snapshot");
+    let a = reference.knn::<Squared>(&queries[0], 3);
+    let b = loaded.knn::<Squared>(&queries[0], 3);
+    assert_eq!(a.distances(), b.distances(), "snapshot must be bit-equal");
+
+    // ----------------------------------------------------------------
+    // Sharded k-NN throughput at 1/2/4 shards.
+    // ----------------------------------------------------------------
+    benchkit::banner(&format!(
+        "Sharded k-NN queries/sec (k=3, LB_Webb, threads={threads})"
+    ));
+    let mut scaling_table = Table::new(vec!["shards", "threads", "queries/s", "vs 1 shard"]);
+    let mut scaling_records: Vec<benchkit::ShardScalingRecord> = Vec::new();
+    let mut base_qps = 0.0f64;
+    for &shards in &[1usize, 2, 4] {
+        let index = DtwIndex::builder(train.clone())
+            .window(w)
+            .shards(shards)
+            .threads(threads)
+            .build()
+            .expect("one shared length");
+        let mut searcher = index.searcher();
+        let opts = QueryOptions::k(3);
+        let mean = Summary::of(&benchkit::time_reps(knobs.repeats, || {
+            let mut acc = 0usize;
+            for q in &queries {
+                acc += searcher.query_values::<Squared>(q, &opts).neighbors.len();
+            }
+            std::hint::black_box(acc);
+        }))
+        .mean;
+        let qps = nq as f64 / mean;
+        if shards == 1 {
+            base_qps = qps;
+        }
+        scaling_table.row(vec![
+            shards.to_string(),
+            threads.to_string(),
+            format!("{qps:.1}"),
+            format!("{:.2}x", qps / base_qps),
+        ]);
+        scaling_records.push(benchkit::ShardScalingRecord {
+            shards,
+            threads,
+            queries: nq,
+            queries_per_sec: qps,
+        });
+    }
+    println!("{}", scaling_table.to_markdown());
+
+    std::fs::remove_file(&snap_path).ok();
+
+    // cargo runs bench binaries with cwd = the package root (rust/);
+    // anchor the trajectory file at the workspace root regardless.
+    let out_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_index_persist.json");
+    benchkit::write_index_persist_json(out_path, &cold_records, &scaling_records)
+        .expect("write BENCH_index_persist.json");
+    println!(
+        "wrote BENCH_index_persist.json ({} cold-start + {} shard-scaling records)",
+        cold_records.len(),
+        scaling_records.len()
+    );
+}

@@ -18,6 +18,18 @@
 //! pointer indirection, no partial cache lines, hardware-prefetch
 //! friendly. Values are copied out of the prepared series once per
 //! index build ([`EnvelopeStore::rebuild`] reuses the allocation).
+//!
+//! The flat layout is also the crate's **persistence payload**: a
+//! snapshot stores each shard's padded buffer verbatim
+//! ([`EnvelopeStore::payload`]) so that loading is a length check plus
+//! one bulk copy back into a fresh 64-byte-aligned allocation
+//! ([`EnvelopeStore::from_payload`]) — no per-series re-preparation on
+//! the cold-start path. [`ShardStore`] pairs a store with the global
+//! candidate range it owns; [`partition_shards`] cuts a training set
+//! into the contiguous per-shard stores the sharded search and the
+//! snapshot format both consume.
+
+use std::ops::Range;
 
 use super::PreparedSeries;
 
@@ -102,6 +114,13 @@ impl EnvelopeStore {
         self.stride
     }
 
+    /// The row stride any store uses for series length `l` — what the
+    /// snapshot format records and validates against.
+    #[inline]
+    pub fn stride_for(l: usize) -> usize {
+        l.div_ceil(LANE) * LANE
+    }
+
     /// Lower-envelope row of series `t` (length ℓ, 64-byte aligned).
     #[inline]
     pub fn lo_row(&self, t: usize) -> &[f64] {
@@ -116,6 +135,56 @@ impl EnvelopeStore {
         debug_assert!(t < self.n);
         let start = (self.n + t) * self.stride;
         &self.flat()[start..start + self.l]
+    }
+
+    /// The padded flat payload — all `lo` rows then all `up` rows,
+    /// exactly `2 * len() * stride()` f64s (pad lanes are zero). This is
+    /// what the snapshot format serializes; [`EnvelopeStore::from_payload`]
+    /// restores it with one bulk copy.
+    #[inline]
+    pub fn payload(&self) -> &[f64] {
+        &self.flat()[..2 * self.n * self.stride]
+    }
+
+    /// Rebuild a store from a padded flat payload (the inverse of
+    /// [`EnvelopeStore::payload`]): a length check, a fresh 64-byte-
+    /// aligned allocation, and one bulk copy. Errors when the payload
+    /// size does not match `2 * n * stride(l)`.
+    pub fn from_payload(n: usize, l: usize, payload: &[f64]) -> Result<EnvelopeStore, String> {
+        let mut store = EnvelopeStore::sized(n, l, payload.len())?;
+        let want = 2 * n * store.stride;
+        store.flat_mut()[..want].copy_from_slice(payload);
+        Ok(store)
+    }
+
+    /// [`EnvelopeStore::from_payload`] straight from little-endian
+    /// bytes (8 per f64, raw bits): the snapshot loader's path —
+    /// decodes directly into the fresh aligned allocation, with no
+    /// intermediate `Vec<f64>`.
+    pub fn from_le_payload(n: usize, l: usize, bytes: &[u8]) -> Result<EnvelopeStore, String> {
+        if bytes.len() % 8 != 0 {
+            return Err(format!("envelope payload of {} bytes is not 8-aligned", bytes.len()));
+        }
+        let mut store = EnvelopeStore::sized(n, l, bytes.len() / 8)?;
+        let want = 2 * n * store.stride;
+        for (slot, chunk) in store.flat_mut()[..want].iter_mut().zip(bytes.chunks_exact(8)) {
+            *slot = f64::from_bits(u64::from_le_bytes(chunk.try_into().expect("8 bytes")));
+        }
+        Ok(store)
+    }
+
+    /// Shared shape validation + aligned allocation for the payload
+    /// constructors: `values` is the payload length in f64s.
+    fn sized(n: usize, l: usize, values: usize) -> Result<EnvelopeStore, String> {
+        let stride = l.div_ceil(LANE) * LANE;
+        let want = 2 * n * stride;
+        if values != want {
+            return Err(format!(
+                "envelope payload holds {values} values, expected {want} \
+                 (n={n}, l={l}, stride={stride})"
+            ));
+        }
+        Ok(EnvelopeStore { n, l, stride, buf: vec![CacheLine([0.0; LANE]); (want / LANE).max(1)] })
     }
 
     #[inline]
@@ -136,6 +205,81 @@ impl EnvelopeStore {
             )
         }
     }
+}
+
+/// One shard of a sharded index: a contiguous slice of the global
+/// candidate set, owned as a flat [`EnvelopeStore`]. Shard `s` covers
+/// global candidate ids `range()`; row `t` of the store is global
+/// candidate `start() + t`. Contiguity is what makes sharded search
+/// trivially bit-equal to serial: the union of the shard ranges *is*
+/// the serial candidate order, and every kernel merges through a total
+/// `(distance, index)` order.
+#[derive(Debug, Clone, Default)]
+pub struct ShardStore {
+    start: usize,
+    store: EnvelopeStore,
+}
+
+impl ShardStore {
+    /// A shard covering global candidates `start .. start + store.len()`.
+    pub fn new(start: usize, store: EnvelopeStore) -> ShardStore {
+        ShardStore { start, store }
+    }
+
+    /// First global candidate id this shard owns.
+    #[inline]
+    pub fn start(&self) -> usize {
+        self.start
+    }
+
+    /// Number of candidates in this shard.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.store.len()
+    }
+
+    /// True when the shard owns no candidates.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.store.is_empty()
+    }
+
+    /// Global candidate ids owned by this shard.
+    #[inline]
+    pub fn range(&self) -> Range<usize> {
+        self.start..self.start + self.store.len()
+    }
+
+    /// The shard's flat envelope store (row `t` = global candidate
+    /// `start() + t`).
+    #[inline]
+    pub fn store(&self) -> &EnvelopeStore {
+        &self.store
+    }
+}
+
+/// Cut `train` into `shards` contiguous [`ShardStore`]s (deterministic:
+/// the first `n % shards` shards get one extra candidate, so shard
+/// sizes differ by at most one and the partition depends only on
+/// `(n, shards)`). `shards` is clamped to `1..=n`; an empty training
+/// set yields no shards.
+pub fn partition_shards(train: &[PreparedSeries], shards: usize) -> Vec<ShardStore> {
+    let n = train.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let shards = shards.clamp(1, n);
+    let base = n / shards;
+    let extra = n % shards;
+    let mut out = Vec::with_capacity(shards);
+    let mut start = 0usize;
+    for s in 0..shards {
+        let len = base + usize::from(s < extra);
+        out.push(ShardStore::new(start, EnvelopeStore::build(&train[start..start + len])));
+        start += len;
+    }
+    debug_assert_eq!(start, n, "shards cover every candidate exactly once");
+    out
 }
 
 #[cfg(test)]
@@ -192,5 +336,73 @@ mod tests {
         }
         store.rebuild(&[]);
         assert!(store.is_empty());
+    }
+
+    #[test]
+    fn payload_round_trips_bit_exactly() {
+        let mut rng = Rng::seeded(80);
+        for &(n, l, w) in &[(0usize, 0usize, 0usize), (1, 5, 1), (4, 33, 3), (7, 64, 2)] {
+            let train = series(&mut rng, n, l, w);
+            let store = EnvelopeStore::build(&train);
+            let payload = store.payload().to_vec();
+            assert_eq!(payload.len(), 2 * n * store.stride());
+            let restored = EnvelopeStore::from_payload(n, l, &payload).unwrap();
+            assert_eq!(restored.len(), store.len());
+            assert_eq!(restored.series_len(), store.series_len());
+            assert_eq!(restored.stride(), store.stride());
+            for t in 0..n {
+                assert_eq!(restored.lo_row(t), store.lo_row(t), "lo n={n} l={l} t={t}");
+                assert_eq!(restored.up_row(t), store.up_row(t), "up n={n} l={l} t={t}");
+                assert_eq!(restored.lo_row(t).as_ptr() as usize % 64, 0, "alignment survives");
+            }
+            // The byte-decoding constructor agrees bit-for-bit.
+            let bytes: Vec<u8> =
+                payload.iter().flat_map(|v| v.to_bits().to_le_bytes()).collect();
+            let from_bytes = EnvelopeStore::from_le_payload(n, l, &bytes).unwrap();
+            for t in 0..n {
+                assert_eq!(from_bytes.lo_row(t), store.lo_row(t), "le lo n={n} l={l} t={t}");
+                assert_eq!(from_bytes.up_row(t), store.up_row(t), "le up n={n} l={l} t={t}");
+            }
+            assert!(EnvelopeStore::from_le_payload(n, l, &bytes[..bytes.len() / 2]).is_err()
+                || n == 0);
+        }
+    }
+
+    #[test]
+    fn from_payload_rejects_wrong_sizes() {
+        let mut rng = Rng::seeded(81);
+        let train = series(&mut rng, 3, 10, 1);
+        let store = EnvelopeStore::build(&train);
+        let mut payload = store.payload().to_vec();
+        payload.pop();
+        assert!(EnvelopeStore::from_payload(3, 10, &payload).is_err());
+        assert!(EnvelopeStore::from_payload(2, 10, store.payload()).is_err());
+        assert!(EnvelopeStore::from_payload(3, 11, store.payload()).is_err());
+    }
+
+    #[test]
+    fn partition_covers_every_candidate_once() {
+        let mut rng = Rng::seeded(82);
+        for &(n, shards) in &[(1usize, 1usize), (5, 2), (10, 3), (10, 7), (4, 9), (12, 1)] {
+            let train = series(&mut rng, n, 16, 2);
+            let parts = partition_shards(&train, shards);
+            assert_eq!(parts.len(), shards.clamp(1, n), "n={n} shards={shards}");
+            let mut next = 0usize;
+            for p in &parts {
+                assert_eq!(p.start(), next, "contiguous");
+                assert!(!p.is_empty());
+                for (t_local, t_global) in p.range().enumerate() {
+                    assert_eq!(p.store().lo_row(t_local), train[t_global].lo.as_slice());
+                    assert_eq!(p.store().up_row(t_local), train[t_global].up.as_slice());
+                }
+                next = p.range().end;
+            }
+            assert_eq!(next, n, "full coverage");
+            // Sizes differ by at most one.
+            let sizes: Vec<usize> = parts.iter().map(|p| p.len()).collect();
+            let (min, max) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(max - min <= 1, "balanced: {sizes:?}");
+        }
+        assert!(partition_shards(&[], 4).is_empty());
     }
 }

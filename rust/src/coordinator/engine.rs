@@ -118,6 +118,30 @@ impl NnEngine {
         Ok(())
     }
 
+    /// The index this engine serves.
+    pub fn index(&self) -> &DtwIndex {
+        self.searcher.index()
+    }
+
+    /// Swap the served index: the engine rebuilds its searcher (scratch,
+    /// RNG, sort buffers) around the new index while **keeping its
+    /// current backend attachment** — which screening backend serves is
+    /// a deployment choice (`serve --backend`, an explicit
+    /// [`NnEngine::set_backend`]), so a hot-swap must not silently flip
+    /// it to whatever the snapshot's stored config names (scalar-only
+    /// snapshots would drop a native prefilter; native snapshots would
+    /// override `--no-batch`). This is the `load=<path>;` protocol
+    /// verb's engine half: a running router hot-swaps onto a snapshot
+    /// without restarting and without changing how it screens.
+    pub fn replace_index(&mut self, index: DtwIndex) {
+        let backend = self.searcher.take_backend();
+        self.searcher = index.searcher();
+        match backend {
+            Some(b) => self.searcher.set_backend(b),
+            None => self.searcher.clear_backend(),
+        }
+    }
+
     /// True when a batched screening backend is attached.
     pub fn has_batch_path(&self) -> bool {
         self.searcher.has_backend()
@@ -206,6 +230,35 @@ mod tests {
             assert_eq!(resp.result.distance, truth.distance);
             assert_eq!(resp.path, EnginePath::Scalar);
         }
+    }
+
+    #[test]
+    fn replace_index_keeps_the_serving_backend_attachment() {
+        let ds = &generate_archive(&ArchiveSpec::new(Scale::Tiny, 65))[0];
+        // A scalar-only engine must stay scalar-only even when the new
+        // index's stored config names the native backend…
+        let scalar_idx = crate::index::DtwIndex::builder_from_dataset(ds)
+            .backend(crate::runtime::BackendKind::None)
+            .build()
+            .unwrap();
+        let native_idx = crate::index::DtwIndex::builder_from_dataset(ds)
+            .backend(crate::runtime::BackendKind::Native)
+            .build()
+            .unwrap();
+        let mut engine = NnEngine::from_index(scalar_idx.clone());
+        assert!(!engine.has_batch_path());
+        engine.replace_index(native_idx.clone());
+        assert!(!engine.has_batch_path(), "load must not silently attach a backend");
+        // …and a batched engine must keep its prefilter when the new
+        // index's stored config says none.
+        let mut engine = NnEngine::from_index(native_idx);
+        assert_eq!(engine.backend_name(), Some("native"));
+        engine.replace_index(scalar_idx);
+        assert_eq!(
+            engine.backend_name(),
+            Some("native"),
+            "load must not silently drop the serving backend"
+        );
     }
 
     #[test]

@@ -11,12 +11,15 @@
 //!   [`crate::index::Searcher`] over a shared [`crate::index::DtwIndex`]
 //!   plus an optional batched screening backend
 //!   ([`crate::runtime::LbBackend`]), answering exact k-NN DTW queries.
-//! * [`router`] — request router and **dynamic batcher**: concurrent
-//!   clients enqueue queries; the dispatch loop drains the queue and
-//!   routes a full batch through the engine's backend (native Rust by
-//!   default, one XLA execution per batch with the `pjrt` feature) or
-//!   single queries through the scalar path, whichever is
-//!   available/profitable.
+//! * [`router`] — request router, **dynamic batcher** and multi-shard
+//!   coordinator: concurrent clients enqueue queries; the dispatch loop
+//!   drains the queue and routes a full batch through the engine's
+//!   backend (native Rust by default, one XLA execution per batch with
+//!   the `pjrt` feature) or single queries through the scalar path,
+//!   whichever is available/profitable. Snapshot control rides the same
+//!   loop: [`Router::save_snapshot`] serializes the served index and
+//!   [`Router::load_snapshot`] hot-swaps onto a persisted one (the
+//!   `save=`/`load=` protocol verbs).
 //! * [`server`] — a line-protocol TCP front end over the router (used by
 //!   `examples/serve.rs`; the wire format is specified with worked
 //!   examples in `docs/protocol.md`).
@@ -60,4 +63,5 @@ pub mod server;
 
 pub use engine::{EnginePath, NnEngine, QueryResponse};
 pub use pool::WorkerPool;
-pub use router::{Router, RouterStats};
+pub use router::{Router, RouterStats, SnapshotLoaded, SnapshotSaved};
+pub use server::Server;

@@ -13,11 +13,12 @@
 //! a shared [`DtwIndex`] and the dispatch thread builds its searcher
 //! from the index's configuration.
 
+use std::path::PathBuf;
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-use crate::index::{DtwIndex, QueryOptions, QueryOutcome};
+use crate::index::{DtwIndex, QueryOptions, QueryOutcome, SnapshotError};
 use crate::stream::{StreamReport, SubsequenceOptions};
 
 use super::engine::{NnEngine, QueryResponse};
@@ -25,7 +26,29 @@ use super::engine::{NnEngine, QueryResponse};
 enum Msg {
     Query(Vec<f64>, QueryOptions, Sender<QueryOutcome>),
     Stream(Vec<f64>, SubsequenceOptions, Sender<anyhow::Result<StreamReport>>),
+    Save(PathBuf, Sender<Result<SnapshotSaved, SnapshotError>>),
+    Load(PathBuf, Sender<Result<SnapshotLoaded, SnapshotError>>),
     Shutdown,
+}
+
+/// Receipt for a `save=` request: where the snapshot landed and its size.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SnapshotSaved {
+    /// Path the snapshot was written to.
+    pub path: PathBuf,
+    /// Bytes written.
+    pub bytes: u64,
+}
+
+/// Receipt for a `load=` request: the shape of the index now serving.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SnapshotLoaded {
+    /// Indexed series count.
+    pub series: usize,
+    /// Shard count.
+    pub shards: usize,
+    /// Warping window.
+    pub window: usize,
 }
 
 /// Handle to the dispatch thread. Cloneable senders, blocking `query`.
@@ -49,6 +72,10 @@ pub struct RouterStats {
     pub scalar: usize,
     /// Subsequence-search (`stream=`) requests served.
     pub streams: usize,
+    /// Snapshot `save=` requests served (successfully or not).
+    pub saves: usize,
+    /// Snapshot `load=` requests that swapped the served index.
+    pub loads: usize,
 }
 
 impl Router {
@@ -76,12 +103,21 @@ impl Router {
                         let _ = reply.send(engine.query_stream(&samples, opts));
                         continue;
                     }
+                    Ok(Msg::Save(path, reply)) => {
+                        serve_save(&mut engine, &mut stats, path, reply);
+                        continue;
+                    }
+                    Ok(Msg::Load(path, reply)) => {
+                        serve_load(&mut engine, &mut stats, path, reply);
+                        continue;
+                    }
                     Ok(Msg::Shutdown) | Err(_) => return stats,
                 };
                 // …then opportunistically drain whatever else is queued
                 // (dynamic batching: no artificial delay, batch = backlog).
                 let mut batch = vec![first];
                 let mut streams = Vec::new();
+                let mut controls = Vec::new();
                 let mut shutdown = false;
                 while batch.len() < max_batch {
                     match rx.try_recv() {
@@ -89,6 +125,10 @@ impl Router {
                         Ok(Msg::Stream(samples, opts, reply)) => {
                             streams.push((samples, opts, reply));
                         }
+                        // Snapshot control drained mid-batch runs after
+                        // the batch, like streams: queries already queued
+                        // are answered by the index they were sent to.
+                        Ok(m @ Msg::Save(..)) | Ok(m @ Msg::Load(..)) => controls.push(m),
                         Ok(Msg::Shutdown) => {
                             shutdown = true;
                             break;
@@ -122,6 +162,17 @@ impl Router {
                 for (samples, opts, reply) in streams {
                     stats.streams += 1;
                     let _ = reply.send(engine.query_stream(&samples, opts));
+                }
+                for msg in controls {
+                    match msg {
+                        Msg::Save(path, reply) => {
+                            serve_save(&mut engine, &mut stats, path, reply)
+                        }
+                        Msg::Load(path, reply) => {
+                            serve_load(&mut engine, &mut stats, path, reply)
+                        }
+                        _ => unreachable!("only snapshot control is deferred"),
+                    }
                 }
                 if shutdown {
                     return stats;
@@ -182,6 +233,32 @@ impl Router {
         reply_rx.recv().expect("router answers")
     }
 
+    /// Snapshot the currently served index to `path` (the `save=`
+    /// protocol verb): the dispatch thread serializes its engine's index
+    /// after any in-flight batch, so the snapshot is a consistent
+    /// point-in-time image. Blocks for the receipt.
+    pub fn save_snapshot(
+        &self,
+        path: impl Into<PathBuf>,
+    ) -> Result<SnapshotSaved, SnapshotError> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx.send(Msg::Save(path.into(), reply_tx)).expect("router alive");
+        reply_rx.recv().expect("router answers")
+    }
+
+    /// Hot-swap the served index from the snapshot at `path` (the
+    /// `load=` protocol verb). Queries queued before the swap are
+    /// answered by the old index; a failed load leaves it serving
+    /// untouched. Blocks for the receipt.
+    pub fn load_snapshot(
+        &self,
+        path: impl Into<PathBuf>,
+    ) -> Result<SnapshotLoaded, SnapshotError> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx.send(Msg::Load(path.into(), reply_tx)).expect("router alive");
+        reply_rx.recv().expect("router answers")
+    }
+
     /// Stop the dispatch loop and collect its statistics.
     pub fn shutdown(mut self) -> RouterStats {
         let _ = self.tx.send(Msg::Shutdown);
@@ -192,6 +269,39 @@ impl Router {
     pub fn settle(&self) {
         std::thread::sleep(Duration::from_millis(10));
     }
+}
+
+/// Serve one `save=` control message on the dispatch thread.
+fn serve_save(
+    engine: &mut NnEngine,
+    stats: &mut RouterStats,
+    path: PathBuf,
+    reply: Sender<Result<SnapshotSaved, SnapshotError>>,
+) {
+    stats.saves += 1;
+    let r = engine.index().save(&path).map(|bytes| SnapshotSaved { path, bytes });
+    let _ = reply.send(r);
+}
+
+/// Serve one `load=` control message on the dispatch thread. A failed
+/// load leaves the current index serving.
+fn serve_load(
+    engine: &mut NnEngine,
+    stats: &mut RouterStats,
+    path: PathBuf,
+    reply: Sender<Result<SnapshotLoaded, SnapshotError>>,
+) {
+    let r = DtwIndex::load(&path).map(|idx| {
+        let info = SnapshotLoaded {
+            series: idx.len(),
+            shards: idx.shard_count(),
+            window: idx.window(),
+        };
+        engine.replace_index(idx);
+        stats.loads += 1;
+        info
+    });
+    let _ = reply.send(r);
 }
 
 impl Drop for Router {
@@ -294,6 +404,43 @@ mod tests {
         let stats = router.shutdown();
         assert_eq!(stats.streams, 2);
         assert_eq!(stats.served, 0, "stream requests are not query traffic");
+    }
+
+    #[test]
+    fn save_and_load_round_trip_through_the_router() {
+        let ds = &generate_archive(&ArchiveSpec::new(Scale::Tiny, 75))[0];
+        let index = crate::index::DtwIndex::builder_from_dataset(ds)
+            .shards(2)
+            .build()
+            .unwrap();
+        let router = Router::spawn_index(index.clone());
+        let q = ds.test[0].values.clone();
+        let before = router.query_with(q.clone(), QueryOptions::k(3));
+
+        let path = std::env::temp_dir()
+            .join(format!("dtwb_router_snap_{}.snap", std::process::id()));
+        let saved = router.save_snapshot(&path).unwrap();
+        assert!(saved.bytes > 0);
+        assert_eq!(saved.path, path);
+
+        // Swap onto the snapshot we just wrote: answers are bit-equal.
+        let loaded = router.load_snapshot(&path).unwrap();
+        assert_eq!(loaded.series, index.len());
+        assert_eq!(loaded.shards, 2);
+        assert_eq!(loaded.window, index.window());
+        let after = router.query_with(q, QueryOptions::k(3));
+        assert_eq!(before.distances(), after.distances());
+
+        // A failed load is a typed error and leaves the index serving.
+        let missing = std::env::temp_dir().join("dtwb_router_missing.snap");
+        assert!(router.load_snapshot(&missing).is_err());
+        let still = router.query_with(ds.test[1].values.clone(), QueryOptions::k(1));
+        assert!(!still.neighbors.is_empty());
+
+        let stats = router.shutdown();
+        assert_eq!(stats.saves, 1);
+        assert_eq!(stats.loads, 1, "the failed load must not count");
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -20,6 +20,13 @@
 //!   [`crate::stream`]). Response: `stream
 //!   matches=<start>:<neighbor>:<label>:<dist>,... windows=<n>
 //!   pruned=<p> dtw=<d> us=<u128>` (`matches=-` when none);
+//! * snapshot control: `save=<path>;` serializes the served index to a
+//!   versioned, checksummed snapshot (`saved path=<p> bytes=<n>`);
+//!   `load=<path>;` hot-swaps the served index from a snapshot
+//!   (`loaded series=<n> shards=<s> window=<w>`). Failures answer a
+//!   machine-parseable `err=<verb> <path>: <why>` line with a distinct
+//!   reason per failure mode (io, bad magic, unsupported version,
+//!   checksum mismatch, corruption) and leave the served index intact;
 //! * `PING` → `PONG`; malformed input → `ERR <why>`.
 //!
 //! One thread per connection feeds the shared router, whose dispatch loop
@@ -149,6 +156,32 @@ fn respond(line: &str, router: &Router, default_k: usize) -> String {
     // `stream=<params>;` selects subsequence search for this request.
     if let Some(rest) = line.strip_prefix("stream=") {
         return respond_stream(rest, router);
+    }
+    // Snapshot control: `save=<path>;` / `load=<path>;`. Failures answer
+    // a machine-parseable `err=<verb> <why>` line (distinct per failure
+    // mode — io, bad magic, version, checksum, corruption) and never
+    // kill the connection or the served index.
+    if let Some(rest) = line.strip_prefix("save=") {
+        let path = rest.trim().trim_end_matches(';').trim();
+        if path.is_empty() {
+            return "err=save expected save=<path>;".into();
+        }
+        return match router.save_snapshot(path) {
+            Ok(r) => format!("saved path={} bytes={}", r.path.display(), r.bytes),
+            Err(e) => format!("err=save {path}: {e}"),
+        };
+    }
+    if let Some(rest) = line.strip_prefix("load=") {
+        let path = rest.trim().trim_end_matches(';').trim();
+        if path.is_empty() {
+            return "err=load expected load=<path>;".into();
+        }
+        return match router.load_snapshot(path) {
+            Ok(r) => {
+                format!("loaded series={} shards={} window={}", r.series, r.shards, r.window)
+            }
+            Err(e) => format!("err=load {path}: {e}"),
+        };
     }
     // Optional `k=<n>;` / `threads=<n>;` prefixes (any order) select
     // k-NN depth and the per-query screening thread count.
@@ -361,5 +394,61 @@ mod tests {
         // per-connection threads, which read until client EOF.
         drop(lines);
         server.shutdown();
+    }
+
+    #[test]
+    fn snapshot_verbs_round_trip_and_fail_typed() {
+        let ds = &generate_archive(&ArchiveSpec::new(Scale::Tiny, 82))[0];
+        let index = crate::index::DtwIndex::builder_from_dataset(ds)
+            .shards(2)
+            .build()
+            .unwrap();
+        let router = Arc::new(Router::spawn_index(index.clone()));
+        let server = Server::spawn("127.0.0.1:0", router).unwrap();
+        let snap = std::env::temp_dir()
+            .join(format!("dtwb_server_snap_{}.snap", std::process::id()));
+        let bogus = std::env::temp_dir()
+            .join(format!("dtwb_server_bogus_{}.snap", std::process::id()));
+        std::fs::write(&bogus, b"definitely not a snapshot").unwrap();
+
+        let mut conn = TcpStream::connect(server.addr()).unwrap();
+        let q: Vec<String> = ds.test[0].values.iter().map(|v| v.to_string()).collect();
+        conn.write_all(format!("k=3;{}\n", q.join(",")).as_bytes()).unwrap();
+        conn.write_all(format!("save={};\n", snap.display()).as_bytes()).unwrap();
+        conn.write_all(format!("load={};\n", snap.display()).as_bytes()).unwrap();
+        conn.write_all(format!("k=3;{}\n", q.join(",")).as_bytes()).unwrap();
+        conn.write_all(b"save=\n").unwrap();
+        conn.write_all(b"load=/nonexistent/dir/idx.snap;\n").unwrap();
+        conn.write_all(format!("load={};\n", bogus.display()).as_bytes()).unwrap();
+
+        let mut lines = BufReader::new(conn).lines();
+        let before = lines.next().unwrap().unwrap();
+        assert!(before.starts_with("k=3 neighbors="), "{before}");
+        let saved = lines.next().unwrap().unwrap();
+        assert!(saved.starts_with("saved path="), "{saved}");
+        assert!(saved.contains("bytes="), "{saved}");
+        let loaded = lines.next().unwrap().unwrap();
+        assert!(
+            loaded.starts_with(&format!("loaded series={} shards=2", index.len())),
+            "{loaded}"
+        );
+        // Same answers from the snapshot-served index (strip timing).
+        let head = |s: &str| s.split(" path=").next().unwrap().to_string();
+        let after = lines.next().unwrap().unwrap();
+        assert_eq!(head(&after), head(&before), "snapshot serves bit-equal answers");
+        let empty = lines.next().unwrap().unwrap();
+        assert!(empty.starts_with("err=save expected"), "{empty}");
+        let missing = lines.next().unwrap().unwrap();
+        assert!(missing.starts_with("err=load ") && missing.contains("io:"), "{missing}");
+        let not_snap = lines.next().unwrap().unwrap();
+        assert!(
+            not_snap.starts_with("err=load ") && not_snap.contains("bad magic"),
+            "{not_snap}"
+        );
+
+        drop(lines);
+        server.shutdown();
+        std::fs::remove_file(&snap).ok();
+        std::fs::remove_file(&bogus).ok();
     }
 }

@@ -18,7 +18,7 @@ use super::{DtwIndex, IndexConfig};
 ///
 /// Defaults: window `max(1, ℓ/10)`, `LB_Webb`, [`SearchStrategy::Sorted`],
 /// [`BackendKind::Native`] batched prefilter, no z-normalization,
-/// `max_batch = 16`, single-threaded search.
+/// `max_batch = 16`, single-threaded search, one shard.
 #[derive(Debug, Clone)]
 pub struct DtwIndexBuilder {
     series: Vec<Vec<f64>>,
@@ -31,6 +31,7 @@ pub struct DtwIndexBuilder {
     znorm: bool,
     seed: u64,
     threads: usize,
+    shards: usize,
 }
 
 impl DtwIndexBuilder {
@@ -46,6 +47,7 @@ impl DtwIndexBuilder {
             znorm: false,
             seed: 0x5EED,
             threads: 1,
+            shards: 1,
         }
     }
 
@@ -122,6 +124,21 @@ impl DtwIndexBuilder {
         self
     }
 
+    /// Partition the candidates into `shards` contiguous shards, each
+    /// owning its own flat
+    /// [`EnvelopeStore`](crate::bounds::store::EnvelopeStore) (clamped
+    /// to `1..=n` at build time; sizes differ by at most one). A sharded
+    /// index fans every k-NN / 1-NN / stream search out **per shard**
+    /// on the executor with a shared best-so-far cutoff, store-capable
+    /// batched backends screen each shard's flat rows in place, and
+    /// snapshots persist the shards verbatim — the returned neighbors
+    /// and stream matches are **identical at every shard count**
+    /// (`rust/tests/persist.rs` pins sharded ≡ serial bit-exactly).
+    pub fn shards(mut self, shards: usize) -> DtwIndexBuilder {
+        self.shards = shards.max(1);
+        self
+    }
+
     /// Validate and build: prepares every series' envelopes once (the
     /// paper's off-query-path preparation step).
     ///
@@ -189,8 +206,21 @@ impl DtwIndexBuilder {
                 })
                 .collect()
         };
+        // Candidate ownership: cut the prepared set into contiguous
+        // per-shard flat stores — the unit of search fan-out, batched
+        // screening, and snapshot persistence. Built when sharding is
+        // requested or the configured backend screens straight off flat
+        // stores (Native); store-less configurations (single shard +
+        // scalar/PJRT screening) skip the copy entirely — `save()`
+        // materializes a transient single-shard partition instead.
+        let shards = if self.shards > 1 || self.backend == BackendKind::Native {
+            crate::bounds::store::partition_shards(&series, self.shards)
+        } else {
+            Vec::new()
+        };
         Ok(DtwIndex {
             train: Arc::new(PreparedTrainSet { labels, series, w }),
+            shards: Arc::new(shards),
             config: IndexConfig {
                 bound: self.bound,
                 strategy: self.strategy,

@@ -36,13 +36,17 @@
 
 mod builder;
 mod query;
+pub mod snapshot;
 
 pub use builder::DtwIndexBuilder;
 pub use query::{Neighbor, Query, QueryOptions, QueryOutcome};
+pub use snapshot::{SnapshotError, SnapshotInfo};
 
+use std::path::Path;
 use std::sync::Arc;
 use std::time::Instant;
 
+use crate::bounds::store::ShardStore;
 use crate::bounds::{BoundKind, Scratch};
 use crate::data::rng::Rng;
 use crate::data::znorm::znormalized;
@@ -52,8 +56,8 @@ use crate::dtw::dtw_ea;
 use crate::exec::Executor;
 use crate::runtime::{BackendKind, LbBackend, NativeBatchLb, Ranking};
 use crate::search::knn::{
-    knn_brute_force, knn_parallel, knn_random_order, knn_sorted, knn_sorted_precomputed,
-    KnnParams,
+    knn_brute_force, knn_parallel, knn_random_order, knn_sharded, knn_sorted,
+    knn_sorted_precomputed, KnnParams,
 };
 use crate::search::nn::NnResult;
 use crate::search::{PreparedTrainSet, SearchStrategy};
@@ -77,6 +81,14 @@ pub(crate) struct IndexConfig {
 #[derive(Debug, Clone)]
 pub struct DtwIndex {
     pub(crate) train: Arc<PreparedTrainSet>,
+    /// Contiguous per-shard flat envelope stores over the same
+    /// candidates ([`crate::bounds::store::partition_shards`]) — the
+    /// unit of search fan-out and the snapshot payload. One shard for
+    /// an unsharded index; empty when the index is empty **or** the
+    /// configuration never reads flat stores (single shard + non-store
+    /// backend — the builder skips the copy; `save()` materializes a
+    /// transient partition).
+    pub(crate) shards: Arc<Vec<ShardStore>>,
     pub(crate) config: IndexConfig,
 }
 
@@ -145,11 +157,50 @@ impl DtwIndex {
         self.config.znorm
     }
 
+    /// Number of materialized shards (`> 1` when built with
+    /// [`DtwIndexBuilder::shards`]; `0` when the index is empty or the
+    /// configuration carries no flat stores — single shard with a
+    /// non-store backend).
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The per-shard flat envelope stores, in global candidate order
+    /// (shard `s` owns candidates `shards()[s].range()`). May be empty
+    /// — see [`DtwIndex::shard_count`].
+    pub fn shards(&self) -> &[ShardStore] {
+        &self.shards
+    }
+
+    /// Serialize this index to a self-contained, versioned, checksummed
+    /// snapshot at `path`; returns the bytes written. A process holding
+    /// only the snapshot can serve the index ([`DtwIndex::load`],
+    /// `dtw-bounds serve --snapshot`) with **bit-identical** results —
+    /// see [`snapshot`] for the format and the determinism argument.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<u64, SnapshotError> {
+        snapshot::save(self, path.as_ref())
+    }
+
+    /// Load an index from a snapshot written by [`DtwIndex::save`].
+    /// Rejects non-snapshot files, truncation, bit corruption and
+    /// unknown versions with distinct [`SnapshotError`] variants.
+    pub fn load(path: impl AsRef<Path>) -> Result<DtwIndex, SnapshotError> {
+        snapshot::load(path.as_ref())
+    }
+
     /// A cheap handle with a different screening bound (shares the
     /// prepared data — nothing is recomputed).
     pub fn with_bound(&self, bound: BoundKind) -> DtwIndex {
         let mut out = self.clone();
         out.config.bound = bound;
+        out
+    }
+
+    /// A cheap handle whose new [`Searcher`]s carry a different batched
+    /// prefilter backend kind (shares the prepared data).
+    pub fn with_backend(&self, backend: BackendKind) -> DtwIndex {
+        let mut out = self.clone();
+        out.config.backend = backend;
         out
     }
 
@@ -284,6 +335,13 @@ impl Searcher {
         self.backend = None;
     }
 
+    /// Detach and return the batched backend, if any (used by engines
+    /// that hot-swap indexes but must keep their deployment-configured
+    /// backend attachment).
+    pub fn take_backend(&mut self) -> Option<Box<dyn LbBackend>> {
+        self.backend.take()
+    }
+
     /// Name of the attached screening backend, if any.
     pub fn backend_name(&self) -> Option<&'static str> {
         self.backend.as_ref().map(|b| b.name())
@@ -317,14 +375,26 @@ impl Searcher {
             SearchStrategy::SortedPrecomputed => SearchStrategy::Sorted,
             s => s,
         };
-        // Multi-threaded candidate screening (identical results at any
-        // thread count — see `search::knn::knn_parallel`). Brute force
+        // Sharded and/or multi-threaded candidate screening (identical
+        // results at any shard/thread count — see
+        // `search::knn::{knn_sharded, knn_parallel}`). A sharded index
+        // always fans out per shard, even on one thread; brute force
         // stays serial: it is the oracle baseline.
         let exec = Executor::new(opts.threads.unwrap_or(cfg.threads));
-        if exec.threads() > 1 && strategy != SearchStrategy::BruteForce && !train.is_empty() {
+        let sharded = self.index.shards.len() > 1;
+        if (sharded || exec.threads() > 1)
+            && strategy != SearchStrategy::BruteForce
+            && !train.is_empty()
+        {
             let owned = if znorm { znormalized(values) } else { values.to_vec() };
             let pq = cfg.bound.prepare_query(owned, train.w);
-            let (results, stats) = knn_parallel::<D>(&pq, train, cfg.bound, &params, &exec);
+            let (results, stats) = if sharded {
+                let ranges: Vec<std::ops::Range<usize>> =
+                    self.index.shards.iter().map(|s| s.range()).collect();
+                knn_sharded::<D>(&pq, train, &ranges, cfg.bound, &params, &exec)
+            } else {
+                knn_parallel::<D>(&pq, train, cfg.bound, &params, &exec)
+            };
             return QueryOutcome {
                 neighbors: results.into_iter().map(Neighbor::from).collect(),
                 stats,
@@ -513,7 +583,17 @@ impl Searcher {
         } else {
             vec![f64::INFINITY; q_views.len()]
         };
-        if let Err(e) = backend.rank_into(&q_views, &train.series, &seeds, &mut self.ranking) {
+        // A store-capable backend screens each shard's flat envelope
+        // rows in place (no concatenated copy, no backend-private cache);
+        // others take the PreparedSeries path. The matrix — and hence
+        // the walk — is bit-identical either way.
+        let shard_list = &*self.index.shards;
+        let ranked = if !shard_list.is_empty() && backend.supports_stores() {
+            backend.rank_sharded_into(&q_views, shard_list, &seeds, &mut self.ranking)
+        } else {
+            backend.rank_into(&q_views, &train.series, &seeds, &mut self.ranking)
+        };
+        if let Err(e) = ranked {
             log::warn!("batch prefilter failed ({e:#}); falling back to scalar");
             return self.scalar_fallback::<D>(&q_views, opts);
         }
@@ -694,8 +774,112 @@ mod tests {
         let (_, index) = index_for(96);
         let other = index.with_bound(BoundKind::Keogh).with_strategy(SearchStrategy::RandomOrder);
         assert!(Arc::ptr_eq(&index.train, &other.train));
+        assert!(Arc::ptr_eq(&index.shards, &other.shards));
         assert_eq!(other.bound(), BoundKind::Keogh);
         assert_eq!(other.strategy(), SearchStrategy::RandomOrder);
         assert_eq!(index.bound(), BoundKind::Webb, "original handle unchanged");
+        let nb = index.with_backend(crate::runtime::BackendKind::None);
+        assert_eq!(nb.backend(), crate::runtime::BackendKind::None);
+        assert!(!nb.searcher().has_backend());
+    }
+
+    #[test]
+    fn default_build_has_one_full_shard() {
+        let (ds, index) = index_for(97);
+        assert_eq!(index.shard_count(), 1, "native backend screens off the store");
+        assert_eq!(index.shards()[0].range(), 0..index.len());
+        let empty = DtwIndex::builder(Vec::new()).build().unwrap();
+        assert_eq!(empty.shard_count(), 0);
+        // Store-less configuration: single shard + non-store backend
+        // skips the flat-store copy entirely.
+        let storeless = DtwIndex::builder_from_dataset(&ds)
+            .backend(crate::runtime::BackendKind::None)
+            .build()
+            .unwrap();
+        assert_eq!(storeless.shard_count(), 0);
+        // …but sharding always materializes, whatever the backend.
+        let sharded = DtwIndex::builder_from_dataset(&ds)
+            .backend(crate::runtime::BackendKind::None)
+            .shards(2)
+            .build()
+            .unwrap();
+        assert_eq!(sharded.shard_count(), 2);
+    }
+
+    #[test]
+    fn sharded_index_matches_serial_results() {
+        let (ds, index) = index_for(98);
+        let serial = index.clone();
+        for shards in [2usize, 3, 7] {
+            let sharded = DtwIndex::builder_from_dataset(&ds).shards(shards).build().unwrap();
+            assert_eq!(sharded.shard_count(), shards.min(sharded.len()));
+            let mut s_serial = serial.searcher();
+            let mut s_sharded = sharded.searcher();
+            for q in ds.test.iter().take(3) {
+                for k in [1usize, 3] {
+                    let a = s_serial.query_values::<Squared>(&q.values, &QueryOptions::k(k));
+                    let b = s_sharded.query_values::<Squared>(&q.values, &QueryOptions::k(k));
+                    let pair = |o: &QueryOutcome| -> Vec<(usize, f64)> {
+                        o.neighbors.iter().map(|n| (n.index, n.distance)).collect()
+                    };
+                    assert_eq!(pair(&a), pair(&b), "shards={shards} k={k}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_batched_path_matches_brute_force() {
+        let (ds, index) = index_for(99);
+        let idx = DtwIndex::builder_from_dataset(&ds)
+            .bound(BoundKind::Keogh)
+            .strategy(SearchStrategy::SortedPrecomputed)
+            .shards(3)
+            .build()
+            .unwrap();
+        let mut searcher = idx.searcher();
+        let queries: Vec<Vec<f64>> = ds.test.iter().map(|s| s.values.clone()).collect();
+        assert!(queries.len() > 1, "need a real batch");
+        let outs = searcher.query_batch::<Squared>(&queries, &QueryOptions::k(3));
+        for (out, q) in outs.iter().zip(queries.iter()) {
+            assert!(out.batched);
+            let (truth, _) = knn_brute_force::<Squared>(q, index.train(), &KnnParams::k(3));
+            let want: Vec<f64> = truth.iter().map(|r| r.distance).collect();
+            assert_eq!(out.distances(), want);
+        }
+    }
+
+    #[test]
+    fn snapshot_round_trip_preserves_results_and_config() {
+        let (ds, _) = index_for(100);
+        let index = DtwIndex::builder_from_dataset(&ds)
+            .shards(3)
+            .znormalize(true)
+            .bound(BoundKind::Keogh)
+            .build()
+            .unwrap();
+        let path = std::env::temp_dir()
+            .join(format!("dtwb_idx_roundtrip_{}.snap", std::process::id()));
+        let bytes = index.save(&path).unwrap();
+        assert!(bytes > 0);
+        let loaded = DtwIndex::load(&path).unwrap();
+        assert_eq!(loaded.len(), index.len());
+        assert_eq!(loaded.window(), index.window());
+        assert_eq!(loaded.bound(), index.bound());
+        assert_eq!(loaded.shard_count(), index.shard_count());
+        assert!(loaded.znormalizes());
+        for (a, b) in index.train().series.iter().zip(loaded.train().series.iter()) {
+            assert_eq!(a.values, b.values);
+            assert_eq!(a.lo, b.lo);
+            assert_eq!(a.up, b.up);
+            assert_eq!(a.lo_of_up, b.lo_of_up);
+            assert_eq!(a.up_of_lo, b.up_of_lo);
+        }
+        for q in ds.test.iter().take(3) {
+            let a = index.knn::<Squared>(&q.values, 3);
+            let b = loaded.knn::<Squared>(&q.values, 3);
+            assert_eq!(a.distances(), b.distances());
+        }
+        std::fs::remove_file(&path).ok();
     }
 }

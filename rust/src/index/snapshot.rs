@@ -1,0 +1,773 @@
+//! The versioned, checksummed [`DtwIndex`] snapshot format — cold-start
+//! persistence for the sharded index, pure `std` (no serde).
+//!
+//! ## Why a custom format
+//!
+//! The win at scale (Keogh-style exact indexing, the UCR-suite
+//! discipline) comes from preparing bound metadata **once** and serving
+//! forever after from the prepared form. A snapshot therefore stores
+//! exactly what a serving process needs: the training series, labels,
+//! the z-norm policy and window/bound configuration, and — verbatim —
+//! every shard's flat 64-byte-aligned
+//! [`EnvelopeStore`](crate::bounds::store::EnvelopeStore) payload.
+//! Loading a shard is a length check plus one bulk copy back into a
+//! fresh aligned allocation; the only recomputation on the cold-start
+//! path is the `O(n·ℓ)` envelope-of-envelope pass, which is a
+//! deterministic pure function of the stored envelopes — so a loaded
+//! index produces **bit-identical** search results to the index that
+//! was saved, by construction (pinned by `rust/tests/persist.rs`).
+//!
+//! ## Layout (version 1, all integers/floats little-endian)
+//!
+//! ```text
+//! offset size  field
+//!      0    8  magic  "DTWBSNAP"
+//!      8    4  format version (u32) = 1
+//!     12    8  FNV-1a-64 checksum of the body (u64)
+//!     20    8  body length in bytes (u64)
+//!     28    …  body:
+//!              flags(u32: bit0 = znorm)
+//!              bound tag(u32) · bound k(u32) · strategy(u32) · backend(u32)
+//!              max_batch(u64) · seed(u64) · threads(u64)
+//!              shard count(u64) · n(u64) · ℓ(u64) · w(u64) · stride(u64)
+//!              labels: n × u32
+//!              values: n·ℓ × f64 (raw bits — exact round-trip)
+//!              per shard: size(u64), then 2·size·stride × f64
+//!                         (the shard's padded SoA payload: lo rows, up rows)
+//! ```
+//!
+//! Truncation, bit corruption and future versions are three *distinct*
+//! failures ([`SnapshotError::Truncated`],
+//! [`SnapshotError::ChecksumMismatch`],
+//! [`SnapshotError::UnsupportedVersion`]): the body length is checked
+//! before the checksum, and the checksum before any field is trusted.
+
+use std::fmt;
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::bounds::envelope;
+use crate::bounds::store::{EnvelopeStore, ShardStore};
+use crate::bounds::{BoundKind, PreparedSeries};
+use crate::runtime::BackendKind;
+use crate::search::{PreparedTrainSet, SearchStrategy};
+
+use super::{DtwIndex, IndexConfig};
+
+/// File magic: identifies a dtw-bounds index snapshot.
+pub const MAGIC: [u8; 8] = *b"DTWBSNAP";
+/// Current (and only) format version.
+pub const VERSION: u32 = 1;
+
+/// Everything that can go wrong reading or writing a snapshot. Each
+/// failure mode is a distinct variant so callers (CLI exit paths, the
+/// server's `err=` replies) can report *what* is wrong with the file,
+/// not just that something is.
+#[derive(Debug)]
+pub enum SnapshotError {
+    /// The underlying read/write failed (missing path, permissions, …).
+    Io(std::io::Error),
+    /// The file does not start with the snapshot magic — not a snapshot.
+    BadMagic,
+    /// The file is a snapshot from a newer (or unknown) format version.
+    UnsupportedVersion {
+        /// Version found in the file.
+        found: u32,
+        /// Highest version this build reads.
+        supported: u32,
+    },
+    /// The file is shorter than its header says it should be.
+    Truncated {
+        /// Which field/section ran out of bytes.
+        context: &'static str,
+    },
+    /// The body bytes do not hash to the stored checksum (bit rot,
+    /// partial overwrite, manual edits).
+    ChecksumMismatch {
+        /// Checksum recorded in the header.
+        stored: u64,
+        /// Checksum of the bytes actually present.
+        computed: u64,
+    },
+    /// The bytes are intact but the fields are inconsistent (impossible
+    /// shapes, unknown enum tags, trailing garbage).
+    Corrupt(String),
+}
+
+impl fmt::Display for SnapshotError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SnapshotError::Io(e) => write!(f, "io: {e}"),
+            SnapshotError::BadMagic => {
+                write!(f, "bad magic (not a dtw-bounds index snapshot)")
+            }
+            SnapshotError::UnsupportedVersion { found, supported } => {
+                write!(f, "unsupported snapshot version {found} (this build reads <= {supported})")
+            }
+            SnapshotError::Truncated { context } => {
+                write!(f, "truncated snapshot (ran out of bytes reading {context})")
+            }
+            SnapshotError::ChecksumMismatch { stored, computed } => {
+                write!(
+                    f,
+                    "checksum mismatch (header says {stored:#018x}, body hashes to \
+                     {computed:#018x})"
+                )
+            }
+            SnapshotError::Corrupt(why) => write!(f, "corrupt snapshot: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for SnapshotError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            SnapshotError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for SnapshotError {
+    fn from(e: std::io::Error) -> SnapshotError {
+        SnapshotError::Io(e)
+    }
+}
+
+/// The header of a snapshot, as `dtw-bounds index inspect` reports it —
+/// everything except the bulk payload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SnapshotInfo {
+    /// Format version.
+    pub version: u32,
+    /// Body checksum (FNV-1a 64).
+    pub checksum: u64,
+    /// Whole file size in bytes.
+    pub bytes: u64,
+    /// Indexed series count.
+    pub series: usize,
+    /// Series length ℓ.
+    pub series_len: usize,
+    /// Warping window.
+    pub window: usize,
+    /// Shard count.
+    pub shards: usize,
+    /// Screening bound.
+    pub bound: BoundKind,
+    /// Search strategy.
+    pub strategy: SearchStrategy,
+    /// Backend kind new searchers instantiate.
+    pub backend: BackendKind,
+    /// Whether the index z-normalizes (series are stored normalized).
+    pub znorm: bool,
+    /// Batched-prefilter batch cap.
+    pub max_batch: usize,
+    /// Configured search thread count.
+    pub threads: usize,
+    /// Random-order strategy seed.
+    pub seed: u64,
+}
+
+// ---------------------------------------------------------------------
+// Checksum + little-endian plumbing
+// ---------------------------------------------------------------------
+
+/// FNV-1a 64 over `bytes` — dependency-free, stable across platforms.
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h = (h ^ b as u64).wrapping_mul(PRIME);
+    }
+    h
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64s(out: &mut Vec<u8>, values: &[f64]) {
+    out.reserve(values.len() * 8);
+    for &v in values {
+        out.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+}
+
+/// Bounds-checked little-endian reader with typed truncation errors.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize, context: &'static str) -> Result<&'a [u8], SnapshotError> {
+        if self.buf.len() - self.pos < n {
+            return Err(SnapshotError::Truncated { context });
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    fn u32(&mut self, context: &'static str) -> Result<u32, SnapshotError> {
+        Ok(u32::from_le_bytes(self.take(4, context)?.try_into().expect("4 bytes")))
+    }
+
+    fn u64(&mut self, context: &'static str) -> Result<u64, SnapshotError> {
+        Ok(u64::from_le_bytes(self.take(8, context)?.try_into().expect("8 bytes")))
+    }
+
+    /// A u64 field that must fit a `usize` (impossible shapes become
+    /// typed corruption instead of a platform-dependent panic).
+    fn size(&mut self, context: &'static str) -> Result<usize, SnapshotError> {
+        usize::try_from(self.u64(context)?)
+            .map_err(|_| SnapshotError::Corrupt(format!("{context} overflows usize")))
+    }
+
+    fn f64s(&mut self, n: usize, context: &'static str) -> Result<Vec<f64>, SnapshotError> {
+        let len = n
+            .checked_mul(8)
+            .ok_or_else(|| SnapshotError::Corrupt(format!("{context} length overflows")))?;
+        let bytes = self.take(len, context)?;
+        Ok(bytes
+            .chunks_exact(8)
+            .map(|c| f64::from_bits(u64::from_le_bytes(c.try_into().expect("8 bytes"))))
+            .collect())
+    }
+
+    /// Bytes left unread — checked before any header-count-sized
+    /// allocation, so a checksum-valid file lying about its counts
+    /// fails typed instead of panicking/aborting on a huge reserve.
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn exhausted(&self) -> bool {
+        self.pos == self.buf.len()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Enum tags (append-only: new variants get new tags, old tags stay)
+// ---------------------------------------------------------------------
+
+fn encode_bound(bound: BoundKind) -> (u32, u32) {
+    match bound {
+        BoundKind::KimFL => (0, 0),
+        BoundKind::Keogh => (1, 0),
+        BoundKind::Improved => (2, 0),
+        BoundKind::Enhanced(k) => (3, k as u32),
+        BoundKind::Petitjean => (4, 0),
+        BoundKind::PetitjeanNoLr => (5, 0),
+        BoundKind::Webb => (6, 0),
+        BoundKind::WebbNoLr => (7, 0),
+        BoundKind::WebbStar => (8, 0),
+        BoundKind::WebbEnhanced(k) => (9, k as u32),
+        BoundKind::Cascade => (10, 0),
+        BoundKind::KeoghRev => (11, 0),
+        BoundKind::UcrCascade => (12, 0),
+    }
+}
+
+fn decode_bound(tag: u32, k: u32) -> Option<BoundKind> {
+    Some(match tag {
+        0 => BoundKind::KimFL,
+        1 => BoundKind::Keogh,
+        2 => BoundKind::Improved,
+        3 => BoundKind::Enhanced(k as usize),
+        4 => BoundKind::Petitjean,
+        5 => BoundKind::PetitjeanNoLr,
+        6 => BoundKind::Webb,
+        7 => BoundKind::WebbNoLr,
+        8 => BoundKind::WebbStar,
+        9 => BoundKind::WebbEnhanced(k as usize),
+        10 => BoundKind::Cascade,
+        11 => BoundKind::KeoghRev,
+        12 => BoundKind::UcrCascade,
+        _ => return None,
+    })
+}
+
+fn encode_strategy(s: SearchStrategy) -> u32 {
+    match s {
+        SearchStrategy::RandomOrder => 0,
+        SearchStrategy::Sorted => 1,
+        SearchStrategy::SortedPrecomputed => 2,
+        SearchStrategy::BruteForce => 3,
+    }
+}
+
+fn decode_strategy(tag: u32) -> Option<SearchStrategy> {
+    Some(match tag {
+        0 => SearchStrategy::RandomOrder,
+        1 => SearchStrategy::Sorted,
+        2 => SearchStrategy::SortedPrecomputed,
+        3 => SearchStrategy::BruteForce,
+        _ => return None,
+    })
+}
+
+fn encode_backend(b: BackendKind) -> u32 {
+    match b {
+        BackendKind::None => 0,
+        BackendKind::Native => 1,
+        BackendKind::Pjrt => 2,
+    }
+}
+
+fn decode_backend(tag: u32) -> Option<BackendKind> {
+    Some(match tag {
+        0 => BackendKind::None,
+        1 => BackendKind::Native,
+        2 => BackendKind::Pjrt,
+        _ => return None,
+    })
+}
+
+// ---------------------------------------------------------------------
+// Save
+// ---------------------------------------------------------------------
+
+/// Serialize `index` to `path`; returns the bytes written. The snapshot
+/// is self-contained: a process holding only this file can serve the
+/// index (see [`load`]). Series are stored **as indexed** — when the
+/// index z-normalizes, the stored values are the normalized ones, and
+/// the flag only governs query-time normalization after a load.
+///
+/// The write is **atomic at the path**: bytes land in a sibling
+/// `<path>.tmp` file which is renamed over `path` only once fully
+/// written, so a crash or full disk mid-save never destroys an existing
+/// good snapshot at the same path.
+pub fn save(index: &DtwIndex, path: &Path) -> Result<u64, SnapshotError> {
+    let train = &*index.train;
+    let n = train.len();
+    let l = train.series.first().map(|s| s.len()).unwrap_or(0);
+    let stride = EnvelopeStore::stride_for(l);
+    let cfg = &index.config;
+    // Store-less configurations (single shard + non-store backend) skip
+    // the flat-store build at index construction; the snapshot payload
+    // needs one, so materialize a transient single-shard partition here.
+    let transient;
+    let shard_list: &[ShardStore] = if index.shards.is_empty() && n > 0 {
+        transient = crate::bounds::store::partition_shards(&train.series, 1);
+        &transient
+    } else {
+        &index.shards
+    };
+
+    let mut body = Vec::with_capacity(64 + n * 4 + 2 * n * l * 8 + 2 * n * stride * 8);
+    put_u32(&mut body, u32::from(cfg.znorm));
+    let (bound_tag, bound_k) = encode_bound(cfg.bound);
+    put_u32(&mut body, bound_tag);
+    put_u32(&mut body, bound_k);
+    put_u32(&mut body, encode_strategy(cfg.strategy));
+    put_u32(&mut body, encode_backend(cfg.backend));
+    put_u64(&mut body, cfg.max_batch as u64);
+    put_u64(&mut body, cfg.seed);
+    put_u64(&mut body, cfg.threads as u64);
+    put_u64(&mut body, shard_list.len() as u64);
+    put_u64(&mut body, n as u64);
+    put_u64(&mut body, l as u64);
+    put_u64(&mut body, train.w as u64);
+    put_u64(&mut body, stride as u64);
+    for &label in &train.labels {
+        put_u32(&mut body, label);
+    }
+    for s in &train.series {
+        put_f64s(&mut body, &s.values);
+    }
+    for shard in shard_list {
+        put_u64(&mut body, shard.len() as u64);
+        put_f64s(&mut body, shard.store().payload());
+    }
+
+    // Write-then-rename so an interrupted save never clobbers an
+    // existing good snapshot at `path`; header and body stream to the
+    // file separately (no second snapshot-sized buffer).
+    let mut tmp_name = path.as_os_str().to_owned();
+    tmp_name.push(".tmp");
+    let tmp = std::path::PathBuf::from(tmp_name);
+    let write_all = |body: &[u8]| -> std::io::Result<()> {
+        use std::io::Write;
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(&MAGIC)?;
+        f.write_all(&VERSION.to_le_bytes())?;
+        f.write_all(&fnv1a64(body).to_le_bytes())?;
+        f.write_all(&(body.len() as u64).to_le_bytes())?;
+        f.write_all(body)?;
+        // Durable before the rename makes it visible.
+        f.sync_all()
+    };
+    if let Err(e) = write_all(&body) {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(SnapshotError::Io(e));
+    }
+    if let Err(e) = std::fs::rename(&tmp, path) {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(SnapshotError::Io(e));
+    }
+    Ok(28 + body.len() as u64)
+}
+
+// ---------------------------------------------------------------------
+// Load / inspect
+// ---------------------------------------------------------------------
+
+/// The validated pieces of a snapshot body, shared by [`load`] and
+/// [`inspect`]. In header-only mode ([`parse`] with
+/// `want_payload = false`) the payload sections are length-validated
+/// and skipped — `labels`/`values`/`shards` stay empty and nothing
+/// beyond the header is materialized.
+struct Parsed {
+    info: SnapshotInfo,
+    labels: Vec<u32>,
+    values: Vec<f64>,
+    shards: Vec<ShardStore>,
+}
+
+/// Read + validate the envelope of the file: magic, version, length,
+/// checksum. Returns the body slice and the header checksum.
+fn validated_body(bytes: &[u8]) -> Result<(&[u8], u64), SnapshotError> {
+    if bytes.len() < 12 {
+        return Err(SnapshotError::Truncated { context: "file header" });
+    }
+    if bytes[..8] != MAGIC {
+        return Err(SnapshotError::BadMagic);
+    }
+    let version = u32::from_le_bytes(bytes[8..12].try_into().expect("4 bytes"));
+    if version != VERSION {
+        return Err(SnapshotError::UnsupportedVersion { found: version, supported: VERSION });
+    }
+    if bytes.len() < 28 {
+        return Err(SnapshotError::Truncated { context: "file header" });
+    }
+    let stored = u64::from_le_bytes(bytes[12..20].try_into().expect("8 bytes"));
+    let body_len = u64::from_le_bytes(bytes[20..28].try_into().expect("8 bytes"));
+    let body = &bytes[28..];
+    let body_len = usize::try_from(body_len)
+        .map_err(|_| SnapshotError::Corrupt("body length overflows usize".into()))?;
+    if body.len() < body_len {
+        return Err(SnapshotError::Truncated { context: "snapshot body" });
+    }
+    if body.len() > body_len {
+        return Err(SnapshotError::Corrupt(format!(
+            "{} trailing bytes after the declared body",
+            body.len() - body_len
+        )));
+    }
+    let computed = fnv1a64(body);
+    if computed != stored {
+        return Err(SnapshotError::ChecksumMismatch { stored, computed });
+    }
+    Ok((body, stored))
+}
+
+fn parse(bytes: &[u8], want_payload: bool) -> Result<Parsed, SnapshotError> {
+    let (body, checksum) = validated_body(bytes)?;
+    let mut r = Reader::new(body);
+
+    let flags = r.u32("flags")?;
+    if flags & !1 != 0 {
+        return Err(SnapshotError::Corrupt(format!("unknown flag bits {flags:#x}")));
+    }
+    let znorm = flags & 1 == 1;
+    let bound_tag = r.u32("bound tag")?;
+    let bound_k = r.u32("bound k")?;
+    let bound = decode_bound(bound_tag, bound_k)
+        .ok_or_else(|| SnapshotError::Corrupt(format!("unknown bound tag {bound_tag}")))?;
+    let strategy_tag = r.u32("strategy tag")?;
+    let strategy = decode_strategy(strategy_tag)
+        .ok_or_else(|| SnapshotError::Corrupt(format!("unknown strategy tag {strategy_tag}")))?;
+    let backend_tag = r.u32("backend tag")?;
+    let backend = decode_backend(backend_tag)
+        .ok_or_else(|| SnapshotError::Corrupt(format!("unknown backend tag {backend_tag}")))?;
+    let max_batch = r.size("max_batch")?;
+    let seed = r.u64("seed")?;
+    let threads = r.size("threads")?;
+    let shard_count = r.size("shard count")?;
+    let n = r.size("series count")?;
+    let l = r.size("series length")?;
+    let w = r.size("window")?;
+    let stride = r.size("stride")?;
+
+    if n > 0 && l == 0 {
+        return Err(SnapshotError::Corrupt("non-empty index with empty series".into()));
+    }
+    if stride != EnvelopeStore::stride_for(l) {
+        return Err(SnapshotError::Corrupt(format!(
+            "stride {stride} does not match series length {l} (expected {})",
+            EnvelopeStore::stride_for(l)
+        )));
+    }
+    if (n == 0) != (shard_count == 0) {
+        return Err(SnapshotError::Corrupt(format!(
+            "{n} series across {shard_count} shards"
+        )));
+    }
+    if shard_count > n {
+        return Err(SnapshotError::Corrupt(format!(
+            "{shard_count} shards for {n} series"
+        )));
+    }
+
+    let label_bytes = n
+        .checked_mul(4)
+        .ok_or_else(|| SnapshotError::Corrupt("label count overflows".into()))?;
+    let mut labels = Vec::new();
+    if want_payload {
+        // Length before allocation: the checksum does not vouch for
+        // honesty (FNV is not cryptographic), so a crafted header's n
+        // must fail typed, never panic on the reserve.
+        if r.remaining() < label_bytes {
+            return Err(SnapshotError::Truncated { context: "labels" });
+        }
+        labels.reserve_exact(n);
+        for _ in 0..n {
+            labels.push(r.u32("labels")?);
+        }
+    } else {
+        r.take(label_bytes, "labels")?;
+    }
+    let n_values = n
+        .checked_mul(l)
+        .ok_or_else(|| SnapshotError::Corrupt("series shape overflows".into()))?;
+    let values = if want_payload {
+        r.f64s(n_values, "series values")?
+    } else {
+        r.take(
+            n_values
+                .checked_mul(8)
+                .ok_or_else(|| SnapshotError::Corrupt("series shape overflows".into()))?,
+            "series values",
+        )?;
+        Vec::new()
+    };
+
+    // Every shard section starts with an 8-byte size: bound the shard
+    // vector's reserve by the bytes actually present.
+    let shard_header_bytes = shard_count
+        .checked_mul(8)
+        .ok_or_else(|| SnapshotError::Corrupt("shard count overflows".into()))?;
+    if shard_header_bytes > r.remaining() {
+        return Err(SnapshotError::Truncated { context: "shard sizes" });
+    }
+    let mut shards = Vec::with_capacity(if want_payload { shard_count } else { 0 });
+    let mut start = 0usize;
+    for _ in 0..shard_count {
+        let shard_n = r.size("shard size")?;
+        if shard_n == 0 {
+            return Err(SnapshotError::Corrupt("empty shard".into()));
+        }
+        let payload_bytes = 2usize
+            .checked_mul(shard_n)
+            .and_then(|x| x.checked_mul(stride))
+            .and_then(|x| x.checked_mul(8))
+            .ok_or_else(|| SnapshotError::Corrupt("shard payload overflows".into()))?;
+        let raw = r.take(payload_bytes, "shard payload")?;
+        if want_payload {
+            // Decode straight into the fresh 64-byte-aligned allocation
+            // — no intermediate Vec<f64>.
+            let store = EnvelopeStore::from_le_payload(shard_n, l, raw)
+                .map_err(SnapshotError::Corrupt)?;
+            shards.push(ShardStore::new(start, store));
+        }
+        start += shard_n;
+    }
+    if start != n {
+        return Err(SnapshotError::Corrupt(format!(
+            "shards cover {start} series, header says {n}"
+        )));
+    }
+    if !r.exhausted() {
+        return Err(SnapshotError::Corrupt("trailing bytes in body".into()));
+    }
+
+    Ok(Parsed {
+        info: SnapshotInfo {
+            version: VERSION,
+            checksum,
+            bytes: bytes.len() as u64,
+            series: n,
+            series_len: l,
+            window: w,
+            shards: shard_count,
+            bound,
+            strategy,
+            backend,
+            znorm,
+            max_batch,
+            threads,
+            seed,
+        },
+        labels,
+        values,
+        shards,
+    })
+}
+
+/// Read the header of the snapshot at `path` (after verifying its
+/// checksum and internal consistency) — the `index inspect` entry
+/// point. Payload sections are length-validated and skipped, never
+/// decoded or materialized.
+pub fn inspect(path: &Path) -> Result<SnapshotInfo, SnapshotError> {
+    let bytes = std::fs::read(path)?;
+    Ok(parse(&bytes, false)?.info)
+}
+
+/// Deserialize the snapshot at `path` into a ready-to-serve
+/// [`DtwIndex`]. Per-shard envelope stores are restored with one bulk
+/// copy each; per-series envelopes are **views copied out of those
+/// stores** (the exact bits that were saved), and only the
+/// envelope-of-envelope pair is recomputed — a deterministic pure
+/// function of the stored envelopes, so search results are bit-equal to
+/// the saved index by construction.
+pub fn load(path: &Path) -> Result<DtwIndex, SnapshotError> {
+    let bytes = std::fs::read(path)?;
+    let Parsed { info, labels, values, shards } = parse(&bytes, true)?;
+    let (n, l, w) = (info.series, info.series_len, info.window);
+
+    let mut series = Vec::with_capacity(n);
+    for shard in &shards {
+        let store = shard.store();
+        for t_local in 0..store.len() {
+            let t = shard.start() + t_local;
+            let vals = values[t * l..(t + 1) * l].to_vec();
+            let lo = store.lo_row(t_local).to_vec();
+            let up = store.up_row(t_local).to_vec();
+            // Exactly PreparedSeries::prepare's derivation, from the
+            // *stored* envelopes.
+            let (lo_of_up, _) = envelope::envelopes(&up, w);
+            let (_, up_of_lo) = envelope::envelopes(&lo, w);
+            series.push(PreparedSeries { values: vals, w, lo, up, lo_of_up, up_of_lo });
+        }
+    }
+
+    Ok(DtwIndex {
+        train: Arc::new(PreparedTrainSet { labels, series, w }),
+        shards: Arc::new(shards),
+        config: IndexConfig {
+            bound: info.bound,
+            strategy: info.strategy,
+            backend: info.backend,
+            max_batch: info.max_batch,
+            znorm: info.znorm,
+            seed: info.seed,
+            threads: info.threads,
+        },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn enum_tags_round_trip() {
+        for &b in BoundKind::ALL {
+            let (tag, k) = encode_bound(b);
+            assert_eq!(decode_bound(tag, k), Some(b), "{b}");
+        }
+        // Parameterized families keep their k payload.
+        let (tag, k) = encode_bound(BoundKind::Enhanced(5));
+        assert_eq!(decode_bound(tag, k), Some(BoundKind::Enhanced(5)));
+        assert_eq!(decode_bound(99, 0), None);
+        for &s in SearchStrategy::ALL {
+            assert_eq!(decode_strategy(encode_strategy(s)), Some(s), "{s}");
+        }
+        assert_eq!(decode_strategy(99), None);
+        for b in [BackendKind::None, BackendKind::Native, BackendKind::Pjrt] {
+            assert_eq!(decode_backend(encode_backend(b)), Some(b));
+        }
+        assert_eq!(decode_backend(99), None);
+    }
+
+    #[test]
+    fn fnv_is_stable() {
+        // Pin the hash so snapshots stay readable across builds.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+    }
+
+    #[test]
+    fn checksum_valid_but_lying_header_fails_typed_not_panicking() {
+        // FNV is not cryptographic: a crafted file can carry a valid
+        // checksum over a header that lies about its counts. Declaring
+        // 2^61 series with no payload must fail with Truncated — never
+        // panic or abort on a count-sized allocation.
+        let mut body = Vec::new();
+        put_u32(&mut body, 0); // flags
+        put_u32(&mut body, 6); // bound: Webb
+        put_u32(&mut body, 0); // bound k
+        put_u32(&mut body, 1); // strategy: Sorted
+        put_u32(&mut body, 1); // backend: Native
+        put_u64(&mut body, 16); // max_batch
+        put_u64(&mut body, 0); // seed
+        put_u64(&mut body, 1); // threads
+        put_u64(&mut body, 1); // shard count
+        put_u64(&mut body, 1u64 << 61); // n — absurd
+        put_u64(&mut body, 1); // l
+        put_u64(&mut body, 1); // w
+        put_u64(&mut body, 8); // stride
+        let mut file = Vec::new();
+        file.extend_from_slice(&MAGIC);
+        file.extend_from_slice(&VERSION.to_le_bytes());
+        file.extend_from_slice(&fnv1a64(&body).to_le_bytes());
+        file.extend_from_slice(&(body.len() as u64).to_le_bytes());
+        file.extend_from_slice(&body);
+        assert!(matches!(parse(&file, true), Err(SnapshotError::Truncated { .. })));
+        assert!(matches!(parse(&file, false), Err(SnapshotError::Truncated { .. })));
+    }
+
+    #[test]
+    fn envelope_validation_rejects_bad_files() {
+        assert!(matches!(
+            validated_body(b"short"),
+            Err(SnapshotError::Truncated { .. })
+        ));
+        let mut not_magic = vec![0u8; 64];
+        not_magic[..8].copy_from_slice(b"NOTMAGIC");
+        assert!(matches!(validated_body(&not_magic), Err(SnapshotError::BadMagic)));
+
+        let mut future = Vec::new();
+        future.extend_from_slice(&MAGIC);
+        future.extend_from_slice(&(VERSION + 1).to_le_bytes());
+        future.extend_from_slice(&[0u8; 16]);
+        assert!(matches!(
+            validated_body(&future),
+            Err(SnapshotError::UnsupportedVersion { found, .. }) if found == VERSION + 1
+        ));
+
+        // Valid envelope around a 4-byte body, then corrupt one byte.
+        let body = 7u32.to_le_bytes();
+        let mut ok = Vec::new();
+        ok.extend_from_slice(&MAGIC);
+        ok.extend_from_slice(&VERSION.to_le_bytes());
+        ok.extend_from_slice(&fnv1a64(&body).to_le_bytes());
+        ok.extend_from_slice(&(body.len() as u64).to_le_bytes());
+        ok.extend_from_slice(&body);
+        assert!(validated_body(&ok).is_ok());
+        let mut flipped = ok.clone();
+        *flipped.last_mut().unwrap() ^= 0x40;
+        assert!(matches!(
+            validated_body(&flipped),
+            Err(SnapshotError::ChecksumMismatch { .. })
+        ));
+        let mut short = ok.clone();
+        short.truncate(ok.len() - 2);
+        assert!(matches!(
+            validated_body(&short),
+            Err(SnapshotError::Truncated { context: "snapshot body" })
+        ));
+        let mut long = ok;
+        long.push(0);
+        assert!(matches!(validated_body(&long), Err(SnapshotError::Corrupt(_))));
+    }
+}

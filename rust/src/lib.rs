@@ -68,7 +68,13 @@
 //!   `LB_IMPROVED`, `LB_ENHANCED`) plus the ablation variants
 //!   (`*_NoLR`) and the cascading evaluator from §8.
 //! * **The index facade** ([`index`]): builder-configured exact k-NN
-//!   search over a prepared corpus — the primary API.
+//!   search over a prepared corpus — the primary API. Candidates are
+//!   owned by contiguous **shards** (`DtwIndexBuilder::shards`), every
+//!   search path fans out per shard with bit-identical results, and the
+//!   whole prepared index round-trips through a versioned, checksummed
+//!   snapshot ([`index::snapshot`], `DtwIndex::save`/`load`) so serving
+//!   processes cold-start from one file instead of re-preparing
+//!   envelopes from raw series.
 //! * **Streaming subsequence search** ([`stream`]): slide an index-length
 //!   window over unbounded sample streams behind a cascaded-bound screen
 //!   (`LB_KIM_FL → LB_KEOGH → LB_WEBB` by default), in threshold and

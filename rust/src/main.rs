@@ -12,9 +12,16 @@
 //!   windows over samples from a file/stdin (or a `--demo` synthetic
 //!   stream) and report windows within `--tau` of an indexed series
 //!   (and/or the `--k` best windows), with per-stage cascade stats.
+//! * `index`       — persistent-index tooling: `index build` prepares a
+//!   (optionally sharded) index and saves it as a versioned, checksummed
+//!   snapshot (`--out`, `--shards`); `index inspect` prints a snapshot's
+//!   header (version, checksum, shard/series counts, window, bound
+//!   config) without loading the payload into an index.
 //! * `serve`       — start the NN search server (router + batched
 //!   prefilter; `--backend native|pjrt|none`, `--k` for a default k-NN
-//!   depth, `--threads` for parallel candidate screening).
+//!   depth, `--threads` for parallel candidate screening,
+//!   `--snapshot <path>` to cold-start from a saved index with no
+//!   access to the raw dataset).
 //! * `info`        — build/backend/artifact report.
 //!
 //! Run `dtw-bounds <cmd> --help-args` to see each command's options.
@@ -116,14 +123,97 @@ fn run(args: &Args) -> Result<()> {
         Some("sweep") => cmd_sweep(args),
         Some("ablation") => cmd_ablation(args),
         Some("stream") => cmd_stream(args),
+        Some("index") => cmd_index(args),
         Some("serve") => cmd_serve(args),
         Some("info") => cmd_info(),
         other => {
             bail!(
                 "unknown command {other:?}; expected one of \
-                 gen-archive|tightness|nn|knn|sweep|ablation|stream|serve|info"
+                 gen-archive|tightness|nn|knn|sweep|ablation|stream|index|serve|info"
             )
         }
+    }
+}
+
+/// `index build` / `index inspect`: the persistent-index tooling.
+///
+/// * `index build --out <path>` prepares an index over a dataset
+///   (`--scale`/`--archive`/`--dataset`, `--window`, `--bound`,
+///   `--strategy`, `--shards`, `--threads`, `--znorm`, `--max-batch`)
+///   and saves it as a snapshot.
+/// * `index inspect <path>` verifies and prints the snapshot header as
+///   `key=value` lines (machine-parseable; CI greps them).
+///
+/// Both report malformed paths/headers as ordinary errors (exit code 1)
+/// with the snapshot failure mode spelled out — never a panic.
+fn cmd_index(args: &Args) -> Result<()> {
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("build") => {
+            let out = args
+                .get("out")
+                .context("index build needs --out <path> for the snapshot")?
+                .to_string();
+            let archive = load_archive(args)?;
+            let idx = args.parse_or::<usize>("dataset", 0);
+            let ds = archive.get(idx).context("--dataset index out of range")?;
+            let bound =
+                BoundKind::parse(&args.str_or("bound", "webb")).context("bad --bound")?;
+            let strategy = SearchStrategy::parse(&args.str_or("strategy", "sorted"))
+                .context("--strategy must be sorted|random|precomputed|brute")?;
+            let shards = args.parse_or::<usize>("shards", 1);
+            if shards == 0 {
+                bail!("--shards must be >= 1");
+            }
+            let index = DtwIndex::builder_from_dataset(ds)
+                .window(args.parse_or::<usize>("window", ds.window.max(1)))
+                .bound(bound)
+                .strategy(strategy)
+                .shards(shards)
+                .threads(args.parse_or::<usize>("threads", 1))
+                .znormalize(args.flag("znorm"))
+                .max_batch(args.parse_or::<usize>("max-batch", 16))
+                .build()?;
+            let bytes = index
+                .save(&out)
+                .map_err(|e| anyhow::anyhow!("save snapshot {out}: {e}"))?;
+            println!(
+                "built index over dataset {} (n={}, l={}, w={}, bound={bound}, \
+                 shards={}) and saved {bytes} bytes to {out}",
+                ds.name,
+                index.len(),
+                ds.series_len(),
+                index.window(),
+                index.shard_count()
+            );
+            Ok(())
+        }
+        Some("inspect") => {
+            let path = args
+                .positional
+                .get(1)
+                .map(|s| s.as_str())
+                .or_else(|| args.get("path"))
+                .context("index inspect needs a snapshot path (positional or --path)")?;
+            let info = dtw_bounds::index::snapshot::inspect(std::path::Path::new(path))
+                .map_err(|e| anyhow::anyhow!("snapshot {path}: {e}"))?;
+            println!("path={path}");
+            println!("version={}", info.version);
+            println!("checksum={:#018x}", info.checksum);
+            println!("bytes={}", info.bytes);
+            println!("series={}", info.series);
+            println!("series_len={}", info.series_len);
+            println!("window={}", info.window);
+            println!("shards={}", info.shards);
+            println!("bound={}", info.bound);
+            println!("strategy={}", info.strategy);
+            println!("backend={}", info.backend);
+            println!("znorm={}", info.znorm);
+            println!("max_batch={}", info.max_batch);
+            println!("threads={}", info.threads);
+            println!("seed={}", info.seed);
+            Ok(())
+        }
+        other => bail!("index: expected build|inspect, got {other:?}"),
     }
 }
 
@@ -446,19 +536,10 @@ fn demo_stream(index: &DtwIndex, n: usize, seed: u64) -> Vec<f64> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    let archive = load_archive(args)?;
-    let idx = args.parse_or::<usize>("dataset", 0);
-    let ds = archive.get(idx).context("--dataset index out of range")?;
-    let w = ds.window.max(1);
-    let bound = BoundKind::parse(&args.str_or("bound", "webb")).context("bad --bound")?;
-    let max_batch = args.parse_or::<usize>("max-batch", 16);
     let default_k = args.parse_or::<usize>("k", 1);
     if default_k == 0 {
         bail!("--k must be >= 1");
     }
-    // Search worker threads: 1 = serial (default), 0 = machine
-    // parallelism; overridable per request via the `threads=` prefix.
-    let threads = args.parse_or::<usize>("threads", 1);
     // Validate --backend even when --no-batch overrides it, so typos
     // never slip through silently.
     let spelled = args.str_or("backend", "native");
@@ -473,17 +554,50 @@ fn cmd_serve(args: &Args) -> Result<()> {
         backend = BackendKind::None;
     }
 
-    // One shared index: the envelopes are prepared once, here; the
-    // dispatch thread builds its searcher from a cheap handle. Backend
-    // handles (PJRT in particular) are not Send, so the backend itself
-    // is still constructed inside the router's dispatch thread.
-    let index = DtwIndex::builder_from_dataset(ds)
-        .window(w)
-        .bound(bound)
-        .backend(BackendKind::None) // attached per kind in the factory
-        .max_batch(max_batch)
-        .threads(threads)
-        .build()?;
+    // Index source: `--snapshot <path>` cold-starts from a persisted
+    // index — no raw dataset is read or needed — otherwise the index is
+    // built in-process from the dataset knobs. Serve flags (`--bound`,
+    // `--threads`) override the snapshot's stored configuration only
+    // when given; the window and shards are fixed by the snapshot.
+    let (index, source) = if let Some(snap) = args.get("snapshot") {
+        let loaded =
+            DtwIndex::load(snap).map_err(|e| anyhow::anyhow!("--snapshot {snap}: {e}"))?;
+        let mut idx = loaded;
+        if let Some(b) = args.get("bound") {
+            idx = idx.with_bound(BoundKind::parse(b).context("bad --bound")?);
+        }
+        if args.get("threads").is_some() {
+            idx = idx.with_threads(args.parse_or::<usize>("threads", 1));
+        }
+        (idx, format!("snapshot {snap}"))
+    } else {
+        let archive = load_archive(args)?;
+        let ds_no = args.parse_or::<usize>("dataset", 0);
+        let ds = archive.get(ds_no).context("--dataset index out of range")?;
+        let bound =
+            BoundKind::parse(&args.str_or("bound", "webb")).context("bad --bound")?;
+        // Search worker threads: 1 = serial (default), 0 = machine
+        // parallelism; overridable per request via the `threads=` prefix.
+        let index = DtwIndex::builder_from_dataset(ds)
+            .window(args.parse_or::<usize>("window", ds.window.max(1)))
+            .bound(bound)
+            .max_batch(args.parse_or::<usize>("max-batch", 16))
+            .threads(args.parse_or::<usize>("threads", 1))
+            .shards(args.parse_or::<usize>("shards", 1))
+            .build()?;
+        (index, format!("dataset {}", ds.name))
+    };
+    let max_batch = args.parse_or::<usize>("max-batch", index.max_batch());
+    let threads = index.threads();
+    let bound = index.bound();
+
+    // One shared index: the envelopes are prepared once (or bulk-loaded
+    // from the snapshot); the dispatch thread builds its searcher from a
+    // cheap handle. Backend handles (PJRT in particular) are not Send,
+    // so the backend itself is still constructed inside the router's
+    // dispatch thread — the index handle carries `None` and the factory
+    // attaches the kind resolved above.
+    let index = index.with_backend(BackendKind::None);
     let factory_index = index.clone();
     let factory = move || {
         let mut engine = NnEngine::from_index(factory_index);
@@ -507,16 +621,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
         &addr, router, default_k,
     )?;
     println!(
-        "serving dataset {} (l={}, n={}, w={w}, bound={bound}, backend={backend}, \
+        "serving {source} (l={}, n={}, w={}, shards={}, bound={bound}, backend={backend}, \
          default k={default_k}, threads={threads}) on {}",
-        ds.name,
-        ds.series_len(),
+        index.train().series.first().map(|s| s.len()).unwrap_or(0),
         index.len(),
+        index.window(),
+        index.shard_count(),
         server.addr()
     );
     println!(
         "protocol: one comma-separated series per line (or k=<n>;series for k-NN); \
-         PING/PONG; Ctrl-C to stop"
+         save=<path>;/load=<path>; snapshot control; PING/PONG; Ctrl-C to stop"
     );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));

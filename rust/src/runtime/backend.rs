@@ -18,7 +18,16 @@
 //! 3. **Rank** — [`LbBackend::rank_into`] argsorts each query's row
 //!    ascending: the candidate visiting order of the paper's
 //!    Algorithm 4.
+//! 4. **Shards** — backends that can screen straight off a shard's flat
+//!    [`crate::bounds::store::EnvelopeStore`] rows advertise it with
+//!    [`LbBackend::supports_stores`] and implement
+//!    [`LbBackend::compute_sharded_into`]: each shard's rows fill its
+//!    own column block of the same [`BoundMatrix`], so a sharded index
+//!    is screened **without re-concatenating** its stores (and without
+//!    the backend keeping a private envelope copy). The matrix — and
+//!    therefore the search — is bit-identical to the unsharded path.
 
+use crate::bounds::store::ShardStore;
 use crate::bounds::PreparedSeries;
 
 /// A flat row-major `queries × candidates` bound matrix: one
@@ -117,6 +126,25 @@ pub struct Ranking {
     pub order: Vec<Vec<usize>>,
 }
 
+/// Argsort every row of `bounds` ascending into `order` (reusing its
+/// allocations) — the shared tail of [`LbBackend::rank_into`] and
+/// [`LbBackend::rank_sharded_into`].
+fn argsort_rows(bounds: &BoundMatrix, order: &mut Vec<Vec<usize>>) {
+    let nq = bounds.len();
+    order.truncate(nq);
+    while order.len() < nq {
+        order.push(Vec::new());
+    }
+    for (q, ord) in order.iter_mut().enumerate() {
+        let row = bounds.row(q);
+        ord.clear();
+        ord.extend(0..row.len());
+        ord.sort_unstable_by(|&a, &b| {
+            row[a].partial_cmp(&row[b]).expect("bounds are never NaN")
+        });
+    }
+}
+
 /// A batched `LB_KEOGH` screening backend.
 ///
 /// Backends are owned by one engine and called from one thread (PJRT
@@ -181,19 +209,52 @@ pub trait LbBackend {
         out: &mut Ranking,
     ) -> anyhow::Result<()> {
         self.compute_into(queries, train, cutoffs, &mut out.bounds)?;
-        let nq = out.bounds.len();
-        out.order.truncate(nq);
-        while out.order.len() < nq {
-            out.order.push(Vec::new());
-        }
-        for (q, order) in out.order.iter_mut().enumerate() {
-            let row = out.bounds.row(q);
-            order.clear();
-            order.extend(0..row.len());
-            order.sort_unstable_by(|&a, &b| {
-                row[a].partial_cmp(&row[b]).expect("bounds are never NaN")
-            });
-        }
+        argsort_rows(&out.bounds, &mut out.order);
+        Ok(())
+    }
+
+    /// True when the backend can screen a sharded index straight off its
+    /// flat [`crate::bounds::store::EnvelopeStore`] rows
+    /// ([`LbBackend::compute_sharded_into`]). Defaults to `false`;
+    /// callers with shards then fall back to the [`PreparedSeries`]
+    /// entry points, which compute the identical matrix.
+    fn supports_stores(&self) -> bool {
+        false
+    }
+
+    /// Fill `out` (reshaped to `queries.len() × Σ shard sizes`) with the
+    /// bound matrix, screening each shard's flat envelope rows directly:
+    /// shard `s` fills the column block `s.range()` of every query row,
+    /// so no concatenated envelope copy is ever materialized. Shards
+    /// must be contiguous (`shard[i].start() == shard[i-1].range().end`,
+    /// first start 0) and share the query length. The resulting matrix
+    /// is **bit-identical** to [`LbBackend::compute_into`] over the same
+    /// candidates in global order.
+    ///
+    /// Only meaningful when [`LbBackend::supports_stores`] is `true`;
+    /// the default errs.
+    fn compute_sharded_into(
+        &mut self,
+        _queries: &[&[f64]],
+        _shards: &[ShardStore],
+        _cutoffs: &[f64],
+        _out: &mut BoundMatrix,
+    ) -> anyhow::Result<()> {
+        anyhow::bail!("backend {} has no flat-store screening path", self.name())
+    }
+
+    /// [`LbBackend::rank_into`] over a sharded index: compute the matrix
+    /// via [`LbBackend::compute_sharded_into`], then argsort each query's
+    /// row ascending over the **global** candidate ids.
+    fn rank_sharded_into(
+        &mut self,
+        queries: &[&[f64]],
+        shards: &[ShardStore],
+        cutoffs: &[f64],
+        out: &mut Ranking,
+    ) -> anyhow::Result<()> {
+        self.compute_sharded_into(queries, shards, cutoffs, &mut out.bounds)?;
+        argsort_rows(&out.bounds, &mut out.order);
         Ok(())
     }
 
@@ -339,5 +400,18 @@ mod tests {
         be.rank_into(&[], &[], &[], &mut reused).unwrap();
         assert_eq!(reused.order, vec![vec![1, 0]]);
         assert_eq!(reused.bounds.len(), 1);
+    }
+
+    #[test]
+    fn store_screening_is_opt_in() {
+        // Backends that never implemented the flat-store path advertise
+        // that, and the sharded entry points fail loudly instead of
+        // silently screening nothing.
+        let mut be = Fixed(vec![vec![1.0, 2.0]]);
+        assert!(!be.supports_stores());
+        let mut m = BoundMatrix::new();
+        assert!(be.compute_sharded_into(&[], &[], &[], &mut m).is_err());
+        let mut r = Ranking::default();
+        assert!(be.rank_sharded_into(&[], &[], &[], &mut r).is_err());
     }
 }

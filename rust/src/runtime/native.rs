@@ -30,7 +30,7 @@
 
 use anyhow::{ensure, Result};
 
-use crate::bounds::store::EnvelopeStore;
+use crate::bounds::store::{EnvelopeStore, ShardStore};
 use crate::bounds::{keogh, PreparedSeries};
 use crate::delta::Squared;
 use crate::exec::Executor;
@@ -41,6 +41,13 @@ use super::backend::{BoundMatrix, LbBackend};
 /// enough to balance uneven early-abandon costs, large enough to
 /// amortize the queue pop.
 const QUERY_CHUNK: usize = 2;
+
+/// Raw base pointer into the flat output matrix, shared across workers.
+/// Sound because the work queue hands every query row to exactly one
+/// worker, and row windows `[q*nt, (q+1)*nt)` are disjoint.
+struct RowsPtr(*mut f64);
+unsafe impl Send for RowsPtr {}
+unsafe impl Sync for RowsPtr {}
 
 /// The pure-Rust batched `LB_KEOGH` backend (always available; no
 /// artifacts, no external runtime).
@@ -146,9 +153,6 @@ impl LbBackend for NativeBatchLb {
         // Workers fill disjoint rows of the flat output through a raw
         // base pointer (row q = out[q*nt .. (q+1)*nt]); the work queue
         // hands every q to exactly one worker, so writes never overlap.
-        struct RowsPtr(*mut f64);
-        unsafe impl Send for RowsPtr {}
-        unsafe impl Sync for RowsPtr {}
         let rows = RowsPtr(out.as_mut_slice().as_mut_ptr());
         let rows = &rows;
 
@@ -170,6 +174,79 @@ impl LbBackend for NativeBatchLb {
                             store.up_row(t),
                             cut,
                         );
+                    }
+                }
+            }
+        });
+        Ok(())
+    }
+
+    fn supports_stores(&self) -> bool {
+        true
+    }
+
+    fn compute_sharded_into(
+        &mut self,
+        queries: &[&[f64]],
+        shards: &[ShardStore],
+        cutoffs: &[f64],
+        out: &mut BoundMatrix,
+    ) -> Result<()> {
+        let nt: usize = shards.last().map(|s| s.range().end).unwrap_or(0);
+        if queries.is_empty() || nt == 0 {
+            out.reset(queries.len(), 0);
+            return Ok(());
+        }
+        let l = queries[0].len();
+        ensure!(queries.iter().all(|q| q.len() == l), "queries must share one length");
+        ensure!(cutoffs.len() == queries.len(), "one cutoff per query");
+        let mut next = 0usize;
+        for s in shards {
+            ensure!(
+                s.start() == next,
+                "shards must be contiguous: shard starts at {}, expected {next}",
+                s.start()
+            );
+            ensure!(
+                s.is_empty() || s.store().series_len() == l,
+                "shard series length {} must match the query length {l}",
+                s.store().series_len()
+            );
+            next = s.range().end;
+        }
+
+        let nq = queries.len();
+        out.reset(nq, nt);
+
+        // Same disjoint-row scheme as `compute_into`; each worker walks
+        // the shard list per row, filling the shard's own column block
+        // straight off its flat store — the shards are never copied into
+        // one concatenated allocation.
+        let rows = RowsPtr(out.as_mut_slice().as_mut_ptr());
+        let rows = &rows;
+
+        self.exec.run(nq, QUERY_CHUNK, move |_wid, queue| {
+            while let Some(range) = queue.next_chunk() {
+                for q in range {
+                    let query = queries[q];
+                    let cut = cutoffs[q];
+                    // Safety: q is claimed by this worker alone; the row
+                    // window [q*nt, (q+1)*nt) is in-bounds (out was reset
+                    // to nq*nt above) and disjoint from every other q's.
+                    let row = unsafe {
+                        std::slice::from_raw_parts_mut(rows.0.add(q * nt), nt)
+                    };
+                    for s in shards {
+                        let store = s.store();
+                        let block = &mut row[s.start()..s.range().end];
+                        for (t, slot) in block.iter_mut().enumerate() {
+                            *slot = keogh::lb_keogh_flat::<Squared>(
+                                query,
+                                store.lo_row(t),
+                                store.up_row(t),
+                                cut,
+                            );
+                        }
                     }
                 }
             }
@@ -297,5 +374,55 @@ mod tests {
         let q_refs: Vec<&[f64]> = queries.iter().map(|v| v.as_slice()).collect();
         let mut be = NativeBatchLb::new();
         assert!(be.compute(&q_refs, &train, &[f64::INFINITY; 2]).is_err());
+    }
+
+    #[test]
+    fn sharded_matrix_is_bit_equal_to_monolithic() {
+        use crate::bounds::store::partition_shards;
+        let (queries, train) = workload(6, 23, 48, 3, 0x54A2);
+        let q_refs: Vec<&[f64]> = queries.iter().map(|v| v.as_slice()).collect();
+        // Mixed cutoffs: the abandon path must agree too (same kernel,
+        // same rows, same order — identical partial sums).
+        let cutoffs: Vec<f64> =
+            (0..queries.len()).map(|i| if i % 2 == 0 { f64::INFINITY } else { 30.0 }).collect();
+        let mono = NativeBatchLb::new().compute(&q_refs, &train, &cutoffs).unwrap();
+        for shards in [1usize, 2, 3, 7] {
+            let parts = partition_shards(&train, shards);
+            for threads in [1usize, 3] {
+                let mut be = NativeBatchLb::with_threads(threads);
+                assert!(be.supports_stores());
+                let mut m = BoundMatrix::new();
+                be.compute_sharded_into(&q_refs, &parts, &cutoffs, &mut m).unwrap();
+                assert_eq!(m, mono, "shards={shards} threads={threads}");
+                let mut r = super::super::Ranking::default();
+                be.rank_sharded_into(&q_refs, &parts, &cutoffs, &mut r).unwrap();
+                for (row, order) in r.bounds.iter_rows().zip(r.order.iter()) {
+                    for pair in order.windows(2) {
+                        assert!(row[pair[0]] <= row[pair[1]]);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_rejects_gapped_shards_and_bad_lengths() {
+        use crate::bounds::store::{partition_shards, ShardStore};
+        let (queries, train) = workload(2, 8, 16, 1, 0x9A1);
+        let q_refs: Vec<&[f64]> = queries.iter().map(|v| v.as_slice()).collect();
+        let cutoffs = vec![f64::INFINITY; 2];
+        let mut be = NativeBatchLb::new();
+        let mut m = BoundMatrix::new();
+        // Gap: second shard pretends to start past the first's end.
+        let parts = partition_shards(&train, 2);
+        let gapped = vec![
+            parts[0].clone(),
+            ShardStore::new(parts[0].len() + 1, parts[1].store().clone()),
+        ];
+        assert!(be.compute_sharded_into(&q_refs, &gapped, &cutoffs, &mut m).is_err());
+        // Length mismatch between shard rows and queries.
+        let short: Vec<Vec<f64>> = queries.iter().map(|q| q[..q.len() - 1].to_vec()).collect();
+        let short_refs: Vec<&[f64]> = short.iter().map(|v| v.as_slice()).collect();
+        assert!(be.compute_sharded_into(&short_refs, &parts, &cutoffs, &mut m).is_err());
     }
 }

@@ -13,6 +13,7 @@
 //! lower bound (full or partial) proves its DTW distance cannot beat the
 //! current k-th best (or the caller's abandon threshold).
 
+use std::ops::Range;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
@@ -370,7 +371,6 @@ pub fn knn_parallel<D: Delta>(
     params: &KnnParams,
     exec: &Executor,
 ) -> (Vec<NnResult>, SearchStats) {
-    let w = train.w;
     let n = train.len();
     let l = query.len();
     // Shared monotone-nonincreasing cutoff as f64 bits: for nonnegative
@@ -386,43 +386,76 @@ pub fn knn_parallel<D: Delta>(
         // into the shared pair at worker exit (tight lock windows).
         let mut scratch = Scratch::new(l);
         let mut local = SearchStats::default();
-        let offer = |r: NnResult| {
-            let mut guard = shared.lock().unwrap();
-            let (set, _) = &mut *guard;
-            if set.offer(r) {
-                cutoff_bits.fetch_min(set.cutoff().max(0.0).to_bits(), Ordering::Relaxed);
-            }
-        };
         while let Some(range) = queue.next_chunk() {
-            for ti in range {
-                if Some(ti) == params.exclude {
-                    continue;
-                }
-                let t = &train.series[ti];
-                let cut = f64::from_bits(cutoff_bits.load(Ordering::Relaxed));
-                if cut.is_infinite() {
-                    // Nothing to prune against yet (set not full, no τ):
-                    // straight to the exact distance, like Algorithm 3's
-                    // first candidates.
-                    local.dtw_calls += 1;
-                    let d =
-                        exact_distance::<D>(&query.values, t, w, f64::INFINITY, &mut scratch.tail);
-                    offer(NnResult { nn_index: ti, distance: d, label: train.labels[ti] });
-                    continue;
-                }
-                local.lb_calls += 1;
-                let lb = bound.compute::<D>(query, t, w, cut, &mut scratch);
-                if lb > cut {
-                    local.pruned += 1;
-                    continue;
-                }
-                local.dtw_calls += 1;
-                let d = exact_distance::<D>(&query.values, t, w, cut, &mut scratch.tail);
-                if d.is_infinite() {
-                    local.dtw_abandoned += 1;
-                } else {
-                    offer(NnResult { nn_index: ti, distance: d, label: train.labels[ti] });
-                }
+            screen_range::<D>(
+                range,
+                query,
+                train,
+                bound,
+                params,
+                &cutoff_bits,
+                &shared,
+                &mut scratch,
+                &mut local,
+            );
+        }
+        shared.lock().unwrap().1.add(&local);
+    });
+
+    let (set, stats) = shared.into_inner().unwrap();
+    (set.into_sorted(), stats)
+}
+
+/// Shard-parallel exact k-NN: the fan-out unit is a **shard-aligned
+/// chunk** — each shard's contiguous global candidate range (as a
+/// persistent index partitions them) subdivided into
+/// [`CANDIDATE_CHUNK`]-sized work ranges, so no work item ever crosses
+/// a shard boundary and parallelism is never capped by the shard count.
+/// Workers screen their ranges against the same shared atomic cutoff as
+/// [`knn_parallel`], so the determinism argument is identical: only
+/// candidates provably outside the final set are ever pruned, and
+/// [`KnnSet`]'s total `(distance, index)` order makes the merged result
+/// independent of shard count, shard sizes, thread count and admission
+/// order — **sharded ≡ serial bit-exactly**. Work counters stay
+/// scheduling-dependent.
+///
+/// `shard_ranges` must cover `0..train.len()` disjointly (the
+/// contiguous partition of [`crate::bounds::store::partition_shards`];
+/// callers hand in [`crate::bounds::store::ShardStore::range`]s).
+pub fn knn_sharded<D: Delta>(
+    query: &PreparedSeries,
+    train: &PreparedTrainSet,
+    shard_ranges: &[Range<usize>],
+    bound: BoundKind,
+    params: &KnnParams,
+    exec: &Executor,
+) -> (Vec<NnResult>, SearchStats) {
+    debug_assert_eq!(
+        shard_ranges.iter().map(|r| r.len()).sum::<usize>(),
+        train.len(),
+        "shards must cover every candidate"
+    );
+    let work = chunk_shard_ranges(shard_ranges, CANDIDATE_CHUNK);
+    let l = query.len();
+    let cutoff_bits = AtomicU64::new(params.threshold.max(0.0).to_bits());
+    let shared = Mutex::new((KnnSet::new(params), SearchStats::default()));
+
+    exec.run(work.len(), 1, |_wid, queue| {
+        let mut scratch = Scratch::new(l);
+        let mut local = SearchStats::default();
+        while let Some(chunk) = queue.next_chunk() {
+            for wi in chunk {
+                screen_range::<D>(
+                    work[wi].clone(),
+                    query,
+                    train,
+                    bound,
+                    params,
+                    &cutoff_bits,
+                    &shared,
+                    &mut scratch,
+                    &mut local,
+                );
             }
         }
         shared.lock().unwrap().1.add(&local);
@@ -430,6 +463,80 @@ pub fn knn_parallel<D: Delta>(
 
     let (set, stats) = shared.into_inner().unwrap();
     (set.into_sorted(), stats)
+}
+
+/// Subdivide contiguous shard ranges into at-most-`chunk`-sized work
+/// ranges that never cross a shard boundary — the sharded kernels' work
+/// list (candidate ownership stays per-shard; parallelism does not).
+pub fn chunk_shard_ranges(shard_ranges: &[Range<usize>], chunk: usize) -> Vec<Range<usize>> {
+    let chunk = chunk.max(1);
+    let mut out = Vec::new();
+    for r in shard_ranges {
+        let mut a = r.start;
+        while a < r.end {
+            let b = (a + chunk).min(r.end);
+            out.push(a..b);
+            a = b;
+        }
+    }
+    out
+}
+
+/// Screen one contiguous candidate range against the shared
+/// cutoff/result state — the worker body [`knn_parallel`] and
+/// [`knn_sharded`] have in common. Each candidate is bounded against a
+/// snapshot of the shared cutoff (which only ever shrinks; a stale
+/// snapshot merely prunes less), survivors run the pruned exact-DTW
+/// kernel, and admissions tighten the cutoff for every worker.
+#[allow(clippy::too_many_arguments)]
+fn screen_range<D: Delta>(
+    range: Range<usize>,
+    query: &PreparedSeries,
+    train: &PreparedTrainSet,
+    bound: BoundKind,
+    params: &KnnParams,
+    cutoff_bits: &AtomicU64,
+    shared: &Mutex<(KnnSet, SearchStats)>,
+    scratch: &mut Scratch,
+    local: &mut SearchStats,
+) {
+    let w = train.w;
+    let offer = |r: NnResult| {
+        let mut guard = shared.lock().unwrap();
+        let (set, _) = &mut *guard;
+        if set.offer(r) {
+            cutoff_bits.fetch_min(set.cutoff().max(0.0).to_bits(), Ordering::Relaxed);
+        }
+    };
+    for ti in range {
+        if Some(ti) == params.exclude {
+            continue;
+        }
+        let t = &train.series[ti];
+        let cut = f64::from_bits(cutoff_bits.load(Ordering::Relaxed));
+        if cut.is_infinite() {
+            // Nothing to prune against yet (set not full, no τ):
+            // straight to the exact distance, like Algorithm 3's
+            // first candidates.
+            local.dtw_calls += 1;
+            let d = exact_distance::<D>(&query.values, t, w, f64::INFINITY, &mut scratch.tail);
+            offer(NnResult { nn_index: ti, distance: d, label: train.labels[ti] });
+            continue;
+        }
+        local.lb_calls += 1;
+        let lb = bound.compute::<D>(query, t, w, cut, scratch);
+        if lb > cut {
+            local.pruned += 1;
+            continue;
+        }
+        local.dtw_calls += 1;
+        let d = exact_distance::<D>(&query.values, t, w, cut, &mut scratch.tail);
+        if d.is_infinite() {
+            local.dtw_abandoned += 1;
+        } else {
+            offer(NnResult { nn_index: ti, distance: d, label: train.labels[ti] });
+        }
+    }
 }
 
 /// Reference k-NN brute force (no bounds) — ground truth for tests and
@@ -622,6 +729,79 @@ mod tests {
                     let got: Vec<(usize, f64)> =
                         par.iter().map(|r| (r.nn_index, r.distance)).collect();
                     assert_eq!(got, want, "threads={threads} k={k}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_shard_ranges_cover_without_crossing_boundaries() {
+        let shards = vec![0..5usize, 5..6, 6..20];
+        let work = chunk_shard_ranges(&shards, 4);
+        // Full disjoint coverage, in order.
+        let mut next = 0usize;
+        for r in &work {
+            assert_eq!(r.start, next);
+            assert!(r.len() <= 4 && !r.is_empty());
+            next = r.end;
+        }
+        assert_eq!(next, 20);
+        // No work range crosses a shard boundary.
+        for r in &work {
+            assert!(
+                shards.iter().any(|s| s.start <= r.start && r.end <= s.end),
+                "{r:?} crosses a shard boundary"
+            );
+        }
+        assert!(chunk_shard_ranges(&[], 4).is_empty());
+        assert_eq!(chunk_shard_ranges(&[0..3], 0), vec![0..1, 1..2, 2..3], "chunk clamps to 1");
+    }
+
+    #[test]
+    fn sharded_matches_serial_at_every_shard_and_thread_count() {
+        let (train, queries) = setup();
+        let mut scratch = Scratch::default();
+        let (mut bb, mut ib) = (Vec::new(), Vec::new());
+        let n = train.len();
+        for q in queries.iter().take(3) {
+            for k in [1usize, 3] {
+                let params = KnnParams::k(k);
+                let (serial, _) = knn_sorted::<Squared>(
+                    q,
+                    &train,
+                    crate::bounds::BoundKind::Webb,
+                    &params,
+                    &mut scratch,
+                    &mut bb,
+                    &mut ib,
+                );
+                let want: Vec<(usize, f64)> =
+                    serial.iter().map(|r| (r.nn_index, r.distance)).collect();
+                for shards in [1usize, 2, 3, 7] {
+                    // The same contiguous partition the index builder uses.
+                    let shards_eff = shards.clamp(1, n);
+                    let (base, extra) = (n / shards_eff, n % shards_eff);
+                    let mut ranges = Vec::new();
+                    let mut start = 0usize;
+                    for s in 0..shards_eff {
+                        let len = base + usize::from(s < extra);
+                        ranges.push(start..start + len);
+                        start += len;
+                    }
+                    for threads in [1usize, 4] {
+                        let exec = crate::exec::Executor::new(threads);
+                        let (got, _) = knn_sharded::<Squared>(
+                            q,
+                            &train,
+                            &ranges,
+                            crate::bounds::BoundKind::Webb,
+                            &params,
+                            &exec,
+                        );
+                        let got: Vec<(usize, f64)> =
+                            got.iter().map(|r| (r.nn_index, r.distance)).collect();
+                        assert_eq!(got, want, "shards={shards} threads={threads} k={k}");
+                    }
                 }
             }
         }

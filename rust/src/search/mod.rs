@@ -8,8 +8,9 @@
 //!   bound order until the next bound exceeds the k-th best distance),
 //!   the precomputed-bound walk fed by batched
 //!   [`crate::runtime::LbBackend`]s, the candidate-parallel
-//!   [`knn::knn_parallel`] (shared atomic cutoff, identical results at
-//!   every thread count), and the brute-force baseline. Every kernel's
+//!   [`knn::knn_parallel`] and shard-parallel [`knn::knn_sharded`]
+//!   (shared atomic cutoff, identical results at every thread and
+//!   shard count), and the brute-force baseline. Every kernel's
 //!   exact-DTW tail runs [`crate::dtw::dtw_ea_pruned`] with the
 //!   candidate-envelope cumulative-lower-bound tail.
 //! * [`nn`] — the result/statistics types plus the deprecated 1-NN

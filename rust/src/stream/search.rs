@@ -1,6 +1,7 @@
 //! [`SubsequenceSearcher`] — cascaded-bound subsequence search over a
 //! sample stream, plus its option/result/statistics types.
 
+use std::ops::Range;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -14,6 +15,7 @@ use crate::delta::Delta;
 use crate::dtw::dtw_ea_pruned;
 use crate::exec::Executor;
 use crate::index::DtwIndex;
+use crate::search::knn::chunk_shard_ranges;
 use crate::search::nn::SearchStats;
 use crate::search::PreparedTrainSet;
 
@@ -260,6 +262,11 @@ pub struct SubsequenceSearcher {
     exec: Executor,
     /// One scratch per parallel worker, allocated once at construction.
     par_scratch: Vec<Mutex<Scratch>>,
+    /// Precomputed parallel work ranges (shard-aligned chunks of the
+    /// candidate ids; empty when the sweep runs serial) — the candidate
+    /// set and shard partition are fixed at construction, so the
+    /// per-window hot path allocates nothing for them.
+    work_ranges: Vec<Range<usize>>,
     matches: Vec<StreamMatch>,
     stats: StreamStats,
     busy: Duration,
@@ -294,6 +301,19 @@ impl SubsequenceSearcher {
         } else {
             Vec::new()
         };
+        // Parallel fan-out unit: shard-aligned chunks of the candidate
+        // ids (whole-range chunks for an unsharded index). Fixed for the
+        // searcher's lifetime, so built once here.
+        let work_ranges: Vec<Range<usize>> = if exec.threads() > 1 {
+            let shard_ranges: Vec<Range<usize>> = if index.shard_count() > 1 {
+                index.shards().iter().map(|s| s.range()).collect()
+            } else {
+                vec![0..index.len()]
+            };
+            chunk_shard_ranges(&shard_ranges, STREAM_CHUNK)
+        } else {
+            Vec::new()
+        };
         Ok(SubsequenceSearcher {
             tau: opts.threshold.unwrap_or(f64::INFINITY),
             top_k: opts.top_k,
@@ -316,6 +336,7 @@ impl SubsequenceSearcher {
             scratch: Scratch::new(m),
             exec,
             par_scratch,
+            work_ranges,
             matches: Vec::new(),
             stats,
             index: index.clone(),
@@ -536,12 +557,15 @@ impl SubsequenceSearcher {
         best
     }
 
-    /// Candidate-parallel sweep: workers pull candidate chunks, prune
-    /// against a shared atomic cutoff (τ / top-k k-th best / running
+    /// Candidate-parallel sweep: workers pull the precomputed
+    /// shard-aligned work ranges (`work_ranges`, built once at
+    /// construction — no chunk crosses a shard boundary), prune against
+    /// a shared atomic cutoff (τ / top-k k-th best / running
     /// intra-window best) and race the exact distances. The winning
     /// `(distance, index)` is a pure minimum over exactly-computed
     /// candidates, so matches are identical to the serial sweep at every
-    /// thread count; per-stage counters become scheduling-dependent.
+    /// shard and thread count; per-stage counters become
+    /// scheduling-dependent.
     fn eval_candidates_parallel<D: Delta>(
         &mut self,
         train: &PreparedTrainSet,
@@ -563,12 +587,13 @@ impl SubsequenceSearcher {
         let cascade = &self.cascade;
         let w = self.w;
         let scratches = &self.par_scratch;
-        self.exec.run(train.len(), STREAM_CHUNK, |wid, queue| {
+        let work = &self.work_ranges;
+        self.exec.run(work.len(), 1, |wid, queue| {
             let mut scratch = scratches[wid].lock().unwrap();
             let mut stages = vec![(0u64, 0u64); nstages];
             let (mut dtw_calls, mut dtw_abandoned) = (0u64, 0u64);
-            while let Some(range) = queue.next_chunk() {
-                'cands: for ti in range {
+            while let Some(chunk) = queue.next_chunk() {
+                'cands: for ti in chunk.flat_map(|ri| work[ri].clone()) {
                     let t = &train.series[ti];
                     let cut = f64::from_bits(cutoff_bits.load(Ordering::Relaxed));
                     let mut lb = 0.0f64;

@@ -184,6 +184,146 @@ fn stream_requires_a_mode_and_valid_cascade() {
 }
 
 #[test]
+fn index_build_then_inspect_round_trips() {
+    let snap = std::env::temp_dir().join(format!("dtwb_cli_idx_{}.snap", std::process::id()));
+    let out = bin()
+        .args(["index", "build", "--scale", "tiny", "--shards", "2", "--znorm", "--out"])
+        .arg(&snap)
+        .output()
+        .expect("spawn");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("shards=2"), "{text}");
+    assert!(text.contains("saved"), "{text}");
+
+    let out = bin().args(["index", "inspect"]).arg(&snap).output().expect("spawn");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("version=1"), "{text}");
+    assert!(text.contains("shards=2"), "{text}");
+    assert!(text.contains("znorm=true"), "{text}");
+    assert!(text.contains("checksum=0x"), "{text}");
+    assert!(text.lines().any(|l| l.starts_with("series_len=")), "{text}");
+    std::fs::remove_file(&snap).ok();
+}
+
+#[test]
+fn index_inspect_reports_distinct_nonpanicking_errors() {
+    // Malformed path: a clean io error, exit code 1, no panic.
+    let out = bin()
+        .args(["index", "inspect", "/definitely/missing/idx.snap"])
+        .output()
+        .expect("spawn");
+    assert!(!out.status.success());
+    assert_eq!(out.status.code(), Some(1), "clean exit, not a panic abort");
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("snapshot") && err.contains("io:"), "{err}");
+
+    // Malformed header: a distinct bad-magic error.
+    let junk = std::env::temp_dir().join(format!("dtwb_cli_junk_{}.snap", std::process::id()));
+    std::fs::write(&junk, b"this is not a snapshot file").unwrap();
+    let out = bin().args(["index", "inspect"]).arg(&junk).output().expect("spawn");
+    assert!(!out.status.success());
+    assert_eq!(out.status.code(), Some(1));
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("bad magic"), "{err}");
+    std::fs::remove_file(&junk).ok();
+
+    // Unknown sub-action and missing --out are argument errors.
+    let out = bin().args(["index", "frobnicate"]).output().expect("spawn");
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("build|inspect"));
+    let out = bin().args(["index", "build", "--scale", "tiny"]).output().expect("spawn");
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--out"));
+}
+
+#[test]
+fn serve_snapshot_rejects_bad_files_with_distinct_errors() {
+    let out = bin()
+        .args(["serve", "--snapshot", "/definitely/missing/idx.snap", "127.0.0.1:0"])
+        .output()
+        .expect("spawn");
+    assert!(!out.status.success());
+    assert_eq!(out.status.code(), Some(1), "clean exit, not a panic abort");
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("--snapshot") && err.contains("io:"), "{err}");
+
+    let junk = std::env::temp_dir().join(format!("dtwb_cli_sjunk_{}.snap", std::process::id()));
+    std::fs::write(&junk, b"GARBAGE!GARBAGE!GARBAGE!GARBAGE!").unwrap();
+    let out = bin()
+        .args(["serve", "--snapshot"])
+        .arg(&junk)
+        .arg("127.0.0.1:0")
+        .output()
+        .expect("spawn");
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("bad magic"), "{err}");
+    std::fs::remove_file(&junk).ok();
+}
+
+#[test]
+fn serve_snapshot_cold_starts_and_answers() {
+    use std::io::{BufRead, BufReader, Write};
+
+    // Build the snapshot with the real binary…
+    let snap = std::env::temp_dir().join(format!("dtwb_cli_cold_{}.snap", std::process::id()));
+    let out = bin()
+        .args(["index", "build", "--scale", "tiny", "--shards", "2", "--out"])
+        .arg(&snap)
+        .output()
+        .expect("spawn");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+
+    // …learn the series length from its header…
+    let out = bin().args(["index", "inspect"]).arg(&snap).output().expect("spawn");
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout).to_string();
+    let l: usize = text
+        .lines()
+        .find_map(|line| line.strip_prefix("series_len="))
+        .expect("inspect prints series_len")
+        .parse()
+        .unwrap();
+
+    // …then cold-start `serve --snapshot` on an ephemeral port and query
+    // it without ever touching the raw dataset.
+    let mut child = bin()
+        .args(["serve", "--snapshot"])
+        .arg(&snap)
+        .arg("127.0.0.1:0")
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::null())
+        .spawn()
+        .expect("spawn serve");
+    let mut reader = BufReader::new(child.stdout.take().expect("piped stdout"));
+    let mut addr = None;
+    for _ in 0..10 {
+        let mut line = String::new();
+        if reader.read_line(&mut line).unwrap_or(0) == 0 {
+            break;
+        }
+        if let Some(pos) = line.rfind(" on ") {
+            addr = Some(line[pos + 4..].trim().to_string());
+            break;
+        }
+    }
+    let addr = addr.expect("serve printed its bound address");
+    let mut conn = std::net::TcpStream::connect(&addr).expect("connect to cold server");
+    let series = vec!["0.25"; l].join(",");
+    conn.write_all(format!("PING\nk=3;{series}\n").as_bytes()).unwrap();
+    let mut lines = BufReader::new(conn).lines();
+    assert_eq!(lines.next().unwrap().unwrap(), "PONG");
+    let reply = lines.next().unwrap().unwrap();
+    assert!(reply.starts_with("k=3 neighbors="), "{reply}");
+
+    child.kill().ok();
+    child.wait().ok();
+    std::fs::remove_file(&snap).ok();
+}
+
+#[test]
 fn sweep_single_fraction_smoke() {
     let out = bin()
         .args([

@@ -1,0 +1,302 @@
+//! Persistence & sharding property suite — the PR's acceptance
+//! contract:
+//!
+//! * **Round trip**: `load(save(idx))` produces **bit-identical** k-NN
+//!   and streaming-subsequence results to the in-memory index, across
+//!   shard counts, z-norm policies and thread counts.
+//! * **Shard parity**: `DtwIndexBuilder::shards(n)` produces
+//!   bit-identical results to the serial unsharded index for every
+//!   shard count × thread count in the grid {1, 2, 3, 7} × {1, 4},
+//!   on the scalar, parallel, batched and streaming paths.
+//! * **Typed rejection**: non-snapshot files, truncation, bit
+//!   corruption, future versions and missing paths each fail with
+//!   their own [`SnapshotError`] variant — never a panic.
+//! * **Cold start**: a server stack holding only the snapshot answers
+//!   queries identically to one built from the raw dataset.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use dtw_bounds::coordinator::{Router, Server};
+use dtw_bounds::data::synthetic::{generate_archive, ArchiveSpec, Scale};
+use dtw_bounds::data::Dataset;
+use dtw_bounds::delta::Squared;
+use dtw_bounds::index::{DtwIndex, QueryOptions, SnapshotError};
+use dtw_bounds::stream::{StreamMatch, SubsequenceOptions};
+
+fn dataset(seed: u64) -> Dataset {
+    generate_archive(&ArchiveSpec::new(Scale::Tiny, seed))[0].clone()
+}
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("dtwb_persist_{}_{name}", std::process::id()))
+}
+
+/// `(index, distance)` pairs — the bit-exact comparison currency.
+fn knn_pairs(index: &DtwIndex, query: &[f64], k: usize) -> Vec<(usize, f64)> {
+    index
+        .knn::<Squared>(query, k)
+        .neighbors
+        .iter()
+        .map(|n| (n.index, n.distance))
+        .collect()
+}
+
+/// A sample stream with one exact copy of an indexed series between
+/// far-away filler: deterministic matches for stream parity checks.
+fn stream_samples(index: &DtwIndex) -> Vec<f64> {
+    let mut samples = vec![1e3; 7];
+    samples.extend_from_slice(&index.train().series[0].values);
+    samples.extend(vec![-1e3; 5]);
+    samples.extend_from_slice(&index.train().series[1].values);
+    samples.extend(vec![1e3; 7]);
+    samples
+}
+
+fn stream_matches(index: &DtwIndex, samples: &[f64], threads: usize) -> Vec<StreamMatch> {
+    index
+        .subsequence_scan::<Squared>(
+            samples,
+            SubsequenceOptions::threshold(1e-6).with_threads(threads),
+        )
+        .expect("valid stream options")
+        .matches
+}
+
+#[test]
+fn snapshot_round_trip_is_bit_equal_on_every_path() {
+    let ds = dataset(301);
+    for &(shards, znorm) in &[(1usize, false), (3, false), (2, true)] {
+        let index = DtwIndex::builder_from_dataset(&ds)
+            .shards(shards)
+            .znormalize(znorm)
+            .build()
+            .unwrap();
+        let path = tmp(&format!("roundtrip_s{shards}_z{znorm}.snap"));
+        index.save(&path).unwrap();
+        let loaded = DtwIndex::load(&path).unwrap();
+        assert_eq!(loaded.shard_count(), index.shard_count());
+        assert_eq!(loaded.znormalizes(), znorm);
+
+        // k-NN bit-equality, serial and threaded.
+        for q in ds.test.iter().take(4) {
+            for k in [1usize, 3] {
+                assert_eq!(
+                    knn_pairs(&index, &q.values, k),
+                    knn_pairs(&loaded, &q.values, k),
+                    "shards={shards} znorm={znorm} k={k}"
+                );
+                assert_eq!(
+                    knn_pairs(&index.with_threads(4), &q.values, k),
+                    knn_pairs(&loaded.with_threads(4), &q.values, k),
+                    "threaded shards={shards} znorm={znorm} k={k}"
+                );
+            }
+        }
+
+        // Streaming subsequence search bit-equality.
+        let samples = stream_samples(&index);
+        assert_eq!(
+            stream_matches(&index, &samples, 1),
+            stream_matches(&loaded, &samples, 1),
+            "stream shards={shards} znorm={znorm}"
+        );
+        std::fs::remove_file(&path).ok();
+    }
+}
+
+#[test]
+fn sharded_equals_serial_across_the_grid() {
+    let ds = dataset(302);
+    let baseline = DtwIndex::builder_from_dataset(&ds).build().unwrap();
+    let samples = stream_samples(&baseline);
+    let base_stream = stream_matches(&baseline, &samples, 1);
+    for shards in [1usize, 2, 3, 7] {
+        let sharded = DtwIndex::builder_from_dataset(&ds).shards(shards).build().unwrap();
+        for threads in [1usize, 4] {
+            let handle = sharded.with_threads(threads);
+            for q in ds.test.iter().take(4) {
+                for k in [1usize, 3] {
+                    assert_eq!(
+                        knn_pairs(&handle, &q.values, k),
+                        knn_pairs(&baseline, &q.values, k),
+                        "shards={shards} threads={threads} k={k}"
+                    );
+                }
+            }
+            assert_eq!(
+                stream_matches(&sharded, &samples, threads),
+                base_stream,
+                "stream shards={shards} threads={threads}"
+            );
+        }
+    }
+}
+
+#[test]
+fn sharded_batched_prefilter_equals_serial() {
+    let ds = dataset(303);
+    let queries: Vec<Vec<f64>> = ds.test.iter().map(|s| s.values.clone()).collect();
+    assert!(queries.len() > 1, "need a real batch");
+    let baseline = DtwIndex::builder_from_dataset(&ds).build().unwrap();
+    let mut base_searcher = baseline.searcher();
+    let base: Vec<Vec<(usize, f64)>> = base_searcher
+        .query_batch::<Squared>(&queries, &QueryOptions::k(3))
+        .iter()
+        .map(|o| o.neighbors.iter().map(|n| (n.index, n.distance)).collect())
+        .collect();
+    for shards in [2usize, 3, 7] {
+        let sharded = DtwIndex::builder_from_dataset(&ds).shards(shards).build().unwrap();
+        let mut searcher = sharded.searcher();
+        let outs = searcher.query_batch::<Squared>(&queries, &QueryOptions::k(3));
+        for (qi, out) in outs.iter().enumerate() {
+            assert!(out.batched, "shards={shards} q{qi}");
+            let got: Vec<(usize, f64)> =
+                out.neighbors.iter().map(|n| (n.index, n.distance)).collect();
+            assert_eq!(got, base[qi], "batched shards={shards} q{qi}");
+        }
+    }
+}
+
+#[test]
+fn storeless_index_saves_through_a_transient_partition() {
+    // Single shard + non-store backend: the builder skips the flat-store
+    // copy, so save() must materialize one transiently — and the loaded
+    // index must answer bit-equal anyway.
+    let ds = dataset(306);
+    let index = DtwIndex::builder_from_dataset(&ds)
+        .backend(dtw_bounds::runtime::BackendKind::None)
+        .build()
+        .unwrap();
+    assert_eq!(index.shard_count(), 0, "store-less configuration");
+    let path = tmp("storeless.snap");
+    index.save(&path).unwrap();
+    let loaded = DtwIndex::load(&path).unwrap();
+    assert_eq!(loaded.shard_count(), 1);
+    assert_eq!(loaded.backend(), dtw_bounds::runtime::BackendKind::None);
+    for q in ds.test.iter().take(3) {
+        assert_eq!(knn_pairs(&index, &q.values, 3), knn_pairs(&loaded, &q.values, 3));
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn empty_index_round_trips() {
+    let index = DtwIndex::builder(Vec::new()).build().unwrap();
+    let path = tmp("empty.snap");
+    index.save(&path).unwrap();
+    let loaded = DtwIndex::load(&path).unwrap();
+    assert!(loaded.is_empty());
+    assert_eq!(loaded.shard_count(), 0);
+    assert!(loaded.knn::<Squared>(&[1.0, 2.0], 3).neighbors.is_empty());
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn malformed_snapshots_are_rejected_with_typed_errors() {
+    let ds = dataset(304);
+    let index = DtwIndex::builder_from_dataset(&ds).shards(2).build().unwrap();
+    let path = tmp("victim.snap");
+    index.save(&path).unwrap();
+    let good = std::fs::read(&path).unwrap();
+
+    // Missing file → Io.
+    let missing = tmp("does_not_exist.snap");
+    assert!(matches!(DtwIndex::load(&missing), Err(SnapshotError::Io(_))));
+    assert!(matches!(
+        dtw_bounds::index::snapshot::inspect(&missing),
+        Err(SnapshotError::Io(_))
+    ));
+
+    // Not a snapshot at all → BadMagic.
+    let bad_magic = tmp("bad_magic.snap");
+    std::fs::write(&bad_magic, b"GARBAGE!plus some trailing bytes").unwrap();
+    assert!(matches!(DtwIndex::load(&bad_magic), Err(SnapshotError::BadMagic)));
+
+    // Future version → UnsupportedVersion (reported before checksums).
+    let mut future = good.clone();
+    future[8..12].copy_from_slice(&99u32.to_le_bytes());
+    let future_path = tmp("future.snap");
+    std::fs::write(&future_path, &future).unwrap();
+    assert!(matches!(
+        DtwIndex::load(&future_path),
+        Err(SnapshotError::UnsupportedVersion { found: 99, .. })
+    ));
+
+    // Truncation → Truncated (length check precedes the checksum).
+    for cut in [good.len() / 2, good.len() - 1, 20, 5] {
+        let t = tmp("truncated.snap");
+        std::fs::write(&t, &good[..cut]).unwrap();
+        assert!(
+            matches!(DtwIndex::load(&t), Err(SnapshotError::Truncated { .. })),
+            "cut={cut}"
+        );
+        std::fs::remove_file(&t).ok();
+    }
+
+    // Bit corruption anywhere in the body → ChecksumMismatch.
+    for &pos in &[28usize, good.len() / 2, good.len() - 1] {
+        let mut corrupt = good.clone();
+        corrupt[pos] ^= 0x20;
+        let c = tmp("corrupt.snap");
+        std::fs::write(&c, &corrupt).unwrap();
+        assert!(
+            matches!(DtwIndex::load(&c), Err(SnapshotError::ChecksumMismatch { .. })),
+            "pos={pos}"
+        );
+        std::fs::remove_file(&c).ok();
+    }
+
+    // Every variant renders a distinct, human-readable message.
+    let msgs: Vec<String> = vec![
+        SnapshotError::BadMagic.to_string(),
+        SnapshotError::UnsupportedVersion { found: 9, supported: 1 }.to_string(),
+        SnapshotError::Truncated { context: "body" }.to_string(),
+        SnapshotError::ChecksumMismatch { stored: 1, computed: 2 }.to_string(),
+        SnapshotError::Corrupt("x".into()).to_string(),
+    ];
+    for (i, a) in msgs.iter().enumerate() {
+        for b in msgs.iter().skip(i + 1) {
+            assert_ne!(a, b);
+        }
+    }
+
+    std::fs::remove_file(&path).ok();
+    std::fs::remove_file(&bad_magic).ok();
+    std::fs::remove_file(&future_path).ok();
+}
+
+/// The acceptance criterion's cold-start half, in-process: a serving
+/// stack holding **only the snapshot** answers a TCP query identically
+/// to the stack built from the raw dataset.
+#[test]
+fn snapshot_cold_start_serves_identical_answers() {
+    let ds = dataset(305);
+    let built = DtwIndex::builder_from_dataset(&ds).shards(2).build().unwrap();
+    let path = tmp("cold_start.snap");
+    built.save(&path).unwrap();
+    let q: Vec<String> = ds.test[0].values.iter().map(|v| v.to_string()).collect();
+    let line = format!("k=3;{}\n", q.join(","));
+
+    let ask = |index: DtwIndex| -> String {
+        let router = Arc::new(Router::spawn_index(index));
+        let server = Server::spawn("127.0.0.1:0", router).unwrap();
+        let mut conn = TcpStream::connect(server.addr()).unwrap();
+        conn.write_all(line.as_bytes()).unwrap();
+        let mut reader = BufReader::new(conn);
+        let mut reply = String::new();
+        reader.read_line(&mut reply).unwrap();
+        drop(reader);
+        server.shutdown();
+        // Strip the timing-bearing tail.
+        reply.split(" path=").next().unwrap().to_string()
+    };
+
+    // The cold-start index comes from the file alone — `built` (and the
+    // dataset) are gone from its lineage.
+    let cold = DtwIndex::load(&path).unwrap();
+    assert_eq!(ask(cold), ask(built), "cold start answers bit-equal k-NN");
+    std::fs::remove_file(&path).ok();
+}

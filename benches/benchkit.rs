@@ -345,6 +345,63 @@ pub fn write_index_persist_json(
     std::fs::write(path, out)
 }
 
+/// One machine-readable record for the cluster-pruning trajectory file
+/// (`BENCH_cluster_prune.json`): k-NN throughput and cluster-level prune
+/// rate at one cluster count over a synthetic candidate pool.
+/// `clusters = 0` is the flat baseline (no cluster layer).
+#[derive(Debug, Clone)]
+pub struct ClusterPruneRecord {
+    /// Per-shard cluster count the index was built with (0 = flat).
+    pub clusters: usize,
+    /// Shard count of the index.
+    pub shards: usize,
+    /// Worker thread count.
+    pub threads: usize,
+    /// Candidate series in the index.
+    pub candidates: usize,
+    /// Queries answered per measured repeat.
+    pub queries: usize,
+    /// Queries per second.
+    pub queries_per_sec: f64,
+    /// Fraction of query × candidate pairs skipped by cluster-level
+    /// bounds alone (members of skipped clusters / total pairs).
+    pub cluster_prune_rate: f64,
+    /// Cluster-level merged-envelope bound evaluations (total over the
+    /// query set).
+    pub cluster_lb_calls: usize,
+    /// Whole clusters skipped (total over the query set).
+    pub clusters_pruned: usize,
+}
+
+/// Write cluster-pruning records as a JSON array (manual formatting —
+/// no `serde` in the offline build; stable for line-diffing across PRs).
+pub fn write_cluster_prune_json(
+    path: &str,
+    records: &[ClusterPruneRecord],
+) -> std::io::Result<()> {
+    let mut out = String::from("[\n");
+    for (i, r) in records.iter().enumerate() {
+        let sep = if i + 1 == records.len() { "" } else { "," };
+        out.push_str(&format!(
+            "  {{\"clusters\": {}, \"shards\": {}, \"threads\": {}, \
+             \"candidates\": {}, \"queries\": {}, \"queries_per_sec\": {:.1}, \
+             \"cluster_prune_rate\": {:.4}, \"cluster_lb_calls\": {}, \
+             \"clusters_pruned\": {}}}{sep}\n",
+            r.clusters,
+            r.shards,
+            r.threads,
+            r.candidates,
+            r.queries,
+            r.queries_per_sec,
+            r.cluster_prune_rate,
+            r.cluster_lb_calls,
+            r.clusters_pruned,
+        ));
+    }
+    out.push_str("]\n");
+    std::fs::write(path, out)
+}
+
 /// Write records as a JSON array. The offline build has no `serde`; the
 /// records are flat, so manual formatting is sufficient and the output is
 /// stable for line-diffing across PRs.

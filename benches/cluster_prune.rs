@@ -1,0 +1,158 @@
+//! Cluster-pruning trajectory bench: k-NN throughput and cluster-level
+//! prune rate as the per-shard cluster count sweeps {0, 4, 16, 64} over
+//! a large synthetic candidate pool.
+//!
+//! `clusters = 0` is the flat baseline (every candidate enters the
+//! per-candidate cascade). At `clusters > 0` each shard carries merged
+//! cluster envelopes; one envelope-vs-query `LB_KEOGH` per cluster can
+//! skip the whole cluster when its bound already exceeds the running
+//! cutoff, so per-candidate work becomes sublinear in the pool size on
+//! clusterable workloads. Neighbors are bit-identical at every setting
+//! (the pruning is exact); a spot check asserts it per sweep point.
+//!
+//! Records land in `BENCH_cluster_prune.json`: queries/sec plus the
+//! fraction of query × candidate pairs skipped at cluster level and the
+//! raw cluster counters.
+//!
+//! Knobs (env): `DTWB_REPEATS` (default 3), `DTWB_SERIES_LEN` (128),
+//! `DTWB_CANDIDATES` (10000), `DTWB_QUERIES` (16), `DTWB_THREADS` (4),
+//! `DTWB_SHARDS` (4).
+//!
+//! ```sh
+//! cargo bench --bench cluster_prune
+//! ```
+
+#[path = "benchkit.rs"]
+mod benchkit;
+
+use dtw_bounds::data::rng::Rng;
+use dtw_bounds::delta::Squared;
+use dtw_bounds::index::{DtwIndex, QueryOptions};
+use dtw_bounds::metrics::{Summary, Table};
+
+/// Smooth random-walk series around a per-family offset: the families
+/// give the pool genuine cluster structure (like repeated motifs in a
+/// real archive) so cluster-level bounds have something to skip.
+fn family_walk(rng: &mut Rng, l: usize, offset: f64) -> Vec<f64> {
+    let mut v = offset;
+    (0..l)
+        .map(|_| {
+            v += rng.normal() * 0.25;
+            v
+        })
+        .collect()
+}
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let knobs = benchkit::Knobs::from_env();
+    let l = env_usize("DTWB_SERIES_LEN", 128);
+    let n = env_usize("DTWB_CANDIDATES", 10_000);
+    let nq = env_usize("DTWB_QUERIES", 16);
+    let threads = env_usize("DTWB_THREADS", 4);
+    let shards = env_usize("DTWB_SHARDS", 4).max(1);
+    let w = (l / 10).max(1);
+    let mut rng = Rng::seeded(0xC1AB);
+
+    // 12 well-separated families: enough spread that a query near one
+    // family sees large cluster bounds on most of the others.
+    let families = 12usize;
+    let train: Vec<Vec<f64>> = (0..n)
+        .map(|i| family_walk(&mut rng, l, 6.0 * (i % families) as f64))
+        .collect();
+    let queries: Vec<Vec<f64>> =
+        (0..nq).map(|i| family_walk(&mut rng, l, 6.0 * (i % families) as f64)).collect();
+
+    benchkit::banner(&format!(
+        "Cluster-level pruning sweep (n={n}, l={l}, w={w}, k=3, \
+         shards={shards}, threads={threads})"
+    ));
+
+    let opts = QueryOptions::k(3);
+    let mut table = Table::new(vec![
+        "clusters",
+        "queries/s",
+        "vs flat",
+        "cluster prune",
+        "clusters skipped",
+    ]);
+    let mut records: Vec<benchkit::ClusterPruneRecord> = Vec::new();
+    let mut base_qps = 0.0f64;
+    let mut baseline: Vec<Vec<f64>> = Vec::new();
+    for &clusters in &[0usize, 4, 16, 64] {
+        let mut builder = DtwIndex::builder(train.clone())
+            .window(w)
+            .shards(shards)
+            .threads(threads);
+        if clusters > 0 {
+            builder = builder.clusters(clusters);
+        }
+        let index = builder.build().expect("one shared length");
+        let mut searcher = index.searcher();
+
+        // Exactness spot check against the flat baseline, every sweep
+        // point, before timing.
+        let answers: Vec<Vec<f64>> =
+            queries.iter().map(|q| searcher.query_values::<Squared>(q, &opts).distances()).collect();
+        if clusters == 0 {
+            baseline = answers;
+        } else {
+            assert_eq!(baseline, answers, "clustered search must be bit-equal to flat");
+        }
+
+        let mean = Summary::of(&benchkit::time_reps(knobs.repeats, || {
+            let mut acc = 0usize;
+            for q in &queries {
+                acc += searcher.query_values::<Squared>(q, &opts).neighbors.len();
+            }
+            std::hint::black_box(acc);
+        }))
+        .mean;
+        let qps = nq as f64 / mean;
+        if clusters == 0 {
+            base_qps = qps;
+        }
+
+        // Counters from one untimed pass over the query set.
+        let mut cluster_lb_calls = 0usize;
+        let mut clusters_pruned = 0usize;
+        let mut members_pruned = 0usize;
+        for q in &queries {
+            let out = searcher.query_values::<Squared>(q, &opts);
+            cluster_lb_calls += out.stats.cluster_lb_calls;
+            clusters_pruned += out.stats.clusters_pruned;
+            members_pruned += out.stats.cluster_members_pruned;
+        }
+        let prune_rate = members_pruned as f64 / (nq * n) as f64;
+
+        table.row(vec![
+            clusters.to_string(),
+            format!("{qps:.1}"),
+            format!("{:.2}x", qps / base_qps),
+            format!("{:.1}%", 100.0 * prune_rate),
+            clusters_pruned.to_string(),
+        ]);
+        records.push(benchkit::ClusterPruneRecord {
+            clusters,
+            shards,
+            threads,
+            candidates: n,
+            queries: nq,
+            queries_per_sec: qps,
+            cluster_prune_rate: prune_rate,
+            cluster_lb_calls,
+            clusters_pruned,
+        });
+    }
+    println!("{}", table.to_markdown());
+
+    // cargo runs bench binaries with cwd = the package root (rust/);
+    // anchor the trajectory file at the workspace root regardless.
+    let out_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_cluster_prune.json");
+    benchkit::write_cluster_prune_json(out_path, &records)
+        .expect("write BENCH_cluster_prune.json");
+    println!("wrote BENCH_cluster_prune.json ({} records)", records.len());
+}

@@ -107,6 +107,34 @@ pub fn envelopes(s: &[f64], w: usize) -> (Vec<f64>, Vec<f64>) {
     (lo, up)
 }
 
+/// Merge one member envelope into a cluster accumulator, elementwise:
+/// `acc_lo[i] = min(acc_lo[i], lo[i])`, `acc_up[i] = max(acc_up[i],
+/// up[i])`.
+///
+/// Folding every member of a cluster this way (accumulator seeded with
+/// `+INFINITY` / `-INFINITY`) yields the cluster's **merged envelope**,
+/// which *contains* each member's envelope: `merged_lo ≤ member_lo` and
+/// `merged_up ≥ member_up` pointwise. `LB_KEOGH` against a containing
+/// envelope can only shrink (every query sample's exceedance distance
+/// shrinks or vanishes), so the merged-envelope bound lower-bounds every
+/// member's own `LB_KEOGH` — and hence every member's DTW distance. That
+/// containment argument is what makes cluster-level pruning exact; see
+/// ARCHITECTURE.md "Sublinear pruning".
+pub fn merge_envelopes_into(acc_lo: &mut [f64], acc_up: &mut [f64], lo: &[f64], up: &[f64]) {
+    debug_assert_eq!(acc_lo.len(), lo.len(), "one shared length");
+    debug_assert_eq!(acc_up.len(), up.len(), "one shared length");
+    for (a, &v) in acc_lo.iter_mut().zip(lo) {
+        if v < *a {
+            *a = v;
+        }
+    }
+    for (a, &v) in acc_up.iter_mut().zip(up) {
+        if v > *a {
+            *a = v;
+        }
+    }
+}
+
 /// Incremental (streaming) envelope maintainer — the online counterpart
 /// of [`envelopes_into`], for unbounded sample streams.
 ///
@@ -430,6 +458,41 @@ mod tests {
             assert!(env.min_q.len() <= 2 * w + 1);
         }
         assert_eq!(env.emitted(), 10_000 - w as u64);
+    }
+
+    #[test]
+    fn merged_envelope_contains_members_and_weakens_lb_keogh() {
+        use crate::bounds::keogh::lb_keogh_flat;
+        use crate::delta::Squared;
+        let mut rng = Rng::seeded(2102);
+        let l = 64;
+        let w = 4;
+        let members: Vec<Vec<f64>> =
+            (0..6).map(|_| (0..l).map(|_| rng.normal()).collect()).collect();
+        let envs: Vec<(Vec<f64>, Vec<f64>)> =
+            members.iter().map(|s| envelopes(s, w)).collect();
+        let mut acc_lo = vec![f64::INFINITY; l];
+        let mut acc_up = vec![f64::NEG_INFINITY; l];
+        for (lo, up) in &envs {
+            merge_envelopes_into(&mut acc_lo, &mut acc_up, lo, up);
+        }
+        // Containment: the merged envelope sandwiches every member's.
+        for (mi, (lo, up)) in envs.iter().enumerate() {
+            for i in 0..l {
+                assert!(acc_lo[i] <= lo[i], "member {mi} lo at {i}");
+                assert!(acc_up[i] >= up[i], "member {mi} up at {i}");
+            }
+        }
+        // The exactness lemma: LB_KEOGH(query, merged) never exceeds
+        // LB_KEOGH(query, member) for any member.
+        for _ in 0..8 {
+            let q: Vec<f64> = (0..l).map(|_| rng.normal()).collect();
+            let merged = lb_keogh_flat::<Squared>(&q, &acc_lo, &acc_up, f64::INFINITY);
+            for (mi, (lo, up)) in envs.iter().enumerate() {
+                let member = lb_keogh_flat::<Squared>(&q, lo, up, f64::INFINITY);
+                assert!(merged <= member + 1e-12, "member {mi}: {merged} > {member}");
+            }
+        }
     }
 
     #[test]

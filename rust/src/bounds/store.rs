@@ -146,6 +146,33 @@ impl EnvelopeStore {
         &self.flat()[..2 * self.n * self.stride]
     }
 
+    /// Build a store from raw `lo`/`up` rows (one pair per stored row,
+    /// all sharing one length) — the merged cluster-envelope path,
+    /// where rows are synthesized instead of coming from prepared
+    /// series. Layout and alignment match [`EnvelopeStore::build`].
+    pub fn from_rows(lo_rows: &[Vec<f64>], up_rows: &[Vec<f64>]) -> EnvelopeStore {
+        debug_assert_eq!(lo_rows.len(), up_rows.len(), "one lo per up row");
+        let n = lo_rows.len();
+        let l = lo_rows.first().map(|r| r.len()).unwrap_or(0);
+        debug_assert!(lo_rows.iter().chain(up_rows).all(|r| r.len() == l), "one shared length");
+        let stride = l.div_ceil(LANE) * LANE;
+        let lines = 2 * n * stride / LANE;
+        let mut store = EnvelopeStore {
+            n,
+            l,
+            stride,
+            buf: vec![CacheLine([0.0; LANE]); lines.max(1)],
+        };
+        let flat = store.flat_mut();
+        for (t, row) in lo_rows.iter().enumerate() {
+            flat[t * stride..t * stride + l].copy_from_slice(row);
+        }
+        for (t, row) in up_rows.iter().enumerate() {
+            flat[(n + t) * stride..(n + t) * stride + l].copy_from_slice(row);
+        }
+        store
+    }
+
     /// Rebuild a store from a padded flat payload (the inverse of
     /// [`EnvelopeStore::payload`]): a length check, a fresh 64-byte-
     /// aligned allocation, and one bulk copy. Errors when the payload
@@ -207,23 +234,188 @@ impl EnvelopeStore {
     }
 }
 
+/// Cluster-pruning metadata for one shard: the shard's candidates
+/// grouped around pivots, with one **merged envelope** per cluster
+/// (elementwise min of member `lo` rows / max of member `up` rows).
+///
+/// The merged envelope *contains* every member's envelope, so
+/// `LB_KEOGH(query, merged) ≤ LB_KEOGH(query, member) ≤ DTW(query,
+/// member)` for every member — one envelope-vs-query bound per cluster
+/// is a valid lower bound on every member's distance, which is what
+/// lets the search kernels skip whole clusters exactly (see
+/// ARCHITECTURE.md "Sublinear pruning" for the proof). Per-member pivot
+/// distances (fixed-cutoff exact DTW at build time) order members
+/// near-pivot-first inside each cluster; they are advisory only — DTW
+/// is not a metric, so no triangle-inequality *skip* is derived from
+/// them.
+#[derive(Debug, Clone, Default)]
+pub struct ShardClusters {
+    /// Member local offsets grouped by cluster: cluster `c` owns
+    /// `members[offsets[c]..offsets[c+1]]`, ordered ascending by
+    /// `(pivot distance, offset)`.
+    members: Vec<u32>,
+    /// Cluster boundaries into `members` (length = cluster count + 1).
+    offsets: Vec<u32>,
+    /// Each cluster's pivot, as a member local offset.
+    pivots: Vec<u32>,
+    /// Per member local offset: exact DTW distance to its cluster's
+    /// pivot under the build-time fixed cutoff (`INFINITY` when the
+    /// computation was abandoned at that cutoff).
+    pivot_dist: Vec<f64>,
+    /// Merged cluster envelopes; row `c` is cluster `c`'s min-lo/max-up.
+    env: EnvelopeStore,
+}
+
+impl ShardClusters {
+    /// Assemble (and validate) cluster metadata for a shard of
+    /// `shard_len` candidates. Errors describe the first violated
+    /// invariant — the snapshot loader surfaces them as corruption.
+    pub fn from_parts(
+        shard_len: usize,
+        members: Vec<u32>,
+        offsets: Vec<u32>,
+        pivots: Vec<u32>,
+        pivot_dist: Vec<f64>,
+        env: EnvelopeStore,
+    ) -> Result<ShardClusters, String> {
+        let k = pivots.len();
+        if offsets.len() != k + 1 {
+            return Err(format!("{} offsets for {k} clusters, expected {}", offsets.len(), k + 1));
+        }
+        if members.len() != shard_len {
+            return Err(format!("{} members for a {shard_len}-candidate shard", members.len()));
+        }
+        if pivot_dist.len() != shard_len {
+            return Err(format!(
+                "{} pivot distances for a {shard_len}-candidate shard",
+                pivot_dist.len()
+            ));
+        }
+        if env.len() != k {
+            return Err(format!("{} merged envelopes for {k} clusters", env.len()));
+        }
+        if offsets.first() != Some(&0) || offsets.last() != Some(&(shard_len as u32)) {
+            return Err("cluster offsets must start at 0 and end at the shard length".into());
+        }
+        let mut seen = vec![false; shard_len];
+        for win in offsets.windows(2) {
+            if win[0] >= win[1] {
+                return Err(format!("empty or unordered cluster at offsets {}..{}", win[0], win[1]));
+            }
+        }
+        for &m in &members {
+            let m = m as usize;
+            if m >= shard_len || seen[m] {
+                return Err(format!("member {m} out of range or repeated"));
+            }
+            seen[m] = true;
+        }
+        for (c, &p) in pivots.iter().enumerate() {
+            let (a, b) = (offsets[c] as usize, offsets[c + 1] as usize);
+            if !members[a..b].contains(&p) {
+                return Err(format!("pivot {p} is not a member of its cluster {c}"));
+            }
+        }
+        Ok(ShardClusters { members, offsets, pivots, pivot_dist, env })
+    }
+
+    /// Number of clusters.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.pivots.len()
+    }
+
+    /// True when no clusters are held.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.pivots.is_empty()
+    }
+
+    /// Cluster `c`'s member local offsets, ascending by
+    /// `(pivot distance, offset)`.
+    #[inline]
+    pub fn members_of(&self, c: usize) -> &[u32] {
+        &self.members[self.offsets[c] as usize..self.offsets[c + 1] as usize]
+    }
+
+    /// Cluster `c`'s pivot, as a member local offset.
+    #[inline]
+    pub fn pivot(&self, c: usize) -> usize {
+        self.pivots[c] as usize
+    }
+
+    /// Member `local`'s build-time DTW distance to its cluster's pivot
+    /// (`INFINITY` when abandoned at the fixed cutoff).
+    #[inline]
+    pub fn pivot_dist(&self, local: usize) -> f64 {
+        self.pivot_dist[local]
+    }
+
+    /// The merged cluster envelopes (row `c` = cluster `c`).
+    #[inline]
+    pub fn env(&self) -> &EnvelopeStore {
+        &self.env
+    }
+
+    /// The grouped member list (snapshot serialization).
+    #[inline]
+    pub fn members(&self) -> &[u32] {
+        &self.members
+    }
+
+    /// The cluster boundaries (snapshot serialization).
+    #[inline]
+    pub fn offsets(&self) -> &[u32] {
+        &self.offsets
+    }
+
+    /// The pivot offsets (snapshot serialization).
+    #[inline]
+    pub fn pivots(&self) -> &[u32] {
+        &self.pivots
+    }
+
+    /// The per-member pivot distances (snapshot serialization).
+    #[inline]
+    pub fn pivot_dists(&self) -> &[f64] {
+        &self.pivot_dist
+    }
+}
+
 /// One shard of a sharded index: a contiguous slice of the global
 /// candidate set, owned as a flat [`EnvelopeStore`]. Shard `s` covers
 /// global candidate ids `range()`; row `t` of the store is global
 /// candidate `start() + t`. Contiguity is what makes sharded search
 /// trivially bit-equal to serial: the union of the shard ranges *is*
 /// the serial candidate order, and every kernel merges through a total
-/// `(distance, index)` order.
+/// `(distance, index)` order. A shard may additionally carry
+/// [`ShardClusters`] for cluster-level pruning; searches without them
+/// fall back to the flat per-candidate sweep.
 #[derive(Debug, Clone, Default)]
 pub struct ShardStore {
     start: usize,
     store: EnvelopeStore,
+    clusters: Option<ShardClusters>,
 }
 
 impl ShardStore {
-    /// A shard covering global candidates `start .. start + store.len()`.
+    /// A shard covering global candidates `start .. start + store.len()`
+    /// with no cluster metadata.
     pub fn new(start: usize, store: EnvelopeStore) -> ShardStore {
-        ShardStore { start, store }
+        ShardStore { start, store, clusters: None }
+    }
+
+    /// Attach cluster-pruning metadata (builder and snapshot loader).
+    pub fn with_clusters(mut self, clusters: ShardClusters) -> ShardStore {
+        debug_assert_eq!(clusters.members.len(), self.store.len(), "clusters cover the shard");
+        self.clusters = Some(clusters);
+        self
+    }
+
+    /// Cluster-pruning metadata, when the index was built with it.
+    #[inline]
+    pub fn clusters(&self) -> Option<&ShardClusters> {
+        self.clusters.as_ref()
     }
 
     /// First global candidate id this shard owns.
@@ -378,6 +570,66 @@ mod tests {
         assert!(EnvelopeStore::from_payload(3, 10, &payload).is_err());
         assert!(EnvelopeStore::from_payload(2, 10, store.payload()).is_err());
         assert!(EnvelopeStore::from_payload(3, 11, store.payload()).is_err());
+    }
+
+    #[test]
+    fn from_rows_matches_build_layout() {
+        let mut rng = Rng::seeded(83);
+        let train = series(&mut rng, 5, 37, 2);
+        let lo: Vec<Vec<f64>> = train.iter().map(|t| t.lo.clone()).collect();
+        let up: Vec<Vec<f64>> = train.iter().map(|t| t.up.clone()).collect();
+        let a = EnvelopeStore::build(&train);
+        let b = EnvelopeStore::from_rows(&lo, &up);
+        assert_eq!(a.len(), b.len());
+        assert_eq!(a.stride(), b.stride());
+        for t in 0..a.len() {
+            assert_eq!(a.lo_row(t), b.lo_row(t));
+            assert_eq!(a.up_row(t), b.up_row(t));
+            assert_eq!(b.lo_row(t).as_ptr() as usize % 64, 0, "aligned");
+        }
+        assert!(EnvelopeStore::from_rows(&[], &[]).is_empty());
+    }
+
+    #[test]
+    fn shard_clusters_validate_and_expose_groups() {
+        let mut rng = Rng::seeded(84);
+        let train = series(&mut rng, 4, 16, 2);
+        let env = EnvelopeStore::build(&train[..2]);
+        // Two clusters over a 4-candidate shard: {1, 0} and {2, 3}.
+        let cl = ShardClusters::from_parts(
+            4,
+            vec![1, 0, 2, 3],
+            vec![0, 2, 4],
+            vec![1, 2],
+            vec![0.5, 0.0, 0.0, 2.0],
+            env.clone(),
+        )
+        .unwrap();
+        assert_eq!(cl.len(), 2);
+        assert_eq!(cl.members_of(0), &[1, 0]);
+        assert_eq!(cl.members_of(1), &[2, 3]);
+        assert_eq!(cl.pivot(0), 1);
+        assert_eq!(cl.pivot_dist(3), 2.0);
+        assert_eq!(cl.env().len(), 2);
+
+        // Each invariant violation is rejected, not panicked on.
+        let bad = [
+            // offsets mismatch cluster count
+            ShardClusters::from_parts(4, vec![1, 0, 2, 3], vec![0, 4], vec![1, 2], vec![0.0; 4], env.clone()),
+            // members not a permutation
+            ShardClusters::from_parts(4, vec![1, 1, 2, 3], vec![0, 2, 4], vec![1, 2], vec![0.0; 4], env.clone()),
+            // empty cluster
+            ShardClusters::from_parts(4, vec![1, 0, 2, 3], vec![0, 0, 4], vec![1, 2], vec![0.0; 4], env.clone()),
+            // pivot outside its cluster
+            ShardClusters::from_parts(4, vec![1, 0, 2, 3], vec![0, 2, 4], vec![3, 2], vec![0.0; 4], env.clone()),
+            // wrong envelope count
+            ShardClusters::from_parts(4, vec![1, 0, 2, 3], vec![0, 2, 4], vec![1, 2], vec![0.0; 4], EnvelopeStore::build(&train[..3])),
+            // wrong pivot-distance count
+            ShardClusters::from_parts(4, vec![1, 0, 2, 3], vec![0, 2, 4], vec![1, 2], vec![0.0; 3], env.clone()),
+        ];
+        for (i, r) in bad.into_iter().enumerate() {
+            assert!(r.is_err(), "case {i} should be rejected");
+        }
     }
 
     #[test]

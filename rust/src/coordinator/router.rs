@@ -76,6 +76,12 @@ pub struct RouterStats {
     pub saves: usize,
     /// Snapshot `load=` requests that swapped the served index.
     pub loads: usize,
+    /// Whole clusters skipped across all served queries (nonzero only
+    /// when the served index carries a cluster-pruning layer).
+    pub clusters_pruned: usize,
+    /// Candidates skipped via cluster-level pruning across all served
+    /// queries.
+    pub cluster_members_pruned: usize,
 }
 
 impl Router {
@@ -155,6 +161,8 @@ impl Router {
                     } else {
                         stats.scalar += 1;
                     }
+                    stats.clusters_pruned += resp.stats.clusters_pruned;
+                    stats.cluster_members_pruned += resp.stats.cluster_members_pruned;
                     let _ = reply.send(resp);
                 }
                 // Stream requests drained mid-batch run after the batch

@@ -6,9 +6,15 @@ use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
-use crate::bounds::{BoundKind, PreparedSeries};
+use crate::bounds::envelope::merge_envelopes_into;
+use crate::bounds::store::{EnvelopeStore, ShardClusters, ShardStore};
+use crate::bounds::{keogh, BoundKind, PreparedSeries};
+use crate::data::rng::Rng;
 use crate::data::znorm::znormalize;
 use crate::data::Dataset;
+use crate::delta::Squared;
+use crate::dtw::dtw_ea_pruned;
+use crate::exec::Executor;
 use crate::runtime::BackendKind;
 use crate::search::{PreparedTrainSet, SearchStrategy};
 
@@ -32,6 +38,8 @@ pub struct DtwIndexBuilder {
     seed: u64,
     threads: usize,
     shards: usize,
+    clusters: usize,
+    clusters_auto: bool,
 }
 
 impl DtwIndexBuilder {
@@ -48,6 +56,8 @@ impl DtwIndexBuilder {
             seed: 0x5EED,
             threads: 1,
             shards: 1,
+            clusters: 0,
+            clusters_auto: false,
         }
     }
 
@@ -139,6 +149,34 @@ impl DtwIndexBuilder {
         self
     }
 
+    /// Group each shard's candidates into up to `clusters` pivot-led
+    /// clusters with precomputed **merged envelopes**, enabling
+    /// cluster-level pruning on every search path (`0` = off, the
+    /// default). Clustering is deterministic in the builder's
+    /// [`DtwIndexBuilder::seed`]: pivots are seeded farthest-first on an
+    /// `LB_KEOGH` proxy distance (a valid DTW lower bound, so "far under
+    /// the proxy" implies "far under DTW"), members join their nearest
+    /// pivot, and each cluster's members are ordered nearest-pivot-first
+    /// by a fixed-cutoff exact DTW to the pivot — all ties break on the
+    /// lower index. Results are **bit-identical at every cluster count**
+    /// (the cluster layer only ever skips candidates whose merged-
+    /// envelope bound proves them outside the cutoff); only the work
+    /// counters change. Setting `clusters > 0` materializes shard stores
+    /// even for configurations that would otherwise skip them.
+    pub fn clusters(mut self, clusters: usize) -> DtwIndexBuilder {
+        self.clusters = clusters;
+        self.clusters_auto = false;
+        self
+    }
+
+    /// Pick the cluster count automatically: ≈√(shard size) clusters per
+    /// shard, the classic balance point between the per-cluster bound
+    /// overhead (k extra bounds per query) and the per-member savings.
+    pub fn clusters_auto(mut self) -> DtwIndexBuilder {
+        self.clusters_auto = true;
+        self
+    }
+
     /// Validate and build: prepares every series' envelopes once (the
     /// paper's off-query-path preparation step).
     ///
@@ -206,18 +244,50 @@ impl DtwIndexBuilder {
                 })
                 .collect()
         };
+        // Resolve the auto knob to a concrete per-shard target so the
+        // config (and snapshots) always carry a plain number: ≈√(shard
+        // size), computed from the same deterministic partition
+        // arithmetic `partition_shards` uses.
+        let clusters = if self.clusters_auto {
+            let shards_eff = self.shards.clamp(1, n.max(1));
+            let shard_len = n.div_ceil(shards_eff);
+            (shard_len as f64).sqrt().ceil() as usize
+        } else {
+            self.clusters
+        };
         // Candidate ownership: cut the prepared set into contiguous
         // per-shard flat stores — the unit of search fan-out, batched
         // screening, and snapshot persistence. Built when sharding is
-        // requested or the configured backend screens straight off flat
-        // stores (Native); store-less configurations (single shard +
-        // scalar/PJRT screening) skip the copy entirely — `save()`
-        // materializes a transient single-shard partition instead.
-        let shards = if self.shards > 1 || self.backend == BackendKind::Native {
-            crate::bounds::store::partition_shards(&series, self.shards)
-        } else {
-            Vec::new()
-        };
+        // requested, the configured backend screens straight off flat
+        // stores (Native), or cluster pruning is on (clusters live
+        // inside shard stores); store-less configurations (single shard
+        // + scalar/PJRT screening, no clusters) skip the copy entirely —
+        // `save()` materializes a transient single-shard partition
+        // instead.
+        let mut shards =
+            if self.shards > 1 || self.backend == BackendKind::Native || clusters > 0 {
+                crate::bounds::store::partition_shards(&series, self.shards)
+            } else {
+                Vec::new()
+            };
+        if clusters > 0 {
+            let mut rng = Rng::seeded(self.seed);
+            shards = shards
+                .into_iter()
+                .map(|s| {
+                    let mut shard_rng = rng.fork(s.start() as u64);
+                    let cl = build_shard_clusters(
+                        &series[s.range()],
+                        s.store(),
+                        w,
+                        clusters,
+                        &mut shard_rng,
+                        &exec,
+                    );
+                    s.with_clusters(cl)
+                })
+                .collect();
+        }
         Ok(DtwIndex {
             train: Arc::new(PreparedTrainSet { labels, series, w }),
             shards: Arc::new(shards),
@@ -229,7 +299,168 @@ impl DtwIndexBuilder {
                 znorm: self.znorm,
                 seed: self.seed,
                 threads: self.threads,
+                clusters,
             },
         })
     }
+}
+
+/// Raw base pointer for disjoint per-index writes from the exec pool
+/// (each index is claimed by exactly one worker via the work queue).
+struct SlotsPtr(*mut f64);
+unsafe impl Send for SlotsPtr {}
+unsafe impl Sync for SlotsPtr {}
+
+/// Series per work-queue chunk in the parallel clustering passes.
+const CLUSTER_CHUNK: usize = 16;
+
+/// Cluster one shard's candidates around pivots — deterministic in
+/// `rng` (forked per shard from the builder seed) and in the member
+/// order, independent of thread count.
+///
+/// 1. **Seeding** (k-medoids-style farthest-first): the first pivot is
+///    drawn uniformly; each further pivot is the unchosen member whose
+///    proxy distance to its nearest pivot is largest (ties → lowest
+///    offset). The proxy is `LB_KEOGH(member, pivot envelope)` — `O(ℓ)`
+///    per pair off the shard's flat store, and a valid DTW lower bound,
+///    so "far under the proxy" implies "far under DTW".
+/// 2. **Assignment**: every member joins its nearest pivot under the
+///    proxy (strict improvement only, so ties keep the earliest pivot;
+///    pivots own themselves). Proxy rows are computed in parallel on
+///    the exec pool; the min/argmin fold is serial, so the assignment
+///    is identical at every thread count.
+/// 3. **Member order**: within each cluster, members sort ascending by
+///    `(pivot DTW distance, offset)` where the distance is exact DTW
+///    under a fixed, query-independent cutoff (4× the largest
+///    assignment proxy; abandoned distances record as `INFINITY` and
+///    sort last). Near-pivot members screen first at query time, which
+///    tightens the shared cutoff fastest. The distances are advisory
+///    ordering only — DTW violates the triangle inequality, so no
+///    skip test is ever derived from them.
+/// 4. **Merged envelopes**: elementwise min-lo/max-up over each
+///    cluster's members ([`merge_envelopes_into`]), packed as one flat
+///    [`EnvelopeStore`] row per cluster.
+fn build_shard_clusters(
+    series: &[PreparedSeries],
+    store: &EnvelopeStore,
+    w: usize,
+    target: usize,
+    rng: &mut Rng,
+    exec: &Executor,
+) -> ShardClusters {
+    let len = series.len();
+    let l = series.first().map(|s| s.len()).unwrap_or(0);
+    let k = target.clamp(1, len);
+
+    // Farthest-first seeding + nearest-pivot assignment on the proxy.
+    let mut min_dist = vec![f64::INFINITY; len];
+    let mut assign = vec![0u32; len];
+    let mut chosen = vec![false; len];
+    let mut pivots: Vec<u32> = Vec::with_capacity(k);
+    let mut proxy = vec![0.0f64; len];
+    for c in 0..k {
+        let p = if c == 0 {
+            rng.below(len)
+        } else {
+            let mut best = usize::MAX;
+            let mut best_d = f64::NEG_INFINITY;
+            for (i, &d) in min_dist.iter().enumerate() {
+                if !chosen[i] && d > best_d {
+                    best = i;
+                    best_d = d;
+                }
+            }
+            best
+        };
+        chosen[p] = true;
+        pivots.push(p as u32);
+        assign[p] = c as u32;
+        min_dist[p] = 0.0;
+        let (p_lo, p_up) = (store.lo_row(p), store.up_row(p));
+        let slots = SlotsPtr(proxy.as_mut_ptr());
+        let slots = &slots;
+        exec.run(len, CLUSTER_CHUNK, move |_wid, queue| {
+            while let Some(range) = queue.next_chunk() {
+                for i in range {
+                    let d =
+                        keogh::lb_keogh_flat::<Squared>(&series[i].values, p_lo, p_up, f64::INFINITY);
+                    // Safety: i is claimed by this worker alone, and the
+                    // slot buffer was sized to `len` above.
+                    unsafe { *slots.0.add(i) = d };
+                }
+            }
+        });
+        for i in 0..len {
+            if proxy[i] < min_dist[i] {
+                min_dist[i] = proxy[i];
+                assign[i] = c as u32;
+            }
+        }
+    }
+
+    // Exact pivot DTW under a fixed, query-independent cutoff. Abandoned
+    // distances (INFINITY) only demote a member to the back of its
+    // cluster's visit order — they carry no pruning weight.
+    let max_proxy = min_dist.iter().cloned().fold(0.0f64, f64::max);
+    let fixed_cutoff = 4.0 * max_proxy;
+    let mut pivot_dist = vec![0.0f64; len];
+    {
+        let assign = &assign;
+        let pivots = &pivots;
+        let slots = SlotsPtr(pivot_dist.as_mut_ptr());
+        let slots = &slots;
+        exec.run(len, CLUSTER_CHUNK, move |_wid, queue| {
+            while let Some(range) = queue.next_chunk() {
+                for i in range {
+                    let p = pivots[assign[i] as usize] as usize;
+                    let d = if i == p {
+                        0.0
+                    } else {
+                        dtw_ea_pruned::<Squared>(
+                            &series[i].values,
+                            &series[p].values,
+                            w,
+                            fixed_cutoff,
+                            None,
+                        )
+                    };
+                    // Safety: disjoint slots, as above.
+                    unsafe { *slots.0.add(i) = d };
+                }
+            }
+        });
+    }
+
+    // Group members by cluster, near-pivot-first, and fold the merged
+    // envelopes.
+    let mut groups: Vec<Vec<u32>> = vec![Vec::new(); k];
+    for (i, &c) in assign.iter().enumerate() {
+        groups[c as usize].push(i as u32);
+    }
+    let mut members: Vec<u32> = Vec::with_capacity(len);
+    let mut offsets: Vec<u32> = Vec::with_capacity(k + 1);
+    offsets.push(0);
+    let mut lo_rows: Vec<Vec<f64>> = Vec::with_capacity(k);
+    let mut up_rows: Vec<Vec<f64>> = Vec::with_capacity(k);
+    for group in &mut groups {
+        group.sort_unstable_by(|&a, &b| {
+            pivot_dist[a as usize]
+                .partial_cmp(&pivot_dist[b as usize])
+                .expect("distances are never NaN")
+                .then(a.cmp(&b))
+        });
+        let mut lo = vec![f64::INFINITY; l];
+        let mut up = vec![f64::NEG_INFINITY; l];
+        for &m in group.iter() {
+            let t = &series[m as usize];
+            merge_envelopes_into(&mut lo, &mut up, &t.lo, &t.up);
+        }
+        members.extend_from_slice(group);
+        offsets.push(members.len() as u32);
+        lo_rows.push(lo);
+        up_rows.push(up);
+    }
+    let env = EnvelopeStore::from_rows(&lo_rows, &up_rows);
+    ShardClusters::from_parts(len, members, offsets, pivots, pivot_dist, env)
+        .expect("builder-produced clusters satisfy every invariant")
 }

@@ -56,7 +56,7 @@ use crate::dtw::dtw_ea;
 use crate::exec::Executor;
 use crate::runtime::{BackendKind, LbBackend, NativeBatchLb, Ranking};
 use crate::search::knn::{
-    knn_brute_force, knn_parallel, knn_random_order, knn_sharded, knn_sorted,
+    knn_brute_force, knn_parallel, knn_random_order, knn_sharded_stores, knn_sorted,
     knn_sorted_precomputed, KnnParams,
 };
 use crate::search::nn::NnResult;
@@ -72,6 +72,8 @@ pub(crate) struct IndexConfig {
     pub(crate) znorm: bool,
     pub(crate) seed: u64,
     pub(crate) threads: usize,
+    /// Per-shard cluster target (`0` = no cluster pruning).
+    pub(crate) clusters: usize,
 }
 
 /// An immutable DTW nearest-neighbor index: prepared training envelopes
@@ -155,6 +157,20 @@ impl DtwIndex {
     /// every query/window.
     pub fn znormalizes(&self) -> bool {
         self.config.znorm
+    }
+
+    /// The per-shard cluster target this index was built with (`0` = no
+    /// cluster-level pruning). The actual per-shard cluster count is
+    /// `min(clusters, shard size)`.
+    pub fn clusters(&self) -> usize {
+        self.config.clusters
+    }
+
+    /// True when any shard carries a cluster-pruning layer (merged
+    /// envelopes + pivot ordering) — such indexes route every scalar
+    /// k-NN query through the two-level sharded kernel.
+    pub fn has_clusters(&self) -> bool {
+        self.shards.iter().any(|s| s.clusters().is_some())
     }
 
     /// Number of materialized shards (`> 1` when built with
@@ -375,23 +391,29 @@ impl Searcher {
             SearchStrategy::SortedPrecomputed => SearchStrategy::Sorted,
             s => s,
         };
-        // Sharded and/or multi-threaded candidate screening (identical
-        // results at any shard/thread count — see
-        // `search::knn::{knn_sharded, knn_parallel}`). A sharded index
-        // always fans out per shard, even on one thread; brute force
-        // stays serial: it is the oracle baseline.
+        // Sharded, clustered and/or multi-threaded candidate screening
+        // (identical results at any shard/cluster/thread count — see
+        // `search::knn::{knn_sharded_stores, knn_parallel}`). A sharded
+        // or clustered index always fans out per shard, even on one
+        // thread; brute force stays serial: it is the oracle baseline.
         let exec = Executor::new(opts.threads.unwrap_or(cfg.threads));
         let sharded = self.index.shards.len() > 1;
-        if (sharded || exec.threads() > 1)
+        let clustered = self.index.has_clusters();
+        if (sharded || clustered || exec.threads() > 1)
             && strategy != SearchStrategy::BruteForce
             && !train.is_empty()
         {
             let owned = if znorm { znormalized(values) } else { values.to_vec() };
             let pq = cfg.bound.prepare_query(owned, train.w);
-            let (results, stats) = if sharded {
-                let ranges: Vec<std::ops::Range<usize>> =
-                    self.index.shards.iter().map(|s| s.range()).collect();
-                knn_sharded::<D>(&pq, train, &ranges, cfg.bound, &params, &exec)
+            let (results, stats) = if sharded || clustered {
+                knn_sharded_stores::<D>(
+                    &pq,
+                    train,
+                    &self.index.shards,
+                    cfg.bound,
+                    &params,
+                    &exec,
+                )
             } else {
                 knn_parallel::<D>(&pq, train, cfg.bound, &params, &exec)
             };

@@ -120,7 +120,11 @@ pub struct QueryOutcome {
     /// when an abandon threshold filtered candidates out).
     pub neighbors: Vec<Neighbor>,
     /// Pruning counters: bound calls, candidates pruned, DTW calls and
-    /// abandons.
+    /// abandons — plus, for indexes built with clusters, the
+    /// cluster-level counters (`cluster_lb_calls`, `clusters_pruned`,
+    /// `cluster_members_pruned`): candidates a skipped cluster covers
+    /// never reach the per-candidate cascade and are counted there
+    /// instead of in `lb_calls`/`pruned`.
     pub stats: SearchStats,
     /// The strategy that actually ran (`SortedPrecomputed` degrades to
     /// `Sorted` for lone queries without a backend batch).

@@ -17,24 +17,37 @@
 //! index produces **bit-identical** search results to the index that
 //! was saved, by construction (pinned by `rust/tests/persist.rs`).
 //!
-//! ## Layout (version 1, all integers/floats little-endian)
+//! ## Layout (version 2, all integers/floats little-endian)
 //!
 //! ```text
 //! offset size  field
 //!      0    8  magic  "DTWBSNAP"
-//!      8    4  format version (u32) = 1
+//!      8    4  format version (u32) = 2
 //!     12    8  FNV-1a-64 checksum of the body (u64)
 //!     20    8  body length in bytes (u64)
 //!     28    …  body:
 //!              flags(u32: bit0 = znorm)
 //!              bound tag(u32) · bound k(u32) · strategy(u32) · backend(u32)
 //!              max_batch(u64) · seed(u64) · threads(u64)
+//!              clusters(u64)                                  [v2+]
 //!              shard count(u64) · n(u64) · ℓ(u64) · w(u64) · stride(u64)
 //!              labels: n × u32
 //!              values: n·ℓ × f64 (raw bits — exact round-trip)
 //!              per shard: size(u64), then 2·size·stride × f64
 //!                         (the shard's padded SoA payload: lo rows, up rows)
+//!                then     cluster count k(u64)                [v2+]
+//!                         and, when k > 0:
+//!                           offsets: (k+1) × u32
+//!                           members: size × u32
+//!                           pivots: k × u32
+//!                           pivot distances: size × f64 (raw bits)
+//!                           merged envelopes: 2·k·stride × f64
 //! ```
+//!
+//! **Version 1** files (everything marked `[v2+]` absent) still load:
+//! they deserialize as clusterless indexes (`clusters = 0`, no cluster
+//! sections), bit-identical to how the v1 reader loaded them. The
+//! writer always emits the current version.
 //!
 //! Truncation, bit corruption and future versions are three *distinct*
 //! failures ([`SnapshotError::Truncated`],
@@ -47,7 +60,7 @@ use std::path::Path;
 use std::sync::Arc;
 
 use crate::bounds::envelope;
-use crate::bounds::store::{EnvelopeStore, ShardStore};
+use crate::bounds::store::{EnvelopeStore, ShardClusters, ShardStore};
 use crate::bounds::{BoundKind, PreparedSeries};
 use crate::runtime::BackendKind;
 use crate::search::{PreparedTrainSet, SearchStrategy};
@@ -56,8 +69,9 @@ use super::{DtwIndex, IndexConfig};
 
 /// File magic: identifies a dtw-bounds index snapshot.
 pub const MAGIC: [u8; 8] = *b"DTWBSNAP";
-/// Current (and only) format version.
-pub const VERSION: u32 = 1;
+/// Current format version (the writer always emits this; the reader
+/// accepts every version from 1 up to it).
+pub const VERSION: u32 = 2;
 
 /// Everything that can go wrong reading or writing a snapshot. Each
 /// failure mode is a distinct variant so callers (CLI exit paths, the
@@ -166,6 +180,9 @@ pub struct SnapshotInfo {
     pub threads: usize,
     /// Random-order strategy seed.
     pub seed: u64,
+    /// Per-shard cluster target (`0` = no cluster pruning; always `0`
+    /// for version-1 files).
+    pub clusters: usize,
 }
 
 // ---------------------------------------------------------------------
@@ -230,6 +247,17 @@ impl<'a> Reader<'a> {
     fn size(&mut self, context: &'static str) -> Result<usize, SnapshotError> {
         usize::try_from(self.u64(context)?)
             .map_err(|_| SnapshotError::Corrupt(format!("{context} overflows usize")))
+    }
+
+    fn u32s(&mut self, n: usize, context: &'static str) -> Result<Vec<u32>, SnapshotError> {
+        let len = n
+            .checked_mul(4)
+            .ok_or_else(|| SnapshotError::Corrupt(format!("{context} length overflows")))?;
+        let bytes = self.take(len, context)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().expect("4 bytes")))
+            .collect())
     }
 
     fn f64s(&mut self, n: usize, context: &'static str) -> Result<Vec<f64>, SnapshotError> {
@@ -373,6 +401,7 @@ pub fn save(index: &DtwIndex, path: &Path) -> Result<u64, SnapshotError> {
     put_u64(&mut body, cfg.max_batch as u64);
     put_u64(&mut body, cfg.seed);
     put_u64(&mut body, cfg.threads as u64);
+    put_u64(&mut body, cfg.clusters as u64);
     put_u64(&mut body, shard_list.len() as u64);
     put_u64(&mut body, n as u64);
     put_u64(&mut body, l as u64);
@@ -387,6 +416,23 @@ pub fn save(index: &DtwIndex, path: &Path) -> Result<u64, SnapshotError> {
     for shard in shard_list {
         put_u64(&mut body, shard.len() as u64);
         put_f64s(&mut body, shard.store().payload());
+        match shard.clusters() {
+            Some(cl) => {
+                put_u64(&mut body, cl.len() as u64);
+                for &o in cl.offsets() {
+                    put_u32(&mut body, o);
+                }
+                for &m in cl.members() {
+                    put_u32(&mut body, m);
+                }
+                for &p in cl.pivots() {
+                    put_u32(&mut body, p);
+                }
+                put_f64s(&mut body, cl.pivot_dists());
+                put_f64s(&mut body, cl.env().payload());
+            }
+            None => put_u64(&mut body, 0),
+        }
     }
 
     // Write-then-rename so an interrupted save never clobbers an
@@ -434,8 +480,10 @@ struct Parsed {
 }
 
 /// Read + validate the envelope of the file: magic, version, length,
-/// checksum. Returns the body slice and the header checksum.
-fn validated_body(bytes: &[u8]) -> Result<(&[u8], u64), SnapshotError> {
+/// checksum. Returns the body slice, the header checksum, and the
+/// format version (every version from 1 to [`VERSION`] is accepted;
+/// the version steers section parsing downstream).
+fn validated_body(bytes: &[u8]) -> Result<(&[u8], u64, u32), SnapshotError> {
     if bytes.len() < 12 {
         return Err(SnapshotError::Truncated { context: "file header" });
     }
@@ -443,7 +491,7 @@ fn validated_body(bytes: &[u8]) -> Result<(&[u8], u64), SnapshotError> {
         return Err(SnapshotError::BadMagic);
     }
     let version = u32::from_le_bytes(bytes[8..12].try_into().expect("4 bytes"));
-    if version != VERSION {
+    if !(1..=VERSION).contains(&version) {
         return Err(SnapshotError::UnsupportedVersion { found: version, supported: VERSION });
     }
     if bytes.len() < 28 {
@@ -467,11 +515,11 @@ fn validated_body(bytes: &[u8]) -> Result<(&[u8], u64), SnapshotError> {
     if computed != stored {
         return Err(SnapshotError::ChecksumMismatch { stored, computed });
     }
-    Ok((body, stored))
+    Ok((body, stored, version))
 }
 
 fn parse(bytes: &[u8], want_payload: bool) -> Result<Parsed, SnapshotError> {
-    let (body, checksum) = validated_body(bytes)?;
+    let (body, checksum, version) = validated_body(bytes)?;
     let mut r = Reader::new(body);
 
     let flags = r.u32("flags")?;
@@ -492,6 +540,7 @@ fn parse(bytes: &[u8], want_payload: bool) -> Result<Parsed, SnapshotError> {
     let max_batch = r.size("max_batch")?;
     let seed = r.u64("seed")?;
     let threads = r.size("threads")?;
+    let clusters = if version >= 2 { r.size("clusters")? } else { 0 };
     let shard_count = r.size("shard count")?;
     let n = r.size("series count")?;
     let l = r.size("series length")?;
@@ -579,6 +628,42 @@ fn parse(bytes: &[u8], want_payload: bool) -> Result<Parsed, SnapshotError> {
                 .map_err(SnapshotError::Corrupt)?;
             shards.push(ShardStore::new(start, store));
         }
+        // v2+: the shard's cluster section. A v1 file simply has none —
+        // it loads as a clusterless shard.
+        if version >= 2 {
+            let k = r.size("cluster count")?;
+            if k > shard_n {
+                return Err(SnapshotError::Corrupt(format!(
+                    "{k} clusters for a {shard_n}-series shard"
+                )));
+            }
+            if k > 0 {
+                // Bound the section's allocations by the bytes present
+                // before trusting k (same discipline as the shard loop).
+                let section_bytes = (k + 1 + shard_n + k)
+                    .checked_mul(4)
+                    .and_then(|x| x.checked_add(shard_n * 8))
+                    .and_then(|x| x.checked_add(2 * k * stride * 8))
+                    .ok_or_else(|| SnapshotError::Corrupt("cluster section overflows".into()))?;
+                if section_bytes > r.remaining() {
+                    return Err(SnapshotError::Truncated { context: "cluster section" });
+                }
+                let offsets = r.u32s(k + 1, "cluster offsets")?;
+                let members = r.u32s(shard_n, "cluster members")?;
+                let pivots = r.u32s(k, "cluster pivots")?;
+                let pivot_dist = r.f64s(shard_n, "cluster pivot distances")?;
+                let env_raw = r.take(2 * k * stride * 8, "cluster envelopes")?;
+                if want_payload {
+                    let env = EnvelopeStore::from_le_payload(k, l, env_raw)
+                        .map_err(SnapshotError::Corrupt)?;
+                    let cl =
+                        ShardClusters::from_parts(shard_n, members, offsets, pivots, pivot_dist, env)
+                            .map_err(SnapshotError::Corrupt)?;
+                    let shard = shards.pop().expect("shard pushed above").with_clusters(cl);
+                    shards.push(shard);
+                }
+            }
+        }
         start += shard_n;
     }
     if start != n {
@@ -592,7 +677,7 @@ fn parse(bytes: &[u8], want_payload: bool) -> Result<Parsed, SnapshotError> {
 
     Ok(Parsed {
         info: SnapshotInfo {
-            version: VERSION,
+            version,
             checksum,
             bytes: bytes.len() as u64,
             series: n,
@@ -606,6 +691,7 @@ fn parse(bytes: &[u8], want_payload: bool) -> Result<Parsed, SnapshotError> {
             max_batch,
             threads,
             seed,
+            clusters,
         },
         labels,
         values,
@@ -661,6 +747,7 @@ pub fn load(path: &Path) -> Result<DtwIndex, SnapshotError> {
             znorm: info.znorm,
             seed: info.seed,
             threads: info.threads,
+            clusters: info.clusters,
         },
     })
 }
@@ -724,6 +811,103 @@ mod tests {
         file.extend_from_slice(&body);
         assert!(matches!(parse(&file, true), Err(SnapshotError::Truncated { .. })));
         assert!(matches!(parse(&file, false), Err(SnapshotError::Truncated { .. })));
+    }
+
+    #[test]
+    fn version1_snapshot_loads_as_clusterless() {
+        // Hand-write a version-1 file (no clusters field, no per-shard
+        // cluster sections) from a real index's parts: it must load
+        // cleanly as a clusterless index with bit-identical payload.
+        let series: Vec<Vec<f64>> = (0..7)
+            .map(|i| (0..32).map(|t| ((i * 31 + t * 7) % 13) as f64 * 0.25 - 1.5).collect())
+            .collect();
+        let index = DtwIndex::builder(series).window(3).build().unwrap();
+        let train = &*index.train;
+        let (n, l) = (train.len(), 32usize);
+        let stride = EnvelopeStore::stride_for(l);
+
+        let mut body = Vec::new();
+        put_u32(&mut body, 0); // flags: no znorm
+        let (bt, bk) = encode_bound(index.config.bound);
+        put_u32(&mut body, bt);
+        put_u32(&mut body, bk);
+        put_u32(&mut body, encode_strategy(index.config.strategy));
+        put_u32(&mut body, encode_backend(index.config.backend));
+        put_u64(&mut body, index.config.max_batch as u64);
+        put_u64(&mut body, index.config.seed);
+        put_u64(&mut body, index.config.threads as u64);
+        // v1: no clusters field here.
+        put_u64(&mut body, index.shards.len() as u64);
+        put_u64(&mut body, n as u64);
+        put_u64(&mut body, l as u64);
+        put_u64(&mut body, train.w as u64);
+        put_u64(&mut body, stride as u64);
+        for &label in &train.labels {
+            put_u32(&mut body, label);
+        }
+        for s in &train.series {
+            put_f64s(&mut body, &s.values);
+        }
+        for shard in index.shards.iter() {
+            put_u64(&mut body, shard.len() as u64);
+            put_f64s(&mut body, shard.store().payload());
+            // v1: no cluster section here.
+        }
+        let mut file = Vec::new();
+        file.extend_from_slice(&MAGIC);
+        file.extend_from_slice(&1u32.to_le_bytes());
+        file.extend_from_slice(&fnv1a64(&body).to_le_bytes());
+        file.extend_from_slice(&(body.len() as u64).to_le_bytes());
+        file.extend_from_slice(&body);
+
+        let path = std::env::temp_dir().join(format!("dtwb_v1_{}.snap", std::process::id()));
+        std::fs::write(&path, &file).unwrap();
+        let info = inspect(&path).unwrap();
+        assert_eq!(info.version, 1);
+        assert_eq!(info.clusters, 0);
+        let loaded = load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(loaded.clusters(), 0);
+        assert!(!loaded.has_clusters());
+        assert_eq!(loaded.len(), index.len());
+        for (a, b) in index.train.series.iter().zip(loaded.train.series.iter()) {
+            assert_eq!(a.values, b.values);
+            assert_eq!(a.lo, b.lo);
+            assert_eq!(a.up, b.up);
+        }
+    }
+
+    #[test]
+    fn version2_round_trip_preserves_clusters_bit_exactly() {
+        let series: Vec<Vec<f64>> = (0..13)
+            .map(|i| (0..24).map(|t| ((i * 17 + t * 5) % 11) as f64 * 0.5 - 2.0).collect())
+            .collect();
+        let index = DtwIndex::builder(series)
+            .window(2)
+            .shards(3)
+            .clusters(2)
+            .build()
+            .unwrap();
+        assert!(index.has_clusters());
+        let path = std::env::temp_dir().join(format!("dtwb_v2cl_{}.snap", std::process::id()));
+        index.save(&path).unwrap();
+        let info = inspect(&path).unwrap();
+        assert_eq!(info.version, VERSION);
+        assert_eq!(info.clusters, 2);
+        let loaded = load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(loaded.clusters(), 2);
+        for (a, b) in index.shards.iter().zip(loaded.shards.iter()) {
+            let (ca, cb) = (a.clusters().unwrap(), b.clusters().unwrap());
+            assert_eq!(ca.members(), cb.members());
+            assert_eq!(ca.offsets(), cb.offsets());
+            assert_eq!(ca.pivots(), cb.pivots());
+            // Raw-bit compare: INFINITY (abandoned pivot DTW) and every
+            // finite distance must survive the trip exactly.
+            let bits = |d: &[f64]| d.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(ca.pivot_dists()), bits(cb.pivot_dists()));
+            assert_eq!(bits(ca.env().payload()), bits(cb.env().payload()));
+        }
     }
 
     #[test]

@@ -13,9 +13,10 @@
 //!   stream) and report windows within `--tau` of an indexed series
 //!   (and/or the `--k` best windows), with per-stage cascade stats.
 //! * `index`       — persistent-index tooling: `index build` prepares a
-//!   (optionally sharded) index and saves it as a versioned, checksummed
-//!   snapshot (`--out`, `--shards`); `index inspect` prints a snapshot's
-//!   header (version, checksum, shard/series counts, window, bound
+//!   (optionally sharded, optionally cluster-pruned) index and saves it
+//!   as a versioned, checksummed snapshot (`--out`, `--shards`,
+//!   `--clusters <n|auto>`); `index inspect` prints a snapshot's header
+//!   (version, checksum, shard/series/cluster counts, window, bound
 //!   config) without loading the payload into an index.
 //! * `serve`       — start the NN search server (router + batched
 //!   prefilter; `--backend native|pjrt|none`, `--k` for a default k-NN
@@ -139,8 +140,8 @@ fn run(args: &Args) -> Result<()> {
 ///
 /// * `index build --out <path>` prepares an index over a dataset
 ///   (`--scale`/`--archive`/`--dataset`, `--window`, `--bound`,
-///   `--strategy`, `--shards`, `--threads`, `--znorm`, `--max-batch`)
-///   and saves it as a snapshot.
+///   `--strategy`, `--shards`, `--clusters <n|auto>`, `--threads`,
+///   `--znorm`, `--max-batch`) and saves it as a snapshot.
 /// * `index inspect <path>` verifies and prints the snapshot header as
 ///   `key=value` lines (machine-parseable; CI greps them).
 ///
@@ -164,26 +165,38 @@ fn cmd_index(args: &Args) -> Result<()> {
             if shards == 0 {
                 bail!("--shards must be >= 1");
             }
-            let index = DtwIndex::builder_from_dataset(ds)
+            let mut builder = DtwIndex::builder_from_dataset(ds)
                 .window(args.parse_or::<usize>("window", ds.window.max(1)))
                 .bound(bound)
                 .strategy(strategy)
                 .shards(shards)
                 .threads(args.parse_or::<usize>("threads", 1))
                 .znormalize(args.flag("znorm"))
-                .max_batch(args.parse_or::<usize>("max-batch", 16))
-                .build()?;
+                .max_batch(args.parse_or::<usize>("max-batch", 16));
+            // `--clusters <n>` groups each shard's candidates around n
+            // pivots with merged-envelope cluster bounds; `auto` picks
+            // ≈√(shard size). Omitted or 0 = no cluster pruning.
+            builder = match args.get("clusters") {
+                Some("auto") => builder.clusters_auto(),
+                Some(v) => builder.clusters(
+                    v.parse::<usize>()
+                        .context("--clusters must be a non-negative integer or 'auto'")?,
+                ),
+                None => builder,
+            };
+            let index = builder.build()?;
             let bytes = index
                 .save(&out)
                 .map_err(|e| anyhow::anyhow!("save snapshot {out}: {e}"))?;
             println!(
                 "built index over dataset {} (n={}, l={}, w={}, bound={bound}, \
-                 shards={}) and saved {bytes} bytes to {out}",
+                 shards={}, clusters={}) and saved {bytes} bytes to {out}",
                 ds.name,
                 index.len(),
                 ds.series_len(),
                 index.window(),
-                index.shard_count()
+                index.shard_count(),
+                index.clusters()
             );
             Ok(())
         }
@@ -204,6 +217,7 @@ fn cmd_index(args: &Args) -> Result<()> {
             println!("series_len={}", info.series_len);
             println!("window={}", info.window);
             println!("shards={}", info.shards);
+            println!("clusters={}", info.clusters);
             println!("bound={}", info.bound);
             println!("strategy={}", info.strategy);
             println!("backend={}", info.backend);

@@ -239,13 +239,55 @@ impl LbBackend for NativeBatchLb {
                     for s in shards {
                         let store = s.store();
                         let block = &mut row[s.start()..s.range().end];
-                        for (t, slot) in block.iter_mut().enumerate() {
-                            *slot = keogh::lb_keogh_flat::<Squared>(
-                                query,
-                                store.lo_row(t),
-                                store.up_row(t),
-                                cut,
-                            );
+                        match s.clusters() {
+                            // Cluster-pruned fill: one merged-envelope
+                            // bound per cluster; clusters it proves past
+                            // the cutoff never touch their members' rows.
+                            // The cluster bound is ≤ every member's own
+                            // LB_KEOGH (envelope containment), so writing
+                            // it into the member columns keeps every
+                            // column a valid lower bound — the sorted
+                            // walk stays exact, the skipped members just
+                            // sort pessimistically.
+                            Some(cl) if cut.is_finite() => {
+                                let env = cl.env();
+                                for c in 0..cl.len() {
+                                    let clb = keogh::lb_keogh_flat::<Squared>(
+                                        query,
+                                        env.lo_row(c),
+                                        env.up_row(c),
+                                        cut,
+                                    );
+                                    if clb > cut {
+                                        for &m in cl.members_of(c) {
+                                            block[m as usize] = clb;
+                                        }
+                                    } else {
+                                        for &m in cl.members_of(c) {
+                                            let t = m as usize;
+                                            block[t] = keogh::lb_keogh_flat::<Squared>(
+                                                query,
+                                                store.lo_row(t),
+                                                store.up_row(t),
+                                                cut,
+                                            );
+                                        }
+                                    }
+                                }
+                            }
+                            // No clusters (or an infinite cutoff, where
+                            // nothing can be pruned): plain contiguous
+                            // fill off the flat store.
+                            _ => {
+                                for (t, slot) in block.iter_mut().enumerate() {
+                                    *slot = keogh::lb_keogh_flat::<Squared>(
+                                        query,
+                                        store.lo_row(t),
+                                        store.up_row(t),
+                                        cut,
+                                    );
+                                }
+                            }
                         }
                     }
                 }
@@ -403,6 +445,67 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn clustered_shards_fill_valid_pessimistic_bounds() {
+        // Clustered sharded fill: every column stays a valid LB_KEOGH
+        // lower bound — either the member's own bound (bit-equal to the
+        // monolithic fill) or, for a pruned cluster, the cluster's
+        // merged-envelope bound, which exceeds the cutoff and is ≤ the
+        // member's full bound by envelope containment.
+        let (queries, _) = workload(4, 0, 48, 3, 0xC10);
+        let mut rng = Rng::seeded(0xC11);
+        let raw: Vec<Vec<f64>> =
+            (0..30).map(|_| (0..48).map(|_| rng.normal()).collect()).collect();
+        let index = crate::index::DtwIndex::builder(raw)
+            .window(3)
+            .shards(3)
+            .clusters(4)
+            .build()
+            .unwrap();
+        assert!(index.has_clusters());
+        let train = &index.train().series;
+        let q_refs: Vec<&[f64]> = queries.iter().map(|v| v.as_slice()).collect();
+        let inf = vec![f64::INFINITY; queries.len()];
+        let full = NativeBatchLb::new().compute(&q_refs, train, &inf).unwrap();
+        // Finite cutoffs low enough to skip clusters.
+        let cutoffs: Vec<f64> = full
+            .iter_rows()
+            .map(|row| {
+                let mut v = row.to_vec();
+                v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                v[v.len() / 4]
+            })
+            .collect();
+        let mut baseline = BoundMatrix::new();
+        NativeBatchLb::new()
+            .compute_sharded_into(&q_refs, index.shards(), &cutoffs, &mut baseline)
+            .unwrap();
+        for qi in 0..queries.len() {
+            for ti in 0..train.len() {
+                let (p, f) = (baseline[qi][ti], full[qi][ti]);
+                assert!(p <= f + 1e-12, "q{qi} t{ti}: partial {p} above full {f}");
+                if p < f {
+                    assert!(p > cutoffs[qi], "q{qi} t{ti}: {p} <= cutoff {}", cutoffs[qi]);
+                }
+            }
+        }
+        // Thread count must not change a single bit.
+        for threads in [2usize, 3] {
+            let mut m = BoundMatrix::new();
+            NativeBatchLb::with_threads(threads)
+                .compute_sharded_into(&q_refs, index.shards(), &cutoffs, &mut m)
+                .unwrap();
+            assert_eq!(m, baseline, "threads={threads}");
+        }
+        // Infinite cutoffs disable cluster skipping: bit-equal to the
+        // monolithic full fill.
+        let mut m = BoundMatrix::new();
+        NativeBatchLb::new()
+            .compute_sharded_into(&q_refs, index.shards(), &inf, &mut m)
+            .unwrap();
+        assert_eq!(m, full);
     }
 
     #[test]

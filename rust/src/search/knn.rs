@@ -17,6 +17,7 @@ use std::ops::Range;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
+use crate::bounds::store::ShardStore;
 use crate::bounds::{keogh, BoundKind, PreparedSeries, Scratch};
 use crate::delta::Delta;
 use crate::dtw::{dtw_ea, dtw_ea_pruned};
@@ -465,6 +466,134 @@ pub fn knn_sharded<D: Delta>(
     (set.into_sorted(), stats)
 }
 
+/// One work unit of [`knn_sharded_stores`]: a plain candidate range for
+/// a clusterless shard, or one whole cluster of a clustered shard.
+enum StoreWork {
+    Range(Range<usize>),
+    Cluster { shard: usize, cluster: usize },
+}
+
+/// Two-level sharded exact k-NN over shard **stores**: clusters first,
+/// members second.
+///
+/// For a clusterless shard the fan-out unit is the same
+/// [`CANDIDATE_CHUNK`]-sized range as [`knn_sharded`]. For a shard
+/// carrying [`crate::bounds::store::ShardClusters`], the unit is one
+/// whole cluster: the worker evaluates **one** `LB_KEOGH` of the query
+/// against the cluster's merged envelope, and only when that group
+/// bound does not exceed the shared cutoff does it screen the members
+/// individually (in the precomputed near-pivot-first order, which
+/// tightens the cutoff fastest).
+///
+/// **Exactness** rests on envelope containment: the merged envelope
+/// contains every member's envelope, so the group bound lower-bounds
+/// every member's `LB_KEOGH` and hence every member's DTW distance
+/// ([`crate::bounds::envelope::merge_envelopes_into`]). Skipping the
+/// cluster when `group bound > cutoff` therefore prunes only candidates
+/// that could never enter the final set — the same strict-`>` test the
+/// per-candidate kernels use — and [`KnnSet`]'s total `(distance,
+/// index)` order keeps the result independent of visit order, so
+/// clustered ≡ flat ≡ serial bit-exactly at every cluster, shard and
+/// thread count. Only the work counters (now including the
+/// cluster-level [`SearchStats`] fields) are scheduling-dependent.
+///
+/// `shards` must cover `0..train.len()` contiguously (the partition of
+/// [`crate::bounds::store::partition_shards`]).
+pub fn knn_sharded_stores<D: Delta>(
+    query: &PreparedSeries,
+    train: &PreparedTrainSet,
+    shards: &[ShardStore],
+    bound: BoundKind,
+    params: &KnnParams,
+    exec: &Executor,
+) -> (Vec<NnResult>, SearchStats) {
+    debug_assert_eq!(
+        shards.iter().map(|s| s.len()).sum::<usize>(),
+        train.len(),
+        "shards must cover every candidate"
+    );
+    let mut work: Vec<StoreWork> = Vec::new();
+    for (si, s) in shards.iter().enumerate() {
+        match s.clusters() {
+            Some(cl) => {
+                work.extend((0..cl.len()).map(|c| StoreWork::Cluster { shard: si, cluster: c }))
+            }
+            None => work.extend(
+                chunk_shard_ranges(&[s.range()], CANDIDATE_CHUNK).into_iter().map(StoreWork::Range),
+            ),
+        }
+    }
+    let l = query.len();
+    let cutoff_bits = AtomicU64::new(params.threshold.max(0.0).to_bits());
+    let shared = Mutex::new((KnnSet::new(params), SearchStats::default()));
+
+    exec.run(work.len(), 1, |_wid, queue| {
+        let mut scratch = Scratch::new(l);
+        let mut local = SearchStats::default();
+        while let Some(chunk) = queue.next_chunk() {
+            for wi in chunk {
+                match &work[wi] {
+                    StoreWork::Range(r) => screen_range::<D>(
+                        r.clone(),
+                        query,
+                        train,
+                        bound,
+                        params,
+                        &cutoff_bits,
+                        &shared,
+                        &mut scratch,
+                        &mut local,
+                    ),
+                    &StoreWork::Cluster { shard, cluster } => {
+                        let s = &shards[shard];
+                        let cl = s.clusters().expect("cluster work implies cluster metadata");
+                        let cut = f64::from_bits(cutoff_bits.load(Ordering::Relaxed));
+                        if cut.is_finite() {
+                            // One bound for the whole group; a partial
+                            // (abandoned) sum still lower-bounds every
+                            // member, so the skip stays exact.
+                            local.cluster_lb_calls += 1;
+                            let env = cl.env();
+                            let clb = keogh::lb_keogh_flat::<D>(
+                                &query.values,
+                                env.lo_row(cluster),
+                                env.up_row(cluster),
+                                cut,
+                            );
+                            if clb > cut {
+                                let members = cl.members_of(cluster);
+                                let excluded = members
+                                    .iter()
+                                    .filter(|&&m| Some(s.start() + m as usize) == params.exclude)
+                                    .count();
+                                local.clusters_pruned += 1;
+                                local.cluster_members_pruned += members.len() - excluded;
+                                continue;
+                            }
+                        }
+                        screen_members::<D>(
+                            s.start(),
+                            cl.members_of(cluster),
+                            query,
+                            train,
+                            bound,
+                            params,
+                            &cutoff_bits,
+                            &shared,
+                            &mut scratch,
+                            &mut local,
+                        );
+                    }
+                }
+            }
+        }
+        shared.lock().unwrap().1.add(&local);
+    });
+
+    let (set, stats) = shared.into_inner().unwrap();
+    (set.into_sorted(), stats)
+}
+
 /// Subdivide contiguous shard ranges into at-most-`chunk`-sized work
 /// ranges that never cross a shard boundary — the sharded kernels' work
 /// list (candidate ownership stays per-shard; parallelism does not).
@@ -500,6 +629,54 @@ fn screen_range<D: Delta>(
     scratch: &mut Scratch,
     local: &mut SearchStats,
 ) {
+    for ti in range {
+        screen_one::<D>(ti, query, train, bound, params, cutoff_bits, shared, scratch, local);
+    }
+}
+
+/// [`screen_range`] over an explicit member list: `members` are local
+/// offsets into a shard starting at global candidate `start` — the
+/// member fan-in of one surviving cluster, visited in the precomputed
+/// near-pivot-first order.
+#[allow(clippy::too_many_arguments)]
+fn screen_members<D: Delta>(
+    start: usize,
+    members: &[u32],
+    query: &PreparedSeries,
+    train: &PreparedTrainSet,
+    bound: BoundKind,
+    params: &KnnParams,
+    cutoff_bits: &AtomicU64,
+    shared: &Mutex<(KnnSet, SearchStats)>,
+    scratch: &mut Scratch,
+    local: &mut SearchStats,
+) {
+    for &m in members {
+        let ti = start + m as usize;
+        screen_one::<D>(ti, query, train, bound, params, cutoff_bits, shared, scratch, local);
+    }
+}
+
+/// Screen one candidate against the shared cutoff/result state — the
+/// per-candidate body all parallel kernels share. Bounded against a
+/// snapshot of the shared cutoff (which only ever shrinks; a stale
+/// snapshot merely prunes less); survivors run the pruned exact-DTW
+/// kernel, and admissions tighten the cutoff for every worker.
+#[allow(clippy::too_many_arguments)]
+fn screen_one<D: Delta>(
+    ti: usize,
+    query: &PreparedSeries,
+    train: &PreparedTrainSet,
+    bound: BoundKind,
+    params: &KnnParams,
+    cutoff_bits: &AtomicU64,
+    shared: &Mutex<(KnnSet, SearchStats)>,
+    scratch: &mut Scratch,
+    local: &mut SearchStats,
+) {
+    if Some(ti) == params.exclude {
+        return;
+    }
     let w = train.w;
     let offer = |r: NnResult| {
         let mut guard = shared.lock().unwrap();
@@ -508,34 +685,29 @@ fn screen_range<D: Delta>(
             cutoff_bits.fetch_min(set.cutoff().max(0.0).to_bits(), Ordering::Relaxed);
         }
     };
-    for ti in range {
-        if Some(ti) == params.exclude {
-            continue;
-        }
-        let t = &train.series[ti];
-        let cut = f64::from_bits(cutoff_bits.load(Ordering::Relaxed));
-        if cut.is_infinite() {
-            // Nothing to prune against yet (set not full, no τ):
-            // straight to the exact distance, like Algorithm 3's
-            // first candidates.
-            local.dtw_calls += 1;
-            let d = exact_distance::<D>(&query.values, t, w, f64::INFINITY, &mut scratch.tail);
-            offer(NnResult { nn_index: ti, distance: d, label: train.labels[ti] });
-            continue;
-        }
-        local.lb_calls += 1;
-        let lb = bound.compute::<D>(query, t, w, cut, scratch);
-        if lb > cut {
-            local.pruned += 1;
-            continue;
-        }
+    let t = &train.series[ti];
+    let cut = f64::from_bits(cutoff_bits.load(Ordering::Relaxed));
+    if cut.is_infinite() {
+        // Nothing to prune against yet (set not full, no τ):
+        // straight to the exact distance, like Algorithm 3's
+        // first candidates.
         local.dtw_calls += 1;
-        let d = exact_distance::<D>(&query.values, t, w, cut, &mut scratch.tail);
-        if d.is_infinite() {
-            local.dtw_abandoned += 1;
-        } else {
-            offer(NnResult { nn_index: ti, distance: d, label: train.labels[ti] });
-        }
+        let d = exact_distance::<D>(&query.values, t, w, f64::INFINITY, &mut scratch.tail);
+        offer(NnResult { nn_index: ti, distance: d, label: train.labels[ti] });
+        return;
+    }
+    local.lb_calls += 1;
+    let lb = bound.compute::<D>(query, t, w, cut, scratch);
+    if lb > cut {
+        local.pruned += 1;
+        return;
+    }
+    local.dtw_calls += 1;
+    let d = exact_distance::<D>(&query.values, t, w, cut, &mut scratch.tail);
+    if d.is_infinite() {
+        local.dtw_abandoned += 1;
+    } else {
+        offer(NnResult { nn_index: ti, distance: d, label: train.labels[ti] });
     }
 }
 
@@ -801,6 +973,109 @@ mod tests {
                         let got: Vec<(usize, f64)> =
                             got.iter().map(|r| (r.nn_index, r.distance)).collect();
                         assert_eq!(got, want, "shards={shards} threads={threads} k={k}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_stores_with_clusters_match_serial_bit_exactly() {
+        use crate::bounds::envelope::merge_envelopes_into;
+        use crate::bounds::store::{partition_shards, EnvelopeStore, ShardClusters};
+
+        // Hand-build cluster metadata: split each shard's members into
+        // `k` contiguous groups, pivot = first member, merged envelopes
+        // folded with `merge_envelopes_into`. Exactness must not depend
+        // on how good the clustering is — any grouping is valid.
+        fn clusterize(train: &PreparedTrainSet, shards: usize, k: usize) -> Vec<ShardStore> {
+            partition_shards(&train.series, shards)
+                .into_iter()
+                .map(|s| {
+                    if k == 0 {
+                        return s;
+                    }
+                    let len = s.len();
+                    let k = k.clamp(1, len);
+                    let (base, extra) = (len / k, len % k);
+                    let mut members = Vec::new();
+                    let mut offsets = vec![0u32];
+                    let mut pivots = Vec::new();
+                    let (mut lo_rows, mut up_rows) = (Vec::new(), Vec::new());
+                    let mut at = 0usize;
+                    for c in 0..k {
+                        let glen = base + usize::from(c < extra);
+                        pivots.push(at as u32);
+                        let l = train.series[0].len();
+                        let mut lo = vec![f64::INFINITY; l];
+                        let mut up = vec![f64::NEG_INFINITY; l];
+                        for m in at..at + glen {
+                            members.push(m as u32);
+                            let t = &train.series[s.start() + m];
+                            merge_envelopes_into(&mut lo, &mut up, &t.lo, &t.up);
+                        }
+                        lo_rows.push(lo);
+                        up_rows.push(up);
+                        at += glen;
+                        offsets.push(at as u32);
+                    }
+                    let env = EnvelopeStore::from_rows(&lo_rows, &up_rows);
+                    let cl = ShardClusters::from_parts(
+                        len,
+                        members,
+                        offsets,
+                        pivots,
+                        vec![0.0; len],
+                        env,
+                    )
+                    .unwrap();
+                    s.with_clusters(cl)
+                })
+                .collect()
+        }
+
+        let (train, queries) = setup();
+        let mut scratch = Scratch::default();
+        let (mut bb, mut ib) = (Vec::new(), Vec::new());
+        for q in queries.iter().take(3) {
+            for k in [1usize, 3] {
+                let params = KnnParams::k(k);
+                let (serial, _) = knn_sorted::<Squared>(
+                    q,
+                    &train,
+                    crate::bounds::BoundKind::Webb,
+                    &params,
+                    &mut scratch,
+                    &mut bb,
+                    &mut ib,
+                );
+                let want: Vec<(usize, f64)> =
+                    serial.iter().map(|r| (r.nn_index, r.distance)).collect();
+                for shards in [1usize, 3] {
+                    for clusters in [0usize, 1, 2, 5] {
+                        let stores = clusterize(&train, shards, clusters);
+                        for threads in [1usize, 4] {
+                            let exec = crate::exec::Executor::new(threads);
+                            let (got, stats) = knn_sharded_stores::<Squared>(
+                                q,
+                                &train,
+                                &stores,
+                                crate::bounds::BoundKind::Webb,
+                                &params,
+                                &exec,
+                            );
+                            let got: Vec<(usize, f64)> =
+                                got.iter().map(|r| (r.nn_index, r.distance)).collect();
+                            assert_eq!(
+                                got, want,
+                                "shards={shards} clusters={clusters} threads={threads} k={k}"
+                            );
+                            if clusters == 0 {
+                                assert_eq!(stats.cluster_lb_calls, 0);
+                                assert_eq!(stats.clusters_pruned, 0);
+                                assert_eq!(stats.cluster_members_pruned, 0);
+                            }
+                        }
                     }
                 }
             }

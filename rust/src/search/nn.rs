@@ -59,6 +59,16 @@ pub struct SearchStats {
     pub dtw_calls: usize,
     /// DTW computations abandoned early.
     pub dtw_abandoned: usize,
+    /// Cluster-level merged-envelope bound evaluations (only nonzero
+    /// when the index was built with `clusters > 0`).
+    pub cluster_lb_calls: usize,
+    /// Whole clusters skipped because their merged-envelope bound
+    /// exceeded the cutoff.
+    pub clusters_pruned: usize,
+    /// Candidates skipped via cluster-level pruning — they were never
+    /// individually bounded, so they do not appear in `lb_calls` or
+    /// `pruned`.
+    pub cluster_members_pruned: usize,
 }
 
 impl SearchStats {
@@ -68,6 +78,9 @@ impl SearchStats {
         self.pruned += other.pruned;
         self.dtw_calls += other.dtw_calls;
         self.dtw_abandoned += other.dtw_abandoned;
+        self.cluster_lb_calls += other.cluster_lb_calls;
+        self.clusters_pruned += other.clusters_pruned;
+        self.cluster_members_pruned += other.cluster_members_pruned;
     }
 }
 

@@ -163,6 +163,15 @@ pub struct StreamStats {
     pub dtw_abandoned: u64,
     /// Windows that produced a match.
     pub matches: u64,
+    /// Cluster-level merged-envelope bound evaluations (only nonzero
+    /// when the index carries clusters).
+    pub cluster_lb_calls: u64,
+    /// Whole clusters skipped because their merged-envelope bound
+    /// reached the window-entry cutoff.
+    pub clusters_pruned: u64,
+    /// Window × candidate pairs skipped via cluster pruning — they
+    /// never reached the cascade, so no stage counts them.
+    pub cluster_members_pruned: u64,
 }
 
 impl StreamStats {
@@ -178,6 +187,9 @@ impl StreamStats {
             dtw_calls: 0,
             dtw_abandoned: 0,
             matches: 0,
+            cluster_lb_calls: 0,
+            clusters_pruned: 0,
+            cluster_members_pruned: 0,
         }
     }
 
@@ -199,6 +211,9 @@ impl StreamStats {
             pruned: self.pruned() as usize,
             dtw_calls: self.dtw_calls as usize,
             dtw_abandoned: self.dtw_abandoned as usize,
+            cluster_lb_calls: self.cluster_lb_calls as usize,
+            clusters_pruned: self.clusters_pruned as usize,
+            cluster_members_pruned: self.cluster_members_pruned as usize,
         }
     }
 }
@@ -267,6 +282,15 @@ pub struct SubsequenceSearcher {
     /// set and shard partition are fixed at construction, so the
     /// per-window hot path allocates nothing for them.
     work_ranges: Vec<Range<usize>>,
+    /// True when the index carries a cluster-pruning layer.
+    has_clusters: bool,
+    /// Per-candidate skip mask (global candidate ids), refilled by the
+    /// cluster prepass before each window's sweep. Keeping a mask —
+    /// instead of reordering the sweep by cluster — preserves the flat
+    /// ascending visit order, and with it the serial sweep's
+    /// lowest-index tie-breaking, so clustered matches stay bit-equal
+    /// to clusterless ones.
+    cluster_mask: Vec<bool>,
     matches: Vec<StreamMatch>,
     stats: StreamStats,
     busy: Duration,
@@ -337,6 +361,8 @@ impl SubsequenceSearcher {
             exec,
             par_scratch,
             work_ranges,
+            has_clusters: index.has_clusters(),
+            cluster_mask: vec![false; index.len()],
             matches: Vec::new(),
             stats,
             index: index.clone(),
@@ -485,6 +511,7 @@ impl SubsequenceSearcher {
 
         let train = Arc::clone(&self.index.train);
         self.stats.candidates += train.len() as u64;
+        self.cluster_prepass::<D>();
         let best = if self.exec.threads() > 1 && train.len() > 1 {
             self.eval_candidates_parallel::<D>(&train)
         } else {
@@ -505,6 +532,46 @@ impl SubsequenceSearcher {
         hit
     }
 
+    /// Cluster prepass: refill the skip mask with every candidate whose
+    /// cluster's merged-envelope `LB_KEOGH` reaches the **window-entry**
+    /// cutoff. Sound for both sweeps: admission is strict (`d < cutoff`)
+    /// and the cutoff is monotone nonincreasing within a window, so a
+    /// member with `DTW ≥ LB_KEOGH(member) ≥ cluster bound ≥` the entry
+    /// cutoff can never be admitted — skipping it changes no match and
+    /// no tie-break (the visit order itself is untouched).
+    fn cluster_prepass<D: Delta>(&mut self) {
+        if !self.has_clusters {
+            return;
+        }
+        self.cluster_mask.iter_mut().for_each(|m| *m = false);
+        let base_cut = self.cutoff();
+        if !base_cut.is_finite() {
+            return;
+        }
+        let shards = Arc::clone(&self.index.shards);
+        for s in shards.iter() {
+            let Some(cl) = s.clusters() else { continue };
+            let env = cl.env();
+            for c in 0..cl.len() {
+                self.stats.cluster_lb_calls += 1;
+                let clb = keogh::lb_keogh_flat::<D>(
+                    &self.pq.values,
+                    env.lo_row(c),
+                    env.up_row(c),
+                    base_cut,
+                );
+                if clb >= base_cut {
+                    let members = cl.members_of(c);
+                    self.stats.clusters_pruned += 1;
+                    self.stats.cluster_members_pruned += members.len() as u64;
+                    for &m in members {
+                        self.cluster_mask[s.start() + m as usize] = true;
+                    }
+                }
+            }
+        }
+    }
+
     /// Serial candidate sweep (the default): cascade screening with
     /// early abandoning, pruned exact DTW on survivors.
     fn eval_candidates_serial<D: Delta>(
@@ -513,6 +580,9 @@ impl SubsequenceSearcher {
     ) -> Option<(usize, f64)> {
         let mut best: Option<(usize, f64)> = None;
         'cands: for (ti, t) in train.series.iter().enumerate() {
+            if self.cluster_mask[ti] {
+                continue;
+            }
             let mut cutoff = self.cutoff();
             if let Some((_, d)) = best {
                 cutoff = cutoff.min(d);
@@ -588,12 +658,16 @@ impl SubsequenceSearcher {
         let w = self.w;
         let scratches = &self.par_scratch;
         let work = &self.work_ranges;
+        let mask = &self.cluster_mask;
         self.exec.run(work.len(), 1, |wid, queue| {
             let mut scratch = scratches[wid].lock().unwrap();
             let mut stages = vec![(0u64, 0u64); nstages];
             let (mut dtw_calls, mut dtw_abandoned) = (0u64, 0u64);
             while let Some(chunk) = queue.next_chunk() {
                 'cands: for ti in chunk.flat_map(|ri| work[ri].clone()) {
+                    if mask[ti] {
+                        continue;
+                    }
                     let t = &train.series[ti];
                     let cut = f64::from_bits(cutoff_bits.load(Ordering::Relaxed));
                     let mut lb = 0.0f64;

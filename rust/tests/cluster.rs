@@ -1,0 +1,320 @@
+//! Property tests for the cluster-pruning layer: an index built with
+//! `clusters > 0` must return **bit-identical** results to the flat
+//! (clusterless) index on every search path — scalar k-NN, the batched
+//! native prefilter, and the streaming subsequence scan — at every
+//! cluster count, shard count and thread count. Cluster-level skipping
+//! is a pure work filter (merged-envelope containment makes the cluster
+//! bound a valid lower bound for every member), so nothing about the
+//! answers may change: same neighbor indices, same raw distance bits,
+//! same tie-breaking.
+
+use dtw_bounds::bounds::BoundKind;
+use dtw_bounds::data::rng::Rng;
+use dtw_bounds::delta::Squared;
+use dtw_bounds::index::{DtwIndex, QueryOptions, QueryOutcome};
+use dtw_bounds::search::SearchStrategy;
+use dtw_bounds::stream::SubsequenceOptions;
+
+/// Smooth random-walk series around a per-family offset so the pool has
+/// real cluster structure (some clusters prune, some don't).
+fn family_series(rng: &mut Rng, n: usize, l: usize, families: usize) -> Vec<Vec<f64>> {
+    (0..n)
+        .map(|i| {
+            let mut v = 3.0 * (i % families.max(1)) as f64;
+            (0..l)
+                .map(|_| {
+                    v += rng.normal() * 0.4;
+                    v
+                })
+                .collect()
+        })
+        .collect()
+}
+
+fn pairs(out: &QueryOutcome) -> Vec<(usize, u64)> {
+    // Compare raw distance bits: "bit-equal" literally.
+    out.neighbors.iter().map(|n| (n.index, n.distance.to_bits())).collect()
+}
+
+/// The grid the whole file sweeps: every cluster count × shard count ×
+/// thread count, against the flat (clusters = 0) serial baseline.
+const CLUSTER_GRID: [usize; 4] = [0, 1, 2, 5];
+const SHARD_GRID: [usize; 2] = [1, 3];
+const THREAD_GRID: [usize; 2] = [1, 4];
+
+#[test]
+fn clustered_scalar_knn_is_bit_equal_to_flat() {
+    let mut rng = Rng::seeded(0xC0DE);
+    let train = family_series(&mut rng, 60, 40, 6);
+    let queries = family_series(&mut rng, 5, 40, 6);
+    let w = 4;
+
+    let flat = DtwIndex::builder(train.clone())
+        .window(w)
+        .bound(BoundKind::Webb)
+        .build()
+        .expect("one shared length");
+    let mut flat_searcher = flat.searcher();
+
+    for q in &queries {
+        for k in [1usize, 3, 10] {
+            // Plain, thresholded, and excluded variants — the cutoff
+            // interacts with cluster skipping, so pin all three.
+            let tau = flat_searcher
+                .query_values::<Squared>(q, &QueryOptions::k(3))
+                .distances()
+                .last()
+                .copied()
+                .unwrap_or(f64::INFINITY);
+            let variants = [
+                QueryOptions::k(k),
+                QueryOptions::k(k).with_abandon_at(tau),
+                QueryOptions::k(k).with_exclude(7),
+            ];
+            for (vi, opts) in variants.iter().enumerate() {
+                let want = pairs(&flat_searcher.query_values::<Squared>(q, opts));
+                for &clusters in &CLUSTER_GRID {
+                    for &shards in &SHARD_GRID {
+                        for &threads in &THREAD_GRID {
+                            let index = DtwIndex::builder(train.clone())
+                                .window(w)
+                                .bound(BoundKind::Webb)
+                                .shards(shards)
+                                .clusters(clusters)
+                                .threads(threads)
+                                .build()
+                                .expect("one shared length");
+                            assert_eq!(index.has_clusters(), clusters > 0);
+                            let out =
+                                index.searcher().query_values::<Squared>(q, opts);
+                            assert_eq!(
+                                pairs(&out),
+                                want,
+                                "k={k} variant={vi} clusters={clusters} \
+                                 shards={shards} threads={threads}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn clustered_batched_prefilter_is_bit_equal_to_flat() {
+    let mut rng = Rng::seeded(0xBA7C);
+    let train = family_series(&mut rng, 48, 32, 5);
+    let queries = family_series(&mut rng, 6, 32, 5);
+    let w = 3;
+
+    let build = |clusters: usize, shards: usize, threads: usize| {
+        DtwIndex::builder(train.clone())
+            .window(w)
+            .bound(BoundKind::Keogh)
+            .strategy(SearchStrategy::SortedPrecomputed)
+            .shards(shards)
+            .clusters(clusters)
+            .threads(threads)
+            .build()
+            .expect("one shared length")
+    };
+
+    let flat = build(0, 1, 1);
+    let mut flat_searcher = flat.searcher();
+    assert_eq!(flat_searcher.backend_name(), Some("native"));
+    for k in [1usize, 4] {
+        let opts = QueryOptions::k(k);
+        let want: Vec<Vec<(usize, u64)>> = flat_searcher
+            .query_batch::<Squared>(&queries, &opts)
+            .iter()
+            .map(pairs)
+            .collect();
+        for &clusters in &CLUSTER_GRID {
+            for &shards in &SHARD_GRID {
+                for &threads in &THREAD_GRID {
+                    let index = build(clusters, shards, threads);
+                    let outs =
+                        index.searcher().query_batch::<Squared>(&queries, &opts);
+                    assert!(
+                        outs.iter().all(|o| o.batched),
+                        "batch must ride the native prefilter"
+                    );
+                    let got: Vec<Vec<(usize, u64)>> = outs.iter().map(pairs).collect();
+                    assert_eq!(
+                        got, want,
+                        "k={k} clusters={clusters} shards={shards} threads={threads}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn clustered_stream_scan_is_bit_equal_to_flat() {
+    let mut rng = Rng::seeded(0x57E4);
+    let patterns = family_series(&mut rng, 8, 24, 4);
+    let mut samples = Vec::new();
+    for _ in 0..12 {
+        let p = &patterns[rng.below(patterns.len())];
+        samples.extend(p.iter().map(|v| v + rng.normal() * 0.05));
+    }
+    let w = 2;
+
+    let build = |clusters: usize, shards: usize, threads: usize| {
+        DtwIndex::builder(patterns.clone())
+            .window(w)
+            .shards(shards)
+            .clusters(clusters)
+            .threads(threads)
+            .build()
+            .expect("one shared length")
+    };
+
+    let flat = build(0, 1, 1);
+    // Threshold with matches on both sides, plus a top-k sweep: both
+    // modes drive the window cutoff differently.
+    let probe = flat
+        .subsequence_scan::<Squared>(&samples, SubsequenceOptions::top_k(5))
+        .expect("valid options");
+    let tau = probe.matches.last().map(|m| m.distance * 1.001).unwrap_or(1.0);
+    let modes =
+        [SubsequenceOptions::threshold(tau).with_hop(3), SubsequenceOptions::top_k(4)];
+
+    for (mi, mode) in modes.iter().enumerate() {
+        let want = flat
+            .subsequence_scan::<Squared>(&samples, mode.clone())
+            .expect("valid options");
+        let want_matches: Vec<(u64, usize, u64)> = want
+            .matches
+            .iter()
+            .map(|m| (m.start, m.neighbor, m.distance.to_bits()))
+            .collect();
+        assert!(!want_matches.is_empty(), "degenerate mode {mi}");
+        for &clusters in &CLUSTER_GRID {
+            for &shards in &SHARD_GRID {
+                for &threads in &THREAD_GRID {
+                    let index = build(clusters, shards, threads);
+                    let got = index
+                        .subsequence_scan::<Squared>(
+                            &samples,
+                            mode.clone().with_threads(threads),
+                        )
+                        .expect("valid options");
+                    let got_matches: Vec<(u64, usize, u64)> = got
+                        .matches
+                        .iter()
+                        .map(|m| (m.start, m.neighbor, m.distance.to_bits()))
+                        .collect();
+                    assert_eq!(
+                        got_matches, want_matches,
+                        "mode={mi} clusters={clusters} shards={shards} threads={threads}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Degenerate pool: every candidate identical. Farthest-first seeding
+/// then sees zero proxy distances everywhere; with `clusters = n` every
+/// member becomes its own singleton pivot and nothing may panic, loop,
+/// or change the (tie-broken lowest-index) answer.
+#[test]
+fn all_identical_series_with_singleton_clusters_is_sound() {
+    let series: Vec<Vec<f64>> = vec![vec![1.5; 16]; 9];
+    let q = vec![1.5f64; 16];
+    let flat = DtwIndex::builder(series.clone()).window(2).build().unwrap();
+    let want = pairs(&flat.searcher().query_values::<Squared>(&q, &QueryOptions::k(4)));
+    // k=4 nearest of identical series: distance 0, lowest indices win.
+    assert_eq!(want.iter().map(|&(i, _)| i).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+    for &clusters in &[1usize, 3, 9, 50] {
+        for &shards in &SHARD_GRID {
+            let index = DtwIndex::builder(series.clone())
+                .window(2)
+                .shards(shards)
+                .clusters(clusters)
+                .build()
+                .unwrap();
+            assert!(index.has_clusters());
+            let out = index.searcher().query_values::<Squared>(&q, &QueryOptions::k(4));
+            assert_eq!(pairs(&out), want, "clusters={clusters} shards={shards}");
+        }
+    }
+}
+
+#[test]
+fn clusters_auto_builds_and_answers_exactly() {
+    let mut rng = Rng::seeded(0xA070);
+    let train = family_series(&mut rng, 50, 28, 5);
+    let q = family_series(&mut rng, 1, 28, 5).pop().unwrap();
+    let flat = DtwIndex::builder(train.clone()).window(3).build().unwrap();
+    let want = pairs(&flat.searcher().query_values::<Squared>(&q, &QueryOptions::k(5)));
+    let auto = DtwIndex::builder(train)
+        .window(3)
+        .shards(2)
+        .clusters_auto()
+        .build()
+        .unwrap();
+    assert!(auto.has_clusters(), "auto must pick a nonzero cluster count here");
+    assert!(auto.clusters() > 0);
+    let out = auto.searcher().query_values::<Squared>(&q, &QueryOptions::k(5));
+    assert_eq!(pairs(&out), want);
+}
+
+/// Cluster counters only move when clusters exist, and cluster-pruned
+/// members never also show up in the per-candidate counters.
+#[test]
+fn cluster_counters_are_consistent() {
+    let mut rng = Rng::seeded(0x5747);
+    let train = family_series(&mut rng, 80, 32, 8);
+    let n = train.len();
+    let q = family_series(&mut rng, 1, 32, 8).pop().unwrap();
+
+    let flat = DtwIndex::builder(train.clone()).window(3).build().unwrap();
+    let f = flat.searcher().query_values::<Squared>(&q, &QueryOptions::k(1));
+    assert_eq!(f.stats.cluster_lb_calls, 0);
+    assert_eq!(f.stats.clusters_pruned, 0);
+    assert_eq!(f.stats.cluster_members_pruned, 0);
+
+    let clustered =
+        DtwIndex::builder(train).window(3).shards(2).clusters(8).build().unwrap();
+    let c = clustered.searcher().query_values::<Squared>(&q, &QueryOptions::k(1));
+    assert!(c.stats.cluster_lb_calls > 0, "cluster bounds must be evaluated");
+    assert!(c.stats.cluster_members_pruned >= c.stats.clusters_pruned);
+    // Every candidate is accounted for exactly once: computed exactly
+    // (including the cutoff-free seed candidates), pruned by its own
+    // bound, or skipped wholesale with its cluster.
+    assert_eq!(c.stats.dtw_calls + c.stats.pruned + c.stats.cluster_members_pruned, n);
+    assert_eq!(pairs(&c), pairs(&f));
+}
+
+#[test]
+fn snapshot_round_trip_preserves_clustered_answers() {
+    let mut rng = Rng::seeded(0x54A9);
+    let train = family_series(&mut rng, 40, 24, 4);
+    let queries = family_series(&mut rng, 3, 24, 4);
+    let index = DtwIndex::builder(train)
+        .window(3)
+        .shards(3)
+        .clusters(4)
+        .threads(2)
+        .build()
+        .unwrap();
+    let path = std::env::temp_dir()
+        .join(format!("dtwb_cluster_roundtrip_{}.snap", std::process::id()));
+    index.save(&path).expect("write snapshot");
+    let loaded = DtwIndex::load(&path).expect("read snapshot");
+    std::fs::remove_file(&path).ok();
+
+    assert!(loaded.has_clusters(), "clusters must survive the round trip");
+    assert_eq!(loaded.clusters(), index.clusters());
+    for q in &queries {
+        let a = index.searcher().query_values::<Squared>(q, &QueryOptions::k(5));
+        let b = loaded.searcher().query_values::<Squared>(q, &QueryOptions::k(5));
+        assert_eq!(pairs(&a), pairs(&b));
+        // The loaded index still cluster-prunes (not silently flat).
+        assert!(b.stats.cluster_lb_calls > 0);
+    }
+}

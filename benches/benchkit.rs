@@ -402,6 +402,93 @@ pub fn write_cluster_prune_json(
     std::fs::write(path, out)
 }
 
+/// One machine-readable record for the write-path half of
+/// `BENCH_live_mutation.json` (`"inserts"` array): how fast series land
+/// in the delta shard (envelope prep + append, no rebuild).
+#[derive(Debug, Clone)]
+pub struct LiveInsertRecord {
+    /// Series inserted per measured repeat.
+    pub batch: usize,
+    /// Series length ℓ.
+    pub series_len: usize,
+    /// Inserts per second.
+    pub inserts_per_sec: f64,
+}
+
+/// One machine-readable record for the read-path half of
+/// `BENCH_live_mutation.json` (`"delta_query"` array): k-NN latency as
+/// the un-compacted delta shard fills (fill 0 = the frozen baseline).
+#[derive(Debug, Clone)]
+pub struct DeltaQueryRecord {
+    /// Pending delta-shard inserts during the measurement.
+    pub delta_fill: usize,
+    /// Frozen base candidates.
+    pub candidates: usize,
+    /// Queries answered per measured repeat.
+    pub queries: usize,
+    /// Queries per second.
+    pub queries_per_sec: f64,
+    /// Mean microseconds per query.
+    pub micros_per_query: f64,
+}
+
+/// One machine-readable record for the fold half of
+/// `BENCH_live_mutation.json` (`"compaction"` array): wall time of one
+/// `compact()` — the full rebuild of base + delta − tombstones into the
+/// next generation — per builder thread count.
+#[derive(Debug, Clone)]
+pub struct CompactionRecord {
+    /// Builder/search thread count of the index being compacted.
+    pub threads: usize,
+    /// Logical series folded into the new generation.
+    pub series: usize,
+    /// Pending delta inserts folded in.
+    pub delta_fill: usize,
+    /// Pending base tombstones folded out.
+    pub tombstones: usize,
+    /// Milliseconds per compaction.
+    pub millis: f64,
+}
+
+/// Write the live-mutation trajectory file: one JSON object with
+/// `inserts`, `delta_query` and `compaction` arrays (manual formatting —
+/// no `serde` in the offline build; stable for line-diffing across PRs).
+pub fn write_live_mutation_json(
+    path: &str,
+    inserts: &[LiveInsertRecord],
+    delta_query: &[DeltaQueryRecord],
+    compaction: &[CompactionRecord],
+) -> std::io::Result<()> {
+    let mut out = String::from("{\n  \"inserts\": [\n");
+    for (i, r) in inserts.iter().enumerate() {
+        let sep = if i + 1 == inserts.len() { "" } else { "," };
+        out.push_str(&format!(
+            "    {{\"batch\": {}, \"series_len\": {}, \"inserts_per_sec\": {:.1}}}{sep}\n",
+            r.batch, r.series_len, r.inserts_per_sec,
+        ));
+    }
+    out.push_str("  ],\n  \"delta_query\": [\n");
+    for (i, r) in delta_query.iter().enumerate() {
+        let sep = if i + 1 == delta_query.len() { "" } else { "," };
+        out.push_str(&format!(
+            "    {{\"delta_fill\": {}, \"candidates\": {}, \"queries\": {}, \
+             \"queries_per_sec\": {:.1}, \"micros_per_query\": {:.1}}}{sep}\n",
+            r.delta_fill, r.candidates, r.queries, r.queries_per_sec, r.micros_per_query,
+        ));
+    }
+    out.push_str("  ],\n  \"compaction\": [\n");
+    for (i, r) in compaction.iter().enumerate() {
+        let sep = if i + 1 == compaction.len() { "" } else { "," };
+        out.push_str(&format!(
+            "    {{\"threads\": {}, \"series\": {}, \"delta_fill\": {}, \
+             \"tombstones\": {}, \"millis\": {:.3}}}{sep}\n",
+            r.threads, r.series, r.delta_fill, r.tombstones, r.millis,
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    std::fs::write(path, out)
+}
+
 /// Write records as a JSON array. The offline build has no `serde`; the
 /// records are flat, so manual formatting is sufficient and the output is
 /// stable for line-diffing across PRs.

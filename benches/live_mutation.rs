@@ -1,0 +1,244 @@
+//! Live-mutation trajectory bench: the three costs of the mutable index
+//! (`rust/src/live/`, ARCHITECTURE.md "Live mutation & generations").
+//!
+//! 1. **Inserts/sec** — the delta-shard write path (z-norm policy +
+//!    envelope preparation + append; no rebuild).
+//! 2. **Query latency vs delta fill** — k-NN queries/sec as pending
+//!    inserts accumulate in the un-compacted delta shard (fill 0 is the
+//!    frozen baseline). Each sweep point first asserts the live answers
+//!    are bit-equal to a cold rebuild over the same logical series — the
+//!    subsystem's defining contract — before timing.
+//! 3. **Compaction wall time** — one `compact()` folding base + delta −
+//!    tombstones into the next generation, at 1/2/4 builder threads.
+//!
+//! Records land in `BENCH_live_mutation.json` (`inserts`, `delta_query`,
+//! `compaction` arrays).
+//!
+//! Knobs (env): `DTWB_REPEATS` (default 3), `DTWB_SERIES_LEN` (128),
+//! `DTWB_CANDIDATES` (2000), `DTWB_QUERIES` (16), `DTWB_SHARDS` (2),
+//! `DTWB_INSERTS` (256, the write-path batch).
+//!
+//! ```sh
+//! cargo bench --bench live_mutation
+//! ```
+
+#[path = "benchkit.rs"]
+mod benchkit;
+
+use std::time::Instant;
+
+use dtw_bounds::coordinator::NnEngine;
+use dtw_bounds::data::rng::Rng;
+use dtw_bounds::delta::Squared;
+use dtw_bounds::index::{DtwIndex, QueryOptions};
+use dtw_bounds::metrics::{Summary, Table};
+
+/// Smooth random-walk series around a per-family offset (the same pool
+/// shape as `cluster_prune`): inserts drawn from the same families as
+/// the base keep the delta scan honest — its candidates are competitive,
+/// not instantly pruned.
+fn family_walk(rng: &mut Rng, l: usize, offset: f64) -> Vec<f64> {
+    let mut v = offset;
+    (0..l)
+        .map(|_| {
+            v += rng.normal() * 0.25;
+            v
+        })
+        .collect()
+}
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+fn build(
+    values: Vec<Vec<f64>>,
+    labels: Vec<u32>,
+    w: usize,
+    shards: usize,
+    threads: usize,
+) -> DtwIndex {
+    DtwIndex::builder(values)
+        .labels(labels)
+        .window(w)
+        .shards(shards)
+        .threads(threads)
+        .build()
+        .expect("one shared length")
+}
+
+fn main() {
+    let knobs = benchkit::Knobs::from_env();
+    let l = env_usize("DTWB_SERIES_LEN", 128);
+    let n = env_usize("DTWB_CANDIDATES", 2_000);
+    let nq = env_usize("DTWB_QUERIES", 16);
+    let shards = env_usize("DTWB_SHARDS", 2).max(1);
+    let batch = env_usize("DTWB_INSERTS", 256).max(1);
+    let w = (l / 10).max(1);
+    let families = 12usize;
+    let mut rng = Rng::seeded(0x11FE);
+
+    let train: Vec<Vec<f64>> =
+        (0..n).map(|i| family_walk(&mut rng, l, 6.0 * (i % families) as f64)).collect();
+    let labels: Vec<u32> = (0..n).map(|i| (i % families) as u32).collect();
+    let donors: Vec<(u32, Vec<f64>)> = (0..batch)
+        .map(|j| (1000 + j as u32, family_walk(&mut rng, l, 6.0 * (j % families) as f64)))
+        .collect();
+    let queries: Vec<Vec<f64>> =
+        (0..nq).map(|i| family_walk(&mut rng, l, 6.0 * (i % families) as f64)).collect();
+    let opts = QueryOptions::k(3);
+
+    benchkit::banner(&format!(
+        "Live mutation (n={n}, l={l}, w={w}, k=3, shards={shards}, \
+         insert batch={batch})"
+    ));
+
+    let base = build(train.clone(), labels.clone(), w, shards, 2);
+    let mut engine = NnEngine::from_index(base.clone());
+
+    // 1. Write path: inserts/sec into the delta shard. `replace_index`
+    //    clears the live state between repeats, so every repeat appends
+    //    the same batch to an empty delta.
+    let mut insert_times = Vec::new();
+    for rep in 0..=knobs.repeats {
+        engine.replace_index(base.clone());
+        let t0 = Instant::now();
+        for (label, values) in &donors {
+            engine.insert(*label, values.clone()).expect("insert");
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        if rep > 0 {
+            insert_times.push(dt);
+        }
+    }
+    let inserts_per_sec = batch as f64 / Summary::of(&insert_times).mean;
+    println!("write path: {inserts_per_sec:.0} inserts/s (batch {batch})");
+    let insert_records = vec![benchkit::LiveInsertRecord {
+        batch,
+        series_len: l,
+        inserts_per_sec,
+    }];
+
+    // 2. Read path: k-NN latency as the delta fills.
+    let mut table = Table::new(vec!["delta fill", "queries/s", "us/query", "vs frozen"]);
+    let mut query_records: Vec<benchkit::DeltaQueryRecord> = Vec::new();
+    let mut base_qps = 0.0f64;
+    for &fill in &[0usize, 8, 32, 128] {
+        let fill = fill.min(batch);
+        engine.replace_index(base.clone());
+        for (label, values) in donors.iter().take(fill) {
+            engine.insert(*label, values.clone()).expect("insert");
+        }
+
+        // Exactness spot check before timing: live answers must be
+        // bit-equal to a cold rebuild over base + the inserted series.
+        let mut cold_values = train.clone();
+        let mut cold_labels = labels.clone();
+        for (label, values) in donors.iter().take(fill) {
+            cold_values.push(values.clone());
+            cold_labels.push(*label);
+        }
+        let cold = build(cold_values, cold_labels, w, shards, 2);
+        let mut cold_searcher = cold.searcher();
+        for q in &queries {
+            let live: Vec<(usize, u32, f64)> = engine
+                .query_with(q, &opts)
+                .neighbors
+                .iter()
+                .map(|nb| (nb.index, nb.label, nb.distance))
+                .collect();
+            let frozen: Vec<(usize, u32, f64)> = cold_searcher
+                .query_values::<Squared>(q, &opts)
+                .neighbors
+                .iter()
+                .map(|nb| (nb.index, nb.label, nb.distance))
+                .collect();
+            assert_eq!(live, frozen, "live search must be bit-equal to a cold rebuild");
+        }
+
+        let mean = Summary::of(&benchkit::time_reps(knobs.repeats, || {
+            let mut acc = 0usize;
+            for q in &queries {
+                acc += engine.query_with(q, &opts).neighbors.len();
+            }
+            std::hint::black_box(acc);
+        }))
+        .mean;
+        let qps = nq as f64 / mean;
+        let us = 1e6 * mean / nq as f64;
+        if fill == 0 {
+            base_qps = qps;
+        }
+        table.row(vec![
+            fill.to_string(),
+            format!("{qps:.1}"),
+            format!("{us:.1}"),
+            format!("{:.2}x", qps / base_qps),
+        ]);
+        query_records.push(benchkit::DeltaQueryRecord {
+            delta_fill: fill,
+            candidates: n,
+            queries: nq,
+            queries_per_sec: qps,
+            micros_per_query: us,
+        });
+    }
+    println!("{}", table.to_markdown());
+
+    // 3. Compaction: fold a fixed mutation load into the next
+    //    generation, per builder thread count. Deleting logical id 0
+    //    repeatedly tombstones a fresh base series each time (ids shift
+    //    down as a rebuild would number them).
+    let fill = 64.min(batch);
+    let tombs = 16.min(n / 2);
+    let mut compact_table = Table::new(vec!["threads", "series", "compaction ms"]);
+    let mut compact_records: Vec<benchkit::CompactionRecord> = Vec::new();
+    for &threads in &[1usize, 2, 4] {
+        let base_t = build(train.clone(), labels.clone(), w, shards, threads);
+        let mut engine = NnEngine::from_index(base_t.clone());
+        let mut times = Vec::new();
+        let mut series = 0usize;
+        for rep in 0..=knobs.repeats {
+            engine.replace_index(base_t.clone());
+            for (label, values) in donors.iter().take(fill) {
+                engine.insert(*label, values.clone()).expect("insert");
+            }
+            for _ in 0..tombs {
+                engine.delete(0).expect("delete");
+            }
+            series = engine.logical_len();
+            let t0 = Instant::now();
+            engine.compact().expect("compact");
+            let dt = t0.elapsed().as_secs_f64();
+            if rep > 0 {
+                times.push(dt);
+            }
+        }
+        let millis = 1e3 * Summary::of(&times).mean;
+        compact_table.row(vec![
+            threads.to_string(),
+            series.to_string(),
+            format!("{millis:.1}"),
+        ]);
+        compact_records.push(benchkit::CompactionRecord {
+            threads,
+            series,
+            delta_fill: fill,
+            tombstones: tombs,
+            millis,
+        });
+    }
+    println!("{}", compact_table.to_markdown());
+
+    // cargo runs bench binaries with cwd = the package root (rust/);
+    // anchor the trajectory file at the workspace root regardless.
+    let out_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_live_mutation.json");
+    benchkit::write_live_mutation_json(out_path, &insert_records, &query_records, &compact_records)
+        .expect("write BENCH_live_mutation.json");
+    println!(
+        "wrote BENCH_live_mutation.json ({} insert, {} query, {} compaction records)",
+        insert_records.len(),
+        query_records.len(),
+        compact_records.len()
+    );
+}

@@ -10,12 +10,15 @@
 //! with early-abandoning DTW. Results are exact either way; only the
 //! screening cost moves.
 
+use std::path::{Path, PathBuf};
 use std::time::Duration;
 
-use crate::bounds::BoundKind;
+use crate::bounds::{BoundKind, PreparedSeries};
 use crate::data::Dataset;
 use crate::delta::Squared;
+use crate::index::snapshot::{generation_path, SnapshotError};
 use crate::index::{DtwIndex, QueryOptions, QueryOutcome, Searcher};
+use crate::live::LiveState;
 use crate::runtime::{BackendKind, LbBackend, NativeBatchLb};
 use crate::search::nn::NnResult;
 use crate::search::SearchStrategy;
@@ -51,10 +54,40 @@ impl QueryResponse {
     }
 }
 
+/// A live index's generation status — the `gens=;` protocol verb's
+/// payload.
+#[derive(Debug, Clone)]
+pub struct GenerationInfo {
+    /// Generation of the currently served frozen base.
+    pub generation: u64,
+    /// The generation it was compacted from (0 = baseline).
+    pub parent: u64,
+    /// Pending delta-shard inserts.
+    pub delta_len: usize,
+    /// Pending base tombstones.
+    pub tombstones: usize,
+    /// Generation snapshots written by this engine: `(generation, path)`
+    /// in save order (rollback targets for `load=`).
+    pub saved: Vec<(u64, PathBuf)>,
+}
+
 /// Exact k-NN engine over one dataset's training split: a [`Searcher`]
 /// plus adapters for the line-protocol serving stack.
+///
+/// The engine is also the ownership point of **live mutation**
+/// ([`crate::live`]): it pairs the frozen index with a [`LiveState`]
+/// (delta shard + tombstones) and routes every query/batch/stream
+/// through the live overlay whenever mutations are pending — results
+/// stay bit-identical to a cold rebuild of the logical series set.
 pub struct NnEngine {
     searcher: Searcher,
+    /// Pending live mutations over the served index.
+    live: LiveState,
+    /// Compact automatically once this many mutations (delta inserts +
+    /// tombstones) are pending (`None` = explicit compaction only).
+    auto_compact: Option<usize>,
+    /// Generation snapshots written so far: `(generation, path)`.
+    saved: Vec<(u64, PathBuf)>,
 }
 
 impl NnEngine {
@@ -73,7 +106,12 @@ impl NnEngine {
     /// Wrap a prebuilt index — the facade path: the index (and its
     /// prepared envelopes) can be shared across engines/threads.
     pub fn from_index(index: DtwIndex) -> Self {
-        NnEngine { searcher: index.searcher() }
+        NnEngine {
+            searcher: index.searcher(),
+            live: LiveState::new(),
+            auto_compact: None,
+            saved: Vec::new(),
+        }
     }
 
     /// Build an engine with a batched screening backend attached.
@@ -133,6 +171,9 @@ impl NnEngine {
     /// override `--no-batch`). This is the `load=<path>;` protocol
     /// verb's engine half: a running router hot-swaps onto a snapshot
     /// without restarting and without changing how it screens.
+    /// Any swap also resets the live state: pending delta entries and
+    /// tombstones are defined against the *old* base's id space, so a
+    /// loaded snapshot (including a generation rollback) starts clean.
     pub fn replace_index(&mut self, index: DtwIndex) {
         let backend = self.searcher.take_backend();
         self.searcher = index.searcher();
@@ -140,6 +181,7 @@ impl NnEngine {
             Some(b) => self.searcher.set_backend(b),
             None => self.searcher.clear_backend(),
         }
+        self.live.clear();
     }
 
     /// True when a batched screening backend is attached.
@@ -162,47 +204,153 @@ impl NnEngine {
         self.searcher.index().window()
     }
 
+    // ---- live mutation ------------------------------------------------
+
+    /// Append one series to the delta shard; returns its logical id.
+    pub fn insert(&mut self, label: u32, values: Vec<f64>) -> anyhow::Result<usize> {
+        self.live.insert(self.searcher.index(), label, values)
+    }
+
+    /// Delete the series with logical id `id` (tombstone a base series
+    /// or drop a delta entry).
+    pub fn delete(&mut self, id: usize) -> anyhow::Result<()> {
+        self.live.delete(self.searcher.index(), id)
+    }
+
+    /// Fold the pending mutations into the next generation: the
+    /// compacted index is built **aside** (the served index keeps
+    /// answering until the build succeeds) and then swapped in with the
+    /// deployment backend attachment intact. Returns the new generation.
+    pub fn compact(&mut self) -> anyhow::Result<u64> {
+        let next = self.live.compact(self.searcher.index())?;
+        let generation = next.generation();
+        self.replace_index(next);
+        Ok(generation)
+    }
+
+    /// Set (or clear) the auto-compaction threshold: compact as soon as
+    /// delta inserts + tombstones reach `n` pending mutations.
+    pub fn set_auto_compact(&mut self, n: Option<usize>) {
+        self.auto_compact = n.filter(|&n| n > 0);
+    }
+
+    /// Compact iff the auto-compaction threshold is set and reached;
+    /// returns the new generation when a compaction ran.
+    pub fn maybe_auto_compact(&mut self) -> anyhow::Result<Option<u64>> {
+        match self.auto_compact {
+            Some(n) if self.live.delta_len() + self.live.tombstone_count() >= n => {
+                self.compact().map(Some)
+            }
+            _ => Ok(None),
+        }
+    }
+
+    /// Pending delta-shard inserts.
+    pub fn delta_len(&self) -> usize {
+        self.live.delta_len()
+    }
+
+    /// Generation of the served frozen base.
+    pub fn generation(&self) -> u64 {
+        self.searcher.index().generation()
+    }
+
+    /// Logical series count (base survivors + delta entries).
+    pub fn logical_len(&self) -> usize {
+        self.live.logical_len(self.searcher.index())
+    }
+
+    /// The generation status ([`GenerationInfo`]) — served generation,
+    /// pending mutation counts, and every generation snapshot written.
+    pub fn generations(&self) -> GenerationInfo {
+        let index = self.searcher.index();
+        GenerationInfo {
+            generation: index.generation(),
+            parent: index.parent(),
+            delta_len: self.live.delta_len(),
+            tombstones: self.live.tombstone_count(),
+            saved: self.saved.clone(),
+        }
+    }
+
+    /// Save the served frozen base as a **generation snapshot**:
+    /// `<base>.g<N>` ([`generation_path`]), recorded for `gens=` /
+    /// rollback. Pending delta mutations are *not* serialized — compact
+    /// first to persist them.
+    pub fn save_generation(&mut self, base: &Path) -> Result<(PathBuf, u64), SnapshotError> {
+        let generation = self.generation();
+        let path = generation_path(base, generation);
+        let bytes = self.searcher.index().save(&path)?;
+        self.saved.push((generation, path.clone()));
+        Ok((path, bytes))
+    }
+
+    // ---- query paths ---------------------------------------------------
+
     /// Answer one query on the scalar path (1-NN legacy shape).
     pub fn query_one(&mut self, values: &[f64]) -> QueryResponse {
-        QueryResponse::from_outcome(
-            self.searcher.query_values::<Squared>(values, &QueryOptions::default()),
-        )
+        QueryResponse::from_outcome(self.query_with(values, &QueryOptions::default()))
     }
 
     /// Answer one query with full options (k-NN, threshold, z-norm).
+    /// Routes through the live overlay when mutations are pending.
     pub fn query_with(&mut self, values: &[f64], opts: &QueryOptions) -> QueryOutcome {
-        self.searcher.query_values::<Squared>(values, opts)
+        self.live.query::<Squared>(&mut self.searcher, values, opts)
     }
 
     /// Answer a batch of queries (1-NN legacy shape), riding the
     /// attached backend when the batch is non-trivial and fits its
     /// shape, otherwise the scalar path per query.
     pub fn query_batch(&mut self, queries: &[Vec<f64>]) -> Vec<QueryResponse> {
-        self.searcher
-            .query_batch::<Squared>(queries, &QueryOptions::default())
-            .into_iter()
-            .map(QueryResponse::from_outcome)
-            .collect()
+        let items: Vec<(Vec<f64>, QueryOptions)> =
+            queries.iter().map(|q| (q.clone(), QueryOptions::default())).collect();
+        self.query_batch_with(&items).into_iter().map(QueryResponse::from_outcome).collect()
     }
 
     /// Answer a batch of `(values, options)` pairs — the router's shape,
-    /// where concurrent clients may ask for different `k`.
+    /// where concurrent clients may ask for different `k`. Routes
+    /// through the live overlay when mutations are pending.
     pub fn query_batch_with(
         &mut self,
         items: &[(Vec<f64>, QueryOptions)],
     ) -> Vec<QueryOutcome> {
-        self.searcher.query_batch_mixed::<Squared>(items)
+        self.live.query_batch::<Squared>(&mut self.searcher, items)
     }
 
     /// Streaming subsequence search over this engine's index: slide an
     /// index-length window along `samples` and report matching windows —
     /// the line protocol's `stream=` requests (see `docs/protocol.md`).
+    ///
+    /// With pending mutations the sweep carries the live overlay
+    /// (tombstone skip mask + delta continuation, logical-id emission);
+    /// an insert-only index (empty base) scans a temporary compacted
+    /// build, which the compaction invariant makes identical to a cold
+    /// rebuild. Matches are bit-identical to a frozen index over the
+    /// same logical series set either way.
     pub fn query_stream(
         &mut self,
         samples: &[f64],
         opts: crate::stream::SubsequenceOptions,
     ) -> anyhow::Result<crate::stream::StreamReport> {
-        self.searcher.index().subsequence_scan::<Squared>(samples, opts)
+        if !self.live.is_dirty() {
+            return self.searcher.index().subsequence_scan::<Squared>(samples, opts);
+        }
+        let index = self.searcher.index().clone();
+        if index.is_empty() {
+            let tmp = crate::live::compacted(&index, self.live.delta(), self.live.tombstones())?;
+            return tmp.subsequence_scan::<Squared>(samples, opts);
+        }
+        let mut s = index.subsequence(opts)?;
+        let delta: Vec<(u32, PreparedSeries)> = self
+            .live
+            .delta()
+            .entries()
+            .iter()
+            .map(|e| (e.label, e.series.clone()))
+            .collect();
+        s.set_overlay(delta, self.live.tombstones().dead_mask(index.len()));
+        s.scan::<Squared>(samples);
+        Ok(s.finish())
     }
 }
 
@@ -324,6 +472,111 @@ mod tests {
         let out = engine.query_batch(&[ds.test[0].values.clone()]);
         assert_eq!(out.len(), 1);
         assert_eq!(out[0].path, EnginePath::Scalar);
+    }
+
+    #[test]
+    fn live_mutations_match_cold_rebuild_on_every_path() {
+        let ds = &generate_archive(&ArchiveSpec::new(Scale::Tiny, 66))[0];
+        let w = ds.window.max(1);
+        let raw: Vec<Vec<f64>> = ds.train.iter().map(|s| s.values.clone()).collect();
+        let labels: Vec<u32> = ds.train.iter().map(|s| s.label).collect();
+        let build = |series: Vec<Vec<f64>>, labels: Vec<u32>| {
+            crate::index::DtwIndex::builder(series)
+                .labels(labels)
+                .window(w)
+                .build()
+                .unwrap()
+        };
+        let mut engine = NnEngine::from_index(build(raw.clone(), labels.clone()));
+
+        // Mutate: delete two base series, insert two test series.
+        engine.delete(1).unwrap();
+        engine.delete(3).unwrap();
+        let id = engine.insert(41, ds.test[0].values.clone()).unwrap();
+        assert_eq!(id, raw.len() - 2);
+        engine.insert(42, ds.test[1].values.clone()).unwrap();
+        assert_eq!(engine.logical_len(), raw.len());
+
+        // The same logical series set, cold.
+        let mut cold_series: Vec<Vec<f64>> = Vec::new();
+        let mut cold_labels: Vec<u32> = Vec::new();
+        for (i, s) in raw.iter().enumerate() {
+            // Logical deletes above targeted ids 1 and 3 of the shifting
+            // id space: physical 1, then physical 4.
+            if i == 1 || i == 4 {
+                continue;
+            }
+            cold_series.push(s.clone());
+            cold_labels.push(labels[i]);
+        }
+        cold_series.push(ds.test[0].values.clone());
+        cold_labels.push(41);
+        cold_series.push(ds.test[1].values.clone());
+        cold_labels.push(42);
+        let cold = build(cold_series, cold_labels);
+        let mut cold_engine = NnEngine::from_index(cold.clone());
+
+        let pair = |o: &QueryOutcome| -> Vec<(usize, f64, u32)> {
+            o.neighbors.iter().map(|n| (n.index, n.distance, n.label)).collect()
+        };
+        for q in ds.test.iter().take(4) {
+            for k in [1usize, 3] {
+                let a = engine.query_with(&q.values, &QueryOptions::k(k));
+                let b = cold_engine.query_with(&q.values, &QueryOptions::k(k));
+                assert_eq!(pair(&a), pair(&b), "live vs cold k={k}");
+            }
+        }
+        // Batched path.
+        let items: Vec<(Vec<f64>, QueryOptions)> =
+            ds.test.iter().take(4).map(|s| (s.values.clone(), QueryOptions::k(2))).collect();
+        let live_outs = engine.query_batch_with(&items);
+        let cold_outs = cold_engine.query_batch_with(&items);
+        for (a, b) in live_outs.iter().zip(cold_outs.iter()) {
+            assert_eq!(pair(a), pair(b), "batched live vs cold");
+        }
+        // Stream path.
+        let mut samples: Vec<f64> = Vec::new();
+        for s in ds.test.iter().take(3) {
+            samples.extend_from_slice(&s.values);
+        }
+        let opts = crate::stream::SubsequenceOptions::top_k(3);
+        let a = engine.query_stream(&samples, opts.clone()).unwrap();
+        let b = cold_engine.query_stream(&samples, opts).unwrap();
+        let ms = |r: &crate::stream::StreamReport| -> Vec<(u64, usize, f64)> {
+            r.matches.iter().map(|m| (m.start, m.neighbor, m.distance)).collect()
+        };
+        assert_eq!(ms(&a), ms(&b), "stream live vs cold");
+        assert!(a.stats.delta_scanned > 0, "overlay continuation ran");
+
+        // Compaction folds the state and keeps every answer.
+        let want = engine.query_with(&ds.test[0].values, &QueryOptions::k(3));
+        let generation = engine.compact().unwrap();
+        assert_eq!(generation, 1);
+        assert_eq!(engine.delta_len(), 0);
+        assert_eq!(engine.train_len(), raw.len());
+        let got = engine.query_with(&ds.test[0].values, &QueryOptions::k(3));
+        assert_eq!(pair(&want), pair(&got), "compaction changes no answer");
+        // Compacted base ≡ cold rebuild, bit for bit.
+        for (a, b) in engine.index().train().series.iter().zip(cold.train().series.iter()) {
+            assert_eq!(a.values, b.values);
+            assert_eq!(a.lo, b.lo);
+            assert_eq!(a.up, b.up);
+        }
+        assert_eq!(engine.index().train().labels, cold.train().labels);
+    }
+
+    #[test]
+    fn auto_compact_triggers_at_threshold() {
+        let ds = &generate_archive(&ArchiveSpec::new(Scale::Tiny, 67))[1];
+        let index = crate::index::DtwIndex::builder_from_dataset(ds).build().unwrap();
+        let mut engine = NnEngine::from_index(index);
+        engine.set_auto_compact(Some(2));
+        engine.insert(9, ds.test[0].values.clone()).unwrap();
+        assert_eq!(engine.maybe_auto_compact().unwrap(), None, "below threshold");
+        engine.insert(9, ds.test[1].values.clone()).unwrap();
+        assert_eq!(engine.maybe_auto_compact().unwrap(), Some(1), "threshold reached");
+        assert_eq!(engine.generation(), 1);
+        assert_eq!(engine.delta_len(), 0);
     }
 
     /// Exactness of the PJRT path (needs `make artifacts` + real XLA).

@@ -17,9 +17,14 @@
 //!   backend (native Rust by default, one XLA execution per batch with
 //!   the `pjrt` feature) or single queries through the scalar path,
 //!   whichever is available/profitable. Snapshot control rides the same
-//!   loop: [`Router::save_snapshot`] serializes the served index and
-//!   [`Router::load_snapshot`] hot-swaps onto a persisted one (the
-//!   `save=`/`load=` protocol verbs).
+//!   loop: [`Router::save_snapshot`] serializes the served index to a
+//!   generation-versioned path and [`Router::load_snapshot`] hot-swaps
+//!   onto a persisted one (the `save=`/`load=` protocol verbs). Live
+//!   mutation rides it too: [`Router::insert`], [`Router::delete`] and
+//!   [`Router::compact`] (the `insert=`/`delete=`/`compact=` verbs)
+//!   mutate the engine's delta shard / tombstone overlay between
+//!   batches, keeping every search path bit-identical to a cold
+//!   rebuild; [`Router::generations`] (`gens=`) reports the lineage.
 //! * [`server`] — a line-protocol TCP front end over the router (used by
 //!   `examples/serve.rs`; the wire format is specified with worked
 //!   examples in `docs/protocol.md`).
@@ -61,7 +66,10 @@ pub mod pool;
 pub mod router;
 pub mod server;
 
-pub use engine::{EnginePath, NnEngine, QueryResponse};
+pub use engine::{EnginePath, GenerationInfo, NnEngine, QueryResponse};
 pub use pool::WorkerPool;
-pub use router::{Router, RouterStats, SnapshotLoaded, SnapshotSaved};
+pub use router::{
+    CompactReceipt, DeleteReceipt, InsertReceipt, Router, RouterStats, SnapshotLoaded,
+    SnapshotSaved,
+};
 pub use server::Server;

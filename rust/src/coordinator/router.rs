@@ -21,23 +21,58 @@ use std::time::Duration;
 use crate::index::{DtwIndex, QueryOptions, QueryOutcome, SnapshotError};
 use crate::stream::{StreamReport, SubsequenceOptions};
 
-use super::engine::{NnEngine, QueryResponse};
+use super::engine::{GenerationInfo, NnEngine, QueryResponse};
 
 enum Msg {
     Query(Vec<f64>, QueryOptions, Sender<QueryOutcome>),
     Stream(Vec<f64>, SubsequenceOptions, Sender<anyhow::Result<StreamReport>>),
     Save(PathBuf, Sender<Result<SnapshotSaved, SnapshotError>>),
     Load(PathBuf, Sender<Result<SnapshotLoaded, SnapshotError>>),
+    Insert(u32, Vec<f64>, Sender<anyhow::Result<InsertReceipt>>),
+    Delete(usize, Sender<anyhow::Result<DeleteReceipt>>),
+    Compact(Sender<anyhow::Result<CompactReceipt>>),
+    Gens(Sender<GenerationInfo>),
     Shutdown,
 }
 
-/// Receipt for a `save=` request: where the snapshot landed and its size.
+/// Receipt for a `save=` request: where the snapshot landed and its
+/// size. The path is the **generation-versioned** one actually written
+/// (`<requested>.g<N>`), not the requested base.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct SnapshotSaved {
     /// Path the snapshot was written to.
     pub path: PathBuf,
     /// Bytes written.
     pub bytes: u64,
+}
+
+/// Receipt for an `insert=` request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct InsertReceipt {
+    /// Logical id assigned to the inserted series.
+    pub id: usize,
+    /// Delta-shard length after the insert.
+    pub delta_len: usize,
+    /// Generation of the serving base.
+    pub generation: u64,
+}
+
+/// Receipt for a `delete=` request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DeleteReceipt {
+    /// Logical series count after the delete.
+    pub remaining: usize,
+    /// Base tombstones now pending.
+    pub tombstones: usize,
+}
+
+/// Receipt for a `compact=` request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CompactReceipt {
+    /// Generation now serving (old + 1).
+    pub generation: u64,
+    /// Series count of the compacted base.
+    pub series: usize,
 }
 
 /// Receipt for a `load=` request: the shape of the index now serving.
@@ -82,6 +117,16 @@ pub struct RouterStats {
     /// Candidates skipped via cluster-level pruning across all served
     /// queries.
     pub cluster_members_pruned: usize,
+    /// `insert=` requests that appended to the delta shard.
+    pub inserts: usize,
+    /// `delete=` requests that removed a logical series.
+    pub deletes: usize,
+    /// Compactions performed (explicit `compact=` plus auto-threshold).
+    pub compactions: usize,
+    /// Gauge: delta-shard length when the loop last settled.
+    pub delta_len: usize,
+    /// Gauge: generation of the base index when the loop last settled.
+    pub generation: u64,
 }
 
 impl Router {
@@ -109,15 +154,22 @@ impl Router {
                         let _ = reply.send(engine.query_stream(&samples, opts));
                         continue;
                     }
-                    Ok(Msg::Save(path, reply)) => {
-                        serve_save(&mut engine, &mut stats, path, reply);
+                    Ok(
+                        m @ (Msg::Save(..)
+                        | Msg::Load(..)
+                        | Msg::Insert(..)
+                        | Msg::Delete(..)
+                        | Msg::Compact(..)
+                        | Msg::Gens(..)),
+                    ) => {
+                        serve_control(&mut engine, &mut stats, m);
+                        auto_compact(&mut engine, &mut stats);
                         continue;
                     }
-                    Ok(Msg::Load(path, reply)) => {
-                        serve_load(&mut engine, &mut stats, path, reply);
-                        continue;
+                    Ok(Msg::Shutdown) | Err(_) => {
+                        settle_gauges(&engine, &mut stats);
+                        return stats;
                     }
-                    Ok(Msg::Shutdown) | Err(_) => return stats,
                 };
                 // …then opportunistically drain whatever else is queued
                 // (dynamic batching: no artificial delay, batch = backlog).
@@ -131,10 +183,18 @@ impl Router {
                         Ok(Msg::Stream(samples, opts, reply)) => {
                             streams.push((samples, opts, reply));
                         }
-                        // Snapshot control drained mid-batch runs after
+                        // Control traffic drained mid-batch runs after
                         // the batch, like streams: queries already queued
-                        // are answered by the index they were sent to.
-                        Ok(m @ Msg::Save(..)) | Ok(m @ Msg::Load(..)) => controls.push(m),
+                        // are answered by the index (and live overlay)
+                        // they were sent to.
+                        Ok(
+                            m @ (Msg::Save(..)
+                            | Msg::Load(..)
+                            | Msg::Insert(..)
+                            | Msg::Delete(..)
+                            | Msg::Compact(..)
+                            | Msg::Gens(..)),
+                        ) => controls.push(m),
                         Ok(Msg::Shutdown) => {
                             shutdown = true;
                             break;
@@ -171,17 +231,14 @@ impl Router {
                     stats.streams += 1;
                     let _ = reply.send(engine.query_stream(&samples, opts));
                 }
+                let had_controls = !controls.is_empty();
                 for msg in controls {
-                    match msg {
-                        Msg::Save(path, reply) => {
-                            serve_save(&mut engine, &mut stats, path, reply)
-                        }
-                        Msg::Load(path, reply) => {
-                            serve_load(&mut engine, &mut stats, path, reply)
-                        }
-                        _ => unreachable!("only snapshot control is deferred"),
-                    }
+                    serve_control(&mut engine, &mut stats, msg);
                 }
+                if had_controls {
+                    auto_compact(&mut engine, &mut stats);
+                }
+                settle_gauges(&engine, &mut stats);
                 if shutdown {
                     return stats;
                 }
@@ -267,6 +324,46 @@ impl Router {
         reply_rx.recv().expect("router answers")
     }
 
+    /// Append a labelled series to the live delta shard (the `insert=`
+    /// protocol verb). The series becomes visible to every search path
+    /// — k-NN, batched, stream — from the next dispatched batch on,
+    /// with answers bit-identical to a cold rebuild over the enlarged
+    /// set. Blocks for the receipt carrying the assigned logical id.
+    pub fn insert(&self, label: u32, values: Vec<f64>) -> anyhow::Result<InsertReceipt> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx.send(Msg::Insert(label, values, reply_tx)).expect("router alive");
+        reply_rx.recv().expect("router answers")
+    }
+
+    /// Remove the series at logical `id` (the `delete=` protocol verb):
+    /// base series are tombstoned, delta series are dropped outright.
+    /// Blocks for the receipt.
+    pub fn delete(&self, id: usize) -> anyhow::Result<DeleteReceipt> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx.send(Msg::Delete(id, reply_tx)).expect("router alive");
+        reply_rx.recv().expect("router answers")
+    }
+
+    /// Merge the delta shard and tombstones into a fresh base index of
+    /// the next generation (the `compact=` protocol verb). The new base
+    /// is built aside and atomically swapped between batches; it is
+    /// bit-identical to a cold build over the same logical series.
+    /// Blocks for the receipt.
+    pub fn compact(&self) -> anyhow::Result<CompactReceipt> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx.send(Msg::Compact(reply_tx)).expect("router alive");
+        reply_rx.recv().expect("router answers")
+    }
+
+    /// Report the generation lineage of the served index (the `gens=`
+    /// protocol verb): current generation, parent, pending delta /
+    /// tombstone counts, and the generation snapshots saved so far.
+    pub fn generations(&self) -> GenerationInfo {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx.send(Msg::Gens(reply_tx)).expect("router alive");
+        reply_rx.recv().expect("router answers")
+    }
+
     /// Stop the dispatch loop and collect its statistics.
     pub fn shutdown(mut self) -> RouterStats {
         let _ = self.tx.send(Msg::Shutdown);
@@ -279,37 +376,80 @@ impl Router {
     }
 }
 
-/// Serve one `save=` control message on the dispatch thread.
-fn serve_save(
-    engine: &mut NnEngine,
-    stats: &mut RouterStats,
-    path: PathBuf,
-    reply: Sender<Result<SnapshotSaved, SnapshotError>>,
-) {
-    stats.saves += 1;
-    let r = engine.index().save(&path).map(|bytes| SnapshotSaved { path, bytes });
-    let _ = reply.send(r);
+/// Serve one control message (snapshot or live mutation) on the
+/// dispatch thread. A failed `load=` leaves the current index serving.
+fn serve_control(engine: &mut NnEngine, stats: &mut RouterStats, msg: Msg) {
+    match msg {
+        Msg::Save(path, reply) => {
+            stats.saves += 1;
+            let r = engine
+                .save_generation(&path)
+                .map(|(path, bytes)| SnapshotSaved { path, bytes });
+            let _ = reply.send(r);
+        }
+        Msg::Load(path, reply) => {
+            let r = DtwIndex::load(&path).map(|idx| {
+                let info = SnapshotLoaded {
+                    series: idx.len(),
+                    shards: idx.shard_count(),
+                    window: idx.window(),
+                };
+                engine.replace_index(idx);
+                stats.loads += 1;
+                info
+            });
+            let _ = reply.send(r);
+        }
+        Msg::Insert(label, values, reply) => {
+            let r = engine.insert(label, values).map(|id| {
+                stats.inserts += 1;
+                InsertReceipt {
+                    id,
+                    delta_len: engine.delta_len(),
+                    generation: engine.generation(),
+                }
+            });
+            let _ = reply.send(r);
+        }
+        Msg::Delete(id, reply) => {
+            let r = engine.delete(id).map(|()| {
+                stats.deletes += 1;
+                DeleteReceipt {
+                    remaining: engine.logical_len(),
+                    tombstones: engine.generations().tombstones,
+                }
+            });
+            let _ = reply.send(r);
+        }
+        Msg::Compact(reply) => {
+            let r = engine.compact().map(|generation| {
+                stats.compactions += 1;
+                CompactReceipt { generation, series: engine.index().len() }
+            });
+            let _ = reply.send(r);
+        }
+        Msg::Gens(reply) => {
+            let _ = reply.send(engine.generations());
+        }
+        Msg::Query(..) | Msg::Stream(..) | Msg::Shutdown => {
+            unreachable!("only control messages reach serve_control")
+        }
+    }
 }
 
-/// Serve one `load=` control message on the dispatch thread. A failed
-/// load leaves the current index serving.
-fn serve_load(
-    engine: &mut NnEngine,
-    stats: &mut RouterStats,
-    path: PathBuf,
-    reply: Sender<Result<SnapshotLoaded, SnapshotError>>,
-) {
-    let r = DtwIndex::load(&path).map(|idx| {
-        let info = SnapshotLoaded {
-            series: idx.len(),
-            shards: idx.shard_count(),
-            window: idx.window(),
-        };
-        engine.replace_index(idx);
-        stats.loads += 1;
-        info
-    });
-    let _ = reply.send(r);
+/// Run the auto-compaction check after control traffic mutated the
+/// live state. A threshold crossing compacts in place; a failure (not
+/// reachable for well-formed state) leaves the overlay serving.
+fn auto_compact(engine: &mut NnEngine, stats: &mut RouterStats) {
+    if let Ok(Some(_)) = engine.maybe_auto_compact() {
+        stats.compactions += 1;
+    }
+}
+
+/// Refresh the gauge fields from the engine's live state.
+fn settle_gauges(engine: &NnEngine, stats: &mut RouterStats) {
+    stats.delta_len = engine.delta_len();
+    stats.generation = engine.generation();
 }
 
 impl Drop for Router {
@@ -429,10 +569,11 @@ mod tests {
             .join(format!("dtwb_router_snap_{}.snap", std::process::id()));
         let saved = router.save_snapshot(&path).unwrap();
         assert!(saved.bytes > 0);
-        assert_eq!(saved.path, path);
+        // Saves are generation-versioned: generation 0 lands at `.g0`.
+        assert_eq!(saved.path, crate::index::snapshot::generation_path(&path, 0));
 
         // Swap onto the snapshot we just wrote: answers are bit-equal.
-        let loaded = router.load_snapshot(&path).unwrap();
+        let loaded = router.load_snapshot(&saved.path).unwrap();
         assert_eq!(loaded.series, index.len());
         assert_eq!(loaded.shards, 2);
         assert_eq!(loaded.window, index.window());
@@ -448,7 +589,78 @@ mod tests {
         let stats = router.shutdown();
         assert_eq!(stats.saves, 1);
         assert_eq!(stats.loads, 1, "the failed load must not count");
-        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&saved.path).ok();
+    }
+
+    #[test]
+    fn live_mutations_flow_through_the_router() {
+        let ds = &generate_archive(&ArchiveSpec::new(Scale::Tiny, 76))[0];
+        let index = crate::index::DtwIndex::builder_from_dataset(ds).build().unwrap();
+        let router = Router::spawn_index(index.clone());
+
+        // Insert a probe the base does not contain: it must win its own
+        // 1-NN query at distance zero.
+        let probe = ds.test[0].values.clone();
+        let receipt = router.insert(99, probe.clone()).unwrap();
+        assert_eq!(receipt.id, index.len());
+        assert_eq!(receipt.delta_len, 1);
+        assert_eq!(receipt.generation, 0);
+        let hit = router.query_with(probe.clone(), QueryOptions::k(1));
+        assert_eq!(hit.neighbors[0].index, receipt.id);
+        assert_eq!(hit.neighbors[0].label, 99);
+        assert_eq!(hit.neighbors[0].distance, 0.0);
+
+        // Delete a base series: logical count shrinks, tombstone pends.
+        let del = router.delete(0).unwrap();
+        assert_eq!(del.remaining, index.len());
+        assert_eq!(del.tombstones, 1);
+
+        // Compact: next generation, delta folded in, answers preserved.
+        let compacted = router.compact().unwrap();
+        assert_eq!(compacted.generation, 1);
+        assert_eq!(compacted.series, index.len());
+        let info = router.generations();
+        assert_eq!(info.generation, 1);
+        assert_eq!(info.parent, 0);
+        assert_eq!(info.delta_len, 0);
+        assert_eq!(info.tombstones, 0);
+        let again = router.query_with(probe, QueryOptions::k(1));
+        assert_eq!(again.neighbors[0].label, 99);
+        assert_eq!(again.neighbors[0].distance, 0.0);
+
+        let stats = router.shutdown();
+        assert_eq!(stats.inserts, 1);
+        assert_eq!(stats.deletes, 1);
+        assert_eq!(stats.compactions, 1);
+        assert_eq!(stats.delta_len, 0);
+        assert_eq!(stats.generation, 1);
+    }
+
+    #[test]
+    fn auto_compaction_counts_in_router_stats() {
+        let ds = &generate_archive(&ArchiveSpec::new(Scale::Tiny, 77))[0];
+        let index = crate::index::DtwIndex::builder_from_dataset(ds).build().unwrap();
+        let router = Router::spawn(
+            move || {
+                let mut e = NnEngine::from_index(index);
+                e.set_auto_compact(Some(2));
+                e
+            },
+            8,
+        );
+        let s0 = ds.train[0].values.clone();
+        let s1 = ds.train[1].values.clone();
+        assert_eq!(router.insert(7, s0).unwrap().generation, 0);
+        // Second insert crosses the threshold: the overlay compacts
+        // before the next control settles.
+        router.insert(8, s1).unwrap();
+        let info = router.generations();
+        assert_eq!(info.generation, 1);
+        assert_eq!(info.delta_len, 0);
+        let stats = router.shutdown();
+        assert_eq!(stats.inserts, 2);
+        assert_eq!(stats.compactions, 1);
+        assert_eq!(stats.generation, 1);
     }
 
     #[test]

@@ -21,12 +21,24 @@
 //!   matches=<start>:<neighbor>:<label>:<dist>,... windows=<n>
 //!   pruned=<p> dtw=<d> us=<u128>` (`matches=-` when none);
 //! * snapshot control: `save=<path>;` serializes the served index to a
-//!   versioned, checksummed snapshot (`saved path=<p> bytes=<n>`);
-//!   `load=<path>;` hot-swaps the served index from a snapshot
-//!   (`loaded series=<n> shards=<s> window=<w>`). Failures answer a
-//!   machine-parseable `err=<verb> <path>: <why>` line with a distinct
-//!   reason per failure mode (io, bad magic, unsupported version,
-//!   checksum mismatch, corruption) and leave the served index intact;
+//!   **generation-versioned** snapshot at `<path>.g<N>` (`saved
+//!   path=<p> bytes=<n>` carries the actual path); `load=<path>;`
+//!   hot-swaps the served index from a snapshot — loading an older
+//!   generation is a rollback (`loaded series=<n> shards=<s>
+//!   window=<w>`). Failures answer a machine-parseable `err=<verb>
+//!   <path>: <why>` line with a distinct reason per failure mode (io,
+//!   bad magic, unsupported version, checksum mismatch, corruption)
+//!   and leave the served index intact;
+//! * live mutation: `insert=<label>;v1,v2,...,vN` appends a series to
+//!   the delta shard (`inserted id=<n> delta=<d> generation=<g>`);
+//!   `delete=<id>;` removes the series at logical id `<id>` (`deleted
+//!   id=<n> remaining=<r> tombstones=<t>`); `compact=;` merges the
+//!   delta and tombstones into the next generation (`compacted
+//!   generation=<g> series=<n>`); `gens=;` reports the lineage (`gens
+//!   generation=<g> parent=<p> delta=<d> tombstones=<t>
+//!   saved=<g:path,...|->`). Every search path stays bit-identical to
+//!   a cold rebuild over the mutated series set; failures answer
+//!   `err=<verb> <why>` and leave the served index intact;
 //! * `PING` → `PONG`; malformed input → `ERR <why>`.
 //!
 //! One thread per connection feeds the shared router, whose dispatch loop
@@ -182,6 +194,67 @@ fn respond(line: &str, router: &Router, default_k: usize) -> String {
             }
             Err(e) => format!("err=load {path}: {e}"),
         };
+    }
+    // Live mutation: `insert=<label>;<samples>` / `delete=<id>;` /
+    // `compact=;` / `gens=;`. Failures answer `err=<verb> <why>` and
+    // leave the served index (and its pending delta) intact.
+    if let Some(rest) = line.strip_prefix("insert=") {
+        let (label, payload) = match rest.split_once(';') {
+            Some(x) => x,
+            None => return "err=insert expected insert=<label>;v1,v2,...".into(),
+        };
+        let label = match label.trim().parse::<u32>() {
+            Ok(l) => l,
+            Err(_) => return "err=insert label must be a u32".into(),
+        };
+        let values: Result<Vec<f64>, _> =
+            payload.split(',').map(|f| f.trim().parse::<f64>()).collect();
+        let values = match values {
+            Ok(v) if !v.is_empty() => v,
+            _ => return "err=insert expected comma-separated floats".into(),
+        };
+        return match router.insert(label, values) {
+            Ok(r) => format!(
+                "inserted id={} delta={} generation={}",
+                r.id, r.delta_len, r.generation
+            ),
+            Err(e) => format!("err=insert {e:#}"),
+        };
+    }
+    if let Some(rest) = line.strip_prefix("delete=") {
+        let id = match rest.trim().trim_end_matches(';').trim().parse::<usize>() {
+            Ok(id) => id,
+            Err(_) => return "err=delete expected delete=<id>;".into(),
+        };
+        return match router.delete(id) {
+            Ok(r) => format!(
+                "deleted id={id} remaining={} tombstones={}",
+                r.remaining, r.tombstones
+            ),
+            Err(e) => format!("err=delete {e:#}"),
+        };
+    }
+    if line.strip_prefix("compact=").is_some() {
+        return match router.compact() {
+            Ok(r) => format!("compacted generation={} series={}", r.generation, r.series),
+            Err(e) => format!("err=compact {e:#}"),
+        };
+    }
+    if line.strip_prefix("gens=").is_some() {
+        let info = router.generations();
+        let saved = if info.saved.is_empty() {
+            "-".to_string()
+        } else {
+            info.saved
+                .iter()
+                .map(|(g, p)| format!("{g}:{}", p.display()))
+                .collect::<Vec<_>>()
+                .join(",")
+        };
+        return format!(
+            "gens generation={} parent={} delta={} tombstones={} saved={saved}",
+            info.generation, info.parent, info.delta_len, info.tombstones
+        );
     }
     // Optional `k=<n>;` / `threads=<n>;` prefixes (any order) select
     // k-NN depth and the per-query screening thread count.
@@ -411,22 +484,32 @@ mod tests {
             .join(format!("dtwb_server_bogus_{}.snap", std::process::id()));
         std::fs::write(&bogus, b"definitely not a snapshot").unwrap();
 
-        let mut conn = TcpStream::connect(server.addr()).unwrap();
-        let q: Vec<String> = ds.test[0].values.iter().map(|v| v.to_string()).collect();
-        conn.write_all(format!("k=3;{}\n", q.join(",")).as_bytes()).unwrap();
-        conn.write_all(format!("save={};\n", snap.display()).as_bytes()).unwrap();
-        conn.write_all(format!("load={};\n", snap.display()).as_bytes()).unwrap();
-        conn.write_all(format!("k=3;{}\n", q.join(",")).as_bytes()).unwrap();
-        conn.write_all(b"save=\n").unwrap();
-        conn.write_all(b"load=/nonexistent/dir/idx.snap;\n").unwrap();
-        conn.write_all(format!("load={};\n", bogus.display()).as_bytes()).unwrap();
-
+        let conn = TcpStream::connect(server.addr()).unwrap();
+        let mut wconn = conn.try_clone().unwrap();
         let mut lines = BufReader::new(conn).lines();
+        let q: Vec<String> = ds.test[0].values.iter().map(|v| v.to_string()).collect();
+        wconn.write_all(format!("k=3;{}\n", q.join(",")).as_bytes()).unwrap();
+        wconn.write_all(format!("save={};\n", snap.display()).as_bytes()).unwrap();
         let before = lines.next().unwrap().unwrap();
         assert!(before.starts_with("k=3 neighbors="), "{before}");
         let saved = lines.next().unwrap().unwrap();
+        // The reply carries the generation-versioned path actually
+        // written (`<path>.g0` for a freshly built index).
         assert!(saved.starts_with("saved path="), "{saved}");
         assert!(saved.contains("bytes="), "{saved}");
+        let saved_path = saved
+            .strip_prefix("saved path=")
+            .and_then(|s| s.split(" bytes=").next())
+            .unwrap()
+            .to_string();
+        assert!(saved_path.ends_with(".g0"), "{saved_path}");
+
+        wconn.write_all(format!("load={saved_path};\n").as_bytes()).unwrap();
+        wconn.write_all(format!("k=3;{}\n", q.join(",")).as_bytes()).unwrap();
+        wconn.write_all(b"save=\n").unwrap();
+        wconn.write_all(b"load=/nonexistent/dir/idx.snap;\n").unwrap();
+        wconn.write_all(format!("load={};\n", bogus.display()).as_bytes()).unwrap();
+
         let loaded = lines.next().unwrap().unwrap();
         assert!(
             loaded.starts_with(&format!("loaded series={} shards=2", index.len())),
@@ -448,7 +531,68 @@ mod tests {
 
         drop(lines);
         server.shutdown();
-        std::fs::remove_file(&snap).ok();
+        std::fs::remove_file(&saved_path).ok();
         std::fs::remove_file(&bogus).ok();
+    }
+
+    #[test]
+    fn live_verbs_round_trip_and_fail_typed() {
+        let ds = &generate_archive(&ArchiveSpec::new(Scale::Tiny, 83))[0];
+        let index = crate::index::DtwIndex::builder_from_dataset(ds).build().unwrap();
+        let n = index.len();
+        let m = index.train().series[0].values.len();
+        let router = Arc::new(Router::spawn_index(index));
+        let server = Server::spawn("127.0.0.1:0", router).unwrap();
+
+        let conn = TcpStream::connect(server.addr()).unwrap();
+        let mut wconn = conn.try_clone().unwrap();
+        let mut lines = BufReader::new(conn).lines();
+        let mut ask = |req: String| -> String {
+            wconn.write_all(req.as_bytes()).unwrap();
+            wconn.write_all(b"\n").unwrap();
+            lines.next().unwrap().unwrap()
+        };
+
+        // Insert a ramp of index length; it must answer its own query.
+        let ramp: Vec<String> = (0..m).map(|i| format!("{}.5", i)).collect();
+        let ins = ask(format!("insert=42;{}", ramp.join(",")));
+        assert_eq!(ins, format!("inserted id={n} delta=1 generation=0"), "{ins}");
+        let hit = ask(format!("k=1;{}", ramp.join(",")));
+        assert!(hit.contains("label=42"), "{hit}");
+        assert!(hit.contains("dist=0.000000"), "{hit}");
+
+        // Delete base id 0; gens reflects both pending mutations.
+        let del = ask("delete=0;".into());
+        assert_eq!(del, format!("deleted id=0 remaining={n} tombstones=1"), "{del}");
+        let gens = ask("gens=;".into());
+        assert_eq!(
+            gens, "gens generation=0 parent=0 delta=1 tombstones=1 saved=-",
+            "{gens}"
+        );
+
+        // Compact into generation 1; the overlay is folded in.
+        let comp = ask("compact=;".into());
+        assert_eq!(comp, format!("compacted generation=1 series={n}"), "{comp}");
+        let gens = ask("gens=;".into());
+        assert_eq!(
+            gens, "gens generation=1 parent=0 delta=0 tombstones=0 saved=-",
+            "{gens}"
+        );
+        let hit = ask(format!("k=1;{}", ramp.join(",")));
+        assert!(hit.contains("label=42"), "{hit}");
+
+        // Typed failures leave the served index intact.
+        let bad = ask(format!("insert=42;{}", "1.0"));
+        assert!(bad.starts_with("err=insert "), "{bad}");
+        let bad = ask("insert=notanumber;1,2,3".into());
+        assert!(bad.starts_with("err=insert label"), "{bad}");
+        let bad = ask(format!("delete={};", 10_000));
+        assert!(bad.starts_with("err=delete "), "{bad}");
+        let still = ask(format!("k=1;{}", ramp.join(",")));
+        assert!(still.contains("label=42"), "{still}");
+
+        drop(lines);
+        drop(wconn);
+        server.shutdown();
     }
 }

@@ -300,6 +300,8 @@ impl DtwIndexBuilder {
                 seed: self.seed,
                 threads: self.threads,
                 clusters,
+                generation: 0,
+                parent: 0,
             },
         })
     }

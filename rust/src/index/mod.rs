@@ -74,6 +74,11 @@ pub(crate) struct IndexConfig {
     pub(crate) threads: usize,
     /// Per-shard cluster target (`0` = no cluster pruning).
     pub(crate) clusters: usize,
+    /// Live-mutation generation (incremented by each compaction; `0` is
+    /// the frozen, never-compacted baseline).
+    pub(crate) generation: u64,
+    /// Generation this index was compacted from (`0` for the baseline).
+    pub(crate) parent: u64,
 }
 
 /// An immutable DTW nearest-neighbor index: prepared training envelopes
@@ -164,6 +169,19 @@ impl DtwIndex {
     /// `min(clusters, shard size)`.
     pub fn clusters(&self) -> usize {
         self.config.clusters
+    }
+
+    /// Live-mutation generation number: `0` for a freshly built (or
+    /// pre-v3-snapshot) index, incremented by every
+    /// [`crate::live`] compaction.
+    pub fn generation(&self) -> u64 {
+        self.config.generation
+    }
+
+    /// The generation this index was compacted from (`0` when this *is*
+    /// the baseline generation).
+    pub fn parent(&self) -> u64 {
+        self.config.parent
     }
 
     /// True when any shard carries a cluster-pruning layer (merged

@@ -17,12 +17,12 @@
 //! index produces **bit-identical** search results to the index that
 //! was saved, by construction (pinned by `rust/tests/persist.rs`).
 //!
-//! ## Layout (version 2, all integers/floats little-endian)
+//! ## Layout (version 3, all integers/floats little-endian)
 //!
 //! ```text
 //! offset size  field
 //!      0    8  magic  "DTWBSNAP"
-//!      8    4  format version (u32) = 2
+//!      8    4  format version (u32) = 3
 //!     12    8  FNV-1a-64 checksum of the body (u64)
 //!     20    8  body length in bytes (u64)
 //!     28    …  body:
@@ -30,6 +30,7 @@
 //!              bound tag(u32) · bound k(u32) · strategy(u32) · backend(u32)
 //!              max_batch(u64) · seed(u64) · threads(u64)
 //!              clusters(u64)                                  [v2+]
+//!              generation(u64) · parent generation(u64)       [v3+]
 //!              shard count(u64) · n(u64) · ℓ(u64) · w(u64) · stride(u64)
 //!              labels: n × u32
 //!              values: n·ℓ × f64 (raw bits — exact round-trip)
@@ -46,7 +47,9 @@
 //!
 //! **Version 1** files (everything marked `[v2+]` absent) still load:
 //! they deserialize as clusterless indexes (`clusters = 0`, no cluster
-//! sections), bit-identical to how the v1 reader loaded them. The
+//! sections), bit-identical to how the v1 reader loaded them.
+//! **Version 2** files (the `[v3+]` generation pair absent) load as
+//! generation 0 with parent 0 — the pre-live-mutation baseline. The
 //! writer always emits the current version.
 //!
 //! Truncation, bit corruption and future versions are three *distinct*
@@ -71,7 +74,7 @@ use super::{DtwIndex, IndexConfig};
 pub const MAGIC: [u8; 8] = *b"DTWBSNAP";
 /// Current format version (the writer always emits this; the reader
 /// accepts every version from 1 up to it).
-pub const VERSION: u32 = 2;
+pub const VERSION: u32 = 3;
 
 /// Everything that can go wrong reading or writing a snapshot. Each
 /// failure mode is a distinct variant so callers (CLI exit paths, the
@@ -183,6 +186,12 @@ pub struct SnapshotInfo {
     /// Per-shard cluster target (`0` = no cluster pruning; always `0`
     /// for version-1 files).
     pub clusters: usize,
+    /// Live-mutation generation number (always `0` for pre-v3 files:
+    /// the frozen, never-compacted baseline).
+    pub generation: u64,
+    /// Generation this snapshot was compacted from (`0` when it *is*
+    /// the baseline, and always `0` for pre-v3 files).
+    pub parent: u64,
 }
 
 // ---------------------------------------------------------------------
@@ -402,6 +411,8 @@ pub fn save(index: &DtwIndex, path: &Path) -> Result<u64, SnapshotError> {
     put_u64(&mut body, cfg.seed);
     put_u64(&mut body, cfg.threads as u64);
     put_u64(&mut body, cfg.clusters as u64);
+    put_u64(&mut body, cfg.generation);
+    put_u64(&mut body, cfg.parent);
     put_u64(&mut body, shard_list.len() as u64);
     put_u64(&mut body, n as u64);
     put_u64(&mut body, l as u64);
@@ -541,6 +552,11 @@ fn parse(bytes: &[u8], want_payload: bool) -> Result<Parsed, SnapshotError> {
     let seed = r.u64("seed")?;
     let threads = r.size("threads")?;
     let clusters = if version >= 2 { r.size("clusters")? } else { 0 };
+    let (generation, parent) = if version >= 3 {
+        (r.u64("generation")?, r.u64("parent generation")?)
+    } else {
+        (0, 0)
+    };
     let shard_count = r.size("shard count")?;
     let n = r.size("series count")?;
     let l = r.size("series length")?;
@@ -692,6 +708,8 @@ fn parse(bytes: &[u8], want_payload: bool) -> Result<Parsed, SnapshotError> {
             threads,
             seed,
             clusters,
+            generation,
+            parent,
         },
         labels,
         values,
@@ -706,6 +724,17 @@ fn parse(bytes: &[u8], want_payload: bool) -> Result<Parsed, SnapshotError> {
 pub fn inspect(path: &Path) -> Result<SnapshotInfo, SnapshotError> {
     let bytes = std::fs::read(path)?;
     Ok(parse(&bytes, false)?.info)
+}
+
+/// The auto-versioned snapshot path for one generation of a live index:
+/// `<base>.g<N>`. The router's `save=` verb writes every generation to
+/// its own file under this naming, so `load=<base>.g<N>` can roll back
+/// to any retained generation while later generations keep their own
+/// files.
+pub fn generation_path(base: &Path, generation: u64) -> std::path::PathBuf {
+    let mut name = base.as_os_str().to_owned();
+    name.push(format!(".g{generation}"));
+    std::path::PathBuf::from(name)
 }
 
 /// Deserialize the snapshot at `path` into a ready-to-serve
@@ -748,6 +777,8 @@ pub fn load(path: &Path) -> Result<DtwIndex, SnapshotError> {
             seed: info.seed,
             threads: info.threads,
             clusters: info.clusters,
+            generation: info.generation,
+            parent: info.parent,
         },
     })
 }
@@ -798,6 +829,9 @@ mod tests {
         put_u64(&mut body, 16); // max_batch
         put_u64(&mut body, 0); // seed
         put_u64(&mut body, 1); // threads
+        put_u64(&mut body, 0); // clusters
+        put_u64(&mut body, 0); // generation
+        put_u64(&mut body, 0); // parent generation
         put_u64(&mut body, 1); // shard count
         put_u64(&mut body, 1u64 << 61); // n — absurd
         put_u64(&mut body, 1); // l
@@ -908,6 +942,89 @@ mod tests {
             assert_eq!(bits(ca.pivot_dists()), bits(cb.pivot_dists()));
             assert_eq!(bits(ca.env().payload()), bits(cb.env().payload()));
         }
+    }
+
+    #[test]
+    fn version3_round_trips_generation_and_parent() {
+        let series: Vec<Vec<f64>> = (0..5)
+            .map(|i| (0..16).map(|t| ((i * 7 + t * 3) % 9) as f64 - 4.0).collect())
+            .collect();
+        let mut index = DtwIndex::builder(series).window(2).build().unwrap();
+        assert_eq!((index.generation(), index.parent()), (0, 0));
+        index.config.generation = 4;
+        index.config.parent = 3;
+        let path = std::env::temp_dir().join(format!("dtwb_v3gen_{}.snap", std::process::id()));
+        index.save(&path).unwrap();
+        let info = inspect(&path).unwrap();
+        assert_eq!(info.version, VERSION);
+        assert_eq!((info.generation, info.parent), (4, 3));
+        let loaded = load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!((loaded.generation(), loaded.parent()), (4, 3));
+    }
+
+    #[test]
+    fn version2_snapshot_loads_as_generation_zero() {
+        // Hand-write a version-2 file (clusters field present, no
+        // generation pair): it must load as generation 0, parent 0.
+        let series: Vec<Vec<f64>> = (0..6)
+            .map(|i| (0..20).map(|t| ((i * 13 + t * 3) % 7) as f64 * 0.5).collect())
+            .collect();
+        let index = DtwIndex::builder(series).window(2).build().unwrap();
+        let train = &*index.train;
+        let (n, l) = (train.len(), 20usize);
+        let stride = EnvelopeStore::stride_for(l);
+
+        let mut body = Vec::new();
+        put_u32(&mut body, 0); // flags: no znorm
+        let (bt, bk) = encode_bound(index.config.bound);
+        put_u32(&mut body, bt);
+        put_u32(&mut body, bk);
+        put_u32(&mut body, encode_strategy(index.config.strategy));
+        put_u32(&mut body, encode_backend(index.config.backend));
+        put_u64(&mut body, index.config.max_batch as u64);
+        put_u64(&mut body, index.config.seed);
+        put_u64(&mut body, index.config.threads as u64);
+        put_u64(&mut body, 0); // clusters — v2 has this…
+        // …but no generation/parent pair (v3+ only).
+        put_u64(&mut body, index.shards.len() as u64);
+        put_u64(&mut body, n as u64);
+        put_u64(&mut body, l as u64);
+        put_u64(&mut body, train.w as u64);
+        put_u64(&mut body, stride as u64);
+        for &label in &train.labels {
+            put_u32(&mut body, label);
+        }
+        for s in &train.series {
+            put_f64s(&mut body, &s.values);
+        }
+        for shard in index.shards.iter() {
+            put_u64(&mut body, shard.len() as u64);
+            put_f64s(&mut body, shard.store().payload());
+            put_u64(&mut body, 0); // cluster count
+        }
+        let mut file = Vec::new();
+        file.extend_from_slice(&MAGIC);
+        file.extend_from_slice(&2u32.to_le_bytes());
+        file.extend_from_slice(&fnv1a64(&body).to_le_bytes());
+        file.extend_from_slice(&(body.len() as u64).to_le_bytes());
+        file.extend_from_slice(&body);
+
+        let path = std::env::temp_dir().join(format!("dtwb_v2gen_{}.snap", std::process::id()));
+        std::fs::write(&path, &file).unwrap();
+        let info = inspect(&path).unwrap();
+        assert_eq!(info.version, 2);
+        assert_eq!((info.generation, info.parent), (0, 0));
+        let loaded = load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!((loaded.generation(), loaded.parent()), (0, 0));
+        assert_eq!(loaded.len(), index.len());
+    }
+
+    #[test]
+    fn generation_path_appends_suffix() {
+        let p = generation_path(Path::new("/var/lib/dtwb/prod.snap"), 7);
+        assert_eq!(p, Path::new("/var/lib/dtwb/prod.snap.g7"));
     }
 
     #[test]

@@ -75,6 +75,11 @@
 //!   snapshot ([`index::snapshot`], `DtwIndex::save`/`load`) so serving
 //!   processes cold-start from one file instead of re-preparing
 //!   envelopes from raw series.
+//! * **Live mutation** ([`live`]): a delta-shard write path (`insert` /
+//!   `delete` with tombstones) over the frozen base, explicit or
+//!   auto-threshold **compaction** into the next generation, and
+//!   generational snapshots (v3) with rollback — every search path
+//!   stays bit-identical to a cold rebuild of the logical series set.
 //! * **Streaming subsequence search** ([`stream`]): slide an index-length
 //!   window over unbounded sample streams behind a cascaded-bound screen
 //!   (`LB_KIM_FL → LB_KEOGH → LB_WEBB` by default), in threshold and
@@ -134,6 +139,7 @@ pub mod dtw;
 pub mod exec;
 pub mod experiments;
 pub mod index;
+pub mod live;
 pub mod metrics;
 pub mod runtime;
 pub mod search;

@@ -1,0 +1,69 @@
+//! Compaction: fold base survivors + delta entries into a fresh,
+//! fully-aligned frozen index one generation up.
+//!
+//! Compaction is **rebuild-by-construction**: it feeds the logical
+//! series set (base survivors in physical order, then delta entries in
+//! append order — exactly the live id space) through the ordinary
+//! [`DtwIndexBuilder`](crate::index::DtwIndexBuilder) with the base
+//! index's own knobs. Same input bits + same knobs + deterministic
+//! builder (seeded clustering, fixed partition arithmetic) ⇒ the
+//! compacted index is **bit-identical** to a cold rebuild of the same
+//! logical series set — the invariant `rust/tests/live.rs` pins.
+//!
+//! One wrinkle: series values are stored *as indexed*, i.e. already
+//! z-normalized when the index normalizes. Re-normalizing would not be
+//! bit-stable, so the rebuild runs with normalization **off** and the
+//! policy flag is restored on the result's config afterwards (a cold
+//! rebuild normalizes the raw series once — producing exactly the bits
+//! we already store).
+
+use anyhow::Result;
+
+use crate::index::DtwIndex;
+
+use super::delta::{DeltaShard, Tombstones};
+
+/// Build the next generation: a frozen index over base survivors +
+/// delta entries, with re-derived shard stores and clusters, stamped
+/// `generation = old + 1`, `parent = old`. The input index is untouched
+/// — callers swap atomically once the build succeeds.
+pub fn compacted(
+    index: &DtwIndex,
+    delta: &DeltaShard,
+    tombstones: &Tombstones,
+) -> Result<DtwIndex> {
+    let train = index.train();
+    let survivors = train.len() - tombstones.len();
+    let mut values = Vec::with_capacity(survivors + delta.len());
+    let mut labels = Vec::with_capacity(survivors + delta.len());
+    for (i, s) in train.series.iter().enumerate() {
+        if tombstones.contains(i) {
+            continue;
+        }
+        values.push(s.values.clone());
+        labels.push(train.labels[i]);
+    }
+    for e in delta.entries() {
+        values.push(e.series.values.clone());
+        labels.push(e.label);
+    }
+    let cfg = &index.config;
+    let mut out = DtwIndex::builder(values)
+        .labels(labels)
+        .window(index.window())
+        .bound(cfg.bound)
+        .strategy(cfg.strategy)
+        .backend(cfg.backend)
+        .max_batch(cfg.max_batch)
+        // Values are already as-indexed; see the module docs.
+        .znormalize(false)
+        .seed(cfg.seed)
+        .threads(cfg.threads)
+        .shards(index.shard_count().max(1))
+        .clusters(cfg.clusters)
+        .build()?;
+    out.config.znorm = cfg.znorm;
+    out.config.generation = cfg.generation + 1;
+    out.config.parent = cfg.generation;
+    Ok(out)
+}

@@ -1,0 +1,212 @@
+//! The write-absorbing side of a live index: the unsorted append log
+//! ([`DeltaShard`]) and the base-index tombstone set ([`Tombstones`]),
+//! plus the logical↔physical id arithmetic both share.
+//!
+//! ## Logical ids
+//!
+//! A live index presents one flat, gap-free id space — exactly the ids
+//! a cold rebuild over the same logical series set would assign:
+//!
+//! * ids `0..survivors` are the **base survivors** (frozen-index series
+//!   minus tombstones), in base physical order;
+//! * ids `survivors..survivors + delta_len` are the **delta entries**,
+//!   in append order.
+//!
+//! Both maps are strictly monotone, which is what keeps `(distance,
+//! id)` tie-breaking identical between a live search (physical ids
+//! remapped at the end) and a cold rebuild (logical ids throughout):
+//! comparing remapped ids orders candidate pairs exactly as comparing
+//! the physical ids did.
+
+use crate::bounds::PreparedSeries;
+
+/// One appended series: its label plus the prepared envelopes (computed
+/// once at insert, exactly as the index builder prepares its series).
+#[derive(Debug, Clone)]
+pub struct DeltaEntry {
+    /// The series label.
+    pub label: u32,
+    /// The prepared series (values stored **as indexed** — normalized
+    /// already when the index z-normalizes).
+    pub series: PreparedSeries,
+}
+
+/// The delta shard: a small unsorted append log scanned exactly on
+/// every search path. Below the compaction threshold it carries no
+/// `EnvelopeStore`, no clusters and no sort order — a plain
+/// per-candidate LB-then-DTW sweep is cheaper than maintaining any of
+/// that for a handful of entries.
+#[derive(Debug, Clone, Default)]
+pub struct DeltaShard {
+    entries: Vec<DeltaEntry>,
+}
+
+impl DeltaShard {
+    /// An empty delta shard.
+    pub fn new() -> DeltaShard {
+        DeltaShard::default()
+    }
+
+    /// Number of live entries.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when nothing has been appended (or everything appended was
+    /// deleted again).
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Append one prepared series; returns its delta offset.
+    pub fn push(&mut self, label: u32, series: PreparedSeries) -> usize {
+        self.entries.push(DeltaEntry { label, series });
+        self.entries.len() - 1
+    }
+
+    /// Remove the entry at delta offset `i`, shifting later entries
+    /// down (logical ids above it decrease by one — the same compaction
+    /// of the id space a cold rebuild without the series would show).
+    pub fn remove(&mut self, i: usize) -> DeltaEntry {
+        self.entries.remove(i)
+    }
+
+    /// The entries, in append order.
+    pub fn entries(&self) -> &[DeltaEntry] {
+        &self.entries
+    }
+
+    /// Drop every entry (post-compaction reset).
+    pub fn clear(&mut self) {
+        self.entries.clear();
+    }
+}
+
+/// The base-index tombstone set: physical indices of frozen-shard
+/// series that are logically deleted. Kept as a sorted vector — the
+/// live sets are small (compaction folds them away), and sortedness
+/// gives `O(log n)` rank/select for the logical id maps.
+#[derive(Debug, Clone, Default)]
+pub struct Tombstones {
+    /// Sorted ascending, no duplicates.
+    dead: Vec<usize>,
+}
+
+impl Tombstones {
+    /// An empty tombstone set.
+    pub fn new() -> Tombstones {
+        Tombstones::default()
+    }
+
+    /// Number of tombstoned base series.
+    pub fn len(&self) -> usize {
+        self.dead.len()
+    }
+
+    /// True when no base series is tombstoned.
+    pub fn is_empty(&self) -> bool {
+        self.dead.is_empty()
+    }
+
+    /// Tombstone base physical index `phys`; returns `false` when it
+    /// already was.
+    pub fn insert(&mut self, phys: usize) -> bool {
+        match self.dead.binary_search(&phys) {
+            Ok(_) => false,
+            Err(at) => {
+                self.dead.insert(at, phys);
+                true
+            }
+        }
+    }
+
+    /// True when base physical index `phys` is tombstoned.
+    pub fn contains(&self, phys: usize) -> bool {
+        self.dead.binary_search(&phys).is_ok()
+    }
+
+    /// Number of tombstones strictly below `phys` — the rank shift that
+    /// turns a surviving physical index into its logical id.
+    pub fn count_before(&self, phys: usize) -> usize {
+        self.dead.partition_point(|&d| d < phys)
+    }
+
+    /// Logical id of a **surviving** base physical index.
+    pub fn to_logical(&self, phys: usize) -> usize {
+        debug_assert!(!self.contains(phys), "tombstoned series have no logical id");
+        phys - self.count_before(phys)
+    }
+
+    /// Base physical index of logical id `logical` (which must be below
+    /// the survivor count): the `logical`-th non-tombstoned index.
+    pub fn to_physical(&self, logical: usize) -> usize {
+        let mut phys = logical;
+        for &d in &self.dead {
+            if d <= phys {
+                phys += 1;
+            } else {
+                break;
+            }
+        }
+        phys
+    }
+
+    /// Dense skip mask over `0..n` (`true` = tombstoned) — the shape
+    /// the stream searcher's per-window sweep wants.
+    pub fn dead_mask(&self, n: usize) -> Vec<bool> {
+        let mut mask = vec![false; n];
+        for &d in &self.dead {
+            if d < n {
+                mask[d] = true;
+            }
+        }
+        mask
+    }
+
+    /// The tombstoned physical indices, sorted ascending.
+    pub fn as_slice(&self) -> &[usize] {
+        &self.dead
+    }
+
+    /// Drop every tombstone (post-compaction reset).
+    pub fn clear(&mut self) {
+        self.dead.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tombstone_rank_select_round_trip() {
+        let mut t = Tombstones::new();
+        assert!(t.insert(3));
+        assert!(t.insert(1));
+        assert!(!t.insert(3), "duplicate insert is a no-op");
+        assert_eq!(t.as_slice(), &[1, 3]);
+        // Base 0..5, dead {1,3}: survivors are physical 0, 2, 4.
+        assert_eq!(t.to_physical(0), 0);
+        assert_eq!(t.to_physical(1), 2);
+        assert_eq!(t.to_physical(2), 4);
+        for logical in 0..3 {
+            let phys = t.to_physical(logical);
+            assert!(!t.contains(phys));
+            assert_eq!(t.to_logical(phys), logical);
+        }
+        assert_eq!(t.dead_mask(5), vec![false, true, false, true, false]);
+    }
+
+    #[test]
+    fn delta_ids_shift_on_remove() {
+        let mut d = DeltaShard::new();
+        let s = |v: f64| PreparedSeries::prepare(vec![v, v, v, v], 1);
+        assert_eq!(d.push(10, s(0.0)), 0);
+        assert_eq!(d.push(11, s(1.0)), 1);
+        assert_eq!(d.push(12, s(2.0)), 2);
+        let gone = d.remove(1);
+        assert_eq!(gone.label, 11);
+        assert_eq!(d.len(), 2);
+        assert_eq!(d.entries()[1].label, 12, "later entries shift down");
+    }
+}

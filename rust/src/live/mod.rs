@@ -1,0 +1,329 @@
+//! Live mutation: turn the frozen [`DtwIndex`] into a **mutable,
+//! multi-generation** structure — inserts and deletes served exactly,
+//! background compaction, generational snapshots — while every search
+//! path stays exact and bit-deterministic.
+//!
+//! ## Shape
+//!
+//! A live index is three parts, owned together by [`LiveState`] next to
+//! the frozen base:
+//!
+//! * **Base** — the ordinary frozen [`DtwIndex`] (shard stores,
+//!   clusters, batched prefilter): never mutated in place.
+//! * **Delta shard** ([`DeltaShard`]) — a small unsorted append log
+//!   absorbing inserts. It is scanned *exactly* on every search path
+//!   with the plain per-candidate bound-then-DTW cascade; below the
+//!   compaction threshold that beats maintaining flat stores or
+//!   clusters for a handful of entries.
+//! * **Tombstones** ([`Tombstones`]) — deleted base series by physical
+//!   index. Kernels never see them: the live query over-asks the base
+//!   (`k + |T|`), drops tombstoned hits, and remaps survivors to the
+//!   gap-free logical id space (see [`self::delta`] and
+//!   `live/search.rs` for the exactness argument).
+//!
+//! **Compaction** ([`compacted`]) folds everything into a fresh frozen
+//! index one generation up, bit-identical to a cold rebuild of the same
+//! logical series set; callers (the engine) build it aside and swap
+//! atomically, so concurrent readers only ever observe a fully-built
+//! generation. **Generations** ride snapshot v3: each compaction bumps
+//! `generation` and records its `parent`, `save=` auto-versions file
+//! names ([`crate::index::snapshot::generation_path`]), and `load=` of
+//! an older file is rollback.
+//!
+//! ## The exactness contract
+//!
+//! After *any* interleaving of `insert` / `delete` / `compact`, every
+//! search path — scalar k-NN, the batched prefilter, the streaming
+//! subsequence sweep — returns results **bit-identical** to a cold
+//! rebuild over the same logical series set (`rust/tests/live.rs` pins
+//! this across shard, cluster and thread grids).
+
+pub mod compact;
+pub mod delta;
+mod search;
+
+pub use compact::compacted;
+pub use delta::{DeltaEntry, DeltaShard, Tombstones};
+
+use anyhow::{bail, Result};
+
+use crate::bounds::{PreparedSeries, Scratch};
+use crate::data::znorm::znormalized;
+use crate::delta::Delta;
+use crate::index::{DtwIndex, QueryOptions, QueryOutcome, Searcher};
+
+/// The mutable half of a live index: the delta shard and tombstone set,
+/// plus the owned scratch the delta scan runs on. Lives next to the
+/// frozen base (typically inside `NnEngine`); the base itself is only
+/// ever *replaced* (by compaction or snapshot load), never mutated.
+#[derive(Debug, Default)]
+pub struct LiveState {
+    delta: DeltaShard,
+    tombstones: Tombstones,
+    /// Scratch for the delta scan's bound evaluations — the live path
+    /// cannot borrow the searcher's own scratch (private, and mutably
+    /// held by the base query), so it owns one sized on demand.
+    scratch: Scratch,
+    /// Series length `scratch` was sized for (0 = unsized).
+    scratch_len: usize,
+}
+
+impl LiveState {
+    /// A clean live state (no pending mutations).
+    pub fn new() -> LiveState {
+        LiveState::default()
+    }
+
+    /// True when any mutation is pending — the signal to route searches
+    /// through the live overlay instead of the plain frozen path.
+    pub fn is_dirty(&self) -> bool {
+        !self.delta.is_empty() || !self.tombstones.is_empty()
+    }
+
+    /// Pending inserts (delta-shard length).
+    pub fn delta_len(&self) -> usize {
+        self.delta.len()
+    }
+
+    /// Pending base deletes (tombstone count).
+    pub fn tombstone_count(&self) -> usize {
+        self.tombstones.len()
+    }
+
+    /// The delta shard (stream-overlay and compaction input).
+    pub fn delta(&self) -> &DeltaShard {
+        &self.delta
+    }
+
+    /// The tombstone set (stream-overlay and compaction input).
+    pub fn tombstones(&self) -> &Tombstones {
+        &self.tombstones
+    }
+
+    /// Surviving base series under `base`.
+    pub fn survivors(&self, base: &DtwIndex) -> usize {
+        base.len() - self.tombstones.len()
+    }
+
+    /// Logical series count: base survivors + delta entries.
+    pub fn logical_len(&self, base: &DtwIndex) -> usize {
+        self.survivors(base) + self.delta.len()
+    }
+
+    /// The series length this live index accepts: the base's when it
+    /// holds anything, else the first delta entry's, else `None` (the
+    /// next insert fixes it).
+    pub fn series_len(&self, base: &DtwIndex) -> Option<usize> {
+        base.train()
+            .series
+            .first()
+            .map(|s| s.len())
+            .or_else(|| self.delta.entries().first().map(|e| e.series.len()))
+    }
+
+    /// Append one series; returns its logical id. The series is
+    /// z-normalized here iff the base's policy says so — exactly the
+    /// one normalization a cold rebuild would apply — and its envelopes
+    /// are prepared once, under the base's window.
+    pub fn insert(&mut self, base: &DtwIndex, label: u32, values: Vec<f64>) -> Result<usize> {
+        if values.is_empty() {
+            bail!("cannot insert an empty series");
+        }
+        if let Some(l) = self.series_len(base) {
+            if values.len() != l {
+                bail!(
+                    "inserted series has length {}, expected {l} (bounds assume one shared length)",
+                    values.len()
+                );
+            }
+        }
+        let values = if base.znormalizes() { znormalized(&values) } else { values };
+        let prepared = PreparedSeries::prepare(values, base.window());
+        let offset = self.delta.push(label, prepared);
+        Ok(self.survivors(base) + offset)
+    }
+
+    /// Delete logical id `id`: tombstone a base survivor, or drop a
+    /// delta entry (later delta ids shift down by one, exactly as a
+    /// cold rebuild without the series would number them).
+    pub fn delete(&mut self, base: &DtwIndex, id: usize) -> Result<()> {
+        let survivors = self.survivors(base);
+        if id < survivors {
+            let phys = self.tombstones.to_physical(id);
+            self.tombstones.insert(phys);
+            return Ok(());
+        }
+        let j = id - survivors;
+        if j >= self.delta.len() {
+            bail!("delete: no series with logical id {id} ({} live)", self.logical_len(base));
+        }
+        self.delta.remove(j);
+        Ok(())
+    }
+
+    /// Reset to clean (after compaction folded the state into a new
+    /// base, or a snapshot load replaced the base wholesale).
+    pub fn clear(&mut self) {
+        self.delta.clear();
+        self.tombstones.clear();
+    }
+
+    fn ensure_scratch(&mut self, l: usize) {
+        if self.scratch_len < l {
+            self.scratch = Scratch::new(l);
+            self.scratch_len = l;
+        }
+    }
+
+    /// One exact k-NN query over the live index. Clean state routes
+    /// straight to the frozen path (same bits, no overhead).
+    pub fn query<D: Delta>(
+        &mut self,
+        searcher: &mut Searcher,
+        values: &[f64],
+        opts: &QueryOptions,
+    ) -> QueryOutcome {
+        if !self.is_dirty() {
+            return searcher.query_values::<D>(values, opts);
+        }
+        let l = self.series_len(searcher.index()).unwrap_or(values.len());
+        self.ensure_scratch(l);
+        search::live_query::<D>(
+            searcher,
+            &self.delta,
+            &self.tombstones,
+            &mut self.scratch,
+            values,
+            opts,
+        )
+    }
+
+    /// A batch of exact k-NN queries over the live index (rides the
+    /// base's batched prefilter when profitable).
+    pub fn query_batch<D: Delta>(
+        &mut self,
+        searcher: &mut Searcher,
+        items: &[(Vec<f64>, QueryOptions)],
+    ) -> Vec<QueryOutcome> {
+        if !self.is_dirty() {
+            return searcher.query_batch_mixed::<D>(items);
+        }
+        let l = self
+            .series_len(searcher.index())
+            .or_else(|| items.first().map(|(v, _)| v.len()))
+            .unwrap_or(0);
+        self.ensure_scratch(l);
+        search::live_query_batch::<D>(
+            searcher,
+            &self.delta,
+            &self.tombstones,
+            &mut self.scratch,
+            items,
+        )
+    }
+
+    /// Compact: fold this state over `base` into the next generation
+    /// (see [`compacted`]). On success the returned index replaces the
+    /// base *and this state is reset* — the caller must install the new
+    /// index before serving further queries.
+    pub fn compact(&mut self, base: &DtwIndex) -> Result<DtwIndex> {
+        let next = compacted(base, &self.delta, &self.tombstones)?;
+        self.clear();
+        Ok(next)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::delta::Squared;
+
+    fn base_index() -> DtwIndex {
+        let series = vec![
+            vec![0.0, 0.1, 0.4, 0.2, 0.0, -0.2],
+            vec![1.0, 0.9, 0.8, 0.9, 1.1, 1.0],
+            vec![0.0, 0.5, 1.0, 0.5, 0.0, -0.5],
+            vec![-1.0, -0.9, -0.7, -0.9, -1.0, -1.1],
+        ];
+        DtwIndex::builder(series).labels(vec![0, 1, 0, 2]).window(1).build().unwrap()
+    }
+
+    #[test]
+    fn insert_validates_length_and_assigns_logical_ids() {
+        let base = base_index();
+        let mut live = LiveState::new();
+        assert!(live.insert(&base, 9, vec![1.0, 2.0]).is_err(), "length mismatch");
+        let id = live.insert(&base, 9, vec![0.0, 0.0, 0.1, 0.2, 0.1, 0.0]).unwrap();
+        assert_eq!(id, 4, "first delta entry follows the base survivors");
+        assert_eq!(live.logical_len(&base), 5);
+        live.delete(&base, 1).unwrap();
+        let id2 = live.insert(&base, 10, vec![0.5; 6]).unwrap();
+        assert_eq!(id2, 4, "a tombstone shifts the delta id space down");
+        assert_eq!(live.logical_len(&base), 5);
+        assert!(live.delete(&base, 5).is_err(), "out of range after remap");
+    }
+
+    #[test]
+    fn clean_state_is_a_passthrough() {
+        let base = base_index();
+        let mut live = LiveState::new();
+        let mut s = base.searcher();
+        let q = vec![0.0, 0.2, 0.5, 0.2, 0.0, -0.3];
+        let a = live.query::<Squared>(&mut s, &q, &QueryOptions::k(2));
+        let b = base.knn::<Squared>(&q, 2);
+        assert_eq!(a.distances(), b.distances());
+        assert_eq!(a.stats.delta_scanned, 0);
+    }
+
+    #[test]
+    fn live_query_matches_cold_rebuild_after_mutations() {
+        let base = base_index();
+        let mut live = LiveState::new();
+        live.delete(&base, 1).unwrap();
+        live.insert(&base, 7, vec![0.9, 1.0, 1.1, 1.0, 0.9, 1.0]).unwrap();
+        live.insert(&base, 8, vec![-0.2, 0.0, 0.2, 0.0, -0.2, 0.0]).unwrap();
+
+        // Cold rebuild over the logical series set.
+        let cold = DtwIndex::builder(vec![
+            vec![0.0, 0.1, 0.4, 0.2, 0.0, -0.2],
+            vec![0.0, 0.5, 1.0, 0.5, 0.0, -0.5],
+            vec![-1.0, -0.9, -0.7, -0.9, -1.0, -1.1],
+            vec![0.9, 1.0, 1.1, 1.0, 0.9, 1.0],
+            vec![-0.2, 0.0, 0.2, 0.0, -0.2, 0.0],
+        ])
+        .labels(vec![0, 0, 2, 7, 8])
+        .window(1)
+        .build()
+        .unwrap();
+
+        let mut s = base.searcher();
+        for q in [
+            vec![0.0, 0.2, 0.5, 0.2, 0.0, -0.3],
+            vec![1.0, 1.0, 1.0, 1.0, 1.0, 1.0],
+            vec![-0.1, 0.0, 0.1, 0.0, -0.1, 0.0],
+        ] {
+            for k in [1usize, 3, 5] {
+                let a = live.query::<Squared>(&mut s, &q, &QueryOptions::k(k));
+                let b = cold.knn::<Squared>(&q, k);
+                let pair = |o: &QueryOutcome| -> Vec<(usize, f64, u32)> {
+                    o.neighbors.iter().map(|n| (n.index, n.distance, n.label)).collect()
+                };
+                assert_eq!(pair(&a), pair(&b), "k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn compaction_resets_state_and_bumps_generation() {
+        let base = base_index();
+        let mut live = LiveState::new();
+        live.delete(&base, 0).unwrap();
+        live.insert(&base, 5, vec![0.1; 6]).unwrap();
+        let next = live.compact(&base).unwrap();
+        assert!(!live.is_dirty());
+        assert_eq!(next.len(), 4);
+        assert_eq!(next.generation(), 1);
+        assert_eq!(next.parent(), 0);
+        assert_eq!(next.train().labels, vec![1, 0, 2, 5]);
+    }
+}

@@ -1,0 +1,248 @@
+//! Exact k-NN over a live index: frozen-base search + tombstone
+//! filtering + delta-shard append-log scan, merged into one logical
+//! result set that is **bit-identical** to querying a cold rebuild of
+//! the same logical series set.
+//!
+//! ## Why the merge is exact
+//!
+//! The base index still physically contains tombstoned series, and its
+//! kernels know nothing about them. Instead of teaching every kernel a
+//! skip mask, the live path over-asks: with `|T|` tombstones it runs the
+//! base search at `k' = k + |T|`. Among the true top-`k'` physical
+//! neighbors at most `|T|` are tombstoned, so at least `k` survivors
+//! remain — and they are exactly the top-`k` *logical* base neighbors.
+//! An abandon threshold τ composes: the base returns every candidate
+//! strictly under τ within its top-`k'`, which again covers the best
+//! `k` surviving ones.
+//!
+//! Survivors are remapped physical → logical by subtracting the
+//! tombstone rank ([`Tombstones::to_logical`]); delta entries get ids
+//! `survivors + offset`. Both maps are strictly monotone, so
+//! `(distance, id)` tie order is preserved relative to the cold
+//! rebuild's id space.
+//!
+//! The delta scan mirrors the kernels exactly: strict `lb > cutoff`
+//! pruning (a candidate *at* the cutoff can still win a distance tie by
+//! index — see [`KnnSet`]), and the shared [`exact_distance`] kernel,
+//! whose admitted distances are bit-exact regardless of the cutoff.
+//! Distance ties between a delta entry and any incumbent resolve by id,
+//! and every delta entry's logical id exceeds every id already offered
+//! before it — base survivors by construction, earlier delta entries by
+//! append order — so tie resolution matches the cold rebuild's
+//! ascending-index visit.
+
+use std::time::Instant;
+
+use crate::bounds::Scratch;
+use crate::data::znorm::znormalized;
+use crate::delta::Delta;
+use crate::index::{Neighbor, QueryOptions, QueryOutcome, Searcher};
+use crate::search::knn::{exact_distance, KnnParams, KnnSet};
+use crate::search::nn::{NnResult, SearchStats};
+
+use super::delta::{DeltaShard, Tombstones};
+
+/// Exclusion split across the two candidate pools: a logical id below
+/// the survivor count excludes a base physical index; at or above it,
+/// a delta offset.
+fn split_exclude(
+    exclude: Option<usize>,
+    survivors: usize,
+    tombstones: &Tombstones,
+) -> (Option<usize>, Option<usize>) {
+    match exclude {
+        Some(e) if e < survivors => (Some(tombstones.to_physical(e)), None),
+        Some(e) => (None, Some(e - survivors)),
+        None => (None, None),
+    }
+}
+
+/// Scan the delta shard against an already-seeded merged set, charging
+/// the work to `stats` (both the global counters and the delta-specific
+/// ones, so `delta_* ` stay subsets of their global counterparts).
+#[allow(clippy::too_many_arguments)]
+fn scan_delta<D: Delta>(
+    searcher: &Searcher,
+    delta: &DeltaShard,
+    exclude: Option<usize>,
+    survivors: usize,
+    normed_query: &[f64],
+    set: &mut KnnSet,
+    stats: &mut SearchStats,
+    scratch: &mut Scratch,
+) {
+    if delta.is_empty() {
+        return;
+    }
+    let index = searcher.index();
+    let w = index.window().max(1);
+    let bound = index.bound();
+    let pq = bound.prepare_query(normed_query.to_vec(), w);
+    for (j, e) in delta.entries().iter().enumerate() {
+        if Some(j) == exclude {
+            continue;
+        }
+        stats.delta_scanned += 1;
+        let cutoff = set.cutoff();
+        if cutoff.is_infinite() {
+            // Nothing can prune yet: straight to the exact distance,
+            // like the kernels' first-candidate rule.
+            stats.dtw_calls += 1;
+            stats.delta_dtw += 1;
+            let d = exact_distance::<D>(&pq.values, &e.series, w, f64::INFINITY, &mut scratch.tail);
+            set.offer(NnResult { nn_index: survivors + j, distance: d, label: e.label });
+            continue;
+        }
+        stats.lb_calls += 1;
+        let lb = bound.compute::<D>(&pq, &e.series, w, cutoff, scratch);
+        // Strictly above only — at-cutoff candidates still race the tie.
+        if lb > cutoff {
+            stats.pruned += 1;
+            stats.delta_pruned += 1;
+            continue;
+        }
+        stats.dtw_calls += 1;
+        stats.delta_dtw += 1;
+        let d = exact_distance::<D>(&pq.values, &e.series, w, cutoff, &mut scratch.tail);
+        if d.is_infinite() {
+            stats.dtw_abandoned += 1;
+        } else {
+            set.offer(NnResult { nn_index: survivors + j, distance: d, label: e.label });
+        }
+    }
+}
+
+/// Fold a base (physical-id) outcome and the delta scan into one
+/// logical-id outcome under the caller's *original* options.
+#[allow(clippy::too_many_arguments)]
+fn merge_outcome<D: Delta>(
+    searcher: &Searcher,
+    delta: &DeltaShard,
+    tombstones: &Tombstones,
+    delta_exclude: Option<usize>,
+    survivors: usize,
+    normed_query: &[f64],
+    opts: &QueryOptions,
+    base: QueryOutcome,
+    scratch: &mut Scratch,
+    started: Instant,
+) -> QueryOutcome {
+    let mut stats = base.stats;
+    let params = KnnParams {
+        k: opts.k.max(1),
+        threshold: opts.abandon_at.unwrap_or(f64::INFINITY),
+        exclude: None, // already applied on both pools
+    };
+    let mut set = KnnSet::new(&params);
+    for n in &base.neighbors {
+        if tombstones.contains(n.index) {
+            continue;
+        }
+        set.offer(NnResult {
+            nn_index: tombstones.to_logical(n.index),
+            distance: n.distance,
+            label: n.label,
+        });
+    }
+    scan_delta::<D>(
+        searcher,
+        delta,
+        delta_exclude,
+        survivors,
+        normed_query,
+        &mut set,
+        &mut stats,
+        scratch,
+    );
+    QueryOutcome {
+        neighbors: set.into_sorted().into_iter().map(Neighbor::from).collect(),
+        stats,
+        strategy: base.strategy,
+        batched: base.batched,
+        latency: started.elapsed(),
+    }
+}
+
+/// One exact k-NN query over base + tombstones + delta. The caller
+/// guarantees the live state is dirty (otherwise route straight to
+/// [`Searcher::query_values`]).
+pub(crate) fn live_query<D: Delta>(
+    searcher: &mut Searcher,
+    delta: &DeltaShard,
+    tombstones: &Tombstones,
+    scratch: &mut Scratch,
+    values: &[f64],
+    opts: &QueryOptions,
+) -> QueryOutcome {
+    let started = Instant::now();
+    let survivors = searcher.index().len() - tombstones.len();
+    // Normalize exactly once, then pin normalization off below — the
+    // same single-normalization a cold rebuild's query path performs.
+    let znorm = opts.znorm.unwrap_or(searcher.index().znormalizes());
+    let owned: Vec<f64> = if znorm { znormalized(values) } else { values.to_vec() };
+    let (base_exclude, delta_exclude) = split_exclude(opts.exclude, survivors, tombstones);
+    let mut base_opts = opts.clone();
+    base_opts.k = opts.k.max(1) + tombstones.len();
+    base_opts.znorm = Some(false);
+    base_opts.exclude = base_exclude;
+    let base = searcher.query_values::<D>(&owned, &base_opts);
+    merge_outcome::<D>(
+        searcher,
+        delta,
+        tombstones,
+        delta_exclude,
+        survivors,
+        &owned,
+        opts,
+        base,
+        scratch,
+        started,
+    )
+}
+
+/// Batched variant: rides the base batched prefilter (each query's `k`
+/// bumped by `|T|`), then merges per query. Same exactness argument as
+/// [`live_query`], applied per item.
+pub(crate) fn live_query_batch<D: Delta>(
+    searcher: &mut Searcher,
+    delta: &DeltaShard,
+    tombstones: &Tombstones,
+    scratch: &mut Scratch,
+    items: &[(Vec<f64>, QueryOptions)],
+) -> Vec<QueryOutcome> {
+    let started = Instant::now();
+    let survivors = searcher.index().len() - tombstones.len();
+    let cfg_znorm = searcher.index().znormalizes();
+    let mut base_items = Vec::with_capacity(items.len());
+    let mut delta_excludes = Vec::with_capacity(items.len());
+    for (values, opts) in items {
+        let znorm = opts.znorm.unwrap_or(cfg_znorm);
+        let owned = if znorm { znormalized(values) } else { values.clone() };
+        let (base_exclude, delta_exclude) = split_exclude(opts.exclude, survivors, tombstones);
+        let mut o = opts.clone();
+        o.k = opts.k.max(1) + tombstones.len();
+        o.znorm = Some(false);
+        o.exclude = base_exclude;
+        delta_excludes.push(delta_exclude);
+        base_items.push((owned, o));
+    }
+    let base_outs = searcher.query_batch_mixed::<D>(&base_items);
+    base_outs
+        .into_iter()
+        .enumerate()
+        .map(|(qi, base)| {
+            merge_outcome::<D>(
+                searcher,
+                delta,
+                tombstones,
+                delta_excludes[qi],
+                survivors,
+                &base_items[qi].0,
+                &items[qi].1,
+                base,
+                scratch,
+                started,
+            )
+        })
+        .collect()
+}

@@ -16,13 +16,16 @@
 //!   (optionally sharded, optionally cluster-pruned) index and saves it
 //!   as a versioned, checksummed snapshot (`--out`, `--shards`,
 //!   `--clusters <n|auto>`); `index inspect` prints a snapshot's header
-//!   (version, checksum, shard/series/cluster counts, window, bound
-//!   config) without loading the payload into an index.
+//!   (version, checksum, shard/series/cluster counts, generation
+//!   lineage, window, bound config) without loading the payload into an
+//!   index; `index compact <snap>` rebuilds a snapshot into the next
+//!   generation (`<base>.g<N+1>`).
 //! * `serve`       — start the NN search server (router + batched
 //!   prefilter; `--backend native|pjrt|none`, `--k` for a default k-NN
 //!   depth, `--threads` for parallel candidate screening,
 //!   `--snapshot <path>` to cold-start from a saved index with no
-//!   access to the raw dataset).
+//!   access to the raw dataset, `--auto-compact <n>` to fold the live
+//!   delta shard into the next generation once `n` mutations pend).
 //! * `info`        — build/backend/artifact report.
 //!
 //! Run `dtw-bounds <cmd> --help-args` to see each command's options.
@@ -144,8 +147,12 @@ fn run(args: &Args) -> Result<()> {
 ///   `--znorm`, `--max-batch`) and saves it as a snapshot.
 /// * `index inspect <path>` verifies and prints the snapshot header as
 ///   `key=value` lines (machine-parseable; CI greps them).
+/// * `index compact <path> [--out <base>]` loads a snapshot and
+///   rebuilds it into the next generation, saved to `<base>.g<N+1>`
+///   (the base defaults to the input path with any `.g<N>` suffix
+///   stripped) — the offline face of the server's `compact=` verb.
 ///
-/// Both report malformed paths/headers as ordinary errors (exit code 1)
+/// All report malformed paths/headers as ordinary errors (exit code 1)
 /// with the snapshot failure mode spelled out — never a panic.
 fn cmd_index(args: &Args) -> Result<()> {
     match args.positional.first().map(|s| s.as_str()) {
@@ -218,6 +225,8 @@ fn cmd_index(args: &Args) -> Result<()> {
             println!("window={}", info.window);
             println!("shards={}", info.shards);
             println!("clusters={}", info.clusters);
+            println!("generation={}", info.generation);
+            println!("parent={}", info.parent);
             println!("bound={}", info.bound);
             println!("strategy={}", info.strategy);
             println!("backend={}", info.backend);
@@ -227,8 +236,56 @@ fn cmd_index(args: &Args) -> Result<()> {
             println!("seed={}", info.seed);
             Ok(())
         }
-        other => bail!("index: expected build|inspect, got {other:?}"),
+        Some("compact") => {
+            let path = args
+                .positional
+                .get(1)
+                .map(|s| s.as_str())
+                .or_else(|| args.get("path"))
+                .context("index compact needs a snapshot path (positional or --path)")?;
+            let index = DtwIndex::load(std::path::Path::new(path))
+                .map_err(|e| anyhow::anyhow!("snapshot {path}: {e}"))?;
+            // An empty overlay still advances the generation: the result
+            // is a bit-exact rebuild of the same series set stamped
+            // generation+1 with the old generation as parent.
+            let next = dtw_bounds::live::compacted(
+                &index,
+                &dtw_bounds::live::DeltaShard::new(),
+                &dtw_bounds::live::Tombstones::new(),
+            )?;
+            let base = args
+                .get("out")
+                .map(str::to_string)
+                .unwrap_or_else(|| strip_generation_suffix(path));
+            let out = dtw_bounds::index::snapshot::generation_path(
+                std::path::Path::new(&base),
+                next.generation(),
+            );
+            let bytes = next
+                .save(&out)
+                .map_err(|e| anyhow::anyhow!("save snapshot {}: {e}", out.display()))?;
+            println!(
+                "compacted {path} (generation {} -> {}, n={}) into {} ({bytes} bytes)",
+                index.generation(),
+                next.generation(),
+                next.len(),
+                out.display()
+            );
+            Ok(())
+        }
+        other => bail!("index: expected build|inspect|compact, got {other:?}"),
     }
+}
+
+/// Strip a trailing `.g<N>` generation suffix so `index compact` chains:
+/// compacting `prod.snap.g2` writes `prod.snap.g3`, not `prod.snap.g2.g3`.
+fn strip_generation_suffix(path: &str) -> String {
+    if let Some((base, gen)) = path.rsplit_once(".g") {
+        if !gen.is_empty() && gen.bytes().all(|b| b.is_ascii_digit()) {
+            return base.to_string();
+        }
+    }
+    path.to_string()
 }
 
 fn cmd_gen_archive(args: &Args) -> Result<()> {
@@ -612,9 +669,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // dispatch thread — the index handle carries `None` and the factory
     // attaches the kind resolved above.
     let index = index.with_backend(BackendKind::None);
+    // `--auto-compact <n>`: fold the live delta shard and tombstones
+    // into the next generation once `n` mutations pend (0 = never).
+    let auto_compact = match args.get("auto-compact") {
+        Some(v) => Some(
+            v.parse::<usize>().context("--auto-compact must be a non-negative integer")?,
+        ),
+        None => None,
+    };
     let factory_index = index.clone();
     let factory = move || {
         let mut engine = NnEngine::from_index(factory_index);
+        engine.set_auto_compact(auto_compact);
         match backend {
             BackendKind::None => eprintln!("batch prefilter: disabled (scalar per query)"),
             BackendKind::Native => {
@@ -645,7 +711,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     println!(
         "protocol: one comma-separated series per line (or k=<n>;series for k-NN); \
-         save=<path>;/load=<path>; snapshot control; PING/PONG; Ctrl-C to stop"
+         save=<path>;/load=<path>; generational snapshot control; \
+         insert=<label>;series / delete=<id>; / compact=; / gens=; live mutation; \
+         PING/PONG; Ctrl-C to stop"
     );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));

@@ -35,7 +35,7 @@ const CANDIDATE_CHUNK: usize = 8;
 /// sums and run the pruned exact-DTW kernel — the one exact-distance
 /// path every search strategy shares.
 #[inline]
-fn exact_distance<D: Delta>(
+pub(crate) fn exact_distance<D: Delta>(
     query: &[f64],
     t: &PreparedSeries,
     w: usize,

@@ -69,6 +69,16 @@ pub struct SearchStats {
     /// individually bounded, so they do not appear in `lb_calls` or
     /// `pruned`.
     pub cluster_members_pruned: usize,
+    /// Delta-shard candidates visited by a live index's append-log scan
+    /// (zero on a frozen index). Every visited entry is also accounted
+    /// in exactly one of `delta_pruned` / `delta_dtw`.
+    pub delta_scanned: usize,
+    /// Delta-shard candidates discarded by their per-candidate lower
+    /// bound alone (subset of `pruned`).
+    pub delta_pruned: usize,
+    /// Delta-shard candidates that reached the exact DTW kernel (subset
+    /// of `dtw_calls`).
+    pub delta_dtw: usize,
 }
 
 impl SearchStats {
@@ -81,6 +91,9 @@ impl SearchStats {
         self.cluster_lb_calls += other.cluster_lb_calls;
         self.clusters_pruned += other.clusters_pruned;
         self.cluster_members_pruned += other.cluster_members_pruned;
+        self.delta_scanned += other.delta_scanned;
+        self.delta_pruned += other.delta_pruned;
+        self.delta_dtw += other.delta_dtw;
     }
 }
 

@@ -172,6 +172,16 @@ pub struct StreamStats {
     /// Window × candidate pairs skipped via cluster pruning — they
     /// never reached the cascade, so no stage counts them.
     pub cluster_members_pruned: u64,
+    /// Delta-shard candidates visited by a live overlay's append-log
+    /// continuation (zero without an overlay). Every visited entry is
+    /// also accounted in exactly one of `delta_pruned` / `delta_dtw`.
+    pub delta_scanned: u64,
+    /// Delta-shard candidates rejected by some cascade stage (each also
+    /// counts in that stage's `pruned`).
+    pub delta_pruned: u64,
+    /// Delta-shard candidates that reached the exact DTW kernel (subset
+    /// of `dtw_calls`).
+    pub delta_dtw: u64,
 }
 
 impl StreamStats {
@@ -190,6 +200,9 @@ impl StreamStats {
             cluster_lb_calls: 0,
             clusters_pruned: 0,
             cluster_members_pruned: 0,
+            delta_scanned: 0,
+            delta_pruned: 0,
+            delta_dtw: 0,
         }
     }
 
@@ -214,6 +227,9 @@ impl StreamStats {
             cluster_lb_calls: self.cluster_lb_calls as usize,
             clusters_pruned: self.clusters_pruned as usize,
             cluster_members_pruned: self.cluster_members_pruned as usize,
+            delta_scanned: self.delta_scanned as usize,
+            delta_pruned: self.delta_pruned as usize,
+            delta_dtw: self.delta_dtw as usize,
         }
     }
 }
@@ -291,6 +307,21 @@ pub struct SubsequenceSearcher {
     /// lowest-index tie-breaking, so clustered matches stay bit-equal
     /// to clusterless ones.
     cluster_mask: Vec<bool>,
+    /// Live-overlay delta entries `(label, prepared series)` in append
+    /// order — evaluated by a serial cascade continuation after the base
+    /// sweep of every window (empty without an overlay). Their ids
+    /// extend the physical space (`base_len + offset`) until the final
+    /// logical remap at emission.
+    ov_delta: Vec<(u32, PreparedSeries)>,
+    /// Live-overlay tombstone mask over the base candidates (all-false
+    /// without an overlay): tombstoned series are skipped by both
+    /// sweeps, exactly as a cold rebuild would never contain them.
+    ov_dead: Vec<bool>,
+    /// `ov_dead_rank[i]` = tombstones strictly below physical `i` — the
+    /// physical→logical shift applied to an emitted base neighbor.
+    ov_dead_rank: Vec<usize>,
+    /// Surviving base candidates (`index.len()` without an overlay).
+    ov_survivors: usize,
     matches: Vec<StreamMatch>,
     stats: StreamStats,
     busy: Duration,
@@ -363,6 +394,10 @@ impl SubsequenceSearcher {
             work_ranges,
             has_clusters: index.has_clusters(),
             cluster_mask: vec![false; index.len()],
+            ov_delta: Vec::new(),
+            ov_dead: vec![false; index.len()],
+            ov_dead_rank: vec![0; index.len()],
+            ov_survivors: index.len(),
             matches: Vec::new(),
             stats,
             index: index.clone(),
@@ -373,6 +408,34 @@ impl SubsequenceSearcher {
     /// The index being matched against.
     pub fn index(&self) -> &DtwIndex {
         &self.index
+    }
+
+    /// Install a live-mutation overlay: `delta` entries (append order,
+    /// all window-length) and a tombstone mask over the base candidates.
+    ///
+    /// With the overlay, every window's sweep skips tombstoned base
+    /// series, continues over the delta entries with the same cascade
+    /// (serial, ascending append order — the exact tail a cold rebuild's
+    /// serial sweep would run, since delta ids follow every base id),
+    /// and emits matches in the gap-free **logical** id space. Both
+    /// remaps are strictly monotone, so `(distance, id)` tie-breaking is
+    /// preserved and matches stay bit-identical to a cold rebuild over
+    /// the same logical series set.
+    pub(crate) fn set_overlay(&mut self, delta: Vec<(u32, PreparedSeries)>, dead: Vec<bool>) {
+        debug_assert_eq!(dead.len(), self.index.len());
+        debug_assert!(delta.iter().all(|(_, s)| s.len() == self.m));
+        let mut rank = vec![0usize; dead.len()];
+        let mut seen = 0usize;
+        for (i, &d) in dead.iter().enumerate() {
+            rank[i] = seen;
+            if d {
+                seen += 1;
+            }
+        }
+        self.ov_survivors = dead.len() - seen;
+        self.ov_dead = dead;
+        self.ov_dead_rank = rank;
+        self.ov_delta = delta;
     }
 
     /// The sliding-window (= indexed series) length.
@@ -510,19 +573,29 @@ impl SubsequenceSearcher {
         self.envs_ready = false;
 
         let train = Arc::clone(&self.index.train);
-        self.stats.candidates += train.len() as u64;
+        // Logical candidates: base survivors + delta entries (tombstoned
+        // series are skipped, not considered).
+        self.stats.candidates += (self.ov_survivors + self.ov_delta.len()) as u64;
         self.cluster_prepass::<D>();
         let best = if self.exec.threads() > 1 && train.len() > 1 {
             self.eval_candidates_parallel::<D>(&train)
         } else {
             self.eval_candidates_serial::<D>(&train)
         };
+        // Live-overlay continuation: the delta entries are the tail of
+        // the logical candidate order.
+        let best = self.eval_delta::<D>(train.len(), best);
 
-        let hit = best.map(|(ti, d)| StreamMatch {
-            start,
-            neighbor: ti,
-            label: train.labels[ti],
-            distance: d,
+        let hit = best.map(|(ti, d)| {
+            // Emit in the logical id space: survivors shift down by
+            // their tombstone rank; delta entries follow the survivors.
+            let (neighbor, label) = if ti < train.len() {
+                (ti - self.ov_dead_rank[ti], train.labels[ti])
+            } else {
+                let j = ti - train.len();
+                (self.ov_survivors + j, self.ov_delta[j].0)
+            };
+            StreamMatch { start, neighbor, label, distance: d }
         });
         if let Some(m) = hit {
             self.stats.matches += 1;
@@ -580,7 +653,7 @@ impl SubsequenceSearcher {
     ) -> Option<(usize, f64)> {
         let mut best: Option<(usize, f64)> = None;
         'cands: for (ti, t) in train.series.iter().enumerate() {
-            if self.cluster_mask[ti] {
+            if self.cluster_mask[ti] || self.ov_dead[ti] {
                 continue;
             }
             let mut cutoff = self.cutoff();
@@ -627,6 +700,72 @@ impl SubsequenceSearcher {
         best
     }
 
+    /// Live-overlay continuation: run the delta entries through the
+    /// same cascade, serially in append order, against the cutoff the
+    /// base sweep left behind. This is exactly the tail of a cold
+    /// rebuild's serial sweep (delta ids follow every base id), and
+    /// after the parallel sweep it is equally exact: the base winner is
+    /// the true `(distance, index)` argmin over survivors, strict
+    /// `d < cutoff` admission keeps it on ties, and later delta entries
+    /// must strictly beat earlier ones — lowest-id tie-breaking all the
+    /// way down.
+    fn eval_delta<D: Delta>(
+        &mut self,
+        base_len: usize,
+        mut best: Option<(usize, f64)>,
+    ) -> Option<(usize, f64)> {
+        if self.ov_delta.is_empty() {
+            return best;
+        }
+        // Take the entries so cascade stages can borrow `self` freely.
+        let delta = std::mem::take(&mut self.ov_delta);
+        'cands: for (j, (_, t)) in delta.iter().enumerate() {
+            self.stats.delta_scanned += 1;
+            let mut cutoff = self.cutoff();
+            if let Some((_, d)) = best {
+                cutoff = cutoff.min(d);
+            }
+            let mut lb = 0.0f64;
+            for si in 0..self.cascade.len() {
+                let stage = self.cascade[si];
+                if stage.requires_query_envelopes() {
+                    self.ensure_envelopes();
+                }
+                self.stats.stages[si].lb_calls += 1;
+                let v = stage.compute::<D>(&self.pq, t, self.w, cutoff, &mut self.scratch);
+                lb = lb.max(v);
+                if lb >= cutoff {
+                    self.stats.stages[si].pruned += 1;
+                    self.stats.delta_pruned += 1;
+                    continue 'cands;
+                }
+            }
+            self.stats.dtw_calls += 1;
+            self.stats.delta_dtw += 1;
+            let d = if cutoff.is_finite() {
+                keogh::lb_keogh_tail::<D>(&self.pq.values, &t.lo, &t.up, &mut self.scratch.tail);
+                dtw_ea_pruned::<D>(
+                    &self.pq.values,
+                    &t.values,
+                    self.w,
+                    cutoff,
+                    Some(&self.scratch.tail),
+                )
+            } else {
+                dtw_ea_pruned::<D>(&self.pq.values, &t.values, self.w, cutoff, None)
+            };
+            if d.is_infinite() {
+                self.stats.dtw_abandoned += 1;
+                continue;
+            }
+            if d < cutoff {
+                best = Some((base_len + j, d));
+            }
+        }
+        self.ov_delta = delta;
+        best
+    }
+
     /// Candidate-parallel sweep: workers pull the precomputed
     /// shard-aligned work ranges (`work_ranges`, built once at
     /// construction — no chunk crosses a shard boundary), prune against
@@ -659,13 +798,14 @@ impl SubsequenceSearcher {
         let scratches = &self.par_scratch;
         let work = &self.work_ranges;
         let mask = &self.cluster_mask;
+        let dead = &self.ov_dead;
         self.exec.run(work.len(), 1, |wid, queue| {
             let mut scratch = scratches[wid].lock().unwrap();
             let mut stages = vec![(0u64, 0u64); nstages];
             let (mut dtw_calls, mut dtw_abandoned) = (0u64, 0u64);
             while let Some(chunk) = queue.next_chunk() {
                 'cands: for ti in chunk.flat_map(|ri| work[ri].clone()) {
-                    if mask[ti] {
+                    if mask[ti] || dead[ti] {
                         continue;
                     }
                     let t = &train.series[ti];

@@ -1,0 +1,320 @@
+//! Live-mutation property suite — the PR's acceptance contract:
+//!
+//! * **Cold-rebuild equivalence**: after *any* interleaving of
+//!   `insert` / `delete` / `compact`, the live index answers scalar
+//!   k-NN, batched and streaming-subsequence queries **bit-identically**
+//!   to a cold-built index over the same logical series set, across the
+//!   grid shards {1, 3} × clusters {0, 4} × threads {1, 4}.
+//! * **Tombstone exclusion**: a deleted series never appears in any
+//!   result, before or after compaction.
+//! * **Generation rollback**: a saved generation snapshot restores the
+//!   exact pre-mutation answers when loaded back (`load=` = rollback),
+//!   and a failed load leaves the current index serving.
+//! * **Counter conservation**: every delta-shard candidate a search
+//!   touches is accounted for — `delta_scanned = delta_pruned +
+//!   delta_dtw` — on the k-NN and stream paths alike.
+
+use dtw_bounds::coordinator::NnEngine;
+use dtw_bounds::data::synthetic::{generate_archive, ArchiveSpec, Scale};
+use dtw_bounds::data::Dataset;
+use dtw_bounds::delta::Squared;
+use dtw_bounds::index::{DtwIndex, QueryOptions, QueryOutcome};
+use dtw_bounds::stream::SubsequenceOptions;
+
+fn dataset(seed: u64) -> Dataset {
+    generate_archive(&ArchiveSpec::new(Scale::Tiny, seed))[0].clone()
+}
+
+/// Deterministic splitmix-style generator — interleavings must be
+/// reproducible across runs and platforms.
+fn next_rand(state: &mut u64) -> u64 {
+    *state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+    *state >> 33
+}
+
+/// The bit-exact comparison currency for k-NN outcomes.
+fn pairs(o: &QueryOutcome) -> Vec<(usize, u32, f64)> {
+    o.neighbors.iter().map(|n| (n.index, n.label, n.distance)).collect()
+}
+
+/// The logical mirror the live engine must always agree with: plain
+/// `(values, label)` rows mutated by index, rebuilt cold on demand.
+struct Mirror {
+    rows: Vec<(Vec<f64>, u32)>,
+    window: usize,
+    shards: usize,
+    clusters: usize,
+    threads: usize,
+}
+
+impl Mirror {
+    fn build(&self) -> DtwIndex {
+        let series: Vec<Vec<f64>> = self.rows.iter().map(|(v, _)| v.clone()).collect();
+        let labels: Vec<u32> = self.rows.iter().map(|&(_, l)| l).collect();
+        let mut b = DtwIndex::builder(series)
+            .labels(labels)
+            .window(self.window)
+            .znormalize(false)
+            .shards(self.shards)
+            .threads(self.threads);
+        if self.clusters > 0 {
+            b = b.clusters(self.clusters);
+        }
+        b.build().expect("mirror series share one length")
+    }
+}
+
+/// Compare the live engine against a cold rebuild of its mirror on all
+/// three search paths.
+fn assert_matches_cold(engine: &mut NnEngine, mirror: &Mirror, queries: &[Vec<f64>], tag: &str) {
+    let cold = mirror.build();
+    let mut cold_engine = NnEngine::from_index(cold);
+    // Both sides carry the batched prefilter so multi-query batches
+    // exercise the backend path, not just scalar fallback.
+    cold_engine.attach_native();
+
+    for q in queries {
+        for k in [1usize, 3] {
+            let a = engine.query_with(q, &QueryOptions::k(k));
+            let b = cold_engine.query_with(q, &QueryOptions::k(k));
+            assert_eq!(pairs(&a), pairs(&b), "{tag}: scalar k={k}");
+        }
+    }
+
+    let items: Vec<(Vec<f64>, QueryOptions)> =
+        queries.iter().map(|q| (q.clone(), QueryOptions::k(2))).collect();
+    let live_outs = engine.query_batch_with(&items);
+    let cold_outs = cold_engine.query_batch_with(&items);
+    for (i, (a, b)) in live_outs.iter().zip(cold_outs.iter()).enumerate() {
+        assert_eq!(pairs(a), pairs(b), "{tag}: batched item {i}");
+    }
+
+    // Stream sweep: filler around two query windows, top-3 matches.
+    let mut samples = vec![1e3; 5];
+    samples.extend_from_slice(&queries[0]);
+    samples.extend(vec![-1e3; 4]);
+    samples.extend_from_slice(&queries[1 % queries.len()]);
+    let a = engine
+        .query_stream(&samples, SubsequenceOptions::top_k(3))
+        .expect("valid stream options");
+    let b = cold_engine
+        .query_stream(&samples, SubsequenceOptions::top_k(3))
+        .expect("valid stream options");
+    assert_eq!(a.matches, b.matches, "{tag}: stream");
+    assert_eq!(a.stats.windows, b.stats.windows, "{tag}: stream windows");
+}
+
+#[test]
+fn random_mutation_interleavings_match_cold_rebuild_across_the_grid() {
+    let ds = dataset(501);
+    let w = ds.window.max(1);
+    let queries: Vec<Vec<f64>> =
+        ds.test.iter().take(3).map(|s| s.values.clone()).collect();
+    // Insertion donors: test-split series, cycled.
+    let donors: Vec<Vec<f64>> = ds.test.iter().map(|s| s.values.clone()).collect();
+
+    for &shards in &[1usize, 3] {
+        for &clusters in &[0usize, 4] {
+            for &threads in &[1usize, 4] {
+                let tag = format!("shards={shards} clusters={clusters} threads={threads}");
+                let mut mirror = Mirror {
+                    rows: ds
+                        .train
+                        .iter()
+                        .map(|s| (s.values.clone(), s.label))
+                        .collect(),
+                    window: w,
+                    shards,
+                    clusters,
+                    threads,
+                };
+                let mut engine = NnEngine::from_index(mirror.build());
+                engine.attach_native();
+
+                let mut rng = 0x5EED_0000 + (shards * 100 + clusters * 10 + threads) as u64;
+                let mut next_donor = 0usize;
+                for step in 0..10 {
+                    let roll = next_rand(&mut rng) % 10;
+                    if roll < 4 {
+                        let values = donors[next_donor % donors.len()].clone();
+                        let label = 100 + next_donor as u32;
+                        next_donor += 1;
+                        let id = engine.insert(label, values.clone()).unwrap();
+                        assert_eq!(id, mirror.rows.len(), "{tag}: insert id, step {step}");
+                        mirror.rows.push((values, label));
+                    } else if roll < 7 && mirror.rows.len() > 2 {
+                        let id = (next_rand(&mut rng) as usize) % mirror.rows.len();
+                        engine.delete(id).unwrap();
+                        mirror.rows.remove(id);
+                    } else {
+                        engine.compact().unwrap();
+                    }
+                    assert_eq!(engine.logical_len(), mirror.rows.len(), "{tag}, step {step}");
+                    // Compare at a few checkpoints (every step would be
+                    // O(steps) cold rebuilds per grid point).
+                    if step % 4 == 3 {
+                        assert_matches_cold(&mut engine, &mirror, &queries, &tag);
+                    }
+                }
+                // Always compare the final state, then once more after a
+                // closing compaction folds whatever is still pending.
+                assert_matches_cold(&mut engine, &mirror, &queries, &tag);
+                engine.compact().unwrap();
+                assert_eq!(engine.delta_len(), 0, "{tag}");
+                assert_matches_cold(&mut engine, &mirror, &queries, &format!("{tag} compacted"));
+            }
+        }
+    }
+}
+
+#[test]
+fn tombstoned_series_never_appear_in_results() {
+    let ds = dataset(502);
+    let w = ds.window.max(1);
+    let series: Vec<Vec<f64>> = ds.train.iter().map(|s| s.values.clone()).collect();
+    let labels: Vec<u32> = ds.train.iter().map(|s| s.label).collect();
+    let index = DtwIndex::builder(series.clone())
+        .labels(labels)
+        .window(w)
+        .znormalize(false)
+        .build()
+        .unwrap();
+    let mut engine = NnEngine::from_index(index);
+
+    // Delete physical series 2 (logical 2, nothing deleted before it):
+    // querying its own values must no longer return a 0-distance hit at
+    // it, even with k covering the whole index.
+    let victim = series[2].clone();
+    let before = engine.query_with(&victim, &QueryOptions::k(1));
+    assert_eq!(before.neighbors[0].distance, 0.0, "sanity: self-match first");
+    engine.delete(2).unwrap();
+
+    let k_all = engine.logical_len();
+    let out = engine.query_with(&victim, &QueryOptions::k(k_all));
+    assert_eq!(out.neighbors.len(), k_all, "k covers every surviving series");
+    for n in &out.neighbors {
+        assert!(
+            n.distance > 0.0,
+            "tombstoned series leaked back into the results pre-compaction"
+        );
+    }
+    // A stream window equal to the victim: its best match must be a
+    // surviving series, strictly above zero.
+    let mut samples = vec![1e3; 3];
+    samples.extend_from_slice(&victim);
+    samples.extend(vec![-1e3; 3]);
+    let report = engine.query_stream(&samples, SubsequenceOptions::top_k(1)).unwrap();
+    assert!(report.matches[0].distance > 0.0, "stream resurrects the tombstone");
+
+    // Post-compaction the same holds (the series is physically gone).
+    engine.compact().unwrap();
+    assert_eq!(engine.index().len(), series.len() - 1);
+    let out = engine.query_with(&victim, &QueryOptions::k(k_all));
+    for n in &out.neighbors {
+        assert!(n.distance > 0.0, "tombstoned series survived compaction");
+    }
+}
+
+#[test]
+fn generation_snapshots_roll_back_to_exact_pre_mutation_results() {
+    let ds = dataset(503);
+    let index = DtwIndex::builder_from_dataset(&ds).build().unwrap();
+    let mut engine = NnEngine::from_index(index);
+    let q = ds.test[0].values.clone();
+    let want = pairs(&engine.query_with(&q, &QueryOptions::k(3)));
+
+    let base = std::env::temp_dir()
+        .join(format!("dtwb_live_gen_{}.snap", std::process::id()));
+    let (g0_path, bytes) = engine.save_generation(&base).unwrap();
+    assert!(bytes > 0);
+    assert!(g0_path.to_string_lossy().ends_with(".g0"), "{g0_path:?}");
+
+    // Mutate and compact into generation 1; answers change shape.
+    engine.insert(77, ds.test[1].values.clone()).unwrap();
+    engine.delete(0).unwrap();
+    engine.compact().unwrap();
+    assert_eq!(engine.generation(), 1);
+    let (g1_path, _) = engine.save_generation(&base).unwrap();
+    assert!(g1_path.to_string_lossy().ends_with(".g1"), "{g1_path:?}");
+    assert_ne!(g0_path, g1_path, "each generation keeps its own file");
+    let info = engine.generations();
+    assert_eq!(info.generation, 1);
+    assert_eq!(info.parent, 0);
+    assert_eq!(
+        info.saved.iter().map(|&(g, _)| g).collect::<Vec<_>>(),
+        vec![0, 1],
+        "both snapshots recorded as rollback targets"
+    );
+
+    // A failed load leaves the current generation serving…
+    let missing = std::env::temp_dir().join("dtwb_live_gen_missing.snap");
+    assert!(DtwIndex::load(&missing).is_err());
+    assert_eq!(engine.generation(), 1, "failed load must not disturb the engine");
+
+    // …and loading generation 0 is an exact rollback.
+    let g0 = DtwIndex::load(&g0_path).unwrap();
+    assert_eq!(g0.generation(), 0);
+    engine.replace_index(g0);
+    let got = pairs(&engine.query_with(&q, &QueryOptions::k(3)));
+    assert_eq!(got, want, "rollback restores the pre-mutation answers exactly");
+
+    std::fs::remove_file(&g0_path).ok();
+    std::fs::remove_file(&g1_path).ok();
+}
+
+#[test]
+fn delta_counters_are_conserved_on_knn_and_stream_paths() {
+    let ds = dataset(504);
+    let index = DtwIndex::builder_from_dataset(&ds).znormalize(false).build().unwrap();
+    let mut engine = NnEngine::from_index(index);
+    for (i, s) in ds.test.iter().take(3).enumerate() {
+        engine.insert(200 + i as u32, s.values.clone()).unwrap();
+    }
+    engine.delete(1).unwrap();
+
+    // Scalar k-NN: every pending insert is scanned exactly once, and
+    // each scan ends in exactly one of {pruned, DTW}.
+    let out = engine.query_with(&ds.test[3].values, &QueryOptions::k(3));
+    assert_eq!(out.stats.delta_scanned, 3, "one scan per delta entry");
+    assert_eq!(
+        out.stats.delta_scanned,
+        out.stats.delta_pruned + out.stats.delta_dtw,
+        "every scanned delta candidate is either pruned or DTW'd"
+    );
+    assert!(out.stats.dtw_calls >= out.stats.delta_dtw, "delta DTW is a subset");
+
+    // Batched path: conservation per outcome.
+    let items: Vec<(Vec<f64>, QueryOptions)> = ds
+        .test
+        .iter()
+        .skip(3)
+        .take(3)
+        .map(|s| (s.values.clone(), QueryOptions::k(2)))
+        .collect();
+    for (i, o) in engine.query_batch_with(&items).iter().enumerate() {
+        assert_eq!(o.stats.delta_scanned, 3, "batched item {i}");
+        assert_eq!(
+            o.stats.delta_scanned,
+            o.stats.delta_pruned + o.stats.delta_dtw,
+            "batched item {i}"
+        );
+    }
+
+    // Stream path: one scan per delta entry per evaluated window.
+    let mut samples = vec![1e3; 4];
+    samples.extend_from_slice(&ds.test[3].values);
+    samples.extend(vec![-1e3; 4]);
+    let report = engine.query_stream(&samples, SubsequenceOptions::top_k(2)).unwrap();
+    let s = &report.stats;
+    assert_eq!(
+        s.delta_scanned,
+        s.windows * 3,
+        "each window's sweep visits all three delta entries"
+    );
+    assert_eq!(
+        s.delta_scanned,
+        s.delta_pruned + s.delta_dtw,
+        "stream delta scans are conserved"
+    );
+    assert!(s.dtw_calls >= s.delta_dtw);
+}

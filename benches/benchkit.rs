@@ -1,6 +1,11 @@
-//! Shared harness for the `harness = false` benches (no criterion in the
-//! offline build — DESIGN.md §5). Provides env-tunable workload knobs and
-//! a warmup+repeat timer with mean/std reporting.
+//! Shared harness for the `harness = false` figure drivers (no criterion
+//! in the offline build — DESIGN.md §5). Provides env-tunable workload
+//! knobs and simple warmup+repeat timers.
+//!
+//! Scenario benchmarking, machine-readable perf reporting and the
+//! regression gate all live in the `dtw-bench` crate now (see
+//! docs/benchmarks.md); the drivers that remain here exist to print the
+//! paper's figures and tables, not to track performance.
 
 #![allow(dead_code)]
 
@@ -73,437 +78,4 @@ pub fn ns_per_call<F: FnMut() -> f64>(iters: usize, mut f: F) -> f64 {
 /// Print a section banner.
 pub fn banner(title: &str) {
     println!("\n{}\n{}", title, "=".repeat(title.len()));
-}
-
-/// One machine-readable benchmark record for the perf-trajectory files
-/// (`BENCH_*.json`): which bound/kernel, at which workload shape, at what
-/// cost per bound evaluation.
-#[derive(Debug, Clone)]
-pub struct BenchRecord {
-    /// Bound / kernel name, e.g. `lb_keogh/native`.
-    pub bound: String,
-    /// Series length ℓ.
-    pub series_len: usize,
-    /// Candidates scored per query.
-    pub candidates: usize,
-    /// Nanoseconds per bound evaluation (one query × candidate pair).
-    pub ns_per_op: f64,
-}
-
-/// One machine-readable record for the NN-search trajectory file
-/// (`BENCH_nn_search.json`): throughput and prune rate per (strategy,
-/// bound) over a workload of full test-set queries.
-#[derive(Debug, Clone)]
-pub struct NnSearchRecord {
-    /// Search strategy name, e.g. `sorted`, `sorted-precomputed`.
-    pub strategy: String,
-    /// Screening bound name (`none` for brute force).
-    pub bound: String,
-    /// Datasets aggregated.
-    pub datasets: usize,
-    /// Total queries answered.
-    pub queries: usize,
-    /// Queries per second across the workload.
-    pub queries_per_sec: f64,
-    /// Fraction of query-candidate pairs pruned by the bound alone.
-    pub prune_rate: f64,
-}
-
-/// Write NN-search records as a JSON array (manual formatting — no
-/// `serde` in the offline build; stable for line-diffing across PRs).
-pub fn write_nn_search_json(path: &str, records: &[NnSearchRecord]) -> std::io::Result<()> {
-    let mut out = String::from("[\n");
-    for (i, r) in records.iter().enumerate() {
-        let sep = if i + 1 == records.len() { "" } else { "," };
-        out.push_str(&format!(
-            "  {{\"strategy\": \"{}\", \"bound\": \"{}\", \"datasets\": {}, \
-             \"queries\": {}, \"queries_per_sec\": {:.1}, \"prune_rate\": {:.4}}}{sep}\n",
-            r.strategy.replace('\\', "\\\\").replace('"', "\\\""),
-            r.bound.replace('\\', "\\\\").replace('"', "\\\""),
-            r.datasets,
-            r.queries,
-            r.queries_per_sec,
-            r.prune_rate,
-        ));
-    }
-    out.push_str("]\n");
-    std::fs::write(path, out)
-}
-
-/// One machine-readable record for the streaming-search trajectory file
-/// (`BENCH_stream_search.json`): throughput and per-cascade-stage prune
-/// rate over a synthetic monitor workload.
-#[derive(Debug, Clone)]
-pub struct StreamSearchRecord {
-    /// Cascade label, e.g. `LB_KimFL->LB_Keogh->LB_Webb`.
-    pub cascade: String,
-    /// Stream samples scanned (per repeat).
-    pub samples: usize,
-    /// Windows evaluated (per repeat).
-    pub windows: usize,
-    /// Windows matched (per repeat).
-    pub matches: usize,
-    /// Stream samples per second of search-busy time.
-    pub samples_per_sec: f64,
-    /// Fraction of window × candidate pairs pruned by the whole cascade.
-    pub prune_rate: f64,
-    /// Per-stage `(bound name, fraction of pairs pruned at this stage)`.
-    pub stage_prune: Vec<(String, f64)>,
-    /// Full DTW computations started (per repeat).
-    pub dtw_calls: usize,
-}
-
-/// Write streaming-search records as a JSON array (manual formatting —
-/// no `serde` in the offline build; stable for line-diffing across PRs).
-pub fn write_stream_search_json(
-    path: &str,
-    records: &[StreamSearchRecord],
-) -> std::io::Result<()> {
-    let esc = |s: &str| s.replace('\\', "\\\\").replace('"', "\\\"");
-    let mut out = String::from("[\n");
-    for (i, r) in records.iter().enumerate() {
-        let sep = if i + 1 == records.len() { "" } else { "," };
-        let stages: Vec<String> = r
-            .stage_prune
-            .iter()
-            .map(|(name, rate)| format!("\"{}\": {rate:.4}", esc(name)))
-            .collect();
-        out.push_str(&format!(
-            "  {{\"cascade\": \"{}\", \"samples\": {}, \"windows\": {}, \
-             \"matches\": {}, \"samples_per_sec\": {:.1}, \"prune_rate\": {:.4}, \
-             \"stages\": {{{}}}, \"dtw_calls\": {}}}{sep}\n",
-            esc(&r.cascade),
-            r.samples,
-            r.windows,
-            r.matches,
-            r.samples_per_sec,
-            r.prune_rate,
-            stages.join(", "),
-            r.dtw_calls,
-        ));
-    }
-    out.push_str("]\n");
-    std::fs::write(path, out)
-}
-
-/// One machine-readable record for the exact-DTW kernel trajectory file
-/// (`BENCH_dtw_kernel.json`, `"kernels"` array): DP-cell throughput of
-/// one kernel variant on the windowed NN workload.
-#[derive(Debug, Clone)]
-pub struct DtwKernelRecord {
-    /// Kernel variant: `scalar` (`dtw_ea`), `pruned` (`dtw_ea_pruned`),
-    /// `pruned+cascade` (pruned with the `LB_KEOGH` tail).
-    pub kernel: String,
-    /// Series length ℓ.
-    pub series_len: usize,
-    /// Sakoe–Chiba half-window w.
-    pub window: usize,
-    /// Banded DP cells evaluated per second (band cells of every call,
-    /// abandoned or not — so pruning shows up as *higher* cells/sec).
-    pub cells_per_sec: f64,
-}
-
-/// One machine-readable record for the thread-scaling half of
-/// `BENCH_dtw_kernel.json` (`"threads"` array): k-NN queries/sec at a
-/// fixed workload as the search executor widens.
-#[derive(Debug, Clone)]
-pub struct ThreadScalingRecord {
-    /// Worker thread count.
-    pub threads: usize,
-    /// Queries answered per measured repeat.
-    pub queries: usize,
-    /// Queries per second.
-    pub queries_per_sec: f64,
-}
-
-/// One machine-readable record for the per-bound screening half of
-/// `BENCH_dtw_kernel.json` (`"bounds"` array): envelope cells scanned
-/// per second by one `BoundKind` screen — the source of the cells/sec
-/// column on `BoundKind`'s tightness-vs-cost table.
-#[derive(Debug, Clone)]
-pub struct BoundScreenRecord {
-    /// Canonical bound name, e.g. `LB_Webb`.
-    pub bound: String,
-    /// Series length ℓ (= cells credited per screen evaluation).
-    pub series_len: usize,
-    /// Screen cells per second (ℓ / seconds-per-evaluation).
-    pub cells_per_sec: f64,
-}
-
-/// Write the exact-DTW kernel trajectory file: one JSON object with
-/// `kernels`, `threads` and `bounds` arrays (manual formatting — no
-/// `serde` in the offline build; stable for line-diffing across PRs).
-/// `benches/check_regression.rs` parses exactly this shape.
-pub fn write_dtw_kernel_json(
-    path: &str,
-    kernels: &[DtwKernelRecord],
-    threads: &[ThreadScalingRecord],
-    bounds: &[BoundScreenRecord],
-) -> std::io::Result<()> {
-    let esc = |s: &str| s.replace('\\', "\\\\").replace('"', "\\\"");
-    let mut out = String::from("{\n  \"kernels\": [\n");
-    for (i, r) in kernels.iter().enumerate() {
-        let sep = if i + 1 == kernels.len() { "" } else { "," };
-        out.push_str(&format!(
-            "    {{\"kernel\": \"{}\", \"series_len\": {}, \"window\": {}, \
-             \"cells_per_sec\": {:.1}}}{sep}\n",
-            esc(&r.kernel),
-            r.series_len,
-            r.window,
-            r.cells_per_sec,
-        ));
-    }
-    out.push_str("  ],\n  \"threads\": [\n");
-    for (i, r) in threads.iter().enumerate() {
-        let sep = if i + 1 == threads.len() { "" } else { "," };
-        out.push_str(&format!(
-            "    {{\"threads\": {}, \"queries\": {}, \"queries_per_sec\": {:.1}}}{sep}\n",
-            r.threads, r.queries, r.queries_per_sec,
-        ));
-    }
-    out.push_str("  ],\n  \"bounds\": [\n");
-    for (i, r) in bounds.iter().enumerate() {
-        let sep = if i + 1 == bounds.len() { "" } else { "," };
-        out.push_str(&format!(
-            "    {{\"bound\": \"{}\", \"series_len\": {}, \"cells_per_sec\": {:.1}}}{sep}\n",
-            esc(&r.bound),
-            r.series_len,
-            r.cells_per_sec,
-        ));
-    }
-    out.push_str("  ]\n}\n");
-    std::fs::write(path, out)
-}
-
-/// One machine-readable record for the persistence half of
-/// `BENCH_index_persist.json`: how long the cold-start path takes,
-/// versus rebuilding the same index from raw series.
-#[derive(Debug, Clone)]
-pub struct ColdStartRecord {
-    /// `load` (snapshot → ready index) or `rebuild` (raw series →
-    /// ready index, the no-snapshot baseline).
-    pub phase: String,
-    /// Indexed series count.
-    pub series: usize,
-    /// Series length ℓ.
-    pub series_len: usize,
-    /// Shard count of the index.
-    pub shards: usize,
-    /// Snapshot size in bytes (0 for the rebuild baseline).
-    pub bytes: u64,
-    /// Milliseconds to a ready-to-serve index.
-    pub millis: f64,
-}
-
-/// One machine-readable record for the sharded-search half of
-/// `BENCH_index_persist.json`: k-NN throughput per shard count.
-#[derive(Debug, Clone)]
-pub struct ShardScalingRecord {
-    /// Shard count.
-    pub shards: usize,
-    /// Worker thread count.
-    pub threads: usize,
-    /// Queries answered per measured repeat.
-    pub queries: usize,
-    /// Queries per second.
-    pub queries_per_sec: f64,
-}
-
-/// Write the persistence/sharding trajectory file: one JSON object with
-/// `cold_start` and `shard_scaling` arrays (manual formatting — no
-/// `serde` in the offline build; stable for line-diffing across PRs).
-pub fn write_index_persist_json(
-    path: &str,
-    cold: &[ColdStartRecord],
-    scaling: &[ShardScalingRecord],
-) -> std::io::Result<()> {
-    let esc = |s: &str| s.replace('\\', "\\\\").replace('"', "\\\"");
-    let mut out = String::from("{\n  \"cold_start\": [\n");
-    for (i, r) in cold.iter().enumerate() {
-        let sep = if i + 1 == cold.len() { "" } else { "," };
-        out.push_str(&format!(
-            "    {{\"phase\": \"{}\", \"series\": {}, \"series_len\": {}, \
-             \"shards\": {}, \"bytes\": {}, \"millis\": {:.3}}}{sep}\n",
-            esc(&r.phase),
-            r.series,
-            r.series_len,
-            r.shards,
-            r.bytes,
-            r.millis,
-        ));
-    }
-    out.push_str("  ],\n  \"shard_scaling\": [\n");
-    for (i, r) in scaling.iter().enumerate() {
-        let sep = if i + 1 == scaling.len() { "" } else { "," };
-        out.push_str(&format!(
-            "    {{\"shards\": {}, \"threads\": {}, \"queries\": {}, \
-             \"queries_per_sec\": {:.1}}}{sep}\n",
-            r.shards, r.threads, r.queries, r.queries_per_sec,
-        ));
-    }
-    out.push_str("  ]\n}\n");
-    std::fs::write(path, out)
-}
-
-/// One machine-readable record for the cluster-pruning trajectory file
-/// (`BENCH_cluster_prune.json`): k-NN throughput and cluster-level prune
-/// rate at one cluster count over a synthetic candidate pool.
-/// `clusters = 0` is the flat baseline (no cluster layer).
-#[derive(Debug, Clone)]
-pub struct ClusterPruneRecord {
-    /// Per-shard cluster count the index was built with (0 = flat).
-    pub clusters: usize,
-    /// Shard count of the index.
-    pub shards: usize,
-    /// Worker thread count.
-    pub threads: usize,
-    /// Candidate series in the index.
-    pub candidates: usize,
-    /// Queries answered per measured repeat.
-    pub queries: usize,
-    /// Queries per second.
-    pub queries_per_sec: f64,
-    /// Fraction of query × candidate pairs skipped by cluster-level
-    /// bounds alone (members of skipped clusters / total pairs).
-    pub cluster_prune_rate: f64,
-    /// Cluster-level merged-envelope bound evaluations (total over the
-    /// query set).
-    pub cluster_lb_calls: usize,
-    /// Whole clusters skipped (total over the query set).
-    pub clusters_pruned: usize,
-}
-
-/// Write cluster-pruning records as a JSON array (manual formatting —
-/// no `serde` in the offline build; stable for line-diffing across PRs).
-pub fn write_cluster_prune_json(
-    path: &str,
-    records: &[ClusterPruneRecord],
-) -> std::io::Result<()> {
-    let mut out = String::from("[\n");
-    for (i, r) in records.iter().enumerate() {
-        let sep = if i + 1 == records.len() { "" } else { "," };
-        out.push_str(&format!(
-            "  {{\"clusters\": {}, \"shards\": {}, \"threads\": {}, \
-             \"candidates\": {}, \"queries\": {}, \"queries_per_sec\": {:.1}, \
-             \"cluster_prune_rate\": {:.4}, \"cluster_lb_calls\": {}, \
-             \"clusters_pruned\": {}}}{sep}\n",
-            r.clusters,
-            r.shards,
-            r.threads,
-            r.candidates,
-            r.queries,
-            r.queries_per_sec,
-            r.cluster_prune_rate,
-            r.cluster_lb_calls,
-            r.clusters_pruned,
-        ));
-    }
-    out.push_str("]\n");
-    std::fs::write(path, out)
-}
-
-/// One machine-readable record for the write-path half of
-/// `BENCH_live_mutation.json` (`"inserts"` array): how fast series land
-/// in the delta shard (envelope prep + append, no rebuild).
-#[derive(Debug, Clone)]
-pub struct LiveInsertRecord {
-    /// Series inserted per measured repeat.
-    pub batch: usize,
-    /// Series length ℓ.
-    pub series_len: usize,
-    /// Inserts per second.
-    pub inserts_per_sec: f64,
-}
-
-/// One machine-readable record for the read-path half of
-/// `BENCH_live_mutation.json` (`"delta_query"` array): k-NN latency as
-/// the un-compacted delta shard fills (fill 0 = the frozen baseline).
-#[derive(Debug, Clone)]
-pub struct DeltaQueryRecord {
-    /// Pending delta-shard inserts during the measurement.
-    pub delta_fill: usize,
-    /// Frozen base candidates.
-    pub candidates: usize,
-    /// Queries answered per measured repeat.
-    pub queries: usize,
-    /// Queries per second.
-    pub queries_per_sec: f64,
-    /// Mean microseconds per query.
-    pub micros_per_query: f64,
-}
-
-/// One machine-readable record for the fold half of
-/// `BENCH_live_mutation.json` (`"compaction"` array): wall time of one
-/// `compact()` — the full rebuild of base + delta − tombstones into the
-/// next generation — per builder thread count.
-#[derive(Debug, Clone)]
-pub struct CompactionRecord {
-    /// Builder/search thread count of the index being compacted.
-    pub threads: usize,
-    /// Logical series folded into the new generation.
-    pub series: usize,
-    /// Pending delta inserts folded in.
-    pub delta_fill: usize,
-    /// Pending base tombstones folded out.
-    pub tombstones: usize,
-    /// Milliseconds per compaction.
-    pub millis: f64,
-}
-
-/// Write the live-mutation trajectory file: one JSON object with
-/// `inserts`, `delta_query` and `compaction` arrays (manual formatting —
-/// no `serde` in the offline build; stable for line-diffing across PRs).
-pub fn write_live_mutation_json(
-    path: &str,
-    inserts: &[LiveInsertRecord],
-    delta_query: &[DeltaQueryRecord],
-    compaction: &[CompactionRecord],
-) -> std::io::Result<()> {
-    let mut out = String::from("{\n  \"inserts\": [\n");
-    for (i, r) in inserts.iter().enumerate() {
-        let sep = if i + 1 == inserts.len() { "" } else { "," };
-        out.push_str(&format!(
-            "    {{\"batch\": {}, \"series_len\": {}, \"inserts_per_sec\": {:.1}}}{sep}\n",
-            r.batch, r.series_len, r.inserts_per_sec,
-        ));
-    }
-    out.push_str("  ],\n  \"delta_query\": [\n");
-    for (i, r) in delta_query.iter().enumerate() {
-        let sep = if i + 1 == delta_query.len() { "" } else { "," };
-        out.push_str(&format!(
-            "    {{\"delta_fill\": {}, \"candidates\": {}, \"queries\": {}, \
-             \"queries_per_sec\": {:.1}, \"micros_per_query\": {:.1}}}{sep}\n",
-            r.delta_fill, r.candidates, r.queries, r.queries_per_sec, r.micros_per_query,
-        ));
-    }
-    out.push_str("  ],\n  \"compaction\": [\n");
-    for (i, r) in compaction.iter().enumerate() {
-        let sep = if i + 1 == compaction.len() { "" } else { "," };
-        out.push_str(&format!(
-            "    {{\"threads\": {}, \"series\": {}, \"delta_fill\": {}, \
-             \"tombstones\": {}, \"millis\": {:.3}}}{sep}\n",
-            r.threads, r.series, r.delta_fill, r.tombstones, r.millis,
-        ));
-    }
-    out.push_str("  ]\n}\n");
-    std::fs::write(path, out)
-}
-
-/// Write records as a JSON array. The offline build has no `serde`; the
-/// records are flat, so manual formatting is sufficient and the output is
-/// stable for line-diffing across PRs.
-pub fn write_json(path: &str, records: &[BenchRecord]) -> std::io::Result<()> {
-    let mut out = String::from("[\n");
-    for (i, r) in records.iter().enumerate() {
-        let sep = if i + 1 == records.len() { "" } else { "," };
-        out.push_str(&format!(
-            "  {{\"bound\": \"{}\", \"series_len\": {}, \"candidates\": {}, \"ns_per_op\": {:.1}}}{sep}\n",
-            r.bound.replace('\\', "\\\\").replace('"', "\\\""),
-            r.series_len,
-            r.candidates,
-            r.ns_per_op,
-        ));
-    }
-    out.push_str("]\n");
-    std::fs::write(path, out)
 }

@@ -1,0 +1,155 @@
+//! Deterministic workload materialization.
+//!
+//! A [`crate::recipe::Recipe`] plus its seed fully determines every
+//! series, query, stream sample and live-insert donor in a run: the
+//! whole benchmark is a pure function of the recipe file. All series
+//! are z-normalized by the generators, so indexes are built with
+//! `znormalize(false)` and the bit-equality oracles see identical
+//! floats on every path.
+
+use dtw_bounds::data::rng::Rng;
+use dtw_bounds::data::synthetic::{
+    adversarial_warp_series, embed_stream, random_walk_series, sinusoid_pattern,
+};
+use dtw_bounds::data::znorm::znormalize;
+
+use crate::recipe::{Family, QueryMix, Recipe};
+
+/// Everything a scenario consumes, generated once per run.
+pub struct BenchData {
+    /// Indexed corpus.
+    pub train: Vec<Vec<f64>>,
+    /// Labels, round-robin over `classes`.
+    pub labels: Vec<u32>,
+    /// Query workload.
+    pub queries: Vec<Vec<f64>>,
+    /// Firehose samples (planted patterns from the head of `train`).
+    pub stream: Vec<f64>,
+    /// Fresh series the live scenario inserts.
+    pub donors: Vec<Vec<f64>>,
+}
+
+fn draw(family: Family, rng: &mut Rng, len: usize) -> Vec<f64> {
+    match family {
+        Family::Sinusoid => sinusoid_pattern(rng, len),
+        Family::RandomWalk => random_walk_series(rng, len),
+        Family::Adversarial => adversarial_warp_series(rng, len),
+    }
+}
+
+/// A near query: a corpus series under small amplitude jitter,
+/// re-normalized so it stays on the unit sphere like everything else.
+fn perturb(rng: &mut Rng, base: &[f64]) -> Vec<f64> {
+    let mut out: Vec<f64> = base.iter().map(|&v| v + 0.08 * rng.normal()).collect();
+    znormalize(&mut out);
+    out
+}
+
+/// Generate the full workload for a recipe.
+pub fn materialize(recipe: &Recipe) -> BenchData {
+    let d = &recipe.dataset;
+    let mut rng = Rng::seeded(recipe.seed);
+    // Independent streams per component: adding queries can never shift
+    // the corpus, and vice versa.
+    let mut corpus_rng = rng.fork(1);
+    let mut query_rng = rng.fork(2);
+    let mut stream_rng = rng.fork(3);
+    let mut donor_rng = rng.fork(4);
+
+    let train: Vec<Vec<f64>> =
+        (0..d.series).map(|_| draw(d.family, &mut corpus_rng, d.len)).collect();
+    let labels: Vec<u32> = (0..d.series).map(|i| (i % d.classes) as u32).collect();
+
+    let queries: Vec<Vec<f64>> = (0..recipe.queries.count)
+        .map(|i| {
+            let near = match recipe.queries.mix {
+                QueryMix::Near => true,
+                QueryMix::Fresh => false,
+                QueryMix::Mixed => i % 2 == 0,
+            };
+            if near {
+                let donor = query_rng.below(train.len());
+                perturb(&mut query_rng, &train[donor])
+            } else {
+                draw(d.family, &mut query_rng, d.len)
+            }
+        })
+        .collect();
+
+    let pattern_count = train.len().min(8);
+    let (stream, _planted) = embed_stream(
+        &mut stream_rng,
+        &train[..pattern_count],
+        recipe.stream.samples,
+        0.35,
+        0.1,
+        0.05,
+    );
+
+    let donors: Vec<Vec<f64>> =
+        (0..recipe.live.inserts).map(|_| draw(d.family, &mut donor_rng, d.len)).collect();
+
+    BenchData { train, labels, queries, stream, donors }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::recipe::{
+        DatasetSpec, Grid, LiveSpec, OracleMode, QuerySpec, ScenarioKind, StreamSpec,
+    };
+
+    fn recipe(seed: u64, mix: QueryMix) -> Recipe {
+        Recipe {
+            name: "data-unit".into(),
+            description: String::new(),
+            seed,
+            dataset: DatasetSpec {
+                family: Family::Sinusoid,
+                series: 12,
+                len: 24,
+                window: 2,
+                classes: 3,
+            },
+            queries: QuerySpec { count: 4, mix, k: 1 },
+            grid: Grid { threads: vec![1], shards: vec![1], clusters: vec![0] },
+            scenarios: vec![ScenarioKind::Knn],
+            stream: StreamSpec { samples: 200, hop: 1, threshold: 10.0 },
+            live: LiveSpec { inserts: 3, deletes: 1 },
+            oracle: OracleMode::Brute,
+        }
+    }
+
+    #[test]
+    fn materialization_is_a_pure_function_of_the_recipe() {
+        let a = materialize(&recipe(9, QueryMix::Mixed));
+        let b = materialize(&recipe(9, QueryMix::Mixed));
+        assert_eq!(a.train, b.train);
+        assert_eq!(a.queries, b.queries);
+        assert_eq!(a.stream, b.stream);
+        assert_eq!(a.donors, b.donors);
+        let c = materialize(&recipe(10, QueryMix::Mixed));
+        assert_ne!(a.train, c.train);
+    }
+
+    #[test]
+    fn query_mix_does_not_shift_the_corpus() {
+        let a = materialize(&recipe(9, QueryMix::Near));
+        let b = materialize(&recipe(9, QueryMix::Fresh));
+        assert_eq!(a.train, b.train);
+        assert_eq!(a.stream, b.stream);
+        assert_ne!(a.queries, b.queries);
+    }
+
+    #[test]
+    fn shapes_match_the_recipe() {
+        let r = recipe(9, QueryMix::Mixed);
+        let d = materialize(&r);
+        assert_eq!(d.train.len(), r.dataset.series);
+        assert!(d.train.iter().all(|s| s.len() == r.dataset.len));
+        assert_eq!(d.labels, vec![0, 1, 2, 0, 1, 2, 0, 1, 2, 0, 1, 2]);
+        assert_eq!(d.queries.len(), r.queries.count);
+        assert_eq!(d.stream.len(), r.stream.samples);
+        assert_eq!(d.donors.len(), r.live.inserts);
+    }
+}

@@ -1,0 +1,175 @@
+//! The regression gate: compare a fresh report against the checked-in
+//! baseline.
+//!
+//! This is the single successor to the old `benches/check_regression.rs`
+//! driver. Direction comes from each metric's `higher_is_better` flag;
+//! the allowed relative slack comes from the **baseline** metric's
+//! `tolerance` field when present (so noisy metrics opt into wider
+//! bands in one reviewed place), else [`DEFAULT_TOLERANCE`]. Metrics
+//! present on only one side are notes, not failures — adding a metric
+//! must not break CI, and a metric disappearing is surfaced without
+//! blocking until the baseline is re-recorded.
+
+use crate::report::Report;
+
+/// Relative slack when the baseline metric carries no tolerance.
+pub const DEFAULT_TOLERANCE: f64 = 0.20;
+
+/// One regression: a metric that moved past its tolerance in the bad
+/// direction.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Regression {
+    /// Metric id.
+    pub id: String,
+    /// Baseline value.
+    pub baseline: f64,
+    /// Current value.
+    pub current: f64,
+    /// The tolerance that was applied.
+    pub tolerance: f64,
+    /// Direction of the metric.
+    pub higher_is_better: bool,
+}
+
+impl std::fmt::Display for Regression {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let dir = if self.higher_is_better { "dropped" } else { "rose" };
+        write!(
+            f,
+            "{}: {} {:.4} -> {:.4} (tolerance {:.0}%)",
+            self.id,
+            dir,
+            self.baseline,
+            self.current,
+            self.tolerance * 100.0
+        )
+    }
+}
+
+/// Gate verdict: what was checked, what regressed, what was skipped.
+#[derive(Debug, Default)]
+pub struct GateOutcome {
+    /// Metrics compared against the baseline.
+    pub checked: usize,
+    /// Metrics past tolerance in the bad direction.
+    pub regressions: Vec<Regression>,
+    /// Non-fatal observations (missing metrics, empty baseline).
+    pub notes: Vec<String>,
+}
+
+impl GateOutcome {
+    /// True when nothing regressed.
+    pub fn passed(&self) -> bool {
+        self.regressions.is_empty()
+    }
+}
+
+/// Compare `current` against `baseline`.
+pub fn check(current: &Report, baseline: &Report) -> GateOutcome {
+    let mut out = GateOutcome::default();
+    if baseline.metrics.is_empty() {
+        out.notes.push("baseline has no metrics; gate passes trivially".to_string());
+        return out;
+    }
+    for base in &baseline.metrics {
+        let Some(cur) = current.metric(&base.id) else {
+            out.notes.push(format!("baseline metric `{}` missing from current report", base.id));
+            continue;
+        };
+        out.checked += 1;
+        let tolerance = base.tolerance.unwrap_or(DEFAULT_TOLERANCE);
+        // Relative to the baseline magnitude; a zero baseline gets an
+        // absolute band of `tolerance` so ratios that start at 0 can
+        // still move a little.
+        let slack = if base.value == 0.0 { tolerance } else { base.value.abs() * tolerance };
+        let bad = if base.higher_is_better {
+            cur.value < base.value - slack
+        } else {
+            cur.value > base.value + slack
+        };
+        if bad {
+            out.regressions.push(Regression {
+                id: base.id.clone(),
+                baseline: base.value,
+                current: cur.value,
+                tolerance,
+                higher_is_better: base.higher_is_better,
+            });
+        }
+    }
+    for cur in &current.metrics {
+        if baseline.metric(&cur.id).is_none() {
+            out.notes.push(format!("new metric `{}` has no baseline yet", cur.id));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::report::{Metric, Report, SCHEMA_VERSION};
+
+    fn report(metrics: Vec<Metric>) -> Report {
+        Report {
+            schema_version: SCHEMA_VERSION,
+            recipe: "gate-unit".into(),
+            seed: 0,
+            oracle_mode: "brute".into(),
+            oracle_checks: 0,
+            scenarios: vec![],
+            metrics,
+        }
+    }
+
+    #[test]
+    fn direction_and_default_tolerance() {
+        let base = report(vec![
+            Metric::lower("a/ns", 100.0, "ns"),
+            Metric::higher("a/rate", 0.5, "ratio"),
+        ]);
+        // +19% on lower-is-better and -19% on higher-is-better: inside
+        // the 20% default band.
+        let ok = report(vec![
+            Metric::lower("a/ns", 119.0, "ns"),
+            Metric::higher("a/rate", 0.405, "ratio"),
+        ]);
+        assert!(check(&ok, &base).passed());
+        // Past the band in the bad direction on both.
+        let bad = report(vec![
+            Metric::lower("a/ns", 121.0, "ns"),
+            Metric::higher("a/rate", 0.39, "ratio"),
+        ]);
+        let outcome = check(&bad, &base);
+        assert_eq!(outcome.regressions.len(), 2);
+        // Improvements never fail, however large.
+        let better = report(vec![
+            Metric::lower("a/ns", 1.0, "ns"),
+            Metric::higher("a/rate", 0.99, "ratio"),
+        ]);
+        assert!(check(&better, &base).passed());
+    }
+
+    #[test]
+    fn per_metric_tolerance_overrides_default() {
+        let base = report(vec![Metric::lower("a/ns", 100.0, "ns").with_tolerance(0.5)]);
+        let cur = report(vec![Metric::lower("a/ns", 149.0, "ns")]);
+        assert!(check(&cur, &base).passed());
+        let cur = report(vec![Metric::lower("a/ns", 151.0, "ns")]);
+        assert!(!check(&cur, &base).passed());
+    }
+
+    #[test]
+    fn missing_and_new_metrics_are_notes_not_failures() {
+        let base = report(vec![Metric::lower("gone/ns", 10.0, "ns")]);
+        let cur = report(vec![Metric::lower("new/ns", 10.0, "ns")]);
+        let outcome = check(&cur, &base);
+        assert!(outcome.passed());
+        assert_eq!(outcome.checked, 0);
+        assert_eq!(outcome.notes.len(), 2);
+        let empty = report(vec![]);
+        let outcome = check(&cur, &empty);
+        assert!(outcome.passed());
+        assert!(outcome.notes[0].contains("trivially"));
+    }
+}

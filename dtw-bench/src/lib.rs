@@ -1,0 +1,34 @@
+//! `dtw-bench`: recipe-driven scenario benchmarks for `dtw-bounds`,
+//! with built-in exactness oracles.
+//!
+//! The suite exists to answer two questions at once, for every change:
+//! *did it get slower?* and *is it still exact?* A TOML
+//! [recipe](crate::recipe) declares a synthetic workload (dataset
+//! family, query mix, a thread × shard × cluster grid) and a list of
+//! [scenarios](crate::scenario) — cold start, steady-state k-NN,
+//! batched screening, stream firehose, snapshot round-trip, and live
+//! mutation. The [runner](crate::runner) wraps every scenario in
+//! [oracles](crate::oracle) that hold each answer to **bit-equality**
+//! against an independent full-matrix DTW reference and check the
+//! prune-counter conservation identities, then emits one
+//! schema-versioned [report](crate::report) that the regression
+//! [gate](crate::gate) compares against a checked-in baseline.
+//!
+//! The `dtw-bench` binary fronts all of it:
+//!
+//! ```text
+//! dtw-bench run --recipe quick          # run, verify, report
+//! dtw-bench check --report bench-report.json
+//! dtw-bench recipes                     # list available recipes
+//! ```
+//!
+//! See `docs/benchmarks.md` for the full workflow.
+
+pub mod dataset;
+pub mod gate;
+pub mod oracle;
+pub mod recipe;
+pub mod report;
+pub mod runner;
+pub mod scenario;
+pub mod toml;

@@ -1,0 +1,197 @@
+//! The `dtw-bench` binary: run recipes, gate regressions, list recipes.
+//!
+//! Exit codes are part of the CI contract:
+//!
+//! | code | meaning |
+//! |------|---------|
+//! | 0    | everything passed |
+//! | 1    | usage / config / I/O error |
+//! | 2    | **oracle failure** — wrong answers; never warn-only |
+//! | 3    | perf regression past tolerance (0 instead when `DTWB_REGRESSION_WARN_ONLY` is set) |
+
+use std::fs;
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use dtw_bounds::cli::Args;
+
+use dtw_bench::gate;
+use dtw_bench::recipe::Recipe;
+use dtw_bench::report::{
+    default_baseline_path, default_report_path, recipes_dir, Report,
+};
+use dtw_bench::runner::{self, RunError};
+
+fn usage() -> &'static str {
+    "dtw-bench — recipe-driven benchmarks with exactness oracles\n\
+     \n\
+     USAGE:\n\
+       dtw-bench run [--recipe NAME|PATH] [--out PATH] [--baseline PATH]\n\
+       dtw-bench check [--report PATH] [--baseline PATH]\n\
+       dtw-bench recipes\n\
+     \n\
+     `run` executes the recipe's scenarios under the exactness oracles,\n\
+     writes the schema-versioned report (default: bench-report.json at\n\
+     the workspace root), then gates it against the baseline.\n\
+     `check` re-gates an existing report without re-running anything.\n\
+     Set DTWB_REGRESSION_WARN_ONLY=1 to report perf regressions without\n\
+     failing; oracle failures always fail."
+}
+
+/// `--recipe` accepts a bare name (resolved in `dtw-bench/recipes/`)
+/// or an explicit path (anything containing `/` or ending in `.toml`).
+fn recipe_path(arg: &str) -> PathBuf {
+    if arg.contains('/') || arg.ends_with(".toml") {
+        PathBuf::from(arg)
+    } else {
+        recipes_dir().join(format!("{arg}.toml"))
+    }
+}
+
+fn load_recipe(arg: &str) -> Result<Recipe, String> {
+    let path = recipe_path(arg);
+    let text = fs::read_to_string(&path).map_err(|e| format!("read {}: {e}", path.display()))?;
+    Recipe::parse(&text).map_err(|e| format!("{}: {e}", path.display()))
+}
+
+fn warn_only() -> bool {
+    std::env::var("DTWB_REGRESSION_WARN_ONLY").map_or(false, |v| !v.is_empty() && v != "0")
+}
+
+/// Gate `report` against the baseline at `path` (a missing baseline
+/// file gates trivially). Returns the exit code.
+fn run_gate(report: &Report, path: &PathBuf) -> ExitCode {
+    let baseline = if path.exists() {
+        match Report::load(path) {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!("dtw-bench: baseline {}: {e}", path.display());
+                return ExitCode::from(1);
+            }
+        }
+    } else {
+        println!("gate: no baseline at {} — passing trivially", path.display());
+        return ExitCode::SUCCESS;
+    };
+    let outcome = gate::check(report, &baseline);
+    for note in &outcome.notes {
+        println!("gate note: {note}");
+    }
+    println!("gate: {} metric(s) checked against {}", outcome.checked, path.display());
+    if outcome.passed() {
+        println!("gate: PASS");
+        return ExitCode::SUCCESS;
+    }
+    for r in &outcome.regressions {
+        eprintln!("gate REGRESSION: {r}");
+    }
+    if warn_only() {
+        eprintln!(
+            "gate: {} regression(s) — WARN ONLY (DTWB_REGRESSION_WARN_ONLY set)",
+            outcome.regressions.len()
+        );
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("gate: FAIL ({} regression(s))", outcome.regressions.len());
+        ExitCode::from(3)
+    }
+}
+
+fn cmd_run(args: &Args) -> ExitCode {
+    let recipe = match load_recipe(&args.str_or("recipe", "quick")) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("dtw-bench: {e}");
+            return ExitCode::from(1);
+        }
+    };
+    println!(
+        "recipe `{}`: {} series of len {} ({}), {} scenario(s), {} grid point(s), oracle {}",
+        recipe.name,
+        recipe.dataset.series,
+        recipe.dataset.len,
+        recipe.dataset.family.name(),
+        recipe.scenarios.len(),
+        recipe.grid.points().len(),
+        recipe.oracle.name(),
+    );
+    let report = match runner::run(&recipe) {
+        Ok(r) => r,
+        Err(RunError::Oracle(e)) => {
+            eprintln!("dtw-bench: ORACLE FAILURE: {e}");
+            return ExitCode::from(2);
+        }
+        Err(RunError::Other(e)) => {
+            eprintln!("dtw-bench: {e}");
+            return ExitCode::from(1);
+        }
+    };
+    println!(
+        "ok: {} oracle check(s) passed, {} metric(s) collected",
+        report.oracle_checks,
+        report.metrics.len()
+    );
+    let out = args.get("out").map(PathBuf::from).unwrap_or_else(default_report_path);
+    if let Err(e) = report.save(&out) {
+        eprintln!("dtw-bench: write {}: {e}", out.display());
+        return ExitCode::from(1);
+    }
+    println!("report: {}", out.display());
+    let baseline = args.get("baseline").map(PathBuf::from).unwrap_or_else(default_baseline_path);
+    run_gate(&report, &baseline)
+}
+
+fn cmd_check(args: &Args) -> ExitCode {
+    let path = args.get("report").map(PathBuf::from).unwrap_or_else(default_report_path);
+    let report = match Report::load(&path) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("dtw-bench: report {}: {e}", path.display());
+            return ExitCode::from(1);
+        }
+    };
+    let baseline = args.get("baseline").map(PathBuf::from).unwrap_or_else(default_baseline_path);
+    run_gate(&report, &baseline)
+}
+
+fn cmd_recipes() -> ExitCode {
+    let dir = recipes_dir();
+    let entries = match fs::read_dir(&dir) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("dtw-bench: read {}: {e}", dir.display());
+            return ExitCode::from(1);
+        }
+    };
+    let mut names: Vec<String> = entries
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.extension().map_or(false, |x| x == "toml"))
+        .filter_map(|p| p.file_stem().map(|s| s.to_string_lossy().into_owned()))
+        .collect();
+    names.sort();
+    for name in names {
+        match load_recipe(&name) {
+            Ok(r) => println!("{name}: {}", r.description),
+            Err(e) => println!("{name}: INVALID ({e})"),
+        }
+    }
+    ExitCode::SUCCESS
+}
+
+fn main() -> ExitCode {
+    let args = Args::from_env();
+    match args.command.as_deref() {
+        Some("run") => cmd_run(&args),
+        Some("check") => cmd_check(&args),
+        Some("recipes") => cmd_recipes(),
+        Some("help") | None => {
+            println!("{}", usage());
+            ExitCode::SUCCESS
+        }
+        Some(other) => {
+            eprintln!("dtw-bench: unknown command `{other}`\n\n{}", usage());
+            ExitCode::from(1)
+        }
+    }
+}

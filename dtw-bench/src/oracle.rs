@@ -1,0 +1,295 @@
+//! Exactness oracles: independent reference answers and conservation
+//! identities.
+//!
+//! The reference path deliberately shares no code with the index: it
+//! runs the plain full-matrix DP kernel (`dtw::<Squared>`, no cutoff,
+//! no bounds, no cascade) over every candidate and sorts by the same
+//! `(distance, index)` total order the index's `KnnSet` maintains. The
+//! paper's lower bounds are admissible and the kernels' early-abandon
+//! cutoffs only skip work that cannot change surviving results, so any
+//! engine configuration must reproduce the reference answers **bit for
+//! bit** — a `1e-9`-style tolerance would paper over exactly the class
+//! of bug this suite exists to catch.
+
+use dtw_bounds::delta::Squared;
+use dtw_bounds::dtw::dtw;
+use dtw_bounds::search::nn::SearchStats;
+
+/// Result triple the oracles compare on: `(index, label, distance)`.
+pub type Triple = (usize, u32, f64);
+
+/// A stream match quadruple: `(window start, index, label, distance)`.
+pub type StreamTriple = (u64, usize, u32, f64);
+
+/// An oracle failure: which check tripped, and the mismatch.
+#[derive(Debug, Clone)]
+pub struct OracleError {
+    /// Which check failed (e.g. `knn bit-equality`).
+    pub check: String,
+    /// Context: scenario, grid tag, query id.
+    pub context: String,
+    /// The mismatch, expected vs. got.
+    pub detail: String,
+}
+
+impl std::fmt::Display for OracleError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} failed at {}: {}", self.check, self.context, self.detail)
+    }
+}
+
+impl std::error::Error for OracleError {}
+
+/// Counts every individual assertion that passed, so the report proves
+/// the oracles actually ran.
+#[derive(Debug, Default)]
+pub struct Oracle {
+    /// Total assertions checked (bit-equality triples + identities).
+    pub checks: u64,
+}
+
+impl Oracle {
+    fn fail(
+        &self,
+        check: &str,
+        context: &str,
+        detail: String,
+    ) -> Result<(), OracleError> {
+        Err(OracleError {
+            check: check.to_string(),
+            context: context.to_string(),
+            detail,
+        })
+    }
+
+    /// Assert two result lists are identical, including f64 bits.
+    pub fn check_triples(
+        &mut self,
+        context: &str,
+        got: &[Triple],
+        want: &[Triple],
+    ) -> Result<(), OracleError> {
+        self.checks += 1;
+        if got.len() != want.len() {
+            return self.fail(
+                "knn bit-equality",
+                context,
+                format!("result count: got {}, want {}", got.len(), want.len()),
+            );
+        }
+        for (i, (g, w)) in got.iter().zip(want).enumerate() {
+            if g.0 != w.0 || g.1 != w.1 || g.2.to_bits() != w.2.to_bits() {
+                return self.fail(
+                    "knn bit-equality",
+                    context,
+                    format!("rank {i}: got {g:?}, want {w:?}"),
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Assert two stream match lists are identical, including f64 bits.
+    pub fn check_stream(
+        &mut self,
+        context: &str,
+        got: &[StreamTriple],
+        want: &[StreamTriple],
+    ) -> Result<(), OracleError> {
+        self.checks += 1;
+        if got.len() != want.len() {
+            return self.fail(
+                "stream bit-equality",
+                context,
+                format!("match count: got {}, want {}", got.len(), want.len()),
+            );
+        }
+        for (i, (g, w)) in got.iter().zip(want).enumerate() {
+            if g.0 != w.0 || g.1 != w.1 || g.2 != w.2 || g.3.to_bits() != w.3.to_bits() {
+                return self.fail(
+                    "stream bit-equality",
+                    context,
+                    format!("match {i}: got {g:?}, want {w:?}"),
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Prune-counter conservation for a frozen-index k-NN query: every
+    /// candidate is either pruned (by a bound or a cluster) or costed.
+    pub fn check_knn_conservation(
+        &mut self,
+        context: &str,
+        stats: &SearchStats,
+        candidates: usize,
+    ) -> Result<(), OracleError> {
+        self.checks += 1;
+        let accounted = stats.dtw_calls + stats.pruned + stats.cluster_members_pruned;
+        if accounted != candidates {
+            return self.fail(
+                "knn prune conservation",
+                context,
+                format!(
+                    "dtw_calls {} + pruned {} + cluster_members_pruned {} = {} != candidates {}",
+                    stats.dtw_calls, stats.pruned, stats.cluster_members_pruned, accounted,
+                    candidates
+                ),
+            );
+        }
+        Ok(())
+    }
+
+    /// Delta-shard conservation for a live query: every scanned delta
+    /// row is either pruned or costed.
+    pub fn check_delta_conservation(
+        &mut self,
+        context: &str,
+        stats: &SearchStats,
+    ) -> Result<(), OracleError> {
+        self.checks += 1;
+        if stats.delta_scanned != stats.delta_pruned + stats.delta_dtw {
+            return self.fail(
+                "delta prune conservation",
+                context,
+                format!(
+                    "delta_scanned {} != delta_pruned {} + delta_dtw {}",
+                    stats.delta_scanned, stats.delta_pruned, stats.delta_dtw
+                ),
+            );
+        }
+        Ok(())
+    }
+
+    /// A named scalar identity (`got == want`), used for the stream
+    /// cascade's per-stage conservation chain.
+    pub fn check_identity(
+        &mut self,
+        context: &str,
+        what: &str,
+        got: u64,
+        want: u64,
+    ) -> Result<(), OracleError> {
+        self.checks += 1;
+        if got != want {
+            return self.fail(
+                "stream conservation",
+                context,
+                format!("{what}: got {got}, want {want}"),
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Reference k-NN: full-matrix DTW against every candidate, sorted by
+/// the engine's `(distance, index)` total order, truncated to `k`.
+pub fn reference_knn(
+    train: &[Vec<f64>],
+    labels: &[u32],
+    w: usize,
+    query: &[f64],
+    k: usize,
+) -> Vec<Triple> {
+    let mut all: Vec<Triple> = train
+        .iter()
+        .enumerate()
+        .map(|(i, s)| (i, labels[i], dtw::<Squared>(query, s, w)))
+        .collect();
+    all.sort_by(|a, b| {
+        a.2.partial_cmp(&b.2).expect("DTW distances are finite").then(a.0.cmp(&b.0))
+    });
+    all.truncate(k);
+    all
+}
+
+/// Reference subsequence scan: for every hop-aligned window, the
+/// nearest pattern by full-matrix DTW (ties to the lower index, the
+/// engine's order), reported iff strictly under the threshold.
+pub fn reference_stream(
+    train: &[Vec<f64>],
+    labels: &[u32],
+    w: usize,
+    samples: &[f64],
+    len: usize,
+    hop: usize,
+    threshold: f64,
+) -> Vec<StreamTriple> {
+    let mut out = Vec::new();
+    let mut start = 0usize;
+    while start + len <= samples.len() {
+        if start % hop == 0 {
+            let window = &samples[start..start + len];
+            let mut best: Option<(usize, f64)> = None;
+            for (i, s) in train.iter().enumerate() {
+                let d = dtw::<Squared>(window, s, w);
+                if best.map_or(true, |(_, bd)| d < bd) {
+                    best = Some((i, d));
+                }
+            }
+            if let Some((i, d)) = best {
+                if d < threshold {
+                    out.push((start as u64, i, labels[i], d));
+                }
+            }
+        }
+        start += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use dtw_bounds::data::rng::Rng;
+    use dtw_bounds::data::synthetic::sinusoid_pattern;
+
+    #[test]
+    fn reference_knn_orders_by_distance_then_index() {
+        let mut rng = Rng::seeded(11);
+        let train: Vec<Vec<f64>> = (0..6).map(|_| sinusoid_pattern(&mut rng, 20)).collect();
+        let labels = vec![0u32, 1, 0, 1, 0, 1];
+        // Duplicate series 0 at index 3: identical distances must
+        // tie-break to the lower index.
+        let mut train = train;
+        train[3] = train[0].clone();
+        let q = sinusoid_pattern(&mut rng, 20);
+        let got = reference_knn(&train, &labels, 2, &q, 6);
+        for pair in got.windows(2) {
+            assert!(
+                pair[0].2 < pair[1].2 || (pair[0].2 == pair[1].2 && pair[0].0 < pair[1].0),
+                "order violated: {pair:?}"
+            );
+        }
+        let dup_ranks: Vec<usize> =
+            got.iter().filter(|t| t.0 == 0 || t.0 == 3).map(|t| t.0).collect();
+        assert_eq!(dup_ranks, vec![0, 3]);
+    }
+
+    #[test]
+    fn oracle_counts_checks_and_reports_mismatches() {
+        let mut o = Oracle::default();
+        let a = vec![(0usize, 0u32, 1.0f64)];
+        o.check_triples("ctx", &a, &a).unwrap();
+        assert_eq!(o.checks, 1);
+        let b = vec![(0usize, 0u32, 1.0f64 + f64::EPSILON)];
+        let e = o.check_triples("ctx", &a, &b).unwrap_err();
+        assert!(e.to_string().contains("ctx"), "{e}");
+        assert_eq!(o.checks, 2);
+    }
+
+    #[test]
+    fn reference_stream_respects_hop_and_strict_threshold() {
+        let mut rng = Rng::seeded(5);
+        let train: Vec<Vec<f64>> = (0..3).map(|_| sinusoid_pattern(&mut rng, 16)).collect();
+        let labels = vec![0u32, 1, 2];
+        let samples: Vec<f64> = (0..64).map(|i| (i as f64 * 0.3).sin()).collect();
+        let hits = reference_stream(&train, &labels, 2, &samples, 16, 4, 1e9);
+        // Permissive threshold: every hop-aligned window matches.
+        let expected_windows = (64 - 16) / 4 + 1;
+        assert_eq!(hits.len(), expected_windows);
+        assert!(hits.iter().all(|h| h.0 % 4 == 0));
+        let none = reference_stream(&train, &labels, 2, &samples, 16, 4, 0.0);
+        assert!(none.is_empty());
+    }
+}

@@ -1,0 +1,917 @@
+//! Declarative bench recipes: what to generate, which scenarios to run,
+//! and the thread × shard × cluster grid to run them over.
+//!
+//! A recipe is a TOML file (see `dtw-bench/recipes/`) parsed by the
+//! minimal parser in [`crate::toml`]. Parsing is **strict**: unknown
+//! tables or keys, missing keys, wrong value types and degenerate grids
+//! are all rejected with a typed [`RecipeError`] carrying the source
+//! line. [`Recipe::to_toml_string`] emits the canonical form, and
+//! `parse(to_toml_string(r)) == r` round-trips every field (pinned by
+//! `tests/recipe.rs`).
+
+use std::fmt;
+
+use crate::toml::{Doc, Entry, Table, Value};
+
+/// Synthetic dataset family (generators live in `dtw_bounds::data::synthetic`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Family {
+    /// Smooth sums of sinusoids — the envelope-friendly easy case.
+    Sinusoid,
+    /// Gaussian random walks — unstructured, window-limited pruning.
+    RandomWalk,
+    /// Worst-case-warping oscillators — envelopes go slack, the stress
+    /// case for prune-rate claims.
+    Adversarial,
+}
+
+impl Family {
+    /// Canonical (re-parseable) name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Family::Sinusoid => "sinusoid",
+            Family::RandomWalk => "random-walk",
+            Family::Adversarial => "adversarial",
+        }
+    }
+
+    fn parse(s: &str) -> Option<Family> {
+        match s {
+            "sinusoid" => Some(Family::Sinusoid),
+            "random-walk" => Some(Family::RandomWalk),
+            "adversarial" => Some(Family::Adversarial),
+            _ => None,
+        }
+    }
+}
+
+/// How queries relate to the indexed corpus.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QueryMix {
+    /// Perturbed copies of indexed series — the prunable regime.
+    Near,
+    /// Fresh draws from the family — no planted neighbor.
+    Fresh,
+    /// Alternating near/fresh.
+    Mixed,
+}
+
+impl QueryMix {
+    /// Canonical (re-parseable) name.
+    pub fn name(self) -> &'static str {
+        match self {
+            QueryMix::Near => "near",
+            QueryMix::Fresh => "fresh",
+            QueryMix::Mixed => "mixed",
+        }
+    }
+
+    fn parse(s: &str) -> Option<QueryMix> {
+        match s {
+            "near" => Some(QueryMix::Near),
+            "fresh" => Some(QueryMix::Fresh),
+            "mixed" => Some(QueryMix::Mixed),
+            _ => None,
+        }
+    }
+}
+
+/// How the exactness oracle derives its reference answers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OracleMode {
+    /// Independent full-matrix DTW brute force (no index code on the
+    /// reference path). Affordable for quick recipes; quadratic in the
+    /// corpus for streams.
+    Brute,
+    /// Serial flat single-shard index as the reference; every other grid
+    /// point must agree with it bit-for-bit. For full-scale recipes
+    /// where the stream brute force is intractable.
+    Cross,
+}
+
+impl OracleMode {
+    /// Canonical (re-parseable) name.
+    pub fn name(self) -> &'static str {
+        match self {
+            OracleMode::Brute => "brute",
+            OracleMode::Cross => "cross",
+        }
+    }
+
+    fn parse(s: &str) -> Option<OracleMode> {
+        match s {
+            "brute" => Some(OracleMode::Brute),
+            "cross" => Some(OracleMode::Cross),
+            _ => None,
+        }
+    }
+}
+
+/// One benchmark scenario.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScenarioKind {
+    /// Cold start: rebuild-from-raw vs. snapshot load, first query served.
+    ColdStart,
+    /// Steady-state scalar k-NN over the grid.
+    Knn,
+    /// Batched screening (the `SortedPrecomputed` prefilter path).
+    Batched,
+    /// Stream firehose: subsequence threshold scan over the grid.
+    Stream,
+    /// Snapshot save/load round-trip integrity.
+    Snapshot,
+    /// Mixed query+stream over live mutation (insert/delete/compact
+    /// under load), pinned to a cold rebuild.
+    Live,
+}
+
+impl ScenarioKind {
+    /// Every scenario, in canonical execution order.
+    pub const ALL: [ScenarioKind; 6] = [
+        ScenarioKind::ColdStart,
+        ScenarioKind::Knn,
+        ScenarioKind::Batched,
+        ScenarioKind::Stream,
+        ScenarioKind::Snapshot,
+        ScenarioKind::Live,
+    ];
+
+    /// Canonical (re-parseable) name.
+    pub fn name(self) -> &'static str {
+        match self {
+            ScenarioKind::ColdStart => "cold-start",
+            ScenarioKind::Knn => "knn",
+            ScenarioKind::Batched => "batched",
+            ScenarioKind::Stream => "stream",
+            ScenarioKind::Snapshot => "snapshot",
+            ScenarioKind::Live => "live",
+        }
+    }
+
+    fn parse(s: &str) -> Option<ScenarioKind> {
+        Self::ALL.iter().copied().find(|k| k.name() == s)
+    }
+}
+
+impl fmt::Display for ScenarioKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// `[dataset]`: what to generate and index.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DatasetSpec {
+    /// Generator family.
+    pub family: Family,
+    /// Indexed series count.
+    pub series: usize,
+    /// Series length ℓ.
+    pub len: usize,
+    /// Warping window `w` (Sakoe–Chiba radius).
+    pub window: usize,
+    /// Label classes (round-robin over series).
+    pub classes: usize,
+}
+
+/// `[queries]`: the query workload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuerySpec {
+    /// Number of queries.
+    pub count: usize,
+    /// How queries relate to the corpus.
+    pub mix: QueryMix,
+    /// Neighbors per query.
+    pub k: usize,
+}
+
+/// One grid point: a (threads, shards, clusters) configuration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GridPoint {
+    /// Search worker threads.
+    pub threads: usize,
+    /// Contiguous candidate shards.
+    pub shards: usize,
+    /// Pivot clusters per shard (0 = off).
+    pub clusters: usize,
+}
+
+impl GridPoint {
+    /// Metric-id tag, e.g. `t2.s4.c8`.
+    pub fn tag(&self) -> String {
+        format!("t{}.s{}.c{}", self.threads, self.shards, self.clusters)
+    }
+}
+
+/// `[grid]`: the thread × shard × cluster sweep.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Grid {
+    /// Thread counts to sweep.
+    pub threads: Vec<usize>,
+    /// Shard counts to sweep.
+    pub shards: Vec<usize>,
+    /// Cluster counts to sweep (0 = clustering off).
+    pub clusters: Vec<usize>,
+}
+
+impl Grid {
+    /// The full cartesian product, threads-major.
+    pub fn points(&self) -> Vec<GridPoint> {
+        let mut out = Vec::new();
+        for &threads in &self.threads {
+            for &shards in &self.shards {
+                for &clusters in &self.clusters {
+                    out.push(GridPoint { threads, shards, clusters });
+                }
+            }
+        }
+        out
+    }
+
+    /// The serial flat reference point every sweep is compared against.
+    pub fn reference_point() -> GridPoint {
+        GridPoint { threads: 1, shards: 1, clusters: 0 }
+    }
+
+    /// The most aggressive configuration — used by the scenarios that
+    /// run at one representative point instead of the full sweep.
+    pub fn representative_point(&self) -> GridPoint {
+        GridPoint {
+            threads: self.threads.iter().copied().max().unwrap_or(1),
+            shards: self.shards.iter().copied().max().unwrap_or(1),
+            clusters: self.clusters.iter().copied().max().unwrap_or(0),
+        }
+    }
+}
+
+/// `[stream]`: the firehose workload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamSpec {
+    /// Stream length in samples.
+    pub samples: usize,
+    /// Stride between evaluated window starts.
+    pub hop: usize,
+    /// Match threshold τ (squared-delta DTW distance).
+    pub threshold: f64,
+}
+
+/// `[live]`: the mutation workload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LiveSpec {
+    /// Insertions to apply.
+    pub inserts: usize,
+    /// Deletions to apply.
+    pub deletes: usize,
+}
+
+/// A fully-parsed, validated recipe.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Recipe {
+    /// Recipe name (used in the report and in metric provenance).
+    pub name: String,
+    /// One-line description.
+    pub description: String,
+    /// Master seed: the whole run is a pure function of the recipe.
+    pub seed: u64,
+    /// What to generate and index.
+    pub dataset: DatasetSpec,
+    /// The query workload.
+    pub queries: QuerySpec,
+    /// The thread × shard × cluster sweep.
+    pub grid: Grid,
+    /// Scenarios to run, in order.
+    pub scenarios: Vec<ScenarioKind>,
+    /// The firehose workload.
+    pub stream: StreamSpec,
+    /// The mutation workload.
+    pub live: LiveSpec,
+    /// How reference answers are derived.
+    pub oracle: OracleMode,
+}
+
+/// Typed recipe errors — each names the table/key and source line.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RecipeError {
+    /// The TOML layer rejected the file.
+    Toml {
+        /// 1-based source line.
+        line: usize,
+        /// The parser's message.
+        message: String,
+    },
+    /// A table this schema does not define.
+    UnknownTable {
+        /// The offending table name.
+        table: String,
+        /// 1-based source line of its header.
+        line: usize,
+    },
+    /// A key this schema does not define (also raised for keys outside
+    /// any table).
+    UnknownKey {
+        /// The table the key appeared in (empty = root).
+        table: String,
+        /// The offending key.
+        key: String,
+        /// 1-based source line.
+        line: usize,
+    },
+    /// A required key (or its whole table) is absent.
+    MissingKey {
+        /// The table the key belongs to.
+        table: String,
+        /// The missing key.
+        key: String,
+    },
+    /// A key is present but its value is unusable.
+    InvalidValue {
+        /// The table the key appeared in.
+        table: String,
+        /// The key.
+        key: String,
+        /// 1-based source line.
+        line: usize,
+        /// Why the value was rejected.
+        message: String,
+    },
+    /// The grid is degenerate (empty axis, zero counts, or counts the
+    /// dataset cannot satisfy).
+    InvalidGrid {
+        /// Why the grid was rejected.
+        message: String,
+    },
+}
+
+impl fmt::Display for RecipeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RecipeError::Toml { line, message } => write!(f, "toml: line {line}: {message}"),
+            RecipeError::UnknownTable { table, line } => {
+                write!(f, "line {line}: unknown table [{table}]")
+            }
+            RecipeError::UnknownKey { table, key, line } => {
+                if table.is_empty() {
+                    write!(f, "line {line}: key `{key}` outside any table")
+                } else {
+                    write!(f, "line {line}: unknown key `{key}` in [{table}]")
+                }
+            }
+            RecipeError::MissingKey { table, key } => {
+                write!(f, "missing key `{key}` in [{table}]")
+            }
+            RecipeError::InvalidValue { table, key, line, message } => {
+                write!(f, "line {line}: [{table}] {key}: {message}")
+            }
+            RecipeError::InvalidGrid { message } => write!(f, "invalid grid: {message}"),
+        }
+    }
+}
+
+impl std::error::Error for RecipeError {}
+
+// ---- value extraction helpers -----------------------------------------
+
+fn bad(t: &str, e: &Entry, message: impl Into<String>) -> RecipeError {
+    RecipeError::InvalidValue {
+        table: t.to_string(),
+        key: e.key.clone(),
+        line: e.line,
+        message: message.into(),
+    }
+}
+
+fn as_usize(t: &str, e: &Entry) -> Result<usize, RecipeError> {
+    match e.value {
+        Value::Int(i) if i >= 0 => Ok(i as usize),
+        Value::Int(i) => Err(bad(t, e, format!("expected a non-negative integer, got {i}"))),
+        ref v => Err(bad(t, e, format!("expected an integer, got {}", v.type_name()))),
+    }
+}
+
+fn as_u64(t: &str, e: &Entry) -> Result<u64, RecipeError> {
+    match e.value {
+        Value::Int(i) if i >= 0 => Ok(i as u64),
+        Value::Int(i) => Err(bad(t, e, format!("expected a non-negative integer, got {i}"))),
+        ref v => Err(bad(t, e, format!("expected an integer, got {}", v.type_name()))),
+    }
+}
+
+fn as_f64(t: &str, e: &Entry) -> Result<f64, RecipeError> {
+    match e.value {
+        Value::Float(f) => Ok(f),
+        Value::Int(i) => Ok(i as f64),
+        ref v => Err(bad(t, e, format!("expected a number, got {}", v.type_name()))),
+    }
+}
+
+fn as_str<'a>(t: &str, e: &'a Entry) -> Result<&'a str, RecipeError> {
+    match e.value {
+        Value::Str(ref s) => Ok(s.as_str()),
+        ref v => Err(bad(t, e, format!("expected a string, got {}", v.type_name()))),
+    }
+}
+
+fn as_usize_list(t: &str, e: &Entry) -> Result<Vec<usize>, RecipeError> {
+    let items = match e.value {
+        Value::Array(ref items) => items,
+        ref v => {
+            return Err(bad(t, e, format!("expected an array of integers, got {}", v.type_name())))
+        }
+    };
+    let mut out = Vec::with_capacity(items.len());
+    for item in items {
+        match *item {
+            Value::Int(i) if i >= 0 => out.push(i as usize),
+            ref v => {
+                return Err(bad(
+                    t,
+                    e,
+                    format!("expected non-negative integers, got {}", v.type_name()),
+                ))
+            }
+        }
+    }
+    Ok(out)
+}
+
+fn as_str_list(t: &str, e: &Entry) -> Result<Vec<String>, RecipeError> {
+    let items = match e.value {
+        Value::Array(ref items) => items,
+        ref v => {
+            return Err(bad(t, e, format!("expected an array of strings, got {}", v.type_name())))
+        }
+    };
+    let mut out = Vec::with_capacity(items.len());
+    for item in items {
+        match *item {
+            Value::Str(ref s) => out.push(s.clone()),
+            ref v => return Err(bad(t, e, format!("expected strings, got {}", v.type_name()))),
+        }
+    }
+    Ok(out)
+}
+
+fn missing(table: &str, key: &str) -> RecipeError {
+    RecipeError::MissingKey { table: table.to_string(), key: key.to_string() }
+}
+
+fn require<T>(opt: Option<T>, table: &str, key: &str) -> Result<T, RecipeError> {
+    opt.ok_or_else(|| missing(table, key))
+}
+
+/// The tables this schema defines, in canonical emit order.
+const TABLES: [&str; 8] =
+    ["recipe", "dataset", "queries", "grid", "scenarios", "stream", "live", "oracle"];
+
+impl Recipe {
+    /// Parse and validate a recipe from TOML text.
+    pub fn parse(text: &str) -> Result<Recipe, RecipeError> {
+        let doc = Doc::parse(text)
+            .map_err(|e| RecipeError::Toml { line: e.line, message: e.message })?;
+
+        // Reject unknown/root tables up front so typos fail loudly.
+        for table in &doc.tables {
+            if table.name.is_empty() {
+                let e = &table.entries[0];
+                return Err(RecipeError::UnknownKey {
+                    table: String::new(),
+                    key: e.key.clone(),
+                    line: e.line,
+                });
+            }
+            if !TABLES.contains(&table.name.as_str()) {
+                return Err(RecipeError::UnknownTable {
+                    table: table.name.clone(),
+                    line: table.line,
+                });
+            }
+        }
+        let get = |name: &str| -> Result<&Table, RecipeError> {
+            doc.table(name).ok_or_else(|| missing(name, "*"))
+        };
+
+        // [recipe]
+        let t = get("recipe")?;
+        let (mut name, mut description, mut seed) = (None, None, None);
+        for e in &t.entries {
+            match e.key.as_str() {
+                "name" => name = Some(as_str("recipe", e)?.to_string()),
+                "description" => description = Some(as_str("recipe", e)?.to_string()),
+                "seed" => seed = Some(as_u64("recipe", e)?),
+                _ => {
+                    return Err(RecipeError::UnknownKey {
+                        table: "recipe".into(),
+                        key: e.key.clone(),
+                        line: e.line,
+                    })
+                }
+            }
+        }
+        let name = require(name, "recipe", "name")?;
+        let description = description.unwrap_or_default();
+        let seed = require(seed, "recipe", "seed")?;
+
+        // [dataset]
+        let t = get("dataset")?;
+        let (mut family, mut series, mut len, mut window, mut classes) =
+            (None, None, None, None, None);
+        for e in &t.entries {
+            match e.key.as_str() {
+                "family" => {
+                    let s = as_str("dataset", e)?;
+                    family = Some(Family::parse(s).ok_or_else(|| {
+                        bad("dataset", e, format!("unknown family `{s}` (sinusoid | random-walk | adversarial)"))
+                    })?);
+                }
+                "series" => series = Some(as_usize("dataset", e)?),
+                "len" => len = Some(as_usize("dataset", e)?),
+                "window" => window = Some(as_usize("dataset", e)?),
+                "classes" => classes = Some(as_usize("dataset", e)?),
+                _ => {
+                    return Err(RecipeError::UnknownKey {
+                        table: "dataset".into(),
+                        key: e.key.clone(),
+                        line: e.line,
+                    })
+                }
+            }
+        }
+        let dataset = DatasetSpec {
+            family: require(family, "dataset", "family")?,
+            series: require(series, "dataset", "series")?,
+            len: require(len, "dataset", "len")?,
+            window: require(window, "dataset", "window")?,
+            classes: require(classes, "dataset", "classes")?,
+        };
+
+        // [queries]
+        let t = get("queries")?;
+        let (mut count, mut mix, mut k) = (None, None, None);
+        for e in &t.entries {
+            match e.key.as_str() {
+                "count" => count = Some(as_usize("queries", e)?),
+                "mix" => {
+                    let s = as_str("queries", e)?;
+                    mix = Some(QueryMix::parse(s).ok_or_else(|| {
+                        bad("queries", e, format!("unknown mix `{s}` (near | fresh | mixed)"))
+                    })?);
+                }
+                "k" => k = Some(as_usize("queries", e)?),
+                _ => {
+                    return Err(RecipeError::UnknownKey {
+                        table: "queries".into(),
+                        key: e.key.clone(),
+                        line: e.line,
+                    })
+                }
+            }
+        }
+        let queries = QuerySpec {
+            count: require(count, "queries", "count")?,
+            mix: require(mix, "queries", "mix")?,
+            k: require(k, "queries", "k")?,
+        };
+
+        // [grid]
+        let t = get("grid")?;
+        let (mut threads, mut shards, mut clusters) = (None, None, None);
+        for e in &t.entries {
+            match e.key.as_str() {
+                "threads" => threads = Some(as_usize_list("grid", e)?),
+                "shards" => shards = Some(as_usize_list("grid", e)?),
+                "clusters" => clusters = Some(as_usize_list("grid", e)?),
+                _ => {
+                    return Err(RecipeError::UnknownKey {
+                        table: "grid".into(),
+                        key: e.key.clone(),
+                        line: e.line,
+                    })
+                }
+            }
+        }
+        let grid = Grid {
+            threads: require(threads, "grid", "threads")?,
+            shards: require(shards, "grid", "shards")?,
+            clusters: require(clusters, "grid", "clusters")?,
+        };
+
+        // [scenarios]
+        let t = get("scenarios")?;
+        let mut run = None;
+        for e in &t.entries {
+            match e.key.as_str() {
+                "run" => {
+                    let names = as_str_list("scenarios", e)?;
+                    let mut kinds = Vec::with_capacity(names.len());
+                    for n in &names {
+                        let kind = ScenarioKind::parse(n).ok_or_else(|| {
+                            bad("scenarios", e, format!("unknown scenario `{n}`"))
+                        })?;
+                        if kinds.contains(&kind) {
+                            return Err(bad(
+                                "scenarios",
+                                e,
+                                format!("scenario `{n}` listed twice"),
+                            ));
+                        }
+                        kinds.push(kind);
+                    }
+                    run = Some(kinds);
+                }
+                _ => {
+                    return Err(RecipeError::UnknownKey {
+                        table: "scenarios".into(),
+                        key: e.key.clone(),
+                        line: e.line,
+                    })
+                }
+            }
+        }
+        let scenarios = require(run, "scenarios", "run")?;
+
+        // [stream]
+        let t = get("stream")?;
+        let (mut samples, mut hop, mut threshold) = (None, None, None);
+        for e in &t.entries {
+            match e.key.as_str() {
+                "samples" => samples = Some(as_usize("stream", e)?),
+                "hop" => hop = Some(as_usize("stream", e)?),
+                "threshold" => threshold = Some(as_f64("stream", e)?),
+                _ => {
+                    return Err(RecipeError::UnknownKey {
+                        table: "stream".into(),
+                        key: e.key.clone(),
+                        line: e.line,
+                    })
+                }
+            }
+        }
+        let stream = StreamSpec {
+            samples: require(samples, "stream", "samples")?,
+            hop: require(hop, "stream", "hop")?,
+            threshold: require(threshold, "stream", "threshold")?,
+        };
+
+        // [live]
+        let t = get("live")?;
+        let (mut inserts, mut deletes) = (None, None);
+        for e in &t.entries {
+            match e.key.as_str() {
+                "inserts" => inserts = Some(as_usize("live", e)?),
+                "deletes" => deletes = Some(as_usize("live", e)?),
+                _ => {
+                    return Err(RecipeError::UnknownKey {
+                        table: "live".into(),
+                        key: e.key.clone(),
+                        line: e.line,
+                    })
+                }
+            }
+        }
+        let live = LiveSpec {
+            inserts: require(inserts, "live", "inserts")?,
+            deletes: require(deletes, "live", "deletes")?,
+        };
+
+        // [oracle]
+        let t = get("oracle")?;
+        let mut mode = None;
+        for e in &t.entries {
+            match e.key.as_str() {
+                "mode" => {
+                    let s = as_str("oracle", e)?;
+                    mode = Some(OracleMode::parse(s).ok_or_else(|| {
+                        bad("oracle", e, format!("unknown oracle mode `{s}` (brute | cross)"))
+                    })?);
+                }
+                _ => {
+                    return Err(RecipeError::UnknownKey {
+                        table: "oracle".into(),
+                        key: e.key.clone(),
+                        line: e.line,
+                    })
+                }
+            }
+        }
+        let oracle = require(mode, "oracle", "mode")?;
+
+        let recipe = Recipe {
+            name,
+            description,
+            seed,
+            dataset,
+            queries,
+            grid,
+            scenarios,
+            stream,
+            live,
+            oracle,
+        };
+        recipe.validate()?;
+        Ok(recipe)
+    }
+
+    /// Cross-field validation (called by [`Recipe::parse`]).
+    pub fn validate(&self) -> Result<(), RecipeError> {
+        let grid_err = |message: String| Err(RecipeError::InvalidGrid { message });
+        let d = &self.dataset;
+        if d.series < 2 {
+            return grid_err(format!("dataset.series = {} (need at least 2)", d.series));
+        }
+        if d.len < 8 {
+            return grid_err(format!("dataset.len = {} (need at least 8)", d.len));
+        }
+        if d.window == 0 || d.window >= d.len {
+            return grid_err(format!(
+                "dataset.window = {} must be in 1..len ({})",
+                d.window, d.len
+            ));
+        }
+        if d.classes == 0 || d.classes > d.series {
+            return grid_err(format!(
+                "dataset.classes = {} must be in 1..=series ({})",
+                d.classes, d.series
+            ));
+        }
+        if self.queries.count == 0 {
+            return grid_err("queries.count = 0".into());
+        }
+        if self.queries.k == 0 || self.queries.k > d.series {
+            return grid_err(format!(
+                "queries.k = {} must be in 1..=series ({})",
+                self.queries.k, d.series
+            ));
+        }
+        for (axis, values) in [
+            ("threads", &self.grid.threads),
+            ("shards", &self.grid.shards),
+            ("clusters", &self.grid.clusters),
+        ] {
+            if values.is_empty() {
+                return grid_err(format!("grid.{axis} is empty"));
+            }
+        }
+        if self.grid.threads.contains(&0) {
+            return grid_err("grid.threads contains 0 (thread counts must be explicit)".into());
+        }
+        if self.grid.shards.contains(&0) {
+            return grid_err("grid.shards contains 0".into());
+        }
+        if let Some(&s) = self.grid.shards.iter().find(|&&s| s > d.series) {
+            return grid_err(format!("grid.shards contains {s} > dataset.series ({})", d.series));
+        }
+        if let Some(&c) = self.grid.clusters.iter().find(|&&c| c > d.series) {
+            return grid_err(format!(
+                "grid.clusters contains {c} > dataset.series ({})",
+                d.series
+            ));
+        }
+        if self.scenarios.is_empty() {
+            return grid_err("scenarios.run is empty".into());
+        }
+        if self.stream.samples < d.len {
+            return grid_err(format!(
+                "stream.samples = {} shorter than one window ({})",
+                self.stream.samples, d.len
+            ));
+        }
+        if self.stream.hop == 0 {
+            return grid_err("stream.hop = 0".into());
+        }
+        if !(self.stream.threshold > 0.0) {
+            return grid_err(format!("stream.threshold = {} must be > 0", self.stream.threshold));
+        }
+        if self.live.deletes >= d.series {
+            return grid_err(format!(
+                "live.deletes = {} must stay below dataset.series ({})",
+                self.live.deletes, d.series
+            ));
+        }
+        Ok(())
+    }
+
+    /// Emit the canonical TOML form; `parse` round-trips it exactly.
+    pub fn to_toml_string(&self) -> String {
+        let esc = |s: &str| s.replace('\\', "\\\\").replace('"', "\\\"");
+        let list = |xs: &[usize]| {
+            let items: Vec<String> = xs.iter().map(|x| x.to_string()).collect();
+            format!("[{}]", items.join(", "))
+        };
+        let scenarios: Vec<String> =
+            self.scenarios.iter().map(|s| format!("\"{}\"", s.name())).collect();
+        let mut out = String::new();
+        out.push_str("[recipe]\n");
+        out.push_str(&format!("name = \"{}\"\n", esc(&self.name)));
+        out.push_str(&format!("description = \"{}\"\n", esc(&self.description)));
+        out.push_str(&format!("seed = {}\n", self.seed));
+        out.push_str("\n[dataset]\n");
+        out.push_str(&format!("family = \"{}\"\n", self.dataset.family.name()));
+        out.push_str(&format!("series = {}\n", self.dataset.series));
+        out.push_str(&format!("len = {}\n", self.dataset.len));
+        out.push_str(&format!("window = {}\n", self.dataset.window));
+        out.push_str(&format!("classes = {}\n", self.dataset.classes));
+        out.push_str("\n[queries]\n");
+        out.push_str(&format!("count = {}\n", self.queries.count));
+        out.push_str(&format!("mix = \"{}\"\n", self.queries.mix.name()));
+        out.push_str(&format!("k = {}\n", self.queries.k));
+        out.push_str("\n[grid]\n");
+        out.push_str(&format!("threads = {}\n", list(&self.grid.threads)));
+        out.push_str(&format!("shards = {}\n", list(&self.grid.shards)));
+        out.push_str(&format!("clusters = {}\n", list(&self.grid.clusters)));
+        out.push_str("\n[scenarios]\n");
+        out.push_str(&format!("run = [{}]\n", scenarios.join(", ")));
+        out.push_str("\n[stream]\n");
+        out.push_str(&format!("samples = {}\n", self.stream.samples));
+        out.push_str(&format!("hop = {}\n", self.stream.hop));
+        out.push_str(&format!("threshold = {}\n", fmt_float(self.stream.threshold)));
+        out.push_str("\n[live]\n");
+        out.push_str(&format!("inserts = {}\n", self.live.inserts));
+        out.push_str(&format!("deletes = {}\n", self.live.deletes));
+        out.push_str("\n[oracle]\n");
+        out.push_str(&format!("mode = \"{}\"\n", self.oracle.name()));
+        out
+    }
+}
+
+/// Float literal that TOML re-parses as a float (always keeps a `.`).
+fn fmt_float(v: f64) -> String {
+    if v == v.trunc() && v.abs() < 1e15 {
+        format!("{v:.1}")
+    } else {
+        format!("{v}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) fn sample() -> Recipe {
+        Recipe {
+            name: "unit".into(),
+            description: "unit-test recipe".into(),
+            seed: 7,
+            dataset: DatasetSpec {
+                family: Family::RandomWalk,
+                series: 24,
+                len: 32,
+                window: 3,
+                classes: 4,
+            },
+            queries: QuerySpec { count: 3, mix: QueryMix::Mixed, k: 2 },
+            grid: Grid { threads: vec![1, 2], shards: vec![1, 2], clusters: vec![0, 4] },
+            scenarios: vec![ScenarioKind::Knn, ScenarioKind::Stream],
+            stream: StreamSpec { samples: 400, hop: 2, threshold: 12.5 },
+            live: LiveSpec { inserts: 6, deletes: 2 },
+            oracle: OracleMode::Brute,
+        }
+    }
+
+    #[test]
+    fn canonical_form_round_trips() {
+        let r = sample();
+        let parsed = Recipe::parse(&r.to_toml_string()).unwrap();
+        assert_eq!(parsed, r);
+    }
+
+    #[test]
+    fn unknown_key_and_table_are_typed() {
+        let mut text = sample().to_toml_string();
+        text.push_str("\n[extra]\nx = 1\n");
+        match Recipe::parse(&text).unwrap_err() {
+            RecipeError::UnknownTable { table, .. } => assert_eq!(table, "extra"),
+            other => panic!("want UnknownTable, got {other:?}"),
+        }
+        let text = sample().to_toml_string().replace("seed = 7", "sede = 7");
+        match Recipe::parse(&text).unwrap_err() {
+            RecipeError::UnknownKey { table, key, .. } => {
+                assert_eq!((table.as_str(), key.as_str()), ("recipe", "sede"));
+            }
+            other => panic!("want UnknownKey, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn degenerate_grids_are_rejected() {
+        let mut r = sample();
+        r.grid.threads = vec![];
+        assert!(matches!(r.validate(), Err(RecipeError::InvalidGrid { .. })));
+        let mut r = sample();
+        r.grid.shards = vec![0];
+        assert!(matches!(r.validate(), Err(RecipeError::InvalidGrid { .. })));
+        let mut r = sample();
+        r.grid.clusters = vec![r.dataset.series + 1];
+        assert!(matches!(r.validate(), Err(RecipeError::InvalidGrid { .. })));
+    }
+
+    #[test]
+    fn wrong_types_are_invalid_values() {
+        let text = sample().to_toml_string().replace("count = 3", "count = \"three\"");
+        match Recipe::parse(&text).unwrap_err() {
+            RecipeError::InvalidValue { table, key, .. } => {
+                assert_eq!((table.as_str(), key.as_str()), ("queries", "count"));
+            }
+            other => panic!("want InvalidValue, got {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,369 @@
+//! The schema-versioned bench report.
+//!
+//! One run emits one `bench-report.json` at the workspace root. The
+//! format replaces the seven per-bench `BENCH_*.json` emitters the
+//! figure drivers used to carry: every metric is a single line with a
+//! stable id (`scenario/t1.s2.c4/metric`), a value, a unit, a
+//! direction, and an optional per-metric regression tolerance. The
+//! emitter writes one metric per line precisely so the parser (and the
+//! regression gate, and a human in a diff) can read it line-by-line
+//! without a JSON library — the same hand-rolled discipline as the
+//! recipe parser.
+
+use std::fmt::Write as _;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Bumped whenever a field is added, removed, or re-interpreted.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// One measured (or counted) value.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Metric {
+    /// Stable id: `scenario/<grid tag>/<name>`.
+    pub id: String,
+    /// The value.
+    pub value: f64,
+    /// Unit (`ns`, `ratio`, `count`, `bytes`).
+    pub unit: String,
+    /// Direction for the regression gate.
+    pub higher_is_better: bool,
+    /// Per-metric relative tolerance override; `None` uses the gate
+    /// default.
+    pub tolerance: Option<f64>,
+}
+
+impl Metric {
+    /// A lower-is-better metric with the default tolerance.
+    pub fn lower(id: impl Into<String>, value: f64, unit: &str) -> Metric {
+        Metric {
+            id: id.into(),
+            value,
+            unit: unit.to_string(),
+            higher_is_better: false,
+            tolerance: None,
+        }
+    }
+
+    /// A higher-is-better metric with the default tolerance.
+    pub fn higher(id: impl Into<String>, value: f64, unit: &str) -> Metric {
+        Metric {
+            id: id.into(),
+            value,
+            unit: unit.to_string(),
+            higher_is_better: true,
+            tolerance: None,
+        }
+    }
+
+    /// Set a per-metric relative tolerance (e.g. `0.5` = ±50%).
+    pub fn with_tolerance(mut self, tolerance: f64) -> Metric {
+        self.tolerance = Some(tolerance);
+        self
+    }
+}
+
+/// One full run: provenance plus the flat metric list.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Report {
+    /// [`SCHEMA_VERSION`] at emit time.
+    pub schema_version: u64,
+    /// Recipe name.
+    pub recipe: String,
+    /// Recipe seed (the run is a pure function of recipe + seed).
+    pub seed: u64,
+    /// Oracle mode name (`brute` | `cross`).
+    pub oracle_mode: String,
+    /// Total oracle assertions that passed.
+    pub oracle_checks: u64,
+    /// Scenario names that ran, in order.
+    pub scenarios: Vec<String>,
+    /// All metrics, in emit order.
+    pub metrics: Vec<Metric>,
+}
+
+/// Format an f64 so the JSON round-trips exactly: integral values keep
+/// one decimal (so they stay floats), everything else uses the shortest
+/// form `f64::to_string` produces (which Rust guarantees re-parses to
+/// the same bits).
+pub fn fmt_f64(v: f64) -> String {
+    if v == v.trunc() && v.abs() < 1e15 {
+        format!("{v:.1}")
+    } else {
+        format!("{v}")
+    }
+}
+
+fn esc(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+impl Report {
+    /// Serialize to the canonical one-metric-per-line JSON form.
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        out.push_str("{\n");
+        let _ = writeln!(out, "  \"schema_version\": {},", self.schema_version);
+        let _ = writeln!(out, "  \"recipe\": \"{}\",", esc(&self.recipe));
+        let _ = writeln!(out, "  \"seed\": {},", self.seed);
+        let _ = writeln!(out, "  \"oracle_mode\": \"{}\",", esc(&self.oracle_mode));
+        let _ = writeln!(out, "  \"oracle_checks\": {},", self.oracle_checks);
+        let scenarios: Vec<String> =
+            self.scenarios.iter().map(|s| format!("\"{}\"", esc(s))).collect();
+        let _ = writeln!(out, "  \"scenarios\": [{}],", scenarios.join(", "));
+        out.push_str("  \"metrics\": [\n");
+        for (i, m) in self.metrics.iter().enumerate() {
+            let tol = match m.tolerance {
+                Some(t) => format!(", \"tolerance\": {}", fmt_f64(t)),
+                None => String::new(),
+            };
+            let comma = if i + 1 == self.metrics.len() { "" } else { "," };
+            let _ = writeln!(
+                out,
+                "    {{\"id\": \"{}\", \"value\": {}, \"unit\": \"{}\", \"higher_is_better\": {}{}}}{}",
+                esc(&m.id),
+                fmt_f64(m.value),
+                esc(&m.unit),
+                m.higher_is_better,
+                tol,
+                comma
+            );
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// Parse the canonical form back. Line-oriented on purpose: each
+    /// metric lives on one line, headers are `"key": value` lines.
+    pub fn parse(text: &str) -> Result<Report, String> {
+        let mut report = Report {
+            schema_version: 0,
+            recipe: String::new(),
+            seed: 0,
+            oracle_mode: String::new(),
+            oracle_checks: 0,
+            scenarios: Vec::new(),
+            metrics: Vec::new(),
+        };
+        for line in text.lines() {
+            let t = line.trim().trim_end_matches(',');
+            if let Some(v) = num_field(t, "schema_version") {
+                report.schema_version = v as u64;
+            } else if let Some(v) = str_field(t, "recipe") {
+                report.recipe = v;
+            } else if let Some(v) = num_field(t, "seed") {
+                report.seed = v as u64;
+            } else if let Some(v) = str_field(t, "oracle_mode") {
+                report.oracle_mode = v;
+            } else if let Some(v) = num_field(t, "oracle_checks") {
+                report.oracle_checks = v as u64;
+            } else if t.starts_with("\"scenarios\"") {
+                let body = t
+                    .split_once('[')
+                    .and_then(|(_, rest)| rest.rsplit_once(']'))
+                    .map(|(inner, _)| inner)
+                    .ok_or_else(|| format!("malformed scenarios line: {t}"))?;
+                report.scenarios = body
+                    .split(',')
+                    .map(|p| p.trim().trim_matches('"').to_string())
+                    .filter(|p| !p.is_empty())
+                    .collect();
+            } else if t.starts_with("{\"id\"") {
+                report.metrics.push(parse_metric(t)?);
+            }
+        }
+        if report.schema_version == 0 {
+            return Err("missing schema_version".to_string());
+        }
+        if report.schema_version != SCHEMA_VERSION {
+            return Err(format!(
+                "schema_version {} unsupported (this build reads {})",
+                report.schema_version, SCHEMA_VERSION
+            ));
+        }
+        Ok(report)
+    }
+
+    /// Look up a metric by id.
+    pub fn metric(&self, id: &str) -> Option<&Metric> {
+        self.metrics.iter().find(|m| m.id == id)
+    }
+
+    /// Write the report to `path`.
+    pub fn save(&self, path: &Path) -> io::Result<()> {
+        fs::write(path, self.to_json())
+    }
+
+    /// Read and parse a report from `path`.
+    pub fn load(path: &Path) -> Result<Report, String> {
+        let text = fs::read_to_string(path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        Report::parse(&text)
+    }
+}
+
+/// Extract `"key": 123` / `"key": 1.5`.
+fn num_field(line: &str, key: &str) -> Option<f64> {
+    let rest = line.strip_prefix(&format!("\"{key}\""))?;
+    let rest = rest.trim_start().strip_prefix(':')?.trim();
+    rest.parse::<f64>().ok()
+}
+
+/// Extract `"key": "value"`.
+fn str_field(line: &str, key: &str) -> Option<String> {
+    let rest = line.strip_prefix(&format!("\"{key}\""))?;
+    let rest = rest.trim_start().strip_prefix(':')?.trim();
+    let rest = rest.strip_prefix('"')?.strip_suffix('"')?;
+    Some(rest.replace("\\\"", "\"").replace("\\\\", "\\"))
+}
+
+/// Parse one `{"id": ..., "value": ..., ...}` metric line.
+fn parse_metric(line: &str) -> Result<Metric, String> {
+    let body = line
+        .strip_prefix('{')
+        .and_then(|s| s.strip_suffix('}'))
+        .ok_or_else(|| format!("malformed metric line: {line}"))?;
+    let mut id = None;
+    let mut value = None;
+    let mut unit = None;
+    let mut higher = None;
+    let mut tolerance = None;
+    for piece in split_fields(body) {
+        let piece = piece.trim();
+        if let Some(v) = str_field(piece, "id") {
+            id = Some(v);
+        } else if let Some(v) = num_field(piece, "value") {
+            value = Some(v);
+        } else if let Some(v) = str_field(piece, "unit") {
+            unit = Some(v);
+        } else if let Some(rest) = piece.strip_prefix("\"higher_is_better\"") {
+            match rest.trim_start().strip_prefix(':').map(str::trim) {
+                Some("true") => higher = Some(true),
+                Some("false") => higher = Some(false),
+                _ => return Err(format!("malformed higher_is_better in: {line}")),
+            }
+        } else if let Some(v) = num_field(piece, "tolerance") {
+            tolerance = Some(v);
+        } else if !piece.is_empty() {
+            return Err(format!("unknown metric field `{piece}` in: {line}"));
+        }
+    }
+    Ok(Metric {
+        id: id.ok_or_else(|| format!("metric missing id: {line}"))?,
+        value: value.ok_or_else(|| format!("metric missing value: {line}"))?,
+        unit: unit.ok_or_else(|| format!("metric missing unit: {line}"))?,
+        higher_is_better: higher
+            .ok_or_else(|| format!("metric missing higher_is_better: {line}"))?,
+        tolerance,
+    })
+}
+
+/// Split a metric body on top-level commas (commas inside quoted ids
+/// are inert).
+fn split_fields(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    let mut escaped = false;
+    for (i, c) in s.char_indices() {
+        if in_str {
+            if escaped {
+                escaped = false;
+            } else if c == '\\' {
+                escaped = true;
+            } else if c == '"' {
+                in_str = false;
+            }
+        } else if c == '"' {
+            in_str = true;
+        } else if c == ',' {
+            out.push(&s[start..i]);
+            start = i + 1;
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+/// The one place path layout is decided: the workspace root is this
+/// crate's parent directory. Reports land at `<root>/bench-report.json`
+/// and the checked-in baseline at `<root>/dtw-bench/baseline.json` —
+/// callers never consult `CARGO_MANIFEST_DIR` themselves.
+pub fn workspace_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("dtw-bench lives one level below the workspace root")
+        .to_path_buf()
+}
+
+/// Default report output path.
+pub fn default_report_path() -> PathBuf {
+    workspace_root().join("bench-report.json")
+}
+
+/// Checked-in baseline path.
+pub fn default_baseline_path() -> PathBuf {
+    workspace_root().join("dtw-bench").join("baseline.json")
+}
+
+/// Recipes directory.
+pub fn recipes_dir() -> PathBuf {
+    workspace_root().join("dtw-bench").join("recipes")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Report {
+        Report {
+            schema_version: SCHEMA_VERSION,
+            recipe: "quick".into(),
+            seed: 77,
+            oracle_mode: "brute".into(),
+            oracle_checks: 420,
+            scenarios: vec!["knn".into(), "stream".into()],
+            metrics: vec![
+                Metric::lower("knn/t1.s1.c0/ns_per_query", 12345.0, "ns"),
+                Metric::higher("knn/t1.s1.c0/prune_rate", 0.8125, "ratio")
+                    .with_tolerance(0.5),
+                Metric::lower("snapshot/t2.s2.c4/bytes", 65536.0, "bytes"),
+            ],
+        }
+    }
+
+    #[test]
+    fn json_round_trips_every_field() {
+        let r = sample();
+        let parsed = Report::parse(&r.to_json()).unwrap();
+        assert_eq!(parsed, r);
+    }
+
+    #[test]
+    fn value_formatting_round_trips_bits() {
+        for v in [0.1 + 0.2, 1.0 / 3.0, 12345.0, 0.0, 1e-9] {
+            let s = fmt_f64(v);
+            assert_eq!(s.parse::<f64>().unwrap().to_bits(), v.to_bits(), "via {s}");
+        }
+    }
+
+    #[test]
+    fn future_schema_versions_are_rejected() {
+        let text = sample().to_json().replace(
+            &format!("\"schema_version\": {SCHEMA_VERSION}"),
+            "\"schema_version\": 999",
+        );
+        let e = Report::parse(&text).unwrap_err();
+        assert!(e.contains("999"), "{e}");
+    }
+
+    #[test]
+    fn metric_lookup_and_tolerance_survive() {
+        let r = Report::parse(&sample().to_json()).unwrap();
+        let m = r.metric("knn/t1.s1.c0/prune_rate").unwrap();
+        assert_eq!(m.tolerance, Some(0.5));
+        assert!(m.higher_is_better);
+        assert!(r.metric("nope").is_none());
+    }
+}

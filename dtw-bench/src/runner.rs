@@ -1,0 +1,211 @@
+//! The run loop: materialize the workload, compute the reference
+//! answers once, dispatch the recipe's scenarios, and assemble the
+//! schema-versioned report.
+
+use dtw_bounds::delta::Squared;
+
+use crate::dataset::{materialize, BenchData};
+use crate::oracle::{reference_knn, reference_stream, Oracle, OracleError, StreamTriple, Triple};
+use crate::recipe::{Grid, OracleMode, Recipe, ScenarioKind};
+use crate::report::{Report, SCHEMA_VERSION};
+use crate::scenario::{self, build_index, check_stream_conservation, pairs, stream_pairs, RunCtx};
+
+/// Why a run stopped.
+#[derive(Debug)]
+pub enum RunError {
+    /// An exactness oracle tripped — the engine produced a wrong
+    /// answer. Always fatal, never warn-only.
+    Oracle(OracleError),
+    /// Infrastructure failure (build, I/O, snapshot).
+    Other(anyhow::Error),
+}
+
+impl From<OracleError> for RunError {
+    fn from(e: OracleError) -> RunError {
+        RunError::Oracle(e)
+    }
+}
+
+impl From<anyhow::Error> for RunError {
+    fn from(e: anyhow::Error) -> RunError {
+        RunError::Other(e)
+    }
+}
+
+impl std::fmt::Display for RunError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RunError::Oracle(e) => write!(f, "oracle failure: {e}"),
+            RunError::Other(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for RunError {}
+
+/// Reference k-NN answers for every query, per the recipe's oracle
+/// mode.
+fn knn_truth(recipe: &Recipe, data: &BenchData, oracle: &mut Oracle) -> Result<Vec<Vec<Triple>>, RunError> {
+    match recipe.oracle {
+        OracleMode::Brute => Ok(data
+            .queries
+            .iter()
+            .map(|q| {
+                reference_knn(&data.train, &data.labels, recipe.dataset.window, q, recipe.queries.k)
+            })
+            .collect()),
+        OracleMode::Cross => {
+            // Serial flat single-shard index as the reference; its own
+            // conservation identity is still checked, so a reference
+            // that silently skips candidates cannot anchor the run.
+            let index = build_index(data, recipe, Grid::reference_point())?;
+            let mut searcher = index.searcher();
+            let opts = dtw_bounds::index::query::QueryOptions::k(recipe.queries.k);
+            let mut out = Vec::with_capacity(data.queries.len());
+            for (qi, q) in data.queries.iter().enumerate() {
+                let outcome = searcher.query_values::<Squared>(q, &opts);
+                oracle.check_knn_conservation(
+                    &format!("truth/cross/q{qi}"),
+                    &outcome.stats,
+                    index.len(),
+                )?;
+                out.push(pairs(&outcome));
+            }
+            Ok(out)
+        }
+    }
+}
+
+/// Reference stream matches, per the recipe's oracle mode.
+fn stream_truth(recipe: &Recipe, data: &BenchData, oracle: &mut Oracle) -> Result<Vec<StreamTriple>, RunError> {
+    match recipe.oracle {
+        OracleMode::Brute => Ok(reference_stream(
+            &data.train,
+            &data.labels,
+            recipe.dataset.window,
+            &data.stream,
+            recipe.dataset.len,
+            recipe.stream.hop,
+            recipe.stream.threshold,
+        )),
+        OracleMode::Cross => {
+            let index = build_index(data, recipe, Grid::reference_point())?;
+            let opts = dtw_bounds::stream::SubsequenceOptions::threshold(recipe.stream.threshold)
+                .with_hop(recipe.stream.hop)
+                .with_znorm(false)
+                .with_threads(1);
+            let report = index.subsequence_scan::<Squared>(&data.stream, opts)?;
+            check_stream_conservation(oracle, "truth/cross/stream", &report, index.len())?;
+            Ok(stream_pairs(&report))
+        }
+    }
+}
+
+/// Run a recipe end to end and return the report.
+pub fn run(recipe: &Recipe) -> Result<Report, RunError> {
+    let data = materialize(recipe);
+    let mut oracle = Oracle::default();
+    let needs_knn = recipe.scenarios.iter().any(|s| {
+        matches!(
+            s,
+            ScenarioKind::Knn
+                | ScenarioKind::Batched
+                | ScenarioKind::ColdStart
+                | ScenarioKind::Snapshot
+                | ScenarioKind::Live
+        )
+    });
+    let needs_stream = recipe
+        .scenarios
+        .iter()
+        .any(|s| matches!(s, ScenarioKind::Stream));
+    let knn_truth = if needs_knn { knn_truth(recipe, &data, &mut oracle)? } else { Vec::new() };
+    let stream_truth =
+        if needs_stream { stream_truth(recipe, &data, &mut oracle)? } else { Vec::new() };
+
+    let mut ctx = RunCtx {
+        recipe,
+        data: &data,
+        knn_truth,
+        stream_truth,
+        oracle,
+        metrics: Vec::new(),
+    };
+    for kind in &recipe.scenarios {
+        match kind {
+            ScenarioKind::ColdStart => scenario::cold_start::run(&mut ctx)?,
+            ScenarioKind::Knn => scenario::knn::run(&mut ctx)?,
+            ScenarioKind::Batched => scenario::batched::run(&mut ctx)?,
+            ScenarioKind::Stream => scenario::stream::run(&mut ctx)?,
+            ScenarioKind::Snapshot => scenario::snapshot::run(&mut ctx)?,
+            ScenarioKind::Live => scenario::live::run(&mut ctx)?,
+        }
+    }
+
+    Ok(Report {
+        schema_version: SCHEMA_VERSION,
+        recipe: recipe.name.clone(),
+        seed: recipe.seed,
+        oracle_mode: recipe.oracle.name().to_string(),
+        oracle_checks: ctx.oracle.checks,
+        scenarios: recipe.scenarios.iter().map(|s| s.name().to_string()).collect(),
+        metrics: ctx.metrics,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::recipe::{
+        DatasetSpec, Family, Grid, LiveSpec, QueryMix, QuerySpec, StreamSpec,
+    };
+
+    /// A deliberately tiny recipe so the full runner (all six
+    /// scenarios, brute oracles) stays fast enough for `cargo test`.
+    fn tiny(oracle: OracleMode) -> Recipe {
+        Recipe {
+            name: "tiny".into(),
+            description: "runner unit".into(),
+            seed: 3,
+            dataset: DatasetSpec {
+                family: Family::Sinusoid,
+                series: 16,
+                len: 24,
+                window: 3,
+                classes: 4,
+            },
+            queries: QuerySpec { count: 3, mix: QueryMix::Mixed, k: 2 },
+            grid: Grid { threads: vec![1, 2], shards: vec![1, 2], clusters: vec![0, 3] },
+            scenarios: ScenarioKind::ALL.to_vec(),
+            stream: StreamSpec { samples: 160, hop: 2, threshold: 18.0 },
+            live: LiveSpec { inserts: 6, deletes: 3 },
+            oracle,
+        }
+    }
+
+    #[test]
+    fn tiny_recipe_passes_every_oracle_in_brute_mode() {
+        let report = run(&tiny(OracleMode::Brute)).unwrap();
+        assert_eq!(report.scenarios.len(), 6);
+        assert!(report.oracle_checks > 50, "oracle barely ran: {}", report.oracle_checks);
+        assert!(report.metric("knn/t1.s1.c0/ns_per_query").is_some());
+        assert!(report.metric("stream/t2.s2.c3/matches").is_some());
+        assert!(report.metric("live/t2.s2.c3/compact_ns").is_some());
+    }
+
+    #[test]
+    fn cross_mode_agrees_with_itself() {
+        let report = run(&tiny(OracleMode::Cross)).unwrap();
+        assert!(report.oracle_checks > 50);
+    }
+
+    #[test]
+    fn brute_and_cross_reports_carry_identical_deterministic_counts() {
+        let a = run(&tiny(OracleMode::Brute)).unwrap();
+        let b = run(&tiny(OracleMode::Cross)).unwrap();
+        for id in ["stream/t1.s1.c0/windows", "stream/t2.s2.c3/matches"] {
+            let (ma, mb) = (a.metric(id).unwrap(), b.metric(id).unwrap());
+            assert_eq!(ma.value, mb.value, "{id}");
+        }
+    }
+}

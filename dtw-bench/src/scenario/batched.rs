@@ -1,0 +1,46 @@
+//! Batched screening: the whole query set goes through
+//! `Searcher::query_batch` with the `SortedPrecomputed` strategy, so
+//! the batch prefilter path (when it engages) is exercised against the
+//! same reference answers as the scalar path.
+//!
+//! Whether a given grid point actually routes through the batched
+//! prefilter is backend- and shape-dependent, so the scenario records
+//! the batched fraction as a metric instead of asserting it; answer
+//! bit-equality and conservation are asserted unconditionally.
+
+use std::time::Instant;
+
+use dtw_bounds::delta::Squared;
+use dtw_bounds::index::query::QueryOptions;
+use dtw_bounds::search::SearchStrategy;
+
+use crate::runner::RunError;
+use crate::scenario::{build_index, ns_since, pairs, RunCtx};
+
+/// Run the scenario.
+pub fn run(ctx: &mut RunCtx) -> Result<(), RunError> {
+    let k = ctx.recipe.queries.k;
+    for point in ctx.recipe.grid.points() {
+        let tag = point.tag();
+        let index = build_index(ctx.data, ctx.recipe, point)?
+            .with_strategy(SearchStrategy::SortedPrecomputed);
+        let mut searcher = index.searcher();
+        let opts = QueryOptions::k(k);
+        let started = Instant::now();
+        let outcomes = searcher.query_batch::<Squared>(&ctx.data.queries, &opts);
+        let total_ns = ns_since(started);
+        let mut batched = 0usize;
+        for (qi, outcome) in outcomes.iter().enumerate() {
+            let context = format!("batched/{tag}/q{qi}");
+            ctx.oracle.check_triples(&context, &pairs(outcome), &ctx.knn_truth[qi])?;
+            ctx.oracle.check_knn_conservation(&context, &outcome.stats, index.len())?;
+            if outcome.batched {
+                batched += 1;
+            }
+        }
+        let q = ctx.data.queries.len() as f64;
+        ctx.metric_lower("batched", &tag, "ns_per_query", total_ns / q, "ns");
+        ctx.metric_higher("batched", &tag, "batched_fraction", batched as f64 / q, "ratio");
+    }
+    Ok(())
+}

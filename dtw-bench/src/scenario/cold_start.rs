@@ -1,0 +1,62 @@
+//! Cold start: serving the first query after a restart, both ways.
+//!
+//! Measures build-from-raw vs. snapshot-load at the representative
+//! grid point, then asserts both cold paths answer the first query
+//! bit-identically to the reference before their timings are recorded.
+
+use std::fs;
+use std::time::Instant;
+
+use dtw_bounds::delta::Squared;
+use dtw_bounds::index::DtwIndex;
+
+use crate::runner::RunError;
+use crate::scenario::{build_index, ns_since, pairs, RunCtx};
+
+/// Run the scenario.
+pub fn run(ctx: &mut RunCtx) -> Result<(), RunError> {
+    let point = ctx.recipe.grid.representative_point();
+    let tag = point.tag();
+    let k = ctx.recipe.queries.k;
+    let query = &ctx.data.queries[0];
+
+    // Path A: rebuild from raw series, then serve.
+    let started = Instant::now();
+    let built = build_index(ctx.data, ctx.recipe, point)?;
+    let build_ns = ns_since(started);
+    let started = Instant::now();
+    let outcome = built.knn::<Squared>(query, k);
+    let first_query_build_ns = ns_since(started);
+    ctx.oracle.check_triples(
+        &format!("cold-start/{tag}/built"),
+        &pairs(&outcome),
+        &ctx.knn_truth[0],
+    )?;
+
+    // Path B: load a snapshot, then serve.
+    let path = std::env::temp_dir().join(format!("dtw-bench-{}-cold.idx", std::process::id()));
+    let bytes = built
+        .save(&path)
+        .map_err(|e| RunError::Other(anyhow::anyhow!("cold-start snapshot save: {e}")))?;
+    let started = Instant::now();
+    let loaded = DtwIndex::load(&path)
+        .map_err(|e| RunError::Other(anyhow::anyhow!("cold-start snapshot load: {e}")));
+    let load_ns = ns_since(started);
+    let _ = fs::remove_file(&path);
+    let loaded = loaded?;
+    let started = Instant::now();
+    let outcome = loaded.knn::<Squared>(query, k);
+    let first_query_load_ns = ns_since(started);
+    ctx.oracle.check_triples(
+        &format!("cold-start/{tag}/loaded"),
+        &pairs(&outcome),
+        &ctx.knn_truth[0],
+    )?;
+
+    ctx.metric_lower("cold-start", &tag, "build_ns", build_ns, "ns");
+    ctx.metric_lower("cold-start", &tag, "load_ns", load_ns, "ns");
+    ctx.metric_lower("cold-start", &tag, "first_query_build_ns", first_query_build_ns, "ns");
+    ctx.metric_lower("cold-start", &tag, "first_query_load_ns", first_query_load_ns, "ns");
+    ctx.metric_lower("cold-start", &tag, "snapshot_bytes", bytes as f64, "bytes");
+    Ok(())
+}

@@ -1,0 +1,41 @@
+//! Steady-state scalar k-NN over the full thread × shard × cluster
+//! grid.
+//!
+//! Every grid point must reproduce the reference answers bit for bit
+//! and satisfy the prune-counter conservation identity
+//! `dtw_calls + pruned + cluster_members_pruned == n` on every query.
+
+use std::time::Instant;
+
+use dtw_bounds::index::query::QueryOptions;
+
+use crate::runner::RunError;
+use crate::scenario::{build_index, ns_since, pairs, RunCtx};
+
+/// Run the scenario.
+pub fn run(ctx: &mut RunCtx) -> Result<(), RunError> {
+    let k = ctx.recipe.queries.k;
+    for point in ctx.recipe.grid.points() {
+        let tag = point.tag();
+        let index = build_index(ctx.data, ctx.recipe, point)?;
+        let mut searcher = index.searcher();
+        let opts = QueryOptions::k(k);
+        let mut total_ns = 0.0;
+        let mut pruned_frac_sum = 0.0;
+        for (qi, query) in ctx.data.queries.iter().enumerate() {
+            let started = Instant::now();
+            let outcome = searcher.query_values::<dtw_bounds::delta::Squared>(query, &opts);
+            total_ns += ns_since(started);
+            let context = format!("knn/{tag}/q{qi}");
+            ctx.oracle.check_triples(&context, &pairs(&outcome), &ctx.knn_truth[qi])?;
+            ctx.oracle.check_knn_conservation(&context, &outcome.stats, index.len())?;
+            let candidates = index.len() as f64;
+            pruned_frac_sum +=
+                (outcome.stats.pruned + outcome.stats.cluster_members_pruned) as f64 / candidates;
+        }
+        let q = ctx.data.queries.len() as f64;
+        ctx.metric_lower("knn", &tag, "ns_per_query", total_ns / q, "ns");
+        ctx.metric_higher("knn", &tag, "prune_rate", pruned_frac_sum / q, "ratio");
+    }
+    Ok(())
+}

@@ -1,0 +1,176 @@
+//! Mixed query + stream over live mutation.
+//!
+//! Drives an [`NnEngine`] through a deterministic interleaving of
+//! inserts, deletes and queries while a plain mirror of the logical
+//! row set is kept on the side. At every checkpoint the engine's
+//! answers (scalar k-NN, and the subsequence scan) must be bit-equal
+//! to a **cold rebuild** of the mirror — the acceptance contract for
+//! the whole live subsystem — and every live query must satisfy the
+//! delta-shard conservation identity. A final compaction is timed and
+//! re-verified the same way.
+
+use std::time::Instant;
+
+use dtw_bounds::coordinator::NnEngine;
+use dtw_bounds::data::rng::Rng;
+use dtw_bounds::delta::Squared;
+use dtw_bounds::index::query::QueryOptions;
+use dtw_bounds::index::DtwIndex;
+use dtw_bounds::stream::SubsequenceOptions;
+
+use crate::runner::RunError;
+use crate::scenario::{build_index, ns_since, pairs, stream_pairs, RunCtx};
+
+/// The logical row set the engine is expected to serve.
+struct Mirror {
+    rows: Vec<(Vec<f64>, u32)>,
+    window: usize,
+    threads: usize,
+    shards: usize,
+    clusters: usize,
+}
+
+impl Mirror {
+    /// Cold rebuild: a fresh index over exactly the logical rows, with
+    /// shard/cluster counts clamped to the shrinking row count.
+    fn build(&self) -> Result<DtwIndex, RunError> {
+        let series: Vec<Vec<f64>> = self.rows.iter().map(|(s, _)| s.clone()).collect();
+        let labels: Vec<u32> = self.rows.iter().map(|&(_, l)| l).collect();
+        let mut b = DtwIndex::builder(series)
+            .labels(labels)
+            .window(self.window)
+            .znormalize(false)
+            .threads(self.threads)
+            .shards(self.shards.min(self.rows.len()).max(1));
+        if self.clusters > 0 {
+            b = b.clusters(self.clusters.min(self.rows.len()));
+        }
+        b.build().map_err(RunError::Other)
+    }
+}
+
+/// One checkpoint: a live query must satisfy delta conservation and
+/// match a cold rebuild bit for bit. Returns the query's latency in ns.
+fn verify_checkpoint(
+    ctx: &mut RunCtx,
+    engine: &mut NnEngine,
+    mirror: &Mirror,
+    tag: &str,
+    checkpoint: usize,
+) -> Result<f64, RunError> {
+    let k = ctx.recipe.queries.k;
+    let qi = checkpoint % ctx.data.queries.len();
+    let query = &ctx.data.queries[qi];
+    let started = Instant::now();
+    let outcome = engine.query_with(query, &QueryOptions::k(k));
+    let elapsed = ns_since(started);
+    let context = format!("live/{tag}/check{checkpoint}/q{qi}");
+    ctx.oracle.check_delta_conservation(&context, &outcome.stats)?;
+    let cold = mirror.build()?;
+    let truth = cold.knn::<Squared>(query, k);
+    ctx.oracle.check_triples(&context, &pairs(&outcome), &pairs(&truth))?;
+    Ok(elapsed)
+}
+
+fn stream_opts(ctx: &RunCtx, threads: usize) -> SubsequenceOptions {
+    SubsequenceOptions::threshold(ctx.recipe.stream.threshold)
+        .with_hop(ctx.recipe.stream.hop)
+        .with_znorm(false)
+        .with_threads(threads)
+}
+
+/// Run the scenario.
+pub fn run(ctx: &mut RunCtx) -> Result<(), RunError> {
+    let point = ctx.recipe.grid.representative_point();
+    let tag = point.tag();
+    let k = ctx.recipe.queries.k;
+    let classes = ctx.recipe.dataset.classes;
+    let spec = ctx.recipe.live.clone();
+
+    let mut engine = NnEngine::from_index(build_index(ctx.data, ctx.recipe, point)?);
+    let mut mirror = Mirror {
+        rows: ctx
+            .data
+            .train
+            .iter()
+            .cloned()
+            .zip(ctx.data.labels.iter().copied())
+            .collect(),
+        window: ctx.recipe.dataset.window,
+        threads: point.threads,
+        shards: point.shards,
+        clusters: point.clusters,
+    };
+
+    // The corpus never shrinks below this, so k-NN stays well-defined.
+    let min_rows = (k + 1).max(2);
+    let mut rng = Rng::seeded(ctx.recipe.seed ^ 0x11FE_C0DE);
+    let mut ops: Vec<bool> = Vec::with_capacity(spec.inserts + spec.deletes);
+    ops.extend(std::iter::repeat(true).take(spec.inserts));
+    ops.extend(std::iter::repeat(false).take(spec.deletes));
+    rng.shuffle(&mut ops);
+
+    let check_every = (ops.len() / 4).max(1);
+    let mut donors = ctx.data.donors.iter();
+    let mut insert_ns = 0.0;
+    let mut delete_ns = 0.0;
+    let mut query_ns = 0.0;
+    let mut queries_run = 0usize;
+    let mut checkpoint = 0usize;
+
+    for (op_idx, &is_insert) in ops.iter().enumerate() {
+        if is_insert {
+            let values = donors.next().expect("donor count == spec.inserts").clone();
+            let label = (mirror.rows.len() % classes) as u32;
+            let started = Instant::now();
+            engine.insert(label, values.clone())?;
+            insert_ns += ns_since(started);
+            mirror.rows.push((values, label));
+        } else if mirror.rows.len() > min_rows {
+            let id = rng.below(mirror.rows.len());
+            let started = Instant::now();
+            engine.delete(id)?;
+            delete_ns += ns_since(started);
+            mirror.rows.remove(id);
+        }
+        if (op_idx + 1) % check_every == 0 {
+            query_ns += verify_checkpoint(ctx, &mut engine, &mirror, &tag, checkpoint)?;
+            queries_run += 1;
+            checkpoint += 1;
+        }
+    }
+
+    // Stream over the live (delta-bearing) state vs. the cold rebuild.
+    let live_report = engine.query_stream(&ctx.data.stream, stream_opts(ctx, point.threads))?;
+    let cold = mirror.build()?;
+    let cold_report =
+        cold.subsequence_scan::<Squared>(&ctx.data.stream, stream_opts(ctx, point.threads))?;
+    ctx.oracle.check_stream(
+        &format!("live/{tag}/stream-delta"),
+        &stream_pairs(&live_report),
+        &stream_pairs(&cold_report),
+    )?;
+
+    let delta_len = engine.delta_len();
+    let started = Instant::now();
+    engine.compact()?;
+    let compact_ns = ns_since(started);
+    query_ns += verify_checkpoint(ctx, &mut engine, &mirror, &tag, checkpoint)?;
+    queries_run += 1;
+    let compacted_report =
+        engine.query_stream(&ctx.data.stream, stream_opts(ctx, point.threads))?;
+    ctx.oracle.check_stream(
+        &format!("live/{tag}/stream-compacted"),
+        &stream_pairs(&compacted_report),
+        &stream_pairs(&cold_report),
+    )?;
+
+    let inserts = spec.inserts.max(1) as f64;
+    let deletes = spec.deletes.max(1) as f64;
+    ctx.metric_lower("live", &tag, "insert_ns", insert_ns / inserts, "ns");
+    ctx.metric_lower("live", &tag, "delete_ns", delete_ns / deletes, "ns");
+    ctx.metric_lower("live", &tag, "query_ns", query_ns / queries_run.max(1) as f64, "ns");
+    ctx.metric_lower("live", &tag, "compact_ns", compact_ns, "ns");
+    ctx.metric_lower("live", &tag, "delta_len_at_compact", delta_len as f64, "count");
+    Ok(())
+}

@@ -1,0 +1,108 @@
+//! The benchmark scenarios.
+//!
+//! Each scenario is a free function over the shared [`RunCtx`]
+//! (recipe, materialized data, precomputed reference answers, the
+//! oracle, and the metric sink). Scenarios measure *and* verify: every
+//! timed operation's results pass through the exactness oracles before
+//! its timing is recorded, so a metric can never be reported for a
+//! run that produced wrong answers.
+
+pub mod batched;
+pub mod cold_start;
+pub mod knn;
+pub mod live;
+pub mod snapshot;
+pub mod stream;
+
+use std::time::Instant;
+
+use dtw_bounds::index::query::QueryOutcome;
+use dtw_bounds::index::DtwIndex;
+use dtw_bounds::stream::StreamReport;
+
+use crate::dataset::BenchData;
+use crate::oracle::{Oracle, StreamTriple, Triple};
+use crate::recipe::{GridPoint, Recipe};
+use crate::report::Metric;
+use crate::runner::RunError;
+
+/// Everything a scenario reads and writes.
+pub struct RunCtx<'a> {
+    /// The recipe being run.
+    pub recipe: &'a Recipe,
+    /// The materialized workload.
+    pub data: &'a BenchData,
+    /// Reference k-NN answers, one list per query.
+    pub knn_truth: Vec<Vec<Triple>>,
+    /// Reference stream matches.
+    pub stream_truth: Vec<StreamTriple>,
+    /// Assertion counter + failure reporting.
+    pub oracle: Oracle,
+    /// Metric sink (flat, emitted into the report at the end).
+    pub metrics: Vec<Metric>,
+}
+
+impl RunCtx<'_> {
+    /// Record a lower-is-better metric under `scenario/tag/name`.
+    pub fn metric_lower(&mut self, scenario: &str, tag: &str, name: &str, value: f64, unit: &str) {
+        self.metrics.push(Metric::lower(format!("{scenario}/{tag}/{name}"), value, unit));
+    }
+
+    /// Record a higher-is-better metric under `scenario/tag/name`.
+    pub fn metric_higher(&mut self, scenario: &str, tag: &str, name: &str, value: f64, unit: &str) {
+        self.metrics.push(Metric::higher(format!("{scenario}/{tag}/{name}"), value, unit));
+    }
+}
+
+/// Build an index over the corpus at one grid point. All bench indexes
+/// are built with `znormalize(false)`: the generators already
+/// normalized every series, and skipping the index's own pass keeps
+/// the floats bit-identical to what the reference kernels see.
+pub fn build_index(data: &BenchData, recipe: &Recipe, point: GridPoint) -> Result<DtwIndex, RunError> {
+    let mut b = DtwIndex::builder(data.train.clone())
+        .labels(data.labels.clone())
+        .window(recipe.dataset.window)
+        .znormalize(false)
+        .threads(point.threads)
+        .shards(point.shards);
+    if point.clusters > 0 {
+        b = b.clusters(point.clusters);
+    }
+    b.build().map_err(RunError::Other)
+}
+
+/// Flatten a query outcome into the oracle's comparison triples.
+pub fn pairs(outcome: &QueryOutcome) -> Vec<Triple> {
+    outcome.neighbors.iter().map(|n| (n.index, n.label, n.distance)).collect()
+}
+
+/// Flatten a stream report into the oracle's comparison quadruples.
+pub fn stream_pairs(report: &StreamReport) -> Vec<StreamTriple> {
+    report.matches.iter().map(|m| (m.start, m.neighbor, m.label, m.distance)).collect()
+}
+
+/// Nanoseconds elapsed since `start`, as a metric value.
+pub fn ns_since(start: Instant) -> f64 {
+    start.elapsed().as_nanos() as f64
+}
+
+/// Verify the stream cascade's conservation chain on a frozen index:
+/// every candidate enters stage 0 (minus cluster-pruned members), each
+/// stage hands its survivors to the next, and the survivors of the
+/// last stage are exactly the DTW calls.
+pub fn check_stream_conservation(
+    oracle: &mut Oracle,
+    context: &str,
+    report: &StreamReport,
+    n: usize,
+) -> Result<(), RunError> {
+    let s = &report.stats;
+    oracle.check_identity(context, "candidates == windows * n", s.candidates, s.windows * n as u64)?;
+    let mut expect = s.candidates - s.cluster_members_pruned;
+    for (i, stage) in s.stages.iter().enumerate() {
+        oracle.check_identity(context, &format!("stage {i} lb_calls"), stage.lb_calls, expect)?;
+        expect = stage.lb_calls - stage.pruned;
+    }
+    oracle.check_identity(context, "dtw_calls == last-stage survivors", s.dtw_calls, expect)?;
+    Ok(())
+}

@@ -1,0 +1,56 @@
+//! Snapshot integrity: a save/load round trip must preserve answers
+//! exactly.
+//!
+//! Unlike `cold-start` (which times the restart paths on one query),
+//! this scenario replays the **entire** query workload against the
+//! reloaded index and holds every answer to bit-equality with the
+//! reference, plus conservation on every query.
+
+use std::fs;
+use std::time::Instant;
+
+use dtw_bounds::delta::Squared;
+use dtw_bounds::index::query::QueryOptions;
+use dtw_bounds::index::DtwIndex;
+
+use crate::runner::RunError;
+use crate::scenario::{build_index, ns_since, pairs, RunCtx};
+
+/// Run the scenario.
+pub fn run(ctx: &mut RunCtx) -> Result<(), RunError> {
+    let point = ctx.recipe.grid.representative_point();
+    let tag = point.tag();
+    let index = build_index(ctx.data, ctx.recipe, point)?;
+
+    let path = std::env::temp_dir().join(format!("dtw-bench-{}-snap.idx", std::process::id()));
+    let started = Instant::now();
+    let save = index.save(&path);
+    let save_ns = ns_since(started);
+    let bytes = match save {
+        Ok(b) => b,
+        Err(e) => {
+            let _ = fs::remove_file(&path);
+            return Err(RunError::Other(anyhow::anyhow!("snapshot save: {e}")));
+        }
+    };
+    let started = Instant::now();
+    let loaded = DtwIndex::load(&path);
+    let load_ns = ns_since(started);
+    let _ = fs::remove_file(&path);
+    let loaded =
+        loaded.map_err(|e| RunError::Other(anyhow::anyhow!("snapshot load: {e}")))?;
+
+    let mut searcher = loaded.searcher();
+    let opts = QueryOptions::k(ctx.recipe.queries.k);
+    for (qi, query) in ctx.data.queries.iter().enumerate() {
+        let outcome = searcher.query_values::<Squared>(query, &opts);
+        let context = format!("snapshot/{tag}/q{qi}");
+        ctx.oracle.check_triples(&context, &pairs(&outcome), &ctx.knn_truth[qi])?;
+        ctx.oracle.check_knn_conservation(&context, &outcome.stats, loaded.len())?;
+    }
+
+    ctx.metric_lower("snapshot", &tag, "save_ns", save_ns, "ns");
+    ctx.metric_lower("snapshot", &tag, "load_ns", load_ns, "ns");
+    ctx.metric_lower("snapshot", &tag, "bytes", bytes as f64, "bytes");
+    Ok(())
+}

@@ -1,0 +1,53 @@
+//! Stream firehose: a threshold subsequence scan over the full grid.
+//!
+//! The scan runs with `znorm(false)` so window floats are bit-identical
+//! to what the reference sweep sees (the rolling-moment z-normalizer is
+//! deliberately *not* bit-equal to a rescan; the z-normalized stream
+//! path keeps its own coverage in `rust/tests/stream.rs`). Matches
+//! must be bit-equal to the reference at every grid point, and the
+//! cascade must satisfy its stage-by-stage conservation chain.
+
+use dtw_bounds::delta::Squared;
+use dtw_bounds::stream::SubsequenceOptions;
+
+use crate::runner::RunError;
+use crate::scenario::{build_index, check_stream_conservation, stream_pairs, RunCtx};
+
+/// Run the scenario.
+pub fn run(ctx: &mut RunCtx) -> Result<(), RunError> {
+    let spec = &ctx.recipe.stream;
+    for point in ctx.recipe.grid.points() {
+        let tag = point.tag();
+        let index = build_index(ctx.data, ctx.recipe, point)?;
+        let opts = SubsequenceOptions::threshold(spec.threshold)
+            .with_hop(spec.hop)
+            .with_znorm(false)
+            .with_threads(point.threads);
+        let report = index.subsequence_scan::<Squared>(&ctx.data.stream, opts)?;
+        let context = format!("stream/{tag}");
+        ctx.oracle.check_stream(&context, &stream_pairs(&report), &ctx.stream_truth)?;
+        check_stream_conservation(&mut ctx.oracle, &context, &report, index.len())?;
+        let windows = report.stats.windows.max(1) as f64;
+        ctx.metric_lower("stream", &tag, "ns_per_window", report.busy.as_nanos() as f64 / windows, "ns");
+        ctx.metric_higher("stream", &tag, "prune_rate", report.stats.prune_rate(), "ratio");
+        // Deterministic counts: zero tolerance, so once a baseline is
+        // recorded the gate flags any drift at all.
+        ctx.metrics.push(
+            crate::report::Metric::lower(
+                format!("stream/{tag}/windows"),
+                report.stats.windows as f64,
+                "count",
+            )
+            .with_tolerance(0.0),
+        );
+        ctx.metrics.push(
+            crate::report::Metric::lower(
+                format!("stream/{tag}/matches"),
+                report.stats.matches as f64,
+                "count",
+            )
+            .with_tolerance(0.0),
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,360 @@
+//! Minimal TOML subset parser for bench recipes.
+//!
+//! The offline build carries no `toml`/`serde` crates, so recipes are
+//! parsed by hand. The supported subset is exactly what recipe files
+//! need: `[table]` headers, `key = value` entries, and scalar values
+//! (strings, integers, floats, booleans) plus flat arrays of scalars.
+//! Comments (`# ...`) are allowed on their own line or after a value.
+//!
+//! Every error carries the 1-based source line, so recipe mistakes point
+//! at the offending line instead of failing opaquely.
+
+use std::fmt;
+
+/// One parsed TOML value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    /// A `"quoted"` string (escapes: `\\`, `\"`, `\n`, `\t`).
+    Str(String),
+    /// A decimal integer.
+    Int(i64),
+    /// A float (anything `f64::from_str` accepts that is not an integer).
+    Float(f64),
+    /// `true` / `false`.
+    Bool(bool),
+    /// A flat array of scalars; nested arrays are rejected.
+    Array(Vec<Value>),
+}
+
+impl Value {
+    /// Human-readable type name for error messages.
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            Value::Str(_) => "string",
+            Value::Int(_) => "integer",
+            Value::Float(_) => "float",
+            Value::Bool(_) => "boolean",
+            Value::Array(_) => "array",
+        }
+    }
+}
+
+/// One `key = value` entry with its source line.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Entry {
+    /// The key (bare, `[A-Za-z0-9_-]+`).
+    pub key: String,
+    /// The parsed value.
+    pub value: Value,
+    /// 1-based source line of the entry.
+    pub line: usize,
+}
+
+/// One `[name]` table and its entries. Keys before any header live in
+/// the root table (empty name).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Table {
+    /// Table name (empty for the root table).
+    pub name: String,
+    /// 1-based source line of the header (0 for the root table).
+    pub line: usize,
+    /// Entries in file order.
+    pub entries: Vec<Entry>,
+}
+
+/// A parsed document: tables in file order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Doc {
+    /// Tables in file order; the root table appears only when it has
+    /// entries.
+    pub tables: Vec<Table>,
+}
+
+/// A parse failure, pointing at its 1-based source line.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParseError {
+    /// 1-based source line.
+    pub line: usize,
+    /// What went wrong.
+    pub message: String,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+fn err(line: usize, message: impl Into<String>) -> ParseError {
+    ParseError { line, message: message.into() }
+}
+
+fn is_bare_key(s: &str) -> bool {
+    !s.is_empty()
+        && s.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-')
+}
+
+/// Parse a quoted string starting at `s[0] == '"'`; returns the string
+/// and the rest of the line after the closing quote.
+fn parse_str(s: &str, line: usize) -> Result<(String, &str), ParseError> {
+    let mut out = String::new();
+    let mut chars = s.char_indices();
+    chars.next(); // opening quote
+    while let Some((i, c)) = chars.next() {
+        match c {
+            '"' => return Ok((out, &s[i + 1..])),
+            '\\' => match chars.next() {
+                Some((_, '\\')) => out.push('\\'),
+                Some((_, '"')) => out.push('"'),
+                Some((_, 'n')) => out.push('\n'),
+                Some((_, 't')) => out.push('\t'),
+                Some((_, other)) => {
+                    return Err(err(line, format!("unknown escape `\\{other}` in string")))
+                }
+                None => return Err(err(line, "unterminated escape in string")),
+            },
+            _ => out.push(c),
+        }
+    }
+    Err(err(line, "unterminated string"))
+}
+
+/// Parse a bare scalar (no quotes, no array): bool, integer or float.
+fn parse_scalar(s: &str, line: usize) -> Result<Value, ParseError> {
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        if f.is_finite() {
+            return Ok(Value::Float(f));
+        }
+    }
+    Err(err(line, format!("cannot parse value `{s}`")))
+}
+
+/// True when the rest of a line is only whitespace or a comment.
+fn only_trailing(s: &str) -> bool {
+    let t = s.trim_start();
+    t.is_empty() || t.starts_with('#')
+}
+
+/// Parse the value part of a `key = value` line.
+fn parse_value(s: &str, line: usize) -> Result<Value, ParseError> {
+    let s = s.trim_start();
+    if s.is_empty() || s.starts_with('#') {
+        return Err(err(line, "missing value after `=`"));
+    }
+    if s.starts_with('"') {
+        let (v, rest) = parse_str(s, line)?;
+        if !only_trailing(rest) {
+            return Err(err(line, "unexpected characters after string value"));
+        }
+        return Ok(Value::Str(v));
+    }
+    if let Some(body) = s.strip_prefix('[') {
+        // Scan to the matching `]`, tracking string state so commas and
+        // brackets inside strings are inert.
+        let mut in_str = false;
+        let mut escaped = false;
+        let mut end = None;
+        for (i, c) in body.char_indices() {
+            if in_str {
+                if escaped {
+                    escaped = false;
+                } else if c == '\\' {
+                    escaped = true;
+                } else if c == '"' {
+                    in_str = false;
+                }
+            } else if c == '"' {
+                in_str = true;
+            } else if c == '[' {
+                return Err(err(line, "nested arrays are not supported"));
+            } else if c == ']' {
+                end = Some(i);
+                break;
+            }
+        }
+        let end = end.ok_or_else(|| err(line, "unterminated array"))?;
+        if !only_trailing(&body[end + 1..]) {
+            return Err(err(line, "unexpected characters after array value"));
+        }
+        let inner = &body[..end];
+        let mut items = Vec::new();
+        for piece in split_top_level(inner) {
+            let piece = piece.trim();
+            if piece.is_empty() {
+                continue; // permits a trailing comma
+            }
+            if piece.starts_with('"') {
+                let (v, rest) = parse_str(piece, line)?;
+                if !rest.trim().is_empty() {
+                    return Err(err(line, "unexpected characters after array string"));
+                }
+                items.push(Value::Str(v));
+            } else {
+                items.push(parse_scalar(piece, line)?);
+            }
+        }
+        return Ok(Value::Array(items));
+    }
+    // Bare scalar: strip a trailing comment (no strings here), then parse.
+    let body = match s.find('#') {
+        Some(i) => s[..i].trim(),
+        None => s.trim(),
+    };
+    parse_scalar(body, line)
+}
+
+/// Split array contents on top-level commas (commas inside strings are
+/// inert).
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    let mut escaped = false;
+    for (i, c) in s.char_indices() {
+        if in_str {
+            if escaped {
+                escaped = false;
+            } else if c == '\\' {
+                escaped = true;
+            } else if c == '"' {
+                in_str = false;
+            }
+        } else if c == '"' {
+            in_str = true;
+        } else if c == ',' {
+            out.push(&s[start..i]);
+            start = i + 1;
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+impl Doc {
+    /// Parse a document; the first error aborts with its line number.
+    pub fn parse(text: &str) -> Result<Doc, ParseError> {
+        let mut tables: Vec<Table> = Vec::new();
+        let mut current = Table { name: String::new(), line: 0, entries: Vec::new() };
+        for (idx, raw) in text.lines().enumerate() {
+            let line = idx + 1;
+            let t = raw.trim();
+            if t.is_empty() || t.starts_with('#') {
+                continue;
+            }
+            if let Some(rest) = t.strip_prefix('[') {
+                let end = rest
+                    .find(']')
+                    .ok_or_else(|| err(line, "unterminated table header"))?;
+                let name = rest[..end].trim();
+                if !is_bare_key(name) {
+                    return Err(err(line, format!("invalid table name `{name}`")));
+                }
+                if !only_trailing(&rest[end + 1..]) {
+                    return Err(err(line, "unexpected characters after table header"));
+                }
+                if !current.entries.is_empty() || !current.name.is_empty() {
+                    tables.push(current);
+                }
+                current = Table { name: name.to_string(), line, entries: Vec::new() };
+                continue;
+            }
+            let (key, value) = t
+                .split_once('=')
+                .ok_or_else(|| err(line, "expected `key = value` or `[table]`"))?;
+            let key = key.trim();
+            if !is_bare_key(key) {
+                return Err(err(line, format!("invalid key `{key}`")));
+            }
+            let value = parse_value(value, line)?;
+            current.entries.push(Entry { key: key.to_string(), value, line });
+        }
+        if !current.entries.is_empty() || !current.name.is_empty() {
+            tables.push(current);
+        }
+        Ok(Doc { tables })
+    }
+
+    /// Look up a table by name.
+    pub fn table(&self, name: &str) -> Option<&Table> {
+        self.tables.iter().find(|t| t.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_tables_scalars_and_arrays() {
+        let doc = Doc::parse(
+            "# recipe\n[recipe]\nname = \"quick\" # inline comment\nseed = 77\n\n[grid]\nthreads = [1, 2, 4]\nratio = 0.25\nlive = true\n",
+        )
+        .unwrap();
+        assert_eq!(doc.tables.len(), 2);
+        let r = doc.table("recipe").unwrap();
+        assert_eq!(r.entries[0].value, Value::Str("quick".into()));
+        assert_eq!(r.entries[1].value, Value::Int(77));
+        assert_eq!(r.entries[1].line, 4);
+        let g = doc.table("grid").unwrap();
+        assert_eq!(
+            g.entries[0].value,
+            Value::Array(vec![Value::Int(1), Value::Int(2), Value::Int(4)])
+        );
+        assert_eq!(g.entries[1].value, Value::Float(0.25));
+        assert_eq!(g.entries[2].value, Value::Bool(true));
+    }
+
+    #[test]
+    fn string_escapes_and_hash_inside_string() {
+        let doc = Doc::parse("s = \"a#b \\\"q\\\" \\\\ end\"\n").unwrap();
+        assert_eq!(doc.tables[0].entries[0].value, Value::Str("a#b \"q\" \\ end".into()));
+    }
+
+    #[test]
+    fn root_table_collects_headerless_keys() {
+        let doc = Doc::parse("x = 1\n[t]\ny = 2\n").unwrap();
+        assert_eq!(doc.tables[0].name, "");
+        assert_eq!(doc.tables[0].entries[0].key, "x");
+        assert_eq!(doc.tables[1].name, "t");
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        assert_eq!(Doc::parse("a\nb = \n").unwrap_err().line, 1);
+        assert_eq!(Doc::parse("a = 1\nb = \"open\n").unwrap_err().line, 2);
+        assert_eq!(Doc::parse("a = [1, [2]]\n").unwrap_err().line, 1);
+        assert_eq!(Doc::parse("[t\n").unwrap_err().line, 1);
+        assert_eq!(Doc::parse("a = wat\n").unwrap_err().line, 1);
+        assert_eq!(Doc::parse("bad key = 1\n").unwrap_err().line, 1);
+        assert_eq!(Doc::parse("a = 1 trailing\n").unwrap_err().line, 1);
+    }
+
+    #[test]
+    fn trailing_comma_and_empty_array() {
+        let doc = Doc::parse("a = [1, 2,]\nb = []\n").unwrap();
+        assert_eq!(
+            doc.tables[0].entries[0].value,
+            Value::Array(vec![Value::Int(1), Value::Int(2)])
+        );
+        assert_eq!(doc.tables[0].entries[1].value, Value::Array(vec![]));
+    }
+
+    #[test]
+    fn negative_and_float_forms() {
+        let doc = Doc::parse("a = -3\nb = -0.5\nc = 1e3\n").unwrap();
+        let e = &doc.tables[0].entries;
+        assert_eq!(e[0].value, Value::Int(-3));
+        assert_eq!(e[1].value, Value::Float(-0.5));
+        assert_eq!(e[2].value, Value::Float(1000.0));
+    }
+}

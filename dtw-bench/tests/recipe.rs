@@ -1,0 +1,167 @@
+//! Recipe contract tests: every shipped recipe parses, the canonical
+//! form round-trips every field, and malformed input fails with the
+//! right typed error pointing at the right place.
+
+use std::fs;
+use std::path::PathBuf;
+
+use dtw_bench::recipe::{
+    DatasetSpec, Family, Grid, LiveSpec, OracleMode, QueryMix, QuerySpec, Recipe, RecipeError,
+    ScenarioKind, StreamSpec,
+};
+
+fn recipes_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("recipes")
+}
+
+fn sample() -> Recipe {
+    Recipe {
+        name: "it".into(),
+        description: "integration sample".into(),
+        seed: 99,
+        dataset: DatasetSpec {
+            family: Family::Adversarial,
+            series: 40,
+            len: 48,
+            window: 5,
+            classes: 8,
+        },
+        queries: QuerySpec { count: 7, mix: QueryMix::Near, k: 4 },
+        grid: Grid { threads: vec![1, 2, 4], shards: vec![1, 4], clusters: vec![0, 5] },
+        scenarios: ScenarioKind::ALL.to_vec(),
+        stream: StreamSpec { samples: 640, hop: 3, threshold: 7.25 },
+        live: LiveSpec { inserts: 10, deletes: 4 },
+        oracle: OracleMode::Cross,
+    }
+}
+
+#[test]
+fn every_shipped_recipe_parses_and_round_trips() {
+    let mut seen = 0;
+    for entry in fs::read_dir(recipes_dir()).unwrap() {
+        let path = entry.unwrap().path();
+        if path.extension().map_or(true, |x| x != "toml") {
+            continue;
+        }
+        seen += 1;
+        let text = fs::read_to_string(&path).unwrap();
+        let recipe = Recipe::parse(&text)
+            .unwrap_or_else(|e| panic!("{} does not parse: {e}", path.display()));
+        assert_eq!(
+            recipe.name,
+            path.file_stem().unwrap().to_string_lossy(),
+            "recipe name must match its file name"
+        );
+        let reparsed = Recipe::parse(&recipe.to_toml_string()).unwrap();
+        assert_eq!(reparsed, recipe, "{} canonical form drifts", path.display());
+    }
+    assert!(seen >= 2, "expected at least quick + full recipes, found {seen}");
+}
+
+#[test]
+fn round_trip_preserves_every_field() {
+    let r = sample();
+    assert_eq!(Recipe::parse(&r.to_toml_string()).unwrap(), r);
+}
+
+#[test]
+fn unknown_table_key_and_rootless_key_are_rejected_with_lines() {
+    let mut text = sample().to_toml_string();
+    text.push_str("[mystery]\nx = 1\n");
+    let lines = text.lines().count();
+    match Recipe::parse(&text).unwrap_err() {
+        RecipeError::UnknownTable { table, line } => {
+            assert_eq!(table, "mystery");
+            assert_eq!(line, lines - 1);
+        }
+        other => panic!("want UnknownTable, got {other:?}"),
+    }
+
+    let text = sample().to_toml_string().replace("hop = 3", "hop = 3\nhopp = 4");
+    match Recipe::parse(&text).unwrap_err() {
+        RecipeError::UnknownKey { table, key, .. } => {
+            assert_eq!((table.as_str(), key.as_str()), ("stream", "hopp"));
+        }
+        other => panic!("want UnknownKey, got {other:?}"),
+    }
+
+    match Recipe::parse("loose = 1\n[recipe]\nname = \"x\"\n").unwrap_err() {
+        RecipeError::UnknownKey { table, key, line } => {
+            assert_eq!(table, "");
+            assert_eq!(key, "loose");
+            assert_eq!(line, 1);
+        }
+        other => panic!("want rootless UnknownKey, got {other:?}"),
+    }
+}
+
+#[test]
+fn missing_keys_and_tables_are_reported() {
+    let text = sample().to_toml_string().replace("window = 5\n", "");
+    assert_eq!(
+        Recipe::parse(&text).unwrap_err(),
+        RecipeError::MissingKey { table: "dataset".into(), key: "window".into() }
+    );
+    let text: String = sample()
+        .to_toml_string()
+        .lines()
+        .skip_while(|l| !l.starts_with("[dataset]"))
+        .map(|l| format!("{l}\n"))
+        .collect();
+    // [recipe] was dropped entirely.
+    assert_eq!(
+        Recipe::parse(&text).unwrap_err(),
+        RecipeError::MissingKey { table: "recipe".into(), key: "*".into() }
+    );
+}
+
+#[test]
+fn invalid_values_name_table_key_and_line() {
+    let text = sample().to_toml_string().replace("family = \"adversarial\"", "family = \"fractal\"");
+    match Recipe::parse(&text).unwrap_err() {
+        RecipeError::InvalidValue { table, key, line, message } => {
+            assert_eq!((table.as_str(), key.as_str()), ("dataset", "family"));
+            assert!(line > 0);
+            assert!(message.contains("fractal"), "{message}");
+        }
+        other => panic!("want InvalidValue, got {other:?}"),
+    }
+    let text = sample().to_toml_string().replace("seed = 99", "seed = -1");
+    assert!(matches!(Recipe::parse(&text), Err(RecipeError::InvalidValue { .. })));
+    let text = sample()
+        .to_toml_string()
+        .replace("run = [\"cold-start\"", "run = [\"cold-start\", \"cold-start\"");
+    assert!(matches!(Recipe::parse(&text), Err(RecipeError::InvalidValue { .. })));
+}
+
+#[test]
+fn grid_validation_covers_every_axis() {
+    let cases: Vec<(&str, &str)> = vec![
+        ("threads = [1, 2, 4]", "threads = []"),
+        ("threads = [1, 2, 4]", "threads = [0]"),
+        ("shards = [1, 4]", "shards = [41]"),
+        ("clusters = [0, 5]", "clusters = [41]"),
+        ("samples = 640", "samples = 10"),
+        ("hop = 3", "hop = 0"),
+        ("threshold = 7.25", "threshold = 0.0"),
+        ("deletes = 4", "deletes = 40"),
+        ("k = 4", "k = 41"),
+        ("classes = 8", "classes = 0"),
+    ];
+    for (from, to) in cases {
+        let text = sample().to_toml_string().replace(from, to);
+        assert_ne!(text, sample().to_toml_string(), "replacement {from:?} did not apply");
+        match Recipe::parse(&text) {
+            Err(RecipeError::InvalidGrid { .. }) => {}
+            other => panic!("{from} -> {to}: want InvalidGrid, got {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn toml_syntax_errors_surface_with_line_numbers() {
+    match Recipe::parse("[recipe\nname = \"x\"\n").unwrap_err() {
+        RecipeError::Toml { line, .. } => assert_eq!(line, 1),
+        other => panic!("want Toml, got {other:?}"),
+    }
+}

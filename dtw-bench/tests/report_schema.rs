@@ -1,0 +1,67 @@
+//! Report schema tests: the emitted JSON is pinned to a checked-in
+//! golden file (so schema drift is a reviewed diff, not an accident),
+//! and parse/emit round-trips every field.
+
+use std::fs;
+use std::path::PathBuf;
+
+use dtw_bench::gate;
+use dtw_bench::report::{Metric, Report, SCHEMA_VERSION};
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests").join("golden").join("bench-report.json")
+}
+
+fn golden_report() -> Report {
+    Report {
+        schema_version: SCHEMA_VERSION,
+        recipe: "golden".into(),
+        seed: 42,
+        oracle_mode: "brute".into(),
+        oracle_checks: 1234,
+        scenarios: vec!["knn".into(), "stream".into()],
+        metrics: vec![
+            Metric::lower("knn/t1.s1.c0/ns_per_query", 52340.0, "ns"),
+            Metric::higher("knn/t1.s1.c0/prune_rate", 0.875, "ratio").with_tolerance(0.5),
+            Metric::lower("stream/t2.s2.c4/windows", 569.0, "count").with_tolerance(0.0),
+        ],
+    }
+}
+
+#[test]
+fn emitted_json_matches_the_golden_file_byte_for_byte() {
+    let want = fs::read_to_string(golden_path()).unwrap();
+    assert_eq!(
+        golden_report().to_json(),
+        want,
+        "report schema drifted from tests/golden/bench-report.json — \
+         if intentional, bump SCHEMA_VERSION and regenerate the golden file"
+    );
+}
+
+#[test]
+fn golden_file_parses_back_to_the_same_report() {
+    let text = fs::read_to_string(golden_path()).unwrap();
+    assert_eq!(Report::parse(&text).unwrap(), golden_report());
+}
+
+#[test]
+fn parse_emit_round_trip_is_stable_for_awkward_values() {
+    let mut r = golden_report();
+    r.metrics.push(Metric::lower("x/t1.s1.c0/ratio", 0.1 + 0.2, "ratio"));
+    r.metrics.push(Metric::higher("y/t1.s1.c0/tiny", 1e-9, "ratio").with_tolerance(0.333));
+    r.recipe = "with \"quotes\" and \\slash".into();
+    let once = Report::parse(&r.to_json()).unwrap();
+    assert_eq!(once, r);
+    // Fixed point: a second emit/parse cycle changes nothing.
+    assert_eq!(once.to_json(), Report::parse(&once.to_json()).unwrap().to_json());
+}
+
+#[test]
+fn checked_in_baseline_is_parseable_and_gates_trivially() {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("baseline.json");
+    let baseline = Report::load(&path).unwrap();
+    assert_eq!(baseline.schema_version, SCHEMA_VERSION);
+    let outcome = gate::check(&golden_report(), &baseline);
+    assert!(outcome.passed());
+}

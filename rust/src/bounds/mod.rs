@@ -174,11 +174,10 @@ impl Scratch {
 /// Tightness is the mean `λ_w/DTW_w` ratio (higher prunes more); cost is
 /// per query × candidate pair *after* the usual preparations (candidate
 /// envelopes per training set, query envelopes per query). The
-/// cells/sec column names each bound's record in the `"bounds"` array
-/// of `BENCH_dtw_kernel.json` (emitted by
-/// `cargo bench --bench dtw_kernel`): measured screen throughput in
-/// envelope cells per second on the current hardware — absolute
-/// numbers are machine-specific, so the trajectory file carries them,
+/// cells/sec column names each bound's historical per-screen record;
+/// measured throughput on the current hardware lives in the
+/// `dtw-bench` report (`dtw-bench run`, see docs/benchmarks.md) —
+/// absolute numbers are machine-specific, so the report carries them,
 /// not this table.
 ///
 /// | Kind | Tightness | Per-pair cost | cells/sec record | Reach for it when |

@@ -238,7 +238,7 @@ pub fn generate_archive(spec: &ArchiveSpec) -> Vec<Dataset> {
 
 /// A smooth z-normalized random pattern (sum of a few sinusoids) — the
 /// reference-library shape used by the streaming-monitor scenario
-/// (`examples/streaming_monitor.rs`, `benches/stream_search.rs`).
+/// (`examples/streaming_monitor.rs`, the `dtw-bench` stream scenario).
 pub fn sinusoid_pattern(rng: &mut Rng, len: usize) -> Vec<f64> {
     let k = rng.int_range(2, 5);
     let params: Vec<(f64, f64, f64)> = (0..k)
@@ -247,6 +247,45 @@ pub fn sinusoid_pattern(rng: &mut Rng, len: usize) -> Vec<f64> {
     let mut out: Vec<f64> = (0..len)
         .map(|i| params.iter().map(|(a, f, p)| a * (f * i as f64 + p).sin()).sum())
         .collect();
+    znormalize(&mut out);
+    out
+}
+
+/// A z-normalized Gaussian random walk — the classic "hard to index"
+/// family: no periodic structure, so envelope bounds stay informative
+/// only through the window term. Used by the bench-suite dataset
+/// families (`dtw-bench`). Deterministic in `rng`.
+pub fn random_walk_series(rng: &mut Rng, len: usize) -> Vec<f64> {
+    let mut level = 0.0;
+    let mut out = Vec::with_capacity(len);
+    for _ in 0..len {
+        level += rng.normal();
+        out.push(level);
+    }
+    znormalize(&mut out);
+    out
+}
+
+/// An adversarial worst-case-warping series: short constant runs of
+/// alternating sign (run length 1–4) with jittered amplitude. The high
+/// frequency content makes Keogh-style envelopes span nearly the full
+/// value range, so lower bounds go slack and searches degrade toward
+/// brute force — the stress case for prune-rate claims. Deterministic
+/// in `rng`.
+pub fn adversarial_warp_series(rng: &mut Rng, len: usize) -> Vec<f64> {
+    let mut out = Vec::with_capacity(len);
+    let mut sign = if rng.uniform() < 0.5 { 1.0 } else { -1.0 };
+    while out.len() < len {
+        let run = rng.int_range(1, 4);
+        let amp = rng.uniform_range(0.6, 1.4);
+        for _ in 0..run {
+            if out.len() == len {
+                break;
+            }
+            out.push(sign * amp + 0.05 * rng.normal());
+        }
+        sign = -sign;
+    }
     znormalize(&mut out);
     out
 }
@@ -325,6 +364,30 @@ mod tests {
         assert_eq!(s1.len(), 2000);
         assert!(!e1.is_empty(), "0.3 embed probability over ~30 decisions");
         assert!(e1.iter().all(|&(pos, id)| pos + 32 <= 2000 && id < 3));
+    }
+
+    #[test]
+    fn walk_and_adversarial_generators_are_seeded_and_normalized() {
+        for gen in [random_walk_series, adversarial_warp_series] {
+            let a = gen(&mut Rng::seeded(31), 200);
+            let b = gen(&mut Rng::seeded(31), 200);
+            let c = gen(&mut Rng::seeded(32), 200);
+            assert_eq!(a, b, "deterministic in the seed");
+            assert_ne!(a, c, "distinct seeds diverge");
+            assert_eq!(a.len(), 200);
+            let mean: f64 = a.iter().sum::<f64>() / 200.0;
+            let var: f64 = a.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / 200.0;
+            assert!(mean.abs() < 1e-9);
+            assert!((var - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn adversarial_series_oscillates() {
+        // Sign flips every 1–4 samples: at least len/8 crossings.
+        let s = adversarial_warp_series(&mut Rng::seeded(5), 400);
+        let crossings = s.windows(2).filter(|w| (w[0] >= 0.0) != (w[1] >= 0.0)).count();
+        assert!(crossings >= 50, "only {crossings} sign changes in 400 samples");
     }
 
     #[test]

@@ -1,8 +1,9 @@
 //! Documentation link-check: every relative markdown link in README.md,
-//! ARCHITECTURE.md and docs/protocol.md must resolve to a real file or
-//! directory, and every `--bench <name>` / `--example <name>` mentioned
-//! in those documents must exist as a registered target file. Keeps the
-//! architecture/protocol docs from silently rotting as the tree moves.
+//! ARCHITECTURE.md, docs/protocol.md and docs/benchmarks.md must
+//! resolve to a real file or directory, and every `--bench <name>` /
+//! `--example <name>` mentioned in those documents must exist as a
+//! registered target file. Keeps the architecture/protocol/bench docs
+//! from silently rotting as the tree moves.
 
 use std::path::{Path, PathBuf};
 
@@ -11,11 +12,16 @@ fn repo_root() -> PathBuf {
     Path::new(env!("CARGO_MANIFEST_DIR")).parent().expect("workspace root").to_path_buf()
 }
 
-/// The documents under contract. ARCHITECTURE.md and docs/protocol.md
+/// The documents under contract. ARCHITECTURE.md and the docs/ files
 /// are themselves deliverables — their absence is a failure, not a skip.
 fn documents() -> Vec<PathBuf> {
     let root = repo_root();
-    vec![root.join("README.md"), root.join("ARCHITECTURE.md"), root.join("docs/protocol.md")]
+    vec![
+        root.join("README.md"),
+        root.join("ARCHITECTURE.md"),
+        root.join("docs/protocol.md"),
+        root.join("docs/benchmarks.md"),
+    ]
 }
 
 /// Extract the targets of inline markdown links `](target)`.

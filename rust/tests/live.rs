@@ -318,3 +318,136 @@ fn delta_counters_are_conserved_on_knn_and_stream_paths() {
     );
     assert!(s.dtw_calls >= s.delta_dtw);
 }
+
+#[test]
+fn mass_tombstoning_with_k_beyond_survivors_truncates_like_cold_rebuild() {
+    let ds = dataset(505);
+    let w = ds.window.max(1);
+    let n = ds.train.len();
+    let mut mirror = Mirror {
+        rows: ds.train.iter().map(|s| (s.values.clone(), s.label)).collect(),
+        window: w,
+        shards: 1,
+        clusters: 0,
+        threads: 1,
+    };
+    let mut engine = NnEngine::from_index(mirror.build());
+    engine.attach_native();
+
+    // Tombstone all but three base series (front-loaded: repeatedly
+    // deleting logical id 0 shifts every survivor's id down each time).
+    for _ in 0..n - 3 {
+        engine.delete(0).unwrap();
+        mirror.rows.remove(0);
+    }
+    assert_eq!(engine.logical_len(), 3);
+
+    // k far beyond the survivor count: exactly the survivors come back,
+    // bit-identical to a cold rebuild over the same three rows.
+    let q = ds.test[0].values.clone();
+    let out = engine.query_with(&q, &QueryOptions::k(n + 5));
+    assert_eq!(out.neighbors.len(), 3, "k > survivors truncates to the survivors");
+    let cold = NnEngine::from_index(mirror.build())
+        .query_with(&q, &QueryOptions::k(n + 5));
+    assert_eq!(pairs(&out), pairs(&cold), "mass tombstoning: scalar over-ask");
+    assert_eq!(
+        out.stats.delta_scanned,
+        out.stats.delta_pruned + out.stats.delta_dtw,
+        "conservation with an all-tombstone-heavy base"
+    );
+    // Full-path agreement (scalar, batched, stream) in the same state.
+    let queries: Vec<Vec<f64>> = ds.test.iter().take(2).map(|s| s.values.clone()).collect();
+    assert_matches_cold(&mut engine, &mirror, &queries, "mass tombstoning");
+
+    // Compaction physically drops the tombstones and answers still agree.
+    engine.compact().unwrap();
+    assert_eq!(engine.index().len(), 3);
+    assert_matches_cold(&mut engine, &mirror, &queries, "mass tombstoning compacted");
+}
+
+#[test]
+fn delta_only_engine_with_fully_tombstoned_base_matches_cold_rebuild() {
+    let ds = dataset(506);
+    let w = ds.window.max(1);
+    // Start from a deliberately tiny base of two series…
+    let base: Vec<Vec<f64>> = ds.train.iter().take(2).map(|s| s.values.clone()).collect();
+    let base_labels: Vec<u32> = ds.train.iter().take(2).map(|s| s.label).collect();
+    let index = DtwIndex::builder(base)
+        .labels(base_labels)
+        .window(w)
+        .znormalize(false)
+        .build()
+        .unwrap();
+    let mut engine = NnEngine::from_index(index);
+    engine.attach_native();
+    let mut mirror = Mirror {
+        rows: ds.train.iter().take(2).map(|s| (s.values.clone(), s.label)).collect(),
+        window: w,
+        shards: 1,
+        clusters: 0,
+        threads: 1,
+    };
+
+    // …insert four delta rows, then tombstone the entire base: every
+    // surviving row now lives in the delta shard.
+    for (i, s) in ds.test.iter().take(4).enumerate() {
+        let id = engine.insert(300 + i as u32, s.values.clone()).unwrap();
+        assert_eq!(id, mirror.rows.len());
+        mirror.rows.push((s.values.clone(), 300 + i as u32));
+    }
+    engine.delete(0).unwrap();
+    mirror.rows.remove(0);
+    engine.delete(0).unwrap();
+    mirror.rows.remove(0);
+    assert_eq!(engine.logical_len(), 4, "only the delta rows survive");
+
+    let q = ds.test[5 % ds.test.len()].values.clone();
+    let out = engine.query_with(&q, &QueryOptions::k(3));
+    assert_eq!(out.stats.delta_scanned, 4, "all survivors are delta entries");
+    assert_eq!(out.stats.delta_scanned, out.stats.delta_pruned + out.stats.delta_dtw);
+    let queries: Vec<Vec<f64>> = ds.test.iter().take(2).map(|s| s.values.clone()).collect();
+    assert_matches_cold(&mut engine, &mirror, &queries, "delta-only");
+
+    // Compacting a fully-tombstoned base folds the delta into the new
+    // base exactly.
+    engine.compact().unwrap();
+    assert_eq!(engine.delta_len(), 0);
+    assert_eq!(engine.index().len(), 4);
+    assert_matches_cold(&mut engine, &mirror, &queries, "delta-only compacted");
+}
+
+#[test]
+fn over_ask_exceeding_base_size_via_tombstone_compensation_stays_exact() {
+    let ds = dataset(507);
+    let w = ds.window.max(1);
+    let n = ds.train.len();
+    let mut mirror = Mirror {
+        rows: ds.train.iter().map(|s| (s.values.clone(), s.label)).collect(),
+        window: w,
+        shards: 3,
+        clusters: 4,
+        threads: 1,
+    };
+    let mut engine = NnEngine::from_index(mirror.build());
+    engine.attach_native();
+
+    // Tombstone more than half the base, keeping 4 survivors, so any
+    // internal "fetch k + |tombstones|" compensation overshoots the
+    // physical base size: k + |T| = 4 + (n - 4) = n > base survivors.
+    let tombstones = n - 4;
+    for _ in 0..tombstones {
+        engine.delete(0).unwrap();
+        mirror.rows.remove(0);
+    }
+    assert_eq!(engine.logical_len(), 4);
+
+    // k equal to the survivor count: the full (exact) ranking of
+    // everything that is left, bit-identical to the cold rebuild.
+    let q = ds.test[0].values.clone();
+    let out = engine.query_with(&q, &QueryOptions::k(4));
+    assert_eq!(out.neighbors.len(), 4);
+    let cold = NnEngine::from_index(mirror.build()).query_with(&q, &QueryOptions::k(4));
+    assert_eq!(pairs(&out), pairs(&cold), "over-ask with |T| >= survivors");
+    let queries: Vec<Vec<f64>> = ds.test.iter().take(2).map(|s| s.values.clone()).collect();
+    assert_matches_cold(&mut engine, &mirror, &queries, "over-ask");
+}

@@ -96,7 +96,7 @@ pub fn materialize(recipe: &Recipe) -> BenchData {
 mod tests {
     use super::*;
     use crate::recipe::{
-        DatasetSpec, Grid, LiveSpec, OracleMode, QuerySpec, ScenarioKind, StreamSpec,
+        DatasetSpec, Grid, LiveSpec, OracleMode, QuerySpec, ScenarioKind, StreamSpec, WalMode,
     };
 
     fn recipe(seed: u64, mix: QueryMix) -> Recipe {
@@ -115,7 +115,7 @@ mod tests {
             grid: Grid { threads: vec![1], shards: vec![1], clusters: vec![0] },
             scenarios: vec![ScenarioKind::Knn],
             stream: StreamSpec { samples: 200, hop: 1, threshold: 10.0 },
-            live: LiveSpec { inserts: 3, deletes: 1 },
+            live: LiveSpec { inserts: 3, deletes: 1, wal: vec![WalMode::Off] },
             oracle: OracleMode::Brute,
         }
     }

@@ -255,6 +255,38 @@ pub struct StreamSpec {
     pub threshold: f64,
 }
 
+/// Write-ahead-log durability modes the live scenario sweeps.
+///
+/// `off` measures the bare in-memory mutation path; `always` anchors
+/// the engine to a real on-disk snapshot and pays an append + fsync
+/// before every ack, so the off/always delta on `insert_ns` *is* the
+/// durability tax.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WalMode {
+    /// No log: acks return as soon as the delta shard applies.
+    Off,
+    /// `FsyncPolicy::Always`: append + fsync before every ack.
+    Always,
+}
+
+impl WalMode {
+    /// Canonical (re-parseable) name.
+    pub fn name(self) -> &'static str {
+        match self {
+            WalMode::Off => "off",
+            WalMode::Always => "always",
+        }
+    }
+
+    fn parse(s: &str) -> Option<WalMode> {
+        match s {
+            "off" => Some(WalMode::Off),
+            "always" => Some(WalMode::Always),
+            _ => None,
+        }
+    }
+}
+
 /// `[live]`: the mutation workload.
 #[derive(Debug, Clone, PartialEq)]
 pub struct LiveSpec {
@@ -262,6 +294,8 @@ pub struct LiveSpec {
     pub inserts: usize,
     /// Deletions to apply.
     pub deletes: usize,
+    /// Durability modes to sweep (optional; defaults to `["off"]`).
+    pub wal: Vec<WalMode>,
 }
 
 /// A fully-parsed, validated recipe.
@@ -654,11 +688,25 @@ impl Recipe {
 
         // [live]
         let t = get("live")?;
-        let (mut inserts, mut deletes) = (None, None);
+        let (mut inserts, mut deletes, mut wal) = (None, None, None);
         for e in &t.entries {
             match e.key.as_str() {
                 "inserts" => inserts = Some(as_usize("live", e)?),
                 "deletes" => deletes = Some(as_usize("live", e)?),
+                "wal" => {
+                    let names = as_str_list("live", e)?;
+                    let mut modes = Vec::with_capacity(names.len());
+                    for n in &names {
+                        let mode = WalMode::parse(n).ok_or_else(|| {
+                            bad("live", e, format!("unknown wal mode `{n}` (off | always)"))
+                        })?;
+                        if modes.contains(&mode) {
+                            return Err(bad("live", e, format!("wal mode `{n}` listed twice")));
+                        }
+                        modes.push(mode);
+                    }
+                    wal = Some(modes);
+                }
                 _ => {
                     return Err(RecipeError::UnknownKey {
                         table: "live".into(),
@@ -671,6 +719,7 @@ impl Recipe {
         let live = LiveSpec {
             inserts: require(inserts, "live", "inserts")?,
             deletes: require(deletes, "live", "deletes")?,
+            wal: wal.unwrap_or_else(|| vec![WalMode::Off]),
         };
 
         // [oracle]
@@ -787,6 +836,9 @@ impl Recipe {
                 self.live.deletes, d.series
             ));
         }
+        if self.live.wal.is_empty() {
+            return grid_err("live.wal is empty (omit the key for the `off` default)".into());
+        }
         Ok(())
     }
 
@@ -824,9 +876,12 @@ impl Recipe {
         out.push_str(&format!("samples = {}\n", self.stream.samples));
         out.push_str(&format!("hop = {}\n", self.stream.hop));
         out.push_str(&format!("threshold = {}\n", fmt_float(self.stream.threshold)));
+        let wal: Vec<String> =
+            self.live.wal.iter().map(|m| format!("\"{}\"", m.name())).collect();
         out.push_str("\n[live]\n");
         out.push_str(&format!("inserts = {}\n", self.live.inserts));
         out.push_str(&format!("deletes = {}\n", self.live.deletes));
+        out.push_str(&format!("wal = [{}]\n", wal.join(", ")));
         out.push_str("\n[oracle]\n");
         out.push_str(&format!("mode = \"{}\"\n", self.oracle.name()));
         out
@@ -862,9 +917,40 @@ mod tests {
             grid: Grid { threads: vec![1, 2], shards: vec![1, 2], clusters: vec![0, 4] },
             scenarios: vec![ScenarioKind::Knn, ScenarioKind::Stream],
             stream: StreamSpec { samples: 400, hop: 2, threshold: 12.5 },
-            live: LiveSpec { inserts: 6, deletes: 2 },
+            live: LiveSpec {
+                inserts: 6,
+                deletes: 2,
+                wal: vec![WalMode::Off, WalMode::Always],
+            },
             oracle: OracleMode::Brute,
         }
+    }
+
+    #[test]
+    fn omitted_wal_axis_defaults_to_off() {
+        let text = sample().to_toml_string().replace("wal = [\"off\", \"always\"]\n", "");
+        assert_ne!(text, sample().to_toml_string());
+        assert_eq!(Recipe::parse(&text).unwrap().live.wal, vec![WalMode::Off]);
+    }
+
+    #[test]
+    fn wal_axis_rejects_unknown_duplicate_and_empty_modes() {
+        let swap = |to: &str| sample().to_toml_string().replace("wal = [\"off\", \"always\"]", to);
+        match Recipe::parse(&swap("wal = [\"sometimes\"]")).unwrap_err() {
+            RecipeError::InvalidValue { table, key, message, .. } => {
+                assert_eq!((table.as_str(), key.as_str()), ("live", "wal"));
+                assert!(message.contains("sometimes"), "{message}");
+            }
+            other => panic!("want InvalidValue, got {other:?}"),
+        }
+        assert!(matches!(
+            Recipe::parse(&swap("wal = [\"off\", \"off\"]")),
+            Err(RecipeError::InvalidValue { .. })
+        ));
+        assert!(matches!(
+            Recipe::parse(&swap("wal = []")),
+            Err(RecipeError::InvalidGrid { .. })
+        ));
     }
 
     #[test]

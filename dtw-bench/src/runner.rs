@@ -157,7 +157,7 @@ pub fn run(recipe: &Recipe) -> Result<Report, RunError> {
 mod tests {
     use super::*;
     use crate::recipe::{
-        DatasetSpec, Family, Grid, LiveSpec, QueryMix, QuerySpec, StreamSpec,
+        DatasetSpec, Family, Grid, LiveSpec, QueryMix, QuerySpec, StreamSpec, WalMode,
     };
 
     /// A deliberately tiny recipe so the full runner (all six
@@ -178,7 +178,9 @@ mod tests {
             grid: Grid { threads: vec![1, 2], shards: vec![1, 2], clusters: vec![0, 3] },
             scenarios: ScenarioKind::ALL.to_vec(),
             stream: StreamSpec { samples: 160, hop: 2, threshold: 18.0 },
-            live: LiveSpec { inserts: 6, deletes: 3 },
+            // Both durability modes, so the runner unit exercises the
+            // wal-always anchor end to end (real temp files + fsync).
+            live: LiveSpec { inserts: 6, deletes: 3, wal: vec![WalMode::Off, WalMode::Always] },
             oracle,
         }
     }
@@ -190,7 +192,8 @@ mod tests {
         assert!(report.oracle_checks > 50, "oracle barely ran: {}", report.oracle_checks);
         assert!(report.metric("knn/t1.s1.c0/ns_per_query").is_some());
         assert!(report.metric("stream/t2.s2.c3/matches").is_some());
-        assert!(report.metric("live/t2.s2.c3/compact_ns").is_some());
+        assert!(report.metric("live/t2.s2.c3.wal-off/compact_ns").is_some());
+        assert!(report.metric("live/t2.s2.c3.wal-always/insert_ns").is_some());
     }
 
     #[test]

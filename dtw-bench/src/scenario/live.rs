@@ -8,6 +8,13 @@
 //! the whole live subsystem — and every live query must satisfy the
 //! delta-shard conservation identity. A final compaction is timed and
 //! re-verified the same way.
+//!
+//! The whole scenario runs once per `[live] wal` mode. `wal-off` is the
+//! bare in-memory path; `wal-always` anchors the engine to a real
+//! on-disk snapshot path and enables `FsyncPolicy::Always`, so the
+//! timed mutation acks (and the final durable compaction) include the
+//! write-ahead append + fsync — the off/always delta on `insert_ns` is
+//! the per-mutation durability tax.
 
 use std::time::Instant;
 
@@ -16,8 +23,10 @@ use dtw_bounds::data::rng::Rng;
 use dtw_bounds::delta::Squared;
 use dtw_bounds::index::query::QueryOptions;
 use dtw_bounds::index::DtwIndex;
+use dtw_bounds::live::FsyncPolicy;
 use dtw_bounds::stream::SubsequenceOptions;
 
+use crate::recipe::WalMode;
 use crate::runner::RunError;
 use crate::scenario::{build_index, ns_since, pairs, stream_pairs, RunCtx};
 
@@ -79,15 +88,42 @@ fn stream_opts(ctx: &RunCtx, threads: usize) -> SubsequenceOptions {
         .with_threads(threads)
 }
 
-/// Run the scenario.
+/// Run the scenario, once per `[live] wal` mode.
 pub fn run(ctx: &mut RunCtx) -> Result<(), RunError> {
+    for mode in ctx.recipe.live.wal.clone() {
+        run_mode(ctx, mode)?;
+    }
+    Ok(())
+}
+
+/// One full mutation/verification pass under one durability mode.
+fn run_mode(ctx: &mut RunCtx, mode: WalMode) -> Result<(), RunError> {
     let point = ctx.recipe.grid.representative_point();
-    let tag = point.tag();
+    let tag = format!("{}.wal-{}", point.tag(), mode.name());
     let k = ctx.recipe.queries.k;
     let classes = ctx.recipe.dataset.classes;
     let spec = ctx.recipe.live.clone();
 
     let mut engine = NnEngine::from_index(build_index(ctx.data, ctx.recipe, point)?);
+    // wal-always pins the engine to a real on-disk anchor so every
+    // timed mutation ack below includes the write-ahead append + fsync
+    // a durable server pays before answering, and the final compaction
+    // includes the durable log rotation.
+    let wal_dir = match mode {
+        WalMode::Off => None,
+        WalMode::Always => {
+            let dir = std::env::temp_dir()
+                .join(format!("dtw-bench-wal-{}-{tag}", std::process::id()));
+            // A stale dir (crashed earlier run, recycled pid) would
+            // hand enable_wal a log to replay — start from nothing.
+            std::fs::remove_dir_all(&dir).ok();
+            std::fs::create_dir_all(&dir).map_err(|e| RunError::Other(e.into()))?;
+            engine
+                .enable_wal(&dir.join("live.snap"), FsyncPolicy::Always)
+                .map_err(RunError::Other)?;
+            Some(dir)
+        }
+    };
     let mut mirror = Mirror {
         rows: ctx
             .data
@@ -172,5 +208,8 @@ pub fn run(ctx: &mut RunCtx) -> Result<(), RunError> {
     ctx.metric_lower("live", &tag, "query_ns", query_ns / queries_run.max(1) as f64, "ns");
     ctx.metric_lower("live", &tag, "compact_ns", compact_ns, "ns");
     ctx.metric_lower("live", &tag, "delta_len_at_compact", delta_len as f64, "count");
+    if let Some(dir) = wal_dir {
+        std::fs::remove_dir_all(&dir).ok();
+    }
     Ok(())
 }

@@ -7,7 +7,7 @@ use std::path::PathBuf;
 
 use dtw_bench::recipe::{
     DatasetSpec, Family, Grid, LiveSpec, OracleMode, QueryMix, QuerySpec, Recipe, RecipeError,
-    ScenarioKind, StreamSpec,
+    ScenarioKind, StreamSpec, WalMode,
 };
 
 fn recipes_dir() -> PathBuf {
@@ -30,7 +30,11 @@ fn sample() -> Recipe {
         grid: Grid { threads: vec![1, 2, 4], shards: vec![1, 4], clusters: vec![0, 5] },
         scenarios: ScenarioKind::ALL.to_vec(),
         stream: StreamSpec { samples: 640, hop: 3, threshold: 7.25 },
-        live: LiveSpec { inserts: 10, deletes: 4 },
+        live: LiveSpec {
+            inserts: 10,
+            deletes: 4,
+            wal: vec![WalMode::Off, WalMode::Always],
+        },
         oracle: OracleMode::Cross,
     }
 }
@@ -145,6 +149,7 @@ fn grid_validation_covers_every_axis() {
         ("hop = 3", "hop = 0"),
         ("threshold = 7.25", "threshold = 0.0"),
         ("deletes = 4", "deletes = 40"),
+        ("wal = [\"off\", \"always\"]", "wal = []"),
         ("k = 4", "k = 41"),
         ("classes = 8", "classes = 0"),
     ];

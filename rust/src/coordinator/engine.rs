@@ -11,6 +11,7 @@
 //! screening cost moves.
 
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 use std::time::Duration;
 
 use crate::bounds::{BoundKind, PreparedSeries};
@@ -18,6 +19,8 @@ use crate::data::Dataset;
 use crate::delta::Squared;
 use crate::index::snapshot::{generation_path, SnapshotError};
 use crate::index::{DtwIndex, QueryOptions, QueryOutcome, Searcher};
+use crate::io::{FileOps, RealFs};
+use crate::live::wal::{self, FsyncPolicy, ReplayInfo, Wal, WalOp};
 use crate::live::LiveState;
 use crate::runtime::{BackendKind, LbBackend, NativeBatchLb};
 use crate::search::nn::NnResult;
@@ -88,6 +91,22 @@ pub struct NnEngine {
     auto_compact: Option<usize>,
     /// Generation snapshots written so far: `(generation, path)`.
     saved: Vec<(u64, PathBuf)>,
+    /// File ops every persisted byte (snapshots, WAL) flows through —
+    /// [`RealFs`] in production, a fault-injecting double in the
+    /// recovery suite.
+    fs: Arc<dyn FileOps>,
+    /// Write-ahead durability, when enabled ([`NnEngine::enable_wal`]).
+    wal: Option<WalState>,
+}
+
+/// The engine's durability attachment: the open log plus the anchor
+/// snapshot path it rotates against.
+struct WalState {
+    wal: Wal,
+    /// The serving snapshot path: recovery loads this file and replays
+    /// its generation's log; rotation persists the new base here.
+    anchor: PathBuf,
+    policy: FsyncPolicy,
 }
 
 impl NnEngine {
@@ -111,7 +130,15 @@ impl NnEngine {
             live: LiveState::new(),
             auto_compact: None,
             saved: Vec::new(),
+            fs: Arc::new(RealFs),
+            wal: None,
         }
+    }
+
+    /// Swap the file-ops implementation (fault injection in the
+    /// recovery suite). Call before [`NnEngine::enable_wal`].
+    pub fn set_fs(&mut self, fs: Arc<dyn FileOps>) {
+        self.fs = fs;
     }
 
     /// Build an engine with a batched screening backend attached.
@@ -204,16 +231,178 @@ impl NnEngine {
         self.searcher.index().window()
     }
 
+    // ---- durability ---------------------------------------------------
+
+    /// Turn on write-ahead durability against `anchor` (the snapshot
+    /// this engine serves from): recover the current generation's log
+    /// (`<anchor>.wal.g<N>`, torn tails dropped), replay its records
+    /// through the exact live mutation path a client would have taken,
+    /// and keep the log open for appends. After this, every accepted
+    /// `insert`/`delete` is logged (and fsynced per `policy`) **before**
+    /// it is applied or acked.
+    ///
+    /// A record that no longer applies (e.g. a log paired with the
+    /// wrong snapshot bytes) is a hard error — that is corruption, not
+    /// a torn tail, and serving from half a log would silently violate
+    /// the recovery contract.
+    pub fn enable_wal(
+        &mut self,
+        anchor: &Path,
+        policy: FsyncPolicy,
+    ) -> anyhow::Result<ReplayInfo> {
+        let (ops, info, wal) =
+            Wal::recover(self.fs.clone(), anchor, self.generation(), policy)
+                .map_err(|e| anyhow::anyhow!("wal recover: {e}"))?;
+        for (n, op) in ops.into_iter().enumerate() {
+            let applied = match op {
+                WalOp::Insert { label, values } => {
+                    self.live.insert(self.searcher.index(), label, values).map(|_| ())
+                }
+                WalOp::Delete { id } => {
+                    let id = usize::try_from(id)
+                        .map_err(|_| anyhow::anyhow!("id {id} exceeds usize"));
+                    id.and_then(|id| self.live.delete(self.searcher.index(), id))
+                }
+            };
+            if let Err(e) = applied {
+                anyhow::bail!(
+                    "wal replay: record {n} of {} no longer applies ({e}) — \
+                     the log does not belong to this snapshot",
+                    info.records
+                );
+            }
+        }
+        self.wal = Some(WalState { wal, anchor: anchor.to_path_buf(), policy });
+        Ok(info)
+    }
+
+    /// True when write-ahead durability is on.
+    pub fn wal_enabled(&self) -> bool {
+        self.wal.is_some()
+    }
+
+    /// Records in the open log (the `wal_records` stats gauge; 0 when
+    /// the WAL is off).
+    pub fn wal_records(&self) -> u64 {
+        self.wal.as_ref().map(|w| w.wal.records()).unwrap_or(0)
+    }
+
+    /// Durable hot-swap onto `next`, rotating the log. Ordering is the
+    /// crash-safety argument (see ARCHITECTURE.md, "Durability & fault
+    /// model"):
+    ///
+    /// 1. create + fsync the new generation's empty log — on failure
+    ///    nothing changed, and a stale empty `.wal.g<M>` is harmless
+    ///    because the anchor still names the old generation;
+    /// 2. persist `next` over the anchor (write-tmp/fsync/rename,
+    ///    atomic) — a crash leaves either old snapshot + old log (the
+    ///    pre state) or new snapshot + its empty log (the post state),
+    ///    and the snapshot's stored generation always selects the one
+    ///    log that matches it;
+    /// 3. swap in memory (clears live state) and adopt the new log;
+    /// 4. best-effort remove of the superseded log — a failure is not
+    ///    an error, the orphan can never be replayed again.
+    ///
+    /// When `next` carries the **same** generation as the served base
+    /// (a `load=` back onto the current generation), the log path does
+    /// not change, so step 1's truncating create would destroy records
+    /// *before* the new base is durable. That case removes the old log
+    /// first (its records are being discarded by design — `load=`
+    /// resets live state even without a crash), then saves, then
+    /// creates the fresh log: every crash point leaves a clean
+    /// old-base-or-new-base state with no cross-base replay possible.
+    /// (Two files cannot be swapped atomically; removing the doomed
+    /// records first is the one ordering that can never replay them
+    /// into a base they don't match. The narrow cost: if the save then
+    /// *fails* — no crash, an I/O error — the engine keeps serving the
+    /// old state but its previously logged records are gone, so those
+    /// mutations would not survive a subsequent crash. The error
+    /// message says so.)
+    fn rotate_onto(&mut self, next: DtwIndex) -> anyhow::Result<()> {
+        let state = self.wal.as_ref().expect("rotation requires an open wal");
+        let anchor = state.anchor.clone();
+        let policy = state.policy;
+        let old_path = state.wal.path().to_path_buf();
+        let same_generation = old_path == wal::wal_path(&anchor, next.generation());
+
+        if same_generation {
+            let _ = self.fs.remove(&old_path);
+        }
+        let new_wal = if same_generation {
+            None
+        } else {
+            Some(
+                Wal::create(self.fs.clone(), &anchor, next.generation(), policy)
+                    .map_err(|e| anyhow::anyhow!("wal rotate: create new log: {e}"))?,
+            )
+        };
+        if let Err(e) = crate::index::snapshot::save_with(&next, &anchor, self.fs.as_ref()) {
+            if same_generation {
+                anyhow::bail!(
+                    "wal rotate: persist new base: {e} — the superseded log was \
+                     already discarded; pending live mutations are no longer \
+                     crash-durable (compact or save to restore durability)"
+                );
+            }
+            anyhow::bail!("wal rotate: persist new base: {e}");
+        }
+        let new_wal = match new_wal {
+            Some(w) => w,
+            None => Wal::create(self.fs.clone(), &anchor, next.generation(), policy)
+                .map_err(|e| anyhow::anyhow!("wal rotate: recreate log: {e}"))?,
+        };
+        self.replace_index(next);
+        if let Some(state) = self.wal.as_mut() {
+            state.wal = new_wal;
+        }
+        if !same_generation {
+            let _ = self.fs.remove(&old_path);
+        }
+        Ok(())
+    }
+
+    /// Install a loaded snapshot as the served index — the `load=`
+    /// protocol verb's engine half. Without a WAL this is exactly
+    /// [`NnEngine::replace_index`]; with one, the swap must also move
+    /// the durable anchor (persist the loaded base over it and rotate
+    /// the log), or a crash after the ack would silently revert the
+    /// rollback.
+    pub fn install_index(&mut self, index: DtwIndex) -> anyhow::Result<()> {
+        if self.wal.is_none() {
+            self.replace_index(index);
+            return Ok(());
+        }
+        self.rotate_onto(index)
+    }
+
     // ---- live mutation ------------------------------------------------
 
     /// Append one series to the delta shard; returns its logical id.
+    /// With the WAL on, the record is logged (and fsynced per policy)
+    /// **before** the state mutates — validation runs first, so a
+    /// logged record is always applicable on replay.
     pub fn insert(&mut self, label: u32, values: Vec<f64>) -> anyhow::Result<usize> {
+        self.live.validate_insert(self.searcher.index(), &values)?;
+        if let Some(state) = self.wal.as_mut() {
+            state
+                .wal
+                .append_insert(label, &values)
+                .map_err(|e| anyhow::anyhow!("wal append (insert): {e}"))?;
+        }
         self.live.insert(self.searcher.index(), label, values)
     }
 
     /// Delete the series with logical id `id` (tombstone a base series
-    /// or drop a delta entry).
+    /// or drop a delta entry). Same log-before-apply contract as
+    /// [`NnEngine::insert`].
     pub fn delete(&mut self, id: usize) -> anyhow::Result<()> {
+        self.live.validate_delete(self.searcher.index(), id)?;
+        if let Some(state) = self.wal.as_mut() {
+            state
+                .wal
+                .append_delete(id as u64)
+                .map_err(|e| anyhow::anyhow!("wal append (delete): {e}"))?;
+        }
         self.live.delete(self.searcher.index(), id)
     }
 
@@ -221,10 +410,25 @@ impl NnEngine {
     /// compacted index is built **aside** (the served index keeps
     /// answering until the build succeeds) and then swapped in with the
     /// deployment backend attachment intact. Returns the new generation.
+    ///
+    /// With the WAL on, the swap is the durable rotation described at
+    /// [`NnEngine::rotate_onto`] — the pending delta is *not* cleared
+    /// until the new base and its log are safely on disk, so a rotation
+    /// failure leaves the engine serving exactly what it served before.
     pub fn compact(&mut self) -> anyhow::Result<u64> {
-        let next = self.live.compact(self.searcher.index())?;
+        if self.wal.is_none() {
+            let next = self.live.compact(self.searcher.index())?;
+            let generation = next.generation();
+            self.replace_index(next);
+            return Ok(generation);
+        }
+        let next = crate::live::compacted(
+            self.searcher.index(),
+            self.live.delta(),
+            self.live.tombstones(),
+        )?;
         let generation = next.generation();
-        self.replace_index(next);
+        self.rotate_onto(next)?;
         Ok(generation)
     }
 
@@ -280,7 +484,8 @@ impl NnEngine {
     pub fn save_generation(&mut self, base: &Path) -> Result<(PathBuf, u64), SnapshotError> {
         let generation = self.generation();
         let path = generation_path(base, generation);
-        let bytes = self.searcher.index().save(&path)?;
+        let bytes =
+            crate::index::snapshot::save_with(self.searcher.index(), &path, self.fs.as_ref())?;
         self.saved.push((generation, path.clone()));
         Ok((path, bytes))
     }
@@ -577,6 +782,50 @@ mod tests {
         assert_eq!(engine.maybe_auto_compact().unwrap(), Some(1), "threshold reached");
         assert_eq!(engine.generation(), 1);
         assert_eq!(engine.delta_len(), 0);
+    }
+
+    #[test]
+    fn wal_replay_recovers_acked_mutations_bit_equal() {
+        let ds = &generate_archive(&ArchiveSpec::new(Scale::Tiny, 68))[0];
+        let index = crate::index::DtwIndex::builder_from_dataset(ds).build().unwrap();
+        let fs = crate::io::FaultFs::new();
+        let anchor = PathBuf::from("serve.snap");
+
+        let mut engine = NnEngine::from_index(index.clone());
+        engine.set_fs(Arc::new(fs.clone()));
+        let info = engine.enable_wal(&anchor, FsyncPolicy::Always).unwrap();
+        assert_eq!(info.records, 0);
+        assert!(engine.wal_enabled());
+        engine.insert(9, ds.test[0].values.clone()).unwrap();
+        engine.delete(0).unwrap();
+        let want = engine.query_with(&ds.test[2].values, &QueryOptions::k(3));
+        drop(engine);
+
+        // A fresh process over the same base replays the log through the
+        // identical mutation path — answers match bit for bit.
+        let mut engine = NnEngine::from_index(index.clone());
+        engine.set_fs(Arc::new(fs.clone()));
+        let info = engine.enable_wal(&anchor, FsyncPolicy::Always).unwrap();
+        assert_eq!(info.records, 2);
+        assert!(!info.truncated);
+        assert_eq!(engine.wal_records(), 2);
+        let got = engine.query_with(&ds.test[2].values, &QueryOptions::k(3));
+        assert_eq!(want.distances(), got.distances());
+
+        // Compaction rotates: new base persisted over the anchor, fresh
+        // empty log for generation 1, old log gone.
+        let generation = engine.compact().unwrap();
+        assert_eq!(generation, 1);
+        assert_eq!(engine.wal_records(), 0);
+        assert!(fs.exists(&wal::wal_path(&anchor, 1)));
+        assert!(!fs.exists(&wal::wal_path(&anchor, 0)));
+        let loaded = crate::index::snapshot::load_with(&anchor, &fs).unwrap();
+        assert_eq!(loaded.generation(), 1);
+
+        // Rejected mutations never touch the log.
+        assert!(engine.insert(1, vec![]).is_err());
+        assert!(engine.delete(10_000).is_err());
+        assert_eq!(engine.wal_records(), 0);
     }
 
     /// Exactness of the PJRT path (needs `make artifacts` + real XLA).

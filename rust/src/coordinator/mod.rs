@@ -29,6 +29,21 @@
 //!   `examples/serve.rs`; the wire format is specified with worked
 //!   examples in `docs/protocol.md`).
 //!
+//! ## Hardening & durability
+//!
+//! The serving path is defended end to end. The server caps request
+//! size and idle time per connection ([`ServerOptions`]; `err=too-large`
+//! / `err=timeout`). The router bounds its control/mutation queue and
+//! sheds overload with [`Busy`] (`err=busy`), isolates panicking
+//! requests behind `catch_unwind` so one bad query fails alone
+//! (`err=internal`), and exposes its counters through
+//! [`Router::stats`] (the `stats=` verb). Mutations accepted while
+//! serving from a snapshot anchor are made crash-durable through the
+//! engine's write-ahead log ([`crate::live::wal`]): appended and
+//! (per [`crate::live::FsyncPolicy`]) fsynced *before* the ack, and
+//! replayed through the identical mutation path on restart, so recovery
+//! is bit-equal to an uninterrupted run.
+//!
 //! ## Example
 //!
 //! A router over a shared index answers exact k-NN queries from any
@@ -69,7 +84,7 @@ pub mod server;
 pub use engine::{EnginePath, GenerationInfo, NnEngine, QueryResponse};
 pub use pool::WorkerPool;
 pub use router::{
-    CompactReceipt, DeleteReceipt, InsertReceipt, Router, RouterStats, SnapshotLoaded,
-    SnapshotSaved,
+    Busy, CompactReceipt, DeleteReceipt, InsertReceipt, Router, RouterStats,
+    SnapshotLoaded, SnapshotSaved,
 };
-pub use server::Server;
+pub use server::{Server, ServerOptions};

@@ -12,9 +12,27 @@
 //! The cheapest way to stand one up is [`Router::spawn_index`]: hand it
 //! a shared [`DtwIndex`] and the dispatch thread builds its searcher
 //! from the index's configuration.
+//!
+//! ## Hardening
+//!
+//! The dispatch loop is the serving process's single point of failure,
+//! so it is defended on two fronts:
+//!
+//! * **Overload shedding** — the `try_*` submit variants refuse new
+//!   work with [`Busy`] once the queue holds [`Router::queue_cap`]
+//!   unpicked messages (the server replies `err=busy`); the blocking
+//!   variants never shed (internal/CLI callers prefer waiting).
+//! * **Panic isolation** — batch execution, stream scans and control
+//!   handling each run under `catch_unwind`: a panicking request drops
+//!   its reply sender (the waiting client sees a disconnect →
+//!   `err=internal`), bumps the `panics` counter, and the loop keeps
+//!   serving everyone else.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
 
@@ -32,8 +50,42 @@ enum Msg {
     Delete(usize, Sender<anyhow::Result<DeleteReceipt>>),
     Compact(Sender<anyhow::Result<CompactReceipt>>),
     Gens(Sender<GenerationInfo>),
+    Stats(Sender<RouterStats>),
     Shutdown,
 }
+
+/// Refused by the `try_*` submit variants when the router's queue is at
+/// capacity — the shed-on-overload signal (wire reply: `err=busy`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Busy;
+
+impl std::fmt::Display for Busy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "router queue at capacity")
+    }
+}
+
+impl std::error::Error for Busy {}
+
+/// State shared between submitters and the dispatch thread: queue
+/// accounting for shedding, plus the hardening counters.
+struct Shared {
+    /// Messages submitted but not yet picked up by dispatch.
+    pending: AtomicUsize,
+    /// Queue capacity the `try_*` paths admit against (admission is
+    /// approximate under contention — the cap bounds backlog, it is not
+    /// a strict semaphore).
+    cap: AtomicUsize,
+    /// Requests refused with [`Busy`].
+    shed: AtomicUsize,
+    /// Panics caught by the dispatch loop (each failed one request).
+    panics: AtomicUsize,
+    /// Test hook: make the next batch execution panic.
+    poison: AtomicBool,
+}
+
+/// Default queue capacity for the fallible submit paths.
+const DEFAULT_QUEUE_CAP: usize = 1024;
 
 /// Receipt for a `save=` request: where the snapshot landed and its
 /// size. The path is the **generation-versioned** one actually written
@@ -90,6 +142,7 @@ pub struct SnapshotLoaded {
 pub struct Router {
     tx: Sender<Msg>,
     handle: Option<JoinHandle<RouterStats>>,
+    shared: Arc<Shared>,
 }
 
 /// Dispatch-loop statistics, returned by [`Router::shutdown`].
@@ -127,6 +180,16 @@ pub struct RouterStats {
     pub delta_len: usize,
     /// Gauge: generation of the base index when the loop last settled.
     pub generation: u64,
+    /// Panics caught by the dispatch loop (each failed exactly one
+    /// request; the loop kept serving).
+    pub panics: usize,
+    /// Requests refused with [`Busy`] under overload.
+    pub shed: usize,
+    /// Gauge: submitted-but-unpicked messages when the loop last
+    /// settled.
+    pub pending: usize,
+    /// Gauge: records in the engine's write-ahead log (0 = WAL off).
+    pub wal_records: u64,
 }
 
 impl Router {
@@ -140,34 +203,51 @@ impl Router {
         F: FnOnce() -> NnEngine + Send + 'static,
     {
         let (tx, rx): (Sender<Msg>, Receiver<Msg>) = mpsc::channel();
+        let shared = Arc::new(Shared {
+            pending: AtomicUsize::new(0),
+            cap: AtomicUsize::new(DEFAULT_QUEUE_CAP),
+            shed: AtomicUsize::new(0),
+            panics: AtomicUsize::new(0),
+            poison: AtomicBool::new(false),
+        });
+        let shared_loop = shared.clone();
         let handle = std::thread::spawn(move || {
+            let shared = shared_loop;
             let mut engine = factory();
             let mut stats = RouterStats::default();
             loop {
                 // Block for the first message…
-                let first = match rx.recv() {
-                    Ok(Msg::Query(q, opts, reply)) => (q, opts, reply),
-                    Ok(Msg::Stream(samples, opts, reply)) => {
+                let msg = match rx.recv() {
+                    Ok(m) => m,
+                    Err(_) => {
+                        settle_gauges(&engine, &shared, &mut stats);
+                        return stats;
+                    }
+                };
+                if !matches!(msg, Msg::Shutdown) {
+                    shared.pending.fetch_sub(1, Ordering::SeqCst);
+                }
+                let first = match msg {
+                    Msg::Query(q, opts, reply) => (q, opts, reply),
+                    Msg::Stream(samples, opts, reply) => {
                         // Stream requests are self-contained passes over
                         // their own samples — nothing to batch.
-                        stats.streams += 1;
-                        let _ = reply.send(engine.query_stream(&samples, opts));
+                        serve_stream(&mut engine, &shared, &mut stats, samples, opts, reply);
                         continue;
                     }
-                    Ok(
-                        m @ (Msg::Save(..)
-                        | Msg::Load(..)
-                        | Msg::Insert(..)
-                        | Msg::Delete(..)
-                        | Msg::Compact(..)
-                        | Msg::Gens(..)),
-                    ) => {
-                        serve_control(&mut engine, &mut stats, m);
+                    m @ (Msg::Save(..)
+                    | Msg::Load(..)
+                    | Msg::Insert(..)
+                    | Msg::Delete(..)
+                    | Msg::Compact(..)
+                    | Msg::Gens(..)
+                    | Msg::Stats(..)) => {
+                        serve_control(&mut engine, &shared, &mut stats, m);
                         auto_compact(&mut engine, &mut stats);
                         continue;
                     }
-                    Ok(Msg::Shutdown) | Err(_) => {
-                        settle_gauges(&engine, &mut stats);
+                    Msg::Shutdown => {
+                        settle_gauges(&engine, &shared, &mut stats);
                         return stats;
                     }
                 };
@@ -179,25 +259,23 @@ impl Router {
                 let mut shutdown = false;
                 while batch.len() < max_batch {
                     match rx.try_recv() {
-                        Ok(Msg::Query(q, opts, reply)) => batch.push((q, opts, reply)),
-                        Ok(Msg::Stream(samples, opts, reply)) => {
-                            streams.push((samples, opts, reply));
-                        }
-                        // Control traffic drained mid-batch runs after
-                        // the batch, like streams: queries already queued
-                        // are answered by the index (and live overlay)
-                        // they were sent to.
-                        Ok(
-                            m @ (Msg::Save(..)
-                            | Msg::Load(..)
-                            | Msg::Insert(..)
-                            | Msg::Delete(..)
-                            | Msg::Compact(..)
-                            | Msg::Gens(..)),
-                        ) => controls.push(m),
                         Ok(Msg::Shutdown) => {
                             shutdown = true;
                             break;
+                        }
+                        Ok(m) => {
+                            shared.pending.fetch_sub(1, Ordering::SeqCst);
+                            match m {
+                                Msg::Query(q, opts, reply) => batch.push((q, opts, reply)),
+                                Msg::Stream(samples, opts, reply) => {
+                                    streams.push((samples, opts, reply));
+                                }
+                                // Control traffic drained mid-batch runs
+                                // after the batch, like streams: queries
+                                // already queued are answered by the index
+                                // (and live overlay) they were sent to.
+                                other => controls.push(other),
+                            }
                         }
                         Err(_) => break,
                     }
@@ -214,37 +292,56 @@ impl Router {
                     items.push((q, opts));
                     replies.push(reply);
                 }
-                let responses = engine.query_batch_with(&items);
-                for (reply, resp) in replies.into_iter().zip(responses) {
-                    if resp.batched {
-                        stats.batched += 1;
-                    } else {
-                        stats.scalar += 1;
+                // The batch runs under catch_unwind: a panicking query
+                // kills its batch's replies (every waiting client sees a
+                // disconnect → `err=internal`), not the process. The
+                // engine's query path only mutates per-call scratch that
+                // the next call resizes/rewrites from scratch, so
+                // serving on is sound (AssertUnwindSafe).
+                let poisoned = shared.poison.swap(false, Ordering::SeqCst);
+                let responses = catch_unwind(AssertUnwindSafe(|| {
+                    if poisoned {
+                        panic!("poisoned batch (test hook)");
                     }
-                    stats.clusters_pruned += resp.stats.clusters_pruned;
-                    stats.cluster_members_pruned += resp.stats.cluster_members_pruned;
-                    let _ = reply.send(resp);
+                    engine.query_batch_with(&items)
+                }));
+                match responses {
+                    Ok(responses) => {
+                        for (reply, resp) in replies.into_iter().zip(responses) {
+                            if resp.batched {
+                                stats.batched += 1;
+                            } else {
+                                stats.scalar += 1;
+                            }
+                            stats.clusters_pruned += resp.stats.clusters_pruned;
+                            stats.cluster_members_pruned += resp.stats.cluster_members_pruned;
+                            let _ = reply.send(resp);
+                        }
+                    }
+                    Err(_) => {
+                        shared.panics.fetch_add(1, Ordering::SeqCst);
+                        drop(replies);
+                    }
                 }
                 // Stream requests drained mid-batch run after the batch
                 // (they never delay the latency-sensitive query path).
                 for (samples, opts, reply) in streams {
-                    stats.streams += 1;
-                    let _ = reply.send(engine.query_stream(&samples, opts));
+                    serve_stream(&mut engine, &shared, &mut stats, samples, opts, reply);
                 }
                 let had_controls = !controls.is_empty();
                 for msg in controls {
-                    serve_control(&mut engine, &mut stats, msg);
+                    serve_control(&mut engine, &shared, &mut stats, msg);
                 }
                 if had_controls {
                     auto_compact(&mut engine, &mut stats);
                 }
-                settle_gauges(&engine, &mut stats);
+                settle_gauges(&engine, &shared, &mut stats);
                 if shutdown {
                     return stats;
                 }
             }
         });
-        Router { tx, handle: Some(handle) }
+        Router { tx, handle: Some(handle), shared }
     }
 
     /// Spawn a router over a shared [`DtwIndex`]: the dispatch thread
@@ -253,6 +350,43 @@ impl Router {
     pub fn spawn_index(index: DtwIndex) -> Router {
         let max_batch = index.max_batch();
         Router::spawn(move || NnEngine::from_index(index), max_batch)
+    }
+
+    /// Enqueue unconditionally (the blocking callers' path — they
+    /// prefer waiting over shedding).
+    fn submit(&self, msg: Msg) {
+        self.shared.pending.fetch_add(1, Ordering::SeqCst);
+        self.tx.send(msg).expect("router alive");
+    }
+
+    /// Enqueue iff the queue is under capacity; otherwise count a shed
+    /// and refuse with [`Busy`].
+    fn try_submit(&self, msg: Msg) -> Result<(), Busy> {
+        let cap = self.shared.cap.load(Ordering::SeqCst);
+        if self.shared.pending.load(Ordering::SeqCst) >= cap {
+            self.shared.shed.fetch_add(1, Ordering::SeqCst);
+            return Err(Busy);
+        }
+        self.submit(msg);
+        Ok(())
+    }
+
+    /// Set the queue capacity the `try_*` submit paths admit against
+    /// (`--queue-cap`; 0 sheds everything — a deterministic test hook).
+    pub fn set_queue_cap(&self, cap: usize) {
+        self.shared.cap.store(cap, Ordering::SeqCst);
+    }
+
+    /// The current queue capacity.
+    pub fn queue_cap(&self) -> usize {
+        self.shared.cap.load(Ordering::SeqCst)
+    }
+
+    /// Make the next dispatched query batch panic (exercises the
+    /// panic-isolation path deterministically). Test hook.
+    #[doc(hidden)]
+    pub fn poison_next_query(&self) {
+        self.shared.poison.store(true, Ordering::SeqCst);
     }
 
     /// Submit a query and block for the exact 1-NN answer.
@@ -264,7 +398,7 @@ impl Router {
     /// block for the outcome.
     pub fn query_with(&self, values: Vec<f64>, opts: QueryOptions) -> QueryOutcome {
         let (reply_tx, reply_rx) = mpsc::channel();
-        self.tx.send(Msg::Query(values, opts, reply_tx)).expect("router alive");
+        self.submit(Msg::Query(values, opts, reply_tx));
         reply_rx.recv().expect("router answers")
     }
 
@@ -281,8 +415,90 @@ impl Router {
         opts: QueryOptions,
     ) -> Receiver<QueryOutcome> {
         let (reply_tx, reply_rx) = mpsc::channel();
-        self.tx.send(Msg::Query(values, opts, reply_tx)).expect("router alive");
+        self.submit(Msg::Query(values, opts, reply_tx));
         reply_rx
+    }
+
+    // ---- fallible (shedding) submit variants — the server's paths ----
+    //
+    // Each returns the reply receiver instead of blocking: the server
+    // maps `Busy` to `err=busy` and a dropped reply (a panic killed the
+    // request) to `err=internal`.
+
+    /// [`Router::query_with`], shedding under overload.
+    pub fn try_query_with(
+        &self,
+        values: Vec<f64>,
+        opts: QueryOptions,
+    ) -> Result<Receiver<QueryOutcome>, Busy> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.try_submit(Msg::Query(values, opts, reply_tx))?;
+        Ok(reply_rx)
+    }
+
+    /// [`Router::stream`], shedding under overload.
+    pub fn try_stream(
+        &self,
+        samples: Vec<f64>,
+        opts: SubsequenceOptions,
+    ) -> Result<Receiver<anyhow::Result<StreamReport>>, Busy> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.try_submit(Msg::Stream(samples, opts, reply_tx))?;
+        Ok(reply_rx)
+    }
+
+    /// [`Router::insert`], shedding under overload.
+    pub fn try_insert(
+        &self,
+        label: u32,
+        values: Vec<f64>,
+    ) -> Result<Receiver<anyhow::Result<InsertReceipt>>, Busy> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.try_submit(Msg::Insert(label, values, reply_tx))?;
+        Ok(reply_rx)
+    }
+
+    /// [`Router::delete`], shedding under overload.
+    pub fn try_delete(&self, id: usize) -> Result<Receiver<anyhow::Result<DeleteReceipt>>, Busy> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.try_submit(Msg::Delete(id, reply_tx))?;
+        Ok(reply_rx)
+    }
+
+    /// [`Router::compact`], shedding under overload.
+    pub fn try_compact(&self) -> Result<Receiver<anyhow::Result<CompactReceipt>>, Busy> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.try_submit(Msg::Compact(reply_tx))?;
+        Ok(reply_rx)
+    }
+
+    /// [`Router::save_snapshot`], shedding under overload.
+    pub fn try_save(
+        &self,
+        path: impl Into<PathBuf>,
+    ) -> Result<Receiver<Result<SnapshotSaved, SnapshotError>>, Busy> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.try_submit(Msg::Save(path.into(), reply_tx))?;
+        Ok(reply_rx)
+    }
+
+    /// [`Router::load_snapshot`], shedding under overload.
+    pub fn try_load(
+        &self,
+        path: impl Into<PathBuf>,
+    ) -> Result<Receiver<Result<SnapshotLoaded, SnapshotError>>, Busy> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.try_submit(Msg::Load(path.into(), reply_tx))?;
+        Ok(reply_rx)
+    }
+
+    /// A point-in-time copy of the dispatch loop's statistics (the
+    /// `stats=` protocol verb). Blocking and never shed — observability
+    /// must work *especially* under overload.
+    pub fn stats(&self) -> RouterStats {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.submit(Msg::Stats(reply_tx));
+        reply_rx.recv().expect("router answers")
     }
 
     /// Submit a finite sample stream for subsequence search (threshold
@@ -294,7 +510,7 @@ impl Router {
         opts: SubsequenceOptions,
     ) -> anyhow::Result<StreamReport> {
         let (reply_tx, reply_rx) = mpsc::channel();
-        self.tx.send(Msg::Stream(samples, opts, reply_tx)).expect("router alive");
+        self.submit(Msg::Stream(samples, opts, reply_tx));
         reply_rx.recv().expect("router answers")
     }
 
@@ -307,7 +523,7 @@ impl Router {
         path: impl Into<PathBuf>,
     ) -> Result<SnapshotSaved, SnapshotError> {
         let (reply_tx, reply_rx) = mpsc::channel();
-        self.tx.send(Msg::Save(path.into(), reply_tx)).expect("router alive");
+        self.submit(Msg::Save(path.into(), reply_tx));
         reply_rx.recv().expect("router answers")
     }
 
@@ -320,7 +536,7 @@ impl Router {
         path: impl Into<PathBuf>,
     ) -> Result<SnapshotLoaded, SnapshotError> {
         let (reply_tx, reply_rx) = mpsc::channel();
-        self.tx.send(Msg::Load(path.into(), reply_tx)).expect("router alive");
+        self.submit(Msg::Load(path.into(), reply_tx));
         reply_rx.recv().expect("router answers")
     }
 
@@ -331,7 +547,7 @@ impl Router {
     /// set. Blocks for the receipt carrying the assigned logical id.
     pub fn insert(&self, label: u32, values: Vec<f64>) -> anyhow::Result<InsertReceipt> {
         let (reply_tx, reply_rx) = mpsc::channel();
-        self.tx.send(Msg::Insert(label, values, reply_tx)).expect("router alive");
+        self.submit(Msg::Insert(label, values, reply_tx));
         reply_rx.recv().expect("router answers")
     }
 
@@ -340,7 +556,7 @@ impl Router {
     /// Blocks for the receipt.
     pub fn delete(&self, id: usize) -> anyhow::Result<DeleteReceipt> {
         let (reply_tx, reply_rx) = mpsc::channel();
-        self.tx.send(Msg::Delete(id, reply_tx)).expect("router alive");
+        self.submit(Msg::Delete(id, reply_tx));
         reply_rx.recv().expect("router answers")
     }
 
@@ -351,7 +567,7 @@ impl Router {
     /// Blocks for the receipt.
     pub fn compact(&self) -> anyhow::Result<CompactReceipt> {
         let (reply_tx, reply_rx) = mpsc::channel();
-        self.tx.send(Msg::Compact(reply_tx)).expect("router alive");
+        self.submit(Msg::Compact(reply_tx));
         reply_rx.recv().expect("router answers")
     }
 
@@ -360,7 +576,7 @@ impl Router {
     /// tombstone counts, and the generation snapshots saved so far.
     pub fn generations(&self) -> GenerationInfo {
         let (reply_tx, reply_rx) = mpsc::channel();
-        self.tx.send(Msg::Gens(reply_tx)).expect("router alive");
+        self.submit(Msg::Gens(reply_tx));
         reply_rx.recv().expect("router answers")
     }
 
@@ -376,9 +592,44 @@ impl Router {
     }
 }
 
+/// Serve one stream request under panic isolation: the closure owns the
+/// reply sender, so a panic drops it and the waiting client sees a
+/// disconnect (`err=internal`) instead of a hung connection.
+fn serve_stream(
+    engine: &mut NnEngine,
+    shared: &Shared,
+    stats: &mut RouterStats,
+    samples: Vec<f64>,
+    opts: SubsequenceOptions,
+    reply: Sender<anyhow::Result<StreamReport>>,
+) {
+    stats.streams += 1;
+    let caught = catch_unwind(AssertUnwindSafe(|| {
+        let _ = reply.send(engine.query_stream(&samples, opts));
+    }));
+    if caught.is_err() {
+        shared.panics.fetch_add(1, Ordering::SeqCst);
+    }
+}
+
 /// Serve one control message (snapshot or live mutation) on the
-/// dispatch thread. A failed `load=` leaves the current index serving.
-fn serve_control(engine: &mut NnEngine, stats: &mut RouterStats, msg: Msg) {
+/// dispatch thread, under panic isolation (a panic drops the message's
+/// reply sender — `err=internal` at the client — and the loop serves
+/// on). A failed `load=` leaves the current index serving.
+fn serve_control(engine: &mut NnEngine, shared: &Shared, stats: &mut RouterStats, msg: Msg) {
+    let caught =
+        catch_unwind(AssertUnwindSafe(|| serve_control_inner(engine, shared, stats, msg)));
+    if caught.is_err() {
+        shared.panics.fetch_add(1, Ordering::SeqCst);
+    }
+}
+
+fn serve_control_inner(
+    engine: &mut NnEngine,
+    shared: &Shared,
+    stats: &mut RouterStats,
+    msg: Msg,
+) {
     match msg {
         Msg::Save(path, reply) => {
             stats.saves += 1;
@@ -388,15 +639,23 @@ fn serve_control(engine: &mut NnEngine, stats: &mut RouterStats, msg: Msg) {
             let _ = reply.send(r);
         }
         Msg::Load(path, reply) => {
-            let r = DtwIndex::load(&path).map(|idx| {
+            let r = DtwIndex::load(&path).and_then(|idx| {
                 let info = SnapshotLoaded {
                     series: idx.len(),
                     shards: idx.shard_count(),
                     window: idx.window(),
                 };
-                engine.replace_index(idx);
+                // With a WAL attached the swap also moves the durable
+                // anchor; a rotation failure surfaces as an I/O error
+                // and the old index keeps serving.
+                engine.install_index(idx).map_err(|e| {
+                    SnapshotError::Io(std::io::Error::new(
+                        std::io::ErrorKind::Other,
+                        e.to_string(),
+                    ))
+                })?;
                 stats.loads += 1;
-                info
+                Ok(info)
             });
             let _ = reply.send(r);
         }
@@ -431,6 +690,10 @@ fn serve_control(engine: &mut NnEngine, stats: &mut RouterStats, msg: Msg) {
         Msg::Gens(reply) => {
             let _ = reply.send(engine.generations());
         }
+        Msg::Stats(reply) => {
+            settle_gauges(engine, shared, stats);
+            let _ = reply.send(*stats);
+        }
         Msg::Query(..) | Msg::Stream(..) | Msg::Shutdown => {
             unreachable!("only control messages reach serve_control")
         }
@@ -446,10 +709,15 @@ fn auto_compact(engine: &mut NnEngine, stats: &mut RouterStats) {
     }
 }
 
-/// Refresh the gauge fields from the engine's live state.
-fn settle_gauges(engine: &NnEngine, stats: &mut RouterStats) {
+/// Refresh the gauge fields from the engine's live state and the shared
+/// hardening counters.
+fn settle_gauges(engine: &NnEngine, shared: &Shared, stats: &mut RouterStats) {
     stats.delta_len = engine.delta_len();
     stats.generation = engine.generation();
+    stats.wal_records = engine.wal_records();
+    stats.panics = shared.panics.load(Ordering::SeqCst);
+    stats.shed = shared.shed.load(Ordering::SeqCst);
+    stats.pending = shared.pending.load(Ordering::SeqCst);
 }
 
 impl Drop for Router {
@@ -661,6 +929,62 @@ mod tests {
         assert_eq!(stats.inserts, 2);
         assert_eq!(stats.compactions, 1);
         assert_eq!(stats.generation, 1);
+    }
+
+    #[test]
+    fn zero_cap_sheds_with_busy_and_counts() {
+        let ds = &generate_archive(&ArchiveSpec::new(Scale::Tiny, 78))[0];
+        let index = crate::index::DtwIndex::builder_from_dataset(ds).build().unwrap();
+        let router = Router::spawn_index(index);
+        router.set_queue_cap(0);
+        assert_eq!(router.queue_cap(), 0);
+        let q = ds.test[0].values.clone();
+        assert_eq!(router.try_query_with(q.clone(), QueryOptions::k(1)).err(), Some(Busy));
+        assert_eq!(router.try_insert(5, q.clone()).err(), Some(Busy));
+        assert_eq!(router.try_compact().err(), Some(Busy));
+        // Blocking paths never shed — and `stats` itself must keep
+        // working under overload.
+        let resp = router.query(q.clone());
+        assert!(resp.result.distance.is_finite());
+        let stats = router.stats();
+        assert_eq!(stats.shed, 3);
+        assert_eq!(stats.served, 1);
+        // Raising the cap readmits.
+        router.set_queue_cap(1024);
+        let rx = router.try_query_with(q, QueryOptions::k(1)).unwrap();
+        assert!(rx.recv().unwrap().best().unwrap().distance.is_finite());
+    }
+
+    #[test]
+    fn panicking_query_fails_only_its_request() {
+        let ds = &generate_archive(&ArchiveSpec::new(Scale::Tiny, 79))[0];
+        let index = crate::index::DtwIndex::builder_from_dataset(ds).build().unwrap();
+        let router = Router::spawn_index(index);
+        let q = ds.test[0].values.clone();
+        router.poison_next_query();
+        let rx = router.query_async(q.clone());
+        assert!(rx.recv().is_err(), "the poisoned batch drops its replies");
+        // The loop survived: the next query is served normally.
+        let resp = router.query(q);
+        assert!(resp.result.distance.is_finite());
+        let stats = router.shutdown();
+        assert_eq!(stats.panics, 1);
+        assert_eq!(stats.pending, 0);
+    }
+
+    #[test]
+    fn stats_verb_reports_the_live_gauges() {
+        let ds = &generate_archive(&ArchiveSpec::new(Scale::Tiny, 80))[0];
+        let index = crate::index::DtwIndex::builder_from_dataset(ds).build().unwrap();
+        let router = Router::spawn_index(index);
+        router.insert(3, ds.test[0].values.clone()).unwrap();
+        let stats = router.stats();
+        assert_eq!(stats.inserts, 1);
+        assert_eq!(stats.delta_len, 1);
+        assert_eq!(stats.generation, 0);
+        assert_eq!(stats.wal_records, 0, "no wal attached");
+        assert_eq!(stats.panics, 0);
+        assert_eq!(stats.shed, 0);
     }
 
     #[test]

@@ -39,6 +39,8 @@
 //!   saved=<g:path,...|->`). Every search path stays bit-identical to
 //!   a cold rebuild over the mutated series set; failures answer
 //!   `err=<verb> <why>` and leave the served index intact;
+//! * observability: `stats=;` dumps the router's counters and gauges
+//!   (`stats served=<n> ... panics=<n> shed=<n> wal_records=<n>`);
 //! * `PING` → `PONG`; malformed input → `ERR <why>`.
 //!
 //! One thread per connection feeds the shared router, whose dispatch loop
@@ -47,11 +49,30 @@
 //! [`crate::runtime::LbBackend`] the engine carries. `stream=` requests
 //! run after any queued query batch so they never delay the
 //! latency-sensitive k-NN path.
+//!
+//! ## Hardening ([`ServerOptions`])
+//!
+//! Connections are defended against slow and abusive clients:
+//!
+//! * **Bounded requests** — a line longer than
+//!   [`ServerOptions::max_request`] bytes is discarded (consumed up to
+//!   its newline, never buffered) and answered `err=too-large …`; the
+//!   connection stays usable. This applies to *every* verb, including
+//!   the legacy bare-query and `stream=` payload paths.
+//! * **Read timeouts** — with [`ServerOptions::read_timeout`] set, a
+//!   connection idle past the deadline is answered `err=timeout …` and
+//!   closed, so stalled clients cannot pin connection threads forever.
+//! * **Overload + panic mapping** — router shedding surfaces as
+//!   `err=busy …`; a request whose dispatch-side execution panicked
+//!   (reply channel dropped) surfaces as `err=internal …`. Neither
+//!   kills the connection.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::Receiver;
 use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
@@ -59,7 +80,26 @@ use crate::index::QueryOptions;
 use crate::stream::SubsequenceOptions;
 
 use super::engine::{EnginePath, QueryResponse};
-use super::router::Router;
+use super::router::{Busy, Router};
+
+/// Per-connection serving limits and defaults.
+#[derive(Debug, Clone, Copy)]
+pub struct ServerOptions {
+    /// `k` applied to requests without a `k=` prefix.
+    pub default_k: usize,
+    /// Close a connection idle longer than this (`err=timeout`);
+    /// `None` = wait forever (trusted/test clients).
+    pub read_timeout: Option<Duration>,
+    /// Maximum request-line length in bytes; longer lines answer
+    /// `err=too-large` without ever being buffered in full.
+    pub max_request: usize,
+}
+
+impl Default for ServerOptions {
+    fn default() -> ServerOptions {
+        ServerOptions { default_k: 1, read_timeout: None, max_request: 1024 * 1024 }
+    }
+}
 
 /// A running server (listener thread + per-connection threads).
 pub struct Server {
@@ -72,7 +112,7 @@ impl Server {
     /// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral port) and serve
     /// queries through `router`. Requests without a `k=` prefix are 1-NN.
     pub fn spawn(addr: &str, router: Arc<Router>) -> Result<Server> {
-        Server::spawn_with_default_k(addr, router, 1)
+        Server::spawn_with_options(addr, router, ServerOptions::default())
     }
 
     /// [`Server::spawn`] with a different default `k` applied to
@@ -82,7 +122,20 @@ impl Server {
         router: Arc<Router>,
         default_k: usize,
     ) -> Result<Server> {
-        let default_k = default_k.max(1);
+        Server::spawn_with_options(
+            addr,
+            router,
+            ServerOptions { default_k, ..ServerOptions::default() },
+        )
+    }
+
+    /// [`Server::spawn`] with full per-connection limits.
+    pub fn spawn_with_options(
+        addr: &str,
+        router: Arc<Router>,
+        opts: ServerOptions,
+    ) -> Result<Server> {
+        let opts = ServerOptions { default_k: opts.default_k.max(1), ..opts };
         let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
@@ -97,7 +150,7 @@ impl Server {
                         // Detached: connection threads end at client EOF
                         // (or process exit); joining them here would make
                         // shutdown wait on idle clients.
-                        std::thread::spawn(move || handle_conn(stream, router, default_k));
+                        std::thread::spawn(move || handle_conn(stream, router, opts));
                     }
                     Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                         std::thread::sleep(std::time::Duration::from_millis(5));
@@ -137,24 +190,123 @@ impl Drop for Server {
     }
 }
 
-fn handle_conn(stream: TcpStream, router: Arc<Router>, default_k: usize) {
+fn handle_conn(stream: TcpStream, router: Arc<Router>, opts: ServerOptions) {
     let peer = stream.peer_addr().ok();
+    if stream.set_read_timeout(opts.read_timeout).is_err() {
+        return;
+    }
     let mut writer = match stream.try_clone() {
         Ok(w) => w,
         Err(_) => return,
     };
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = match line {
-            Ok(l) => l,
+    let mut reader = BufReader::new(stream);
+    loop {
+        match read_bounded_line(&mut reader, opts.max_request) {
+            Ok(Request::Eof) => break,
+            Ok(Request::TooLarge) => {
+                let reply =
+                    format!("err=too-large request exceeds {} bytes\n", opts.max_request);
+                if writer.write_all(reply.as_bytes()).is_err() {
+                    break;
+                }
+            }
+            Ok(Request::Line(line)) => {
+                let reply = respond(&line, &router, opts.default_k);
+                if writer.write_all(reply.as_bytes()).is_err()
+                    || writer.write_all(b"\n").is_err()
+                {
+                    break;
+                }
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                // Idle past the read deadline: tell the client why the
+                // connection is going away, then close it.
+                let _ = writer.write_all(b"err=timeout idle connection closed\n");
+                break;
+            }
             Err(_) => break,
-        };
-        let reply = respond(&line, &router, default_k);
-        if writer.write_all(reply.as_bytes()).is_err() || writer.write_all(b"\n").is_err() {
-            break;
         }
     }
     log::debug!("connection {peer:?} closed");
+}
+
+/// One request as read off the wire by [`read_bounded_line`].
+enum Request {
+    /// A complete line (newline stripped, lossy UTF-8 decode).
+    Line(String),
+    /// The line exceeded the cap; it was consumed but never buffered.
+    TooLarge,
+    /// Clean end of stream with no pending bytes.
+    Eof,
+}
+
+/// Read one `\n`-terminated line of at most `max` bytes.
+///
+/// Unlike [`BufRead::lines`] (which buffers without bound — a client
+/// could exhaust server memory with one giant line), an over-long line
+/// is *discarded as it streams in*: we drop the partial prefix, keep
+/// consuming until the newline, and report [`Request::TooLarge`] so the
+/// connection stays usable for the next request. Never holds more than
+/// `max` bytes (plus the `BufReader` block) per connection.
+fn read_bounded_line(
+    reader: &mut BufReader<TcpStream>,
+    max: usize,
+) -> std::io::Result<Request> {
+    let mut buf: Vec<u8> = Vec::new();
+    let mut dropping = false;
+    loop {
+        let chunk = reader.fill_buf()?;
+        if chunk.is_empty() {
+            // EOF. An unterminated over-long tail still answers
+            // too-large; an unterminated short tail is served as-is.
+            return Ok(if dropping {
+                Request::TooLarge
+            } else if buf.is_empty() {
+                Request::Eof
+            } else {
+                Request::Line(String::from_utf8_lossy(&buf).into_owned())
+            });
+        }
+        if let Some(pos) = chunk.iter().position(|&b| b == b'\n') {
+            let too_large = dropping || buf.len() + pos > max;
+            if !too_large {
+                buf.extend_from_slice(&chunk[..pos]);
+            }
+            reader.consume(pos + 1);
+            return Ok(if too_large {
+                Request::TooLarge
+            } else {
+                Request::Line(String::from_utf8_lossy(&buf).into_owned())
+            });
+        }
+        let len = chunk.len();
+        if !dropping {
+            if buf.len() + len > max {
+                dropping = true;
+                buf.clear();
+            } else {
+                buf.extend_from_slice(chunk);
+            }
+        }
+        reader.consume(len);
+    }
+}
+
+/// Await a shed-aware router submission: `Busy` becomes `err=busy`, a
+/// dropped reply channel (the dispatch side panicked executing this
+/// request) becomes `err=internal`.
+fn awaited<T>(submitted: std::result::Result<Receiver<T>, Busy>) -> std::result::Result<T, String> {
+    match submitted {
+        Err(Busy) => Err("err=busy queue at capacity, retry later".into()),
+        Ok(rx) => rx
+            .recv()
+            .map_err(|_| "err=internal request failed (see stats=; panics counter)".into()),
+    }
 }
 
 fn respond(line: &str, router: &Router, default_k: usize) -> String {
@@ -178,9 +330,10 @@ fn respond(line: &str, router: &Router, default_k: usize) -> String {
         if path.is_empty() {
             return "err=save expected save=<path>;".into();
         }
-        return match router.save_snapshot(path) {
-            Ok(r) => format!("saved path={} bytes={}", r.path.display(), r.bytes),
-            Err(e) => format!("err=save {path}: {e}"),
+        return match awaited(router.try_save(path)) {
+            Ok(Ok(r)) => format!("saved path={} bytes={}", r.path.display(), r.bytes),
+            Ok(Err(e)) => format!("err=save {path}: {e}"),
+            Err(shed) => shed,
         };
     }
     if let Some(rest) = line.strip_prefix("load=") {
@@ -188,11 +341,12 @@ fn respond(line: &str, router: &Router, default_k: usize) -> String {
         if path.is_empty() {
             return "err=load expected load=<path>;".into();
         }
-        return match router.load_snapshot(path) {
-            Ok(r) => {
+        return match awaited(router.try_load(path)) {
+            Ok(Ok(r)) => {
                 format!("loaded series={} shards={} window={}", r.series, r.shards, r.window)
             }
-            Err(e) => format!("err=load {path}: {e}"),
+            Ok(Err(e)) => format!("err=load {path}: {e}"),
+            Err(shed) => shed,
         };
     }
     // Live mutation: `insert=<label>;<samples>` / `delete=<id>;` /
@@ -213,12 +367,13 @@ fn respond(line: &str, router: &Router, default_k: usize) -> String {
             Ok(v) if !v.is_empty() => v,
             _ => return "err=insert expected comma-separated floats".into(),
         };
-        return match router.insert(label, values) {
-            Ok(r) => format!(
+        return match awaited(router.try_insert(label, values)) {
+            Ok(Ok(r)) => format!(
                 "inserted id={} delta={} generation={}",
                 r.id, r.delta_len, r.generation
             ),
-            Err(e) => format!("err=insert {e:#}"),
+            Ok(Err(e)) => format!("err=insert {e:#}"),
+            Err(shed) => shed,
         };
     }
     if let Some(rest) = line.strip_prefix("delete=") {
@@ -226,18 +381,20 @@ fn respond(line: &str, router: &Router, default_k: usize) -> String {
             Ok(id) => id,
             Err(_) => return "err=delete expected delete=<id>;".into(),
         };
-        return match router.delete(id) {
-            Ok(r) => format!(
+        return match awaited(router.try_delete(id)) {
+            Ok(Ok(r)) => format!(
                 "deleted id={id} remaining={} tombstones={}",
                 r.remaining, r.tombstones
             ),
-            Err(e) => format!("err=delete {e:#}"),
+            Ok(Err(e)) => format!("err=delete {e:#}"),
+            Err(shed) => shed,
         };
     }
     if line.strip_prefix("compact=").is_some() {
-        return match router.compact() {
-            Ok(r) => format!("compacted generation={} series={}", r.generation, r.series),
-            Err(e) => format!("err=compact {e:#}"),
+        return match awaited(router.try_compact()) {
+            Ok(Ok(r)) => format!("compacted generation={} series={}", r.generation, r.series),
+            Ok(Err(e)) => format!("err=compact {e:#}"),
+            Err(shed) => shed,
         };
     }
     if line.strip_prefix("gens=").is_some() {
@@ -254,6 +411,34 @@ fn respond(line: &str, router: &Router, default_k: usize) -> String {
         return format!(
             "gens generation={} parent={} delta={} tombstones={} saved={saved}",
             info.generation, info.parent, info.delta_len, info.tombstones
+        );
+    }
+    // Observability: `stats=;` dumps the router's counters and gauges.
+    // Like `gens=`, it bypasses shedding — you can always ask an
+    // overloaded server *why* it is busy.
+    if line.strip_prefix("stats=").is_some() {
+        let s = router.stats();
+        return format!(
+            "stats served={} batches={} max_batch={} batched={} scalar={} streams={} \
+             saves={} loads={} inserts={} deletes={} compactions={} delta={} \
+             generation={} panics={} shed={} pending={} wal_records={}",
+            s.served,
+            s.batches,
+            s.max_batch,
+            s.batched,
+            s.scalar,
+            s.streams,
+            s.saves,
+            s.loads,
+            s.inserts,
+            s.deletes,
+            s.compactions,
+            s.delta_len,
+            s.generation,
+            s.panics,
+            s.shed,
+            s.pending,
+            s.wal_records
         );
     }
     // Optional `k=<n>;` / `threads=<n>;` prefixes (any order) select
@@ -296,7 +481,10 @@ fn respond(line: &str, router: &Router, default_k: usize) -> String {
     };
     let mut opts = QueryOptions::k(k);
     opts.threads = threads;
-    let outcome = router.query_with(values, opts);
+    let outcome = match awaited(router.try_query_with(values, opts)) {
+        Ok(outcome) => outcome,
+        Err(shed) => return shed,
+    };
     let path = if outcome.batched { "batched" } else { "scalar" };
     if k == 1 {
         // Legacy 1-NN shape, byte-compatible with the v1 protocol.
@@ -373,7 +561,11 @@ fn respond_stream(rest: &str, router: &Router) -> String {
         Ok(values) if !values.is_empty() => values,
         _ => return "ERR expected comma-separated floats".into(),
     };
-    match router.stream(values, opts) {
+    let report = match awaited(router.try_stream(values, opts)) {
+        Ok(report) => report,
+        Err(shed) => return shed,
+    };
+    match report {
         Ok(report) => {
             let matches = if report.matches.is_empty() {
                 "-".to_string()
@@ -590,6 +782,136 @@ mod tests {
         assert!(bad.starts_with("err=delete "), "{bad}");
         let still = ask(format!("k=1;{}", ramp.join(",")));
         assert!(still.contains("label=42"), "{still}");
+
+        drop(lines);
+        drop(wconn);
+        server.shutdown();
+    }
+
+    #[test]
+    fn oversized_requests_answer_too_large_and_keep_the_connection() {
+        let ds = &generate_archive(&ArchiveSpec::new(Scale::Tiny, 84))[0];
+        let index = crate::index::DtwIndex::builder_from_dataset(ds).build().unwrap();
+        let router = Arc::new(Router::spawn_index(index));
+        let opts =
+            ServerOptions { max_request: 64, ..ServerOptions::default() };
+        let server = Server::spawn_with_options("127.0.0.1:0", router, opts).unwrap();
+
+        let conn = TcpStream::connect(server.addr()).unwrap();
+        let mut wconn = conn.try_clone().unwrap();
+        let mut lines = BufReader::new(conn).lines();
+        let mut ask = |req: String| -> String {
+            wconn.write_all(req.as_bytes()).unwrap();
+            wconn.write_all(b"\n").unwrap();
+            lines.next().unwrap().unwrap()
+        };
+
+        // An over-long legacy query line is refused without buffering…
+        let huge = "1,".repeat(100);
+        assert_eq!(ask(huge), "err=too-large request exceeds 64 bytes");
+        // …as is every other verb, including the stream payload path…
+        let huge_stream = format!("stream=tau:0.5;{}", "2,".repeat(100));
+        assert_eq!(ask(huge_stream), "err=too-large request exceeds 64 bytes");
+        // …and the connection survives to serve the next request.
+        assert_eq!(ask("PING".into()), "PONG");
+        // Exactly at the cap is still parsed normally (here: garbage).
+        let at_cap = "g".repeat(64);
+        assert!(ask(at_cap).starts_with("ERR"), "cap is inclusive");
+
+        drop(lines);
+        drop(wconn);
+        server.shutdown();
+    }
+
+    #[test]
+    fn idle_connections_time_out_with_a_typed_reply() {
+        let ds = &generate_archive(&ArchiveSpec::new(Scale::Tiny, 85))[0];
+        let index = crate::index::DtwIndex::builder_from_dataset(ds).build().unwrap();
+        let router = Arc::new(Router::spawn_index(index));
+        let opts = ServerOptions {
+            read_timeout: Some(Duration::from_millis(50)),
+            ..ServerOptions::default()
+        };
+        let server = Server::spawn_with_options("127.0.0.1:0", router, opts).unwrap();
+
+        let conn = TcpStream::connect(server.addr()).unwrap();
+        let mut wconn = conn.try_clone().unwrap();
+        let mut lines = BufReader::new(conn).lines();
+        // A prompt request is served fine…
+        wconn.write_all(b"PING\n").unwrap();
+        assert_eq!(lines.next().unwrap().unwrap(), "PONG");
+        // …then we go silent: the server answers err=timeout and closes.
+        let bye = lines.next().unwrap().unwrap();
+        assert_eq!(bye, "err=timeout idle connection closed");
+        assert!(lines.next().is_none(), "connection closed after timeout");
+
+        server.shutdown();
+    }
+
+    #[test]
+    fn overload_sheds_busy_but_observability_stays_up() {
+        let ds = &generate_archive(&ArchiveSpec::new(Scale::Tiny, 86))[0];
+        let index = crate::index::DtwIndex::builder_from_dataset(ds).build().unwrap();
+        let router = Arc::new(Router::spawn_index(index));
+        router.set_queue_cap(0);
+        let server = Server::spawn("127.0.0.1:0", router.clone()).unwrap();
+
+        let conn = TcpStream::connect(server.addr()).unwrap();
+        let mut wconn = conn.try_clone().unwrap();
+        let mut lines = BufReader::new(conn).lines();
+        let mut ask = |req: String| -> String {
+            wconn.write_all(req.as_bytes()).unwrap();
+            wconn.write_all(b"\n").unwrap();
+            lines.next().unwrap().unwrap()
+        };
+
+        // Every sheddable verb answers err=busy at capacity zero.
+        assert_eq!(ask("1,2,3".into()), "err=busy queue at capacity, retry later");
+        assert_eq!(ask("insert=7;1,2,3".into()), "err=busy queue at capacity, retry later");
+        assert_eq!(ask("compact=;".into()), "err=busy queue at capacity, retry later");
+        // Observability and liveness verbs never shed.
+        assert_eq!(ask("PING".into()), "PONG");
+        assert!(ask("gens=;".into()).starts_with("gens generation="));
+        let stats = ask("stats=;".into());
+        assert!(stats.starts_with("stats served="), "{stats}");
+        assert!(stats.contains(" shed=3 "), "three refusals counted: {stats}");
+
+        // Raising the cap readmits traffic on the same connection.
+        router.set_queue_cap(1024);
+        let q: Vec<String> = ds.test[0].values.iter().map(|v| v.to_string()).collect();
+        assert!(ask(q.join(",")).starts_with("label="), "readmitted after cap raise");
+
+        drop(lines);
+        drop(wconn);
+        server.shutdown();
+    }
+
+    #[test]
+    fn panicking_query_answers_internal_and_spares_the_connection() {
+        let ds = &generate_archive(&ArchiveSpec::new(Scale::Tiny, 87))[0];
+        let index = crate::index::DtwIndex::builder_from_dataset(ds).build().unwrap();
+        let router = Arc::new(Router::spawn_index(index));
+        router.poison_next_query();
+        let server = Server::spawn("127.0.0.1:0", router).unwrap();
+
+        let conn = TcpStream::connect(server.addr()).unwrap();
+        let mut wconn = conn.try_clone().unwrap();
+        let mut lines = BufReader::new(conn).lines();
+        let mut ask = |req: String| -> String {
+            wconn.write_all(req.as_bytes()).unwrap();
+            wconn.write_all(b"\n").unwrap();
+            lines.next().unwrap().unwrap()
+        };
+
+        let q: Vec<String> = ds.test[0].values.iter().map(|v| v.to_string()).collect();
+        // The poisoned request fails alone, with a typed reply…
+        let hurt = ask(q.join(","));
+        assert!(hurt.starts_with("err=internal"), "{hurt}");
+        // …and the very next request on the same connection is served.
+        let fine = ask(q.join(","));
+        assert!(fine.starts_with("label="), "{fine}");
+        let stats = ask("stats=;".into());
+        assert!(stats.contains(" panics=1 "), "panic counted once: {stats}");
 
         drop(lines);
         drop(wconn);

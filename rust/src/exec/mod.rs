@@ -116,8 +116,11 @@ impl Executor {
     /// Each worker is invoked **once** (set up thread-local scratch
     /// there, then pull chunks in a loop); worker ids are dense in
     /// `0..workers`. With one effective worker the body runs inline on
-    /// the caller's thread — no spawn, no synchronization. A panicking
-    /// worker propagates the panic to the caller (scoped join).
+    /// the caller's thread — no spawn, no synchronization. Panicking
+    /// workers surface as exactly **one** resumed panic on the caller's
+    /// thread after every worker has joined, so an enclosing
+    /// `catch_unwind` (the router's request isolation) always contains
+    /// the failure.
     pub fn run<F>(&self, n: usize, chunk: usize, body: F)
     where
         F: Fn(usize, &WorkQueue) + Sync,
@@ -129,14 +132,37 @@ impl Executor {
             body(0, &queue);
             return;
         }
-        let body = &body;
+        // Catch each worker's panic and resume only the first, once,
+        // after the scope joins. Letting panics cross the scope raw can
+        // panic-while-panicking (the caller's inline body unwinding
+        // while a joined worker also panicked), which **aborts the
+        // process** — fatal to a serving router whose catch_unwind
+        // isolation assumes panics stay unwindable.
+        let first_panic: std::sync::Mutex<Option<Box<dyn std::any::Any + Send>>> =
+            std::sync::Mutex::new(None);
+        let guarded = |wid: usize, queue: &WorkQueue| {
+            let attempt = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                body(wid, queue)
+            }));
+            if let Err(payload) = attempt {
+                let mut slot =
+                    first_panic.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
+                slot.get_or_insert(payload);
+            }
+        };
+        let guarded = &guarded;
         let queue = &queue;
         std::thread::scope(|scope| {
             for wid in 1..workers {
-                scope.spawn(move || body(wid, queue));
+                scope.spawn(move || guarded(wid, queue));
             }
-            body(0, queue);
+            guarded(0, queue);
         });
+        let payload =
+            first_panic.into_inner().unwrap_or_else(|poisoned| poisoned.into_inner());
+        if let Some(payload) = payload {
+            std::panic::resume_unwind(payload);
+        }
     }
 }
 
@@ -191,6 +217,22 @@ mod tests {
         assert!(Executor::new(0).threads() >= 1);
         assert_eq!(Executor::serial().threads(), 1);
         assert_eq!(Executor::default().threads(), 1);
+    }
+
+    #[test]
+    fn panicking_workers_surface_as_one_caller_panic() {
+        // Every worker panics (the worst case: caller's inline body
+        // unwinding while joined workers also panicked). That must
+        // reach us as a single unwindable panic — never an abort.
+        let exec = Executor::new(4);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            exec.run(1000, 1, |wid, _queue| {
+                panic!("worker {wid} down");
+            });
+        }));
+        let payload = caught.expect_err("the panic must propagate");
+        let msg = payload.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains("down"), "original payload preserved: {msg}");
     }
 
     #[test]

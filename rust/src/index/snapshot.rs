@@ -199,7 +199,9 @@ pub struct SnapshotInfo {
 // ---------------------------------------------------------------------
 
 /// FNV-1a 64 over `bytes` — dependency-free, stable across platforms.
-fn fnv1a64(bytes: &[u8]) -> u64 {
+/// Shared with the live write-ahead log ([`crate::live::wal`]), whose
+/// per-record checksums use the same function.
+pub(crate) fn fnv1a64(bytes: &[u8]) -> u64 {
     const PRIME: u64 = 0x0000_0100_0000_01b3;
     let mut h = 0xcbf2_9ce4_8422_2325u64;
     for &b in bytes {
@@ -384,6 +386,19 @@ fn decode_backend(tag: u32) -> Option<BackendKind> {
 /// written, so a crash or full disk mid-save never destroys an existing
 /// good snapshot at the same path.
 pub fn save(index: &DtwIndex, path: &Path) -> Result<u64, SnapshotError> {
+    save_with(index, path, &crate::io::RealFs)
+}
+
+/// [`save`] through an explicit [`FileOps`](crate::io::FileOps)
+/// implementation — the seam the fault-injection recovery suite
+/// (`rust/tests/recovery.rs`) drives to enumerate every crash point of
+/// the create/write/sync/rename sequence and prove the write is atomic
+/// at `path` under all of them.
+pub fn save_with(
+    index: &DtwIndex,
+    path: &Path,
+    fs: &dyn crate::io::FileOps,
+) -> Result<u64, SnapshotError> {
     let train = &*index.train;
     let n = train.len();
     let l = train.series.first().map(|s| s.len()).unwrap_or(0);
@@ -453,22 +468,21 @@ pub fn save(index: &DtwIndex, path: &Path) -> Result<u64, SnapshotError> {
     tmp_name.push(".tmp");
     let tmp = std::path::PathBuf::from(tmp_name);
     let write_all = |body: &[u8]| -> std::io::Result<()> {
-        use std::io::Write;
-        let mut f = std::fs::File::create(&tmp)?;
-        f.write_all(&MAGIC)?;
-        f.write_all(&VERSION.to_le_bytes())?;
-        f.write_all(&fnv1a64(body).to_le_bytes())?;
-        f.write_all(&(body.len() as u64).to_le_bytes())?;
-        f.write_all(body)?;
+        let mut f = fs.create(&tmp)?;
+        f.write(&MAGIC)?;
+        f.write(&VERSION.to_le_bytes())?;
+        f.write(&fnv1a64(body).to_le_bytes())?;
+        f.write(&(body.len() as u64).to_le_bytes())?;
+        f.write(body)?;
         // Durable before the rename makes it visible.
-        f.sync_all()
+        f.sync()
     };
     if let Err(e) = write_all(&body) {
-        let _ = std::fs::remove_file(&tmp);
+        let _ = fs.remove(&tmp);
         return Err(SnapshotError::Io(e));
     }
-    if let Err(e) = std::fs::rename(&tmp, path) {
-        let _ = std::fs::remove_file(&tmp);
+    if let Err(e) = fs.rename(&tmp, path) {
+        let _ = fs.remove(&tmp);
         return Err(SnapshotError::Io(e));
     }
     Ok(28 + body.len() as u64)
@@ -722,7 +736,16 @@ fn parse(bytes: &[u8], want_payload: bool) -> Result<Parsed, SnapshotError> {
 /// point. Payload sections are length-validated and skipped, never
 /// decoded or materialized.
 pub fn inspect(path: &Path) -> Result<SnapshotInfo, SnapshotError> {
-    let bytes = std::fs::read(path)?;
+    inspect_with(path, &crate::io::RealFs)
+}
+
+/// [`inspect`] through an explicit [`FileOps`](crate::io::FileOps)
+/// implementation (fault-injection and in-memory test doubles).
+pub fn inspect_with(
+    path: &Path,
+    fs: &dyn crate::io::FileOps,
+) -> Result<SnapshotInfo, SnapshotError> {
+    let bytes = fs.read(path)?;
     Ok(parse(&bytes, false)?.info)
 }
 
@@ -745,7 +768,17 @@ pub fn generation_path(base: &Path, generation: u64) -> std::path::PathBuf {
 /// function of the stored envelopes, so search results are bit-equal to
 /// the saved index by construction.
 pub fn load(path: &Path) -> Result<DtwIndex, SnapshotError> {
-    let bytes = std::fs::read(path)?;
+    load_with(path, &crate::io::RealFs)
+}
+
+/// [`load`] through an explicit [`FileOps`](crate::io::FileOps)
+/// implementation — lets the recovery suite load the exact bytes a
+/// simulated crash left behind.
+pub fn load_with(
+    path: &Path,
+    fs: &dyn crate::io::FileOps,
+) -> Result<DtwIndex, SnapshotError> {
+    let bytes = fs.read(path)?;
     let Parsed { info, labels, values, shards } = parse(&bytes, true)?;
     let (n, l, w) = (info.series, info.series_len, info.window);
 

@@ -1,0 +1,454 @@
+//! Deterministic fault injection for the persistence layer.
+//!
+//! [`FaultFs`] is an in-memory [`FileOps`](super::FileOps)
+//! implementation that models exactly the failure surface the durable
+//! paths (snapshot save, WAL append) must survive:
+//!
+//! * every mutating operation — `create`, `write`, `sync`, `rename`,
+//!   `remove` — is numbered in a global sequence and recorded in a
+//!   trace, so a clean run *enumerates* the crash points of a scenario;
+//! * a [`FaultPlan`] fails the nth operation (optionally applying a
+//!   **short write** of the first `j` bytes first), after which the
+//!   "process" is considered dead: every further operation fails too,
+//!   including error-path cleanup like `remove` — a crashed process
+//!   cannot clean up after itself;
+//! * [`FaultFs::restart`] then produces the file images a real machine
+//!   could present after the crash, under two models
+//!   ([`CrashStyle`]): **`KeepAll`** (every buffered byte reached the
+//!   platter — the lucky case) and **`DropUnsynced`** (each file is
+//!   truncated to its last successfully `sync`ed prefix — the
+//!   power-loss case). File *metadata* operations (`create`, `rename`,
+//!   `remove`) are modeled atomic and immediately durable, the standard
+//!   journaled-file-system assumption the snapshot's
+//!   write-tmp/fsync/rename discipline relies on.
+//!
+//! A property over crash points then reads: for every op index `i` in
+//! the clean trace, for both crash styles, running the scenario with
+//! `FaultPlan::fail_op(i)` and restarting must recover a state
+//! bit-equal to the scenario's pre- or post-state — never a hybrid.
+//! `rust/tests/recovery.rs` instantiates this for snapshot save, WAL
+//! append and WAL rotation.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use super::{FileOps, WriteFile};
+
+/// What survives a crash, per file.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CrashStyle {
+    /// Every written byte survives (the OS flushed everything anyway).
+    KeepAll,
+    /// Only bytes covered by a successful `sync` survive; each file is
+    /// truncated to its synced prefix (power loss before writeback).
+    DropUnsynced,
+}
+
+/// The kind of one traced operation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpKind {
+    /// `create` (truncating open-for-write).
+    Create,
+    /// One `write` call on an open handle.
+    Write,
+    /// One `sync` call on an open handle.
+    Sync,
+    /// `rename(from, to)`.
+    Rename,
+    /// `remove(path)`.
+    Remove,
+}
+
+/// One entry of the operation trace.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct OpRecord {
+    /// What the operation was.
+    pub kind: OpKind,
+    /// The file it targeted (the `from` path for renames).
+    pub path: PathBuf,
+}
+
+/// When (and how) to fail. Operations are numbered from 0 in execution
+/// order across the whole [`FaultFs`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Index of the operation that fails (everything after fails too).
+    pub crash_at: usize,
+    /// When the failing operation is a `write`: how many leading bytes
+    /// land before the failure (a torn write). Ignored otherwise.
+    pub short_write: usize,
+}
+
+impl FaultPlan {
+    /// Fail the nth operation cleanly (no bytes of a failing write land).
+    pub fn fail_op(crash_at: usize) -> FaultPlan {
+        FaultPlan { crash_at, short_write: 0 }
+    }
+
+    /// Fail the nth operation; if it is a write, tear it after `bytes`.
+    pub fn torn_write(crash_at: usize, bytes: usize) -> FaultPlan {
+        FaultPlan { crash_at, short_write: bytes }
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+struct FileImage {
+    content: Vec<u8>,
+    /// Length of the prefix guaranteed durable (last successful sync).
+    synced: usize,
+}
+
+#[derive(Debug, Default)]
+struct State {
+    files: BTreeMap<PathBuf, FileImage>,
+    trace: Vec<OpRecord>,
+    plan: Option<FaultPlan>,
+    crashed: bool,
+}
+
+impl State {
+    /// Record one mutating op; decide whether it is the crash point.
+    /// Returns `Err` when the fs already crashed or this op triggers
+    /// the plan (the caller must NOT apply the op's effect, except the
+    /// short-write prefix which the `write` path applies itself).
+    fn admit(&mut self, kind: OpKind, path: &Path) -> std::io::Result<Option<FaultPlan>> {
+        if self.crashed {
+            return Err(injected("operation after crash"));
+        }
+        let index = self.trace.len();
+        self.trace.push(OpRecord { kind, path: to_owned(path) });
+        if let Some(plan) = self.plan {
+            if index == plan.crash_at {
+                self.crashed = true;
+                return Ok(Some(plan));
+            }
+        }
+        Ok(None)
+    }
+}
+
+fn injected(what: &str) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::Other, format!("injected fault: {what}"))
+}
+
+fn to_owned(path: &Path) -> PathBuf {
+    path.to_path_buf()
+}
+
+/// The deterministic in-memory file system. Cloning shares the
+/// underlying state (all clones see the same files, trace and plan), so
+/// a test can hold one handle while the engine holds another behind
+/// `Arc<dyn FileOps>`.
+#[derive(Debug, Clone, Default)]
+pub struct FaultFs {
+    state: Arc<Mutex<State>>,
+}
+
+impl FaultFs {
+    /// A fault-free in-memory fs (still records the op trace).
+    pub fn new() -> FaultFs {
+        FaultFs::default()
+    }
+
+    /// An fs that fails per `plan`.
+    pub fn with_plan(plan: FaultPlan) -> FaultFs {
+        let fs = FaultFs::new();
+        fs.state.lock().expect("fault fs lock").plan = Some(plan);
+        fs
+    }
+
+    /// Seed a file without touching the op trace (pre-existing state).
+    pub fn put(&self, path: &Path, bytes: &[u8]) {
+        let mut s = self.state.lock().expect("fault fs lock");
+        s.files.insert(
+            to_owned(path),
+            FileImage { content: bytes.to_vec(), synced: bytes.len() },
+        );
+    }
+
+    /// The current content of `path` (test-side view; works even after
+    /// a crash — this is the examiner looking at the disk, not the dead
+    /// process reading it).
+    pub fn get(&self, path: &Path) -> Option<Vec<u8>> {
+        let s = self.state.lock().expect("fault fs lock");
+        s.files.get(path).map(|f| f.content.clone())
+    }
+
+    /// Mutating operations executed so far (the crash-point space).
+    pub fn op_count(&self) -> usize {
+        self.state.lock().expect("fault fs lock").trace.len()
+    }
+
+    /// The full op trace so far.
+    pub fn trace(&self) -> Vec<OpRecord> {
+        self.state.lock().expect("fault fs lock").trace.clone()
+    }
+
+    /// True once the plan's crash point has fired.
+    pub fn crashed(&self) -> bool {
+        self.state.lock().expect("fault fs lock").crashed
+    }
+
+    /// The paths currently present.
+    pub fn files(&self) -> Vec<PathBuf> {
+        let s = self.state.lock().expect("fault fs lock");
+        s.files.keys().cloned().collect()
+    }
+
+    /// The disk as a fresh process would find it after the crash: a new
+    /// fault-free [`FaultFs`] holding this one's files under `style`.
+    /// With [`CrashStyle::DropUnsynced`] every file is truncated to its
+    /// synced prefix (and its synced marker carries over); with
+    /// [`CrashStyle::KeepAll`] contents survive verbatim.
+    pub fn restart(&self, style: CrashStyle) -> FaultFs {
+        let s = self.state.lock().expect("fault fs lock");
+        let fresh = FaultFs::new();
+        {
+            let mut t = fresh.state.lock().expect("fault fs lock");
+            for (path, img) in &s.files {
+                let content = match style {
+                    CrashStyle::KeepAll => img.content.clone(),
+                    CrashStyle::DropUnsynced => img.content[..img.synced].to_vec(),
+                };
+                let synced = content.len();
+                t.files.insert(path.clone(), FileImage { content, synced });
+            }
+        }
+        fresh
+    }
+}
+
+struct FaultFile {
+    state: Arc<Mutex<State>>,
+    path: PathBuf,
+}
+
+impl WriteFile for FaultFile {
+    fn write(&mut self, bytes: &[u8]) -> std::io::Result<()> {
+        let mut s = self.state.lock().expect("fault fs lock");
+        let fired = s.admit(OpKind::Write, &self.path)?;
+        let file = s
+            .files
+            .entry(self.path.clone())
+            .or_insert_with(FileImage::default);
+        match fired {
+            Some(plan) => {
+                // A torn write: the leading prefix lands, then the op
+                // (and the process) dies.
+                let keep = plan.short_write.min(bytes.len());
+                file.content.extend_from_slice(&bytes[..keep]);
+                Err(injected("write"))
+            }
+            None => {
+                file.content.extend_from_slice(bytes);
+                Ok(())
+            }
+        }
+    }
+
+    fn sync(&mut self) -> std::io::Result<()> {
+        let mut s = self.state.lock().expect("fault fs lock");
+        let fired = s.admit(OpKind::Sync, &self.path)?;
+        if fired.is_some() {
+            return Err(injected("sync"));
+        }
+        if let Some(file) = s.files.get_mut(&self.path) {
+            file.synced = file.content.len();
+        }
+        Ok(())
+    }
+}
+
+impl FileOps for FaultFs {
+    fn create(&self, path: &Path) -> std::io::Result<Box<dyn WriteFile>> {
+        {
+            let mut s = self.state.lock().expect("fault fs lock");
+            if s.admit(OpKind::Create, path)?.is_some() {
+                return Err(injected("create"));
+            }
+            // Truncating create: a fresh, unsynced, empty image. If the
+            // path existed, its old bytes are gone (truncation is a
+            // metadata op — atomic, like rename).
+            s.files.insert(to_owned(path), FileImage::default());
+        }
+        Ok(Box::new(FaultFile { state: self.state.clone(), path: to_owned(path) }))
+    }
+
+    fn open_append(&self, path: &Path) -> std::io::Result<Box<dyn WriteFile>> {
+        {
+            let mut s = self.state.lock().expect("fault fs lock");
+            if s.crashed {
+                return Err(injected("operation after crash"));
+            }
+            // Opening for append neither writes nor destroys bytes —
+            // not a crash point, but it must materialize the file.
+            s.files.entry(to_owned(path)).or_insert_with(FileImage::default);
+        }
+        Ok(Box::new(FaultFile { state: self.state.clone(), path: to_owned(path) }))
+    }
+
+    fn read(&self, path: &Path) -> std::io::Result<Vec<u8>> {
+        let s = self.state.lock().expect("fault fs lock");
+        if s.crashed {
+            return Err(injected("operation after crash"));
+        }
+        match s.files.get(path) {
+            Some(f) => Ok(f.content.clone()),
+            None => Err(std::io::Error::new(
+                std::io::ErrorKind::NotFound,
+                format!("no such in-memory file: {}", path.display()),
+            )),
+        }
+    }
+
+    fn rename(&self, from: &Path, to: &Path) -> std::io::Result<()> {
+        let mut s = self.state.lock().expect("fault fs lock");
+        if s.admit(OpKind::Rename, from)?.is_some() {
+            return Err(injected("rename"));
+        }
+        match s.files.remove(from) {
+            Some(img) => {
+                s.files.insert(to_owned(to), img);
+                Ok(())
+            }
+            None => Err(std::io::Error::new(
+                std::io::ErrorKind::NotFound,
+                format!("rename source missing: {}", from.display()),
+            )),
+        }
+    }
+
+    fn remove(&self, path: &Path) -> std::io::Result<()> {
+        let mut s = self.state.lock().expect("fault fs lock");
+        if s.admit(OpKind::Remove, path)?.is_some() {
+            return Err(injected("remove"));
+        }
+        match s.files.remove(path) {
+            Some(_) => Ok(()),
+            None => Err(std::io::Error::new(
+                std::io::ErrorKind::NotFound,
+                format!("remove target missing: {}", path.display()),
+            )),
+        }
+    }
+
+    fn exists(&self, path: &Path) -> bool {
+        let s = self.state.lock().expect("fault fs lock");
+        s.files.contains_key(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(s: &str) -> PathBuf {
+        PathBuf::from(s)
+    }
+
+    #[test]
+    fn clean_run_traces_every_mutating_op() {
+        let fs = FaultFs::new();
+        let mut f = fs.create(&p("a")).unwrap();
+        f.write(b"xy").unwrap();
+        f.sync().unwrap();
+        fs.rename(&p("a"), &p("b")).unwrap();
+        fs.remove(&p("b")).unwrap();
+        let kinds: Vec<OpKind> = fs.trace().into_iter().map(|r| r.kind).collect();
+        assert_eq!(
+            kinds,
+            vec![OpKind::Create, OpKind::Write, OpKind::Sync, OpKind::Rename, OpKind::Remove]
+        );
+        assert!(!fs.crashed());
+    }
+
+    #[test]
+    fn crash_point_fails_the_op_and_everything_after() {
+        // Crash at op 2 (the sync): the write landed, the sync did not,
+        // and the error-path remove also fails (dead process).
+        let fs = FaultFs::with_plan(FaultPlan::fail_op(2));
+        let mut f = fs.create(&p("a")).unwrap();
+        f.write(b"hello").unwrap();
+        assert!(f.sync().is_err());
+        assert!(fs.remove(&p("a")).is_err(), "cleanup after a crash must fail");
+        assert!(fs.crashed());
+
+        // KeepAll: the buffered write survives. DropUnsynced: nothing
+        // was ever synced, so the file comes back empty.
+        assert_eq!(fs.restart(CrashStyle::KeepAll).get(&p("a")).unwrap(), b"hello");
+        assert_eq!(fs.restart(CrashStyle::DropUnsynced).get(&p("a")).unwrap(), b"");
+    }
+
+    #[test]
+    fn torn_write_keeps_only_the_prefix() {
+        let fs = FaultFs::with_plan(FaultPlan::torn_write(1, 3));
+        let mut f = fs.create(&p("a")).unwrap();
+        assert!(f.write(b"abcdef").is_err());
+        assert_eq!(fs.restart(CrashStyle::KeepAll).get(&p("a")).unwrap(), b"abc");
+        assert_eq!(fs.restart(CrashStyle::DropUnsynced).get(&p("a")).unwrap(), b"");
+    }
+
+    #[test]
+    fn sync_marks_the_durable_prefix() {
+        let fs = FaultFs::new();
+        let mut f = fs.create(&p("a")).unwrap();
+        f.write(b"abc").unwrap();
+        f.sync().unwrap();
+        f.write(b"def").unwrap();
+        // No crash: both images agree on present content, but a
+        // DropUnsynced restart only keeps the synced prefix.
+        assert_eq!(fs.get(&p("a")).unwrap(), b"abcdef");
+        assert_eq!(fs.restart(CrashStyle::KeepAll).get(&p("a")).unwrap(), b"abcdef");
+        assert_eq!(fs.restart(CrashStyle::DropUnsynced).get(&p("a")).unwrap(), b"abc");
+    }
+
+    #[test]
+    fn rename_is_atomic_and_carries_the_synced_marker() {
+        let fs = FaultFs::new();
+        let mut f = fs.create(&p("t.tmp")).unwrap();
+        f.write(b"abc").unwrap();
+        f.sync().unwrap();
+        f.write(b"tail").unwrap();
+        drop(f);
+        fs.rename(&p("t.tmp"), &p("t")).unwrap();
+        assert!(!fs.exists(&p("t.tmp")));
+        assert_eq!(fs.restart(CrashStyle::DropUnsynced).get(&p("t")).unwrap(), b"abc");
+    }
+
+    #[test]
+    fn failed_rename_leaves_both_paths_untouched() {
+        let fs = FaultFs::with_plan(FaultPlan::fail_op(3));
+        fs.put(&p("old"), b"OLD");
+        let mut f = fs.create(&p("new.tmp")).unwrap();
+        f.write(b"NEW").unwrap();
+        f.sync().unwrap();
+        assert!(fs.rename(&p("new.tmp"), &p("old")).is_err());
+        let disk = fs.restart(CrashStyle::KeepAll);
+        assert_eq!(disk.get(&p("old")).unwrap(), b"OLD", "target untouched");
+        assert_eq!(disk.get(&p("new.tmp")).unwrap(), b"NEW", "source untouched");
+    }
+
+    #[test]
+    fn restart_resets_the_trace_and_the_plan() {
+        let fs = FaultFs::with_plan(FaultPlan::fail_op(0));
+        assert!(fs.create(&p("a")).is_err());
+        let disk = fs.restart(CrashStyle::KeepAll);
+        assert!(!disk.crashed());
+        assert_eq!(disk.op_count(), 0);
+        // The restarted fs is fault-free: the same op now succeeds.
+        let mut f = disk.create(&p("a")).unwrap();
+        f.write(b"ok").unwrap();
+        assert_eq!(disk.get(&p("a")).unwrap(), b"ok");
+    }
+
+    #[test]
+    fn put_seeds_files_without_trace_entries() {
+        let fs = FaultFs::new();
+        fs.put(&p("seed"), b"S");
+        assert_eq!(fs.op_count(), 0);
+        assert_eq!(fs.read(&p("seed")).unwrap(), b"S");
+        // Seeded files are considered durable (synced in full).
+        assert_eq!(fs.restart(CrashStyle::DropUnsynced).get(&p("seed")).unwrap(), b"S");
+    }
+}

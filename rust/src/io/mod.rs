@@ -1,0 +1,142 @@
+//! Durable file I/O behind a narrow, injectable trait.
+//!
+//! Every byte the serving stack persists — index snapshots
+//! ([`crate::index::snapshot`]) and the live write-ahead log
+//! ([`crate::live::wal`]) — flows through [`FileOps`], a five-verb
+//! file-system abstraction (create/append/read/rename/remove) with
+//! explicit durability ([`WriteFile::sync`]). Production uses
+//! [`RealFs`], a zero-cost shim over `std::fs`. Tests swap in
+//! [`fault::FaultFs`], a deterministic in-memory file system that can
+//! crash at any enumerated operation and then present the file images a
+//! real machine could observe after the crash — the proof mechanism
+//! behind the recovery property suite (`rust/tests/recovery.rs`).
+//!
+//! ## Why a trait and not `std::fs`
+//!
+//! Crash-safety claims ("an acked insert survives restart", "a torn
+//! snapshot write never destroys the previous good snapshot") are
+//! *universally quantified over crash points* — you cannot demonstrate
+//! them by killing a process a few times and hoping the scheduler
+//! cooperates. Routing all writes through one seam makes the set of
+//! crash points finite and enumerable: each `create`/`write`/`sync`/
+//! `rename`/`remove` is one point, and [`fault::FaultFs`] can fail
+//! exactly the nth one (optionally leaving a short write behind) and
+//! then replay both the *all-buffered-bytes-survived* and the
+//! *only-synced-bytes-survived* restart images.
+
+pub mod fault;
+
+pub use fault::{CrashStyle, FaultFs, FaultPlan, OpKind, OpRecord};
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// An open file handle for writing. `write` has `write_all` semantics
+/// (the full buffer or an error); `sync` is the durability barrier —
+/// bytes written before a successful `sync` survive any crash model
+/// this crate reasons about, bytes after it may not.
+pub trait WriteFile: Send {
+    /// Append `bytes` at the current position (whole-buffer semantics).
+    fn write(&mut self, bytes: &[u8]) -> std::io::Result<()>;
+    /// Flush written bytes to durable storage (`fsync`).
+    fn sync(&mut self) -> std::io::Result<()>;
+}
+
+/// The five file-system verbs the persistence layer needs. Implementors
+/// must be `Send + Sync` — the engine shares one instance across the
+/// dispatch thread and tests.
+pub trait FileOps: Send + Sync {
+    /// Create (or truncate) the file at `path` for writing.
+    fn create(&self, path: &Path) -> std::io::Result<Box<dyn WriteFile>>;
+    /// Open the file at `path` for appending, creating it if absent.
+    fn open_append(&self, path: &Path) -> std::io::Result<Box<dyn WriteFile>>;
+    /// Read the whole file at `path`.
+    fn read(&self, path: &Path) -> std::io::Result<Vec<u8>>;
+    /// Atomically rename `from` over `to` (same directory in practice).
+    fn rename(&self, from: &Path, to: &Path) -> std::io::Result<()>;
+    /// Remove the file at `path`.
+    fn remove(&self, path: &Path) -> std::io::Result<()>;
+    /// True when a file exists at `path`.
+    fn exists(&self, path: &Path) -> bool;
+}
+
+/// The production [`FileOps`]: a stateless shim over `std::fs`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RealFs;
+
+struct RealFile {
+    file: std::fs::File,
+}
+
+impl WriteFile for RealFile {
+    fn write(&mut self, bytes: &[u8]) -> std::io::Result<()> {
+        self.file.write_all(bytes)
+    }
+
+    fn sync(&mut self) -> std::io::Result<()> {
+        self.file.sync_all()
+    }
+}
+
+impl FileOps for RealFs {
+    fn create(&self, path: &Path) -> std::io::Result<Box<dyn WriteFile>> {
+        Ok(Box::new(RealFile { file: std::fs::File::create(path)? }))
+    }
+
+    fn open_append(&self, path: &Path) -> std::io::Result<Box<dyn WriteFile>> {
+        let file = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+        Ok(Box::new(RealFile { file }))
+    }
+
+    fn read(&self, path: &Path) -> std::io::Result<Vec<u8>> {
+        let mut file = std::fs::File::open(path)?;
+        let mut bytes = Vec::new();
+        file.read_to_end(&mut bytes)?;
+        Ok(bytes)
+    }
+
+    fn rename(&self, from: &Path, to: &Path) -> std::io::Result<()> {
+        std::fs::rename(from, to)
+    }
+
+    fn remove(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::remove_file(path)
+    }
+
+    fn exists(&self, path: &Path) -> bool {
+        path.exists()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn real_fs_round_trips_and_appends() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("dtwb_io_real_{}.bin", std::process::id()));
+        let fs = RealFs;
+        {
+            let mut f = fs.create(&path).unwrap();
+            f.write(b"hello").unwrap();
+            f.sync().unwrap();
+        }
+        assert_eq!(fs.read(&path).unwrap(), b"hello");
+        {
+            let mut f = fs.open_append(&path).unwrap();
+            f.write(b" world").unwrap();
+            f.sync().unwrap();
+        }
+        assert_eq!(fs.read(&path).unwrap(), b"hello world");
+        assert!(fs.exists(&path));
+
+        let moved = dir.join(format!("dtwb_io_real_{}_moved.bin", std::process::id()));
+        fs.rename(&path, &moved).unwrap();
+        assert!(!fs.exists(&path));
+        assert_eq!(fs.read(&moved).unwrap(), b"hello world");
+        fs.remove(&moved).unwrap();
+        assert!(!fs.exists(&moved));
+        assert!(fs.read(&moved).is_err());
+    }
+}

@@ -80,6 +80,12 @@
 //!   auto-threshold **compaction** into the next generation, and
 //!   generational snapshots (v3) with rollback — every search path
 //!   stays bit-identical to a cold rebuild of the logical series set.
+//! * **Durability** ([`io`] + [`live::wal`]): every persisted byte flows
+//!   through a five-verb file-ops trait with a real-FS default and a
+//!   deterministic fault-injecting test double; accepted live mutations
+//!   are appended to a checksummed write-ahead log *before* the ack, so
+//!   a crashed server restarts bit-equal to an uninterrupted run
+//!   (`rust/tests/recovery.rs` enumerates every crash point).
 //! * **Streaming subsequence search** ([`stream`]): slide an index-length
 //!   window over unbounded sample streams behind a cascaded-bound screen
 //!   (`LB_KIM_FL → LB_KEOGH → LB_WEBB` by default), in threshold and
@@ -139,6 +145,7 @@ pub mod dtw;
 pub mod exec;
 pub mod experiments;
 pub mod index;
+pub mod io;
 pub mod live;
 pub mod metrics;
 pub mod runtime;

@@ -41,9 +41,11 @@
 pub mod compact;
 pub mod delta;
 mod search;
+pub mod wal;
 
 pub use compact::compacted;
 pub use delta::{DeltaEntry, DeltaShard, Tombstones};
+pub use wal::{FsyncPolicy, ReplayInfo, Wal, WalOp};
 
 use anyhow::{bail, Result};
 
@@ -121,11 +123,12 @@ impl LiveState {
             .or_else(|| self.delta.entries().first().map(|e| e.series.len()))
     }
 
-    /// Append one series; returns its logical id. The series is
-    /// z-normalized here iff the base's policy says so — exactly the
-    /// one normalization a cold rebuild would apply — and its envelopes
-    /// are prepared once, under the base's window.
-    pub fn insert(&mut self, base: &DtwIndex, label: u32, values: Vec<f64>) -> Result<usize> {
+    /// Check whether an insert of `values` would be accepted, without
+    /// mutating anything. The write-ahead-log flow depends on this
+    /// split: the engine validates first, logs the mutation, then
+    /// applies it — after `validate_insert` passes, [`LiveState::insert`]
+    /// cannot fail, so a logged record is always replayable.
+    pub fn validate_insert(&self, base: &DtwIndex, values: &[f64]) -> Result<()> {
         if values.is_empty() {
             bail!("cannot insert an empty series");
         }
@@ -137,6 +140,25 @@ impl LiveState {
                 );
             }
         }
+        Ok(())
+    }
+
+    /// Check whether logical id `id` is deletable right now (same
+    /// validate-then-log-then-apply contract as
+    /// [`LiveState::validate_insert`]).
+    pub fn validate_delete(&self, base: &DtwIndex, id: usize) -> Result<()> {
+        if id >= self.logical_len(base) {
+            bail!("delete: no series with logical id {id} ({} live)", self.logical_len(base));
+        }
+        Ok(())
+    }
+
+    /// Append one series; returns its logical id. The series is
+    /// z-normalized here iff the base's policy says so — exactly the
+    /// one normalization a cold rebuild would apply — and its envelopes
+    /// are prepared once, under the base's window.
+    pub fn insert(&mut self, base: &DtwIndex, label: u32, values: Vec<f64>) -> Result<usize> {
+        self.validate_insert(base, &values)?;
         let values = if base.znormalizes() { znormalized(&values) } else { values };
         let prepared = PreparedSeries::prepare(values, base.window());
         let offset = self.delta.push(label, prepared);
@@ -147,17 +169,14 @@ impl LiveState {
     /// delta entry (later delta ids shift down by one, exactly as a
     /// cold rebuild without the series would number them).
     pub fn delete(&mut self, base: &DtwIndex, id: usize) -> Result<()> {
+        self.validate_delete(base, id)?;
         let survivors = self.survivors(base);
         if id < survivors {
             let phys = self.tombstones.to_physical(id);
             self.tombstones.insert(phys);
             return Ok(());
         }
-        let j = id - survivors;
-        if j >= self.delta.len() {
-            bail!("delete: no series with logical id {id} ({} live)", self.logical_len(base));
-        }
-        self.delta.remove(j);
+        self.delta.remove(id - survivors);
         Ok(())
     }
 

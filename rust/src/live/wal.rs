@@ -1,0 +1,573 @@
+//! The live index's write-ahead log: crash durability for acked
+//! mutations.
+//!
+//! PR 7's delta shard made the index mutable but volatile — an
+//! `insert=`/`delete=` acked over the wire lived only in memory until
+//! the next compaction. The WAL closes that hole: every accepted
+//! mutation is appended (and, per [`FsyncPolicy`], fsynced) to
+//! `<snapshot>.wal.g<N>` **before** the ack leaves the engine, and
+//! startup replays the log through the exact same [`LiveState`]
+//! mutation path the live request took — so recovery is bit-equal to
+//! an uninterrupted run by construction.
+//!
+//! ## Record format (all integers little-endian)
+//!
+//! ```text
+//! offset size  field
+//!      0    4  payload length in bytes (u32, >= 1)
+//!      4    8  FNV-1a-64 checksum of the payload (u64)
+//!     12    …  payload:
+//!              tag(u8) = 1 insert | 2 delete
+//!              insert: label(u32) · count(u64) · count × f64 raw bits
+//!              delete: logical id(u64)
+//! ```
+//!
+//! Values are stored as **raw f64 bits**, so replaying an insert
+//! prepares envelopes from exactly the bytes the live insert prepared
+//! them from — the bit-equality contract extends through a crash.
+//!
+//! ## Torn tails
+//!
+//! A crash mid-append can leave a torn record at the end of the log
+//! (short header, short payload, or a payload whose checksum does not
+//! match). Replay **truncates at the first invalid record and never
+//! errors**: everything before the tear was acked against a complete
+//! fsync'd (or at least fully buffered) record, everything at the tear
+//! was never acked — by the append-before-ack ordering, dropping it is
+//! exactly the pre-operation state. [`replay_bytes`] is the pure
+//! decision procedure; its table of torn shapes is pinned in the unit
+//! tests below.
+//!
+//! ## Generations and rotation
+//!
+//! The log file name carries the generation of the base snapshot it
+//! applies to ([`wal_path`]: `<base>.wal.g<N>`). Compaction and
+//! snapshot hot-swaps rotate the log (see
+//! [`NnEngine`](crate::coordinator::NnEngine)): the new base is
+//! persisted over the anchor path first (atomic tmp+fsync+rename), a
+//! fresh `.wal.g<N+1>` is created, and only then is the old log
+//! removed — at every intermediate crash point the anchor's stored
+//! generation selects the one log that matches it, so a stale log can
+//! never replay into the wrong base.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use crate::index::snapshot::fnv1a64;
+use crate::io::{FileOps, WriteFile};
+
+/// Record tags.
+const TAG_INSERT: u8 = 1;
+const TAG_DELETE: u8 = 2;
+
+/// Header bytes per record: payload length (u32) + checksum (u64).
+pub const RECORD_HEADER: usize = 12;
+
+/// When appends reach the platter relative to the ack.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FsyncPolicy {
+    /// fsync every record before acking — an acked mutation survives
+    /// power loss (the durability the CI kill-9 smoke pins).
+    Always,
+    /// fsync every n records — bounded loss window, amortized cost.
+    EveryN(usize),
+    /// Never fsync from the engine — the OS flushes eventually; an
+    /// acked mutation survives process death (the kernel holds the
+    /// bytes) but not power loss.
+    Never,
+}
+
+impl FsyncPolicy {
+    /// Parse the CLI spelling: `always`, `never`, or `every:<n>`.
+    pub fn parse(text: &str) -> Option<FsyncPolicy> {
+        match text {
+            "always" => Some(FsyncPolicy::Always),
+            "never" => Some(FsyncPolicy::Never),
+            _ => {
+                let n = text.strip_prefix("every:")?.parse::<usize>().ok()?;
+                if n == 0 {
+                    None
+                } else {
+                    Some(FsyncPolicy::EveryN(n))
+                }
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for FsyncPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FsyncPolicy::Always => write!(f, "always"),
+            FsyncPolicy::EveryN(n) => write!(f, "every:{n}"),
+            FsyncPolicy::Never => write!(f, "never"),
+        }
+    }
+}
+
+/// One logged mutation, decoded (the replay shape).
+#[derive(Debug, Clone, PartialEq)]
+pub enum WalOp {
+    /// A validated insert: label + the exact values that were accepted.
+    Insert {
+        /// Class label of the inserted series.
+        label: u32,
+        /// The accepted values (pre-normalization — replay re-runs the
+        /// same normalization the live path ran).
+        values: Vec<f64>,
+    },
+    /// A validated delete of one logical id.
+    Delete {
+        /// Logical id at the time the delete was accepted.
+        id: u64,
+    },
+}
+
+/// What replay found in a log file.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ReplayInfo {
+    /// Complete, checksum-valid records decoded.
+    pub records: u64,
+    /// Bytes covered by those records (the valid prefix).
+    pub valid_bytes: u64,
+    /// Total bytes in the file.
+    pub total_bytes: u64,
+    /// True when a torn/invalid tail was dropped.
+    pub truncated: bool,
+}
+
+/// The WAL file for one generation: `<base>.wal.g<N>`. Sibling of the
+/// generation-snapshot naming
+/// ([`generation_path`](crate::index::snapshot::generation_path)).
+pub fn wal_path(base: &Path, generation: u64) -> PathBuf {
+    let mut name = base.as_os_str().to_owned();
+    name.push(format!(".wal.g{generation}"));
+    PathBuf::from(name)
+}
+
+/// Encode one record (header + payload) into a fresh buffer.
+fn encode_record(payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(RECORD_HEADER + payload.len());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&fnv1a64(payload).to_le_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
+fn encode_insert(label: u32, values: &[f64]) -> Vec<u8> {
+    let mut payload = Vec::with_capacity(1 + 4 + 8 + values.len() * 8);
+    payload.push(TAG_INSERT);
+    payload.extend_from_slice(&label.to_le_bytes());
+    payload.extend_from_slice(&(values.len() as u64).to_le_bytes());
+    for &v in values {
+        payload.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    encode_record(&payload)
+}
+
+fn encode_delete(id: u64) -> Vec<u8> {
+    let mut payload = Vec::with_capacity(9);
+    payload.push(TAG_DELETE);
+    payload.extend_from_slice(&id.to_le_bytes());
+    encode_record(&payload)
+}
+
+/// Decode one payload; `None` = malformed (treated as a torn tail).
+fn decode_payload(payload: &[u8]) -> Option<WalOp> {
+    let (&tag, rest) = payload.split_first()?;
+    match tag {
+        TAG_INSERT => {
+            if rest.len() < 12 {
+                return None;
+            }
+            let label = u32::from_le_bytes(rest[0..4].try_into().ok()?);
+            let count = u64::from_le_bytes(rest[4..12].try_into().ok()?);
+            let count = usize::try_from(count).ok()?;
+            let values_bytes = rest.len() - 12;
+            if count.checked_mul(8)? != values_bytes {
+                return None;
+            }
+            let mut values = Vec::with_capacity(count);
+            for chunk in rest[12..].chunks_exact(8) {
+                values.push(f64::from_bits(u64::from_le_bytes(
+                    chunk.try_into().expect("8-byte chunk"),
+                )));
+            }
+            Some(WalOp::Insert { label, values })
+        }
+        TAG_DELETE => {
+            if rest.len() != 8 {
+                return None;
+            }
+            Some(WalOp::Delete { id: u64::from_le_bytes(rest.try_into().ok()?) })
+        }
+        _ => None,
+    }
+}
+
+/// Replay a log image: decode records until the bytes run out or the
+/// first invalid record (short header, zero-length payload, short
+/// payload, checksum mismatch, unknown tag, malformed shape). **Never
+/// errors** — an invalid tail marks the log truncated there; by the
+/// append-before-ack ordering nothing past the valid prefix was ever
+/// acked.
+pub fn replay_bytes(bytes: &[u8]) -> (Vec<WalOp>, ReplayInfo) {
+    let mut ops = Vec::new();
+    let mut info =
+        ReplayInfo { records: 0, valid_bytes: 0, total_bytes: bytes.len() as u64, truncated: false };
+    let mut at = 0usize;
+    while at < bytes.len() {
+        let rest = &bytes[at..];
+        if rest.len() < RECORD_HEADER {
+            info.truncated = true; // torn header
+            break;
+        }
+        let len = u32::from_le_bytes(rest[0..4].try_into().expect("4 bytes")) as usize;
+        if len == 0 || rest.len() - RECORD_HEADER < len {
+            info.truncated = true; // zero-length or torn payload
+            break;
+        }
+        let stored = u64::from_le_bytes(rest[4..12].try_into().expect("8 bytes"));
+        let payload = &rest[RECORD_HEADER..RECORD_HEADER + len];
+        if fnv1a64(payload) != stored {
+            info.truncated = true; // bit rot or a torn overwrite
+            break;
+        }
+        match decode_payload(payload) {
+            Some(op) => ops.push(op),
+            None => {
+                info.truncated = true; // valid checksum, malformed shape
+                break;
+            }
+        }
+        at += RECORD_HEADER + len;
+        info.records += 1;
+        info.valid_bytes = at as u64;
+    }
+    (ops, info)
+}
+
+/// An open, appendable write-ahead log for one `(anchor, generation)`.
+pub struct Wal {
+    fs: Arc<dyn FileOps>,
+    path: PathBuf,
+    file: Box<dyn WriteFile>,
+    policy: FsyncPolicy,
+    /// Records appended since the last fsync (the `EveryN` counter).
+    since_sync: usize,
+    /// Records in the log (replayed + appended).
+    records: u64,
+}
+
+impl std::fmt::Debug for Wal {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Wal")
+            .field("path", &self.path)
+            .field("policy", &self.policy)
+            .field("records", &self.records)
+            .finish()
+    }
+}
+
+impl Wal {
+    /// Create a **fresh, empty** log for `(base, generation)`,
+    /// truncating any stale file at that path, and pin its (empty)
+    /// content durably. The rotation entry point.
+    pub fn create(
+        fs: Arc<dyn FileOps>,
+        base: &Path,
+        generation: u64,
+        policy: FsyncPolicy,
+    ) -> std::io::Result<Wal> {
+        let path = wal_path(base, generation);
+        let mut file = fs.create(&path)?;
+        file.sync()?;
+        Ok(Wal { fs, path, file, policy, since_sync: 0, records: 0 })
+    }
+
+    /// Open the log for `(base, generation)` for recovery: read it
+    /// (missing = empty), decode the valid prefix, and return the
+    /// decoded ops alongside an appendable handle. When a torn tail was
+    /// dropped, the valid prefix is first rewritten through a sibling
+    /// `.tmp` + atomic rename (the snapshot-save discipline) so the
+    /// on-disk log holds only complete records before new appends land
+    /// after them.
+    pub fn recover(
+        fs: Arc<dyn FileOps>,
+        base: &Path,
+        generation: u64,
+        policy: FsyncPolicy,
+    ) -> std::io::Result<(Vec<WalOp>, ReplayInfo, Wal)> {
+        let path = wal_path(base, generation);
+        let bytes = match fs.read(&path) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Vec::new(),
+            Err(e) => return Err(e),
+        };
+        let (ops, info) = replay_bytes(&bytes);
+        if info.truncated {
+            // Drop the torn tail atomically: never truncate the live
+            // log in place (a crash mid-rewrite must leave either the
+            // old log — same valid prefix — or the clean one).
+            let mut tmp_name = path.as_os_str().to_owned();
+            tmp_name.push(".tmp");
+            let tmp = PathBuf::from(tmp_name);
+            let mut f = fs.create(&tmp)?;
+            f.write(&bytes[..info.valid_bytes as usize])?;
+            f.sync()?;
+            drop(f);
+            fs.rename(&tmp, &path)?;
+        }
+        let file = fs.open_append(&path)?;
+        let wal = Wal { fs, path, file, policy, since_sync: 0, records: info.records };
+        Ok((ops, info, wal))
+    }
+
+    /// The log's file path.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Records in the log (the `wal_records` gauge).
+    pub fn records(&self) -> u64 {
+        self.records
+    }
+
+    /// The shared file-ops handle (for rotation by the owner).
+    pub fn fs(&self) -> Arc<dyn FileOps> {
+        self.fs.clone()
+    }
+
+    /// Append one insert record — called **after** validation and
+    /// **before** the mutation is applied or acked. On `Ok`, the record
+    /// is complete in the file (and fsync'd per policy); on `Err`
+    /// nothing was applied and at worst a torn tail remains, which
+    /// replay drops.
+    pub fn append_insert(&mut self, label: u32, values: &[f64]) -> std::io::Result<()> {
+        self.append_record(encode_insert(label, values))
+    }
+
+    /// Append one delete record (same contract as [`Wal::append_insert`]).
+    pub fn append_delete(&mut self, id: u64) -> std::io::Result<()> {
+        self.append_record(encode_delete(id))
+    }
+
+    fn append_record(&mut self, record: Vec<u8>) -> std::io::Result<()> {
+        self.file.write(&record)?;
+        self.records += 1;
+        self.since_sync += 1;
+        let due = match self.policy {
+            FsyncPolicy::Always => true,
+            FsyncPolicy::EveryN(n) => self.since_sync >= n,
+            FsyncPolicy::Never => false,
+        };
+        if due {
+            self.file.sync()?;
+            self.since_sync = 0;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::FaultFs;
+
+    fn base() -> PathBuf {
+        PathBuf::from("anchor.snap")
+    }
+
+    fn sample_ops() -> Vec<WalOp> {
+        vec![
+            WalOp::Insert { label: 7, values: vec![0.25, -1.5, f64::MIN_POSITIVE, 3.75] },
+            WalOp::Delete { id: 2 },
+            WalOp::Insert { label: 0, values: vec![1.0] },
+        ]
+    }
+
+    fn log_with(ops: &[WalOp]) -> Vec<u8> {
+        let mut bytes = Vec::new();
+        for op in ops {
+            match op {
+                WalOp::Insert { label, values } => {
+                    bytes.extend_from_slice(&encode_insert(*label, values))
+                }
+                WalOp::Delete { id } => bytes.extend_from_slice(&encode_delete(*id)),
+            }
+        }
+        bytes
+    }
+
+    #[test]
+    fn wal_path_carries_the_generation() {
+        assert_eq!(wal_path(&base(), 0), PathBuf::from("anchor.snap.wal.g0"));
+        assert_eq!(wal_path(&base(), 17), PathBuf::from("anchor.snap.wal.g17"));
+    }
+
+    #[test]
+    fn fsync_policy_parses_the_cli_spellings() {
+        assert_eq!(FsyncPolicy::parse("always"), Some(FsyncPolicy::Always));
+        assert_eq!(FsyncPolicy::parse("never"), Some(FsyncPolicy::Never));
+        assert_eq!(FsyncPolicy::parse("every:64"), Some(FsyncPolicy::EveryN(64)));
+        assert_eq!(FsyncPolicy::parse("every:0"), None, "a 0 window would never sync");
+        assert_eq!(FsyncPolicy::parse("sometimes"), None);
+        assert_eq!(FsyncPolicy::EveryN(8).to_string(), "every:8");
+    }
+
+    #[test]
+    fn records_round_trip_exact_bits() {
+        let (ops, info) = replay_bytes(&log_with(&sample_ops()));
+        assert_eq!(ops, sample_ops());
+        assert_eq!(info.records, 3);
+        assert!(!info.truncated);
+        assert_eq!(info.valid_bytes, info.total_bytes);
+        // Raw-bit storage: NaN-free exact round trip incl. subnormals.
+        match &ops[0] {
+            WalOp::Insert { values, .. } => {
+                assert_eq!(values[2].to_bits(), f64::MIN_POSITIVE.to_bits())
+            }
+            other => panic!("want insert, got {other:?}"),
+        }
+    }
+
+    /// The torn-tail table: every invalid-tail shape truncates at the
+    /// tear and keeps every record before it — replay never errors.
+    #[test]
+    fn torn_tails_truncate_and_never_error() {
+        let good = log_with(&sample_ops());
+        let good_len = good.len() as u64;
+
+        // Clean EOF: the whole file is the valid prefix.
+        let (ops, info) = replay_bytes(&good);
+        assert_eq!((ops.len(), info.truncated), (3, false));
+
+        // Empty file: zero records, not truncated (a fresh log).
+        let (ops, info) = replay_bytes(b"");
+        assert_eq!((ops.len(), info.records, info.truncated), (0, 0, false));
+
+        // Half a record: header + part of the payload.
+        let mut torn = good.clone();
+        torn.extend_from_slice(&encode_delete(9)[..15]);
+        let (ops, info) = replay_bytes(&torn);
+        assert_eq!((ops.len(), info.truncated), (3, true));
+        assert_eq!(info.valid_bytes, good_len);
+
+        // Short header: fewer than 12 trailing bytes.
+        let mut torn = good.clone();
+        torn.extend_from_slice(&[1, 2, 3]);
+        let (ops, info) = replay_bytes(&torn);
+        assert_eq!((ops.len(), info.truncated), (3, true));
+
+        // Corrupt checksum: a full record whose payload was bit-flipped.
+        let mut torn = good.clone();
+        let bad = encode_delete(9);
+        let flip_at = torn.len() + bad.len() - 1;
+        torn.extend_from_slice(&bad);
+        torn[flip_at] ^= 0x40;
+        let (ops, info) = replay_bytes(&torn);
+        assert_eq!((ops.len(), info.truncated), (3, true));
+        assert_eq!(info.valid_bytes, good_len);
+
+        // Zero-length record: len=0 can never be a valid payload.
+        let mut torn = good.clone();
+        torn.extend_from_slice(&0u32.to_le_bytes());
+        torn.extend_from_slice(&fnv1a64(b"").to_le_bytes());
+        let (ops, info) = replay_bytes(&torn);
+        assert_eq!((ops.len(), info.truncated), (3, true));
+
+        // Valid checksum, unknown tag: malformed shape, same treatment.
+        let mut torn = good.clone();
+        let payload = [99u8, 1, 2];
+        torn.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        torn.extend_from_slice(&fnv1a64(&payload).to_le_bytes());
+        torn.extend_from_slice(&payload);
+        let (ops, info) = replay_bytes(&torn);
+        assert_eq!((ops.len(), info.truncated), (3, true));
+
+        // A tear mid-log shadows everything after it: records past the
+        // first invalid byte are unreachable by design (their acks, if
+        // any, preceded the tear's — impossible under append-before-ack).
+        let mut torn = log_with(&sample_ops()[..1]);
+        torn.extend_from_slice(&[0xFF; 5]);
+        torn.extend_from_slice(&log_with(&sample_ops()[1..]));
+        let (ops, info) = replay_bytes(&torn);
+        assert_eq!((ops.len(), info.truncated), (1, true));
+    }
+
+    #[test]
+    fn append_then_recover_round_trips() {
+        let fs = FaultFs::new();
+        let arc: Arc<dyn FileOps> = Arc::new(fs.clone());
+        let mut wal = Wal::create(arc.clone(), &base(), 0, FsyncPolicy::Always).unwrap();
+        for op in sample_ops() {
+            match op {
+                WalOp::Insert { label, values } => wal.append_insert(label, &values).unwrap(),
+                WalOp::Delete { id } => wal.append_delete(id).unwrap(),
+            }
+        }
+        assert_eq!(wal.records(), 3);
+        drop(wal);
+
+        let (ops, info, wal) = Wal::recover(arc, &base(), 0, FsyncPolicy::Always).unwrap();
+        assert_eq!(ops, sample_ops());
+        assert!(!info.truncated);
+        assert_eq!(wal.records(), 3);
+        // fsync=always: every record is durable — a power-loss restart
+        // image replays identically.
+        let disk = fs.restart(crate::io::CrashStyle::DropUnsynced);
+        let bytes = disk.get(&wal_path(&base(), 0)).unwrap();
+        let (ops2, _) = replay_bytes(&bytes);
+        assert_eq!(ops2, sample_ops());
+    }
+
+    #[test]
+    fn recover_rewrites_a_torn_tail_atomically() {
+        let fs = FaultFs::new();
+        let arc: Arc<dyn FileOps> = Arc::new(fs.clone());
+        let mut torn = log_with(&sample_ops());
+        torn.extend_from_slice(&encode_delete(4)[..13]);
+        let path = wal_path(&base(), 2);
+        fs.put(&path, &torn);
+
+        let (ops, info, mut wal) =
+            Wal::recover(arc, &base(), 2, FsyncPolicy::Always).unwrap();
+        assert_eq!(ops, sample_ops());
+        assert!(info.truncated);
+        // The on-disk log now holds exactly the valid prefix…
+        assert_eq!(fs.get(&path).unwrap().len() as u64, info.valid_bytes);
+        // …and new appends continue cleanly after it.
+        wal.append_delete(4).unwrap();
+        let (ops2, info2) = replay_bytes(&fs.get(&path).unwrap());
+        assert_eq!(ops2.len(), 4);
+        assert!(!info2.truncated);
+        assert_eq!(ops2[3], WalOp::Delete { id: 4 });
+    }
+
+    #[test]
+    fn every_n_policy_syncs_on_the_window_boundary() {
+        let fs = FaultFs::new();
+        let arc: Arc<dyn FileOps> = Arc::new(fs.clone());
+        let mut wal = Wal::create(arc, &base(), 0, FsyncPolicy::EveryN(2)).unwrap();
+        let path = wal.path().to_path_buf();
+        wal.append_delete(0).unwrap();
+        // One record in the window: buffered, not yet durable.
+        let disk = fs.restart(crate::io::CrashStyle::DropUnsynced);
+        assert_eq!(replay_bytes(&disk.get(&path).unwrap()).1.records, 0);
+        wal.append_delete(1).unwrap();
+        // Window boundary: both records are now durable.
+        let disk = fs.restart(crate::io::CrashStyle::DropUnsynced);
+        assert_eq!(replay_bytes(&disk.get(&path).unwrap()).1.records, 2);
+    }
+
+    #[test]
+    fn missing_log_recovers_as_empty() {
+        let fs = FaultFs::new();
+        let arc: Arc<dyn FileOps> = Arc::new(fs.clone());
+        let (ops, info, wal) = Wal::recover(arc, &base(), 5, FsyncPolicy::Never).unwrap();
+        assert!(ops.is_empty());
+        assert_eq!(info, ReplayInfo::default());
+        assert_eq!(wal.records(), 0);
+        assert!(fs.exists(&wal_path(&base(), 5)), "recover materializes the log file");
+    }
+}

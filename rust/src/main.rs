@@ -25,7 +25,10 @@
 //!   depth, `--threads` for parallel candidate screening,
 //!   `--snapshot <path>` to cold-start from a saved index with no
 //!   access to the raw dataset, `--auto-compact <n>` to fold the live
-//!   delta shard into the next generation once `n` mutations pend).
+//!   delta shard into the next generation once `n` mutations pend,
+//!   `--wal off|always|never|every:<n>` for crash-durable mutations
+//!   beside the snapshot anchor, `--read-timeout-ms`/`--max-request-kb`
+//!   per-connection limits, `--queue-cap` for `err=busy` shedding).
 //! * `info`        — build/backend/artifact report.
 //!
 //! Run `dtw-bounds <cmd> --help-args` to see each command's options.
@@ -677,6 +680,41 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ),
         None => None,
     };
+    // `--wal off|always|never|every:<n>`: write-ahead logging of accepted
+    // live mutations next to the snapshot anchor. Requires `--snapshot`
+    // (the WAL lives beside the generation files and replays into them).
+    let wal_spec = args.str_or("wal", "off");
+    let wal_policy = if wal_spec == "off" {
+        None
+    } else {
+        let policy = dtw_bounds::live::FsyncPolicy::parse(&wal_spec).ok_or_else(|| {
+            anyhow::anyhow!("--wal: expected off|always|never|every:<n>, got {wal_spec:?}")
+        })?;
+        if args.get("snapshot").is_none() {
+            bail!("--wal {wal_spec} needs --snapshot <path> (the WAL lives beside it)");
+        }
+        Some(policy)
+    };
+    // The anchor is the `--snapshot` path **verbatim**: compactions
+    // persist the next generation over this same path (atomic rename),
+    // so restarting with the same flag always finds the matching
+    // `<anchor>.wal.g<N>` log.
+    let wal_anchor = args.get("snapshot").map(std::path::PathBuf::from);
+    // Serving limits: `--read-timeout-ms <n>` (0 = never time out),
+    // `--max-request-kb <n>`, `--queue-cap <n>` (mutation/control queue
+    // depth before `err=busy` shedding).
+    let read_timeout_ms = args.parse_or::<u64>("read-timeout-ms", 0);
+    let max_request_kb = args.parse_or::<usize>("max-request-kb", 1024);
+    if max_request_kb == 0 {
+        bail!("--max-request-kb must be >= 1");
+    }
+    let queue_cap = match args.get("queue-cap") {
+        Some(v) => {
+            Some(v.parse::<usize>().context("--queue-cap must be a non-negative integer")?)
+        }
+        None => None,
+    };
+
     let factory_index = index.clone();
     let factory = move || {
         let mut engine = NnEngine::from_index(factory_index);
@@ -689,31 +727,56 @@ fn cmd_serve(args: &Args) -> Result<()> {
             }
             BackendKind::Pjrt => attach_pjrt(&mut engine, max_batch),
         }
+        if let Some(policy) = wal_policy {
+            let anchor = wal_anchor.as_deref().expect("--wal implies --snapshot");
+            // Startup-fatal on purpose: serving without the durability
+            // the operator asked for would silently lose mutations.
+            let info = engine
+                .enable_wal(anchor, policy)
+                .unwrap_or_else(|e| panic!("wal startup: {e:#}"));
+            eprintln!(
+                "wal: {} replayed {} record(s) ({} byte(s){}), fsync={policy}",
+                dtw_bounds::live::wal::wal_path(anchor, engine.generation()).display(),
+                info.records,
+                info.valid_bytes,
+                if info.truncated { ", torn tail repaired" } else { "" },
+            );
+        }
         engine
     };
     let router = Arc::new(Router::spawn(factory, max_batch));
+    if let Some(cap) = queue_cap {
+        router.set_queue_cap(cap);
+    }
     let addr = args
         .positional
         .first()
         .cloned()
         .unwrap_or_else(|| args.str_or("addr", "127.0.0.1:7878"));
-    let server = dtw_bounds::coordinator::server::Server::spawn_with_default_k(
-        &addr, router, default_k,
-    )?;
+    let opts = dtw_bounds::coordinator::ServerOptions {
+        default_k,
+        read_timeout: (read_timeout_ms > 0)
+            .then(|| std::time::Duration::from_millis(read_timeout_ms)),
+        max_request: max_request_kb * 1024,
+    };
+    let server =
+        dtw_bounds::coordinator::server::Server::spawn_with_options(&addr, router, opts)?;
     println!(
         "serving {source} (l={}, n={}, w={}, shards={}, bound={bound}, backend={backend}, \
-         default k={default_k}, threads={threads}) on {}",
+         default k={default_k}, threads={threads}, wal={wal_spec}, \
+         max-request={max_request_kb}KiB, read-timeout={}) on {}",
         index.train().series.first().map(|s| s.len()).unwrap_or(0),
         index.len(),
         index.window(),
         index.shard_count(),
+        if read_timeout_ms == 0 { "off".to_string() } else { format!("{read_timeout_ms}ms") },
         server.addr()
     );
     println!(
         "protocol: one comma-separated series per line (or k=<n>;series for k-NN); \
          save=<path>;/load=<path>; generational snapshot control; \
          insert=<label>;series / delete=<id>; / compact=; / gens=; live mutation; \
-         PING/PONG; Ctrl-C to stop"
+         stats=; counters; PING/PONG; Ctrl-C to stop"
     );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));

@@ -1,0 +1,117 @@
+//! Kill-and-restart integration test: SIGKILL the real serving binary
+//! mid-session and prove that a mutation acked under `--wal always`
+//! survives into the restarted process (the end-to-end half of the
+//! `rust/tests/recovery.rs` property suite — real kernel, real files,
+//! real sockets, a real dead process).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::Path;
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+/// Bind-then-drop to reserve an ephemeral port for the server. (A tiny
+/// race window before the server rebinds it — acceptable for a test.)
+fn free_addr() -> String {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    format!("127.0.0.1:{}", addr.port())
+}
+
+/// Connect with retries while the freshly spawned server comes up.
+fn connect(addr: &str) -> TcpStream {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(conn) => return conn,
+            Err(e) => {
+                assert!(Instant::now() < deadline, "connect {addr}: {e}");
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+/// One request, one reply (the protocol is strictly line-per-line).
+fn ask(conn: &mut TcpStream, line: &str) -> String {
+    conn.write_all(line.as_bytes()).unwrap();
+    conn.write_all(b"\n").unwrap();
+    let mut reply = String::new();
+    BufReader::new(conn.try_clone().unwrap()).read_line(&mut reply).unwrap();
+    reply.trim_end().to_string()
+}
+
+fn spawn_serve(bin: &str, addr: &str, snap: &Path) -> Child {
+    Command::new(bin)
+        .args(["serve", addr, "--snapshot"])
+        .arg(snap)
+        .args(["--wal", "always"])
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .stdin(Stdio::null())
+        .spawn()
+        .expect("spawn serve")
+}
+
+#[test]
+fn sigkilled_server_recovers_acked_inserts_from_the_wal() {
+    let bin = env!("CARGO_BIN_EXE_dtw-bounds");
+    let dir = std::env::temp_dir().join(format!("dtwb_crash_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let snap = dir.join("idx.snap");
+
+    // Build a snapshot to anchor the WAL, then serve from it.
+    let built = Command::new(bin)
+        .args(["index", "build", "--scale", "tiny", "--out"])
+        .arg(&snap)
+        .stdout(Stdio::null())
+        .status()
+        .expect("run index build");
+    assert!(built.success(), "index build failed");
+
+    let addr = free_addr();
+    let mut server = spawn_serve(bin, &addr, &snap);
+    let mut conn = connect(&addr);
+    assert_eq!(ask(&mut conn, "PING"), "PONG");
+
+    // Learn the indexed series length from a deliberate length error,
+    // then insert a probe series; the ack implies the WAL fsync ran.
+    let err = ask(&mut conn, "insert=7;0.0,0.0");
+    let len: usize = err
+        .split("expected ")
+        .nth(1)
+        .and_then(|s| s.split_whitespace().next())
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("no length in {err:?}"));
+    let probe: Vec<String> = (0..len).map(|i| format!("{}.25", i)).collect();
+    let probe = probe.join(",");
+    let ack = ask(&mut conn, &format!("insert=42;{probe}"));
+    assert!(ack.starts_with("inserted id="), "{ack}");
+    let hit = ask(&mut conn, &probe);
+    assert!(hit.starts_with("label=42 dist=0.000000"), "{hit}");
+    let stats = ask(&mut conn, "stats=;");
+    assert!(stats.contains(" wal_records=1"), "append logged before ack: {stats}");
+
+    // SIGKILL: no flush, no shutdown handler, no goodbye.
+    drop(conn);
+    server.kill().expect("kill serve");
+    server.wait().expect("reap serve");
+
+    // Restart from the same snapshot + WAL: the acked insert is back,
+    // found at distance exactly zero.
+    let addr = free_addr();
+    let mut server = spawn_serve(bin, &addr, &snap);
+    let mut conn = connect(&addr);
+    let hit = ask(&mut conn, &probe);
+    assert!(
+        hit.starts_with("label=42 dist=0.000000"),
+        "acked insert lost across SIGKILL: {hit}"
+    );
+    let stats = ask(&mut conn, "stats=;");
+    assert!(stats.contains(" wal_records=1"), "replayed log stays open: {stats}");
+
+    drop(conn);
+    server.kill().ok();
+    server.wait().ok();
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,422 @@
+//! Crash-recovery property suite: enumerate **every** crash point of the
+//! durability layer's write/fsync/rename sequences under deterministic
+//! fault injection ([`dtw_bounds::io::FaultFs`]) and prove the recovery
+//! contract:
+//!
+//! * the snapshot save is atomic at the published path — after a crash
+//!   at any op, the path holds the complete pre-save bytes or the
+//!   complete post-save bytes, never a hybrid, and always loads;
+//! * a WAL-logged mutation acked after its fsync survives power loss
+//!   (`DropUnsynced`), and recovery from any append crash point yields
+//!   exactly the acked prefix or acked-plus-in-flight — bit-equal (by
+//!   k-NN fingerprint) to a cold rebuild that applied the same prefix;
+//! * compact's log rotation recovers, from every crash point, a state
+//!   bit-equal to the uninterrupted run (pre- and post-rotation are the
+//!   same logical index);
+//! * fsync policies bound the loss window exactly: `every:<n>` loses at
+//!   most the unsynced tail, `never` still survives process death.
+//!
+//! The crash points are discovered, not hard-coded: a clean run records
+//! the op trace, then each test re-runs the identical history once per
+//! `(op, crash style, torn-write variant)` triple.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use dtw_bounds::coordinator::NnEngine;
+use dtw_bounds::data::synthetic::{generate_archive, ArchiveSpec, Scale};
+use dtw_bounds::data::Dataset;
+use dtw_bounds::index::snapshot::{load_with, save_with};
+use dtw_bounds::index::DtwIndex;
+use dtw_bounds::io::{CrashStyle, FaultFs, FaultPlan};
+use dtw_bounds::live::{FsyncPolicy, WalOp};
+
+fn tiny(seed: u64) -> (Dataset, DtwIndex) {
+    let ds = generate_archive(&ArchiveSpec::new(Scale::Tiny, seed))[0].clone();
+    let index = DtwIndex::builder_from_dataset(&ds).build().unwrap();
+    (ds, index)
+}
+
+fn anchor() -> PathBuf {
+    PathBuf::from("served.snap")
+}
+
+fn engine_on(fs: &FaultFs, index: DtwIndex) -> NnEngine {
+    let mut engine = NnEngine::from_index(index);
+    engine.set_fs(Arc::new(fs.clone()));
+    engine
+}
+
+/// Exact-answer fingerprint: winner index, label, and the raw f64 bits
+/// of the distance for each probe — the bit-equality oracle.
+fn fingerprint(engine: &mut NnEngine, queries: &[Vec<f64>]) -> Vec<(usize, u32, u64)> {
+    queries
+        .iter()
+        .map(|q| {
+            let r = engine.query_one(q);
+            (r.result.nn_index, r.result.label, r.result.distance.to_bits())
+        })
+        .collect()
+}
+
+fn apply(engine: &mut NnEngine, op: &WalOp) {
+    match op {
+        WalOp::Insert { label, values } => {
+            engine.insert(*label, values.clone()).unwrap();
+        }
+        WalOp::Delete { id } => engine.delete(*id as usize).unwrap(),
+    }
+}
+
+/// The fingerprint of `index` with the first `k` of `ops` applied
+/// through a fresh, never-crashed engine (no fs, no WAL).
+fn prefix_fingerprint(
+    index: &DtwIndex,
+    ops: &[WalOp],
+    k: usize,
+    queries: &[Vec<f64>],
+) -> Vec<(usize, u32, u64)> {
+    let mut cold = NnEngine::from_index(index.clone());
+    for op in &ops[..k] {
+        apply(&mut cold, op);
+    }
+    fingerprint(&mut cold, queries)
+}
+
+/// A probe series of the index's length, distinct per `k`.
+fn series(m: usize, k: usize) -> Vec<f64> {
+    (0..m).map(|i| i as f64 * 0.25 + k as f64).collect()
+}
+
+fn seed_snapshot(fs: &FaultFs, index: &DtwIndex, target: &Path) {
+    save_with(index, target, fs).unwrap();
+}
+
+#[test]
+fn every_snapshot_save_crash_point_recovers_pre_or_post() {
+    let (_, old) = tiny(90);
+    let (_, new) = tiny(91);
+    let target = anchor();
+
+    // Clean run pins the crash-point space and the post-state bytes.
+    let clean = FaultFs::new();
+    save_with(&old, &target, &clean).unwrap();
+    let pre_bytes = clean.get(&target).unwrap();
+    let start = clean.op_count();
+    save_with(&new, &target, &clean).unwrap();
+    let post_bytes = clean.get(&target).unwrap();
+    let save_ops = clean.op_count() - start;
+    assert_eq!(save_ops, 8, "create + 5 writes + sync + rename");
+    assert_ne!(pre_bytes, post_bytes, "the two indexes must differ");
+
+    let mut runs = 0;
+    for crash_at in start..start + save_ops {
+        // `put` does not trace, so re-running over a seeded pre-state
+        // keeps the same op indices as the clean second save.
+        let crash_at = crash_at - start;
+        for style in [CrashStyle::KeepAll, CrashStyle::DropUnsynced] {
+            for torn in [0usize, 1, 7] {
+                let plan = if torn == 0 {
+                    FaultPlan::fail_op(crash_at)
+                } else {
+                    FaultPlan::torn_write(crash_at, torn)
+                };
+                let fs = FaultFs::with_plan(plan);
+                fs.put(&target, &pre_bytes);
+                save_with(&new, &target, &fs)
+                    .expect_err("the planned op must fail the save");
+                assert!(fs.crashed(), "crash_at={crash_at} fired");
+
+                let disk = fs.restart(style);
+                let got = disk
+                    .get(&target)
+                    .expect("the published path never disappears");
+                assert!(
+                    got == pre_bytes || got == post_bytes,
+                    "crash_at={crash_at} style={style:?} torn={torn}: \
+                     hybrid bytes at the published path"
+                );
+                // Whichever state survived, it loads cleanly.
+                load_with(&target, &disk).expect("recovered snapshot loads");
+                runs += 1;
+            }
+        }
+    }
+    assert_eq!(runs, save_ops * 2 * 3, "full crash-point coverage");
+}
+
+#[test]
+fn acked_after_fsync_mutations_survive_power_loss_bit_equal() {
+    let (ds, index) = tiny(92);
+    let m = index.train().series[0].values.len();
+    let ramp = series(m, 0);
+    let queries: Vec<Vec<f64>> = ds
+        .test
+        .iter()
+        .take(3)
+        .map(|s| s.values.clone())
+        .chain([ramp.clone()])
+        .collect();
+    let target = anchor();
+
+    let fs = FaultFs::new();
+    seed_snapshot(&fs, &index, &target);
+    let mut live = engine_on(&fs, index.clone());
+    let replay = live.enable_wal(&target, FsyncPolicy::Always).unwrap();
+    assert_eq!(replay.records, 0, "fresh anchor, empty log");
+    live.insert(7, ramp.clone()).unwrap();
+    live.delete(0).unwrap();
+    let want = fingerprint(&mut live, &queries);
+
+    // Power loss: everything unsynced is gone. Both mutations were
+    // fsynced before their ack, so both survive.
+    let disk = fs.restart(CrashStyle::DropUnsynced);
+    let mut revived = engine_on(&disk, load_with(&target, &disk).unwrap());
+    let replay = revived.enable_wal(&target, FsyncPolicy::Always).unwrap();
+    assert_eq!(replay.records, 2, "both acked mutations replayed");
+    assert!(!replay.truncated, "fsync=always leaves no torn tail to drop");
+    assert_eq!(fingerprint(&mut revived, &queries), want, "recovery is bit-equal");
+
+    // And the whole WAL path is bit-equal to a cold rebuild that never
+    // saw a snapshot, a log, or a crash.
+    let ops = [WalOp::Insert { label: 7, values: ramp }, WalOp::Delete { id: 0 }];
+    assert_eq!(
+        prefix_fingerprint(&index, &ops, 2, &queries),
+        want,
+        "wal replay == cold rebuild"
+    );
+}
+
+#[test]
+fn every_wal_append_crash_point_recovers_acked_or_acked_plus_in_flight() {
+    let (ds, index) = tiny(93);
+    let m = index.train().series[0].values.len();
+    let ops = [
+        WalOp::Insert { label: 100, values: series(m, 1) },
+        WalOp::Insert { label: 101, values: series(m, 2) },
+        WalOp::Delete { id: 0 },
+    ];
+    let queries: Vec<Vec<f64>> = ds
+        .test
+        .iter()
+        .take(2)
+        .map(|s| s.values.clone())
+        .chain((1..=2).map(|k| series(m, k)))
+        .collect();
+    let target = anchor();
+
+    // Clean run: pin the append region's op extent.
+    let clean = FaultFs::new();
+    seed_snapshot(&clean, &index, &target);
+    let mut engine = engine_on(&clean, index.clone());
+    engine.enable_wal(&target, FsyncPolicy::Always).unwrap();
+    let setup_ops = clean.op_count();
+    for op in &ops {
+        apply(&mut engine, op);
+    }
+    let append_ops = clean.op_count() - setup_ops;
+    assert_eq!(append_ops, 2 * ops.len(), "each fsync=always append is write + sync");
+
+    // Ground truth for every possible recovered prefix.
+    let fp: Vec<_> =
+        (0..=ops.len()).map(|k| prefix_fingerprint(&index, &ops, k, &queries)).collect();
+
+    for crash_at in setup_ops..setup_ops + append_ops {
+        for style in [CrashStyle::KeepAll, CrashStyle::DropUnsynced] {
+            for torn in [0usize, 5] {
+                let plan = if torn == 0 {
+                    FaultPlan::fail_op(crash_at)
+                } else {
+                    FaultPlan::torn_write(crash_at, torn)
+                };
+                let fs = FaultFs::with_plan(plan);
+                seed_snapshot(&fs, &index, &target);
+                let mut engine = engine_on(&fs, index.clone());
+                engine.enable_wal(&target, FsyncPolicy::Always).unwrap();
+
+                // Replay the history; after the crash point fires, every
+                // further mutation must be refused (not half-applied).
+                let mut acked = 0usize;
+                let mut alive = true;
+                for op in &ops {
+                    let outcome = match op {
+                        WalOp::Insert { label, values } => {
+                            engine.insert(*label, values.clone()).map(|_| ())
+                        }
+                        WalOp::Delete { id } => engine.delete(*id as usize),
+                    };
+                    match outcome {
+                        Ok(()) => {
+                            assert!(alive, "no acks after a failed mutation");
+                            acked += 1;
+                        }
+                        Err(_) => alive = false,
+                    }
+                }
+                assert!(acked < ops.len(), "the crash must refuse something");
+
+                let disk = fs.restart(style);
+                let mut revived = engine_on(&disk, load_with(&target, &disk).unwrap());
+                let replay =
+                    revived.enable_wal(&target, FsyncPolicy::Always).unwrap();
+                let recovered = replay.records as usize;
+                let ctx = format!("crash_at={crash_at} style={style:?} torn={torn}");
+                assert!(
+                    recovered == acked || recovered == acked + 1,
+                    "{ctx}: recovered {recovered}, acked {acked} — \
+                     not a pre-or-post state"
+                );
+                assert_eq!(
+                    fingerprint(&mut revived, &queries),
+                    fp[recovered],
+                    "{ctx}: recovered state is not bit-equal to the \
+                     first {recovered} mutations"
+                );
+                if style == CrashStyle::DropUnsynced {
+                    // Power loss with fsync=always: *exactly* the acked
+                    // set — the in-flight record was never durable.
+                    assert_eq!(recovered, acked, "{ctx}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn every_compact_rotation_crash_point_recovers_bit_equal() {
+    let (ds, index) = tiny(94);
+    let m = index.train().series[0].values.len();
+    let ramp = series(m, 3);
+    let ops =
+        [WalOp::Insert { label: 9, values: ramp.clone() }, WalOp::Delete { id: 1 }];
+    let queries: Vec<Vec<f64>> = ds
+        .test
+        .iter()
+        .take(3)
+        .map(|s| s.values.clone())
+        .chain([ramp])
+        .collect();
+    let target = anchor();
+
+    // The one logical state every recovery must reproduce.
+    let want = prefix_fingerprint(&index, &ops, 2, &queries);
+
+    // Clean run: pin the rotation's op extent and post state.
+    let clean = FaultFs::new();
+    seed_snapshot(&clean, &index, &target);
+    let mut engine = engine_on(&clean, index.clone());
+    engine.enable_wal(&target, FsyncPolicy::Always).unwrap();
+    for op in &ops {
+        apply(&mut engine, op);
+    }
+    let start = clean.op_count();
+    engine.compact().unwrap();
+    let rotation_ops = clean.op_count() - start;
+    assert_eq!(
+        rotation_ops,
+        2 + 8 + 1,
+        "new log (create + sync), snapshot save (8), remove old log"
+    );
+    let old_log = dtw_bounds::live::wal::wal_path(&target, 0);
+    let new_log = dtw_bounds::live::wal::wal_path(&target, 1);
+    assert!(clean.get(&old_log).is_none(), "superseded log removed");
+    assert!(clean.get(&new_log).unwrap().is_empty(), "fresh empty log for gen 1");
+    assert_eq!(load_with(&target, &clean).unwrap().generation(), 1);
+
+    for crash_at in start..start + rotation_ops {
+        for style in [CrashStyle::KeepAll, CrashStyle::DropUnsynced] {
+            for torn in [0usize, 3] {
+                let plan = if torn == 0 {
+                    FaultPlan::fail_op(crash_at)
+                } else {
+                    FaultPlan::torn_write(crash_at, torn)
+                };
+                let fs = FaultFs::with_plan(plan);
+                seed_snapshot(&fs, &index, &target);
+                let mut engine = engine_on(&fs, index.clone());
+                engine.enable_wal(&target, FsyncPolicy::Always).unwrap();
+                for op in &ops {
+                    apply(&mut engine, op);
+                }
+                let compacted = engine.compact();
+                if crash_at == start + rotation_ops - 1 {
+                    // Removing the superseded log is best-effort: the
+                    // new state is already durable, so this op's failure
+                    // is not an error (the orphan can never replay).
+                    assert!(compacted.is_ok(), "remove is best-effort");
+                } else {
+                    assert!(compacted.is_err(), "crash_at={crash_at} fails compact");
+                }
+
+                let disk = fs.restart(style);
+                let base = load_with(&target, &disk).expect("anchor always loads");
+                let generation = base.generation();
+                let ctx = format!("crash_at={crash_at} style={style:?} torn={torn}");
+                assert!(
+                    generation == 0 || generation == 1,
+                    "{ctx}: impossible generation {generation}"
+                );
+                let mut revived = engine_on(&disk, base);
+                let replay =
+                    revived.enable_wal(&target, FsyncPolicy::Always).unwrap();
+                let expected_records = if generation == 1 { 0 } else { 2 };
+                assert_eq!(replay.records, expected_records, "{ctx}");
+                assert_eq!(
+                    fingerprint(&mut revived, &queries),
+                    want,
+                    "{ctx}: pre- and post-rotation are the same logical \
+                     state, so every recovery must be bit-equal"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fsync_window_bounds_the_loss_to_the_unsynced_tail_only() {
+    let (ds, index) = tiny(95);
+    let m = index.train().series[0].values.len();
+    let ops = [
+        WalOp::Insert { label: 1, values: series(m, 1) },
+        WalOp::Insert { label: 2, values: series(m, 2) },
+        WalOp::Insert { label: 3, values: series(m, 3) },
+        WalOp::Delete { id: 0 },
+    ];
+    let queries: Vec<Vec<f64>> = ds
+        .test
+        .iter()
+        .take(2)
+        .map(|s| s.values.clone())
+        .chain((1..=3).map(|k| series(m, k)))
+        .collect();
+    let fp: Vec<_> =
+        (0..=ops.len()).map(|k| prefix_fingerprint(&index, &ops, k, &queries)).collect();
+    let target = anchor();
+
+    // every:3 — records 1-3 are synced as a batch; record 4 is only in
+    // the page cache when the plug is pulled.
+    let policy = FsyncPolicy::parse("every:3").unwrap();
+    let fs = FaultFs::new();
+    seed_snapshot(&fs, &index, &target);
+    let mut engine = engine_on(&fs, index.clone());
+    engine.enable_wal(&target, policy).unwrap();
+    for op in &ops {
+        apply(&mut engine, op);
+    }
+
+    // Process death (the kernel holds the bytes): all four acks survive.
+    let killed = fs.restart(CrashStyle::KeepAll);
+    let mut revived = engine_on(&killed, load_with(&target, &killed).unwrap());
+    let replay = revived.enable_wal(&target, policy).unwrap();
+    assert_eq!(replay.records, 4, "process death loses nothing");
+    assert_eq!(fingerprint(&mut revived, &queries), fp[4]);
+
+    // Power loss: exactly the synced prefix — the documented `every:n`
+    // loss window, never a torn or hybrid state.
+    let powerless = fs.restart(CrashStyle::DropUnsynced);
+    let mut revived = engine_on(&powerless, load_with(&target, &powerless).unwrap());
+    let replay = revived.enable_wal(&target, policy).unwrap();
+    assert_eq!(replay.records, 3, "the unsynced fourth record is gone");
+    assert!(!replay.truncated, "loss lands on a record boundary");
+    assert_eq!(fingerprint(&mut revived, &queries), fp[3]);
+}

@@ -123,17 +123,22 @@ pub enum ScenarioKind {
     /// Mixed query+stream over live mutation (insert/delete/compact
     /// under load), pinned to a cold rebuild.
     Live,
+    /// SIMD kernel microbenchmarks: cells/sec per available ISA per
+    /// bound kernel, with a bit-equality oracle against the scalar
+    /// lane-protocol reference.
+    Kernel,
 }
 
 impl ScenarioKind {
     /// Every scenario, in canonical execution order.
-    pub const ALL: [ScenarioKind; 6] = [
+    pub const ALL: [ScenarioKind; 7] = [
         ScenarioKind::ColdStart,
         ScenarioKind::Knn,
         ScenarioKind::Batched,
         ScenarioKind::Stream,
         ScenarioKind::Snapshot,
         ScenarioKind::Live,
+        ScenarioKind::Kernel,
     ];
 
     /// Canonical (re-parseable) name.
@@ -145,6 +150,7 @@ impl ScenarioKind {
             ScenarioKind::Stream => "stream",
             ScenarioKind::Snapshot => "snapshot",
             ScenarioKind::Live => "live",
+            ScenarioKind::Kernel => "kernel",
         }
     }
 

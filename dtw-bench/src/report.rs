@@ -77,6 +77,12 @@ pub struct Report {
     pub oracle_mode: String,
     /// Total oracle assertions that passed.
     pub oracle_checks: u64,
+    /// SIMD ISA the run dispatched to (`scalar` | `sse2` | `avx2` |
+    /// `neon`). Informational provenance: results are bit-identical
+    /// across ISAs, but ns/op metrics are only comparable within one.
+    /// Absent in pre-SIMD reports; the tolerant parser defaults it to
+    /// the empty string, so no schema bump.
+    pub isa: String,
     /// Scenario names that ran, in order.
     pub scenarios: Vec<String>,
     /// All metrics, in emit order.
@@ -109,6 +115,7 @@ impl Report {
         let _ = writeln!(out, "  \"seed\": {},", self.seed);
         let _ = writeln!(out, "  \"oracle_mode\": \"{}\",", esc(&self.oracle_mode));
         let _ = writeln!(out, "  \"oracle_checks\": {},", self.oracle_checks);
+        let _ = writeln!(out, "  \"isa\": \"{}\",", esc(&self.isa));
         let scenarios: Vec<String> =
             self.scenarios.iter().map(|s| format!("\"{}\"", esc(s))).collect();
         let _ = writeln!(out, "  \"scenarios\": [{}],", scenarios.join(", "));
@@ -143,6 +150,7 @@ impl Report {
             seed: 0,
             oracle_mode: String::new(),
             oracle_checks: 0,
+            isa: String::new(),
             scenarios: Vec::new(),
             metrics: Vec::new(),
         };
@@ -158,6 +166,8 @@ impl Report {
                 report.oracle_mode = v;
             } else if let Some(v) = num_field(t, "oracle_checks") {
                 report.oracle_checks = v as u64;
+            } else if let Some(v) = str_field(t, "isa") {
+                report.isa = v;
             } else if t.starts_with("\"scenarios\"") {
                 let body = t
                     .split_once('[')
@@ -323,6 +333,7 @@ mod tests {
             seed: 77,
             oracle_mode: "brute".into(),
             oracle_checks: 420,
+            isa: "avx2".into(),
             scenarios: vec!["knn".into(), "stream".into()],
             metrics: vec![
                 Metric::lower("knn/t1.s1.c0/ns_per_query", 12345.0, "ns"),

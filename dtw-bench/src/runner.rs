@@ -139,6 +139,7 @@ pub fn run(recipe: &Recipe) -> Result<Report, RunError> {
             ScenarioKind::Stream => scenario::stream::run(&mut ctx)?,
             ScenarioKind::Snapshot => scenario::snapshot::run(&mut ctx)?,
             ScenarioKind::Live => scenario::live::run(&mut ctx)?,
+            ScenarioKind::Kernel => scenario::kernel::run(&mut ctx)?,
         }
     }
 
@@ -148,6 +149,7 @@ pub fn run(recipe: &Recipe) -> Result<Report, RunError> {
         seed: recipe.seed,
         oracle_mode: recipe.oracle.name().to_string(),
         oracle_checks: ctx.oracle.checks,
+        isa: dtw_bounds::simd::isa_name().to_string(),
         scenarios: recipe.scenarios.iter().map(|s| s.name().to_string()).collect(),
         metrics: ctx.metrics,
     })
@@ -160,7 +162,7 @@ mod tests {
         DatasetSpec, Family, Grid, LiveSpec, QueryMix, QuerySpec, StreamSpec, WalMode,
     };
 
-    /// A deliberately tiny recipe so the full runner (all six
+    /// A deliberately tiny recipe so the full runner (all seven
     /// scenarios, brute oracles) stays fast enough for `cargo test`.
     fn tiny(oracle: OracleMode) -> Recipe {
         Recipe {
@@ -188,12 +190,18 @@ mod tests {
     #[test]
     fn tiny_recipe_passes_every_oracle_in_brute_mode() {
         let report = run(&tiny(OracleMode::Brute)).unwrap();
-        assert_eq!(report.scenarios.len(), 6);
+        assert_eq!(report.scenarios.len(), 7);
         assert!(report.oracle_checks > 50, "oracle barely ran: {}", report.oracle_checks);
+        assert_eq!(report.isa, dtw_bounds::simd::isa_name());
         assert!(report.metric("knn/t1.s1.c0/ns_per_query").is_some());
         assert!(report.metric("stream/t2.s2.c3/matches").is_some());
         assert!(report.metric("live/t2.s2.c3.wal-off/compact_ns").is_some());
         assert!(report.metric("live/t2.s2.c3.wal-always/insert_ns").is_some());
+        let isa = dtw_bounds::simd::isa_name();
+        assert!(
+            report.metric(&format!("kernel/{isa}/keogh_sq/cells_per_sec")).is_some(),
+            "kernel scenario must report the active ISA's throughput"
+        );
     }
 
     #[test]

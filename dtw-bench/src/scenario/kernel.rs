@@ -1,0 +1,237 @@
+//! SIMD kernel microbenchmarks (the `kernel` scenario).
+//!
+//! For every ISA the host can dispatch to
+//! ([`dtw_bounds::simd::available`]), times each vtable kernel over the
+//! recipe's query × corpus workload and reports throughput as
+//! `kernel/<isa>/<kernel>/cells_per_sec`. Before any timing, every
+//! kernel is verified **bit-equal** to the scalar lane-protocol
+//! reference over every (query, candidate) pair — the oracle fails the
+//! run on the first diverging bit, so a throughput number can never be
+//! reported for a kernel producing different answers.
+//!
+//! Cell counts are nominal (rows × ℓ): the early-abandoning variant is
+//! credited with full rows even when it abandons, so its number reads
+//! as *effective* throughput — abandoning earlier makes it larger.
+
+use std::hint::black_box;
+use std::time::Instant;
+
+use dtw_bounds::bounds::PreparedSeries;
+use dtw_bounds::simd::{self, Isa, Kernels};
+
+use super::RunCtx;
+use crate::report::Metric;
+use crate::runner::RunError;
+
+/// Cells each timing loop aims to stream: small enough for the tiny
+/// unit-test recipe, large enough to out-run timer granularity.
+const TARGET_CELLS: u64 = 400_000;
+
+/// Per-sec throughput metric, generously toleranced (microbenchmarks
+/// are the noisiest numbers in the report).
+fn record(ctx: &mut RunCtx, isa: Isa, name: &str, cells: u64, start: Instant) {
+    let secs = start.elapsed().as_secs_f64().max(1e-9);
+    ctx.metrics.push(
+        Metric::higher(
+            format!("kernel/{isa}/{name}/cells_per_sec"),
+            cells as f64 / secs,
+            "cells/s",
+        )
+        .with_tolerance(0.5),
+    );
+}
+
+pub fn run(ctx: &mut RunCtx) -> Result<(), RunError> {
+    let w = ctx.recipe.dataset.window;
+    let train: Vec<PreparedSeries> = ctx
+        .data
+        .train
+        .iter()
+        .map(|s| PreparedSeries::prepare(s.clone(), w))
+        .collect();
+    let queries: Vec<Vec<f64>> = ctx.data.queries.clone();
+    let scalar = simd::for_isa(Isa::Scalar).expect("scalar kernels are always available");
+    // Finite cuts (half the full scalar sum) so the early-abandoning
+    // variant really abandons on a realistic fraction of the pairs.
+    let cuts: Vec<Vec<f64>> = queries
+        .iter()
+        .map(|q| {
+            train.iter().map(|t| 0.5 * (scalar.keogh_sq_sum)(q, &t.lo, &t.up)).collect()
+        })
+        .collect();
+
+    for isa in simd::available() {
+        let Some(k) = simd::for_isa(isa) else { continue };
+        bench_isa(ctx, isa, k, scalar, &queries, &train, &cuts)?;
+    }
+    Ok(())
+}
+
+fn bench_isa(
+    ctx: &mut RunCtx,
+    isa: Isa,
+    k: &'static Kernels,
+    scalar: &'static Kernels,
+    queries: &[Vec<f64>],
+    train: &[PreparedSeries],
+    cuts: &[Vec<f64>],
+) -> Result<(), RunError> {
+    let l = train.first().map(|t| t.values.len()).unwrap_or(0);
+    let pair_cells = (queries.len() * train.len() * l) as u64;
+    if pair_cells == 0 {
+        return Ok(());
+    }
+    let rounds = (TARGET_CELLS / pair_cells).max(1);
+
+    // --- summing kernels (full LB_Keogh rows) ---------------------------
+    let sums: [(&str, fn(&Kernels) -> fn(&[f64], &[f64], &[f64]) -> f64); 2] =
+        [("keogh_sq", |k| k.keogh_sq_sum), ("keogh_abs", |k| k.keogh_abs_sum)];
+    for (name, get) in sums {
+        let (kf, sf) = (get(k), get(scalar));
+        for (qi, q) in queries.iter().enumerate() {
+            for (ti, t) in train.iter().enumerate() {
+                ctx.oracle.check_identity(
+                    &format!("kernel/{isa}/{name}/q{qi}t{ti}"),
+                    "bit-equal to scalar",
+                    kf(q, &t.lo, &t.up).to_bits(),
+                    sf(q, &t.lo, &t.up).to_bits(),
+                )?;
+            }
+        }
+        let start = Instant::now();
+        let mut acc = 0.0;
+        for _ in 0..rounds {
+            for q in queries {
+                for t in train {
+                    acc += kf(q, &t.lo, &t.up);
+                }
+            }
+        }
+        black_box(acc);
+        record(ctx, isa, name, rounds * pair_cells, start);
+    }
+
+    // --- early-abandoning sum -------------------------------------------
+    {
+        let name = "keogh_sq_ea";
+        for (qi, q) in queries.iter().enumerate() {
+            for (ti, t) in train.iter().enumerate() {
+                let cut = cuts[qi][ti];
+                ctx.oracle.check_identity(
+                    &format!("kernel/{isa}/{name}/q{qi}t{ti}"),
+                    "bit-equal to scalar",
+                    (k.keogh_sq_ea)(q, &t.lo, &t.up, cut).to_bits(),
+                    (scalar.keogh_sq_ea)(q, &t.lo, &t.up, cut).to_bits(),
+                )?;
+            }
+        }
+        let start = Instant::now();
+        let mut acc = 0.0;
+        for _ in 0..rounds {
+            for (qi, q) in queries.iter().enumerate() {
+                for (ti, t) in train.iter().enumerate() {
+                    acc += (k.keogh_sq_ea)(q, &t.lo, &t.up, cuts[qi][ti]);
+                }
+            }
+        }
+        black_box(acc);
+        record(ctx, isa, name, rounds * pair_cells, start);
+    }
+
+    // --- elementwise kernels --------------------------------------------
+    let mut out_k = vec![0.0f64; l];
+    let mut out_s = vec![0.0f64; l];
+
+    {
+        let name = "clamp";
+        for (qi, q) in queries.iter().enumerate() {
+            for (ti, t) in train.iter().enumerate() {
+                (k.clamp)(q, &t.lo, &t.up, &mut out_k);
+                (scalar.clamp)(q, &t.lo, &t.up, &mut out_s);
+                let diverging = out_k
+                    .iter()
+                    .zip(out_s.iter())
+                    .filter(|(a, b)| a.to_bits() != b.to_bits())
+                    .count() as u64;
+                ctx.oracle.check_identity(
+                    &format!("kernel/{isa}/{name}/q{qi}t{ti}"),
+                    "diverging lanes",
+                    diverging,
+                    0,
+                )?;
+            }
+        }
+        let start = Instant::now();
+        for _ in 0..rounds {
+            for q in queries {
+                for t in train {
+                    (k.clamp)(q, &t.lo, &t.up, &mut out_k);
+                }
+            }
+        }
+        black_box(&out_k);
+        record(ctx, isa, name, rounds * pair_cells, start);
+    }
+
+    if l > 1 {
+        let name = "pair_min";
+        for (ti, t) in train.iter().enumerate() {
+            (k.pair_min)(&t.values, &mut out_k[..l - 1]);
+            (scalar.pair_min)(&t.values, &mut out_s[..l - 1]);
+            let diverging = out_k[..l - 1]
+                .iter()
+                .zip(out_s[..l - 1].iter())
+                .filter(|(a, b)| a.to_bits() != b.to_bits())
+                .count() as u64;
+            ctx.oracle.check_identity(
+                &format!("kernel/{isa}/{name}/t{ti}"),
+                "diverging lanes",
+                diverging,
+                0,
+            )?;
+        }
+        let per_round = (train.len() * (l - 1)) as u64;
+        let rounds = (TARGET_CELLS / per_round).max(1);
+        let start = Instant::now();
+        for _ in 0..rounds {
+            for t in train {
+                (k.pair_min)(&t.values, &mut out_k[..l - 1]);
+            }
+        }
+        black_box(&out_k);
+        record(ctx, isa, name, rounds * per_round, start);
+    }
+
+    {
+        let name = "min_merge";
+        for (ti, t) in train.iter().enumerate() {
+            out_k.copy_from_slice(&t.lo);
+            out_s.copy_from_slice(&t.lo);
+            (k.min_merge)(&mut out_k, &t.up);
+            (scalar.min_merge)(&mut out_s, &t.up);
+            let diverging = out_k
+                .iter()
+                .zip(out_s.iter())
+                .filter(|(a, b)| a.to_bits() != b.to_bits())
+                .count() as u64;
+            ctx.oracle.check_identity(
+                &format!("kernel/{isa}/{name}/t{ti}"),
+                "diverging lanes",
+                diverging,
+                0,
+            )?;
+        }
+        let per_round = (train.len() * l) as u64;
+        let rounds = (TARGET_CELLS / per_round).max(1);
+        let start = Instant::now();
+        for _ in 0..rounds {
+            for t in train {
+                (k.min_merge)(&mut out_k, &t.lo);
+            }
+        }
+        black_box(&out_k);
+        record(ctx, isa, name, rounds * per_round, start);
+    }
+
+    Ok(())
+}

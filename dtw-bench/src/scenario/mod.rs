@@ -9,6 +9,7 @@
 
 pub mod batched;
 pub mod cold_start;
+pub mod kernel;
 pub mod knn;
 pub mod live;
 pub mod snapshot;

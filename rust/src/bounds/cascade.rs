@@ -15,7 +15,7 @@
 
 use crate::delta::Delta;
 
-use super::{kim, webb, PreparedSeries, Scratch};
+use super::{improved, kim, webb, PreparedSeries, Scratch};
 
 /// Staged `KimFL → LB_WEBB` cascade. Semantics match `LB_WEBB` exactly
 /// when not abandoned; with a finite `abandon_at` it often exits after the
@@ -66,6 +66,36 @@ mod tests {
     }
 
     #[test]
+    fn improved_cascade_equals_improved_when_not_abandoned() {
+        let mut rng = Rng::seeded(902);
+        let mut scratch = Scratch::default();
+        for _ in 0..100 {
+            let n = rng.int_range(8, 60);
+            let a: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let w = rng.int_range(1, n - 1);
+            let q = prep(&a, w);
+            let t = prep(&b, w);
+            let c = lb_improved_cascade::<Squared>(&q, &t, w, f64::INFINITY, &mut scratch);
+            let imp =
+                crate::bounds::improved::lb_improved::<Squared>(&q, &t, w, f64::INFINITY, &mut scratch);
+            assert!(c >= imp, "cascade is the max of its stages");
+            assert!(c <= dtw::<Squared>(&a, &b, w) + 1e-9);
+        }
+    }
+
+    #[test]
+    fn improved_cascade_kim_stage_short_circuits() {
+        let a: Vec<f64> = vec![100.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, -100.0];
+        let b: Vec<f64> = vec![-100.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 100.0];
+        let q = prep(&a, 1);
+        let t = prep(&b, 1);
+        let mut scratch = Scratch::default();
+        let c = lb_improved_cascade::<Squared>(&q, &t, 1, 1.0, &mut scratch);
+        assert_eq!(c, 200.0 * 200.0 * 2.0); // exactly the Kim value
+    }
+
+    #[test]
     fn kim_stage_short_circuits() {
         // Wildly different endpoints: the Kim stage alone must clear a
         // small threshold.
@@ -77,6 +107,31 @@ mod tests {
         let c = lb_cascade::<Squared>(&q, &t, 1, 1.0, &mut scratch);
         assert_eq!(c, 200.0 * 200.0 * 2.0); // exactly the Kim value
     }
+}
+
+/// Staged `KimFL → LB_IMPROVED` cascade — Lemire's two-pass retrieval
+/// discipline (arXiv 0811.3301) as an anytime cascade, with every
+/// summing stage on the SIMD vtable. The constant-time Kim screen runs
+/// first; survivors pay the vectorised `LB_KEOGH` first pass
+/// ([`super::keogh::lb_keogh_flat`], the pass that dominates
+/// sequential-search wall-clock and which SIMD accelerates most); only
+/// candidates still under the threshold pay the projection-envelope
+/// second pass — itself the same vectorised flat kernel, threaded
+/// through [`improved::lb_improved`]'s combined abandon logic.
+/// Returns the max of the stages reached (the max of valid lower
+/// bounds is a valid lower bound).
+pub fn lb_improved_cascade<D: Delta>(
+    q: &PreparedSeries,
+    t: &PreparedSeries,
+    w: usize,
+    abandon_at: f64,
+    scratch: &mut Scratch,
+) -> f64 {
+    let kim = kim::lb_kim_fl::<D>(&q.values, &t.values);
+    if kim > abandon_at {
+        return kim;
+    }
+    improved::lb_improved::<D>(q, t, w, abandon_at, scratch).max(kim)
 }
 
 /// The UCR-suite cascade (Rakthanmanon & Keogh 2013): constant-time

@@ -21,6 +21,13 @@
 /// The deques are flat index rings in a thread-local scratch allocation —
 /// `VecDeque` showed up at ~17% of NN-search profiles from per-call
 /// allocation and wrap-around arithmetic (§Perf O2 in EXPERIMENTS.md).
+///
+/// This admit/expire pass is deliberately **not** vectorised: its control
+/// flow is data-dependent (each admission pops a variable number of deque
+/// entries), so it stays scalar while its consumers — the min/clamp and
+/// merge loops over the envelopes it produces — run on the
+/// [`crate::simd`] vtable. That split keeps envelope *values* identical
+/// across ISAs by construction.
 pub fn envelopes_into(s: &[f64], w: usize, lo: &mut Vec<f64>, up: &mut Vec<f64>) {
     let n = s.len();
     assert!(n > 0, "envelope of empty series");
@@ -120,19 +127,18 @@ pub fn envelopes(s: &[f64], w: usize) -> (Vec<f64>, Vec<f64>) {
 /// member's own `LB_KEOGH` — and hence every member's DTW distance. That
 /// containment argument is what makes cluster-level pruning exact; see
 /// ARCHITECTURE.md "Sublinear pruning".
+///
+/// Runs on the runtime-selected SIMD vtable ([`crate::simd::kernels`]).
+/// The elementwise min/max use hardware select semantics (`minpd` /
+/// `maxpd`: the incoming member value wins exact ties, e.g. ±0.0) —
+/// bit-identical at every ISA, and value-identical to the pre-SIMD
+/// keep-first-on-tie fold.
 pub fn merge_envelopes_into(acc_lo: &mut [f64], acc_up: &mut [f64], lo: &[f64], up: &[f64]) {
     debug_assert_eq!(acc_lo.len(), lo.len(), "one shared length");
     debug_assert_eq!(acc_up.len(), up.len(), "one shared length");
-    for (a, &v) in acc_lo.iter_mut().zip(lo) {
-        if v < *a {
-            *a = v;
-        }
-    }
-    for (a, &v) in acc_up.iter_mut().zip(up) {
-        if v > *a {
-            *a = v;
-        }
-    }
+    let k = crate::simd::kernels();
+    (k.min_merge)(acc_lo, lo);
+    (k.max_merge)(acc_up, up);
 }
 
 /// Incremental (streaming) envelope maintainer — the online counterpart

@@ -11,7 +11,7 @@
 //! within `[𝕃_i^B, 𝕌_i^B]`, so the distance from `A_i` to the envelope
 //! never exceeds the distance to the aligned element.
 
-use crate::delta::Delta;
+use crate::delta::{Delta, DeltaId};
 
 use super::PreparedSeries;
 
@@ -99,63 +99,55 @@ pub fn lb_keogh_tail<D: Delta>(
     acc
 }
 
-/// `LB_KEOGH` over flat SoA envelope rows with a 4-lane unrolled
-/// accumulation — the inner kernel of
+/// `LB_KEOGH` over flat SoA envelope rows — the inner kernel of
 /// [`crate::runtime::NativeBatchLb`] over an
-/// [`crate::bounds::store::EnvelopeStore`].
+/// [`crate::bounds::store::EnvelopeStore`], and the cluster-prepass
+/// kernel of the sharded k-NN and streaming paths.
 ///
-/// The accumulator is single and in-order, so a full (non-abandoned)
-/// sum is **bit-identical** to [`lb_keogh_bridge`]'s; the unroll merely
-/// hoists the abandon check to once per four elements (an abandoned
-/// partial sum is therefore at most three elements larger than the
-/// scalar kernel's — still a valid lower bound above the cutoff).
+/// Dispatches to the runtime-selected SIMD vtable
+/// ([`crate::simd::kernels`]) for [`Squared`] and [`Absolute`] δ; any
+/// other δ runs the generic scalar lane-protocol reference. All paths
+/// follow the 4-lane accumulator protocol (`crate::simd` module docs):
+/// lane `j` sums indices `i ≡ j (mod 4)`, lanes reduce as
+/// `(l0 + l2) + (l1 + l3)`, tails add in order, and the early-abandon
+/// variant tests the reduced partial once per 4-element group — so
+/// results are **bit-identical at every ISA**, and a non-abandoned sum
+/// is bit-identical to an `abandon_at = ∞` call. The lane-protocol sum
+/// differs from [`lb_keogh_bridge`]'s strictly sequential accumulation
+/// only by float reassociation (same terms, different addition order);
+/// both remain exact lower bounds.
+///
+/// [`Squared`]: crate::delta::Squared
+/// [`Absolute`]: crate::delta::Absolute
 #[inline]
 pub fn lb_keogh_flat<D: Delta>(a: &[f64], t_lo: &[f64], t_up: &[f64], abandon_at: f64) -> f64 {
     let n = a.len();
     debug_assert_eq!(t_lo.len(), n);
     debug_assert_eq!(t_up.len(), n);
-    let mut b = 0.0f64;
-    let mut i = 0usize;
-    while i + 4 <= n {
-        let v0 = a[i];
-        if v0 > t_up[i] {
-            b += D::delta(v0, t_up[i]);
-        } else if v0 < t_lo[i] {
-            b += D::delta(v0, t_lo[i]);
+    let k = crate::simd::kernels();
+    match D::ID {
+        DeltaId::Squared => {
+            if abandon_at == f64::INFINITY {
+                (k.keogh_sq_sum)(a, t_lo, t_up)
+            } else {
+                (k.keogh_sq_ea)(a, t_lo, t_up, abandon_at)
+            }
         }
-        let v1 = a[i + 1];
-        if v1 > t_up[i + 1] {
-            b += D::delta(v1, t_up[i + 1]);
-        } else if v1 < t_lo[i + 1] {
-            b += D::delta(v1, t_lo[i + 1]);
+        DeltaId::Absolute => {
+            if abandon_at == f64::INFINITY {
+                (k.keogh_abs_sum)(a, t_lo, t_up)
+            } else {
+                (k.keogh_abs_ea)(a, t_lo, t_up, abandon_at)
+            }
         }
-        let v2 = a[i + 2];
-        if v2 > t_up[i + 2] {
-            b += D::delta(v2, t_up[i + 2]);
-        } else if v2 < t_lo[i + 2] {
-            b += D::delta(v2, t_lo[i + 2]);
+        DeltaId::Other => {
+            if abandon_at == f64::INFINITY {
+                crate::simd::scalar::keogh_sum::<D>(a, t_lo, t_up)
+            } else {
+                crate::simd::scalar::keogh_ea::<D>(a, t_lo, t_up, abandon_at)
+            }
         }
-        let v3 = a[i + 3];
-        if v3 > t_up[i + 3] {
-            b += D::delta(v3, t_up[i + 3]);
-        } else if v3 < t_lo[i + 3] {
-            b += D::delta(v3, t_lo[i + 3]);
-        }
-        if b > abandon_at {
-            return b;
-        }
-        i += 4;
     }
-    while i < n {
-        let v = a[i];
-        if v > t_up[i] {
-            b += D::delta(v, t_up[i]);
-        } else if v < t_lo[i] {
-            b += D::delta(v, t_lo[i]);
-        }
-        i += 1;
-    }
-    b
 }
 
 /// Keogh bridge that also materializes the **projection**
@@ -293,21 +285,29 @@ mod tests {
     }
 
     #[test]
-    fn flat_kernel_is_bit_equal_to_bridge() {
+    fn flat_kernel_matches_lane_protocol_reference_bitwise() {
         let mut rng = Rng::seeded(516);
         for &n in &[1usize, 3, 4, 5, 8, 17, 64, 129] {
             let a: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
             let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
             let t = prep(&b, 2.min(n - 1));
-            let full = lb_keogh_bridge::<Squared>(&a, &t.lo, &t.up, 0, n, 0.0, f64::INFINITY);
-            let flat = lb_keogh_flat::<Squared>(&a, &t.lo, &t.up, f64::INFINITY);
-            assert_eq!(flat, full, "n={n}");
+            // The flat kernel (whatever ISA was dispatched) is pinned
+            // bit-for-bit to the scalar lane-protocol reference; the
+            // sequential bridge agrees up to float reassociation.
+            let full = lb_keogh_flat::<Squared>(&a, &t.lo, &t.up, f64::INFINITY);
+            let reference = crate::simd::scalar::keogh_sum::<Squared>(&a, &t.lo, &t.up);
+            assert_eq!(full.to_bits(), reference.to_bits(), "n={n}");
+            let bridge = lb_keogh_bridge::<Squared>(&a, &t.lo, &t.up, 0, n, 0.0, f64::INFINITY);
+            assert!((full - bridge).abs() <= 1e-9 * (1.0 + bridge.abs()), "n={n}");
             // Abandoned partials stay valid lower bounds above the cutoff.
             if full > 0.0 {
-                let part = lb_keogh_flat::<Squared>(&a, &t.lo, &t.up, full * 0.25);
+                let cut = full * 0.25;
+                let part = lb_keogh_flat::<Squared>(&a, &t.lo, &t.up, cut);
+                let part_ref = crate::simd::scalar::keogh_ea::<Squared>(&a, &t.lo, &t.up, cut);
+                assert_eq!(part.to_bits(), part_ref.to_bits(), "n={n}");
                 assert!(part <= full + 1e-12);
                 if part < full {
-                    assert!(part > full * 0.25);
+                    assert!(part > cut);
                 }
             }
         }

@@ -191,7 +191,15 @@ impl Scratch {
 /// | [`WebbStar`](BoundKind::WebbStar) | slightly ≤ Webb | like Webb | `LB_Webb*` | δ lacks the triangle-adjustment property |
 /// | [`WebbEnhanced`](BoundKind::WebbEnhanced)`^k` | ≥ Webb | `O(ℓ + k·w)` | `LB_Webb_Enhanced3` | banded refinement at small windows |
 /// | [`Cascade`](BoundKind::Cascade) | = Webb when run to completion | anytime (`KimFL` first) | `LB_Cascade` | thresholded screening — streams and monitors |
+/// | [`ImprovedCascade`](BoundKind::ImprovedCascade) | = Improved when run to completion | anytime (`KimFL` first) | `LB_ImprovedCascade` | vector-heavy hosts: both summing passes ride the SIMD vtable |
 /// | [`UcrCascade`](BoundKind::UcrCascade) | Keogh-class | anytime | `LB_UcrCascade` | UCR-suite parity baselines |
+///
+/// Per-pair cost is ISA-sensitive: the `O(ℓ)` summing passes of
+/// `Keogh`, `Improved`, `ImprovedCascade`, `KeoghRev` and the cascades
+/// run on the runtime-dispatched SIMD vtable ([`crate::simd`]), so
+/// their constants shrink on AVX2/NEON hosts while every ranking
+/// stays bit-identical to scalar — re-measure with the `kernel`
+/// scenario of `dtw-bench` before trading tightness for cost.
 ///
 /// The ablation kinds (`*NoLr`) exist for §7's experiments, and
 /// [`KeoghRev`](BoundKind::KeoghRev) is the reversed-role `LB_KEOGH`
@@ -221,6 +229,9 @@ pub enum BoundKind {
     WebbEnhanced(usize),
     /// §8 cascade: `KimFL` → full `LB_WEBB` with early abandoning.
     Cascade,
+    /// Lemire-style retrieval cascade: `KimFL` → `LB_IMPROVED`, both
+    /// summing passes on the SIMD vtable (see [`cascade::lb_improved_cascade`]).
+    ImprovedCascade,
     /// `LB_KEOGH` with the series roles reversed (§8).
     KeoghRev,
     /// The UCR-suite cascade (Rakthanmanon & Keogh 2013, cited in §8):
@@ -243,6 +254,7 @@ impl BoundKind {
         BoundKind::WebbStar,
         BoundKind::WebbEnhanced(3),
         BoundKind::Cascade,
+        BoundKind::ImprovedCascade,
         BoundKind::KeoghRev,
         BoundKind::UcrCascade,
     ];
@@ -261,6 +273,7 @@ impl BoundKind {
             BoundKind::WebbStar => "LB_Webb*".into(),
             BoundKind::WebbEnhanced(k) => format!("LB_Webb_Enhanced{k}"),
             BoundKind::Cascade => "LB_Cascade".into(),
+            BoundKind::ImprovedCascade => "LB_ImprovedCascade".into(),
             BoundKind::KeoghRev => "LB_KeoghRev".into(),
             BoundKind::UcrCascade => "LB_UcrCascade".into(),
         }
@@ -292,6 +305,7 @@ impl BoundKind {
             "enhanced" | "lbenhanced" => Some(BoundKind::Enhanced(8)),
             "webbenhanced" | "lbwebbenhanced" => Some(BoundKind::WebbEnhanced(3)),
             "cascade" | "lbcascade" => Some(BoundKind::Cascade),
+            "improvedcascade" | "lbimprovedcascade" => Some(BoundKind::ImprovedCascade),
             "keoghrev" | "lbkeoghrev" => Some(BoundKind::KeoghRev),
             "ucrcascade" | "lbucrcascade" => Some(BoundKind::UcrCascade),
             _ => {
@@ -316,7 +330,7 @@ impl BoundKind {
             | BoundKind::KeoghRev
             | BoundKind::UcrCascade
             | BoundKind::Enhanced(_) => D::MONOTONE_IN_ABS_DIFF,
-            BoundKind::Improved | BoundKind::WebbStar => {
+            BoundKind::Improved | BoundKind::ImprovedCascade | BoundKind::WebbStar => {
                 // Need δ(x,z) ≥ δ(x,y) + δ(y,z) for y between x and z,
                 // which TRIANGLE_ADJUSTMENT implies (set x = y there).
                 D::MONOTONE_IN_ABS_DIFF && D::TRIANGLE_ADJUSTMENT
@@ -409,6 +423,9 @@ impl BoundKind {
                 webb::lb_webb_enhanced::<D>(q, t, w, k, abandon_at, scratch)
             }
             BoundKind::Cascade => cascade::lb_cascade::<D>(q, t, w, abandon_at, scratch),
+            BoundKind::ImprovedCascade => {
+                cascade::lb_improved_cascade::<D>(q, t, w, abandon_at, scratch)
+            }
             BoundKind::KeoghRev => keogh::lb_keogh_reversed::<D>(q, t, abandon_at),
             BoundKind::UcrCascade => cascade::lb_ucr_cascade::<D>(q, t, abandon_at),
         };

@@ -19,6 +19,12 @@
 //! friendly. Values are copied out of the prepared series once per
 //! index build ([`EnvelopeStore::rebuild`] reuses the allocation).
 //!
+//! The 64-byte alignment is a *throughput* property, never a safety
+//! precondition: the SIMD kernels ([`crate::simd`]) use unaligned
+//! loads throughout and accept arbitrary sub-slices (the differential
+//! suite deliberately feeds them odd offsets), so aligned rows simply
+//! avoid cache-line splits on the batch path.
+//!
 //! The flat layout is also the crate's **persistence payload**: a
 //! snapshot stores each shard's padded buffer verbatim
 //! ([`EnvelopeStore::payload`]) so that loading is a length check plus

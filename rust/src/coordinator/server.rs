@@ -40,7 +40,8 @@
 //!   a cold rebuild over the mutated series set; failures answer
 //!   `err=<verb> <why>` and leave the served index intact;
 //! * observability: `stats=;` dumps the router's counters and gauges
-//!   (`stats served=<n> ... panics=<n> shed=<n> wal_records=<n>`);
+//!   plus the active SIMD ISA (`stats served=<n> ... panics=<n>
+//!   shed=<n> wal_records=<n> isa=<scalar|sse2|avx2|neon>`);
 //! * `PING` → `PONG`; malformed input → `ERR <why>`.
 //!
 //! One thread per connection feeds the shared router, whose dispatch loop
@@ -421,7 +422,7 @@ fn respond(line: &str, router: &Router, default_k: usize) -> String {
         return format!(
             "stats served={} batches={} max_batch={} batched={} scalar={} streams={} \
              saves={} loads={} inserts={} deletes={} compactions={} delta={} \
-             generation={} panics={} shed={} pending={} wal_records={}",
+             generation={} panics={} shed={} pending={} wal_records={} isa={}",
             s.served,
             s.batches,
             s.max_batch,
@@ -438,7 +439,8 @@ fn respond(line: &str, router: &Router, default_k: usize) -> String {
             s.panics,
             s.shed,
             s.pending,
-            s.wal_records
+            s.wal_records,
+            crate::simd::isa_name()
         );
     }
     // Optional `k=<n>;` / `threads=<n>;` prefixes (any order) select

@@ -18,6 +18,22 @@
 //! loops monomorphize; [`DeltaKind`] provides dynamic selection at the CLI
 //! boundary.
 
+/// Identifies a δ for which the [`crate::simd`] vtable carries
+/// monomorphised kernel entries. Kernel call sites match on
+/// [`Delta::ID`] (a const, so the branch folds away) to pick the
+/// vectorised entry; `Other` δs fall back to the generic scalar
+/// lane-protocol reference, which obeys the same bit-equality
+/// contract.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeltaId {
+    /// `δ(a,b) = (a-b)²` — [`Squared`].
+    Squared,
+    /// `δ(a,b) = |a-b|` — [`Absolute`].
+    Absolute,
+    /// Any other δ: no vectorised kernel, generic scalar path.
+    Other,
+}
+
 /// A pairwise cost function between two series elements.
 ///
 /// Implementations are zero-sized marker types so that DTW and bound
@@ -25,6 +41,10 @@
 pub trait Delta: Copy + Send + Sync + 'static {
     /// Human-readable name, e.g. `"squared"`.
     const NAME: &'static str;
+
+    /// Which SIMD vtable slot (if any) implements this δ; defaults to
+    /// [`DeltaId::Other`] so external δ impls keep working unchanged.
+    const ID: DeltaId = DeltaId::Other;
 
     /// δ increases monotonically with `|a-b|`. Required by every bound in
     /// this crate; all provided δ satisfy it.
@@ -48,6 +68,7 @@ pub struct Squared;
 
 impl Delta for Squared {
     const NAME: &'static str = "squared";
+    const ID: DeltaId = DeltaId::Squared;
     const MONOTONE_IN_ABS_DIFF: bool = true;
     const TRIANGLE_ADJUSTMENT: bool = true;
 
@@ -64,6 +85,7 @@ pub struct Absolute;
 
 impl Delta for Absolute {
     const NAME: &'static str = "absolute";
+    const ID: DeltaId = DeltaId::Absolute;
     const MONOTONE_IN_ABS_DIFF: bool = true;
     const TRIANGLE_ADJUSTMENT: bool = true;
 

@@ -78,8 +78,15 @@ fn dtw_ea_core<D: Delta, const EA: bool>(a: &[f64], b: &[f64], w: usize, cutoff:
     // Rolling rows over B with a left sentinel column: `row[j+1]` holds
     // cell (i, j), `row[band-left]` is INFINITY. The sentinel removes all
     // `j == 0` branches from the inner loop; `left` (the cell just
-    // written) is carried in a register, so each cell costs two loads
-    // (`diag`, `up`), one δ and three mins. (§Perf O1 in EXPERIMENTS.md.)
+    // written) is carried in a register. The `diag`/`up` pair-min carries
+    // no serial dependence, so it runs as a vectorised prepass on the
+    // runtime-dispatched SIMD vtable ([`crate::simd`]), staged into the
+    // row's own cells (every slot is overwritten by the serial sweep);
+    // the sweep then pays one load, one δ and one min per cell. Cell
+    // values are nonnegative-or-INFINITY with no NaNs and no -0.0, so
+    // the select-form `min` is bit-identical to `f64::min` and results
+    // are unchanged at every ISA. (§Perf O1 in EXPERIMENTS.md.)
+    let kn = crate::simd::kernels();
     let mut prev = vec![f64::INFINITY; lb + 1];
     let mut curr = vec![f64::INFINITY; lb + 1];
 
@@ -108,13 +115,14 @@ fn dtw_ea_core<D: Delta, const EA: bool>(a: &[f64], b: &[f64], w: usize, cutoff:
         let mut row_min = f64::INFINITY;
         {
             // prev[jlo..jhi+2] covers (diag, up) pairs for j in jlo..=jhi.
+            // Vectorised prepass: crow[k] = min(diag, up) for every cell,
+            // then the serial sweep folds in `left` and overwrites.
             let prow = &prev[jlo..jhi + 2];
             let crow = &mut curr[jlo + 1..jhi + 2];
             let brow = &b[jlo..=jhi];
+            (kn.pair_min)(prow, crow);
             for (k, &bj) in brow.iter().enumerate() {
-                let diag = prow[k];
-                let up = prow[k + 1];
-                let v = D::delta(ai, bj) + diag.min(up).min(left);
+                let v = D::delta(ai, bj) + crate::simd::scalar::min_sel(crow[k], left);
                 crow[k] = v;
                 left = v;
                 if EA && v < row_min {
@@ -183,8 +191,11 @@ pub fn dtw_ea_pruned<D: Delta>(
     let tail_at = |i: usize| tail.map(|t| t[i]).unwrap_or(0.0);
     let w = effective_window(la, lb, w);
 
-    // Same rolling-row + left-sentinel layout as `dtw_ea`; `row[j+1]`
-    // holds cell (i, j). Additionally tracked per row:
+    // Same rolling-row + left-sentinel layout as `dtw_ea`, including the
+    // vectorised `diag`/`up` pair-min prepass over the live range (every
+    // prepass slot is overwritten below: survivors by `v`, pruned cells
+    // by INFINITY, the early-break tail by the backfill loop).
+    // Additionally tracked per row:
     //   sc — first live (unpruned) column of the previous row;
     //   ec — last  live column of the previous row.
     // Cells left of `max(jlo, sc)` cannot be reached (all three
@@ -218,6 +229,7 @@ pub fn dtw_ea_pruned<D: Delta>(
         let v = prev[lb];
         return if v > cutoff { f64::INFINITY } else { v };
     }
+    let kn = crate::simd::kernels();
     let mut sc = 0usize;
 
     for i in 1..la {
@@ -232,6 +244,9 @@ pub fn dtw_ea_pruned<D: Delta>(
         for cell in curr[jlo..js + 1].iter_mut() {
             *cell = f64::INFINITY;
         }
+        // Vectorised prepass over the live range: curr[j+1] temporarily
+        // holds min(diag, up) for j in js..=jhi.
+        (kn.pair_min)(&prev[js..jhi + 2], &mut curr[js + 1..jhi + 2]);
         let mut left = f64::INFINITY;
         let mut sc_next = usize::MAX;
         let mut ec_next = usize::MAX;
@@ -242,9 +257,8 @@ pub fn dtw_ea_pruned<D: Delta>(
             if j > ec.saturating_add(1) && left.is_infinite() {
                 break;
             }
-            let diag = prev[j];
-            let up = prev[j + 1];
-            let v = D::delta(ai, b[j]) + diag.min(up).min(left);
+            let v =
+                D::delta(ai, b[j]) + crate::simd::scalar::min_sel(curr[j + 1], left);
             if v > thresh {
                 curr[j + 1] = f64::INFINITY;
                 left = f64::INFINITY;

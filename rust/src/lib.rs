@@ -150,6 +150,7 @@ pub mod live;
 pub mod metrics;
 pub mod runtime;
 pub mod search;
+pub mod simd;
 pub mod stream;
 
 /// Library version, mirrored from `Cargo.toml`.

@@ -237,6 +237,10 @@ fn cmd_index(args: &Args) -> Result<()> {
             println!("max_batch={}", info.max_batch);
             println!("threads={}", info.threads);
             println!("seed={}", info.seed);
+            // Host property, not a snapshot field: the SIMD ISA this
+            // process would serve the snapshot with (results are
+            // bit-identical at every ISA; printed for observability).
+            println!("isa={}", dtw_bounds::simd::isa_name());
             Ok(())
         }
         Some("compact") => {
@@ -817,6 +821,15 @@ fn attach_pjrt(_engine: &mut NnEngine, _max_batch: usize) {
 
 fn cmd_info() -> Result<()> {
     println!("dtw-bounds {}", dtw_bounds::VERSION);
+    println!(
+        "simd: {} (available: {}; override with DTW_FORCE_ISA=scalar|sse2|avx2|neon)",
+        dtw_bounds::simd::isa_name(),
+        dtw_bounds::simd::available()
+            .iter()
+            .map(|i| i.name())
+            .collect::<Vec<_>>()
+            .join(", ")
+    );
     if cfg!(feature = "pjrt") {
         println!("backends: native (default), pjrt");
     } else {

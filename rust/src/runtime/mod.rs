@@ -11,8 +11,10 @@
 //!   future scaling work (sharding, GPU, multi-node) plugs into.
 //! * [`native`] — [`NativeBatchLb`]: the **default** backend. Pure Rust,
 //!   dependency-free, streaming a flat 64-byte-aligned SoA envelope
-//!   store ([`crate::bounds::store::EnvelopeStore`]) with a 4-lane
-//!   unrolled kernel, early-abandoning against per-query cutoffs, and
+//!   store ([`crate::bounds::store::EnvelopeStore`]) with the
+//!   runtime-dispatched SIMD kernel ([`crate::simd`]: AVX2/SSE2/NEON,
+//!   4-lane scalar fallback — identical bits at every ISA),
+//!   early-abandoning against per-query cutoffs, and
 //!   optionally scoring query rows in parallel
 //!   ([`NativeBatchLb::with_threads`]). Results land in a reusable flat
 //!   [`BoundMatrix`] — no per-call nested allocation.

@@ -1,10 +1,13 @@
 //! [`NativeBatchLb`] — the default pure-Rust batched `LB_KEOGH` backend.
 //!
 //! Scores a whole query batch against a whole training set with a
-//! kernel whose full sums are **bit-identical** to the scalar
-//! per-query path ([`keogh::lb_keogh`]), so its values match
-//! Algorithm 4's screening values exactly. Three batch-level
-//! optimisations on top of the kernel:
+//! kernel whose full sums are **bit-identical** to the lane-protocol
+//! scalar reference ([`crate::simd::scalar::keogh_sum`]) at every ISA
+//! the runtime dispatcher ([`crate::simd`]) selects — the matrix is
+//! byte-identical whether the host runs AVX2, NEON, SSE2 or forced
+//! scalar. (Relative to the sequential per-query bridge
+//! [`keogh::lb_keogh`] the sums differ only by fp reassociation.)
+//! Three batch-level optimisations on top of the kernel:
 //!
 //! * **Flat SoA envelopes** — on first contact with a training set the
 //!   backend packs its envelopes into an
@@ -327,8 +330,17 @@ mod tests {
         let m = be.compute(&q_refs, &train, &cutoffs).unwrap();
         for (qi, q) in queries.iter().enumerate() {
             for (ti, t) in train.iter().enumerate() {
-                let scalar = keogh::lb_keogh::<Squared>(q, t, f64::INFINITY);
-                assert_eq!(m[qi][ti], scalar, "q{qi} t{ti}");
+                // Bit-equal to the lane-protocol scalar reference (which
+                // every SIMD vtable reproduces exactly); the sequential
+                // bridge differs only by reassociation.
+                let lane = crate::simd::scalar::keogh_sum::<Squared>(q, &t.lo, &t.up);
+                assert_eq!(m[qi][ti], lane, "q{qi} t{ti}");
+                let bridge = keogh::lb_keogh::<Squared>(q, t, f64::INFINITY);
+                assert!(
+                    (m[qi][ti] - bridge).abs() <= 1e-9 * (1.0 + bridge.abs()),
+                    "q{qi} t{ti}: {} vs bridge {bridge}",
+                    m[qi][ti]
+                );
             }
         }
     }

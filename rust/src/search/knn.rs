@@ -12,6 +12,14 @@
 //! All kernels remain **exact**: a candidate is only pruned when a valid
 //! lower bound (full or partial) proves its DTW distance cannot beat the
 //! current k-th best (or the caller's abandon threshold).
+//!
+//! Every hot loop here — cluster screening via
+//! [`keogh::lb_keogh_flat`], per-candidate bounds via
+//! [`crate::bounds::BoundKind::compute`], and the exact
+//! [`dtw_ea_pruned`] kernel — runs on the runtime-dispatched SIMD
+//! vtable ([`crate::simd`]). Dispatch is bit-transparent: distances,
+//! pruning decisions and tie-breaks are identical at every ISA, so
+//! result sets never depend on the host CPU.
 
 use std::ops::Range;
 use std::sync::atomic::{AtomicU64, Ordering};

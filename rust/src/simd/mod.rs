@@ -1,0 +1,281 @@
+//! Runtime-dispatched SIMD kernels for the screening hot path.
+//!
+//! Every kernel in this module comes in one scalar and (where the
+//! target supports it) one or more vector flavours, collected behind
+//! the [`Kernels`] vtable. The active vtable is selected **once per
+//! process** (cached in a `OnceLock`) from runtime CPU feature
+//! detection — `is_x86_feature_detected!("avx2")` on x86-64,
+//! `is_aarch64_feature_detected!("neon")` on aarch64 — so a single
+//! portable binary benefits without `-C target-cpu=native`. The
+//! `DTW_FORCE_ISA=scalar|sse2|avx2|neon` environment variable
+//! overrides the choice (for differential testing and benchmarking);
+//! an unavailable or unrecognised value logs a warning and falls back
+//! to native detection.
+//!
+//! # The bit-equality contract
+//!
+//! Scalar and vector paths must agree **bit for bit**, not just to
+//! within rounding. Two rules make that possible:
+//!
+//! 1. **Reductions follow the 4-lane protocol.** A summing kernel
+//!    keeps four fixed accumulators `l0..l3`, where lane `j` sums the
+//!    terms at indices `i ≡ j (mod 4)` over the body `n4 = 4⌋n/4⌊`,
+//!    and reduces them in the documented order `(l0 + l2) + (l1 + l3)`.
+//!    Tail elements (`i >= n4`) are added to the reduced total one by
+//!    one, in index order. Early-abandon variants reduce and test
+//!    `total > abandon_at` once per 4-element group, returning the
+//!    reduced total on abandonment, and never test inside the tail.
+//!    AVX2 holds `[l0, l1, l2, l3]` in one 256-bit register and
+//!    reduces low-half + high-half then lane0 + lane1; SSE2/NEON hold
+//!    `[l0, l1]` and `[l2, l3]` in two 128-bit registers and reduce
+//!    pairwise the same way — all three produce the scalar order
+//!    exactly. Widening to 8 lanes requires restating the scalar
+//!    reference to 8 accumulators in the same change.
+//! 2. **Selections use hardware select semantics.** `min`/`max`/
+//!    `clamp` are defined as `min_sel(a, b) = if a < b { a } else
+//!    { b }` and `max_sel(a, b) = if a > b { a } else { b }` — exactly
+//!    what `minpd`/`maxpd` compute (the second operand wins on ties,
+//!    ±0.0, and NaN). NEON must build the same select from
+//!    `vcltq_f64`/`vcgtq_f64` + `vbslq_f64`; ARM's native
+//!    `vminq_f64`/`vmaxq_f64` follow IEEE `minNum` semantics and
+//!    diverge on signed zeros, so they are banned here.
+//!
+//! Elementwise kernels (clamp / pairwise-min / envelope merge) have no
+//! accumulator, so rule 2 alone pins them; only the LB_Keogh sums need
+//! the lane protocol.
+//!
+//! # Unsafe boundary
+//!
+//! All `unsafe` SIMD code in the crate lives under `rust/src/simd/`,
+//! compiled with `deny(unsafe_op_in_unsafe_fn)`. Kernels use unaligned
+//! loads throughout — the 64-byte alignment of `EnvelopeStore` rows is
+//! a performance property, never a safety precondition — so the only
+//! preconditions are the slice-length relations stated on each kernel,
+//! checked with `debug_assert!` at every entry point, plus the CPU
+//! feature itself, which is guaranteed by construction: a vector
+//! vtable is only reachable after the matching runtime detection
+//! succeeded.
+#![deny(unsafe_op_in_unsafe_fn)]
+
+use std::sync::OnceLock;
+
+pub mod scalar;
+
+#[cfg(target_arch = "x86_64")]
+mod x86;
+
+#[cfg(target_arch = "aarch64")]
+mod neon;
+
+/// An instruction-set architecture a kernel set can target.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Isa {
+    /// Portable Rust; the reference the vector paths are pinned to.
+    Scalar,
+    /// 128-bit x86 vectors (part of the x86-64 baseline).
+    Sse2,
+    /// 256-bit x86 vectors (runtime-detected).
+    Avx2,
+    /// 128-bit aarch64 vectors.
+    Neon,
+}
+
+impl Isa {
+    /// All ISAs this build knows about (not necessarily available).
+    pub const ALL: &'static [Isa] = &[Isa::Scalar, Isa::Sse2, Isa::Avx2, Isa::Neon];
+
+    /// Stable lowercase name, as accepted by `DTW_FORCE_ISA`.
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Sse2 => "sse2",
+            Isa::Avx2 => "avx2",
+            Isa::Neon => "neon",
+        }
+    }
+
+    /// Parse a `DTW_FORCE_ISA` value (case-insensitive).
+    pub fn parse(s: &str) -> Option<Isa> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" => Some(Isa::Scalar),
+            "sse2" => Some(Isa::Sse2),
+            "avx2" => Some(Isa::Avx2),
+            "neon" => Some(Isa::Neon),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for Isa {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// The kernel vtable: one function pointer per hot inner loop, all
+/// obeying the bit-equality contract in the module docs.
+///
+/// Length preconditions (debug-asserted by every implementation):
+/// the `keogh_*` kernels require `lo.len() >= a.len()` and
+/// `up.len() >= a.len()`; `clamp` requires `lo`, `up` and `out` at
+/// least `v.len()` long; `pair_min` requires
+/// `src.len() == out.len() + 1`; the merges require `v.len() >=
+/// acc.len()`. The Keogh kernels additionally assume the envelope
+/// invariant `lo[i] <= up[i]` pointwise (guaranteed by
+/// `envelopes_into` and by merged cluster envelopes) — with it the
+/// `v > up` / `v < lo` branch masks are disjoint, which the vector
+/// paths exploit.
+pub struct Kernels {
+    /// Which ISA this vtable's entries are compiled for.
+    pub isa: Isa,
+    /// Full LB_Keogh sum, squared delta, no abandon checks.
+    pub keogh_sq_sum: fn(&[f64], &[f64], &[f64]) -> f64,
+    /// Early-abandoning LB_Keogh, squared delta: tests the reduced
+    /// total against `abandon_at` once per 4-element group.
+    pub keogh_sq_ea: fn(&[f64], &[f64], &[f64], f64) -> f64,
+    /// Full LB_Keogh sum, absolute delta.
+    pub keogh_abs_sum: fn(&[f64], &[f64], &[f64]) -> f64,
+    /// Early-abandoning LB_Keogh, absolute delta.
+    pub keogh_abs_ea: fn(&[f64], &[f64], &[f64], f64) -> f64,
+    /// `out[i] = min_sel(max_sel(v[i], lo[i]), up[i])` — the
+    /// LB_Improved projection fill.
+    pub clamp: fn(&[f64], &[f64], &[f64], &mut [f64]),
+    /// `out[k] = min_sel(src[k], src[k + 1])` — the DTW per-row
+    /// `min(diag, up)` prepass.
+    pub pair_min: fn(&[f64], &mut [f64]),
+    /// `acc[i] = min_sel(acc[i], v[i])` — merged-envelope lower rows.
+    pub min_merge: fn(&mut [f64], &[f64]),
+    /// `acc[i] = max_sel(acc[i], v[i])` — merged-envelope upper rows.
+    pub max_merge: fn(&mut [f64], &[f64]),
+}
+
+/// The kernel set for `isa`, if this build targets it **and** the
+/// running CPU supports it. `Scalar` always succeeds; on x86-64 so
+/// does `Sse2` (baseline). Lets differential tests exercise every
+/// available ISA in one process, independent of the cached global
+/// selection.
+pub fn for_isa(isa: Isa) -> Option<&'static Kernels> {
+    match isa {
+        Isa::Scalar => Some(&scalar::KERNELS),
+        #[cfg(target_arch = "x86_64")]
+        Isa::Sse2 => Some(&x86::SSE2),
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => {
+            if std::arch::is_x86_feature_detected!("avx2") {
+                Some(&x86::AVX2)
+            } else {
+                None
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => {
+            if std::arch::is_aarch64_feature_detected!("neon") {
+                Some(&neon::KERNELS)
+            } else {
+                None
+            }
+        }
+        #[allow(unreachable_patterns)]
+        _ => None,
+    }
+}
+
+/// Every ISA available on the running CPU, scalar first.
+pub fn available() -> Vec<Isa> {
+    Isa::ALL.iter().copied().filter(|&isa| for_isa(isa).is_some()).collect()
+}
+
+/// Best native kernel set for the running CPU.
+fn best_available() -> &'static Kernels {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if let Some(k) = for_isa(Isa::Avx2) {
+            return k;
+        }
+        if let Some(k) = for_isa(Isa::Sse2) {
+            return k;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if let Some(k) = for_isa(Isa::Neon) {
+            return k;
+        }
+    }
+    &scalar::KERNELS
+}
+
+fn select() -> &'static Kernels {
+    if let Ok(forced) = std::env::var("DTW_FORCE_ISA") {
+        match Isa::parse(&forced).and_then(for_isa) {
+            Some(k) => return k,
+            None => {
+                log::warn!(
+                    "DTW_FORCE_ISA={forced:?} is not recognised or not available on this CPU; \
+                     falling back to native detection"
+                );
+            }
+        }
+    }
+    best_available()
+}
+
+static ACTIVE: OnceLock<&'static Kernels> = OnceLock::new();
+
+/// The process-wide kernel vtable. Selected on first call (runtime
+/// feature detection, `DTW_FORCE_ISA` override) and cached; every hot
+/// path goes through this single indirection.
+pub fn kernels() -> &'static Kernels {
+    ACTIVE.get_or_init(select)
+}
+
+/// The ISA of the active kernel set.
+pub fn active_isa() -> Isa {
+    kernels().isa
+}
+
+/// Stable name of the active ISA, for `stats=`, `index inspect`,
+/// `info`, and bench-report metadata.
+pub fn isa_name() -> &'static str {
+    active_isa().name()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_is_always_available() {
+        assert!(for_isa(Isa::Scalar).is_some());
+        assert_eq!(for_isa(Isa::Scalar).unwrap().isa, Isa::Scalar);
+        assert!(available().contains(&Isa::Scalar));
+    }
+
+    #[test]
+    fn isa_names_round_trip() {
+        for &isa in Isa::ALL {
+            assert_eq!(Isa::parse(isa.name()), Some(isa));
+            assert_eq!(Isa::parse(&isa.name().to_ascii_uppercase()), Some(isa));
+        }
+        assert_eq!(Isa::parse("avx512"), None);
+    }
+
+    #[test]
+    fn every_available_vtable_reports_its_own_isa() {
+        for isa in available() {
+            assert_eq!(for_isa(isa).unwrap().isa, isa);
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn sse2_is_baseline_on_x86_64() {
+        assert!(for_isa(Isa::Sse2).is_some());
+    }
+
+    #[test]
+    fn active_isa_is_available() {
+        assert!(available().contains(&active_isa()));
+        assert_eq!(isa_name(), active_isa().name());
+    }
+}

@@ -1,0 +1,284 @@
+//! NEON kernel set for aarch64.
+//!
+//! Mirrors the SSE2 layout exactly: two 128-bit accumulators hold
+//! lanes `[l0, l1]` and `[l2, l3]`, reduced as `(l0 + l2) +
+//! (l1 + l3)` — the scalar protocol order. Every selection is built
+//! from `vcltq_f64`/`vcgtq_f64` + `vbslq_f64`; ARM's native
+//! `vminq_f64`/`vmaxq_f64` are deliberately avoided because their
+//! IEEE minNum semantics diverge from x86 `minpd` (and from the
+//! scalar `min_sel`) on signed zeros.
+#![deny(unsafe_op_in_unsafe_fn)]
+
+use core::arch::aarch64::*;
+
+use super::scalar;
+use super::{Isa, Kernels};
+use crate::delta::{Absolute, Squared};
+
+/// `if a < b { a } else { b }` per lane (minpd semantics).
+///
+/// # Safety
+/// Requires NEON (guaranteed: this vtable is installed only after
+/// `is_aarch64_feature_detected!("neon")`).
+#[inline(always)]
+unsafe fn vmin_sel(a: float64x2_t, b: float64x2_t) -> float64x2_t {
+    // SAFETY: register-only NEON ops.
+    unsafe { vbslq_f64(vcltq_f64(a, b), a, b) }
+}
+
+/// `if a > b { a } else { b }` per lane (maxpd semantics).
+///
+/// # Safety
+/// Requires NEON.
+#[inline(always)]
+unsafe fn vmax_sel(a: float64x2_t, b: float64x2_t) -> float64x2_t {
+    // SAFETY: register-only NEON ops.
+    unsafe { vbslq_f64(vcgtq_f64(a, b), a, b) }
+}
+
+/// Two LB_Keogh difference lanes: `v - up` where `v > up`, `lo - v`
+/// where `v < lo`, else `+0.0` — the select nesting reproduces the
+/// scalar if/else-if (masks disjoint under the envelope invariant,
+/// NaN lanes fall through to `0.0`).
+///
+/// # Safety
+/// Requires NEON; `pa`, `pl`, `pu` readable for two `f64`s.
+#[inline(always)]
+unsafe fn diff2(pa: *const f64, pl: *const f64, pu: *const f64) -> float64x2_t {
+    // SAFETY: caller guarantees both lanes are in bounds.
+    unsafe {
+        let v = vld1q_f64(pa);
+        let l = vld1q_f64(pl);
+        let u = vld1q_f64(pu);
+        let inner = vbslq_f64(vcltq_f64(v, l), vsubq_f64(l, v), vdupq_n_f64(0.0));
+        vbslq_f64(vcgtq_f64(v, u), vsubq_f64(v, u), inner)
+    }
+}
+
+/// Two squared-delta LB_Keogh terms.
+///
+/// # Safety
+/// As [`diff2`].
+#[inline(always)]
+unsafe fn term2_sq(pa: *const f64, pl: *const f64, pu: *const f64) -> float64x2_t {
+    // SAFETY: as `diff2`.
+    unsafe {
+        let d = diff2(pa, pl, pu);
+        vmulq_f64(d, d)
+    }
+}
+
+/// Reduce `[l0+l2, l1+l3]` to the scalar-protocol total.
+///
+/// # Safety
+/// Requires NEON.
+#[inline(always)]
+unsafe fn reduce(s: float64x2_t) -> f64 {
+    // SAFETY: register-only lane extracts.
+    unsafe { vgetq_lane_f64::<0>(s) + vgetq_lane_f64::<1>(s) }
+}
+
+macro_rules! keogh_neon {
+    ($sum:ident, $sum_impl:ident, $ea:ident, $ea_impl:ident, $term2:ident, $d:ty) => {
+        /// # Safety
+        /// Requires NEON; slice lengths per the vtable contract.
+        #[target_feature(enable = "neon")]
+        unsafe fn $sum_impl(a: &[f64], lo: &[f64], up: &[f64]) -> f64 {
+            debug_assert!(lo.len() >= a.len() && up.len() >= a.len());
+            let n = a.len();
+            let n4 = n - (n % 4);
+            // SAFETY: body loads touch [i, i+4) with i+4 <= n4 <=
+            // every slice length; tail reads i < n. acc01 = [l0, l1],
+            // acc23 = [l2, l3]; reduction is (l0+l2) + (l1+l3).
+            unsafe {
+                let (pa, pl, pu) = (a.as_ptr(), lo.as_ptr(), up.as_ptr());
+                let mut acc01 = vdupq_n_f64(0.0);
+                let mut acc23 = vdupq_n_f64(0.0);
+                let mut i = 0usize;
+                while i < n4 {
+                    acc01 = vaddq_f64(acc01, $term2(pa.add(i), pl.add(i), pu.add(i)));
+                    acc23 = vaddq_f64(acc23, $term2(pa.add(i + 2), pl.add(i + 2), pu.add(i + 2)));
+                    i += 4;
+                }
+                let mut total = reduce(vaddq_f64(acc01, acc23));
+                while i < n {
+                    total += scalar::term::<$d>(*pa.add(i), *pl.add(i), *pu.add(i));
+                    i += 1;
+                }
+                total
+            }
+        }
+
+        fn $sum(a: &[f64], lo: &[f64], up: &[f64]) -> f64 {
+            // SAFETY: reachable only via the NEON vtable, installed
+            // after runtime detection; lengths debug-asserted inside.
+            unsafe { $sum_impl(a, lo, up) }
+        }
+
+        /// # Safety
+        /// Requires NEON; slice lengths per the vtable contract.
+        #[target_feature(enable = "neon")]
+        unsafe fn $ea_impl(a: &[f64], lo: &[f64], up: &[f64], abandon_at: f64) -> f64 {
+            debug_assert!(lo.len() >= a.len() && up.len() >= a.len());
+            let n = a.len();
+            let n4 = n - (n % 4);
+            // SAFETY: bounds as in the sum variant; reduce-and-test
+            // once per 4-element group, never in the tail.
+            unsafe {
+                let (pa, pl, pu) = (a.as_ptr(), lo.as_ptr(), up.as_ptr());
+                let mut acc01 = vdupq_n_f64(0.0);
+                let mut acc23 = vdupq_n_f64(0.0);
+                let mut i = 0usize;
+                while i < n4 {
+                    acc01 = vaddq_f64(acc01, $term2(pa.add(i), pl.add(i), pu.add(i)));
+                    acc23 = vaddq_f64(acc23, $term2(pa.add(i + 2), pl.add(i + 2), pu.add(i + 2)));
+                    i += 4;
+                    let t = reduce(vaddq_f64(acc01, acc23));
+                    if t > abandon_at {
+                        return t;
+                    }
+                }
+                let mut total = reduce(vaddq_f64(acc01, acc23));
+                while i < n {
+                    total += scalar::term::<$d>(*pa.add(i), *pl.add(i), *pu.add(i));
+                    i += 1;
+                }
+                total
+            }
+        }
+
+        fn $ea(a: &[f64], lo: &[f64], up: &[f64], abandon_at: f64) -> f64 {
+            // SAFETY: reachable only via the detected NEON vtable.
+            unsafe { $ea_impl(a, lo, up, abandon_at) }
+        }
+    };
+}
+
+keogh_neon!(keogh_sq_sum_neon, keogh_sq_sum_neon_impl, keogh_sq_ea_neon, keogh_sq_ea_neon_impl, term2_sq, Squared);
+keogh_neon!(keogh_abs_sum_neon, keogh_abs_sum_neon_impl, keogh_abs_ea_neon, keogh_abs_ea_neon_impl, diff2, Absolute);
+
+/// # Safety
+/// Requires NEON; length preconditions debug-asserted.
+#[target_feature(enable = "neon")]
+unsafe fn clamp_neon_impl(v: &[f64], lo: &[f64], up: &[f64], out: &mut [f64]) {
+    debug_assert!(lo.len() >= v.len() && up.len() >= v.len() && out.len() >= v.len());
+    let n = v.len();
+    let n2 = n - (n % 2);
+    // SAFETY: [i, i+2) with i+2 <= n2 <= every length; scalar tail.
+    // `out` never aliases the inputs (&mut exclusivity).
+    unsafe {
+        let (pv, pl, pu) = (v.as_ptr(), lo.as_ptr(), up.as_ptr());
+        let po = out.as_mut_ptr();
+        let mut i = 0usize;
+        while i < n2 {
+            let x = vmax_sel(vld1q_f64(pv.add(i)), vld1q_f64(pl.add(i)));
+            vst1q_f64(po.add(i), vmin_sel(x, vld1q_f64(pu.add(i))));
+            i += 2;
+        }
+        while i < n {
+            *po.add(i) = scalar::min_sel(scalar::max_sel(*pv.add(i), *pl.add(i)), *pu.add(i));
+            i += 1;
+        }
+    }
+}
+
+fn clamp_neon(v: &[f64], lo: &[f64], up: &[f64], out: &mut [f64]) {
+    // SAFETY: reachable only via the detected NEON vtable.
+    unsafe { clamp_neon_impl(v, lo, up, out) }
+}
+
+/// # Safety
+/// Requires NEON; `src.len() == out.len() + 1`.
+#[target_feature(enable = "neon")]
+unsafe fn pair_min_neon_impl(src: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(src.len(), out.len() + 1);
+    let n = out.len();
+    let n2 = n - (n % 2);
+    // SAFETY: offset load reads src[k+1..k+3], k+3 <= n2+1 <= src.len().
+    unsafe {
+        let ps = src.as_ptr();
+        let po = out.as_mut_ptr();
+        let mut k = 0usize;
+        while k < n2 {
+            vst1q_f64(po.add(k), vmin_sel(vld1q_f64(ps.add(k)), vld1q_f64(ps.add(k + 1))));
+            k += 2;
+        }
+        while k < n {
+            *po.add(k) = scalar::min_sel(*ps.add(k), *ps.add(k + 1));
+            k += 1;
+        }
+    }
+}
+
+fn pair_min_neon(src: &[f64], out: &mut [f64]) {
+    // SAFETY: reachable only via the detected NEON vtable.
+    unsafe { pair_min_neon_impl(src, out) }
+}
+
+/// # Safety
+/// Requires NEON; `v.len() >= acc.len()`.
+#[target_feature(enable = "neon")]
+unsafe fn min_merge_neon_impl(acc: &mut [f64], v: &[f64]) {
+    debug_assert!(v.len() >= acc.len());
+    let n = acc.len();
+    let n2 = n - (n % 2);
+    // SAFETY: [i, i+2) with i+2 <= n2 <= both lengths; scalar tail.
+    unsafe {
+        let pa = acc.as_mut_ptr();
+        let pv = v.as_ptr();
+        let mut i = 0usize;
+        while i < n2 {
+            vst1q_f64(pa.add(i), vmin_sel(vld1q_f64(pa.add(i)), vld1q_f64(pv.add(i))));
+            i += 2;
+        }
+        while i < n {
+            *pa.add(i) = scalar::min_sel(*pa.add(i), *pv.add(i));
+            i += 1;
+        }
+    }
+}
+
+fn min_merge_neon(acc: &mut [f64], v: &[f64]) {
+    // SAFETY: reachable only via the detected NEON vtable.
+    unsafe { min_merge_neon_impl(acc, v) }
+}
+
+/// # Safety
+/// Requires NEON; `v.len() >= acc.len()`.
+#[target_feature(enable = "neon")]
+unsafe fn max_merge_neon_impl(acc: &mut [f64], v: &[f64]) {
+    debug_assert!(v.len() >= acc.len());
+    let n = acc.len();
+    let n2 = n - (n % 2);
+    // SAFETY: as `min_merge_neon_impl`.
+    unsafe {
+        let pa = acc.as_mut_ptr();
+        let pv = v.as_ptr();
+        let mut i = 0usize;
+        while i < n2 {
+            vst1q_f64(pa.add(i), vmax_sel(vld1q_f64(pa.add(i)), vld1q_f64(pv.add(i))));
+            i += 2;
+        }
+        while i < n {
+            *pa.add(i) = scalar::max_sel(*pa.add(i), *pv.add(i));
+            i += 1;
+        }
+    }
+}
+
+fn max_merge_neon(acc: &mut [f64], v: &[f64]) {
+    // SAFETY: reachable only via the detected NEON vtable.
+    unsafe { max_merge_neon_impl(acc, v) }
+}
+
+pub(crate) static KERNELS: Kernels = Kernels {
+    isa: Isa::Neon,
+    keogh_sq_sum: keogh_sq_sum_neon,
+    keogh_sq_ea: keogh_sq_ea_neon,
+    keogh_abs_sum: keogh_abs_sum_neon,
+    keogh_abs_ea: keogh_abs_ea_neon,
+    clamp: clamp_neon,
+    pair_min: pair_min_neon,
+    min_merge: min_merge_neon,
+    max_merge: max_merge_neon,
+};

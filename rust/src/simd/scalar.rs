@@ -1,0 +1,230 @@
+//! Portable lane-protocol reference kernels.
+//!
+//! These are the semantics every vector path in this module is pinned
+//! to, bit for bit (see the module docs for the protocol). They are
+//! also the always-available fallback vtable, and the generic-`D`
+//! entry points used when a caller's `Delta` has no monomorphised
+//! vtable slot (`DeltaId::Other`).
+#![deny(unsafe_op_in_unsafe_fn)]
+
+use crate::delta::{Absolute, Delta, Squared};
+
+/// Hardware select-min: `if a < b { a } else { b }`. Exactly what
+/// x86 `minpd` computes — the *second* operand wins on ties (±0.0)
+/// and NaN. Not `f64::min`, which is NaN-propagating-from-either-side
+/// and sign-aware on zeros.
+#[inline(always)]
+pub fn min_sel(a: f64, b: f64) -> f64 {
+    if a < b {
+        a
+    } else {
+        b
+    }
+}
+
+/// Hardware select-max: `if a > b { a } else { b }` (x86 `maxpd`).
+#[inline(always)]
+pub fn max_sel(a: f64, b: f64) -> f64 {
+    if a > b {
+        a
+    } else {
+        b
+    }
+}
+
+/// One LB_Keogh term: the per-element envelope violation under `D`.
+/// Out-of-range on either side contributes `D::delta` against the
+/// violated envelope row; inside (or NaN) contributes exactly `0.0`.
+#[inline(always)]
+pub(crate) fn term<D: Delta>(v: f64, lo: f64, up: f64) -> f64 {
+    if v > up {
+        D::delta(v, up)
+    } else if v < lo {
+        D::delta(v, lo)
+    } else {
+        0.0
+    }
+}
+
+/// Full LB_Keogh sum under the 4-lane protocol: lane `j` accumulates
+/// indices `i ≡ j (mod 4)` over the body, lanes reduce as
+/// `(l0 + l2) + (l1 + l3)`, then tail elements are added in index
+/// order. Generic over `D`; the vtable entries below monomorphise it.
+///
+/// Requires `lo.len() >= a.len()` and `up.len() >= a.len()`.
+pub fn keogh_sum<D: Delta>(a: &[f64], lo: &[f64], up: &[f64]) -> f64 {
+    debug_assert!(lo.len() >= a.len() && up.len() >= a.len());
+    let n = a.len();
+    let n4 = n - (n % 4);
+    let (mut l0, mut l1, mut l2, mut l3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    let mut i = 0;
+    while i < n4 {
+        l0 += term::<D>(a[i], lo[i], up[i]);
+        l1 += term::<D>(a[i + 1], lo[i + 1], up[i + 1]);
+        l2 += term::<D>(a[i + 2], lo[i + 2], up[i + 2]);
+        l3 += term::<D>(a[i + 3], lo[i + 3], up[i + 3]);
+        i += 4;
+    }
+    let mut total = (l0 + l2) + (l1 + l3);
+    while i < n {
+        total += term::<D>(a[i], lo[i], up[i]);
+        i += 1;
+    }
+    total
+}
+
+/// Early-abandoning LB_Keogh under the 4-lane protocol: after each
+/// 4-element group the lanes are reduced (same order as
+/// [`keogh_sum`]) and the partial tested with strict
+/// `total > abandon_at`; on abandonment the reduced partial — a valid
+/// lower bound — is returned. The tail never tests. A non-abandoned
+/// run returns bit-identically to [`keogh_sum`].
+///
+/// Requires `lo.len() >= a.len()` and `up.len() >= a.len()`.
+pub fn keogh_ea<D: Delta>(a: &[f64], lo: &[f64], up: &[f64], abandon_at: f64) -> f64 {
+    debug_assert!(lo.len() >= a.len() && up.len() >= a.len());
+    let n = a.len();
+    let n4 = n - (n % 4);
+    let (mut l0, mut l1, mut l2, mut l3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    let mut i = 0;
+    while i < n4 {
+        l0 += term::<D>(a[i], lo[i], up[i]);
+        l1 += term::<D>(a[i + 1], lo[i + 1], up[i + 1]);
+        l2 += term::<D>(a[i + 2], lo[i + 2], up[i + 2]);
+        l3 += term::<D>(a[i + 3], lo[i + 3], up[i + 3]);
+        i += 4;
+        let t = (l0 + l2) + (l1 + l3);
+        if t > abandon_at {
+            return t;
+        }
+    }
+    let mut total = (l0 + l2) + (l1 + l3);
+    while i < n {
+        total += term::<D>(a[i], lo[i], up[i]);
+        i += 1;
+    }
+    total
+}
+
+fn keogh_sq_sum(a: &[f64], lo: &[f64], up: &[f64]) -> f64 {
+    keogh_sum::<Squared>(a, lo, up)
+}
+
+fn keogh_sq_ea(a: &[f64], lo: &[f64], up: &[f64], abandon_at: f64) -> f64 {
+    keogh_ea::<Squared>(a, lo, up, abandon_at)
+}
+
+fn keogh_abs_sum(a: &[f64], lo: &[f64], up: &[f64]) -> f64 {
+    keogh_sum::<Absolute>(a, lo, up)
+}
+
+fn keogh_abs_ea(a: &[f64], lo: &[f64], up: &[f64], abandon_at: f64) -> f64 {
+    keogh_ea::<Absolute>(a, lo, up, abandon_at)
+}
+
+/// `out[i] = min_sel(max_sel(v[i], lo[i]), up[i])` — clamp `v` into
+/// the envelope in select form (bit-identical to `maxpd` + `minpd`).
+///
+/// Requires `lo`, `up` and `out` at least `v.len()` long.
+pub fn clamp_into(v: &[f64], lo: &[f64], up: &[f64], out: &mut [f64]) {
+    debug_assert!(lo.len() >= v.len() && up.len() >= v.len() && out.len() >= v.len());
+    for i in 0..v.len() {
+        out[i] = min_sel(max_sel(v[i], lo[i]), up[i]);
+    }
+}
+
+/// `out[k] = min_sel(src[k], src[k + 1])` — adjacent-pair minima, the
+/// vectorisable half of the DTW row recurrence `min(diag, up)`.
+///
+/// Requires `src.len() == out.len() + 1`.
+pub fn pair_min_into(src: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(src.len(), out.len() + 1);
+    for k in 0..out.len() {
+        out[k] = min_sel(src[k], src[k + 1]);
+    }
+}
+
+/// `acc[i] = min_sel(acc[i], v[i])` (the incoming value wins ties —
+/// `minpd(acc, v)` semantics).
+///
+/// Requires `v.len() >= acc.len()`.
+pub fn min_merge_into(acc: &mut [f64], v: &[f64]) {
+    debug_assert!(v.len() >= acc.len());
+    for (a, &x) in acc.iter_mut().zip(v) {
+        *a = min_sel(*a, x);
+    }
+}
+
+/// `acc[i] = max_sel(acc[i], v[i])` (`maxpd(acc, v)` semantics).
+///
+/// Requires `v.len() >= acc.len()`.
+pub fn max_merge_into(acc: &mut [f64], v: &[f64]) {
+    debug_assert!(v.len() >= acc.len());
+    for (a, &x) in acc.iter_mut().zip(v) {
+        *a = max_sel(*a, x);
+    }
+}
+
+/// The always-available scalar vtable: the reference every vector
+/// path is differentially tested against.
+pub(crate) static KERNELS: super::Kernels = super::Kernels {
+    isa: super::Isa::Scalar,
+    keogh_sq_sum,
+    keogh_sq_ea,
+    keogh_abs_sum,
+    keogh_abs_ea,
+    clamp: clamp_into,
+    pair_min: pair_min_into,
+    min_merge: min_merge_into,
+    max_merge: max_merge_into,
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn select_min_max_take_second_operand_on_ties() {
+        // ±0.0 compare equal, so `<`/`>` are false and the second
+        // operand must win — the property NEON's vminq would violate.
+        assert_eq!(min_sel(0.0, -0.0).to_bits(), (-0.0f64).to_bits());
+        assert_eq!(min_sel(-0.0, 0.0).to_bits(), 0.0f64.to_bits());
+        assert_eq!(max_sel(0.0, -0.0).to_bits(), (-0.0f64).to_bits());
+        assert_eq!(min_sel(f64::NAN, 1.0), 1.0);
+        assert_eq!(max_sel(f64::NAN, 1.0), 1.0);
+    }
+
+    #[test]
+    fn ea_without_abandonment_matches_full_sum_bitwise() {
+        let a: Vec<f64> = (0..13).map(|i| (i as f64 * 0.37).sin() * 3.0).collect();
+        let lo: Vec<f64> = a.iter().map(|v| v - 0.25).collect();
+        let up: Vec<f64> = a.iter().map(|v| v + 0.125).collect();
+        let full = keogh_sum::<Squared>(&a, &lo, &up);
+        let ea = keogh_ea::<Squared>(&a, &lo, &up, f64::INFINITY);
+        assert_eq!(full.to_bits(), ea.to_bits());
+    }
+
+    #[test]
+    fn abandoned_partial_is_a_lower_bound_of_the_full_sum() {
+        let a: Vec<f64> = (0..32).map(|i| i as f64).collect();
+        let lo = vec![0.0; 32];
+        let up = vec![0.0; 32];
+        let full = keogh_sum::<Squared>(&a, &lo, &up);
+        let part = keogh_ea::<Squared>(&a, &lo, &up, 10.0);
+        assert!(part > 10.0 && part <= full);
+    }
+
+    #[test]
+    fn pair_min_and_clamp_agree_with_naive_loops() {
+        let src = [3.0, 1.0, f64::INFINITY, 2.0, 2.0];
+        let mut out = [0.0; 4];
+        pair_min_into(&src, &mut out);
+        assert_eq!(out, [1.0, 1.0, 2.0, 2.0]);
+        let v = [-5.0, 0.5, 9.0];
+        let lo = [0.0, 0.0, 0.0];
+        let up = [1.0, 1.0, 1.0];
+        let mut proj = [0.0; 3];
+        clamp_into(&v, &lo, &up, &mut proj);
+        assert_eq!(proj, [0.0, 0.5, 1.0]);
+    }
+}

@@ -1,0 +1,603 @@
+//! SSE2 and AVX2 kernel sets for x86-64.
+//!
+//! SSE2 is part of the x86-64 baseline, so the [`SSE2`] vtable is
+//! unconditionally available; [`AVX2`] is only handed out by
+//! `for_isa`/`best_available` after `is_x86_feature_detected!("avx2")`
+//! succeeds. Both widths implement the 4-lane protocol documented in
+//! the module docs: AVX2 carries `[l0, l1, l2, l3]` in one 256-bit
+//! accumulator, SSE2 carries `[l0, l1]` + `[l2, l3]` in two 128-bit
+//! accumulators, and both reduce as `(l0 + l2) + (l1 + l3)` — exactly
+//! the scalar order. Selections compile to `minpd`/`maxpd`, whose
+//! semantics the scalar `min_sel`/`max_sel` restate.
+//!
+//! All loads and stores are unaligned (`loadu`/`storeu`); the SoA
+//! envelope rows happen to be 64-byte aligned, which helps throughput
+//! but is never relied on for soundness. The only safety
+//! preconditions are the slice-length relations debug-asserted at
+//! each entry.
+#![deny(unsafe_op_in_unsafe_fn)]
+
+use core::arch::x86_64::*;
+
+use super::scalar;
+use super::{Isa, Kernels};
+use crate::delta::{Absolute, Squared};
+
+/// Two LB_Keogh terms (squared delta) from unaligned loads.
+///
+/// # Safety
+/// `pa`, `pl`, `pu` must each be readable for two `f64`s.
+#[inline(always)]
+unsafe fn term2_sq(pa: *const f64, pl: *const f64, pu: *const f64) -> __m128d {
+    // SAFETY: caller guarantees both lanes are in bounds. The
+    // `v > up` / `v < lo` masks are disjoint (envelope invariant
+    // lo <= up), so OR-combining the masked differences reproduces
+    // the scalar if/else-if exactly; NaN lanes fail both compares
+    // and contribute +0.0, as in the scalar term.
+    unsafe {
+        let v = _mm_loadu_pd(pa);
+        let l = _mm_loadu_pd(pl);
+        let u = _mm_loadu_pd(pu);
+        let du = _mm_and_pd(_mm_cmpgt_pd(v, u), _mm_sub_pd(v, u));
+        let dl = _mm_and_pd(_mm_cmplt_pd(v, l), _mm_sub_pd(l, v));
+        let d = _mm_or_pd(du, dl);
+        _mm_mul_pd(d, d)
+    }
+}
+
+/// Two LB_Keogh terms (absolute delta); see [`term2_sq`].
+///
+/// # Safety
+/// `pa`, `pl`, `pu` must each be readable for two `f64`s.
+#[inline(always)]
+unsafe fn term2_abs(pa: *const f64, pl: *const f64, pu: *const f64) -> __m128d {
+    // SAFETY: as `term2_sq`; the masked differences are already the
+    // non-negative |v - bound| values, bit-equal to `Absolute::delta`.
+    unsafe {
+        let v = _mm_loadu_pd(pa);
+        let l = _mm_loadu_pd(pl);
+        let u = _mm_loadu_pd(pu);
+        let du = _mm_and_pd(_mm_cmpgt_pd(v, u), _mm_sub_pd(v, u));
+        let dl = _mm_and_pd(_mm_cmplt_pd(v, l), _mm_sub_pd(l, v));
+        _mm_or_pd(du, dl)
+    }
+}
+
+/// Four LB_Keogh terms (squared delta), 256-bit.
+///
+/// # Safety
+/// Requires AVX2; `pa`, `pl`, `pu` readable for four `f64`s.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn term4_sq(pa: *const f64, pl: *const f64, pu: *const f64) -> __m256d {
+    // SAFETY: caller guarantees four lanes in bounds and AVX2 present;
+    // mask logic as in `term2_sq`, `_CMP_{GT,LT}_OQ` are the ordered
+    // non-signalling compares matching scalar `>` / `<`.
+    unsafe {
+        let v = _mm256_loadu_pd(pa);
+        let l = _mm256_loadu_pd(pl);
+        let u = _mm256_loadu_pd(pu);
+        let du = _mm256_and_pd(_mm256_cmp_pd::<_CMP_GT_OQ>(v, u), _mm256_sub_pd(v, u));
+        let dl = _mm256_and_pd(_mm256_cmp_pd::<_CMP_LT_OQ>(v, l), _mm256_sub_pd(l, v));
+        let d = _mm256_or_pd(du, dl);
+        _mm256_mul_pd(d, d)
+    }
+}
+
+/// Four LB_Keogh terms (absolute delta), 256-bit; see [`term4_sq`].
+///
+/// # Safety
+/// Requires AVX2; `pa`, `pl`, `pu` readable for four `f64`s.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn term4_abs(pa: *const f64, pl: *const f64, pu: *const f64) -> __m256d {
+    // SAFETY: as `term4_sq`.
+    unsafe {
+        let v = _mm256_loadu_pd(pa);
+        let l = _mm256_loadu_pd(pl);
+        let u = _mm256_loadu_pd(pu);
+        let du = _mm256_and_pd(_mm256_cmp_pd::<_CMP_GT_OQ>(v, u), _mm256_sub_pd(v, u));
+        let dl = _mm256_and_pd(_mm256_cmp_pd::<_CMP_LT_OQ>(v, l), _mm256_sub_pd(l, v));
+        _mm256_or_pd(du, dl)
+    }
+}
+
+/// Reduce `[l0+l2, l1+l3]` to the scalar-protocol total.
+///
+/// # Safety
+/// SSE2 (baseline).
+#[inline(always)]
+unsafe fn reduce128(s: __m128d) -> f64 {
+    // SAFETY: register-only ops.
+    unsafe { _mm_cvtsd_f64(s) + _mm_cvtsd_f64(_mm_unpackhi_pd(s, s)) }
+}
+
+macro_rules! keogh_sse2 {
+    ($sum:ident, $sum_impl:ident, $ea:ident, $ea_impl:ident, $term2:ident, $d:ty) => {
+        /// # Safety
+        /// Slice lengths per the vtable contract (debug-asserted).
+        unsafe fn $sum_impl(a: &[f64], lo: &[f64], up: &[f64]) -> f64 {
+            debug_assert!(lo.len() >= a.len() && up.len() >= a.len());
+            let n = a.len();
+            let n4 = n - (n % 4);
+            // SAFETY: body loads touch [i, i+4) with i+4 <= n4 <=
+            // a.len() <= lo.len(), up.len(); tail reads single
+            // elements at i < n. acc01 holds lanes [l0, l1], acc23
+            // holds [l2, l3]; the reduction is (l0+l2) + (l1+l3).
+            unsafe {
+                let (pa, pl, pu) = (a.as_ptr(), lo.as_ptr(), up.as_ptr());
+                let mut acc01 = _mm_setzero_pd();
+                let mut acc23 = _mm_setzero_pd();
+                let mut i = 0usize;
+                while i < n4 {
+                    acc01 = _mm_add_pd(acc01, $term2(pa.add(i), pl.add(i), pu.add(i)));
+                    acc23 = _mm_add_pd(acc23, $term2(pa.add(i + 2), pl.add(i + 2), pu.add(i + 2)));
+                    i += 4;
+                }
+                let mut total = reduce128(_mm_add_pd(acc01, acc23));
+                while i < n {
+                    total += scalar::term::<$d>(*pa.add(i), *pl.add(i), *pu.add(i));
+                    i += 1;
+                }
+                total
+            }
+        }
+
+        fn $sum(a: &[f64], lo: &[f64], up: &[f64]) -> f64 {
+            // SAFETY: SSE2 is unconditionally available on x86-64;
+            // length preconditions are debug-asserted inside.
+            unsafe { $sum_impl(a, lo, up) }
+        }
+
+        /// # Safety
+        /// Slice lengths per the vtable contract (debug-asserted).
+        unsafe fn $ea_impl(a: &[f64], lo: &[f64], up: &[f64], abandon_at: f64) -> f64 {
+            debug_assert!(lo.len() >= a.len() && up.len() >= a.len());
+            let n = a.len();
+            let n4 = n - (n % 4);
+            // SAFETY: bounds as in the sum variant. The partial is
+            // reduced and tested once per 4-element group, exactly
+            // like the scalar protocol; the tail never tests.
+            unsafe {
+                let (pa, pl, pu) = (a.as_ptr(), lo.as_ptr(), up.as_ptr());
+                let mut acc01 = _mm_setzero_pd();
+                let mut acc23 = _mm_setzero_pd();
+                let mut i = 0usize;
+                while i < n4 {
+                    acc01 = _mm_add_pd(acc01, $term2(pa.add(i), pl.add(i), pu.add(i)));
+                    acc23 = _mm_add_pd(acc23, $term2(pa.add(i + 2), pl.add(i + 2), pu.add(i + 2)));
+                    i += 4;
+                    let t = reduce128(_mm_add_pd(acc01, acc23));
+                    if t > abandon_at {
+                        return t;
+                    }
+                }
+                let mut total = reduce128(_mm_add_pd(acc01, acc23));
+                while i < n {
+                    total += scalar::term::<$d>(*pa.add(i), *pl.add(i), *pu.add(i));
+                    i += 1;
+                }
+                total
+            }
+        }
+
+        fn $ea(a: &[f64], lo: &[f64], up: &[f64], abandon_at: f64) -> f64 {
+            // SAFETY: SSE2 baseline; lengths debug-asserted inside.
+            unsafe { $ea_impl(a, lo, up, abandon_at) }
+        }
+    };
+}
+
+keogh_sse2!(keogh_sq_sum_sse2, keogh_sq_sum_sse2_impl, keogh_sq_ea_sse2, keogh_sq_ea_sse2_impl, term2_sq, Squared);
+keogh_sse2!(keogh_abs_sum_sse2, keogh_abs_sum_sse2_impl, keogh_abs_ea_sse2, keogh_abs_ea_sse2_impl, term2_abs, Absolute);
+
+macro_rules! keogh_avx2 {
+    ($sum:ident, $sum_impl:ident, $ea:ident, $ea_impl:ident, $term4:ident, $d:ty) => {
+        /// # Safety
+        /// Requires AVX2; slice lengths per the vtable contract.
+        #[target_feature(enable = "avx2")]
+        unsafe fn $sum_impl(a: &[f64], lo: &[f64], up: &[f64]) -> f64 {
+            debug_assert!(lo.len() >= a.len() && up.len() >= a.len());
+            let n = a.len();
+            let n4 = n - (n % 4);
+            // SAFETY: body loads touch [i, i+4) with i+4 <= n4 <=
+            // every slice length; tail reads i < n. acc holds
+            // [l0, l1, l2, l3]; low half + high half gives
+            // [l0+l2, l1+l3], then lane0 + lane1 — the scalar order.
+            unsafe {
+                let (pa, pl, pu) = (a.as_ptr(), lo.as_ptr(), up.as_ptr());
+                let mut acc = _mm256_setzero_pd();
+                let mut i = 0usize;
+                while i < n4 {
+                    acc = _mm256_add_pd(acc, $term4(pa.add(i), pl.add(i), pu.add(i)));
+                    i += 4;
+                }
+                let s = _mm_add_pd(_mm256_castpd256_pd128(acc), _mm256_extractf128_pd::<1>(acc));
+                let mut total = reduce128(s);
+                while i < n {
+                    total += scalar::term::<$d>(*pa.add(i), *pl.add(i), *pu.add(i));
+                    i += 1;
+                }
+                total
+            }
+        }
+
+        fn $sum(a: &[f64], lo: &[f64], up: &[f64]) -> f64 {
+            // SAFETY: this wrapper is only reachable through the AVX2
+            // vtable, which `for_isa`/`best_available` install solely
+            // after `is_x86_feature_detected!("avx2")` succeeded.
+            unsafe { $sum_impl(a, lo, up) }
+        }
+
+        /// # Safety
+        /// Requires AVX2; slice lengths per the vtable contract.
+        #[target_feature(enable = "avx2")]
+        unsafe fn $ea_impl(a: &[f64], lo: &[f64], up: &[f64], abandon_at: f64) -> f64 {
+            debug_assert!(lo.len() >= a.len() && up.len() >= a.len());
+            let n = a.len();
+            let n4 = n - (n % 4);
+            // SAFETY: bounds as in the sum variant; reduce-and-test
+            // once per group, never in the tail (scalar protocol).
+            unsafe {
+                let (pa, pl, pu) = (a.as_ptr(), lo.as_ptr(), up.as_ptr());
+                let mut acc = _mm256_setzero_pd();
+                let mut i = 0usize;
+                while i < n4 {
+                    acc = _mm256_add_pd(acc, $term4(pa.add(i), pl.add(i), pu.add(i)));
+                    i += 4;
+                    let s =
+                        _mm_add_pd(_mm256_castpd256_pd128(acc), _mm256_extractf128_pd::<1>(acc));
+                    let t = reduce128(s);
+                    if t > abandon_at {
+                        return t;
+                    }
+                }
+                let s = _mm_add_pd(_mm256_castpd256_pd128(acc), _mm256_extractf128_pd::<1>(acc));
+                let mut total = reduce128(s);
+                while i < n {
+                    total += scalar::term::<$d>(*pa.add(i), *pl.add(i), *pu.add(i));
+                    i += 1;
+                }
+                total
+            }
+        }
+
+        fn $ea(a: &[f64], lo: &[f64], up: &[f64], abandon_at: f64) -> f64 {
+            // SAFETY: reachable only via the detected AVX2 vtable.
+            unsafe { $ea_impl(a, lo, up, abandon_at) }
+        }
+    };
+}
+
+keogh_avx2!(keogh_sq_sum_avx2, keogh_sq_sum_avx2_impl, keogh_sq_ea_avx2, keogh_sq_ea_avx2_impl, term4_sq, Squared);
+keogh_avx2!(keogh_abs_sum_avx2, keogh_abs_sum_avx2_impl, keogh_abs_ea_avx2, keogh_abs_ea_avx2_impl, term4_abs, Absolute);
+
+// ---- Elementwise kernels (no accumulator: select semantics alone pin
+// ---- them; minpd/maxpd ARE min_sel/max_sel in hardware).
+
+fn clamp_sse2(v: &[f64], lo: &[f64], up: &[f64], out: &mut [f64]) {
+    debug_assert!(lo.len() >= v.len() && up.len() >= v.len() && out.len() >= v.len());
+    let n = v.len();
+    let n2 = n - (n % 2);
+    // SAFETY: SSE2 baseline; vector ops touch [i, i+2) with i+2 <= n2
+    // <= every slice length, tail single elements at i < n. `out`
+    // never aliases the inputs (&mut exclusivity).
+    unsafe {
+        let (pv, pl, pu) = (v.as_ptr(), lo.as_ptr(), up.as_ptr());
+        let po = out.as_mut_ptr();
+        let mut i = 0usize;
+        while i < n2 {
+            let x = _mm_max_pd(_mm_loadu_pd(pv.add(i)), _mm_loadu_pd(pl.add(i)));
+            _mm_storeu_pd(po.add(i), _mm_min_pd(x, _mm_loadu_pd(pu.add(i))));
+            i += 2;
+        }
+        while i < n {
+            *po.add(i) = scalar::min_sel(scalar::max_sel(*pv.add(i), *pl.add(i)), *pu.add(i));
+            i += 1;
+        }
+    }
+}
+
+fn pair_min_sse2(src: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(src.len(), out.len() + 1);
+    let n = out.len();
+    let n2 = n - (n % 2);
+    // SAFETY: SSE2 baseline; the offset load reads src[k+1..k+3] with
+    // k+3 <= n2+1 <= src.len(); `out` never aliases `src`.
+    unsafe {
+        let ps = src.as_ptr();
+        let po = out.as_mut_ptr();
+        let mut k = 0usize;
+        while k < n2 {
+            let m = _mm_min_pd(_mm_loadu_pd(ps.add(k)), _mm_loadu_pd(ps.add(k + 1)));
+            _mm_storeu_pd(po.add(k), m);
+            k += 2;
+        }
+        while k < n {
+            *po.add(k) = scalar::min_sel(*ps.add(k), *ps.add(k + 1));
+            k += 1;
+        }
+    }
+}
+
+fn min_merge_sse2(acc: &mut [f64], v: &[f64]) {
+    debug_assert!(v.len() >= acc.len());
+    let n = acc.len();
+    let n2 = n - (n % 2);
+    // SAFETY: SSE2 baseline; [i, i+2) with i+2 <= n2 <= both lengths.
+    unsafe {
+        let pa = acc.as_mut_ptr();
+        let pv = v.as_ptr();
+        let mut i = 0usize;
+        while i < n2 {
+            _mm_storeu_pd(pa.add(i), _mm_min_pd(_mm_loadu_pd(pa.add(i)), _mm_loadu_pd(pv.add(i))));
+            i += 2;
+        }
+        while i < n {
+            *pa.add(i) = scalar::min_sel(*pa.add(i), *pv.add(i));
+            i += 1;
+        }
+    }
+}
+
+fn max_merge_sse2(acc: &mut [f64], v: &[f64]) {
+    debug_assert!(v.len() >= acc.len());
+    let n = acc.len();
+    let n2 = n - (n % 2);
+    // SAFETY: as `min_merge_sse2`.
+    unsafe {
+        let pa = acc.as_mut_ptr();
+        let pv = v.as_ptr();
+        let mut i = 0usize;
+        while i < n2 {
+            _mm_storeu_pd(pa.add(i), _mm_max_pd(_mm_loadu_pd(pa.add(i)), _mm_loadu_pd(pv.add(i))));
+            i += 2;
+        }
+        while i < n {
+            *pa.add(i) = scalar::max_sel(*pa.add(i), *pv.add(i));
+            i += 1;
+        }
+    }
+}
+
+/// # Safety
+/// Requires AVX2; length preconditions debug-asserted.
+#[target_feature(enable = "avx2")]
+unsafe fn clamp_avx2_impl(v: &[f64], lo: &[f64], up: &[f64], out: &mut [f64]) {
+    debug_assert!(lo.len() >= v.len() && up.len() >= v.len() && out.len() >= v.len());
+    let n = v.len();
+    let n4 = n - (n % 4);
+    // SAFETY: [i, i+4) with i+4 <= n4 <= every length; scalar tail.
+    unsafe {
+        let (pv, pl, pu) = (v.as_ptr(), lo.as_ptr(), up.as_ptr());
+        let po = out.as_mut_ptr();
+        let mut i = 0usize;
+        while i < n4 {
+            let x = _mm256_max_pd(_mm256_loadu_pd(pv.add(i)), _mm256_loadu_pd(pl.add(i)));
+            _mm256_storeu_pd(po.add(i), _mm256_min_pd(x, _mm256_loadu_pd(pu.add(i))));
+            i += 4;
+        }
+        while i < n {
+            *po.add(i) = scalar::min_sel(scalar::max_sel(*pv.add(i), *pl.add(i)), *pu.add(i));
+            i += 1;
+        }
+    }
+}
+
+fn clamp_avx2(v: &[f64], lo: &[f64], up: &[f64], out: &mut [f64]) {
+    // SAFETY: reachable only via the detected AVX2 vtable.
+    unsafe { clamp_avx2_impl(v, lo, up, out) }
+}
+
+/// # Safety
+/// Requires AVX2; `src.len() == out.len() + 1`.
+#[target_feature(enable = "avx2")]
+unsafe fn pair_min_avx2_impl(src: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(src.len(), out.len() + 1);
+    let n = out.len();
+    let n4 = n - (n % 4);
+    // SAFETY: offset load reads src[k+1..k+5], k+5 <= n4+1 <= src.len().
+    unsafe {
+        let ps = src.as_ptr();
+        let po = out.as_mut_ptr();
+        let mut k = 0usize;
+        while k < n4 {
+            let m = _mm256_min_pd(_mm256_loadu_pd(ps.add(k)), _mm256_loadu_pd(ps.add(k + 1)));
+            _mm256_storeu_pd(po.add(k), m);
+            k += 4;
+        }
+        while k < n {
+            *po.add(k) = scalar::min_sel(*ps.add(k), *ps.add(k + 1));
+            k += 1;
+        }
+    }
+}
+
+fn pair_min_avx2(src: &[f64], out: &mut [f64]) {
+    // SAFETY: reachable only via the detected AVX2 vtable.
+    unsafe { pair_min_avx2_impl(src, out) }
+}
+
+/// # Safety
+/// Requires AVX2; `v.len() >= acc.len()`.
+#[target_feature(enable = "avx2")]
+unsafe fn min_merge_avx2_impl(acc: &mut [f64], v: &[f64]) {
+    debug_assert!(v.len() >= acc.len());
+    let n = acc.len();
+    let n4 = n - (n % 4);
+    // SAFETY: [i, i+4) with i+4 <= n4 <= both lengths; scalar tail.
+    unsafe {
+        let pa = acc.as_mut_ptr();
+        let pv = v.as_ptr();
+        let mut i = 0usize;
+        while i < n4 {
+            _mm256_storeu_pd(
+                pa.add(i),
+                _mm256_min_pd(_mm256_loadu_pd(pa.add(i)), _mm256_loadu_pd(pv.add(i))),
+            );
+            i += 4;
+        }
+        while i < n {
+            *pa.add(i) = scalar::min_sel(*pa.add(i), *pv.add(i));
+            i += 1;
+        }
+    }
+}
+
+fn min_merge_avx2(acc: &mut [f64], v: &[f64]) {
+    // SAFETY: reachable only via the detected AVX2 vtable.
+    unsafe { min_merge_avx2_impl(acc, v) }
+}
+
+/// # Safety
+/// Requires AVX2; `v.len() >= acc.len()`.
+#[target_feature(enable = "avx2")]
+unsafe fn max_merge_avx2_impl(acc: &mut [f64], v: &[f64]) {
+    debug_assert!(v.len() >= acc.len());
+    let n = acc.len();
+    let n4 = n - (n % 4);
+    // SAFETY: as `min_merge_avx2_impl`.
+    unsafe {
+        let pa = acc.as_mut_ptr();
+        let pv = v.as_ptr();
+        let mut i = 0usize;
+        while i < n4 {
+            _mm256_storeu_pd(
+                pa.add(i),
+                _mm256_max_pd(_mm256_loadu_pd(pa.add(i)), _mm256_loadu_pd(pv.add(i))),
+            );
+            i += 4;
+        }
+        while i < n {
+            *pa.add(i) = scalar::max_sel(*pa.add(i), *pv.add(i));
+            i += 1;
+        }
+    }
+}
+
+fn max_merge_avx2(acc: &mut [f64], v: &[f64]) {
+    // SAFETY: reachable only via the detected AVX2 vtable.
+    unsafe { max_merge_avx2_impl(acc, v) }
+}
+
+pub(crate) static SSE2: Kernels = Kernels {
+    isa: Isa::Sse2,
+    keogh_sq_sum: keogh_sq_sum_sse2,
+    keogh_sq_ea: keogh_sq_ea_sse2,
+    keogh_abs_sum: keogh_abs_sum_sse2,
+    keogh_abs_ea: keogh_abs_ea_sse2,
+    clamp: clamp_sse2,
+    pair_min: pair_min_sse2,
+    min_merge: min_merge_sse2,
+    max_merge: max_merge_sse2,
+};
+
+pub(crate) static AVX2: Kernels = Kernels {
+    isa: Isa::Avx2,
+    keogh_sq_sum: keogh_sq_sum_avx2,
+    keogh_sq_ea: keogh_sq_ea_avx2,
+    keogh_abs_sum: keogh_abs_sum_avx2,
+    keogh_abs_ea: keogh_abs_ea_avx2,
+    clamp: clamp_avx2,
+    pair_min: pair_min_avx2,
+    min_merge: min_merge_avx2,
+    max_merge: max_merge_avx2,
+};
+
+#[cfg(test)]
+mod tests {
+    use super::super::{for_isa, Isa};
+
+    /// Deterministic value streams covering sign flips, subnormals,
+    /// huge magnitudes, and exact ties.
+    fn stream(seed: u64, n: usize) -> Vec<f64> {
+        let mut s = seed.wrapping_mul(0x9e37_79b9_7f4a_7c15) | 1;
+        (0..n)
+            .map(|i| {
+                s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                let u = ((s >> 33) as f64) / ((1u64 << 31) as f64) - 1.0;
+                match i % 7 {
+                    0 => u * 1e12,
+                    1 => u * 1e-308, // subnormal territory
+                    2 => 0.0,
+                    3 => -0.0,
+                    _ => u * 3.0,
+                }
+            })
+            .collect()
+    }
+
+    fn envelopes(a: &[f64]) -> (Vec<f64>, Vec<f64>) {
+        let lo: Vec<f64> = a.iter().map(|v| v - 0.5).collect();
+        let up: Vec<f64> = a.iter().map(|v| v + 0.25).collect();
+        (lo, up)
+    }
+
+    fn check_vtable(isa: Isa) {
+        let Some(k) = for_isa(isa) else { return };
+        let s = for_isa(Isa::Scalar).unwrap();
+        for n in (0..=17).chain([63, 64, 65]) {
+            let a = stream(n as u64 + 1, n);
+            let (lo, up) = envelopes(&stream(n as u64 + 77, n));
+            let cuts = [f64::INFINITY, 0.0, 1e-3, 1.0, 1e25];
+            for &cut in &cuts {
+                assert_eq!(
+                    (k.keogh_sq_ea)(&a, &lo, &up, cut).to_bits(),
+                    (s.keogh_sq_ea)(&a, &lo, &up, cut).to_bits(),
+                    "{isa} keogh_sq_ea n={n} cut={cut}"
+                );
+                assert_eq!(
+                    (k.keogh_abs_ea)(&a, &lo, &up, cut).to_bits(),
+                    (s.keogh_abs_ea)(&a, &lo, &up, cut).to_bits(),
+                    "{isa} keogh_abs_ea n={n} cut={cut}"
+                );
+            }
+            assert_eq!(
+                (k.keogh_sq_sum)(&a, &lo, &up).to_bits(),
+                (s.keogh_sq_sum)(&a, &lo, &up).to_bits(),
+                "{isa} keogh_sq_sum n={n}"
+            );
+            assert_eq!(
+                (k.keogh_abs_sum)(&a, &lo, &up).to_bits(),
+                (s.keogh_abs_sum)(&a, &lo, &up).to_bits(),
+                "{isa} keogh_abs_sum n={n}"
+            );
+            let mut got = vec![0.0; n];
+            let mut want = vec![0.0; n];
+            (k.clamp)(&a, &lo, &up, &mut got);
+            (s.clamp)(&a, &lo, &up, &mut want);
+            assert_eq!(bits(&got), bits(&want), "{isa} clamp n={n}");
+            if n > 0 {
+                let src = stream(n as u64 + 5, n + 1);
+                (k.pair_min)(&src, &mut got);
+                (s.pair_min)(&src, &mut want);
+                assert_eq!(bits(&got), bits(&want), "{isa} pair_min n={n}");
+            }
+            let v = stream(n as u64 + 9, n);
+            let mut ka = a.clone();
+            let mut sa = a.clone();
+            (k.min_merge)(&mut ka, &v);
+            (s.min_merge)(&mut sa, &v);
+            assert_eq!(bits(&ka), bits(&sa), "{isa} min_merge n={n}");
+            let mut ka = a.clone();
+            let mut sa = a;
+            (k.max_merge)(&mut ka, &v);
+            (s.max_merge)(&mut sa, &v);
+            assert_eq!(bits(&ka), bits(&sa), "{isa} max_merge n={n}");
+        }
+    }
+
+    fn bits(v: &[f64]) -> Vec<u64> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn sse2_matches_scalar_bitwise() {
+        check_vtable(Isa::Sse2);
+    }
+
+    #[test]
+    fn avx2_matches_scalar_bitwise_when_available() {
+        check_vtable(Isa::Avx2);
+    }
+}

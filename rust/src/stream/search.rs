@@ -1,5 +1,10 @@
 //! [`SubsequenceSearcher`] — cascaded-bound subsequence search over a
 //! sample stream, plus its option/result/statistics types.
+//!
+//! The per-window screening sums and the pruned exact-DTW kernel run on
+//! the runtime-dispatched SIMD vtable ([`crate::simd`]); dispatch is
+//! bit-transparent, so window admissions, tie-breaks and statistics are
+//! identical at every ISA (and under `DTW_FORCE_ISA=scalar`).
 
 use std::ops::Range;
 use std::sync::atomic::{AtomicU64, Ordering};

@@ -199,11 +199,18 @@ fn index_build_then_inspect_round_trips() {
     let out = bin().args(["index", "inspect"]).arg(&snap).output().expect("spawn");
     assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
     let text = String::from_utf8_lossy(&out.stdout);
-    assert!(text.contains("version=1"), "{text}");
+    // The writer always emits the current snapshot version (3 since the
+    // generation pair landed); older versions are read-compat only.
+    assert!(text.contains("version=3"), "{text}");
     assert!(text.contains("shards=2"), "{text}");
     assert!(text.contains("znorm=true"), "{text}");
     assert!(text.contains("checksum=0x"), "{text}");
     assert!(text.lines().any(|l| l.starts_with("series_len=")), "{text}");
+    // The host's active SIMD dispatch, not a stored snapshot field.
+    assert!(
+        text.lines().any(|l| l == format!("isa={}", dtw_bounds::simd::isa_name())),
+        "{text}"
+    );
     std::fs::remove_file(&snap).ok();
 }
 

@@ -1,0 +1,314 @@
+//! Differential suite for the runtime-dispatched SIMD kernels.
+//!
+//! The contract under test (rust/src/simd/mod.rs): every vector
+//! kernel is **bit-equal** to the scalar lane-protocol reference —
+//! not merely close. These tests exercise every ISA the running CPU
+//! can dispatch to via [`dtw_bounds::simd::for_isa`], in one process,
+//! independent of the cached global selection; the CI leg that reruns
+//! the whole suite under `DTW_FORCE_ISA=scalar` covers the dispatched
+//! paths from the other side.
+//!
+//! Inputs are deliberately hostile: signed zeros, subnormals,
+//! `1e12`-magnitude values (whose squared deltas reach `1e24`), and
+//! unaligned sub-slices (offset-by-one views of the backing
+//! allocations, so the vector bodies run at every 16/32-byte phase).
+
+use dtw_bounds::bounds::{keogh, BoundKind, PreparedSeries, Scratch};
+use dtw_bounds::data::rng::Rng;
+use dtw_bounds::delta::{Absolute, Delta, Squared};
+use dtw_bounds::dtw::{dtw, dtw_ea_pruned};
+use dtw_bounds::simd::{self, scalar, Isa, Kernels};
+
+/// Body lengths around every lane boundary (0..=17) plus three sizes
+/// with a large multiple-of-4 body and each tail phase.
+fn sizes() -> Vec<usize> {
+    (0..=17).chain([63, 64, 65]).collect()
+}
+
+/// A hostile value: zeros of both signs, subnormals, huge magnitudes,
+/// and ordinary normal deviates.
+fn stress_value(rng: &mut Rng) -> f64 {
+    match rng.below(10) {
+        0 => 0.0,
+        1 => -0.0,
+        2 => 5e-324,              // smallest positive subnormal
+        3 => -1.0e-308,           // negative subnormal
+        4 => 1.0e12 * rng.normal(),
+        5 => -1.0e12,
+        _ => rng.normal(),
+    }
+}
+
+fn stress_series(rng: &mut Rng, n: usize) -> Vec<f64> {
+    (0..n).map(|_| stress_value(rng)).collect()
+}
+
+/// A valid envelope (`lo[i] <= up[i]` pointwise) centered on an
+/// *independent* stress series, so the query is out of range — on
+/// either side — at a large fraction of indices.
+fn stress_envelope(rng: &mut Rng, n: usize) -> (Vec<f64>, Vec<f64>) {
+    let base = stress_series(rng, n);
+    let lo: Vec<f64> = base.iter().map(|&b| b - stress_value(rng).abs()).collect();
+    let up: Vec<f64> = base.iter().map(|&b| b + stress_value(rng).abs()).collect();
+    (lo, up)
+}
+
+/// Offset-by-one view: same data, different 16/32-byte phase.
+fn unaligned(v: &[f64]) -> &[f64] {
+    &v[1..]
+}
+
+fn assert_bits(context: &str, got: f64, want: f64) {
+    assert_eq!(
+        got.to_bits(),
+        want.to_bits(),
+        "{context}: got {got:e} ({:#x}), scalar reference {want:e} ({:#x})",
+        got.to_bits(),
+        want.to_bits()
+    );
+}
+
+fn assert_slice_bits(context: &str, got: &[f64], want: &[f64]) {
+    assert_eq!(got.len(), want.len(), "{context}: length mismatch");
+    for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+        assert_eq!(
+            g.to_bits(),
+            w.to_bits(),
+            "{context}: lane {i} diverges: got {g:e}, scalar reference {w:e}"
+        );
+    }
+}
+
+/// Every vtable entry, every available ISA, every size and tail phase,
+/// aligned and unaligned: bit-equal to the scalar vtable.
+#[test]
+fn every_kernel_is_bit_equal_to_scalar_on_every_available_isa() {
+    let mut rng = Rng::seeded(0x51D0);
+    let scalar_k = simd::for_isa(Isa::Scalar).unwrap();
+    let isas = simd::available();
+    assert!(isas.contains(&Isa::Scalar));
+
+    for n in sizes() {
+        // One extra leading element so `unaligned` keeps length `n`.
+        let a = stress_series(&mut rng, n + 1);
+        let (lo, up) = stress_envelope(&mut rng, n + 1);
+        let cuts = {
+            let full = (scalar_k.keogh_sq_sum)(&a[..n], &lo[..n], &up[..n]);
+            [f64::INFINITY, 0.0, 1e-3, 1.0, 1e25, 0.5 * full]
+        };
+
+        for &isa in &isas {
+            let k = simd::for_isa(isa).unwrap();
+            for (aa, ll, uu, phase) in [
+                (&a[..n], &lo[..n], &up[..n], "aligned"),
+                (unaligned(&a), unaligned(&lo), unaligned(&up), "unaligned"),
+            ] {
+                let ctx = |name: &str| format!("{isa}/{name}/n={n}/{phase}");
+
+                assert_bits(
+                    &ctx("keogh_sq_sum"),
+                    (k.keogh_sq_sum)(aa, ll, uu),
+                    (scalar_k.keogh_sq_sum)(aa, ll, uu),
+                );
+                assert_bits(
+                    &ctx("keogh_abs_sum"),
+                    (k.keogh_abs_sum)(aa, ll, uu),
+                    (scalar_k.keogh_abs_sum)(aa, ll, uu),
+                );
+                for cut in cuts {
+                    assert_bits(
+                        &format!("{}/cut={cut:e}", ctx("keogh_sq_ea")),
+                        (k.keogh_sq_ea)(aa, ll, uu, cut),
+                        (scalar_k.keogh_sq_ea)(aa, ll, uu, cut),
+                    );
+                    assert_bits(
+                        &format!("{}/cut={cut:e}", ctx("keogh_abs_ea")),
+                        (k.keogh_abs_ea)(aa, ll, uu, cut),
+                        (scalar_k.keogh_abs_ea)(aa, ll, uu, cut),
+                    );
+                }
+
+                let mut got = vec![0.0; aa.len()];
+                let mut want = vec![0.0; aa.len()];
+                (k.clamp)(aa, ll, uu, &mut got);
+                (scalar_k.clamp)(aa, ll, uu, &mut want);
+                assert_slice_bits(&ctx("clamp"), &got, &want);
+
+                if !aa.is_empty() {
+                    let mut got = vec![0.0; aa.len() - 1];
+                    let mut want = vec![0.0; aa.len() - 1];
+                    (k.pair_min)(aa, &mut got);
+                    (scalar_k.pair_min)(aa, &mut want);
+                    assert_slice_bits(&ctx("pair_min"), &got, &want);
+                }
+
+                let mut got = ll.to_vec();
+                let mut want = ll.to_vec();
+                (k.min_merge)(&mut got, uu);
+                (scalar_k.min_merge)(&mut want, uu);
+                assert_slice_bits(&ctx("min_merge"), &got, &want);
+
+                let mut got = uu.to_vec();
+                let mut want = uu.to_vec();
+                (k.max_merge)(&mut got, ll);
+                (scalar_k.max_merge)(&mut want, ll);
+                assert_slice_bits(&ctx("max_merge"), &got, &want);
+            }
+        }
+    }
+}
+
+/// `lb_keogh_flat` — the dispatching entry every screening path goes
+/// through — is bit-equal to the generic scalar lane reference at the
+/// *active* (natively selected) ISA, for both monomorphised deltas,
+/// with and without abandoning.
+#[test]
+fn lb_keogh_flat_matches_the_scalar_lane_reference_bitwise() {
+    let mut rng = Rng::seeded(0xF1A7);
+    for n in sizes() {
+        let a = stress_series(&mut rng, n);
+        let (lo, up) = stress_envelope(&mut rng, n);
+
+        let full_sq = keogh::lb_keogh_flat::<Squared>(&a, &lo, &up, f64::INFINITY);
+        assert_bits(
+            &format!("flat/squared/n={n}"),
+            full_sq,
+            scalar::keogh_sum::<Squared>(&a, &lo, &up),
+        );
+        let full_abs = keogh::lb_keogh_flat::<Absolute>(&a, &lo, &up, f64::INFINITY);
+        assert_bits(
+            &format!("flat/absolute/n={n}"),
+            full_abs,
+            scalar::keogh_sum::<Absolute>(&a, &lo, &up),
+        );
+
+        for cut in [0.0, 1e-3, 0.5 * full_sq, full_sq, 1e25] {
+            assert_bits(
+                &format!("flat-ea/squared/n={n}/cut={cut:e}"),
+                keogh::lb_keogh_flat::<Squared>(&a, &lo, &up, cut),
+                scalar::keogh_ea::<Squared>(&a, &lo, &up, cut),
+            );
+            assert_bits(
+                &format!("flat-ea/absolute/n={n}/cut={cut:e}"),
+                keogh::lb_keogh_flat::<Absolute>(&a, &lo, &up, cut),
+                scalar::keogh_ea::<Absolute>(&a, &lo, &up, cut),
+            );
+        }
+        // A non-abandoned EA run returns the full sum bit-identically.
+        assert_bits(
+            &format!("flat-ea-noabandon/n={n}"),
+            keogh::lb_keogh_flat::<Squared>(&a, &lo, &up, f64::MAX),
+            full_sq,
+        );
+    }
+}
+
+fn check_all_bounds<D: Delta>(rng: &mut Rng, trial: usize) {
+    let n = rng.int_range(16, 48);
+    let qv = stress_series(rng, n);
+    let tv = stress_series(rng, n);
+    let w = rng.below(n);
+    let t = PreparedSeries::prepare(tv.clone(), w);
+    let truth = dtw::<D>(&qv, &tv, w);
+    let mut scratch = Scratch::new(n);
+    for kind in BoundKind::ALL {
+        if !kind.is_valid_for::<D>() {
+            continue;
+        }
+        let q = kind.prepare_query(qv.clone(), w);
+        let lb = kind.compute::<D>(&q, &t, w, f64::INFINITY, &mut scratch);
+        assert!(
+            lb <= truth + 1e-9 * (1.0 + truth.abs()),
+            "trial={trial} {}: bound {lb:e} exceeds DTW {truth:e} (n={n}, w={w})",
+            kind.name()
+        );
+        // Same call, same dispatch: bit-for-bit reproducible.
+        let again = kind.compute::<D>(&q, &t, w, f64::INFINITY, &mut scratch);
+        assert_bits(&format!("trial={trial} {} rerun", kind.name()), again, lb);
+    }
+}
+
+/// Every `BoundKind` (including the new `ImprovedCascade`) stays a
+/// valid lower bound and is deterministic under the active dispatch,
+/// on hostile inputs. Run once per delta; the `DTW_FORCE_ISA=scalar`
+/// CI leg repeats this with dispatch pinned off, so a kernel that
+/// drifted from scalar would show up as a cross-leg divergence.
+#[test]
+fn every_bound_kind_is_a_valid_deterministic_lower_bound_on_stress_inputs() {
+    let mut rng = Rng::seeded(0xB0B0);
+    for trial in 0..40 {
+        check_all_bounds::<Squared>(&mut rng, trial);
+        check_all_bounds::<Absolute>(&mut rng, trial);
+    }
+}
+
+/// The pruned DTW kernel (whose live-range inner loop now runs on the
+/// `pair_min` prepass) keeps its contract on hostile inputs: a finite
+/// result is bit-equal to [`dtw`], and `INFINITY` comes back exactly
+/// when the true distance exceeds the cutoff.
+#[test]
+fn pruned_dtw_stays_bit_equal_to_full_dtw_on_stress_inputs() {
+    let mut rng = Rng::seeded(0xDA7A);
+    for n in [1usize, 2, 3, 5, 9, 16, 17, 33, 64, 65] {
+        for _ in 0..4 {
+            let a = stress_series(&mut rng, n);
+            let b = stress_series(&mut rng, n);
+            for w in [0, 1, 3, n] {
+                let truth = dtw::<Squared>(&a, &b, w);
+                let t = PreparedSeries::prepare(b.clone(), w);
+                let mut tail = Vec::new();
+                keogh::lb_keogh_tail::<Squared>(&a, &t.lo, &t.up, &mut tail);
+                for mult in [0.25, 0.9, 1.0, 1.5] {
+                    let cutoff = truth * mult;
+                    for tl in [None, Some(tail.as_slice())] {
+                        let got = dtw_ea_pruned::<Squared>(&a, &b, w, cutoff, tl);
+                        if got.is_finite() {
+                            assert_bits(
+                                &format!("pruned/n={n}/w={w}/mult={mult}"),
+                                got,
+                                truth,
+                            );
+                            assert!(truth <= cutoff, "finite result above the cutoff");
+                        } else {
+                            assert!(
+                                truth > cutoff,
+                                "pruned/n={n}/w={w}/mult={mult}: spurious INFINITY \
+                                 (truth {truth:e} <= cutoff {cutoff:e})"
+                            );
+                        }
+                    }
+                }
+                // Unequal lengths exercise the asymmetric live ranges.
+                if n > 1 {
+                    let short = &b[..n - 1];
+                    let truth = dtw::<Squared>(&a, short, w.max(1));
+                    let got =
+                        dtw_ea_pruned::<Squared>(&a, short, w.max(1), truth, None);
+                    assert_bits(&format!("pruned-uneq/n={n}/w={w}"), got, truth);
+                }
+            }
+        }
+    }
+}
+
+/// The dispatch surface itself: name round-trips, availability, and
+/// the active vtable's self-consistency.
+#[test]
+fn dispatch_surface_is_consistent() {
+    for &isa in Isa::ALL {
+        assert_eq!(Isa::parse(isa.name()), Some(isa));
+        assert_eq!(Isa::parse(&isa.name().to_ascii_uppercase()), Some(isa));
+        assert_eq!(format!("{isa}"), isa.name());
+    }
+    assert_eq!(Isa::parse("m4-matrix-coprocessor"), None);
+
+    let isas = simd::available();
+    assert!(isas.contains(&Isa::Scalar), "scalar must always be dispatchable");
+    assert!(isas.contains(&simd::active_isa()), "the active ISA must be available");
+    for isa in isas {
+        let k: &'static Kernels = simd::for_isa(isa).unwrap();
+        assert_eq!(k.isa, isa, "vtable self-reports a different ISA");
+    }
+    assert_eq!(simd::kernels().isa, simd::active_isa());
+    assert_eq!(simd::isa_name(), simd::active_isa().name());
+}
